@@ -1,0 +1,113 @@
+//! End-to-end driver (experiment E8): full MobileNetV1 inference GEMM
+//! stream through the coordinator on synthetic ImageNet-statistics
+//! inputs, verifying numerics along the way and reporting the paper's
+//! headline latency/energy comparison.
+//!
+//! ```text
+//! cargo run --release --example e2e_mobilenet [-- --full]
+//! ```
+//!
+//! Default: every layer runs with M capped at 512 streaming rows so the
+//! example finishes in ~a minute; `--full` streams every output pixel
+//! of every layer (exact paper workload, CPU-heavy).  Timing/energy are
+//! *always* evaluated at the full layer shapes — the cap only bounds
+//! the bit-accurate numeric simulation.  When `make artifacts` has been
+//! run, matching layers are additionally cross-checked against the XLA
+//! golden runtime.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::config::RunConfig;
+use skewsa::coordinator::Coordinator;
+use skewsa::energy::{LayerComparison, NetworkTotals};
+use skewsa::pe::PipelineKind;
+use skewsa::runtime::GoldenRuntime;
+use skewsa::sa::tile::{GemmShape, TilePlan};
+use skewsa::util::table::{fnum, pct, Table};
+use skewsa::workloads::gemm::GemmData;
+use skewsa::workloads::mobilenet;
+use std::sync::Arc;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = RunConfig::paper();
+    let coord = Coordinator::new(cfg.clone());
+    let golden = GoldenRuntime::try_open();
+    if golden.is_some() {
+        println!("XLA golden runtime: available (artifacts loaded)");
+    } else {
+        println!("XLA golden runtime: not built (run `make artifacts`) — oracle verify only");
+    }
+
+    let layers = mobilenet::layers();
+    let mut table = Table::new(&[
+        "layer", "gemm", "verified", "cyc-base", "cyc-skew", "lat", "E-delta",
+    ])
+    .numeric();
+    let mut totals = NetworkTotals::default();
+    let mut checked_total = 0usize;
+    let t0 = std::time::Instant::now();
+
+    for (i, l) in layers.iter().enumerate() {
+        let shape = l.gemm();
+        // Timing/energy at the full shape:
+        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let cmp = LayerComparison::evaluate(&cfg.timing(), coord.power_model(), &plan);
+        totals.add(&cmp);
+
+        // Numerics with (optionally) capped M:
+        let m_sim = if full { shape.m } else { shape.m.min(512) };
+        let sim_shape = GemmShape::new(m_sim, shape.k, shape.n);
+        let data = Arc::new(GemmData::cnn_like(sim_shape, FpFormat::BF16, 0xe2e + i as u64));
+        let res = coord.run_gemm(PipelineKind::Skewed, &data);
+        assert!(res.verify.ok(), "layer {} failed bit-exact verification", l.name);
+        checked_total += res.verify.checked;
+
+        table.row(&[
+            l.name.clone(),
+            format!("{}x{}x{}", shape.m, shape.k, shape.n),
+            format!("{}/{}", res.verify.checked - res.verify.failures, res.verify.checked),
+            cmp.baseline.timing.cycles.to_string(),
+            cmp.skewed.timing.cycles.to_string(),
+            pct(cmp.latency_delta()),
+            pct(cmp.energy_delta()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "MobileNetV1 totals: latency {} (paper −16%), energy {} (paper −8%)",
+        pct(totals.latency_delta()),
+        pct(totals.energy_delta())
+    );
+    println!(
+        "energy: {} uJ -> {} uJ at {} GHz on a {}x{} array",
+        fnum(totals.energy_baseline_uj, 1),
+        fnum(totals.energy_skewed_uj, 1),
+        cfg.clock_ghz,
+        cfg.rows,
+        cfg.cols
+    );
+
+    // Cross-check one representative GEMM against the XLA golden.
+    if let Some(g) = &golden {
+        let (m, k, n) = (64, 128, 64);
+        let data = GemmData::cnn_like(GemmShape::new(m, k, n), FpFormat::BF16, 0x901d);
+        let a: Vec<f32> = data.a.iter().flatten().map(|&b| FpFormat::BF16.to_f32(b)).collect();
+        let w: Vec<f32> = data.w.iter().flatten().map(|&b| FpFormat::BF16.to_f32(b)).collect();
+        if let Ok(Some(gold)) = g.run_gemm_f32(m, k, n, &a, &w) {
+            let res = coord.run_gemm(PipelineKind::Skewed, &Arc::new(data));
+            let mut max_rel = 0f32;
+            for (&s, &x) in res.y.iter().zip(&gold) {
+                max_rel = max_rel.max((s - x).abs() / (1.0 + x.abs()));
+            }
+            println!("XLA golden cross-check (64x128x64): max rel err {max_rel:.2e}");
+            assert!(max_rel < 2e-2);
+        }
+    }
+
+    println!(
+        "e2e_mobilenet OK: {} layers, {} outputs bit-verified, wall {:?}",
+        layers.len(),
+        checked_total,
+        t0.elapsed()
+    );
+}

@@ -1,0 +1,116 @@
+//! Reduced-precision format exploration (experiment E7, Fig. 1 context):
+//! encodes/decodes every format of the paper's Fig. 1, shows the delay-
+//! profile inversion that motivates the work (§II), and sweeps the
+//! chained-FMA bit-identity across every input format.
+//!
+//! ```text
+//! cargo run --release --example format_sweep
+//! ```
+
+use skewsa::arith::accum::RoundingUnit;
+use skewsa::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
+use skewsa::arith::format::FpFormat;
+use skewsa::pe::delay::{BlockDelays, StageDelays, CLOCK_PERIOD_FO4};
+use skewsa::pe::PipelineKind;
+use skewsa::report;
+use skewsa::util::rng::Rng;
+use skewsa::util::table::{fnum, Table};
+
+fn main() {
+    // --- Fig. 1: the formats --------------------------------------------
+    let mut t = Table::new(&["format", "bits", "e", "m", "bias", "max", "min-normal"]).numeric();
+    for f in [FpFormat::FP32, FpFormat::BF16, FpFormat::FP16, FpFormat::FP8E4M3, FpFormat::FP8E5M2]
+    {
+        let (sig, exp) = f.max_finite();
+        let max = sig as f64 * 2f64.powi(exp - f.man_bits as i32);
+        t.row(&[
+            f.name.to_string(),
+            f.width().to_string(),
+            f.exp_bits.to_string(),
+            f.man_bits.to_string(),
+            f.bias().to_string(),
+            format!("{max:.3e}"),
+            format!("{:.3e}", 2f64.powi(f.emin())),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- §II: delay-profile inversion -----------------------------------
+    print!("{}", report::format_sweep().render());
+
+    // --- stage delays per pipeline per format ----------------------------
+    let mut d = Table::new(&["chain", "3a-crit", "3b-crit", "skew-crit", "all@1GHz"]).numeric();
+    for (inf, outf) in [
+        (FpFormat::BF16, FpFormat::FP32),
+        (FpFormat::FP16, FpFormat::FP32),
+        (FpFormat::FP8E4M3, FpFormat::FP16),
+        (FpFormat::FP8E5M2, FpFormat::FP16),
+    ] {
+        let chain = ChainCfg::new(inf, outf);
+        let crits: Vec<f64> = PipelineKind::ALL
+            .iter()
+            .map(|&k| StageDelays::for_kind(k, &chain).critical())
+            .collect();
+        d.row(&[
+            format!("{}->{}", inf.name, outf.name),
+            fnum(crits[0], 1),
+            fnum(crits[1], 1),
+            fnum(crits[2], 1),
+            if crits[1].max(crits[2]) <= CLOCK_PERIOD_FO4 { "3b+skew ok" } else { "MISS" }
+                .to_string(),
+        ]);
+        let b = BlockDelays::for_cfg(&chain);
+        println!(
+            "{}: mult {:.1} FO4 vs exp+align {:.1} FO4 -> {}",
+            inf.name,
+            b.mult,
+            b.exp_compute + b.align,
+            if b.exp_compute + b.align > b.mult { "inverted (reduced-precision regime)" } else { "classic" }
+        );
+    }
+    println!("\n{}", d.render());
+
+    // --- bit-identity across every input format --------------------------
+    let mut rng = Rng::new(0xf0f0);
+    for (inf, outf) in [
+        (FpFormat::BF16, FpFormat::FP32),
+        (FpFormat::FP16, FpFormat::FP32),
+        (FpFormat::FP8E4M3, FpFormat::FP16),
+        (FpFormat::FP8E5M2, FpFormat::FP16),
+    ] {
+        let chain = ChainCfg::new(inf, outf);
+        let ru = RoundingUnit::new(chain);
+        let mut identical = 0usize;
+        let total = 200;
+        for _ in 0..total {
+            let len = 1 + rng.below(64) as usize;
+            let mut b = PsumSignal::zero(&chain);
+            let mut s = PsumSignal::zero(&chain);
+            for _ in 0..len {
+                let a = loop {
+                    let bits = rng.bits(inf.width());
+                    if inf.decode(bits).is_finite() {
+                        break bits;
+                    }
+                };
+                let w = loop {
+                    let bits = rng.bits(inf.width());
+                    if inf.decode(bits).is_finite() {
+                        break bits;
+                    }
+                };
+                b = BaselineFmaPath.step(&chain, &b, a, w);
+                s = SkewedFmaPath.step(&chain, &s, a, w);
+            }
+            if ru.round(&b) == ru.round(&s) {
+                identical += 1;
+            }
+        }
+        println!(
+            "{} -> {}: {identical}/{total} random chains bit-identical",
+            inf.name, outf.name
+        );
+        assert_eq!(identical, total);
+    }
+    println!("format_sweep OK");
+}

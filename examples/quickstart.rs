@@ -1,0 +1,80 @@
+//! Quickstart: the five-minute tour of the public API.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. encode values in a reduced-precision format (Fig. 1);
+//! 2. run a chained multiply-add through both datapaths and watch them
+//!    agree bit-for-bit (the paper's functional claim);
+//! 3. run a cycle-accurate column and see the skewed pipeline halve the
+//!    reduction latency;
+//! 4. coordinate a small GEMM end-to-end with verification.
+
+use skewsa::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
+use skewsa::arith::format::FpFormat;
+use skewsa::config::RunConfig;
+use skewsa::coordinator::Coordinator;
+use skewsa::pe::PipelineKind;
+use skewsa::sa::column::ColumnSim;
+use skewsa::sa::tile::GemmShape;
+use skewsa::util::table::pct;
+use skewsa::workloads::gemm::GemmData;
+use std::sync::Arc;
+
+fn main() {
+    // --- 1. formats ------------------------------------------------------
+    let bf16 = FpFormat::BF16;
+    let x = 3.14159f64;
+    let bits = bf16.from_f64(x);
+    println!("bf16({x}) = {bits:#06x} -> {}", bf16.to_f64(bits));
+
+    // --- 2. the two datapaths are bit-identical --------------------------
+    let cfg = ChainCfg::BF16_FP32;
+    let terms = [(1.5, 2.0), (-0.5, 4.0), (3.0, 0.125), (7.0, -1.0)];
+    let mut base = PsumSignal::zero(&cfg);
+    let mut skew = PsumSignal::zero(&cfg);
+    for &(a, w) in &terms {
+        base = BaselineFmaPath.step(&cfg, &base, bf16.from_f64(a), bf16.from_f64(w));
+        skew = SkewedFmaPath.step(&cfg, &skew, bf16.from_f64(a), bf16.from_f64(w));
+    }
+    let ru = skewsa::arith::accum::RoundingUnit::new(cfg);
+    println!(
+        "chained Σ aᵢwᵢ: baseline {} | skewed {} (bit-identical: {})",
+        ru.round_f32(&base),
+        ru.round_f32(&skew),
+        ru.round(&base) == ru.round(&skew),
+    );
+
+    // --- 3. cycle-accurate column: latency halves ------------------------
+    let r = 32;
+    let weights: Vec<u64> = (0..r).map(|i| bf16.from_f64(1.0 / (i + 1) as f64)).collect();
+    let a: Vec<Vec<u64>> = vec![(0..r).map(|i| bf16.from_f64(i as f64)).collect()];
+    for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        let mut sim = ColumnSim::new(cfg, kind, &weights, a.clone());
+        sim.run(10_000).unwrap();
+        println!(
+            "{:<12} column of {r}: {} cycles, result {}",
+            kind.name(),
+            sim.cycles(),
+            f32::from_bits(sim.outputs()[0].bits as u32)
+        );
+    }
+
+    // --- 4. coordinated GEMM with verification ---------------------------
+    let mut rc = RunConfig::small();
+    rc.rows = 16;
+    rc.cols = 16;
+    rc.verify_fraction = 1.0;
+    let data = Arc::new(GemmData::cnn_like(GemmShape::new(32, 48, 24), FpFormat::BF16, 1));
+    let res = Coordinator::new(rc).run_gemm(PipelineKind::Skewed, &data);
+    println!(
+        "coordinated 32x48x24 GEMM: verified {}/{} bit-exact; latency delta {}, energy delta {}",
+        res.verify.checked - res.verify.failures,
+        res.verify.checked,
+        pct(res.comparison.latency_delta()),
+        pct(res.comparison.energy_delta()),
+    );
+    assert!(res.verify.ok());
+    println!("quickstart OK");
+}

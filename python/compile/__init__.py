@@ -1,0 +1,2 @@
+"""skewsa build-time python package: L1 Pallas kernels, L2 JAX model,
+AOT lowering to HLO-text artifacts.  Never imported at runtime."""

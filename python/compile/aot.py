@@ -1,0 +1,109 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest.
+
+Runs ONCE at `make artifacts`; the rust runtime loads the outputs via
+PJRT and python never touches the request path.
+
+HLO **text** (not a serialized ``HloModuleProto``) is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md and DESIGN.md §3.
+
+The manifest records parameter/result shapes (the rust loader validates
+calls against them) and a content fingerprint of the python compile
+sources, backing the Makefile's staleness contract.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (xla_extension-0.5.1-safe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sources_fingerprint() -> str:
+    """SHA-256 over every .py under compile/ (sorted), for staleness."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.name.encode())
+        h.update(p.read_bytes())
+    return h.hexdigest()
+
+
+def build(out_dir: pathlib.Path, only: str | None = None) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"_sources_fingerprint": sources_fingerprint()}
+    for name, (fn, param_shapes, result_shape) in model.ARTIFACTS.items():
+        if only and only != name:
+            continue
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in param_shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        manifest[name] = {
+            "path": fname,
+            "params": [list(s) for s in param_shapes],
+            "result": list(result_shape),
+        }
+        print(f"  {name}: {len(text)} chars -> {fname}", file=sys.stderr)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    return manifest
+
+
+def is_stale(out_dir: pathlib.Path) -> bool:
+    """True when artifacts are missing or the compile sources changed."""
+    mpath = out_dir / "manifest.json"
+    if not mpath.is_file():
+        return True
+    try:
+        manifest = json.loads(mpath.read_text())
+    except json.JSONDecodeError:
+        return True
+    if manifest.get("_sources_fingerprint") != sources_fingerprint():
+        return True
+    return any(
+        not (out_dir / spec["path"]).is_file()
+        for key, spec in manifest.items()
+        if not key.startswith("_")
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="build a single artifact")
+    ap.add_argument(
+        "--check", action="store_true", help="exit 1 if artifacts are stale, else 0"
+    )
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    if args.check:
+        sys.exit(1 if is_stale(out_dir) else 0)
+    if not is_stale(out_dir) and not args.only:
+        print(f"artifacts in {out_dir} are up to date", file=sys.stderr)
+        return
+    build(out_dir, args.only)
+    print(f"wrote manifest to {out_dir / 'manifest.json'}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

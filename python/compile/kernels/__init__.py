@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels + pure-jnp references."""
+
+from .ref import conv_as_gemm_ref, matmul_ref
+from .sa_matmul import sa_matmul, vmem_footprint_bytes
+
+__all__ = ["conv_as_gemm_ref", "matmul_ref", "sa_matmul", "vmem_footprint_bytes"]

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here with identical calling
+conventions; pytest sweeps shapes/dtypes (hypothesis) and asserts
+allclose between kernel and reference.  The references also document the
+numeric contract: bf16 elementwise inputs, f32 accumulation ("reduce in
+double width, round once per output"), matching the paper's SA semantics
+at the granularity XLA exposes.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference GEMM: bf16 (or any) inputs, f32 accumulation."""
+    return jnp.matmul(a, w, preferred_element_type=jnp.float32)
+
+
+def conv_as_gemm_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Reference NHWC conv via explicit im2col + the reference GEMM.
+
+    x: (n, h, w, cin); w: (kh, kw, cin, cout); "same" padding.
+    """
+    n, h, wdt, cin = x.shape
+    kh, kw, _, cout = w.shape
+    oh, ow = -(-h // stride), -(-wdt // stride)
+    # XLA-convention SAME padding (asymmetric: excess goes after).
+    pth = max((oh - 1) * stride + kh - h, 0)
+    ptw = max((ow - 1) * stride + kw - wdt, 0)
+    xp = jnp.pad(
+        x, ((0, 0), (pth // 2, pth - pth // 2), (ptw // 2, ptw - ptw // 2), (0, 0))
+    )
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = xp[
+                :,
+                dy : dy + (oh - 1) * stride + 1 : stride,
+                dx : dx + (ow - 1) * stride + 1 : stride,
+                :,
+            ]
+            cols.append(patch)
+    # (n, oh, ow, kh*kw*cin) with (dy, dx, cin) minor order.
+    im2col = jnp.concatenate(cols, axis=-1)
+    mat = im2col.reshape(n * oh * ow, kh * kw * cin)
+    wmat = w.reshape(kh * kw * cin, cout)
+    y = matmul_ref(mat, wmat)
+    return y.reshape(n, oh, ow, cout)

@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernel: weight-stationary tiled matmul.
+
+The paper's contribution is an ASIC pipeline reorganisation; on a TPU
+there is no user-visible PE pipeline, so the transferable insight (see
+DESIGN.md §8, Hardware-Adaptation) is mapped as:
+
+* **K-reduction chain ↔ MXU systolic reduction** — blocks are shaped so
+  the contraction feeds the 128-wide MXU the way the paper's column
+  chains feed the 128-deep array;
+* **"round once per column" ↔ f32 accumulation** — the output block is
+  an f32 accumulator in VMEM; inputs stay bf16 and nothing rounds to
+  bf16 between K-steps (`preferred_element_type=jnp.float32`);
+* **weight-stationary reuse ↔ BlockSpec index maps** — the grid is
+  ordered `(n, k, m)` with `m` innermost, so the weight block index
+  `(k, n)` is invariant in the innermost loop and Pallas keeps the
+  weight tile resident in VMEM while activations stream past — exactly
+  the WS dataflow;
+* **double-buffered weight reload ↔ Pallas pipelining** of the HBM→VMEM
+  copies across grid steps.
+
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; correctness is validated on the interpret path and real-
+TPU performance is *estimated* from the VMEM footprint / MXU shape
+(DESIGN.md §10).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes: MXU-shaped (128×128 systolic array, matching the
+# paper's SA dims).  Tests shrink them for small shapes.
+DEF_BM, DEF_BK, DEF_BN = 128, 128, 128
+
+
+def _kernel(a_ref, w_ref, o_ref, *, k_tiles: int):
+    """One grid step: o[m,n] (+)= a[m,k] @ w[k,n] with f32 accumulation."""
+    k = pl.program_id(1)  # grid = (n, k, m)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    w = w_ref[...]
+    # bf16×bf16→f32 on the MXU; never round the accumulator to bf16.
+    o_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def sa_matmul(
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = DEF_BM,
+    bk: int = DEF_BK,
+    bn: int = DEF_BN,
+) -> jnp.ndarray:
+    """Weight-stationary tiled matmul: `a (M×K) @ w (K×N) → f32 (M×N)`.
+
+    Inputs of any float dtype (bf16 in the paper's configuration);
+    accumulation and result are f32.  Shapes need not divide the block
+    sizes (padded internally, sliced back).
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    mp, kp, np_ = -(-m // bm_) * bm_, -(-k // bk_) * bk_, -(-n // bn_) * bn_
+    ap = _pad_to(a, mp, kp)
+    wp = _pad_to(w, kp, np_)
+    k_tiles = kp // bk_
+    grid = (np_ // bn_, k_tiles, mp // bm_)  # (n, k, m): m innermost (WS)
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_tiles=k_tiles),
+        grid=grid,
+        in_specs=[
+            # Activations stream: block index depends on (m, k).
+            pl.BlockSpec((bm_, bk_), lambda ni, ki, mi: (mi, ki)),
+            # Weights stationary: invariant in the innermost (m) dim.
+            pl.BlockSpec((bk_, bn_), lambda ni, ki, mi: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda ni, ki, mi: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU path; Mosaic lowering is TPU-only
+    )(ap, wp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int = DEF_BM, bk: int = DEF_BK, bn: int = DEF_BN) -> int:
+    """Estimated VMEM residency of one grid step (double-buffered inputs
+    + f32 accumulator), used by the DESIGN.md §10 roofline notes."""
+    a = bm * bk * 2  # bf16
+    w = bk * bn * 2  # bf16 (stationary)
+    o = bm * bn * 4  # f32 accumulator
+    return 2 * (a + w) + o  # ×2: Pallas double-buffers the streamed copies

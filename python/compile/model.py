@@ -1,0 +1,91 @@
+"""Layer-2 JAX model: conv-as-GEMM forward pass on the L1 kernel.
+
+Build-time only — `aot.py` lowers the jitted entry points to HLO text
+once; the rust coordinator executes the artifacts through PJRT and
+python never runs at request time.
+
+Entry points (all take/return f32 so the rust side never constructs
+reduced-precision literals; the bf16 casts happen *inside* the lowered
+computation, mirroring the SA's bf16-in / f32-reduce datapath):
+
+* ``gemm_bf16`` — the golden GEMM used by coordinator verification;
+* ``tiny_cnn`` — a 3-layer CNN head-to-tail forward (conv → relu → conv
+  → relu → global-avg-pool → fc), proving the full conv-as-GEMM path
+  composes through the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sa_matmul
+
+
+def gemm_bf16(a: jnp.ndarray, w: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """f32 in → bf16 cast → WS-tiled matmul → f32 out (1-tuple)."""
+    y = sa_matmul(a.astype(jnp.bfloat16), w.astype(jnp.bfloat16))
+    return (y,)
+
+
+def _conv_same(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NHWC "same" conv lowered to im2col + the L1 kernel.
+
+    x: (n, h, w, cin) f32; w: (kh, kw, cin, cout) f32.
+    """
+    n, h, wdt, cin = x.shape
+    kh, kw, _, cout = w.shape
+    oh, ow = -(-h // stride), -(-wdt // stride)
+    # XLA-convention SAME padding (asymmetric: excess goes after).
+    pth = max((oh - 1) * stride + kh - h, 0)
+    ptw = max((ow - 1) * stride + kw - wdt, 0)
+    xp = jnp.pad(
+        x, ((0, 0), (pth // 2, pth - pth // 2), (ptw // 2, ptw - ptw // 2), (0, 0))
+    )
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = xp[
+                :,
+                dy : dy + (oh - 1) * stride + 1 : stride,
+                dx : dx + (ow - 1) * stride + 1 : stride,
+                :,
+            ]
+            cols.append(patch)
+    mat = jnp.concatenate(cols, axis=-1).reshape(n * oh * ow, kh * kw * cin)
+    wmat = w.reshape(kh * kw * cin, cout)
+    y = sa_matmul(
+        mat.astype(jnp.bfloat16),
+        wmat.astype(jnp.bfloat16),
+        bm=128,
+        bk=min(128, kh * kw * cin),
+        bn=min(128, cout),
+    )
+    return y.reshape(n, oh, ow, cout)
+
+
+def tiny_cnn(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, wfc: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """A small CNN forward: every MAC goes through the L1 kernel.
+
+    x: (1, 16, 16, 4); w1: (3,3,4,8); w2: (3,3,8,16); wfc: (16, 10).
+    Returns (logits (1, 10),).
+    """
+    h = jax.nn.relu(_conv_same(x, w1, stride=2))  # (1, 8, 8, 8)
+    h = jax.nn.relu(_conv_same(h, w2, stride=2))  # (1, 4, 4, 16)
+    pooled = h.mean(axis=(1, 2))  # (1, 16)
+    logits = sa_matmul(
+        pooled.astype(jnp.bfloat16), wfc.astype(jnp.bfloat16), bm=1, bk=16, bn=10
+    )
+    return (logits,)
+
+
+#: AOT artifact registry: name → (callable, list of param shapes).
+#: `aot.py` lowers each with f32 ShapeDtypeStructs of these shapes.
+ARTIFACTS: dict[str, tuple] = {
+    "gemm_bf16_8x16x8": (gemm_bf16, [(8, 16), (16, 8)], (8, 8)),
+    "gemm_bf16_64x128x64": (gemm_bf16, [(64, 128), (128, 64)], (64, 64)),
+    "gemm_bf16_128x256x128": (gemm_bf16, [(128, 256), (256, 128)], (128, 128)),
+    "tiny_cnn_16x16x4": (
+        tiny_cnn,
+        [(1, 16, 16, 4), (3, 3, 4, 8), (3, 3, 8, 16), (16, 10)],
+        (1, 10),
+    ),
+}

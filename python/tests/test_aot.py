@@ -1,0 +1,73 @@
+"""AOT path: lowering, manifest integrity, staleness contract."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(out, only="gemm_bf16_8x16x8")
+    return out, manifest
+
+
+class TestLowering:
+    def test_hlo_text_is_parseable_hlo(self, built):
+        out, manifest = built
+        text = (out / manifest["gemm_bf16_8x16x8"]["path"]).read_text()
+        assert "HloModule" in text
+        # The bf16 cast and f32 accumulation survive lowering.
+        assert "bf16" in text
+        assert "f32" in text
+
+    def test_manifest_shapes(self, built):
+        _, manifest = built
+        spec = manifest["gemm_bf16_8x16x8"]
+        assert spec["params"] == [[8, 16], [16, 8]]
+        assert spec["result"] == [8, 8]
+
+    def test_manifest_fingerprint_present(self, built):
+        _, manifest = built
+        assert len(manifest["_sources_fingerprint"]) == 64
+
+
+class TestStaleness:
+    def test_missing_dir_is_stale(self, tmp_path):
+        assert aot.is_stale(tmp_path / "nope")
+
+    def test_built_dir_is_fresh(self, built):
+        out, _ = built
+        # Only one artifact was built; a full-manifest check would be
+        # fresh only for that subset, which build() recorded.
+        assert not aot.is_stale(out)
+
+    def test_source_change_invalidates(self, built, tmp_path):
+        out, _ = built
+        m = json.loads((out / "manifest.json").read_text())
+        m["_sources_fingerprint"] = "0" * 64
+        stale_dir = tmp_path / "stale"
+        stale_dir.mkdir()
+        (stale_dir / "manifest.json").write_text(json.dumps(m))
+        assert aot.is_stale(stale_dir)
+
+    def test_missing_artifact_file_invalidates(self, built, tmp_path):
+        out, _ = built
+        copy = tmp_path / "copy"
+        copy.mkdir()
+        (copy / "manifest.json").write_text((out / "manifest.json").read_text())
+        assert aot.is_stale(copy)  # hlo file absent
+
+
+def test_registry_is_consistent():
+    for name, (fn, shapes, result) in model.ARTIFACTS.items():
+        assert callable(fn), name
+        assert all(isinstance(s, tuple) for s in shapes), name
+        assert isinstance(result, tuple), name
+
+
+def test_fingerprint_stable_across_calls():
+    assert aot.sources_fingerprint() == aot.sources_fingerprint()

@@ -1,0 +1,115 @@
+"""L1 kernel correctness: sa_matmul vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/block sizes (DESIGN.md §9); the fixed
+cases pin down the WS grid-ordering and accumulation semantics.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import matmul_ref, sa_matmul, vmem_footprint_bytes
+
+hypothesis.settings.register_profile(
+    "kernel", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _check(m, k, n, dtype, bm=128, bk=128, bn=128, seed=0):
+    a = _rand((m, k), dtype, seed)
+    w = _rand((k, n), dtype, seed + 1)
+    got = sa_matmul(a, w, bm=bm, bk=bk, bn=bn)
+    want = matmul_ref(a, w)
+    assert got.shape == (m, n)
+    assert got.dtype == jnp.float32
+    # Accumulation order may differ across K-tiles: f32-level tolerance
+    # scaled by reduction depth.
+    tol = 1e-5 * max(1.0, np.sqrt(k))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64), rtol=tol, atol=tol
+    )
+
+
+class TestFixedCases:
+    def test_single_block(self):
+        _check(8, 16, 8, jnp.bfloat16)
+
+    def test_exact_multi_block(self):
+        _check(64, 64, 64, jnp.bfloat16, bm=32, bk=32, bn=32)
+
+    def test_ragged_edges(self):
+        _check(70, 33, 50, jnp.bfloat16, bm=32, bk=16, bn=32)
+
+    def test_k_deeper_than_block(self):
+        # Multiple K-passes exercise the f32 accumulator re-entry.
+        _check(16, 300, 16, jnp.bfloat16, bm=16, bk=64, bn=16)
+
+    def test_f32_inputs(self):
+        _check(24, 48, 24, jnp.float32, bm=16, bk=16, bn=16)
+
+    def test_vector_shapes(self):
+        _check(1, 128, 10, jnp.bfloat16, bm=1, bk=64, bn=10)
+
+    def test_accumulates_in_f32_not_bf16(self):
+        # K=512 of value 1/64 products: bf16 accumulation would collapse
+        # (increments below bf16 ulp of the running sum); f32 keeps them.
+        k = 512
+        a = jnp.full((1, k), 0.125, jnp.bfloat16)
+        w = jnp.full((k, 1), 0.125, jnp.bfloat16)
+        y = float(sa_matmul(a, w, bm=1, bk=128, bn=1)[0, 0])
+        assert abs(y - k * 0.125 * 0.125) < 1e-3, y
+
+    def test_zero_inputs(self):
+        a = jnp.zeros((8, 8), jnp.bfloat16)
+        w = jnp.zeros((8, 8), jnp.bfloat16)
+        assert float(jnp.abs(sa_matmul(a, w, bm=8, bk=8, bn=8)).max()) == 0.0
+
+    def test_special_values_propagate(self):
+        a = jnp.asarray([[jnp.inf, 1.0]], jnp.bfloat16)
+        w = jnp.asarray([[1.0], [1.0]], jnp.bfloat16)
+        assert np.isinf(float(sa_matmul(a, w, bm=1, bk=2, bn=1)[0, 0]))
+
+    def test_contraction_mismatch_raises(self):
+        a = jnp.zeros((4, 5), jnp.bfloat16)
+        w = jnp.zeros((6, 4), jnp.bfloat16)
+        with pytest.raises(AssertionError):
+            sa_matmul(a, w)
+
+
+class TestHypothesisSweeps:
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**31),
+    )
+    def test_shapes_bf16(self, m, k, n, seed):
+        _check(m, k, n, jnp.bfloat16, bm=32, bk=32, bn=32, seed=seed)
+
+    @given(
+        bm=st.sampled_from([1, 8, 16, 64]),
+        bk=st.sampled_from([8, 16, 64]),
+        bn=st.sampled_from([8, 16, 64]),
+    )
+    def test_block_shapes(self, bm, bk, bn):
+        _check(40, 40, 40, jnp.bfloat16, bm=bm, bk=bk, bn=bn)
+
+    @given(dtype=st.sampled_from([jnp.bfloat16, jnp.float16, jnp.float32]))
+    @settings(max_examples=3)
+    def test_dtypes(self, dtype):
+        _check(17, 23, 19, dtype, bm=16, bk=16, bn=16)
+
+
+def test_vmem_footprint_within_budget():
+    # The default MXU-shaped blocks must fit comfortably in a TPU core's
+    # ~16 MiB VMEM (DESIGN.md §10 roofline note).
+    assert vmem_footprint_bytes() < 16 * 2**20 / 4

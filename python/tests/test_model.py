@@ -1,0 +1,100 @@
+"""L2 model correctness: conv-as-GEMM forward vs lax reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import conv_as_gemm_ref
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _lax_conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+class TestConvReference:
+    def test_im2col_ref_matches_lax_s1(self):
+        x = _rand((2, 8, 8, 3), 0)
+        w = _rand((3, 3, 3, 5), 1)
+        got = conv_as_gemm_ref(x, w, stride=1)
+        want = _lax_conv(x, w, 1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_im2col_ref_matches_lax_s2(self):
+        x = _rand((1, 16, 16, 4), 2)
+        w = _rand((3, 3, 4, 8), 3)
+        got = conv_as_gemm_ref(x, w, stride=2)
+        want = _lax_conv(x, w, 2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestGemmEntry:
+    def test_gemm_bf16_matches_ref(self):
+        a = _rand((64, 128), 4)
+        w = _rand((128, 64), 5)
+        (y,) = model.gemm_bf16(a, w)
+        want = jnp.matmul(
+            a.astype(jnp.bfloat16), w.astype(jnp.bfloat16), preferred_element_type=jnp.float32
+        )
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-2, atol=2e-2)
+        assert y.dtype == jnp.float32
+
+    def test_gemm_is_jittable_and_stable(self):
+        a = _rand((8, 16), 6)
+        w = _rand((16, 8), 7)
+        (y1,) = jax.jit(model.gemm_bf16)(a, w)
+        (y2,) = model.gemm_bf16(a, w)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+class TestTinyCnn:
+    def _params(self):
+        return (
+            _rand((1, 16, 16, 4), 10),
+            _rand((3, 3, 4, 8), 11) * 0.3,
+            _rand((3, 3, 8, 16), 12) * 0.3,
+            _rand((16, 10), 13) * 0.3,
+        )
+
+    def test_shapes_and_finiteness(self):
+        (logits,) = model.tiny_cnn(*self._params())
+        assert logits.shape == (1, 10)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_matches_bf16_lax_pipeline(self):
+        x, w1, w2, wfc = self._params()
+
+        def ref(x, w1, w2, wfc):
+            def conv(x, w, s):
+                return _lax_conv(
+                    x.astype(jnp.bfloat16), w.astype(jnp.bfloat16), s
+                ).astype(jnp.float32)
+
+            h = jax.nn.relu(conv(x, w1, 2))
+            h = jax.nn.relu(conv(h, w2, 2))
+            pooled = h.mean(axis=(1, 2))
+            return pooled.astype(jnp.bfloat16) @ wfc.astype(jnp.bfloat16)
+
+        (got,) = model.tiny_cnn(x, w1, w2, wfc)
+        want = ref(x, w1, w2, wfc)
+        # bf16 rounding points differ slightly between the two lowerings.
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want, np.float32), rtol=0.06, atol=0.06
+        )
+
+    def test_every_artifact_entry_is_callable(self):
+        for name, (fn, shapes, result) in model.ARTIFACTS.items():
+            args = [_rand(s, hash(name) % 1000 + i) for i, s in enumerate(shapes)]
+            (out,) = fn(*args)
+            assert tuple(out.shape) == tuple(result), name

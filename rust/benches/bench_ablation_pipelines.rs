@@ -1,0 +1,116 @@
+//! E5 — architecture ablation across the three pipeline organisations
+//! (Fig. 3a, Fig. 3b, skewed) and the four reduced-precision formats:
+//! stage delays / clock feasibility, column latency (cycle-accurate),
+//! and the design-choice ablations DESIGN.md calls out (double-buffered
+//! weight reloads, chain window width).
+//!
+//! ```text
+//! cargo bench --bench bench_ablation_pipelines
+//! ```
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::arith::format::FpFormat;
+use skewsa::pe::PipelineKind;
+use skewsa::report;
+use skewsa::sa::column::ColumnSim;
+use skewsa::sa::tile::GemmShape;
+use skewsa::timing::model::{gemm_timing, TimingConfig};
+use skewsa::util::rng::Rng;
+use skewsa::util::table::{pct, Table};
+
+fn main() {
+    let tcfg = TimingConfig::PAPER;
+    print!("{}", report::ablation_pipelines(ChainCfg::BF16_FP32, &tcfg).render());
+
+    // Cycle-accurate column latency across formats and kinds.
+    let mut rng = Rng::new(0xab1a);
+    let mut t = Table::new(&["chain", "kind", "R", "col-cycles(M=4)", "vs-baseline"]).numeric();
+    for (inf, outf) in [
+        (FpFormat::BF16, FpFormat::FP32),
+        (FpFormat::FP16, FpFormat::FP32),
+        (FpFormat::FP8E4M3, FpFormat::FP16),
+        (FpFormat::FP8E5M2, FpFormat::FP16),
+    ] {
+        let chain = ChainCfg::new(inf, outf);
+        let r = 64;
+        let mut base_cycles = 0u64;
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let weights: Vec<u64> = (0..r)
+                .map(|_| loop {
+                    let b = rng.bits(inf.width());
+                    if inf.decode(b).is_finite() {
+                        break b;
+                    }
+                })
+                .collect();
+            let a: Vec<Vec<u64>> = (0..4)
+                .map(|_| {
+                    (0..r)
+                        .map(|_| loop {
+                            let b = rng.bits(inf.width());
+                            if inf.decode(b).is_finite() {
+                                break b;
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut sim = ColumnSim::new(chain, kind, &weights, a);
+            sim.run(100_000).unwrap();
+            if kind == PipelineKind::Baseline3b {
+                base_cycles = sim.cycles();
+            }
+            t.row(&[
+                format!("{}->{}", inf.name, outf.name),
+                kind.name().to_string(),
+                r.to_string(),
+                sim.cycles().to_string(),
+                pct(sim.cycles() as f64 / base_cycles as f64 - 1.0),
+            ]);
+        }
+    }
+    println!("cycle-accurate column latency across formats:\n{}", t.render());
+
+    // Ablation: double-buffered vs serialized weight reloads.
+    let mut t2 = Table::new(&["reloads", "kind", "MobileNet-late-layer-cycles"]).numeric();
+    for db in [true, false] {
+        let cfg = TimingConfig { double_buffer: db, ..tcfg };
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let c = gemm_timing(&cfg, kind, GemmShape::new(49, 512, 512)).cycles;
+            t2.row(&[
+                if db { "double-buffered" } else { "serialized" }.to_string(),
+                kind.name().to_string(),
+                c.to_string(),
+            ]);
+        }
+    }
+    println!("weight-reload ablation (M=49, K=N=512):\n{}", t2.render());
+
+    // Ablation: accumulator window width vs numeric agreement with the
+    // exact chain (design choice behind ChainCfg::BF16_FP32.window).
+    use skewsa::arith::accum::ColumnOracle;
+    use skewsa::arith::softfloat::ExactChain;
+    let mut t3 = Table::new(&["window", "exact-match-rate(K=128)"]).numeric();
+    // 27 = out.man_bits + 4 is the structural minimum (rounding headroom).
+    for window in [27u32, 28, 32, 40, 50] {
+        let chain = ChainCfg { in_fmt: FpFormat::BF16, out_fmt: FpFormat::FP32, window };
+        let mut matches = 0;
+        let total = 300;
+        let mut rng = Rng::new(7);
+        for _ in 0..total {
+            let mut o = ColumnOracle::new(chain);
+            let mut e = ExactChain::new();
+            for _ in 0..128 {
+                let a = FpFormat::BF16.from_f64(rng.normal_scaled(0.0, 1.0));
+                let w = FpFormat::BF16.from_f64(rng.normal_scaled(0.0, 0.2));
+                o.mac(a, w);
+                e.mac(FpFormat::BF16, a, w);
+            }
+            if o.result() == e.result(FpFormat::FP32) {
+                matches += 1;
+            }
+        }
+        t3.row(&[window.to_string(), format!("{matches}/{total}")]);
+    }
+    println!("accumulator-window ablation:\n{}", t3.render());
+}

@@ -1,0 +1,40 @@
+//! E1 — regenerates the paper's **Fig. 7**: per-layer energy of
+//! MobileNetV1 on the 128×128 bf16→fp32 array, baseline (Fig. 3b) vs
+//! skewed, plus the emitted series as CSV for plotting.
+//!
+//! ```text
+//! cargo bench --bench bench_fig7_mobilenet
+//! ```
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::energy::{AreaModel, PowerModel};
+use skewsa::report;
+use skewsa::timing::model::TimingConfig;
+use skewsa::util::bench::{measure, with_units};
+
+fn main() {
+    let tcfg = TimingConfig::PAPER;
+    let pmodel = PowerModel::new(AreaModel::new(ChainCfg::BF16_FP32));
+
+    let rep = report::fig7_mobilenet(&tcfg, &pmodel);
+    print!("{}", rep.render());
+    let tot = rep.totals.unwrap();
+    println!(
+        "paper: -16% latency / -8% energy | reproduced: {:+.1}% / {:+.1}%",
+        tot.latency_delta() * 100.0,
+        tot.energy_delta() * 100.0
+    );
+
+    // Wall-clock of the full figure evaluation (the analytic path the
+    // coordinator uses for whole-CNN runs — perf-tracked in §Perf).
+    let m = measure("fig7:full-evaluation", 2, 20, 5, || {
+        let r = report::fig7_mobilenet(&tcfg, &pmodel);
+        std::hint::black_box(r.table.n_rows());
+    });
+    println!("{}", with_units(m, 28.0, "layers").report());
+
+    let csv = rep.table.to_csv();
+    std::fs::create_dir_all("target/reports").ok();
+    std::fs::write("target/reports/fig7_mobilenet.csv", &csv).ok();
+    println!("series written to target/reports/fig7_mobilenet.csv");
+}

@@ -1,0 +1,36 @@
+//! E2 — regenerates the paper's **Fig. 8**: per-layer energy of
+//! ResNet-50, baseline vs skewed, with the CSV series.
+//!
+//! ```text
+//! cargo bench --bench bench_fig8_resnet50
+//! ```
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::energy::{AreaModel, PowerModel};
+use skewsa::report;
+use skewsa::timing::model::TimingConfig;
+use skewsa::util::bench::{measure, with_units};
+
+fn main() {
+    let tcfg = TimingConfig::PAPER;
+    let pmodel = PowerModel::new(AreaModel::new(ChainCfg::BF16_FP32));
+
+    let rep = report::fig8_resnet50(&tcfg, &pmodel);
+    print!("{}", rep.render());
+    let tot = rep.totals.unwrap();
+    println!(
+        "paper: -21% latency / -11% energy | reproduced: {:+.1}% / {:+.1}%",
+        tot.latency_delta() * 100.0,
+        tot.energy_delta() * 100.0
+    );
+
+    let m = measure("fig8:full-evaluation", 2, 20, 5, || {
+        let r = report::fig8_resnet50(&tcfg, &pmodel);
+        std::hint::black_box(r.table.n_rows());
+    });
+    println!("{}", with_units(m, 54.0, "layers").report());
+
+    std::fs::create_dir_all("target/reports").ok();
+    std::fs::write("target/reports/fig8_resnet50.csv", rep.table.to_csv()).ok();
+    println!("series written to target/reports/fig8_resnet50.csv");
+}

@@ -1,0 +1,54 @@
+//! E4 — the paper's headline claims (§I/§IV): whole-network latency
+//! −16% (MobileNet) / −21% (ResNet50) and energy −8% / −11%, plus an
+//! M-sweep showing *where* the saving comes from (the per-tile R−2
+//! cycles amortizing differently across layer shapes).
+//!
+//! ```text
+//! cargo bench --bench bench_headline_latency
+//! ```
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::energy::{AreaModel, PowerModel};
+use skewsa::pe::PipelineKind;
+use skewsa::report;
+use skewsa::sa::tile::GemmShape;
+use skewsa::timing::model::{gemm_timing, TimingConfig};
+use skewsa::util::table::{pct, Table};
+
+fn main() {
+    let tcfg = TimingConfig::PAPER;
+    let pmodel = PowerModel::new(AreaModel::new(ChainCfg::BF16_FP32));
+    print!("{}", report::headline(&tcfg, &pmodel).render());
+
+    // Where the saving lives: sweep M at fixed K=N=512 (one weight-tile
+    // column block) — the crossover from "noise" to ">20%".
+    let mut t = Table::new(&["M", "cyc-base", "cyc-skew", "saving"]).numeric();
+    for m in [1usize, 16, 49, 196, 784, 3136, 12544] {
+        let shape = GemmShape::new(m, 512, 512);
+        let b = gemm_timing(&tcfg, PipelineKind::Baseline3b, shape).cycles;
+        let s = gemm_timing(&tcfg, PipelineKind::Skewed, shape).cycles;
+        t.row(&[
+            m.to_string(),
+            b.to_string(),
+            s.to_string(),
+            pct(s as f64 / b as f64 - 1.0),
+        ]);
+    }
+    println!("\nM-sweep at K=N=512 (small-M late layers win big):\n{}", t.render());
+
+    // Array-size sweep: the saving scales with R.
+    let mut t2 = Table::new(&["array", "tile-base", "tile-skew", "saved-cycles"]).numeric();
+    for r in [32usize, 64, 128, 256] {
+        let cfg = TimingConfig { rows: r, cols: r, ..tcfg };
+        let shape = GemmShape::new(49, r, r);
+        let b = gemm_timing(&cfg, PipelineKind::Baseline3b, shape).cycles;
+        let s = gemm_timing(&cfg, PipelineKind::Skewed, shape).cycles;
+        t2.row(&[
+            format!("{r}x{r}"),
+            b.to_string(),
+            s.to_string(),
+            (b - s).to_string(),
+        ]);
+    }
+    println!("array-size sweep (saving = R−2 per tile):\n{}", t2.render());
+}

@@ -1,0 +1,114 @@
+//! Hot-path microbenchmarks — the §Perf instrumentation.
+//!
+//! Tracks the three tiers the perf pass optimizes (EXPERIMENTS.md §Perf):
+//!
+//! 1. `oracle-mac` — the value-level chained multiply-add step (the
+//!    coordinator's numeric inner loop);
+//! 2. `column-sim` / `array-sim` — cycle-accurate PE-cycles per second;
+//! 3. `executor` — coordinated GEMM throughput across the worker pool.
+//!
+//! ```text
+//! cargo bench --bench bench_hotpath
+//! ```
+
+use skewsa::arith::accum::ColumnOracle;
+use skewsa::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
+use skewsa::arith::format::FpFormat;
+use skewsa::config::RunConfig;
+use skewsa::coordinator::Coordinator;
+use skewsa::pe::PipelineKind;
+use skewsa::sa::array::ArraySim;
+use skewsa::sa::column::ColumnSim;
+use skewsa::sa::tile::GemmShape;
+use skewsa::util::bench::{measure, with_units};
+use skewsa::util::rng::Rng;
+use skewsa::workloads::gemm::GemmData;
+use std::sync::Arc;
+
+const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+fn main() {
+    let mut rng = Rng::new(0x407);
+    let vals: Vec<(u64, u64)> = (0..1024)
+        .map(|_| {
+            (
+                FpFormat::BF16.from_f64(rng.normal_scaled(0.0, 1.0)),
+                FpFormat::BF16.from_f64(rng.normal_scaled(0.0, 0.2)),
+            )
+        })
+        .collect();
+
+    // --- 1. datapath step throughput ------------------------------------
+    for (name, path) in [
+        ("hot:baseline-step", &BaselineFmaPath as &dyn ChainDatapath),
+        ("hot:skewed-step", &SkewedFmaPath as &dyn ChainDatapath),
+    ] {
+        let m = measure(name, 3, 200, 7, || {
+            let mut s = PsumSignal::zero(&CFG);
+            for &(a, w) in &vals {
+                s = path.step(&CFG, &s, a, w);
+            }
+            std::hint::black_box(s.val.sig);
+        });
+        println!("{}", with_units(m, 1024.0, "macs").report());
+    }
+
+    // --- oracle column (step + rounding) ---------------------------------
+    let m = measure("hot:oracle-column-128", 3, 200, 7, || {
+        let mut o = ColumnOracle::new(CFG);
+        for &(a, w) in vals.iter().take(128) {
+            o.mac(a, w);
+        }
+        std::hint::black_box(o.result());
+    });
+    println!("{}", with_units(m, 128.0, "macs").report());
+
+    // --- 2. cycle-accurate sims ------------------------------------------
+    let data = GemmData::cnn_like(GemmShape::new(32, 32, 1), FpFormat::BF16, 1);
+    let weights: Vec<u64> = (0..32).map(|k| data.w[k][0]).collect();
+    let m = measure("hot:column-sim-32x32", 2, 20, 5, || {
+        let mut sim = ColumnSim::new(CFG, PipelineKind::Skewed, &weights, data.a.clone());
+        sim.run(100_000).unwrap();
+        std::hint::black_box(sim.cycles());
+    });
+    // PE-cycles: cycles × 32 PEs.
+    let cycles = {
+        let mut sim = ColumnSim::new(CFG, PipelineKind::Skewed, &weights, data.a.clone());
+        sim.run(100_000).unwrap();
+        sim.cycles()
+    };
+    println!("{}", with_units(m, cycles as f64 * 32.0, "PE-cycles").report());
+
+    let adata = GemmData::cnn_like(GemmShape::new(16, 32, 32), FpFormat::BF16, 2);
+    let m = measure("hot:array-sim-32x32xM16", 1, 5, 5, || {
+        let mut sim = ArraySim::new(CFG, PipelineKind::Skewed, &adata.w, adata.a.clone());
+        sim.run(1_000_000).unwrap();
+        std::hint::black_box(sim.cycles());
+    });
+    let acycles = {
+        let mut sim = ArraySim::new(CFG, PipelineKind::Skewed, &adata.w, adata.a.clone());
+        sim.run(1_000_000).unwrap();
+        sim.cycles()
+    };
+    println!(
+        "{}",
+        with_units(m, acycles as f64 * (32.0 * 32.0), "PE-cycles").report()
+    );
+
+    // --- 3. coordinated GEMM throughput ----------------------------------
+    for workers in [1usize, 4, 8] {
+        let mut cfg = RunConfig::small();
+        cfg.rows = 32;
+        cfg.cols = 32;
+        cfg.workers = workers;
+        cfg.verify_fraction = 0.0;
+        let shape = GemmShape::new(64, 128, 64);
+        let gdata = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, 3));
+        let coord = Coordinator::new(cfg);
+        let m = measure(&format!("hot:executor-64x128x64-w{workers}"), 1, 3, 3, || {
+            let r = coord.run_gemm(PipelineKind::Skewed, &gdata);
+            std::hint::black_box(r.y.len());
+        });
+        println!("{}", with_units(m, shape.macs() as f64, "macs").report());
+    }
+}

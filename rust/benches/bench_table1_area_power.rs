@@ -1,0 +1,67 @@
+//! E3 — the §IV hardware-cost paragraph as a table: PE/array area and
+//! power for both designs, with the emergent overhead percentages the
+//! paper quotes (+9% area, +7% power), plus the per-block breakdown
+//! that attributes them (registers + fix logic).
+//!
+//! ```text
+//! cargo bench --bench bench_table1_area_power
+//! ```
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::energy::{AreaModel, PowerModel};
+use skewsa::pe::PipelineKind;
+use skewsa::report;
+use skewsa::util::table::{fnum, pct, Table};
+
+fn main() {
+    let chain = ChainCfg::BF16_FP32;
+    print!("{}", report::table1_area_power(chain, 128, 128).render());
+
+    // Per-block attribution (the paper's explanation of the overhead).
+    let area = AreaModel::new(chain);
+    let b = area.pe_area(PipelineKind::Baseline3b);
+    let s = area.pe_area(PipelineKind::Skewed);
+    let mut t = Table::new(&["block", "baseline(GE)", "skewed(GE)", "delta"]).numeric();
+    for (name, bb, ss) in [
+        ("multiplier", b.mult, s.mult),
+        ("exp-compute", b.exp, s.exp),
+        ("shifters", b.shifters, s.shifters),
+        ("adder", b.add, s.add),
+        ("lza", b.lza, s.lza),
+        ("fix-logic", b.fix, s.fix),
+        ("registers", b.regs, s.regs),
+        ("misc", b.misc, s.misc),
+    ] {
+        t.row(&[
+            name.to_string(),
+            fnum(bb, 0),
+            fnum(ss, 0),
+            if bb > 0.0 { pct(ss / bb - 1.0) } else { format!("+{ss:.0} GE") },
+        ]);
+    }
+    t.row(&[
+        "TOTAL".into(),
+        fnum(b.total(), 0),
+        fnum(s.total(), 0),
+        pct(s.total() / b.total() - 1.0),
+    ]);
+    println!("\nper-block attribution:\n{}", t.render());
+
+    // Power across the activity range (paper: +7% "on average").
+    let power = PowerModel::new(area);
+    let mut p = Table::new(&["activity", "base(mW)", "skew(mW)", "overhead"]).numeric();
+    for alpha in [0.1, 0.3, 0.5, 0.7, 0.9, 1.0] {
+        p.row(&[
+            format!("{alpha:.1}"),
+            fnum(power.array_power(PipelineKind::Baseline3b, 128, 128, alpha) / 1e3, 1),
+            fnum(power.array_power(PipelineKind::Skewed, 128, 128, alpha) / 1e3, 1),
+            pct(power.overhead(128, 128, alpha)),
+        ]);
+    }
+    println!("power vs activity (128x128 @ 1 GHz):\n{}", p.render());
+    println!(
+        "paper: +9% area, +7% power | reproduced: {} area, {} power@0.7",
+        pct(area.overhead(128, 128)),
+        pct(power.overhead(128, 128, 0.7))
+    );
+}

@@ -1,0 +1,301 @@
+//! Column-edge accumulation semantics: the South-edge rounding unit and
+//! the value-level column oracle.
+//!
+//! Per the paper (§II), state-of-the-art SA datapaths do **not** round
+//! after each multiply-add step; intermediate partial sums flow in
+//! double-width precision and a single normalize + round happens once per
+//! column at the South edge.  In the skewed design the final exponent
+//! correction (the last PE's `ê`/`L` pair) also lands here, folded into
+//! the rounding stage (§III-B, last paragraph).
+
+use super::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal};
+use super::format::FpFormat;
+use super::lza::lzc;
+use super::softfloat::{round_magnitude_rne, Special};
+
+/// The per-column rounding unit at the South edge: final exponent fix,
+/// normalization, and one round-to-nearest-even into the output format.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundingUnit {
+    pub cfg: ChainCfg,
+}
+
+impl RoundingUnit {
+    pub fn new(cfg: ChainCfg) -> Self {
+        cfg.check();
+        RoundingUnit { cfg }
+    }
+
+    /// Round a final partial-sum signal to the output format.  Accepts
+    /// both normalized (baseline) and raw/unnormalized (skewed) signals —
+    /// the normalization shift here *is* the skewed design's deferred
+    /// final fix, and is a no-op for already-normalized inputs.
+    pub fn round(&self, s: &PsumSignal) -> u64 {
+        let fmt = self.cfg.out_fmt;
+        match s.special {
+            Special::Nan => fmt.nan_bits(),
+            Special::Inf(neg) => ((neg as u64) << (fmt.width() - 1)) | fmt.inf_bits(),
+            Special::None => {
+                if s.val.sig == 0 {
+                    // All-cancelled (possibly with sticky residue below
+                    // the window: magnitude < one window ULP → rounds to
+                    // zero in any sane output format).
+                    return (s.val.sign as u64) << (fmt.width() - 1);
+                }
+                let l = lzc(s.val.sig, self.cfg.window);
+                debug_assert!(
+                    s.lza == l || s.lza == 0,
+                    "stale L forwarded to the rounding unit"
+                );
+                let window = s.val.sig << l;
+                let exp_msb = s.val.exp_top - l as i32;
+                round_magnitude_rne(
+                    fmt,
+                    s.val.sign,
+                    exp_msb,
+                    window,
+                    self.cfg.window - 1,
+                    s.val.sticky,
+                )
+            }
+        }
+    }
+
+    /// Round to f32 directly (valid only when `out_fmt` is FP32; the
+    /// common convenience on the bf16→fp32 evaluation path).
+    pub fn round_f32(&self, s: &PsumSignal) -> f32 {
+        debug_assert_eq!(self.cfg.out_fmt, FpFormat::FP32);
+        f32::from_bits(self.round(s) as u32)
+    }
+}
+
+/// Value-level column oracle: the *hardware-exact* reference a cycle-
+/// accurate column must reproduce bit-for-bit.  It runs the baseline
+/// datapath steps sequentially (which the property suite proves identical
+/// to the skewed steps) and rounds once at the end — i.e. it captures the
+/// paper's numeric semantics with none of the pipeline timing.
+#[derive(Clone, Debug)]
+pub struct ColumnOracle {
+    cfg: ChainCfg,
+    state: PsumSignal,
+    steps: usize,
+}
+
+impl ColumnOracle {
+    pub fn new(cfg: ChainCfg) -> Self {
+        cfg.check();
+        ColumnOracle { cfg, state: PsumSignal::zero(&cfg), steps: 0 }
+    }
+
+    /// Feed one `a × w` term (raw bit patterns in `cfg.in_fmt`).
+    pub fn mac(&mut self, a_bits: u64, w_bits: u64) {
+        self.state = BaselineFmaPath.step(&self.cfg, &self.state, a_bits, w_bits);
+        self.steps += 1;
+    }
+
+    /// Number of terms accumulated so far.
+    pub fn len(&self) -> usize {
+        self.steps
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps == 0
+    }
+
+    /// The current (pre-rounding) partial-sum signal.
+    pub fn signal(&self) -> &PsumSignal {
+        &self.state
+    }
+
+    /// Final rounded output bits in `cfg.out_fmt`.
+    pub fn result(&self) -> u64 {
+        RoundingUnit::new(self.cfg).round(&self.state)
+    }
+
+    /// Final output as f32 (bf16→fp32 evaluation path convenience).
+    pub fn result_f32(&self) -> f32 {
+        RoundingUnit::new(self.cfg).round_f32(&self.state)
+    }
+
+    /// Reset to an empty chain (weight-tile switch).
+    pub fn reset(&mut self) {
+        self.state = PsumSignal::zero(&self.cfg);
+        self.steps = 0;
+    }
+
+    /// Merge another column-oracle partial sum into this one in the wide
+    /// (pre-rounding) domain — the South-edge K-pass accumulator used by
+    /// the tiled GEMM path, which keeps "round once per output" semantics
+    /// across weight-tile passes.
+    pub fn merge(&mut self, other: &ColumnOracle) {
+        use super::fma::add_same_top;
+        assert_eq!(self.cfg, other.cfg);
+        self.state.special = match (self.state.special, other.state.special) {
+            (Special::Nan, _) | (_, Special::Nan) => Special::Nan,
+            (Special::Inf(a), Special::Inf(b)) if a != b => Special::Nan,
+            (Special::Inf(a), _) | (_, Special::Inf(a)) => Special::Inf(a),
+            _ => Special::None,
+        };
+        // Align both wide values to the max corrected top and add.
+        let (x, y) = (self.state.val, other.state.val);
+        let merged = match (x.sig != 0, y.sig != 0) {
+            (false, false) => {
+                let mut z = x;
+                z.sticky |= y.sticky;
+                (z, self.cfg.window)
+            }
+            (true, false) => {
+                let mut z = x;
+                z.sticky |= y.sticky;
+                (z, lzc(z.sig, self.cfg.window))
+            }
+            (false, true) => {
+                let mut z = y;
+                z.sticky |= x.sticky;
+                (z, lzc(z.sig, self.cfg.window))
+            }
+            (true, true) => {
+                let xt = x.exp_top - lzc(x.sig, self.cfg.window) as i32;
+                let yt = y.exp_top - lzc(y.sig, self.cfg.window) as i32;
+                let t = xt.max(yt);
+                add_same_top(
+                    &self.cfg,
+                    x.reexpress(self.cfg.window, t),
+                    y.reexpress(self.cfg.window, t),
+                )
+            }
+        };
+        self.state.val = merged.0;
+        self.state.lza = merged.1;
+        self.steps += other.steps;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::softfloat::{pow2, ExactChain};
+    use crate::util::rng::Rng;
+
+    const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+    fn bf(x: f64) -> u64 {
+        FpFormat::BF16.from_f64(x)
+    }
+
+    #[test]
+    fn oracle_small_chain_matches_f64() {
+        let mut o = ColumnOracle::new(CFG);
+        let mut want = 0.0f64;
+        for &(a, w) in &[(1.5, 2.0), (-0.5, 4.0), (3.0, 0.125)] {
+            o.mac(bf(a), bf(w));
+            want += FpFormat::BF16.to_f64(bf(a)) * FpFormat::BF16.to_f64(bf(w));
+        }
+        assert_eq!(o.result_f32() as f64, want);
+        assert_eq!(o.len(), 3);
+    }
+
+    #[test]
+    fn oracle_matches_exact_chain_round_for_random_columns() {
+        // The window keeps ≥ 24 significant bits and rounds once — for
+        // columns whose exact sum fits 24 bits after alignment, the
+        // oracle's fp32 result equals the exact chain's single rounding.
+        let mut rng = Rng::new(0xabc);
+        for _ in 0..200 {
+            let len = 1 + rng.below(128) as usize;
+            let mut o = ColumnOracle::new(CFG);
+            let mut e = ExactChain::new();
+            for _ in 0..len {
+                let a = bf(rng.range_i64(-32, 32) as f64);
+                let w = bf(rng.range_i64(-32, 32) as f64);
+                o.mac(a, w);
+                e.mac(FpFormat::BF16, a, w);
+            }
+            assert_eq!(o.result(), e.result(FpFormat::FP32), "len={len}");
+        }
+    }
+
+    #[test]
+    fn rounding_unit_handles_unnormalized_skewed_signals() {
+        use crate::arith::fma::SkewedFmaPath;
+        let mut s = PsumSignal::zero(&CFG);
+        for &(a, w) in &[(1.0, 1.0), (-1.0, 1.0 + pow2(-7)), (2.0, 3.0)] {
+            s = SkewedFmaPath.step(&CFG, &s, bf(a), bf(w));
+        }
+        let ru = RoundingUnit::new(CFG);
+        let got = ru.round_f32(&s) as f64;
+        let want = 1.0 - (1.0 + pow2(-7)) + 6.0;
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rounding_specials() {
+        let ru = RoundingUnit::new(CFG);
+        let mut s = PsumSignal::zero(&CFG);
+        s.special = Special::Nan;
+        assert!(ru.round_f32(&s).is_nan());
+        s.special = Special::Inf(true);
+        assert_eq!(ru.round_f32(&s), f32::NEG_INFINITY);
+        s.special = Special::Inf(false);
+        assert_eq!(ru.round_f32(&s), f32::INFINITY);
+    }
+
+    #[test]
+    fn rounding_zero_and_sticky_residue() {
+        let ru = RoundingUnit::new(CFG);
+        let z = PsumSignal::zero(&CFG);
+        assert_eq!(ru.round_f32(&z), 0.0);
+        let mut s = PsumSignal::zero(&CFG);
+        s.val.sticky = true; // sub-window residue only
+        assert_eq!(ru.round_f32(&s), 0.0);
+    }
+
+    #[test]
+    fn rounding_overflow_to_inf() {
+        // bf16 can hold values whose *sum* exceeds fp32 max.
+        let mut o = ColumnOracle::new(CFG);
+        let big = bf(pow2(120));
+        for _ in 0..4 {
+            o.mac(big, big); // 4 × 2^240 ≫ fp32 max
+        }
+        assert_eq!(o.result_f32(), f32::INFINITY);
+    }
+
+    #[test]
+    fn merge_equals_unsplit_chain() {
+        let mut rng = Rng::new(99);
+        for _ in 0..100 {
+            let n1 = 1 + rng.below(32) as usize;
+            let n2 = 1 + rng.below(32) as usize;
+            let terms: Vec<(u64, u64)> = (0..n1 + n2)
+                .map(|_| (bf(rng.range_i64(-16, 16) as f64), bf(rng.range_i64(-8, 8) as f64)))
+                .collect();
+            let mut whole = ColumnOracle::new(CFG);
+            for &(a, w) in &terms {
+                whole.mac(a, w);
+            }
+            let mut p1 = ColumnOracle::new(CFG);
+            let mut p2 = ColumnOracle::new(CFG);
+            for &(a, w) in &terms[..n1] {
+                p1.mac(a, w);
+            }
+            for &(a, w) in &terms[n1..] {
+                p2.mac(a, w);
+            }
+            p1.merge(&p2);
+            // Integer-valued inputs: no window loss, so the merged wide
+            // sum must round identically to the unsplit chain.
+            assert_eq!(p1.result(), whole.result());
+            assert_eq!(p1.len(), whole.len());
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut o = ColumnOracle::new(CFG);
+        o.mac(bf(2.0), bf(3.0));
+        o.reset();
+        assert!(o.is_empty());
+        assert_eq!(o.result_f32(), 0.0);
+    }
+}

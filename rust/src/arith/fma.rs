@@ -1,0 +1,685 @@
+//! Structural chained fused multiply-add datapaths.
+//!
+//! This module implements the paper's two contenders as *value-level but
+//! structurally faithful* datapaths:
+//!
+//! * [`BaselineFmaPath`] — the state-of-the-art two-stage pipeline of
+//!   Fig. 3(b): stage 1 computes the multiplication and the exponent
+//!   compare against the *normalized* incoming partial sum; stage 2
+//!   aligns, adds, runs the LZA and normalizes, forwarding a normalized
+//!   partial sum (and its corrected exponent) to the next PE.
+//! * [`SkewedFmaPath`] — the proposed skewed pipeline of Figs. 5/6:
+//!   stage 1 compares against the *unnormalized* speculative exponent
+//!   `ê_{i−1}` producing speculative `e′_i`/`d′_i`; stage 2's **Fix Sign &
+//!   Exponent** block receives the previous PE's LZA count `L_{i−1}` and
+//!   corrects (`d_i = d′_i + L_{i−1}` or `L_{i−1} − d′_i`, paper §III-B),
+//!   while the incoming sum's normalization left-shift is retimed to merge
+//!   with the alignment shift (Fig. 6) — a single net left-*or*-right
+//!   shift.  The PE forwards the raw adder output, `ê_i`, and `L_i`.
+//!
+//! Both paths bottom out in the same window primitives ([`WindowVal`],
+//! [`add_at_top`]), differing only in *which exponent reference they use
+//! when* — exactly the paper's structural distinction.  Because the fix
+//! equations recover the corrected alignment exactly, the two paths are
+//! **bit-identical**; `tests/prop_arith.rs` enforces this over random and
+//! adversarial chains, and the cycle-level models in [`crate::pe`] reuse
+//! these steps inside their stage registers.
+
+use super::format::FpFormat;
+use super::lza::lzc;
+use super::softfloat::{exact_product, ExactProduct, Special};
+
+/// Configuration of a reduction chain: input element format, output/
+/// accumulation format, and the accumulator significand window width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChainCfg {
+    /// Format of the streamed inputs and the stationary weights.
+    pub in_fmt: FpFormat,
+    /// Format the column rounds to at the South edge (double-width per the
+    /// paper: FP32 for Bfloat16 inputs).
+    pub out_fmt: FpFormat,
+    /// Accumulator/adder significand width in bits (hidden bit included).
+    /// Must satisfy `window ≥ 2·in_fmt.man_bits + 4` (raw product fits)
+    /// and `window ≥ out_fmt.man_bits + 4` (rounding has G/R/S headroom).
+    pub window: u32,
+}
+
+impl ChainCfg {
+    /// The paper's evaluation configuration: Bfloat16 inputs reduced in
+    /// FP32 (§IV), with a 28-bit adder window (24-bit FP32 significand +
+    /// 3 G/R/S positions + 1 carry headroom bit).
+    pub const BF16_FP32: ChainCfg =
+        ChainCfg { in_fmt: FpFormat::BF16, out_fmt: FpFormat::FP32, window: 28 };
+
+    /// Construct a chain config with the canonical window for the pair.
+    pub fn new(in_fmt: FpFormat, out_fmt: FpFormat) -> ChainCfg {
+        let window = (2 * in_fmt.man_bits + 4).max(out_fmt.man_bits + 4);
+        ChainCfg { in_fmt, out_fmt, window }
+    }
+
+    /// Validate width invariants (called by constructors of the PE models).
+    pub fn check(&self) {
+        assert!(self.window <= 60, "window too wide for u64 arithmetic");
+        assert!(self.window >= 2 * self.in_fmt.man_bits + 4, "product does not fit window");
+        assert!(self.window >= self.out_fmt.man_bits + 4, "no rounding headroom");
+    }
+}
+
+/// A fixed-point *window value*: magnitude `sig` occupying `window` bits
+/// whose top bit (index `window−1`) has unbiased weight `exp_top`, plus a
+/// sticky bit recording any magnitude lost below the window.
+///
+/// `sig == 0 && !sticky` is exact zero; `exp_top` is then meaningless and
+/// kept at 0 canonically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowVal {
+    pub sign: bool,
+    pub exp_top: i32,
+    pub sig: u64,
+    pub sticky: bool,
+}
+
+impl WindowVal {
+    /// Exact +0.
+    pub const ZERO: WindowVal = WindowVal { sign: false, exp_top: 0, sig: 0, sticky: false };
+
+    /// True iff the magnitude window is empty (sticky may still be set
+    /// after catastrophic cancellation of previously-lost bits).
+    pub fn sig_zero(&self) -> bool {
+        self.sig == 0
+    }
+
+    /// The represented magnitude-with-sign as f64, given the window width
+    /// (exact when the magnitude fits f64; `sticky` contributes nothing —
+    /// callers that care check it separately).  Test/diagnostic helper.
+    pub fn value_f64(&self, window: u32) -> f64 {
+        use super::softfloat::pow2;
+        if self.sig == 0 {
+            return if self.sign { -0.0 } else { 0.0 };
+        }
+        let mut x = 0.0;
+        for k in 0..64u32 {
+            if (self.sig >> k) & 1 == 1 {
+                x += pow2(self.exp_top - (window as i32 - 1 - k as i32));
+            }
+        }
+        if self.sign {
+            -x
+        } else {
+            x
+        }
+    }
+
+    /// Re-express the value with the window top at weight `new_top`,
+    /// shifting the significand and folding lost bits into sticky.
+    /// A *left* shift (new_top < exp_top) asserts the required leading
+    /// zeros exist — in the datapaths this is exactly the ≤ `L` left
+    /// normalization shift of Fig. 6.
+    #[inline]
+    pub fn reexpress(&self, window: u32, new_top: i32) -> WindowVal {
+        if self.sig == 0 {
+            return WindowVal { sign: self.sign, exp_top: new_top, sig: 0, sticky: self.sticky };
+        }
+        let mut v = *self;
+        if new_top >= v.exp_top {
+            // Right alignment shift: bits falling off the window bottom
+            // fold into the sticky flag (kept *separate* from the window
+            // bits, unlike `shift_right_sticky` which ORs into bit 0).
+            let d = (new_top - self.exp_top) as u32;
+            if d >= 64 {
+                v.sig = 0;
+                v.sticky = self.sticky || self.sig != 0;
+            } else if d > 0 {
+                let lost = self.sig & ((1u64 << d) - 1);
+                v.sig = self.sig >> d;
+                v.sticky = self.sticky || lost != 0;
+            }
+        } else {
+            let up = (v.exp_top - new_top) as u32;
+            debug_assert!(
+                lzc(v.sig, window) >= up,
+                "left re-express would drop MSBs (lzc={} up={up})",
+                lzc(v.sig, window)
+            );
+            v.sig <<= up;
+        }
+        v.exp_top = new_top;
+        v
+    }
+}
+
+/// Magnitude add/sub of two window values already expressed at the same
+/// `exp_top` (the adder of either pipeline's stage 2).  Returns the raw,
+/// **unnormalized** result plus its leading-zero count — precisely the
+/// adder + LZA pair of the paper's Fig. 3/5/6.  A carry-out renormalizes
+/// by one position (folding the shifted-out bit into sticky).
+#[inline]
+pub fn add_same_top(cfg: &ChainCfg, x: WindowVal, y: WindowVal) -> (WindowVal, u32) {
+    debug_assert!(x.sig == 0 || y.sig == 0 || x.exp_top == y.exp_top, "operands not aligned");
+    let w = cfg.window;
+    let top = if x.sig != 0 { x.exp_top } else { y.exp_top };
+    let (sign, sig, sticky);
+    if x.sign == y.sign {
+        let mut s = x.sig + y.sig;
+        let mut st = x.sticky || y.sticky;
+        let mut t = top;
+        if s >> w != 0 {
+            let lost = s & 1;
+            s >>= 1;
+            st |= lost != 0;
+            t += 1;
+        }
+        let out = WindowVal { sign: x.sign, exp_top: t, sig: s, sticky: st };
+        let l = lzc(out.sig, w);
+        return (out, l);
+    } else {
+        // Effective subtraction: subtract the smaller magnitude.  A sticky
+        // bit on the subtrahend borrows one ULP from the difference and
+        // leaves a non-zero fraction below the window (standard G/R/S
+        // subtract semantics).
+        let (hi, lo) = if x.sig >= y.sig { (x, y) } else { (y, x) };
+        if hi.sig == lo.sig && hi.sticky == lo.sticky {
+            // Exact cancellation (or equal-with-equal-sticky: the lost
+            // fractions are unknowable; hardware emits zero + sticky).
+            let st = hi.sticky;
+            let out = WindowVal { sign: false, exp_top: top, sig: 0, sticky: st };
+            return (out, w);
+        }
+        sign = hi.sign;
+        if lo.sticky && !hi.sticky {
+            if hi.sig == lo.sig {
+                // hi − (lo + δ) < 0: the subtrahend's fraction flips the
+                // sign; magnitude is the sub-window fraction itself.
+                let out = WindowVal { sign: lo.sign, exp_top: top, sig: 0, sticky: true };
+                return (out, w);
+            }
+            sig = hi.sig - lo.sig - 1;
+            sticky = true;
+        } else {
+            sig = hi.sig - lo.sig;
+            sticky = hi.sticky || lo.sticky;
+        }
+        if sig == 0 && !sticky {
+            let out = WindowVal { sign: false, exp_top: top, sig: 0, sticky: false };
+            return (out, w);
+        }
+        let out = WindowVal { sign, exp_top: top, sig, sticky };
+        let l = lzc(sig, w);
+        (out, l)
+    }
+}
+
+/// Place an exact mantissa product into the window: the product's nominal
+/// `2^1` position (products of normals lie in `[1, 4)`) lands at the
+/// window top, so `exp_top = e_M + 1`.  Lossless by the `ChainCfg::check`
+/// width invariant.
+#[inline]
+pub fn product_to_window(cfg: &ChainCfg, p: &ExactProduct) -> WindowVal {
+    if p.zero {
+        return WindowVal { sign: p.sign, ..WindowVal::ZERO };
+    }
+    let up = cfg.window - 2 - p.frac_bits;
+    WindowVal { sign: p.sign, exp_top: p.exp + 1, sig: p.sig << up, sticky: false }
+}
+
+/// The partial-sum bundle that physically flows from one PE to the next
+/// in a column (South direction).
+///
+/// * Baseline (Fig. 3b): `val` is **normalized** (MSB at the window top or
+///   zero) and `lza == 0`; `val.exp_top` is the corrected exponent
+///   `e_i = ê_i − L_i`.
+/// * Skewed (Figs. 5/6): `val` is the **raw adder output** — unnormalized,
+///   `val.exp_top` is the speculative `ê_i`, and `lza` carries `L_i` for
+///   the next PE's fix logic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PsumSignal {
+    pub val: WindowVal,
+    /// `L_i` — leading-zero count of `val.sig` in the window; maintained
+    /// as a *separate physical signal* because the skewed pipeline
+    /// forwards it in place of pre-normalizing (`lza == lzc(sig)` is an
+    /// invariant checked in debug builds).
+    pub lza: u32,
+    pub special: Special,
+}
+
+impl PsumSignal {
+    /// Chain seed: exact +0 (a column starts from zero partial sum).
+    pub fn zero(cfg: &ChainCfg) -> PsumSignal {
+        PsumSignal { val: WindowVal::ZERO, lza: cfg.window, special: Special::None }
+    }
+
+    /// Corrected (normalized-reference) exponent of the window top:
+    /// `e = ê − L`.  Meaningful only for non-zero magnitudes.
+    pub fn corrected_top(&self) -> i32 {
+        self.val.exp_top - self.lza as i32
+    }
+}
+
+/// Common interface of the two chained datapaths: one multiply-add step
+/// (`psum_out = psum_in + a×w`) at the value level.  The cycle-level PE
+/// models wrap these steps in stage registers.
+pub trait ChainDatapath {
+    /// Human-readable datapath name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Execute one chained multiply-add step.
+    fn step(&self, cfg: &ChainCfg, psum: &PsumSignal, a_bits: u64, w_bits: u64) -> PsumSignal;
+
+    /// Whether the forwarded partial sums are normalized (baseline) or
+    /// raw/speculative (skewed) — drives the rounding unit's final fix.
+    fn forwards_normalized(&self) -> bool;
+}
+
+/// Merge the special-value state of a product and an accumulating sum
+/// (IEEE semantics, resolved at the value level — see DESIGN.md §7).
+fn merge_step_special(
+    cfg: &ChainCfg,
+    psum: &PsumSignal,
+    a_bits: u64,
+    w_bits: u64,
+) -> (Special, super::format::Unpacked, super::format::Unpacked) {
+    let a = cfg.in_fmt.decode(a_bits);
+    let w = cfg.in_fmt.decode(w_bits);
+    (psum.special.merge_product(&a, &w), a, w)
+}
+
+/// Fast path for the overwhelmingly common case: both operands are
+/// *normal* finite numbers, whose product needs no class analysis, no
+/// subnormal renormalization, and cannot change the chain's special
+/// state.  Returns `None` for anything else (zero, subnormal, special,
+/// E4M3 top-exponent finites) — the caller falls back to the exact
+/// decode path.  §Perf iteration 3: the full decode pair was ~25% of
+/// the coordinator's numeric hot loop.
+#[inline]
+fn fast_normal_product(fmt: FpFormat, a: u64, b: u64) -> Option<ExactProduct> {
+    let em = fmt.exp_field_max() as u64;
+    let mb = fmt.man_bits;
+    let ea = (a >> mb) & em;
+    let eb = (b >> mb) & em;
+    if ea == 0 || eb == 0 || ea == em || eb == em {
+        return None;
+    }
+    let frac_mask = (1u64 << mb) - 1;
+    let fa = (1u64 << mb) | (a & frac_mask);
+    let fb = (1u64 << mb) | (b & frac_mask);
+    Some(ExactProduct {
+        sign: ((a ^ b) >> (fmt.width() - 1)) & 1 == 1,
+        exp: ea as i32 + eb as i32 - 2 * fmt.bias(),
+        sig: fa * fb,
+        frac_bits: 2 * mb,
+        zero: false,
+    })
+}
+
+/// Shared operand stage: produce the (special-state, product-window)
+/// pair, or the early-out passthrough signal for non-finite operands.
+#[inline]
+fn step_operands(
+    cfg: &ChainCfg,
+    psum: &PsumSignal,
+    a_bits: u64,
+    w_bits: u64,
+) -> Result<(Special, WindowVal), PsumSignal> {
+    if let Some(p) = fast_normal_product(cfg.in_fmt, a_bits, w_bits) {
+        return Ok((psum.special, product_to_window(cfg, &p)));
+    }
+    step_operands_slow(cfg, psum, a_bits, w_bits)
+}
+
+/// Outlined slow path: zeros, subnormals, specials, E4M3 top-exponent
+/// finites.  Kept out of the hot loop's instruction stream.
+#[cold]
+#[inline(never)]
+fn step_operands_slow(
+    cfg: &ChainCfg,
+    psum: &PsumSignal,
+    a_bits: u64,
+    w_bits: u64,
+) -> Result<(Special, WindowVal), PsumSignal> {
+    let (special, a, w) = merge_step_special(cfg, psum, a_bits, w_bits);
+    if !(a.is_finite() && w.is_finite()) {
+        return Err(PsumSignal { val: psum.val, lza: psum.lza, special });
+    }
+    let p = exact_product(cfg.in_fmt, &a, cfg.in_fmt, &w);
+    Ok((special, product_to_window(cfg, &p)))
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: the state-of-the-art reduced-precision pipeline of Fig. 3(b).
+// ---------------------------------------------------------------------------
+
+/// Fig. 3(b): stage 1 = multiply ∥ exponent compute (against the
+/// *corrected* incoming exponent); stage 2 = align + add + LZA + normalize.
+/// Forwards a normalized partial sum.  Chain spacing between consecutive
+/// PEs is 2 cycles (the serialization problem of §III-A).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BaselineFmaPath;
+
+impl ChainDatapath for BaselineFmaPath {
+    fn name(&self) -> &'static str {
+        "baseline-3b"
+    }
+
+    fn forwards_normalized(&self) -> bool {
+        true
+    }
+
+    fn step(&self, cfg: &ChainCfg, psum: &PsumSignal, a_bits: u64, w_bits: u64) -> PsumSignal {
+        debug_assert!(psum.val.sig == 0 || psum.lza == 0, "baseline expects normalized input");
+        // ---- stage 1: multiplier ∥ exponent compute --------------------
+        let (special, pwin) = match step_operands(cfg, psum, a_bits, w_bits) {
+            Ok(v) => v,
+            Err(passthrough) => return passthrough,
+        };
+        // ê_i = max(e_Mi, e_{i−1}); d_i = |e_Mi − e_{i−1}| (§III-B, the
+        // non-speculative originals).
+        let e_hat = match (pwin.sig != 0, psum.val.sig != 0) {
+            (false, false) => 0,
+            (true, false) => pwin.exp_top,
+            (false, true) => psum.val.exp_top,
+            (true, true) => pwin.exp_top.max(psum.val.exp_top),
+        };
+
+        // ---- stage 2: align + add + LZA + normalize --------------------
+        let xa = pwin.reexpress(cfg.window, e_hat);
+        let ya = psum.val.reexpress(cfg.window, e_hat);
+        let (sum, l) = add_same_top(cfg, xa, ya);
+        // Normalize: shift left by L, correct the exponent e_i = ê_i − L_i.
+        let out = if sum.sig == 0 {
+            WindowVal { sign: sum.sign, exp_top: sum.exp_top, sig: 0, sticky: sum.sticky }
+        } else {
+            let norm_top = sum.exp_top - l as i32;
+            sum.reexpress(cfg.window, norm_top)
+        };
+        PsumSignal { val: out, lza: if out.sig == 0 { cfg.window } else { 0 }, special }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Skewed: the proposed pipeline of Figs. 5/6.
+// ---------------------------------------------------------------------------
+
+/// Figs. 5/6: stage 1 computes the multiplication and the **speculative**
+/// exponent compare against `ê_{i−1}`; stage 2's fix logic corrects the
+/// alignment with the now-available `L_{i−1}` and merges the incoming
+/// sum's normalization into the alignment shift (retimed normalization).
+/// Forwards the raw adder output + `ê_i` + `L_i`.  Chain spacing is 1.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SkewedFmaPath;
+
+impl ChainDatapath for SkewedFmaPath {
+    fn name(&self) -> &'static str {
+        "skewed"
+    }
+
+    fn forwards_normalized(&self) -> bool {
+        false
+    }
+
+    fn step(&self, cfg: &ChainCfg, psum: &PsumSignal, a_bits: u64, w_bits: u64) -> PsumSignal {
+        debug_assert!(
+            psum.val.sig == 0 || psum.lza == lzc(psum.val.sig, cfg.window),
+            "forwarded L_i does not match the unnormalized sum"
+        );
+        // ---- stage 1: multiplier ∥ *speculative* exponent compute ------
+        let (special, pwin) = match step_operands(cfg, psum, a_bits, w_bits) {
+            Ok(v) => v,
+            Err(passthrough) => return passthrough,
+        };
+        // e′_i = max(e_Mi, ê_{i−1}), d′_i = e_Mi − ê_{i−1}: computed from
+        // the UNnormalized incoming exponent — these are speculative.
+        let in_zero = psum.val.sig == 0;
+        let d_spec: i32 = if in_zero || pwin.sig == 0 {
+            0
+        } else {
+            pwin.exp_top - psum.val.exp_top
+        };
+
+        // ---- stage 2: Fix Sign & Exponent + merged align/normalize -----
+        // L_{i−1} arrives from the previous PE; the fix recovers the true
+        // alignment:  d_i = d′_i + L_{i−1}  (signed form of the paper's
+        // two-case |·| split), i.e. the corrected incoming exponent is
+        // ê_{i−1} − L_{i−1}.
+        let l_in = psum.lza as i32;
+        let (sum, l) = if pwin.sig == 0 && in_zero {
+            // Both magnitudes empty: only sticky residue (if any) flows on.
+            (
+                WindowVal { sign: false, exp_top: 0, sig: 0, sticky: psum.val.sticky },
+                cfg.window,
+            )
+        } else {
+            // Common alignment target from the fix equations.  For live
+            // operands: max of product top and the *corrected* incoming
+            // top (d_i = d′_i + L_{i−1}); the retimed shifter moves the
+            // incoming sum LEFT by up to L_{i−1} (normalization) or RIGHT
+            // (alignment); only one direction fires (Fig. 6).  When one
+            // magnitude is zero the other's reference wins — but the add
+            // still runs, so a zero-with-sticky operand borrows exactly
+            // as in the baseline adder (bit-identity demands it).
+            let t = match (pwin.sig != 0, !in_zero) {
+                (true, true) => {
+                    let d_fixed = d_spec + l_in; // e_M_top − corrected_in_top
+                    let in_corr_top = psum.val.exp_top - l_in;
+                    if d_fixed >= 0 {
+                        pwin.exp_top
+                    } else {
+                        in_corr_top
+                    }
+                }
+                (true, false) => pwin.exp_top,
+                // Zero product: keep the incoming raw reference (no shift
+                // of the unnormalized sum — a pure adder passthrough).
+                (false, true) => psum.val.exp_top,
+                (false, false) => unreachable!(),
+            };
+            let xa = pwin.reexpress(cfg.window, t);
+            let ya = psum.val.reexpress(cfg.window, t);
+            add_same_top(cfg, xa, ya)
+        };
+        // Forward the raw adder output; ê_i = sum.exp_top, plus L_i for
+        // the next PE's fix logic.  No normalization happens here — that
+        // is the whole point.
+        PsumSignal { val: sum, lza: l, special }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::softfloat::{pow2, ExactChain};
+    use crate::util::rng::Rng;
+
+    const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+    fn bf(x: f64) -> u64 {
+        FpFormat::BF16.from_f64(x)
+    }
+
+    /// Run a full chain through a datapath and return the final signal.
+    fn run_chain<D: ChainDatapath>(d: &D, terms: &[(u64, u64)]) -> PsumSignal {
+        let mut s = PsumSignal::zero(&CFG);
+        for &(a, w) in terms {
+            s = d.step(&CFG, &s, a, w);
+        }
+        s
+    }
+
+    /// Normalize a signal for comparison (the skewed path forwards raw
+    /// sums; value equality is what bit-identity means at chain end).
+    fn canon(cfg: &ChainCfg, s: &PsumSignal) -> (bool, i32, u64, bool, Special) {
+        if s.val.sig == 0 {
+            return (false, 0, 0, s.val.sticky, s.special);
+        }
+        let l = lzc(s.val.sig, cfg.window);
+        (
+            s.val.sign,
+            s.val.exp_top - l as i32,
+            s.val.sig << l,
+            s.val.sticky,
+            s.special,
+        )
+    }
+
+    #[test]
+    fn single_step_matches_plain_product() {
+        for d in [&BaselineFmaPath as &dyn ChainDatapath, &SkewedFmaPath] {
+            let s = run_chain_dyn(d, &[(bf(3.0), bf(5.0))]);
+            assert_eq!(s.val.value_f64(CFG.window), 15.0, "{}", d.name());
+        }
+    }
+
+    fn run_chain_dyn(d: &dyn ChainDatapath, terms: &[(u64, u64)]) -> PsumSignal {
+        let mut s = PsumSignal::zero(&CFG);
+        for &(a, w) in terms {
+            s = d.step(&CFG, &s, a, w);
+        }
+        s
+    }
+
+    #[test]
+    fn two_paths_bit_identical_small_chain() {
+        let terms: Vec<(u64, u64)> =
+            [(1.5, 2.0), (-0.5, 4.0), (3.0, 0.125), (7.0, -1.0), (0.0, 9.0)]
+                .iter()
+                .map(|&(a, w)| (bf(a), bf(w)))
+                .collect();
+        let b = run_chain(&BaselineFmaPath, &terms);
+        let s = run_chain(&SkewedFmaPath, &terms);
+        assert_eq!(canon(&CFG, &b), canon(&CFG, &s));
+    }
+
+    #[test]
+    fn two_paths_bit_identical_random_chains() {
+        let mut rng = Rng::new(0xfaded);
+        for chain in 0..300 {
+            let len = 1 + (chain % 64);
+            let terms: Vec<(u64, u64)> = (0..len)
+                .map(|_| (rng.bits(16), rng.bits(16)))
+                .filter(|&(a, w)| {
+                    // Finite inputs only here; specials are covered below.
+                    let fa = FpFormat::BF16.decode(a);
+                    let fw = FpFormat::BF16.decode(w);
+                    fa.is_finite() && fw.is_finite()
+                })
+                .collect();
+            let b = run_chain(&BaselineFmaPath, &terms);
+            let s = run_chain(&SkewedFmaPath, &terms);
+            assert_eq!(canon(&CFG, &b), canon(&CFG, &s), "chain {chain}");
+        }
+    }
+
+    #[test]
+    fn adversarial_cancellation_chains_identical() {
+        // x − x + tiny, huge + tiny − huge, alternating magnitudes: the
+        // cases where speculative alignment would go wrong without the fix.
+        let cases: &[&[(f64, f64)]] = &[
+            &[(1.0, 1.0), (-1.0, 1.0), (1.0, pow2(-20))],
+            &[(pow2(60), 1.0), (1.0, pow2(-60)), (-1.0, pow2(60))],
+            &[(1.0, 1.0), (1.0, pow2(-8)), (-1.0, 1.0), (-1.0, pow2(-8))],
+            &[(3.0, 3.0), (-9.0, 1.0), (pow2(-30), pow2(-30))],
+            &[(1.0, pow2(-14)), (1.0, 1.0), (-1.0, 1.0)],
+        ];
+        for (i, case) in cases.iter().enumerate() {
+            let terms: Vec<(u64, u64)> = case.iter().map(|&(a, w)| (bf(a), bf(w))).collect();
+            let b = run_chain(&BaselineFmaPath, &terms);
+            let s = run_chain(&SkewedFmaPath, &terms);
+            assert_eq!(canon(&CFG, &b), canon(&CFG, &s), "case {i}");
+        }
+    }
+
+    #[test]
+    fn matches_exact_chain_when_no_alignment_loss() {
+        // Integer-valued bf16 inputs with small exponent spread: the
+        // window never drops bits, so the datapaths equal the exact oracle.
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let len = 1 + rng.below(32);
+            let mut exact = ExactChain::new();
+            let mut terms = Vec::new();
+            for _ in 0..len {
+                let a = rng.range_i64(-16, 16) as f64;
+                let w = rng.range_i64(-8, 8) as f64;
+                terms.push((bf(a), bf(w)));
+                exact.mac(FpFormat::BF16, bf(a), bf(w));
+            }
+            for d in [&BaselineFmaPath as &dyn ChainDatapath, &SkewedFmaPath] {
+                let s = run_chain_dyn(d, &terms);
+                assert_eq!(
+                    s.val.value_f64(CFG.window),
+                    exact.value_f64(),
+                    "{} len={len}",
+                    d.name()
+                );
+                assert!(!s.val.sticky);
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_exponent_really_is_speculative() {
+        // After a cancelling step the skewed forward exponent ê must
+        // exceed the corrected exponent by L (i.e. speculation happened).
+        let terms = [(bf(1.0), bf(1.0)), (bf(-1.0), bf(1.0 + pow2(-7)))];
+        let s = run_chain(&SkewedFmaPath, &terms);
+        assert!(s.lza > 0, "expected leading zeros after cancellation");
+        let b = run_chain(&BaselineFmaPath, &terms);
+        assert_eq!(s.corrected_top(), b.val.exp_top);
+    }
+
+    #[test]
+    fn specials_flow_identically() {
+        let f = FpFormat::BF16;
+        let inf = f.inf_bits();
+        let one = bf(1.0);
+        for d in [&BaselineFmaPath as &dyn ChainDatapath, &SkewedFmaPath] {
+            let s = run_chain_dyn(d, &[(one, one), (inf, one)]);
+            assert_eq!(s.special, Special::Inf(false), "{}", d.name());
+            let n = run_chain_dyn(d, &[(inf, one), ((1 << 15) | inf, one)]);
+            assert_eq!(n.special, Special::Nan, "{}", d.name());
+            let z = run_chain_dyn(d, &[(bf(0.0), inf)]);
+            assert_eq!(z.special, Special::Nan, "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn zero_product_passthrough_preserves_lza() {
+        // A zero product must not disturb the forwarded ê/L pair.
+        let terms = [(bf(1.0), bf(1.0)), (bf(-1.0), bf(1.0 + pow2(-7)))];
+        let s1 = run_chain(&SkewedFmaPath, &terms);
+        let s2 = SkewedFmaPath.step(&CFG, &s1, bf(0.0), bf(123.0));
+        assert_eq!(s1.val, s2.val);
+        assert_eq!(s1.lza, s2.lza);
+    }
+
+    #[test]
+    fn window_sticky_set_on_alignment_loss() {
+        // 2^20 + 2^-20: the small product falls off the 28-bit window.
+        let terms = [(bf(pow2(10)), bf(pow2(10))), (bf(pow2(-10)), bf(pow2(-10)))];
+        for d in [&BaselineFmaPath as &dyn ChainDatapath, &SkewedFmaPath] {
+            let s = run_chain_dyn(d, &terms);
+            assert!(s.val.sticky, "{}", d.name());
+            assert_eq!(s.val.value_f64(CFG.window), pow2(20), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn chain_cfg_check_bounds() {
+        ChainCfg::BF16_FP32.check();
+        ChainCfg::new(FpFormat::FP16, FpFormat::FP32).check();
+        ChainCfg::new(FpFormat::FP8E4M3, FpFormat::FP16).check();
+        ChainCfg::new(FpFormat::FP8E5M2, FpFormat::BF16).check();
+    }
+
+    #[test]
+    fn add_same_top_subtract_with_sticky_borrows() {
+        let cfg = CFG;
+        let x = WindowVal { sign: false, exp_top: 0, sig: 0b1000 << 20, sticky: false };
+        let y = WindowVal { sign: true, exp_top: 0, sig: 0b0100 << 20, sticky: true };
+        let (r, _) = add_same_top(&cfg, x, y);
+        // (8<<20) − ((4<<20) + δ), 0 < δ < 1 window-ULP: the borrow fires
+        // at the window LSB → sig = (4<<20) − 1, sticky set.
+        assert_eq!(r.sig, (0b0100 << 20) - 1);
+        assert!(r.sticky);
+        assert!(!r.sign);
+    }
+}

@@ -1,0 +1,529 @@
+//! Reduced-precision floating-point formats (paper Fig. 1).
+//!
+//! A format is `1 + exp_bits + man_bits` wide: sign, biased exponent,
+//! fraction.  All the formats of the paper's Fig. 1 are provided:
+//!
+//! | format   | e bits | m bits | bias | notes                            |
+//! |----------|--------|--------|------|----------------------------------|
+//! | FP32     | 8      | 23     | 127  | IEEE-754 single                  |
+//! | BF16     | 8      | 7      | 127  | FP32 dynamic range, low precision|
+//! | FP16     | 5      | 10     | 15   | IEEE-754 half                    |
+//! | FP8-E4M3 | 4      | 3      | 7    | OCP FP8; no Inf, single NaN      |
+//! | FP8-E5M2 | 5      | 2      | 15   | OCP FP8; IEEE-like specials      |
+//!
+//! Encoding/decoding is exact (subnormals included) and rounding is
+//! round-to-nearest-even, matching both IEEE-754 and the OCP FP8 spec's
+//! default behaviour.  The E4M3 deviation from IEEE (exponent-field
+//! all-ones encodes *finite* values except mantissa all-ones = NaN) is
+//! honoured.
+
+/// Classification of a decoded floating-point value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpClass {
+    /// ±0.
+    Zero,
+    /// Finite non-zero (normal or subnormal).
+    Finite,
+    /// ±infinity.
+    Inf,
+    /// Not-a-number.
+    Nan,
+}
+
+/// A floating-point *format descriptor*: field widths and special-value
+/// conventions.  `FpFormat` is a value type so simulations can be swept
+/// across formats at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FpFormat {
+    /// Human-readable name, e.g. `"bf16"`.
+    pub name: &'static str,
+    /// Exponent field width in bits.
+    pub exp_bits: u32,
+    /// Fraction (explicit mantissa) field width in bits.
+    pub man_bits: u32,
+    /// `true` for formats with IEEE-like specials (exp all-ones = Inf/NaN).
+    /// `false` for FP8-E4M3, where exp all-ones is finite except the
+    /// mantissa-all-ones NaN, and which has no infinity.
+    pub ieee_specials: bool,
+}
+
+impl FpFormat {
+    /// IEEE-754 binary32.
+    pub const FP32: FpFormat =
+        FpFormat { name: "fp32", exp_bits: 8, man_bits: 23, ieee_specials: true };
+    /// Bfloat16 (Google brain float).
+    pub const BF16: FpFormat =
+        FpFormat { name: "bf16", exp_bits: 8, man_bits: 7, ieee_specials: true };
+    /// IEEE-754 binary16.
+    pub const FP16: FpFormat =
+        FpFormat { name: "fp16", exp_bits: 5, man_bits: 10, ieee_specials: true };
+    /// OCP 8-bit FP, 4-bit exponent / 3-bit mantissa variant.
+    pub const FP8E4M3: FpFormat =
+        FpFormat { name: "fp8e4m3", exp_bits: 4, man_bits: 3, ieee_specials: false };
+    /// OCP 8-bit FP, 5-bit exponent / 2-bit mantissa variant.
+    pub const FP8E5M2: FpFormat =
+        FpFormat { name: "fp8e5m2", exp_bits: 5, man_bits: 2, ieee_specials: true };
+
+    /// All reduced-precision input formats examined in the paper.
+    pub const REDUCED: [FpFormat; 4] =
+        [Self::BF16, Self::FP16, Self::FP8E4M3, Self::FP8E5M2];
+
+    /// Total storage width in bits (1 + exponent + fraction).
+    pub const fn width(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Exponent bias.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Maximum biased exponent field value (all ones).
+    pub const fn exp_field_max(&self) -> u32 {
+        (1 << self.exp_bits) - 1
+    }
+
+    /// Smallest unbiased exponent of a *normal* number.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest unbiased exponent of a finite normal number.
+    pub const fn emax(&self) -> i32 {
+        if self.ieee_specials {
+            self.exp_field_max() as i32 - 1 - self.bias()
+        } else {
+            // E4M3: exp field all-ones is still finite.
+            self.exp_field_max() as i32 - self.bias()
+        }
+    }
+
+    /// The largest finite magnitude, as significand (`1.f` scaled to an
+    /// integer with `man_bits` fraction bits) and unbiased exponent.
+    pub fn max_finite(&self) -> (u64, i32) {
+        let full = (1u64 << (self.man_bits + 1)) - 1;
+        if self.ieee_specials {
+            (full, self.emax())
+        } else {
+            // E4M3: mantissa all-ones at top exponent is NaN, so the
+            // largest finite has mantissa `111...0`.
+            (full - 1, self.emax())
+        }
+    }
+
+    /// Mask of valid storage bits.
+    pub const fn mask(&self) -> u64 {
+        (1u64 << self.width()) - 1
+    }
+
+    /// Canonical quiet-NaN bit pattern.
+    pub fn nan_bits(&self) -> u64 {
+        if self.ieee_specials {
+            // Exp all ones, MSB of fraction set.
+            ((self.exp_field_max() as u64) << self.man_bits)
+                | (1u64 << (self.man_bits - 1).max(0))
+        } else {
+            // E4M3: S.1111.111.
+            ((self.exp_field_max() as u64) << self.man_bits)
+                | ((1u64 << self.man_bits) - 1)
+        }
+    }
+
+    /// Positive-infinity bit pattern.  For E4M3 (no Inf) this returns the
+    /// NaN pattern, matching OCP saturating-to-NaN conventions.
+    pub fn inf_bits(&self) -> u64 {
+        if self.ieee_specials {
+            (self.exp_field_max() as u64) << self.man_bits
+        } else {
+            self.nan_bits()
+        }
+    }
+
+    /// Decode a raw bit pattern into an [`Unpacked`] value.
+    #[inline]
+    pub fn decode(&self, bits: u64) -> Unpacked {
+        let bits = bits & self.mask();
+        let sign = (bits >> (self.width() - 1)) & 1 == 1;
+        let exp_field = ((bits >> self.man_bits) & (self.exp_field_max() as u64)) as u32;
+        let frac = bits & ((1u64 << self.man_bits) - 1);
+
+        if self.ieee_specials && exp_field == self.exp_field_max() {
+            return if frac == 0 {
+                Unpacked { sign, exp: 0, sig: 0, class: FpClass::Inf }
+            } else {
+                Unpacked { sign, exp: 0, sig: 0, class: FpClass::Nan }
+            };
+        }
+        if !self.ieee_specials
+            && exp_field == self.exp_field_max()
+            && frac == (1u64 << self.man_bits) - 1
+        {
+            return Unpacked { sign, exp: 0, sig: 0, class: FpClass::Nan };
+        }
+
+        if exp_field == 0 {
+            if frac == 0 {
+                return Unpacked { sign, exp: 0, sig: 0, class: FpClass::Zero };
+            }
+            // Subnormal: value = 0.frac × 2^emin.  Normalise so the MSB of
+            // `sig` is the hidden bit (bit `man_bits`).
+            let shift = self.man_bits + 1 - (64 - frac.leading_zeros());
+            return Unpacked {
+                sign,
+                exp: self.emin() - shift as i32,
+                sig: frac << shift,
+                class: FpClass::Finite,
+            };
+        }
+
+        Unpacked {
+            sign,
+            exp: exp_field as i32 - self.bias(),
+            sig: (1u64 << self.man_bits) | frac,
+            class: FpClass::Finite,
+        }
+    }
+
+    /// Encode a finite value given as an *exact* significand/exponent pair
+    /// plus a sticky bit, with round-to-nearest-even.
+    ///
+    /// `sig` holds the magnitude with its MSB anywhere; `exp` is the
+    /// unbiased exponent of the MSB of `sig` interpreted as the `1.`
+    /// position after normalisation — concretely, the value encoded is
+    /// `(-1)^sign × sig × 2^(exp − (sig_msb_index))`... to keep call sites
+    /// simple this helper instead takes (`sig`, `exp`) meaning
+    /// `(-1)^sign × 1.xxx × 2^exp` where `sig` has exactly
+    /// `man_bits + 1 + EXTRA` bits: the hidden bit at the top, then the
+    /// fraction, then `EXTRA = 3` guard/round/sticky bits (callers fold any
+    /// lower bits into the bottom sticky position).
+    ///
+    /// Returns the raw bit pattern (overflow ⇒ ±Inf, or ±max-finite for
+    /// E4M3; underflow ⇒ subnormal/zero).
+    pub fn encode_rne(&self, sign: bool, mut exp: i32, mut sig: u64) -> u64 {
+        const EXTRA: u32 = 3;
+        debug_assert!(sig == 0 || sig >> (self.man_bits + EXTRA) >= 1, "sig not normalised");
+        debug_assert!(sig >> (self.man_bits + 1 + EXTRA) == 0, "sig too wide");
+        let sign_bit = (sign as u64) << (self.width() - 1);
+        if sig == 0 {
+            return sign_bit;
+        }
+
+        // Gradual underflow: shift right until exp == emin, accumulating
+        // sticky, then the normal rounding below produces a subnormal (or
+        // zero) encoding with exp field 0.
+        let mut subnormal = false;
+        if exp < self.emin() {
+            let shift = (self.emin() - exp) as u32;
+            sig = shift_right_sticky(sig, shift);
+            exp = self.emin();
+            subnormal = true;
+        }
+
+        // Round to nearest even on the EXTRA low bits.
+        let lsb = 1u64 << EXTRA;
+        let halfway = lsb >> 1;
+        let low = sig & (lsb - 1);
+        let mut q = sig >> EXTRA;
+        if low > halfway || (low == halfway && q & 1 == 1) {
+            q += 1;
+        }
+        // Rounding may carry out (1.111.. -> 10.000..).
+        if q >> (self.man_bits + 1) != 0 {
+            q >>= 1;
+            exp += 1;
+        }
+
+        if subnormal && q >> self.man_bits == 0 {
+            // Still subnormal after rounding: exp field 0, fraction = q.
+            return sign_bit | q;
+        }
+        // May have rounded *up into* the normal range.
+        if exp > self.emax() || (!self.ieee_specials && exp == self.emax() && {
+            let (maxsig, _) = self.max_finite();
+            q > maxsig
+        }) {
+            return if self.ieee_specials {
+                sign_bit | self.inf_bits()
+            } else {
+                // E4M3 saturates to NaN per OCP overflow convention when
+                // rounding overflows (no Inf encoding exists).
+                sign_bit | self.nan_bits()
+            };
+        }
+        let exp_field = (exp + self.bias()) as u64;
+        sign_bit | (exp_field << self.man_bits) | (q & ((1u64 << self.man_bits) - 1))
+    }
+
+    /// Convert an `f64` to this format with RNE (used by tests and input
+    /// quantisation).  Exact for every `f64` input.
+    pub fn from_f64(&self, x: f64) -> u64 {
+        let bits = x.to_bits();
+        let sign = bits >> 63 == 1;
+        let exp_field = ((bits >> 52) & 0x7ff) as i32;
+        let frac = bits & ((1u64 << 52) - 1);
+        if exp_field == 0x7ff {
+            return if frac == 0 {
+                ((sign as u64) << (self.width() - 1)) | self.inf_bits()
+            } else {
+                ((sign as u64) << (self.width() - 1)) | self.nan_bits()
+            };
+        }
+        if exp_field == 0 && frac == 0 {
+            return (sign as u64) << (self.width() - 1);
+        }
+        // Normalise (f64 subnormals included).
+        let (exp, mut sig) = if exp_field == 0 {
+            let shift = 53 - (64 - frac.leading_zeros());
+            (-1022 - shift as i32, frac << shift)
+        } else {
+            (exp_field - 1023, (1u64 << 52) | frac)
+        };
+        // Reduce the 53-bit significand to man_bits+1+3 with sticky.
+        let target = self.man_bits + 1 + 3;
+        if 53 > target {
+            sig = shift_right_sticky(sig, 53 - target);
+        } else {
+            sig <<= target - 53;
+        }
+        // `exp` refers to the hidden-bit position throughout.
+        self.encode_rne(sign, exp, sig)
+    }
+
+    /// Convert a stored bit pattern to `f64` (exact: every format here is
+    /// narrower than binary64).
+    pub fn to_f64(&self, bits: u64) -> f64 {
+        let u = self.decode(bits);
+        match u.class {
+            FpClass::Zero => {
+                if u.sign { -0.0 } else { 0.0 }
+            }
+            FpClass::Inf => {
+                if u.sign { f64::NEG_INFINITY } else { f64::INFINITY }
+            }
+            FpClass::Nan => f64::NAN,
+            FpClass::Finite => {
+                let mag = u.sig as f64 * (u.exp - self.man_bits as i32).exp2_f64();
+                if u.sign { -mag } else { mag }
+            }
+        }
+    }
+
+    /// Convert an `f32` with RNE.
+    pub fn from_f32(&self, x: f32) -> u64 {
+        self.from_f64(x as f64)
+    }
+
+    /// Convert a stored pattern to `f32`.  Exact for every format except
+    /// values outside f32 range (cannot occur: all formats ⊆ f32 range).
+    pub fn to_f32(&self, bits: u64) -> f32 {
+        self.to_f64(bits) as f32
+    }
+}
+
+/// Integer power-of-two helper for exact `f64` scaling without `powi`
+/// rounding concerns.
+trait Exp2 {
+    fn exp2_f64(self) -> f64;
+}
+impl Exp2 for i32 {
+    fn exp2_f64(self) -> f64 {
+        // Build the f64 directly from the exponent field when in range;
+        // fall back to ldexp-style composition for the subnormal tail.
+        if (-1022..=1023).contains(&self) {
+            f64::from_bits(((self + 1023) as u64) << 52)
+        } else if self < -1022 {
+            f64::from_bits(((self + 1023 + 200) as u64) << 52) * (-200i32).exp2_f64_inner()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+trait Exp2Inner {
+    fn exp2_f64_inner(self) -> f64;
+}
+impl Exp2Inner for i32 {
+    fn exp2_f64_inner(self) -> f64 {
+        f64::from_bits(((self + 1023) as u64) << 52)
+    }
+}
+
+/// Right-shift preserving a sticky LSB: any 1 shifted out sets bit 0 of
+/// the result.  Shifts ≥ 64 collapse to the pure sticky bit.
+#[inline]
+pub fn shift_right_sticky(x: u64, shift: u32) -> u64 {
+    if shift == 0 {
+        x
+    } else if shift >= 64 {
+        (x != 0) as u64
+    } else {
+        let lost = x & ((1u64 << shift) - 1);
+        (x >> shift) | (lost != 0) as u64
+    }
+}
+
+/// A decoded FP value: `(-1)^sign × sig × 2^(exp − man_bits)` where `sig`
+/// includes the hidden bit (so normal values have `sig ∈ [2^man_bits,
+/// 2^(man_bits+1))`).  Subnormals are normalised on decode (their `exp`
+/// dips below `emin`), so downstream datapath code never branches on
+/// subnormality.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Unpacked {
+    pub sign: bool,
+    /// Unbiased exponent of the hidden-bit position.
+    pub exp: i32,
+    /// Significand with hidden bit explicit; 0 for zero/inf/nan.
+    pub sig: u64,
+    pub class: FpClass,
+}
+
+impl Unpacked {
+    pub fn is_finite(&self) -> bool {
+        matches!(self.class, FpClass::Zero | FpClass::Finite)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_and_biases() {
+        assert_eq!(FpFormat::FP32.width(), 32);
+        assert_eq!(FpFormat::BF16.width(), 16);
+        assert_eq!(FpFormat::FP16.width(), 16);
+        assert_eq!(FpFormat::FP8E4M3.width(), 8);
+        assert_eq!(FpFormat::FP8E5M2.width(), 8);
+        assert_eq!(FpFormat::FP32.bias(), 127);
+        assert_eq!(FpFormat::BF16.bias(), 127);
+        assert_eq!(FpFormat::FP16.bias(), 15);
+        assert_eq!(FpFormat::FP8E4M3.bias(), 7);
+        assert_eq!(FpFormat::FP8E5M2.bias(), 15);
+    }
+
+    #[test]
+    fn bf16_is_truncated_fp32_range() {
+        // BF16 shares the FP32 exponent range (the paper's Fig. 1 point).
+        assert_eq!(FpFormat::BF16.emax(), FpFormat::FP32.emax());
+        assert_eq!(FpFormat::BF16.emin(), FpFormat::FP32.emin());
+    }
+
+    #[test]
+    fn e4m3_top_exponent_is_finite() {
+        // 0x7E = S0.1111.110 = 448.0, the E4M3 max finite.
+        assert_eq!(FpFormat::FP8E4M3.to_f64(0x7e), 448.0);
+        // 0x7F is NaN.
+        assert_eq!(FpFormat::FP8E4M3.decode(0x7f).class, FpClass::Nan);
+        assert!(FpFormat::FP8E4M3.to_f64(0x7f).is_nan());
+    }
+
+    #[test]
+    fn e5m2_has_inf() {
+        assert_eq!(FpFormat::FP8E5M2.decode(0x7c).class, FpClass::Inf);
+        assert_eq!(FpFormat::FP8E5M2.to_f64(0x7c), f64::INFINITY);
+        assert_eq!(FpFormat::FP8E5M2.decode(0x7d).class, FpClass::Nan);
+    }
+
+    #[test]
+    fn fp32_roundtrip_exhaustive_sample() {
+        // Round-trip through decode/to_f64/from_f64 for a structured sweep
+        // of fp32 patterns, including subnormals and specials.
+        let f = FpFormat::FP32;
+        let mut bits: u64 = 0;
+        for _ in 0..200_000 {
+            let x = f.to_f64(bits);
+            if x.is_nan() {
+                assert_eq!(f.decode(f.from_f64(x)).class, FpClass::Nan);
+            } else {
+                assert_eq!(f.from_f64(x), bits, "bits {bits:#x}");
+            }
+            bits = bits.wrapping_mul(6364136223846793005).wrapping_add(1) & f.mask();
+        }
+    }
+
+    #[test]
+    fn bf16_exhaustive_roundtrip() {
+        let f = FpFormat::BF16;
+        for bits in 0..=0xffffu64 {
+            let x = f.to_f64(bits);
+            if x.is_nan() {
+                assert_eq!(f.decode(bits).class, FpClass::Nan);
+            } else {
+                let back = f.from_f64(x);
+                assert_eq!(back, bits, "bits {bits:#x} -> {x} -> {back:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_exhaustive_roundtrip_both_variants() {
+        for f in [FpFormat::FP8E4M3, FpFormat::FP8E5M2] {
+            for bits in 0..=0xffu64 {
+                let x = f.to_f64(bits);
+                if x.is_nan() {
+                    assert_eq!(f.decode(bits).class, FpClass::Nan, "{} {bits:#x}", f.name);
+                } else {
+                    assert_eq!(f.from_f64(x), bits, "{} {bits:#x}", f.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_from_f32_matches_truncation_semantics() {
+        // BF16 RNE from f32: compare against manual round-to-nearest-even
+        // of the top 16 bits for a sample of values.
+        let f = FpFormat::BF16;
+        for &x in &[1.0f32, 1.5, 3.14159, -2.71828, 1e-20, 6.5e4, -0.0, 255.99] {
+            let got = f.from_f32(x);
+            let b = x.to_bits();
+            let lower = b & 0xffff;
+            let mut upper = (b >> 16) as u64;
+            if lower > 0x8000 || (lower == 0x8000 && upper & 1 == 1) {
+                upper += 1;
+            }
+            assert_eq!(got, upper, "x={x}");
+        }
+    }
+
+    #[test]
+    fn subnormal_decode_normalises() {
+        let f = FpFormat::BF16;
+        // Smallest BF16 subnormal: 0x0001 = 2^-133.
+        let u = f.decode(0x0001);
+        assert_eq!(u.class, FpClass::Finite);
+        assert_eq!(u.sig, 1 << f.man_bits); // hidden bit explicit
+        assert_eq!(u.exp, f.emin() - f.man_bits as i32);
+        assert_eq!(f.to_f64(0x0001), (f.emin() - f.man_bits as i32).exp2_f64());
+    }
+
+    #[test]
+    fn rounding_to_subnormal_and_zero() {
+        let f = FpFormat::FP8E5M2;
+        // Halfway between 0 and the smallest subnormal rounds to even (0).
+        let tiny = f.to_f64(0x01) / 2.0;
+        assert_eq!(f.from_f64(tiny), 0x00);
+        // Slightly above halfway rounds up.
+        assert_eq!(f.from_f64(tiny * 1.01), 0x01);
+    }
+
+    #[test]
+    fn overflow_behaviour() {
+        assert_eq!(FpFormat::FP8E5M2.from_f64(1e9), FpFormat::FP8E5M2.inf_bits());
+        // E4M3 has no Inf: overflow lands on NaN per OCP.
+        let e4 = FpFormat::FP8E4M3;
+        let over = e4.from_f64(1e9);
+        assert_eq!(over & 0x7f, e4.nan_bits() & 0x7f);
+        // Max finite (448) must survive.
+        assert_eq!(e4.from_f64(448.0), 0x7e);
+    }
+
+    #[test]
+    fn shift_right_sticky_properties() {
+        assert_eq!(shift_right_sticky(0b1011, 2), 0b11); // lost 11 -> sticky
+        assert_eq!(shift_right_sticky(0b1000, 3), 0b1);
+        assert_eq!(shift_right_sticky(0b1000, 4), 0b1); // all lost, sticky
+        assert_eq!(shift_right_sticky(0, 70), 0);
+        assert_eq!(shift_right_sticky(u64::MAX, 64), 1);
+        assert_eq!(shift_right_sticky(0b0100, 2), 0b01);
+    }
+}

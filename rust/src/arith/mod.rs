@@ -1,0 +1,31 @@
+//! Bit-accurate reduced-precision floating-point arithmetic.
+//!
+//! This is the functional substrate of the reproduction.  Everything the
+//! simulator computes bottoms out here:
+//!
+//! * [`format`] — the FP formats of the paper's Fig. 1 (Bfloat16, FP16,
+//!   FP8-E4M3, FP8-E5M2) plus IEEE-754 FP32, with exact encode/decode,
+//!   subnormal support and round-to-nearest-even.
+//! * [`softfloat`] — an exact integer-arithmetic softfloat core used as
+//!   the *functional oracle* for the structural datapaths.
+//! * [`lza`] — leading-zero counting / anticipation, the block whose
+//!   output (`L_i`) the skewed pipeline forwards across PEs.
+//! * [`fma`] — the two *structural* chained multiply-add datapaths under
+//!   comparison: `BaselineFmaPath` (Fig. 3(b) signal ordering) and
+//!   `SkewedFmaPath` (Figs. 5/6: speculative exponent forwarding + the
+//!   `d_i = d'_i ± L_{i-1}` fix + retimed normalisation).  The paper's
+//!   central functional claim — speculation is corrected *exactly* — is
+//!   enforced by requiring the two paths to be bit-identical.
+//! * [`accum`] — the double-width column accumulator semantics (one
+//!   rounding per column, at the South edge) and the wide functional
+//!   reference accumulator.
+
+pub mod accum;
+pub mod fma;
+pub mod format;
+pub mod lza;
+pub mod softfloat;
+
+pub use accum::{ColumnOracle, RoundingUnit};
+pub use fma::{BaselineFmaPath, ChainDatapath, PsumSignal, SkewedFmaPath};
+pub use format::{FpClass, FpFormat, Unpacked};

@@ -1,0 +1,234 @@
+//! Run configuration: array geometry, chain formats, coordinator knobs.
+//!
+//! Configs load from mini-JSON files (see `configs/` examples in the
+//! README) with CLI overrides layered on top; every run starts from
+//! [`RunConfig::paper`] — the paper's §IV evaluation point — so that a
+//! bare `skewsa run` reproduces the published setup.
+
+use crate::arith::fma::ChainCfg;
+use crate::arith::format::FpFormat;
+use crate::timing::model::TimingConfig;
+use crate::util::cli::Args;
+use crate::util::mini_json::Json;
+
+/// How the coordinator computes tile numerics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumericMode {
+    /// Value-level column oracle (bit-exact semantics, no per-cycle
+    /// machinery) — the fast path for large workloads.
+    Oracle,
+    /// Full cycle-accurate array simulation (validates timing too);
+    /// practical for tiles up to ~64×64.
+    CycleAccurate,
+}
+
+/// Complete run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Array rows.
+    pub rows: usize,
+    /// Array columns.
+    pub cols: usize,
+    /// Clock in GHz.
+    pub clock_ghz: f64,
+    /// Input element format.
+    pub in_fmt: FpFormat,
+    /// Accumulation/output format.
+    pub out_fmt: FpFormat,
+    /// Weight-preload double buffering.
+    pub double_buffer: bool,
+    /// Worker threads in the coordinator pool.
+    pub workers: usize,
+    /// Numeric evaluation mode.
+    pub mode: NumericMode,
+    /// Bounded job-queue depth (backpressure).
+    pub queue_depth: usize,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+    /// Fraction of output elements verified against the exact oracle
+    /// (0 disables, 1 verifies everything).
+    pub verify_fraction: f64,
+}
+
+impl RunConfig {
+    /// The paper's evaluation point: 128×128 bf16→fp32 @ 1 GHz.
+    pub fn paper() -> RunConfig {
+        RunConfig {
+            rows: 128,
+            cols: 128,
+            clock_ghz: 1.0,
+            in_fmt: FpFormat::BF16,
+            out_fmt: FpFormat::FP32,
+            double_buffer: true,
+            workers: std::thread::available_parallelism().map_or(4, |n| n.get().min(16)),
+            mode: NumericMode::Oracle,
+            queue_depth: 64,
+            seed: 0x5eed_2023,
+            verify_fraction: 0.02,
+        }
+    }
+
+    /// A small config for tests and quick examples.
+    pub fn small() -> RunConfig {
+        RunConfig { rows: 8, cols: 8, workers: 2, queue_depth: 8, ..RunConfig::paper() }
+    }
+
+    /// The chain configuration implied by the formats.
+    pub fn chain(&self) -> ChainCfg {
+        ChainCfg::new(self.in_fmt, self.out_fmt)
+    }
+
+    /// The timing configuration implied by geometry + clock.
+    pub fn timing(&self) -> TimingConfig {
+        TimingConfig {
+            rows: self.rows,
+            cols: self.cols,
+            clock_ghz: self.clock_ghz,
+            double_buffer: self.double_buffer,
+        }
+    }
+
+    fn fmt_by_name(name: &str) -> Result<FpFormat, String> {
+        match name {
+            "bf16" => Ok(FpFormat::BF16),
+            "fp16" => Ok(FpFormat::FP16),
+            "fp8e4m3" => Ok(FpFormat::FP8E4M3),
+            "fp8e5m2" => Ok(FpFormat::FP8E5M2),
+            "fp32" => Ok(FpFormat::FP32),
+            _ => Err(format!("unknown format '{name}'")),
+        }
+    }
+
+    /// Apply a parsed JSON config object over this one.
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        let get_usize = |key: &str| j.get(key).and_then(Json::as_usize);
+        if let Some(v) = get_usize("rows") {
+            self.rows = v;
+        }
+        if let Some(v) = get_usize("cols") {
+            self.cols = v;
+        }
+        if let Some(v) = j.get("clock_ghz").and_then(Json::as_f64) {
+            self.clock_ghz = v;
+        }
+        if let Some(v) = j.get("in_fmt").and_then(Json::as_str) {
+            self.in_fmt = Self::fmt_by_name(v)?;
+        }
+        if let Some(v) = j.get("out_fmt").and_then(Json::as_str) {
+            self.out_fmt = Self::fmt_by_name(v)?;
+        }
+        if let Some(v) = j.get("double_buffer").and_then(Json::as_bool) {
+            self.double_buffer = v;
+        }
+        if let Some(v) = get_usize("workers") {
+            self.workers = v.max(1);
+        }
+        if let Some(v) = get_usize("queue_depth") {
+            self.queue_depth = v.max(1);
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("verify_fraction").and_then(Json::as_f64) {
+            self.verify_fraction = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = j.get("mode").and_then(Json::as_str) {
+            self.mode = match v {
+                "oracle" => NumericMode::Oracle,
+                "cycle" => NumericMode::CycleAccurate,
+                _ => return Err(format!("unknown mode '{v}'")),
+            };
+        }
+        Ok(())
+    }
+
+    /// Load a JSON config file over this config.
+    pub fn apply_file(&mut self, path: &str) -> Result<(), String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        self.apply_json(&j)
+    }
+
+    /// Apply CLI overrides (`--rows`, `--cols`, `--seed`, …).
+    pub fn apply_args(&mut self, a: &Args) {
+        if let Some(v) = a.get_usize("rows") {
+            self.rows = v;
+        }
+        if let Some(v) = a.get_usize("cols") {
+            self.cols = v;
+        }
+        if let Some(v) = a.get_u64("seed") {
+            self.seed = v;
+        }
+        if let Some(v) = a.get_usize("workers") {
+            self.workers = v.max(1);
+        }
+        if let Some(v) = a.get_f64("verify") {
+            self.verify_fraction = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = a.get("mode") {
+            if v == "cycle" {
+                self.mode = NumericMode::CycleAccurate;
+            } else if v == "oracle" {
+                self.mode = NumericMode::Oracle;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults() {
+        let c = RunConfig::paper();
+        assert_eq!((c.rows, c.cols), (128, 128));
+        assert_eq!(c.in_fmt, FpFormat::BF16);
+        assert_eq!(c.out_fmt, FpFormat::FP32);
+        assert_eq!(c.chain(), ChainCfg::new(FpFormat::BF16, FpFormat::FP32));
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = RunConfig::paper();
+        let j = Json::parse(
+            r#"{"rows": 16, "cols": 8, "in_fmt": "fp8e4m3", "out_fmt": "fp16",
+                "mode": "cycle", "workers": 3, "verify_fraction": 0.5}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!((c.rows, c.cols), (16, 8));
+        assert_eq!(c.in_fmt, FpFormat::FP8E4M3);
+        assert_eq!(c.mode, NumericMode::CycleAccurate);
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.verify_fraction, 0.5);
+    }
+
+    #[test]
+    fn bad_format_is_an_error() {
+        let mut c = RunConfig::paper();
+        let j = Json::parse(r#"{"in_fmt": "fp7"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn args_overrides() {
+        use crate::util::cli::Cli;
+        let cli = Cli::new("t", "t")
+            .opt("rows", "", None)
+            .opt("cols", "", None)
+            .opt("seed", "", None)
+            .opt("workers", "", None)
+            .opt("verify", "", None)
+            .opt("mode", "", None);
+        let a = cli
+            .parse(&["--rows=4".into(), "--seed=9".into(), "--mode=cycle".into()])
+            .unwrap();
+        let mut c = RunConfig::paper();
+        c.apply_args(&a);
+        assert_eq!(c.rows, 4);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.mode, NumericMode::CycleAccurate);
+    }
+}

@@ -1,0 +1,131 @@
+//! Job dispatch across simulated array instances.
+//!
+//! The executor owns one bounded queue per worker; the router picks the
+//! target queue.  Two policies:
+//!
+//! * [`Policy::RoundRobin`] — static rotation;
+//! * [`Policy::LeastLoaded`] — live in-flight counts (work released on
+//!   completion), which keeps slow tiles (edge tiles, big M) from
+//!   starving a queue.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// Router state shared with the executor.
+#[derive(Debug)]
+pub struct Router {
+    policy: Policy,
+    rr_next: AtomicUsize,
+    /// In-flight job count per worker.
+    inflight: Vec<Arc<AtomicUsize>>,
+}
+
+impl Router {
+    pub fn new(policy: Policy, workers: usize) -> Router {
+        assert!(workers >= 1);
+        Router {
+            policy,
+            rr_next: AtomicUsize::new(0),
+            inflight: (0..workers).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Pick a worker for the next job and account for it.
+    pub fn dispatch(&self) -> usize {
+        let w = match self.policy {
+            Policy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.inflight.len()
+            }
+            Policy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = usize::MAX;
+                for (i, c) in self.inflight.iter().enumerate() {
+                    let l = c.load(Ordering::Relaxed);
+                    if l < best_load {
+                        best_load = l;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.inflight[w].fetch_add(1, Ordering::Relaxed);
+        w
+    }
+
+    /// Report a job's completion on worker `w`.
+    pub fn complete(&self, w: usize) {
+        self.inflight[w].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Current in-flight count for a worker (tests / metrics).
+    pub fn load(&self, w: usize) -> usize {
+        self.inflight[w].load(Ordering::Relaxed)
+    }
+
+    /// Largest minus smallest in-flight count (balance metric).
+    pub fn imbalance(&self) -> usize {
+        let loads: Vec<usize> = self.inflight.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        loads.iter().max().unwrap() - loads.iter().min().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = Router::new(Policy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| r.dispatch()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let r = Router::new(Policy::LeastLoaded, 3);
+        let a = r.dispatch();
+        let b = r.dispatch();
+        let c = r.dispatch();
+        // All three workers get one job before anyone gets two.
+        let mut got = vec![a, b, c];
+        got.sort();
+        assert_eq!(got, vec![0, 1, 2]);
+        // Finish worker 1's job: it becomes the next target.
+        r.complete(1);
+        assert_eq!(r.dispatch(), 1);
+    }
+
+    #[test]
+    fn round_robin_imbalance_bounded_without_completions() {
+        let r = Router::new(Policy::RoundRobin, 4);
+        for _ in 0..41 {
+            r.dispatch();
+        }
+        assert!(r.imbalance() <= 1, "imbalance {}", r.imbalance());
+    }
+
+    #[test]
+    fn least_loaded_rebalances_after_completion_skew() {
+        let r = Router::new(Policy::LeastLoaded, 2);
+        // Worker 0 is slow: its jobs never complete; worker 1 races.
+        for _ in 0..10 {
+            let w = r.dispatch();
+            if w == 1 {
+                r.complete(1);
+            }
+        }
+        assert!(r.load(0) <= 2, "slow worker overloaded: {}", r.load(0));
+    }
+}

@@ -1,0 +1,97 @@
+//! Layer → tile-job scheduling.
+//!
+//! Turns a [`TilePlan`] into an ordered job list.  Jobs are independent
+//! for *execution* (any worker, any order); the K-pass accumulation
+//! order is a property of *assembly* ([`crate::coordinator::state`]),
+//! which merges pass results in pass order regardless of completion
+//! order — the invariant the property tests pin down.
+//!
+//! Jobs are emitted K-pass-minor (all passes of an N-block adjacent) so
+//! that, under in-order dispatch, an N-block's accumulator goes live and
+//! retires quickly — bounding assembly memory.
+
+use crate::sa::tile::{GemmShape, Tile, TilePlan};
+
+/// One schedulable unit of work: a weight tile streamed over all M rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileJob {
+    /// Dense job id, also the submission order.
+    pub id: usize,
+    /// N-block index (output-column group this job accumulates into).
+    pub n_block: usize,
+    pub tile: Tile,
+}
+
+/// The scheduler: owns the job list for one GEMM.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    pub shape: GemmShape,
+    jobs: Vec<TileJob>,
+    n_blocks: usize,
+    passes_per_block: usize,
+}
+
+impl Scheduler {
+    pub fn new(plan: &TilePlan) -> Scheduler {
+        let n_blocks = plan.n_tiles();
+        let passes = plan.k_tiles();
+        let jobs = plan
+            .tiles
+            .iter()
+            .enumerate()
+            .map(|(id, &tile)| TileJob { id, n_block: tile.n0 / plan.cols, tile })
+            .collect();
+        Scheduler { shape: plan.shape, jobs, n_blocks, passes_per_block: passes }
+    }
+
+    pub fn jobs(&self) -> &[TileJob] {
+        &self.jobs
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn passes_per_block(&self) -> usize {
+        self.passes_per_block
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_cover_plan_in_order() {
+        let plan = TilePlan::new(GemmShape::new(4, 20, 10), 8, 4);
+        let s = Scheduler::new(&plan);
+        assert_eq!(s.job_count(), plan.tile_count());
+        for (i, j) in s.jobs().iter().enumerate() {
+            assert_eq!(j.id, i);
+            assert_eq!(j.tile, plan.tiles[i]);
+            assert_eq!(j.n_block, j.tile.n0 / 4);
+        }
+        assert_eq!(s.n_blocks(), 3);
+        assert_eq!(s.passes_per_block(), 3);
+    }
+
+    #[test]
+    fn passes_adjacent_within_block() {
+        let plan = TilePlan::new(GemmShape::new(4, 33, 9), 8, 4);
+        let s = Scheduler::new(&plan);
+        let mut seen_block = None;
+        let mut expected_pass = 0;
+        for j in s.jobs() {
+            if seen_block != Some(j.n_block) {
+                seen_block = Some(j.n_block);
+                expected_pass = 0;
+            }
+            assert_eq!(j.tile.pass, expected_pass);
+            expected_pass += 1;
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Run state: tile-result assembly into the output matrix.
+//!
+//! Numeric semantics (DESIGN.md §7): *within* a weight tile, the column
+//! reduction is rounding-free and rounds once at the South edge;
+//! *across* K-passes, the South-edge accumulators hold the output format
+//! (FP32 for the paper's setup) and add each pass's rounded partial in
+//! that format — pass order is fixed, so assembly is deterministic no
+//! matter which workers finish first.
+
+use crate::coordinator::scheduler::TileJob;
+use std::collections::BTreeMap;
+
+/// A completed tile job's numeric payload: `y_part[m][n_local]` bits in
+/// the output format, plus who computed it (for router stats).
+#[derive(Clone, Debug)]
+pub struct TileResult {
+    pub job: TileJob,
+    /// Partial outputs, `m`-major, `n_local`-minor.
+    pub y_part: Vec<f32>,
+    /// Worker that produced this result.
+    pub worker: usize,
+}
+
+/// Assembles tile results into the final `M×N` matrix.
+#[derive(Debug)]
+pub struct RunState {
+    m: usize,
+    n: usize,
+    cols: usize,
+    /// Final output (f32 bit semantics of the out format).
+    y: Vec<f32>,
+    /// Per-N-block: results buffered until their pass turn comes up.
+    pending: BTreeMap<usize, BTreeMap<usize, TileResult>>,
+    /// Per-N-block: next pass index to fold.
+    next_pass: BTreeMap<usize, usize>,
+    folded: usize,
+    expected: usize,
+    /// Jobs completed per worker (router/load statistics).
+    pub per_worker: BTreeMap<usize, usize>,
+}
+
+impl RunState {
+    pub fn new(m: usize, n: usize, cols: usize, expected_jobs: usize) -> RunState {
+        RunState {
+            m,
+            n,
+            cols,
+            y: vec![0.0; m * n],
+            pending: BTreeMap::new(),
+            next_pass: BTreeMap::new(),
+            folded: 0,
+            expected: expected_jobs,
+            per_worker: BTreeMap::new(),
+        }
+    }
+
+    /// Accept a completed tile; folds it (and any unblocked successors)
+    /// into the output in pass order.
+    pub fn accept(&mut self, r: TileResult) {
+        *self.per_worker.entry(r.worker).or_insert(0) += 1;
+        let block = r.job.n_block;
+        self.pending.entry(block).or_default().insert(r.job.tile.pass, r);
+        loop {
+            let next = *self.next_pass.get(&block).unwrap_or(&0);
+            let Some(r) = self.pending.get_mut(&block).and_then(|b| b.remove(&next)) else {
+                break;
+            };
+            self.fold(&r);
+            self.next_pass.insert(block, next + 1);
+        }
+    }
+
+    fn fold(&mut self, r: &TileResult) {
+        let t = &r.job.tile;
+        debug_assert_eq!(r.y_part.len(), self.m * t.n_len);
+        for m in 0..self.m {
+            let row = &r.y_part[m * t.n_len..(m + 1) * t.n_len];
+            for (j, &v) in row.iter().enumerate() {
+                // South-edge FP32 accumulator: native f32 add is exactly
+                // the IEEE RNE add the hardware performs per pass.
+                self.y[m * self.n + t.n0 + j] += v;
+            }
+        }
+        self.folded += 1;
+    }
+
+    /// All expected jobs folded?
+    pub fn complete(&self) -> bool {
+        self.folded == self.expected
+    }
+
+    pub fn folded(&self) -> usize {
+        self.folded
+    }
+
+    /// The assembled output matrix (row-major `M×N`); panics if called
+    /// before completion.
+    pub fn into_result(self) -> Vec<f32> {
+        assert!(self.complete(), "assembly incomplete: {}/{}", self.folded, self.expected);
+        self.y
+    }
+
+    /// Column group width (diagnostics).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sa::tile::{GemmShape, TilePlan};
+    use crate::coordinator::scheduler::Scheduler;
+
+    fn result_for(job: TileJob, m: usize, val: f32, worker: usize) -> TileResult {
+        TileResult { job, y_part: vec![val; m * job.tile.n_len], worker }
+    }
+
+    #[test]
+    fn out_of_order_passes_fold_in_order() {
+        // 2 K-passes over one N-block; deliver pass 1 first.
+        let plan = TilePlan::new(GemmShape::new(2, 16, 4), 8, 4);
+        let s = Scheduler::new(&plan);
+        let jobs = s.jobs();
+        assert_eq!(jobs.len(), 2);
+        let mut st = RunState::new(2, 4, 4, 2);
+        st.accept(result_for(jobs[1], 2, 10.0, 0));
+        assert_eq!(st.folded(), 0, "pass 1 must wait for pass 0");
+        st.accept(result_for(jobs[0], 2, 1.0, 1));
+        assert!(st.complete());
+        let y = st.into_result();
+        assert!(y.iter().all(|&v| v == 11.0));
+    }
+
+    #[test]
+    fn n_blocks_assemble_independently() {
+        let plan = TilePlan::new(GemmShape::new(1, 8, 8), 8, 4);
+        let s = Scheduler::new(&plan);
+        assert_eq!(s.job_count(), 2); // 2 N-blocks × 1 pass
+        let mut st = RunState::new(1, 8, 4, 2);
+        st.accept(result_for(s.jobs()[1], 1, 2.0, 0));
+        st.accept(result_for(s.jobs()[0], 1, 1.0, 0));
+        let y = st.into_result();
+        assert_eq!(&y[0..4], &[1.0; 4]);
+        assert_eq!(&y[4..8], &[2.0; 4]);
+    }
+
+    #[test]
+    fn worker_stats_tracked() {
+        let plan = TilePlan::new(GemmShape::new(1, 16, 4), 8, 4);
+        let s = Scheduler::new(&plan);
+        let mut st = RunState::new(1, 4, 4, 2);
+        st.accept(result_for(s.jobs()[0], 1, 0.0, 7));
+        st.accept(result_for(s.jobs()[1], 1, 0.0, 7));
+        assert_eq!(st.per_worker.get(&7), Some(&2));
+    }
+
+    #[test]
+    #[should_panic(expected = "assembly incomplete")]
+    fn incomplete_result_panics() {
+        let st = RunState::new(1, 4, 4, 2);
+        let _ = st.into_result();
+    }
+}

@@ -1,0 +1,172 @@
+//! Golden verification of assembled results.
+//!
+//! Three references, strongest first:
+//!
+//! 1. **Exact oracle** — recompute sampled output elements through the
+//!    [`ColumnOracle`] with the coordinator's pass structure; must match
+//!    **bit-for-bit** (the simulator and datapaths implement the same
+//!    semantics by construction).
+//! 2. **PJRT runtime** — the AOT-compiled JAX artifact for the same
+//!    shape, when `make artifacts` has produced one.  XLA's bf16 matmul
+//!    rounds after every add, so this comparison is tolerance-based
+//!    (DESIGN.md §7).
+//! 3. **f64 reference** — always available; loose tolerance scaled by
+//!    the reduction depth.
+
+use crate::arith::accum::ColumnOracle;
+use crate::arith::fma::ChainCfg;
+use crate::sa::tile::TilePlan;
+use crate::util::rng::Rng;
+use crate::workloads::gemm::GemmData;
+
+/// Verification outcome.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct VerifyReport {
+    /// Elements compared.
+    pub checked: usize,
+    /// Bit-exact mismatches (oracle path) or out-of-tolerance elements
+    /// (runtime / f64 paths).
+    pub failures: usize,
+    /// Largest relative error observed (tolerance paths).
+    pub max_rel_err: f64,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.failures == 0
+    }
+}
+
+/// Recompute `y[m][n]` exactly as the coordinator's assembly does:
+/// rounding-free within each K-pass, f32 accumulation across passes.
+pub fn oracle_element(
+    chain: &ChainCfg,
+    plan: &TilePlan,
+    data: &GemmData,
+    m: usize,
+    n: usize,
+) -> f32 {
+    let mut acc = 0.0f32;
+    for tile in plan.tiles.iter().filter(|t| (t.n0..t.n0 + t.n_len).contains(&n)) {
+        let mut o = ColumnOracle::new(*chain);
+        for k in tile.k0..tile.k0 + tile.k_len {
+            o.mac(data.a[m][k], data.w[k][n]);
+        }
+        acc += f32::from_bits(o.result() as u32);
+    }
+    acc
+}
+
+/// Bit-exact sampled verification against the oracle.
+pub fn verify_oracle_sampled(
+    chain: &ChainCfg,
+    plan: &TilePlan,
+    data: &GemmData,
+    y: &[f32],
+    fraction: f64,
+    seed: u64,
+) -> VerifyReport {
+    let (m_total, n_total) = (data.shape.m, data.shape.n);
+    let total = m_total * n_total;
+    let mut rep = VerifyReport::default();
+    let check = |m: usize, n: usize, rep: &mut VerifyReport| {
+        let want = oracle_element(chain, plan, data, m, n);
+        let got = y[m * n_total + n];
+        rep.checked += 1;
+        if got.to_bits() != want.to_bits() {
+            rep.failures += 1;
+        }
+    };
+    if fraction >= 1.0 {
+        // Exhaustive sweep.
+        for m in 0..m_total {
+            for n in 0..n_total {
+                check(m, n, &mut rep);
+            }
+        }
+    } else {
+        let samples = ((total as f64 * fraction).ceil() as usize).clamp(1, total);
+        let mut rng = Rng::new(seed ^ 0x5a5a);
+        for _ in 0..samples {
+            let m = rng.below(m_total as u64) as usize;
+            let n = rng.below(n_total as u64) as usize;
+            check(m, n, &mut rep);
+        }
+    }
+    rep
+}
+
+/// Tolerance comparison of a full matrix against a reference.
+pub fn verify_close(y: &[f32], reference: &[f64], rel_tol: f64) -> VerifyReport {
+    assert_eq!(y.len(), reference.len());
+    let mut rep = VerifyReport::default();
+    for (&got, &want) in y.iter().zip(reference) {
+        rep.checked += 1;
+        let denom = 1.0 + want.abs();
+        let rel = ((got as f64 - want) / denom).abs();
+        rep.max_rel_err = rep.max_rel_err.max(rel);
+        if !rel.is_finite() || rel > rel_tol {
+            rep.failures += 1;
+        }
+    }
+    rep
+}
+
+/// Tolerance for the f64 reference: bf16 products carry ~2⁻⁸ relative
+/// noise each; a K-deep reduction accumulates ~√K of it.
+pub fn f64_tolerance(k: usize) -> f64 {
+    2.0f64.powi(-8) * (k as f64).sqrt().max(1.0) * 4.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::config::{NumericMode, RunConfig};
+    use crate::coordinator::executor::Executor;
+    use crate::pe::PipelineKind;
+    use crate::sa::tile::GemmShape;
+    use std::sync::Arc;
+
+    fn executed_case() -> (RunConfig, GemmData, TilePlan, Vec<f32>) {
+        let mut cfg = RunConfig::small();
+        cfg.mode = NumericMode::Oracle;
+        let shape = GemmShape::new(5, 20, 7);
+        let data = GemmData::cnn_like(shape, FpFormat::BF16, 11);
+        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let ex = Executor::new(cfg.clone(), PipelineKind::Baseline3b);
+        let out = ex.run(&Arc::new(data.clone()), &plan);
+        (cfg, data, plan, out.y)
+    }
+
+    #[test]
+    fn executed_gemm_is_bit_exact_vs_oracle() {
+        let (cfg, data, plan, y) = executed_case();
+        let rep = verify_oracle_sampled(&cfg.chain(), &plan, &data, &y, 1.0, 3);
+        assert!(rep.ok(), "{rep:?}");
+        assert_eq!(rep.checked, 35);
+    }
+
+    #[test]
+    fn executed_gemm_is_close_to_f64() {
+        let (_, data, _, y) = executed_case();
+        let reference: Vec<f64> = data.reference_f64().into_iter().flatten().collect();
+        let rep = verify_close(&y, &reference, f64_tolerance(data.shape.k));
+        assert!(rep.ok(), "{rep:?}");
+        assert!(rep.max_rel_err < 0.05);
+    }
+
+    #[test]
+    fn corrupted_output_is_caught() {
+        let (cfg, data, plan, mut y) = executed_case();
+        y[3] += 0.5;
+        let rep = verify_oracle_sampled(&cfg.chain(), &plan, &data, &y, 1.0, 3);
+        assert!(!rep.ok());
+    }
+
+    #[test]
+    fn tolerance_scales_with_depth() {
+        assert!(f64_tolerance(1024) > f64_tolerance(16));
+        assert!(f64_tolerance(1) > 0.0);
+    }
+}

@@ -1,0 +1,235 @@
+//! Block-level area model (NAND2-gate-equivalents).
+//!
+//! The paper's +9% area overhead for the skewed design (§IV) is
+//! attributed to "the extra pipeline registers required ... to pass
+//! intermediate exponent and LZA output values across the two pipeline
+//! stages, and the extra combinational logic of the exponent fix
+//! module".  This model *counts* exactly those structures:
+//!
+//! * register bit inventories are enumerated from the datapath structs
+//!   (what physically crosses each stage boundary in
+//!   [`crate::arith::fma`]);
+//! * combinational blocks use standard gate-count rules of thumb
+//!   (multiplier ∝ (m+1)², barrel shifter ∝ W·log₂W, adder/LZA ∝ W);
+//! * the skewed design replaces the baseline's post-add normalizer with
+//!   the Fig. 6 parallel left/right shifter pair on the psum path plus a
+//!   right-only aligner on the product path, and adds the fix block.
+//!
+//! Technology coefficients are calibrated once (documented in DESIGN.md
+//! §Energy-calibration) so the *ratios* between blocks match published
+//! FP-unit breakdowns; the paper's overhead percentages then emerge from
+//! the counted structures rather than being hard-coded — the tests below
+//! assert the emergent ratio lands in the published range.
+
+use crate::arith::fma::ChainCfg;
+use crate::pe::PipelineKind;
+
+/// Gate-count coefficients (NAND2-equivalents).  See module docs.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaCoeffs {
+    /// Multiplier GE per partial-product bit-cell: `mult = km·(m+1)²`.
+    pub km: f64,
+    /// Exponent adder/compare GE per exponent bit.
+    pub ke: f64,
+    /// Barrel shifter GE per (bit × mux-level): `sh = ksh·W·clog2(W)`.
+    pub ksh: f64,
+    /// Wide adder GE per bit.
+    pub ka: f64,
+    /// LZA tree GE per bit.
+    pub kl: f64,
+    /// Fix Sign & Exponent block GE per exponent bit.
+    pub kf: f64,
+    /// Flip-flop GE per register bit.
+    pub kreg: f64,
+    /// Fixed per-PE miscellaneous logic (sign, control, muxing).
+    pub misc: f64,
+}
+
+impl AreaCoeffs {
+    /// Calibrated defaults (45-nm-class standard-cell ratios).
+    pub const DEFAULT: AreaCoeffs = AreaCoeffs {
+        km: 5.0,
+        ke: 12.0,
+        ksh: 1.5,
+        ka: 7.0,
+        kl: 4.0,
+        kf: 5.0,
+        kreg: 6.0,
+        misc: 30.0,
+    };
+}
+
+fn clog2(n: u32) -> f64 {
+    (n.max(2) as f64).log2().ceil()
+}
+
+/// Per-PE area breakdown in gate equivalents.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeArea {
+    pub mult: f64,
+    pub exp: f64,
+    pub shifters: f64,
+    pub add: f64,
+    pub lza: f64,
+    pub fix: f64,
+    pub regs: f64,
+    pub misc: f64,
+}
+
+impl PeArea {
+    pub fn total(&self) -> f64 {
+        self.mult + self.exp + self.shifters + self.add + self.lza + self.fix + self.regs
+            + self.misc
+    }
+}
+
+/// Count the pipeline-register bits of one PE.
+///
+/// Shared: the East-flowing activation register and the stationary
+/// weight.  Stage-boundary contents follow the datapath structures:
+///
+/// * baseline s1→s2: raw product + sign, ê (computed max), alignment
+///   amount `d`; the incoming psum is read live from the predecessor's
+///   output register (it stays valid through this PE's stage 2).
+/// * baseline out: normalized sum (window) + sign + sticky + exponent.
+/// * skewed s1→s2: raw product + sign, **both** `e_M` and `ê_{i−1}`
+///   (paper: "e′_i ... comprises the two values e_Mi and ê_{i−1} that
+///   are being forwarded"), speculative `d′` (signed).
+/// * skewed out: **unnormalized** sum + sign + sticky + `ê_i` + `L_i`
+///   (the extra cross-PE forwarding the paper charges the area to).
+pub fn register_bits(kind: PipelineKind, cfg: &ChainCfg) -> u32 {
+    let inw = cfg.in_fmt.width(); // activation register
+    let w = cfg.window;
+    let e = cfg.in_fmt.exp_bits + 2; // exponent with overflow headroom
+    let m2 = 2 * (cfg.in_fmt.man_bits + 1); // raw product
+    let shamt = clog2(w) as u32 + 1; // alignment amount
+    let common = inw + inw; // a-reg + weight
+    match kind {
+        PipelineKind::Regular3a | PipelineKind::Baseline3b => {
+            let s1 = m2 + 1 + e + shamt;
+            let out = w + 1 + 1 + e;
+            common + s1 + out
+        }
+        PipelineKind::Skewed => {
+            let s1 = m2 + 1 + e + e + (shamt + 1);
+            let l = clog2(w) as u32;
+            let out = w + 1 + 1 + e + l;
+            common + s1 + out
+        }
+    }
+}
+
+/// Area model for a chain configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    pub cfg: ChainCfg,
+    pub coeffs: AreaCoeffs,
+}
+
+impl AreaModel {
+    pub fn new(cfg: ChainCfg) -> Self {
+        AreaModel { cfg, coeffs: AreaCoeffs::DEFAULT }
+    }
+
+    /// Per-PE area breakdown for a pipeline kind.
+    pub fn pe_area(&self, kind: PipelineKind) -> PeArea {
+        let c = &self.coeffs;
+        let m1 = self.cfg.in_fmt.man_bits + 1;
+        let e = self.cfg.in_fmt.exp_bits;
+        let w = self.cfg.window;
+        let shifter_unit = c.ksh * w as f64 * clog2(w);
+        let shifters = match kind {
+            // Fig. 3(a)/(b): one alignment shifter + one normalizer.
+            PipelineKind::Regular3a | PipelineKind::Baseline3b => 2.0 * shifter_unit,
+            // Fig. 6: psum path left ∥ right shifters (a direction-muxed
+            // pair sharing the shift-amount decode, ≈1.2× one unit) plus
+            // the right-only product aligner.
+            PipelineKind::Skewed => 2.2 * shifter_unit,
+        };
+        let fix = match kind {
+            PipelineKind::Skewed => c.kf * e as f64,
+            _ => 0.0,
+        };
+        PeArea {
+            mult: c.km * (m1 * m1) as f64,
+            exp: c.ke * e as f64,
+            shifters,
+            add: c.ka * w as f64,
+            lza: c.kl * w as f64,
+            fix,
+            regs: c.kreg * register_bits(kind, &self.cfg) as f64,
+            misc: c.misc,
+        }
+    }
+
+    /// Whole-array area: R×C PEs plus one rounding unit per column.
+    pub fn array_area(&self, kind: PipelineKind, rows: usize, cols: usize) -> f64 {
+        let pe = self.pe_area(kind).total();
+        let round_unit = self.coeffs.ka * self.cfg.window as f64
+            + self.coeffs.ksh * self.cfg.window as f64 * clog2(self.cfg.window);
+        pe * (rows * cols) as f64 + round_unit * cols as f64
+    }
+
+    /// Area overhead ratio of the skewed over the baseline design.
+    pub fn overhead(&self, rows: usize, cols: usize) -> f64 {
+        self.array_area(PipelineKind::Skewed, rows, cols)
+            / self.array_area(PipelineKind::Baseline3b, rows, cols)
+            - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+    #[test]
+    fn register_inventory_skewed_exceeds_baseline() {
+        let b = register_bits(PipelineKind::Baseline3b, &CFG);
+        let s = register_bits(PipelineKind::Skewed, &CFG);
+        assert!(s > b, "skewed regs {s} vs baseline {b}");
+        // The extra bits are one exponent field + L + sign-extension —
+        // the paper's "intermediate exponent and LZA output values".
+        assert_eq!(s - b, (CFG.in_fmt.exp_bits + 2) + 1 + 5);
+    }
+
+    #[test]
+    fn area_overhead_matches_paper() {
+        // §IV: "the proposed design requires 9% more area".
+        let m = AreaModel::new(CFG);
+        let oh = m.overhead(128, 128);
+        assert!(
+            (0.08..=0.10).contains(&oh),
+            "area overhead {oh:.4} outside the paper's 9% ± 1% band"
+        );
+    }
+
+    #[test]
+    fn multiplier_no_longer_dominates_in_bf16() {
+        // Motivating §II observation, area view: exponent-side logic
+        // (exp + shifters + fix) is comparable to the multiplier.
+        let m = AreaModel::new(CFG);
+        let pe = m.pe_area(PipelineKind::Baseline3b);
+        assert!(pe.shifters + pe.exp > pe.mult * 0.8);
+    }
+
+    #[test]
+    fn array_area_scales_with_pe_count() {
+        let m = AreaModel::new(CFG);
+        let a64 = m.array_area(PipelineKind::Baseline3b, 64, 64);
+        let a128 = m.array_area(PipelineKind::Baseline3b, 128, 128);
+        let ratio = a128 / a64;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn regular_and_baseline_have_equal_area() {
+        // Fig. 3(a) and 3(b) shuffle the same blocks between stages.
+        let m = AreaModel::new(CFG);
+        assert_eq!(
+            m.pe_area(PipelineKind::Regular3a).total(),
+            m.pe_area(PipelineKind::Baseline3b).total()
+        );
+    }
+}

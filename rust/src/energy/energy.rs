@@ -1,0 +1,168 @@
+//! Energy composition: `E = P(α) × T`.
+//!
+//! The paper's central evaluation result (Figs. 7/8) is that the skewed
+//! design — despite +9% area and +7% power — *reduces energy* because
+//! each layer finishes sooner.  Both effects are composed here:
+//!
+//! * the activity factor `α` rises as latency drops (same useful work in
+//!   fewer cycles), keeping dynamic energy roughly constant;
+//! * leakage + idle-clock energy scales with wall-clock and shrinks;
+//! * the skewed design's power premium applies to both.
+//!
+//! Early layers (large `M`) see almost no latency gain, so the power
+//! premium dominates → small energy *increase*.  Late layers (small `M`)
+//! gain `R−2` cycles per tile on short tiles → large energy *decrease*.
+//! This is exactly the per-layer shape of Figs. 7/8.
+
+use super::power::PowerModel;
+use crate::pe::PipelineKind;
+use crate::sa::tile::TilePlan;
+use crate::timing::model::{layer_timing, LayerTiming, TimingConfig};
+
+/// Energy (and its ingredients) for one layer on one pipeline kind.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerEnergy {
+    pub timing: LayerTiming,
+    /// Workload activity factor α ∈ [0,1].
+    pub alpha: f64,
+    /// Average array power at α (µW).
+    pub power_uw: f64,
+    /// Energy in µJ.
+    pub energy_uj: f64,
+}
+
+/// Evaluate one layer (tile plan) for a pipeline kind.
+pub fn layer_energy(
+    tcfg: &TimingConfig,
+    pmodel: &PowerModel,
+    kind: PipelineKind,
+    plan: &TilePlan,
+) -> LayerEnergy {
+    let timing = layer_timing(tcfg, kind, plan);
+    // Active-PE-cycles: every live-weight PE processes all M elements;
+    // stage-slots available: cycles × R × C.
+    let m = plan.shape.m as f64;
+    let live: f64 = plan.tiles.iter().map(|t| (t.k_len * t.n_len) as f64).sum();
+    let slots = timing.cycles as f64 * (tcfg.rows * tcfg.cols) as f64;
+    let alpha = if slots > 0.0 { (m * live / slots).clamp(0.0, 1.0) } else { 0.0 };
+    let power_uw = pmodel.array_power(kind, tcfg.rows, tcfg.cols, alpha);
+    let energy_uj = power_uw * timing.ns * 1e-9;
+    LayerEnergy { timing, alpha, power_uw, energy_uj }
+}
+
+/// Side-by-side comparison of the two designs on one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerComparison {
+    pub baseline: LayerEnergy,
+    pub skewed: LayerEnergy,
+}
+
+impl LayerComparison {
+    pub fn evaluate(tcfg: &TimingConfig, pmodel: &PowerModel, plan: &TilePlan) -> Self {
+        LayerComparison {
+            baseline: layer_energy(tcfg, pmodel, PipelineKind::Baseline3b, plan),
+            skewed: layer_energy(tcfg, pmodel, PipelineKind::Skewed, plan),
+        }
+    }
+
+    /// Relative latency change (negative = skewed faster).
+    pub fn latency_delta(&self) -> f64 {
+        self.skewed.timing.cycles as f64 / self.baseline.timing.cycles as f64 - 1.0
+    }
+
+    /// Relative energy change (negative = skewed saves energy).
+    pub fn energy_delta(&self) -> f64 {
+        self.skewed.energy_uj / self.baseline.energy_uj - 1.0
+    }
+}
+
+/// Network-level totals.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetworkTotals {
+    pub cycles_baseline: u64,
+    pub cycles_skewed: u64,
+    pub energy_baseline_uj: f64,
+    pub energy_skewed_uj: f64,
+}
+
+impl NetworkTotals {
+    pub fn add(&mut self, c: &LayerComparison) {
+        self.cycles_baseline += c.baseline.timing.cycles;
+        self.cycles_skewed += c.skewed.timing.cycles;
+        self.energy_baseline_uj += c.baseline.energy_uj;
+        self.energy_skewed_uj += c.skewed.energy_uj;
+    }
+
+    /// Whole-network latency change (the paper's −16% / −21%).
+    pub fn latency_delta(&self) -> f64 {
+        self.cycles_skewed as f64 / self.cycles_baseline as f64 - 1.0
+    }
+
+    /// Whole-network energy change (the paper's −8% / −11%).
+    pub fn energy_delta(&self) -> f64 {
+        self.energy_skewed_uj / self.energy_baseline_uj - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::fma::ChainCfg;
+    use crate::energy::area::AreaModel;
+    use crate::sa::tile::GemmShape;
+
+    fn setup() -> (TimingConfig, PowerModel) {
+        (TimingConfig::PAPER, PowerModel::new(AreaModel::new(ChainCfg::BF16_FP32)))
+    }
+
+    fn plan(m: usize, k: usize, n: usize) -> TilePlan {
+        TilePlan::new(GemmShape::new(m, k, n), 128, 128)
+    }
+
+    #[test]
+    fn early_layer_shape_energy_increases() {
+        // Large-M layer: latency gain ≈ 0, power premium dominates.
+        let (t, p) = setup();
+        let c = LayerComparison::evaluate(&t, &p, &plan(12544, 32, 64));
+        assert!(c.latency_delta().abs() < 0.02, "latency {}", c.latency_delta());
+        assert!(c.energy_delta() > 0.0, "early layers must cost energy: {}", c.energy_delta());
+        assert!(c.energy_delta() < 0.09);
+    }
+
+    #[test]
+    fn late_layer_shape_energy_drops() {
+        // Small-M, deep-K layer (7×7 spatial): big per-tile saving.
+        let (t, p) = setup();
+        let c = LayerComparison::evaluate(&t, &p, &plan(49, 512, 512));
+        assert!(c.latency_delta() < -0.15, "latency {}", c.latency_delta());
+        assert!(c.energy_delta() < -0.10, "energy {}", c.energy_delta());
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let (t, p) = setup();
+        let e = layer_energy(&t, &p, PipelineKind::Baseline3b, &plan(100, 128, 128));
+        let expect = e.power_uw * e.timing.ns * 1e-9;
+        assert!((e.energy_uj - expect).abs() < 1e-12);
+        assert!(e.alpha > 0.0 && e.alpha <= 1.0);
+    }
+
+    #[test]
+    fn alpha_reflects_occupancy() {
+        let (t, p) = setup();
+        // Full-array layer vs one that uses a 9-row sliver.
+        let full = layer_energy(&t, &p, PipelineKind::Baseline3b, &plan(1000, 128, 128));
+        let sliver = layer_energy(&t, &p, PipelineKind::Baseline3b, &plan(1000, 9, 128));
+        assert!(full.alpha > 4.0 * sliver.alpha, "{} vs {}", full.alpha, sliver.alpha);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let (t, p) = setup();
+        let mut tot = NetworkTotals::default();
+        tot.add(&LayerComparison::evaluate(&t, &p, &plan(49, 512, 512)));
+        tot.add(&LayerComparison::evaluate(&t, &p, &plan(196, 256, 256)));
+        assert!(tot.latency_delta() < 0.0);
+        assert!(tot.cycles_baseline > tot.cycles_skewed);
+    }
+}

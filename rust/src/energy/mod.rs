@@ -1,0 +1,14 @@
+//! Block-level area / power / energy models.
+//!
+//! The paper's +9% area and +7% power overheads *emerge* from counted
+//! registers and the fix-logic block (see [`area`]); energy composes
+//! power with the (simulator-validated) timing model so the per-layer
+//! gains/losses of Figs. 7/8 reproduce structurally.
+
+pub mod area;
+pub mod energy;
+pub mod power;
+
+pub use area::{AreaCoeffs, AreaModel, PeArea};
+pub use energy::{layer_energy, LayerComparison, LayerEnergy, NetworkTotals};
+pub use power::{PowerCoeffs, PowerModel};

@@ -1,0 +1,214 @@
+//! Static + activity-weighted dynamic power model.
+//!
+//! Power decomposes per block as `P = P_leak + α · P_dyn`, where
+//! `P_leak ∝ area`, `P_dyn ∝ area × sw × f_clk`, `sw` is a per-block
+//! switching weight, and `α ∈ [0,1]` is the workload activity factor
+//! (fraction of cycles the block processes live data — produced by the
+//! timing model / the cycle simulator's activity counters).
+//!
+//! The paper reports the skewed design consuming **7% more power on
+//! average** across CNN layers (§IV).  The skewed extras are
+//! exponent-side structures (fix adder, forwarding registers, the second
+//! shifter direction) whose toggle rates are below the datapath average —
+//! which is why the power overhead (+7%) lands under the area overhead
+//! (+9%).  The `sw` weights encode exactly that, and the emergent ratio
+//! is asserted in the tests.
+
+use super::area::{AreaModel, PeArea};
+use crate::pe::PipelineKind;
+
+/// Per-block switching weights (relative toggle × capacitance factors)
+/// and leakage fraction.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerCoeffs {
+    /// Multiplier array: highest toggle density.
+    pub sw_mult: f64,
+    /// Exponent add/compare.
+    pub sw_exp: f64,
+    /// Shifters (data-dependent, moderate).
+    pub sw_shift: f64,
+    /// Wide adder.
+    pub sw_add: f64,
+    /// LZA tree.
+    pub sw_lza: f64,
+    /// Fix Sign & Exponent block (short exponent words, low toggle).
+    pub sw_fix: f64,
+    /// Registers (clock power dominates; exponent regs toggle rarely).
+    pub sw_reg: f64,
+    /// Misc control.
+    pub sw_misc: f64,
+    /// Leakage power per GE relative to the dynamic unit (45-nm-class).
+    pub leak: f64,
+    /// Fraction of dynamic power that burns every cycle regardless of
+    /// useful occupancy: clock tree, register clock pins, and the
+    /// streaming datapath itself (a WS array shifts activations/psums
+    /// every cycle of a layer, drain included; only *spatially* unused
+    /// PEs carrying zeros save toggling).  No clock gating is assumed,
+    /// matching the paper's HLS-synthesized designs.
+    pub fixed_dyn: f64,
+    /// Absolute scale: µW per GE of dynamic weight at the reference
+    /// clock (1 GHz).  Sets units only; ratios are the claim.
+    pub uw_per_ge: f64,
+}
+
+impl PowerCoeffs {
+    pub const DEFAULT: PowerCoeffs = PowerCoeffs {
+        sw_mult: 1.00,
+        sw_exp: 0.55,
+        sw_shift: 0.60,
+        sw_add: 0.80,
+        sw_lza: 0.60,
+        sw_fix: 0.40,
+        sw_reg: 0.45,
+        sw_misc: 0.30,
+        leak: 0.06,
+        fixed_dyn: 0.45,
+        uw_per_ge: 0.55,
+    };
+}
+
+/// Power model over an [`AreaModel`].
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    pub area: AreaModel,
+    pub coeffs: PowerCoeffs,
+}
+
+/// A PE's power decomposition in µW at the reference clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PePower {
+    /// Leakage (burned every cycle).
+    pub leakage: f64,
+    /// Dynamic power at activity α = 1.
+    pub dynamic_max: f64,
+    /// Activity-independent fraction of `dynamic_max` (clock + streaming).
+    pub fixed_dyn: f64,
+}
+
+impl PePower {
+    /// Power at activity factor `alpha`.
+    pub fn at(&self, alpha: f64) -> f64 {
+        let a = alpha.clamp(0.0, 1.0);
+        self.leakage + self.dynamic_max * (self.fixed_dyn + (1.0 - self.fixed_dyn) * a)
+    }
+}
+
+impl PowerModel {
+    pub fn new(area: AreaModel) -> Self {
+        PowerModel { area, coeffs: PowerCoeffs::DEFAULT }
+    }
+
+    /// Dynamic weight (GE × sw) of a PE area breakdown.
+    fn dyn_weight(&self, a: &PeArea) -> f64 {
+        let c = &self.coeffs;
+        a.mult * c.sw_mult
+            + a.exp * c.sw_exp
+            + a.shifters * c.sw_shift
+            + a.add * c.sw_add
+            + a.lza * c.sw_lza
+            + a.fix * c.sw_fix
+            + a.regs * c.sw_reg
+            + a.misc * c.sw_misc
+    }
+
+    /// Per-PE power decomposition.
+    pub fn pe_power(&self, kind: PipelineKind) -> PePower {
+        let a = self.area.pe_area(kind);
+        PePower {
+            leakage: a.total() * self.coeffs.leak * self.coeffs.uw_per_ge,
+            dynamic_max: self.dyn_weight(&a) * self.coeffs.uw_per_ge,
+            fixed_dyn: self.coeffs.fixed_dyn,
+        }
+    }
+
+    /// Whole-array power (µW) at activity `alpha`; includes the per-
+    /// column rounding units at the South edge (counted as adder+shifter
+    /// at the column output rate).
+    pub fn array_power(&self, kind: PipelineKind, rows: usize, cols: usize, alpha: f64) -> f64 {
+        let pe = self.pe_power(kind);
+        let round_ge = self.area.array_area(kind, rows, cols)
+            - self.area.pe_area(kind).total() * (rows * cols) as f64;
+        let a = alpha.clamp(0.0, 1.0);
+        let round = round_ge
+            * self.coeffs.uw_per_ge
+            * (self.coeffs.leak
+                + self.coeffs.sw_add
+                    * (self.coeffs.fixed_dyn + (1.0 - self.coeffs.fixed_dyn) * a));
+        pe.at(alpha) * (rows * cols) as f64 + round
+    }
+
+    /// Average-power overhead of skewed over baseline at activity `alpha`
+    /// (the paper's "+7% more power on average" is at CNN-layer
+    /// activities).
+    pub fn overhead(&self, rows: usize, cols: usize, alpha: f64) -> f64 {
+        self.array_power(PipelineKind::Skewed, rows, cols, alpha)
+            / self.array_power(PipelineKind::Baseline3b, rows, cols, alpha)
+            - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::fma::ChainCfg;
+
+    fn model() -> PowerModel {
+        PowerModel::new(AreaModel::new(ChainCfg::BF16_FP32))
+    }
+
+    #[test]
+    fn power_overhead_matches_paper() {
+        // §IV: "consumes 7% more power, on average, when computing
+        // layers from state-of-the-art CNNs" — CNN layers run the array
+        // at mid-to-high activity.
+        let m = model();
+        for alpha in [0.5, 0.7, 0.9, 1.0] {
+            let oh = m.overhead(128, 128, alpha);
+            assert!(
+                (0.055..=0.085).contains(&oh),
+                "power overhead {oh:.4} at α={alpha} outside 7% ± 1.5%"
+            );
+        }
+    }
+
+    #[test]
+    fn power_overhead_below_area_overhead() {
+        // The extra structures are low-toggle exponent logic.
+        let m = model();
+        let area_oh = m.area.overhead(128, 128);
+        let pow_oh = m.overhead(128, 128, 1.0);
+        assert!(pow_oh < area_oh, "power {pow_oh} vs area {area_oh}");
+    }
+
+    #[test]
+    fn idle_floor_at_zero_activity() {
+        // With no clock gating the idle array still clocks and streams:
+        // the floor is leakage + the fixed dynamic fraction.
+        let m = model();
+        let p0 = m.array_power(PipelineKind::Baseline3b, 8, 8, 0.0);
+        let p1 = m.array_power(PipelineKind::Baseline3b, 8, 8, 1.0);
+        assert!(p0 > 0.0);
+        assert!(p1 > p0);
+        // Idle floor (leak + fixed_dyn) keeps the swing bounded.
+        let swing = p1 / p0;
+        assert!((1.5..2.5).contains(&swing), "activity swing {swing}");
+    }
+
+    #[test]
+    fn power_monotone_in_activity() {
+        let m = model();
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let p = m.array_power(PipelineKind::Skewed, 16, 16, i as f64 / 10.0);
+            assert!(p > prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn activity_clamps() {
+        let pe = model().pe_power(PipelineKind::Baseline3b);
+        assert_eq!(pe.at(2.0), pe.at(1.0));
+        assert_eq!(pe.at(-1.0), pe.at(0.0));
+    }
+}

@@ -1,0 +1,50 @@
+//! # skewsa — reduced-precision FP systolic arrays with skewed pipelines
+//!
+//! Library reproduction of Filippas et al., *"Reduced-Precision
+//! Floating-Point Arithmetic in Systolic Arrays with Skewed Pipelines"*,
+//! IEEE AICAS 2023.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`arith`] — bit-accurate reduced-precision FP arithmetic: format
+//!   codecs (Bfloat16, FP16, FP8-E4M3/E5M2, FP32), an exact softfloat
+//!   core, leading-zero anticipation, and the two *structural* chained
+//!   fused multiply-add datapaths the paper compares (the state-of-the-art
+//!   two-stage pipeline of Fig. 3(b) and the proposed skewed pipeline of
+//!   Figs. 5/6 with speculative exponent forwarding).
+//! * [`pe`] — cycle-level pipelined processing-element models built on the
+//!   datapaths.
+//! * [`sa`] — the cycle-accurate weight-stationary systolic-array
+//!   simulator: single-column reduction chains, full R×C arrays, dataflow
+//!   scheduling, GEMM tiling and cycle traces.
+//! * [`timing`] — the closed-form latency model, validated against the
+//!   cycle-accurate simulator by the test-suite.
+//! * [`energy`] — block-level area / power / energy models from which the
+//!   paper's +9% area and +7% power overheads *emerge*.
+//! * [`workloads`] — CNN layer tables (MobileNetV1, ResNet50) and their
+//!   im2col GEMM lowering.
+//! * [`coordinator`] — the L3 orchestrator: layer→tile scheduling, a
+//!   worker pool of simulated arrays, result assembly and golden
+//!   verification.
+//! * [`runtime`] — PJRT wrapper that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them on the CPU
+//!   client; the golden reference for end-to-end numerics.
+//! * [`report`] — emitters that regenerate every table and figure of the
+//!   paper's evaluation section.
+//! * [`util`] — std-only substrates (deterministic RNG, mini-JSON, CLI
+//!   parsing, table rendering) and a small property-testing harness.
+
+pub mod arith;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod pe;
+pub mod report;
+pub mod runtime;
+pub mod sa;
+pub mod timing;
+pub mod util;
+pub mod workloads;
+
+pub use arith::format::FpFormat;
+pub use pe::PipelineKind;

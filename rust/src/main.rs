@@ -1,0 +1,156 @@
+//! `skewsa` — leader entrypoint / CLI.
+//!
+//! Subcommands map one-to-one onto the experiment index (DESIGN.md §5):
+//!
+//! ```text
+//! skewsa fig7        # Fig. 7: MobileNet per-layer energy
+//! skewsa fig8        # Fig. 8: ResNet50 per-layer energy
+//! skewsa table1      # §IV area/power overheads
+//! skewsa headline    # whole-network latency/energy totals
+//! skewsa ablation    # Fig. 3a / 3b / skewed stage delays + latency
+//! skewsa formats     # Fig. 1 formats + delay inversion
+//! skewsa sweep       # design-space sweep: array size x format
+//! skewsa run         # coordinate a GEMM end-to-end (verify + report)
+//! skewsa viz         # pipeline interleaving trace (Figs. 4/6)
+//! ```
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::config::RunConfig;
+use skewsa::coordinator::Coordinator;
+use skewsa::energy::{AreaModel, PowerModel};
+use skewsa::pe::PipelineKind;
+use skewsa::report;
+use skewsa::sa::column::ColumnSim;
+use skewsa::sa::tile::GemmShape;
+use skewsa::util::cli::Cli;
+use skewsa::util::table::pct;
+use skewsa::workloads::gemm::GemmData;
+use std::sync::Arc;
+
+fn cli() -> Cli {
+    Cli::new(
+        "skewsa",
+        "reduced-precision FP systolic arrays with skewed pipelines (AICAS'23 reproduction)",
+    )
+    .opt("rows", "array rows (default: config / 128)", None)
+    .opt("cols", "array columns (default: config / 128)", None)
+    .opt("seed", "workload RNG seed", None)
+    .opt("workers", "coordinator worker threads", None)
+    .opt("verify", "oracle verification fraction (0..1)", None)
+    .opt("mode", "numeric mode: oracle|cycle", None)
+    .opt("config", "JSON config file", None)
+    .opt("m", "GEMM M (run)", Some("256"))
+    .opt("k", "GEMM K (run)", Some("256"))
+    .opt("n", "GEMM N (run)", Some("256"))
+    .opt("pipeline", "pipeline kind: baseline|skewed", Some("skewed"))
+    .opt("csv", "write the report table as CSV to this path", None)
+    .flag("quiet", "suppress per-layer rows")
+}
+
+fn main() {
+    let args = cli().parse_env();
+    let mut cfg = RunConfig::paper();
+    if let Some(path) = args.get("config") {
+        if let Err(e) = cfg.apply_file(path) {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }
+    }
+    cfg.apply_args(&args);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("headline");
+
+    let tcfg = cfg.timing();
+    let pmodel = PowerModel::new(AreaModel::new(cfg.chain()));
+
+    let rep = match cmd {
+        "fig7" => report::fig7_mobilenet(&tcfg, &pmodel),
+        "fig8" => report::fig8_resnet50(&tcfg, &pmodel),
+        "table1" => report::table1_area_power(cfg.chain(), cfg.rows, cfg.cols),
+        "headline" => report::headline(&tcfg, &pmodel),
+        "ablation" => report::ablation_pipelines(cfg.chain(), &tcfg),
+        "formats" => report::format_sweep(),
+        "sweep" => report::design_sweep(cfg.clock_ghz),
+        "run" => {
+            run_gemm(&cfg, &args);
+            return;
+        }
+        "viz" => {
+            viz(&cfg);
+            return;
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n\n{}", cli().usage());
+            std::process::exit(2);
+        }
+    };
+    if args.has("quiet") {
+        println!("== {} ==", rep.title);
+        if let Some(t) = &rep.totals {
+            println!(
+                "total: latency {} energy {}",
+                pct(t.latency_delta()),
+                pct(t.energy_delta())
+            );
+        }
+    } else {
+        print!("{}", rep.render());
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
+        eprintln!("wrote {path}");
+    }
+}
+
+fn run_gemm(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
+    let shape = GemmShape::new(
+        args.req_usize("m"),
+        args.req_usize("k"),
+        args.req_usize("n"),
+    );
+    let kind: PipelineKind =
+        args.get("pipeline").unwrap_or("skewed").parse().unwrap_or(PipelineKind::Skewed);
+    println!(
+        "coordinating GEMM {}x{}x{} on {}x{} ({}), workers={} mode={:?}",
+        shape.m, shape.k, shape.n, cfg.rows, cfg.cols, kind, cfg.workers, cfg.mode
+    );
+    let data = Arc::new(GemmData::cnn_like(shape, cfg.in_fmt, cfg.seed));
+    let coord = Coordinator::new(cfg.clone());
+    let t0 = std::time::Instant::now();
+    let r = coord.run_gemm(kind, &data);
+    let wall = t0.elapsed();
+    println!(
+        "done in {wall:?}: verify {}/{} ok, retries {}",
+        r.verify.checked - r.verify.failures,
+        r.verify.checked,
+        r.retries
+    );
+    println!(
+        "timing: baseline {} cyc, skewed {} cyc ({}); energy {:.2} uJ -> {:.2} uJ ({})",
+        r.comparison.baseline.timing.cycles,
+        r.comparison.skewed.timing.cycles,
+        pct(r.comparison.latency_delta()),
+        r.comparison.baseline.energy_uj,
+        r.comparison.skewed.energy_uj,
+        pct(r.comparison.energy_delta()),
+    );
+    if !r.verify.ok() {
+        eprintln!("VERIFICATION FAILED");
+        std::process::exit(1);
+    }
+}
+
+fn viz(cfg: &RunConfig) {
+    let chain = ChainCfg::new(cfg.in_fmt, cfg.out_fmt);
+    let rows = cfg.rows.clamp(2, 4);
+    println!("pipeline interleaving, {rows}-PE column, 3 elements (paper Figs. 4 & 6):\n");
+    for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        let weights: Vec<u64> = (0..rows).map(|i| cfg.in_fmt.from_f64(1.0 + i as f64)).collect();
+        let a: Vec<Vec<u64>> = (0..3)
+            .map(|m| (0..rows).map(|r| cfg.in_fmt.from_f64((m + r) as f64)).collect())
+            .collect();
+        let mut sim = ColumnSim::new(chain, kind, &weights, a).with_trace();
+        sim.run(1000).expect("viz run");
+        println!("--- {kind} (chain spacing {}) ---", kind.chain_spacing());
+        println!("{}", sim.trace().unwrap().render(16));
+    }
+}

@@ -1,0 +1,196 @@
+//! Cycle-level processing element with explicit stage registers.
+//!
+//! A [`CyclePe`] holds the two pipeline registers of the paper's
+//! two-stage FMA designs plus per-block activity counters.  The
+//! column/array simulators in [`crate::sa`] own the scheduling (when a
+//! stage fires, where the incoming partial sum is read from — which is
+//! exactly what distinguishes the baseline from the skewed organisation);
+//! the PE provides the register state and the datapath evaluation.
+
+use crate::arith::fma::{ChainCfg, PsumSignal};
+use crate::pe::PipelineKind;
+
+/// Stage-1 pipeline register: the element captured by the multiply /
+/// exponent-compute stage.
+#[derive(Clone, Copy, Debug)]
+pub struct S1Reg {
+    /// Element (input-row) index this PE is processing.
+    pub m: usize,
+    /// Activation bits (input format).
+    pub a: u64,
+    /// Incoming partial sum, captured at stage 1 — the baseline (Fig. 3b)
+    /// latches the whole normalized psum here.  The skewed PE does *not*
+    /// capture the sum at stage 1 (only the speculative exponent, which
+    /// is folded into the datapath step); it reads the raw sum from the
+    /// previous PE's output register during its stage 2.
+    pub psum: Option<PsumSignal>,
+}
+
+/// Output (stage-2) pipeline register: the partial sum handed South.
+#[derive(Clone, Copy, Debug)]
+pub struct OutReg {
+    pub m: usize,
+    pub sig: PsumSignal,
+    /// Consumed-by-successor mark; a second write over an untaken value
+    /// is a schedule violation (the psum would be lost in hardware).
+    pub taken: bool,
+}
+
+/// Per-block activity counters, accumulated across a run; the energy
+/// model converts these into dynamic-energy estimates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PeActivity {
+    /// Stage-1 evaluations (multiplier + exponent logic fired).
+    pub s1_evals: u64,
+    /// Stage-2 evaluations (align/add/LZA — and normalize or fix).
+    pub s2_evals: u64,
+    /// Cycles this PE had an empty stage 1 (pipeline bubble).
+    pub s1_bubbles: u64,
+    /// Cycles this PE had an empty stage 2.
+    pub s2_bubbles: u64,
+}
+
+impl PeActivity {
+    pub fn merge(&mut self, o: &PeActivity) {
+        self.s1_evals += o.s1_evals;
+        self.s2_evals += o.s2_evals;
+        self.s1_bubbles += o.s1_bubbles;
+        self.s2_bubbles += o.s2_bubbles;
+    }
+
+    /// Utilization in [0,1]: fraction of stage-slots doing useful work.
+    pub fn utilization(&self) -> f64 {
+        let busy = (self.s1_evals + self.s2_evals) as f64;
+        let total = busy + (self.s1_bubbles + self.s2_bubbles) as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            busy / total
+        }
+    }
+}
+
+/// A cycle-level PE: weight-stationary operand + the two stage registers.
+#[derive(Clone, Debug)]
+pub struct CyclePe {
+    pub kind: PipelineKind,
+    /// The stationary weight (input-format bits).
+    pub weight: u64,
+    pub s1: Option<S1Reg>,
+    pub out: Option<OutReg>,
+    pub activity: PeActivity,
+}
+
+impl CyclePe {
+    pub fn new(kind: PipelineKind, weight: u64) -> Self {
+        CyclePe { kind, weight, s1: None, out: None, activity: PeActivity::default() }
+    }
+
+    /// Evaluate stage 2 on the current stage-1 register, producing the
+    /// next output-register value.  `psum_late` supplies the partial sum
+    /// for organisations that read it at stage 2 (the skewed design reads
+    /// the previous PE's raw adder output + `L` here); the baseline uses
+    /// the psum captured in its own stage-1 register.
+    ///
+    /// Returns `None` when stage 1 is empty (bubble).
+    pub fn eval_stage2(
+        &mut self,
+        cfg: &ChainCfg,
+        psum_late: Option<&PsumSignal>,
+    ) -> Option<OutReg> {
+        let s1 = match self.s1 {
+            Some(s) => s,
+            None => {
+                self.activity.s2_bubbles += 1;
+                return None;
+            }
+        };
+        let zero = PsumSignal::zero(cfg);
+        let psum = match self.kind {
+            PipelineKind::Regular3a | PipelineKind::Baseline3b => {
+                s1.psum.as_ref().unwrap_or(&zero)
+            }
+            PipelineKind::Skewed => psum_late.unwrap_or(&zero),
+        };
+        let sig = self.kind.datapath().step(cfg, psum, s1.a, self.weight);
+        self.activity.s2_evals += 1;
+        Some(OutReg { m: s1.m, sig, taken: false })
+    }
+
+    /// Record a stage-1 acceptance (the multiplier fires this cycle).
+    pub fn accept_stage1(&mut self, next: S1Reg) -> S1Reg {
+        self.activity.s1_evals += 1;
+        next
+    }
+
+    /// Record an idle stage-1 cycle.
+    pub fn stage1_bubble(&mut self) {
+        self.activity.s1_bubbles += 1;
+    }
+
+    /// Replace the weight (weight-tile reload) and clear in-flight state.
+    pub fn reload(&mut self, weight: u64) {
+        self.weight = weight;
+        self.s1 = None;
+        self.out = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+
+    const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+    fn bf(x: f64) -> u64 {
+        FpFormat::BF16.from_f64(x)
+    }
+
+    #[test]
+    fn baseline_stage2_uses_captured_psum() {
+        let mut pe = CyclePe::new(PipelineKind::Baseline3b, bf(3.0));
+        let mut seed = PsumSignal::zero(&CFG);
+        // Pre-charge a psum of 10.0 via a forged capture.
+        use crate::arith::fma::{BaselineFmaPath, ChainDatapath};
+        seed = BaselineFmaPath.step(&CFG, &seed, bf(2.0), bf(5.0));
+        pe.s1 = Some(S1Reg { m: 0, a: bf(4.0), psum: Some(seed) });
+        let out = pe.eval_stage2(&CFG, None).unwrap();
+        assert_eq!(out.sig.val.value_f64(CFG.window), 10.0 + 12.0);
+        assert_eq!(pe.activity.s2_evals, 1);
+    }
+
+    #[test]
+    fn skewed_stage2_uses_late_psum() {
+        use crate::arith::fma::{ChainDatapath, SkewedFmaPath};
+        let mut pe = CyclePe::new(PipelineKind::Skewed, bf(3.0));
+        let mut psum = PsumSignal::zero(&CFG);
+        psum = SkewedFmaPath.step(&CFG, &psum, bf(2.0), bf(5.0));
+        pe.s1 = Some(S1Reg { m: 0, a: bf(4.0), psum: None });
+        let out = pe.eval_stage2(&CFG, Some(&psum)).unwrap();
+        assert_eq!(out.sig.val.value_f64(CFG.window), 22.0);
+    }
+
+    #[test]
+    fn empty_stage1_is_a_bubble() {
+        let mut pe = CyclePe::new(PipelineKind::Baseline3b, bf(1.0));
+        assert!(pe.eval_stage2(&CFG, None).is_none());
+        assert_eq!(pe.activity.s2_bubbles, 1);
+    }
+
+    #[test]
+    fn utilization_mixes_evals_and_bubbles() {
+        let a = PeActivity { s1_evals: 3, s2_evals: 3, s1_bubbles: 1, s2_bubbles: 1 };
+        assert!((a.utilization() - 0.75).abs() < 1e-12);
+        assert_eq!(PeActivity::default().utilization(), 0.0);
+    }
+
+    #[test]
+    fn reload_clears_pipeline_state() {
+        let mut pe = CyclePe::new(PipelineKind::Skewed, bf(1.0));
+        pe.s1 = Some(S1Reg { m: 0, a: bf(1.0), psum: None });
+        pe.reload(bf(2.0));
+        assert!(pe.s1.is_none());
+        assert_eq!(pe.weight, bf(2.0));
+    }
+}

@@ -1,0 +1,134 @@
+//! Processing-element models.
+//!
+//! * [`PipelineKind`] — the three PE micro-architectures under study:
+//!   the classic full-precision-oriented pipeline (Fig. 3a), the
+//!   state-of-the-art reduced-precision pipeline (Fig. 3b, the paper's
+//!   baseline), and the proposed skewed pipeline (Figs. 5/6).
+//! * [`delay`] — the per-stage combinational delay model that captures
+//!   the paper's motivating observation: in reduced precision the
+//!   exponent/alignment logic no longer hides under the multiplier.
+//! * [`cycle`] — the cycle-level PE with explicit stage registers, used
+//!   by the cycle-accurate column/array simulators in [`crate::sa`].
+
+pub mod cycle;
+pub mod delay;
+
+use crate::arith::fma::{BaselineFmaPath, ChainDatapath, SkewedFmaPath};
+
+/// The PE pipeline organisations compared in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PipelineKind {
+    /// Fig. 3(a): multiply ∥ (exponent compute + align) in stage 1,
+    /// add + LZA + normalize in stage 2.  The traditional organisation —
+    /// assumes the multiplier delay hides the exponent/align logic, which
+    /// fails for reduced-precision formats (§II).
+    Regular3a,
+    /// Fig. 3(b): multiply ∥ exponent compute in stage 1; align + add +
+    /// LZA + normalize in stage 2.  The state-of-the-art reference design
+    /// for reduced precision; chains serialize with spacing 2 (§III-A).
+    Baseline3b,
+    /// Figs. 5/6: speculative exponent forwarding + fix logic + retimed
+    /// normalization.  Consecutive PEs overlap stages; spacing 1.
+    Skewed,
+}
+
+impl PipelineKind {
+    /// All kinds, in presentation order.
+    pub const ALL: [PipelineKind; 3] =
+        [PipelineKind::Regular3a, PipelineKind::Baseline3b, PipelineKind::Skewed];
+
+    /// Report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PipelineKind::Regular3a => "regular-3a",
+            PipelineKind::Baseline3b => "baseline-3b",
+            PipelineKind::Skewed => "skewed",
+        }
+    }
+
+    /// Chain spacing `S`: cycles between PE *i* starting an element and
+    /// PE *i+1* being able to start the same element (§III; DESIGN §6).
+    pub fn chain_spacing(&self) -> u64 {
+        match self {
+            PipelineKind::Regular3a | PipelineKind::Baseline3b => 2,
+            PipelineKind::Skewed => 1,
+        }
+    }
+
+    /// Pipeline depth of one PE (all three are two-stage designs at the
+    /// paper's reduced-precision operating point).
+    pub fn stages(&self) -> u64 {
+        2
+    }
+
+    /// Extra pipeline cycles at the column foot before rounding: the
+    /// skewed column needs the extra addition stage of Fig. 6 (last
+    /// paragraph of §III-B).
+    pub fn column_tail(&self) -> u64 {
+        match self {
+            PipelineKind::Regular3a | PipelineKind::Baseline3b => 0,
+            PipelineKind::Skewed => 1,
+        }
+    }
+
+    /// The value-level datapath executed by this PE kind.  Fig. 3(a) and
+    /// Fig. 3(b) differ only in *where* alignment happens in time, not in
+    /// the computed value, so both use the baseline datapath; the skewed
+    /// PE uses the speculative datapath (bit-identical by construction —
+    /// enforced in tests).
+    pub fn datapath(&self) -> &'static dyn ChainDatapath {
+        match self {
+            PipelineKind::Regular3a | PipelineKind::Baseline3b => &BaselineFmaPath,
+            PipelineKind::Skewed => &SkewedFmaPath,
+        }
+    }
+
+    /// True for the paper's proposed design.
+    pub fn is_skewed(&self) -> bool {
+        matches!(self, PipelineKind::Skewed)
+    }
+}
+
+impl std::fmt::Display for PipelineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for PipelineKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "regular-3a" | "regular" | "3a" => Ok(PipelineKind::Regular3a),
+            "baseline-3b" | "baseline" | "3b" => Ok(PipelineKind::Baseline3b),
+            "skewed" | "skew" => Ok(PipelineKind::Skewed),
+            _ => Err(format!("unknown pipeline kind '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spacing_matches_paper() {
+        assert_eq!(PipelineKind::Baseline3b.chain_spacing(), 2);
+        assert_eq!(PipelineKind::Regular3a.chain_spacing(), 2);
+        assert_eq!(PipelineKind::Skewed.chain_spacing(), 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in PipelineKind::ALL {
+            assert_eq!(k.name().parse::<PipelineKind>().unwrap(), k);
+        }
+        assert!("nope".parse::<PipelineKind>().is_err());
+    }
+
+    #[test]
+    fn skewed_has_column_tail() {
+        assert_eq!(PipelineKind::Skewed.column_tail(), 1);
+        assert_eq!(PipelineKind::Baseline3b.column_tail(), 0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Artifact registry: the manifest written by `python/compile/aot.py`.
+//!
+//! `artifacts/manifest.json` maps artifact names to HLO-text paths and
+//! their parameter/result shapes:
+//!
+//! ```json
+//! {
+//!   "gemm_bf16_64x128x64": {
+//!     "path": "gemm_bf16_64x128x64.hlo.txt",
+//!     "params": [[64, 128], [128, 64]],
+//!     "result": [64, 64]
+//!   }
+//! }
+//! ```
+//!
+//! The registry also performs the staleness check backing the Makefile's
+//! "`make artifacts` is a no-op when inputs are unchanged" contract: the
+//! manifest records the content fingerprint of the python compile
+//! sources at build time.
+
+use crate::util::mini_json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub result_shape: Vec<usize>,
+}
+
+/// The artifact registry.
+#[derive(Clone, Debug, Default)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactEntry>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("non-integer dim")))
+        .collect()
+}
+
+impl Artifacts {
+    /// Default artifact directory: `$SKEWSA_ARTIFACTS` or `artifacts/`
+    /// next to the working directory.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SKEWSA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load the manifest from `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {manifest:?}"))?;
+        let obj = match &j {
+            Json::Obj(m) => m,
+            _ => return Err(anyhow!("manifest root is not an object")),
+        };
+        let mut entries = BTreeMap::new();
+        for (name, spec) in obj {
+            if name.starts_with('_') {
+                continue; // metadata keys (_sources_fingerprint, …)
+            }
+            let path = dir.join(
+                spec.get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact '{name}': missing path"))?,
+            );
+            let params = spec
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact '{name}': missing params"))?
+                .iter()
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()?;
+            let result = parse_shape(
+                spec.get("result").ok_or_else(|| anyhow!("artifact '{name}': missing result"))?,
+            )?;
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    path,
+                    param_shapes: params,
+                    result_shape: result,
+                },
+            );
+        }
+        Ok(Artifacts { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Load from the default directory, or `None` when artifacts have not
+    /// been built (callers degrade to oracle-only verification).
+    pub fn try_default() -> Option<Artifacts> {
+        let dir = Self::default_dir();
+        Self::load(&dir).ok()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Find a GEMM artifact matching an `(m, k, n)` shape, if present.
+    pub fn find_gemm(&self, m: usize, k: usize, n: usize) -> Option<&ArtifactEntry> {
+        self.entries.values().find(|e| {
+            e.param_shapes.len() == 2
+                && e.param_shapes[0] == [m, k]
+                && e.param_shapes[1] == [k, n]
+                && e.result_shape == [m, n]
+        })
+    }
+
+    /// Every artifact file exists on disk.
+    pub fn all_present(&self) -> bool {
+        self.entries.values().all(|e| e.path.is_file())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("skewsa_test_{}", std::process::id()));
+        write_manifest(
+            &dir,
+            r#"{
+                "_sources_fingerprint": "abc",
+                "gemm_bf16_4x8x4": {
+                    "path": "g.hlo.txt",
+                    "params": [[4, 8], [8, 4]],
+                    "result": [4, 4]
+                }
+            }"#,
+        );
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.len(), 1);
+        let e = a.get("gemm_bf16_4x8x4").unwrap();
+        assert_eq!(e.param_shapes, vec![vec![4, 8], vec![8, 4]]);
+        assert_eq!(e.result_shape, vec![4, 4]);
+        assert!(a.find_gemm(4, 8, 4).is_some());
+        assert!(a.find_gemm(4, 8, 5).is_none());
+        assert!(!a.all_present()); // file not written
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_none() {
+        let dir = std::env::temp_dir().join("skewsa_definitely_missing");
+        assert!(Artifacts::load(&dir).is_err());
+    }
+
+    #[test]
+    fn malformed_entries_error() {
+        let dir = std::env::temp_dir().join(format!("skewsa_test_bad_{}", std::process::id()));
+        write_manifest(&dir, r#"{"x": {"path": "p", "params": [[1, "a"]], "result": [1]}}"#);
+        assert!(Artifacts::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,134 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
+//! on the CPU client.
+//!
+//! This is the only place the `xla` crate is touched.  Artifacts are HLO
+//! **text** (see `python/compile/aot.py` and DESIGN.md §3 — jax ≥ 0.5
+//! serialized protos are rejected by xla_extension 0.5.1, text
+//! round-trips cleanly).  All artifact entry points take f32 buffers and
+//! perform the bf16 casts *inside* the lowered computation, so the rust
+//! side never constructs reduced-precision literals.
+//!
+//! Python never runs at request time: `make artifacts` is the compile
+//! path; this module is the serve path.
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    /// Declared parameter shapes (row-major dims), for call validation.
+    pub param_shapes: Vec<Vec<usize>>,
+    /// Declared result shape.
+    pub result_shape: Vec<usize>,
+    pub name: String,
+}
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Construct a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    ///
+    /// `param_shapes`/`result_shape` come from the artifact manifest
+    /// (written by `aot.py`) — the HLO parser does not expose them in a
+    /// stable way through the crate API, so the manifest is the source
+    /// of truth and execution validates against it.
+    pub fn load_hlo_text(
+        &self,
+        name: &str,
+        path: &std::path::Path,
+        param_shapes: Vec<Vec<usize>>,
+        result_shape: Vec<usize>,
+    ) -> Result<LoadedExec> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        Ok(LoadedExec { exe, param_shapes, result_shape, name: name.to_string() })
+    }
+}
+
+impl LoadedExec {
+    /// Execute on f32 inputs (row-major, shapes must match the manifest).
+    /// Returns the flattened f32 result.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so the raw result
+    /// is a 1-tuple that gets unwrapped here.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        if inputs.len() != self.param_shapes.len() {
+            return Err(anyhow!(
+                "artifact '{}' expects {} params, got {}",
+                self.name,
+                self.param_shapes.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let want = &self.param_shapes[i];
+            if *shape != want.as_slice() {
+                return Err(anyhow!(
+                    "artifact '{}' param {i}: shape {shape:?} != manifest {want:?}",
+                    self.name
+                ));
+            }
+            let n: usize = shape.iter().product();
+            if data.len() != n {
+                return Err(anyhow!("param {i}: {} elements for shape {shape:?}", data.len()));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping param {i}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{}'", self.name))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let values = out.to_vec::<f32>().context("reading f32 result")?;
+        let expect: usize = self.result_shape.iter().product();
+        if values.len() != expect {
+            return Err(anyhow!(
+                "artifact '{}': result has {} elements, manifest says {expect}",
+                self.name,
+                values.len()
+            ));
+        }
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need built artifacts live in
+    // `tests/integration_runtime.rs` (and skip gracefully when
+    // `make artifacts` has not run).  Here: client construction only.
+    #[test]
+    fn cpu_client_constructs() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+    }
+}

@@ -1,0 +1,56 @@
+//! PJRT runtime layer (L3 ↔ L2 boundary).
+//!
+//! Loads the AOT artifacts produced once by `make artifacts`
+//! (`python/compile/aot.py`) and executes them on the CPU PJRT client —
+//! the golden numeric reference for end-to-end verification.  Python is
+//! never on this path.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactEntry, Artifacts};
+pub use client::{LoadedExec, Runtime};
+
+use anyhow::Result;
+
+/// Convenience bundle: registry + client + loaded executables on demand.
+pub struct GoldenRuntime {
+    pub artifacts: Artifacts,
+    pub runtime: Runtime,
+}
+
+impl GoldenRuntime {
+    /// Open the default artifact directory; `None` if artifacts are not
+    /// built (callers fall back to oracle verification).
+    pub fn try_open() -> Option<GoldenRuntime> {
+        let artifacts = Artifacts::try_default()?;
+        let runtime = Runtime::cpu().ok()?;
+        Some(GoldenRuntime { artifacts, runtime })
+    }
+
+    /// Load an artifact by name.
+    pub fn load(&self, name: &str) -> Result<LoadedExec> {
+        let e = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+        self.runtime.load_hlo_text(name, &e.path, e.param_shapes.clone(), e.result_shape.clone())
+    }
+
+    /// Run a GEMM artifact matching `(m,k,n)` on f32 data, if available.
+    pub fn run_gemm_f32(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        w: &[f32],
+    ) -> Result<Option<Vec<f32>>> {
+        let Some(e) = self.artifacts.find_gemm(m, k, n) else {
+            return Ok(None);
+        };
+        let exe = self.load(&e.name)?;
+        let y = exe.run_f32(&[(a, &[m, k]), (w, &[k, n])])?;
+        Ok(Some(y))
+    }
+}

@@ -1,0 +1,411 @@
+//! Cycle-accurate R×C weight-stationary array.
+//!
+//! Composes the per-column chain discipline of [`crate::sa::column`]
+//! across `C` columns with the East-flowing activation wavefront: one
+//! activation register per hop, so column `c` sees `a[m][r]` exactly one
+//! cycle after column `c−1`.  The array computes one weight-tile GEMM
+//! `A(M×R) × W(R×C) → Y(M×C)` with the paper's numeric semantics
+//! (double-width partial sums, one rounding per column output).
+//!
+//! For the paper-scale 128×128 array the per-tile simulation cost is
+//! ~10⁷ PE-cycles; the test-suite validates bit-exactness and latency on
+//! arrays up to 64×64 and per-column at depth 128, while whole-CNN runs
+//! use the (sim-validated) closed-form timing model — see DESIGN.md §2.
+
+use crate::arith::accum::{ColumnOracle, RoundingUnit};
+use crate::arith::fma::{ChainCfg, PsumSignal};
+use crate::pe::cycle::{CyclePe, OutReg, PeActivity, S1Reg};
+use crate::pe::PipelineKind;
+use crate::sa::column::SimError;
+use crate::sa::dataflow::WsSchedule;
+use std::collections::VecDeque;
+
+/// One rounded South-edge output of the array.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArrayOutput {
+    pub m: usize,
+    pub col: usize,
+    pub bits: u64,
+    pub cycle: u64,
+}
+
+/// Cycle-accurate R×C array simulator.
+pub struct ArraySim {
+    pub cfg: ChainCfg,
+    pub kind: PipelineKind,
+    sched: WsSchedule,
+    /// PE grid, row-major: `pes[r * cols + c]`.
+    pes: Vec<CyclePe>,
+    rows: usize,
+    cols: usize,
+    /// Activations `a[m][r]`.
+    a: Vec<Vec<u64>>,
+    /// Per-PE next expected element.
+    next_feed: Vec<usize>,
+    cycle: u64,
+    outputs: Vec<ArrayOutput>,
+    round_q: Vec<VecDeque<(u64, usize, PsumSignal)>>,
+    produced: usize,
+    pub stalls: u64,
+}
+
+impl ArraySim {
+    /// `weights[r][c]`; activations `a[m][r]`.
+    pub fn new(cfg: ChainCfg, kind: PipelineKind, weights: &[Vec<u64>], a: Vec<Vec<u64>>) -> Self {
+        cfg.check();
+        let rows = weights.len();
+        assert!(rows >= 1, "empty array");
+        let cols = weights[0].len();
+        assert!(cols >= 1 && weights.iter().all(|w| w.len() == cols));
+        for row in &a {
+            assert_eq!(row.len(), rows, "activation row width != array depth");
+        }
+        let mut pes = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                pes.push(CyclePe::new(kind, weights[r][c]));
+            }
+        }
+        let sched = WsSchedule::new(kind, rows, cols, a.len());
+        ArraySim {
+            cfg,
+            kind,
+            sched,
+            pes,
+            rows,
+            cols,
+            a,
+            next_feed: vec![0; rows * cols],
+            cycle: 0,
+            outputs: Vec::new(),
+            round_q: vec![VecDeque::new(); cols],
+            produced: 0,
+            stalls: 0,
+        }
+    }
+
+    #[inline]
+    fn idx(&self, r: usize, c: usize) -> usize {
+        r * self.cols + c
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn m_total(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn schedule(&self) -> &WsSchedule {
+        &self.sched
+    }
+
+    /// Advance one clock cycle.
+    pub fn tick(&mut self) -> Result<(), SimError> {
+        let (rows, cols, t) = (self.rows, self.cols, self.cycle);
+
+        // ---- stage-2 evaluation (current registers) --------------------
+        let mut next_out: Vec<Option<OutReg>> = vec![None; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let i = self.idx(r, c);
+                let psum_late = if self.kind.is_skewed() && r > 0 {
+                    let up = self.idx(r - 1, c);
+                    match (&self.pes[i].s1, &self.pes[up].out) {
+                        (Some(s1), Some(prev)) => {
+                            if prev.m != s1.m {
+                                return Err(SimError::OutOfOrder {
+                                    pe: i,
+                                    got: prev.m,
+                                    want: s1.m,
+                                });
+                            }
+                            Some(prev.sig)
+                        }
+                        (Some(_), None) => unreachable!("skewed stage-2 with no upstream psum"),
+                        _ => None,
+                    }
+                } else {
+                    None
+                };
+                if self.kind.is_skewed() && r > 0 && self.pes[i].s1.is_some() {
+                    let up = self.idx(r - 1, c);
+                    if let Some(prev) = self.pes[up].out.as_mut() {
+                        prev.taken = true;
+                    }
+                }
+                next_out[i] = self.pes[i].eval_stage2(&self.cfg, psum_late.as_ref());
+            }
+        }
+
+        // ---- South-edge rounding per column ----------------------------
+        for c in 0..cols {
+            let i = self.idx(rows - 1, c);
+            if let Some(last) = self.pes[i].out.as_mut() {
+                if !last.taken {
+                    let ready = t + self.kind.column_tail();
+                    self.round_q[c].push_back((ready, last.m, last.sig));
+                    last.taken = true;
+                }
+            }
+            while let Some(&(ready, m, sig)) = self.round_q[c].front() {
+                if ready > t {
+                    break;
+                }
+                self.round_q[c].pop_front();
+                let bits = RoundingUnit::new(self.cfg).round(&sig);
+                self.outputs.push(ArrayOutput { m, col: c, bits, cycle: ready });
+                self.produced += 1;
+            }
+        }
+
+        // ---- stage-1 acceptance ----------------------------------------
+        let mut next_s1: Vec<Option<S1Reg>> = vec![None; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let i = self.idx(r, c);
+                let want = self.next_feed[i];
+                if want >= self.m_total() {
+                    self.pes[i].stage1_bubble();
+                    continue;
+                }
+                let (ready, captured): (bool, Option<PsumSignal>) = if r == 0 {
+                    (true, None)
+                } else if self.kind.is_skewed() {
+                    let up = self.idx(r - 1, c);
+                    match self.pes[up].s1 {
+                        Some(s) if s.m == want => (true, None),
+                        Some(s) if s.m > want => {
+                            return Err(SimError::OutOfOrder { pe: i, got: s.m, want })
+                        }
+                        _ => (false, None),
+                    }
+                } else {
+                    let up = self.idx(r - 1, c);
+                    match self.pes[up].out {
+                        Some(o) if o.m == want && !o.taken => (true, Some(o.sig)),
+                        Some(o) if o.m > want => {
+                            return Err(SimError::OutOfOrder { pe: i, got: o.m, want })
+                        }
+                        _ => (false, None),
+                    }
+                };
+                if !ready {
+                    self.pes[i].stage1_bubble();
+                    continue;
+                }
+                // Activation wavefront arrival at column c.
+                if self.sched.arrive_cycle(r, c, want) > t {
+                    // Row 0 waiting on the wavefront is normal fill; a
+                    // *chain-ready* PE deeper down waiting on its
+                    // activation is a schedule skew (psum at risk).
+                    if r > 0 {
+                        self.stalls += 1;
+                    }
+                    self.pes[i].stage1_bubble();
+                    continue;
+                }
+                if r > 0 && !self.kind.is_skewed() {
+                    let up = self.idx(r - 1, c);
+                    self.pes[up].out.as_mut().unwrap().taken = true;
+                }
+                let reg = S1Reg { m: want, a: self.a[want][r], psum: captured };
+                next_s1[i] = Some(self.pes[i].accept_stage1(reg));
+                self.next_feed[i] = want + 1;
+            }
+        }
+
+        // ---- commit -----------------------------------------------------
+        for i in 0..rows * cols {
+            if let Some(new) = next_out[i] {
+                if let Some(old) = &self.pes[i].out {
+                    if !old.taken {
+                        return Err(SimError::PsumOverrun { pe: i, cycle: t, lost_m: old.m });
+                    }
+                }
+                self.pes[i].out = Some(new);
+            }
+            self.pes[i].s1 = next_s1[i];
+        }
+        self.cycle = t + 1;
+        Ok(())
+    }
+
+    /// Run to completion (all `M×C` outputs) within `max_cycles`.
+    pub fn run(&mut self, max_cycles: u64) -> Result<(), SimError> {
+        let expected = self.m_total() * self.cols;
+        while self.produced < expected {
+            if self.cycle >= max_cycles {
+                return Err(SimError::Timeout {
+                    cycle: self.cycle,
+                    produced: self.produced,
+                    expected,
+                });
+            }
+            self.tick()?;
+        }
+        Ok(())
+    }
+
+    pub fn outputs(&self) -> &[ArrayOutput] {
+        &self.outputs
+    }
+
+    /// Result matrix `Y[m][c]` as output-format bit patterns.
+    pub fn result_bits(&self) -> Vec<Vec<u64>> {
+        let mut y = vec![vec![0u64; self.cols]; self.m_total()];
+        for o in &self.outputs {
+            y[o.m][o.col] = o.bits;
+        }
+        y
+    }
+
+    /// Result matrix as f32 (requires FP32 output format).
+    pub fn result_f32(&self) -> Vec<Vec<f32>> {
+        self.result_bits()
+            .into_iter()
+            .map(|row| row.into_iter().map(|b| f32::from_bits(b as u32)).collect())
+            .collect()
+    }
+
+    /// Total cycles (valid after [`ArraySim::run`]).
+    pub fn cycles(&self) -> u64 {
+        self.outputs.iter().map(|o| o.cycle + 1).max().unwrap_or(0)
+    }
+
+    /// Merged activity across all PEs.
+    pub fn activity(&self) -> PeActivity {
+        let mut acc = PeActivity::default();
+        for pe in &self.pes {
+            acc.merge(&pe.activity);
+        }
+        acc
+    }
+
+    /// Golden result via the column oracle (same semantics, no timing).
+    pub fn oracle_bits(cfg: &ChainCfg, weights: &[Vec<u64>], a: &[Vec<u64>]) -> Vec<Vec<u64>> {
+        let rows = weights.len();
+        let cols = weights[0].len();
+        a.iter()
+            .map(|arow| {
+                (0..cols)
+                    .map(|c| {
+                        let mut o = ColumnOracle::new(*cfg);
+                        for r in 0..rows {
+                            o.mac(arow[r], weights[r][c]);
+                        }
+                        o.result()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::util::rng::Rng;
+
+    const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+    fn bf(x: f64) -> u64 {
+        FpFormat::BF16.from_f64(x)
+    }
+
+    fn random_case(
+        rng: &mut Rng,
+        m: usize,
+        r: usize,
+        c: usize,
+    ) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
+        let w: Vec<Vec<u64>> = (0..r)
+            .map(|_| (0..c).map(|_| bf(rng.range_i64(-8, 8) as f64)).collect())
+            .collect();
+        let a: Vec<Vec<u64>> = (0..m)
+            .map(|_| (0..r).map(|_| bf(rng.range_i64(-16, 16) as f64)).collect())
+            .collect();
+        (w, a)
+    }
+
+    #[test]
+    fn array_matches_oracle_both_kinds() {
+        let mut rng = Rng::new(0xa11a);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            for (m, r, c) in [(1usize, 1usize, 1usize), (4, 3, 2), (8, 8, 8), (5, 16, 4)] {
+                let (w, a) = random_case(&mut rng, m, r, c);
+                let want = ArraySim::oracle_bits(&CFG, &w, &a);
+                let mut sim = ArraySim::new(CFG, kind, &w, a);
+                sim.run(100_000).unwrap();
+                assert_eq!(sim.result_bits(), want, "{kind} m={m} r={r} c={c}");
+                assert_eq!(sim.stalls, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn array_latency_matches_closed_form() {
+        let mut rng = Rng::new(0xbee);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            for (m, r, c) in [(4usize, 4usize, 4usize), (16, 8, 2), (2, 2, 16)] {
+                let (w, a) = random_case(&mut rng, m, r, c);
+                let mut sim = ArraySim::new(CFG, kind, &w, a);
+                sim.run(100_000).unwrap();
+                let sched = WsSchedule::new(kind, r, c, m);
+                assert_eq!(sim.cycles(), sched.total_cycles(), "{kind} m={m} r={r} c={c}");
+                for o in sim.outputs() {
+                    assert_eq!(o.cycle, sched.output_cycle(o.col, o.m));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mid_size_array_bit_exact() {
+        let mut rng = Rng::new(0x3232);
+        let (w, a) = random_case(&mut rng, 16, 32, 32);
+        let want = ArraySim::oracle_bits(&CFG, &w, &a);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let mut sim = ArraySim::new(CFG, kind, &w, a.clone());
+            sim.run(1_000_000).unwrap();
+            assert_eq!(sim.result_bits(), want, "{kind}");
+        }
+    }
+
+    #[test]
+    fn skewed_beats_baseline_by_r_minus_2() {
+        let mut rng = Rng::new(5);
+        let (w, a) = random_case(&mut rng, 8, 24, 4);
+        let mut b = ArraySim::new(CFG, PipelineKind::Baseline3b, &w, a.clone());
+        let mut s = ArraySim::new(CFG, PipelineKind::Skewed, &w, a);
+        b.run(100_000).unwrap();
+        s.run(100_000).unwrap();
+        assert_eq!(b.cycles() - s.cycles(), 24 - 2);
+    }
+
+    #[test]
+    fn fractional_values_bit_exact() {
+        // Non-integer values exercise alignment loss + sticky paths.
+        let mut rng = Rng::new(0xf00d);
+        let r = 16;
+        let c = 8;
+        let w: Vec<Vec<u64>> = (0..r)
+            .map(|_| (0..c).map(|_| bf(rng.normal_scaled(0.0, 1.0))).collect())
+            .collect();
+        let a: Vec<Vec<u64>> = (0..8)
+            .map(|_| (0..r).map(|_| bf(rng.normal_scaled(0.0, 2.0))).collect())
+            .collect();
+        let want = ArraySim::oracle_bits(&CFG, &w, &a);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let mut sim = ArraySim::new(CFG, kind, &w, a.clone());
+            sim.run(100_000).unwrap();
+            assert_eq!(sim.result_bits(), want, "{kind}");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Weight-stationary dataflow scheduling.
+//!
+//! Generates the West-edge input staircase ("skew") and the derived
+//! fill/stream/drain phase boundaries for a given PE pipeline kind.
+//! The paper's central timing effect lives here: the baseline pipeline
+//! forces a chain spacing of **2** cycles per row (PE *i+1* starts an
+//! element only after PE *i* finishes both stages, Fig. 4), while the
+//! skewed pipeline needs only **1** (Fig. 6) — so the input staircase is
+//! half as steep and the column drains in half the time.
+
+use crate::pe::PipelineKind;
+
+/// The weight-stationary schedule for one tile: `rows`×`cols` PEs
+/// streaming `m_total` input rows.
+#[derive(Clone, Copy, Debug)]
+pub struct WsSchedule {
+    pub kind: PipelineKind,
+    pub rows: usize,
+    pub cols: usize,
+    pub m_total: usize,
+}
+
+impl WsSchedule {
+    pub fn new(kind: PipelineKind, rows: usize, cols: usize, m_total: usize) -> Self {
+        assert!(rows >= 1 && cols >= 1);
+        WsSchedule { kind, rows, cols, m_total }
+    }
+
+    /// Chain spacing `S` of this schedule's pipeline kind.
+    pub fn spacing(&self) -> u64 {
+        self.kind.chain_spacing()
+    }
+
+    /// Cycle at which activation `a[m][r]` must be present at the West
+    /// edge of row `r` (column 0): the input staircase.
+    pub fn inject_cycle(&self, r: usize, m: usize) -> u64 {
+        m as u64 + self.spacing() * r as u64
+    }
+
+    /// Cycle at which activation `a[m][r]` reaches column `c` (one
+    /// East-hop register per column).
+    pub fn arrive_cycle(&self, r: usize, c: usize, m: usize) -> u64 {
+        self.inject_cycle(r, m) + c as u64
+    }
+
+    /// Cycle at whose END the rounded output for element `m` leaves the
+    /// South edge of column `c`.
+    ///
+    /// Derivation (validated cycle-for-cycle by the simulator tests):
+    /// PE `(R−1, c)` starts stage 1 of element `m` at
+    /// `m + S·(R−1) + c`, its stage 2 ends one cycle later, the skewed
+    /// design spends `column_tail` extra cycles (the Fig. 6 extra
+    /// addition stage), and rounding takes one cycle.
+    pub fn output_cycle(&self, c: usize, m: usize) -> u64 {
+        m as u64
+            + self.spacing() * (self.rows as u64 - 1)
+            + c as u64
+            + 2
+            + self.kind.column_tail()
+    }
+
+    /// Total cycles to stream the whole tile (first injection at cycle 0
+    /// through the last South-edge output), *excluding* weight preload.
+    pub fn total_cycles(&self) -> u64 {
+        if self.m_total == 0 {
+            return 0;
+        }
+        self.output_cycle(self.cols - 1, self.m_total - 1) + 1
+    }
+
+    /// Cycles to preload a weight tile (one row per cycle down the
+    /// column, classic WS fill).
+    pub fn preload_cycles(&self) -> u64 {
+        self.rows as u64
+    }
+
+    /// Phase boundaries for occupancy traces / the viz example:
+    /// `(fill_end, steady_end, drain_end)` — cycles at which the array
+    /// finishes filling (first element reaches the last row), the last
+    /// element enters, and the last output leaves.
+    pub fn phases(&self) -> (u64, u64, u64) {
+        let fill_end = self.spacing() * (self.rows as u64 - 1) + (self.cols as u64 - 1);
+        let steady_end = fill_end.max(self.m_total as u64 - 1);
+        (fill_end, steady_end, self.total_cycles())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staircase_slopes_match_spacing() {
+        let b = WsSchedule::new(PipelineKind::Baseline3b, 4, 4, 8);
+        let s = WsSchedule::new(PipelineKind::Skewed, 4, 4, 8);
+        assert_eq!(b.inject_cycle(0, 0), 0);
+        assert_eq!(b.inject_cycle(1, 0), 2);
+        assert_eq!(b.inject_cycle(3, 5), 5 + 6);
+        assert_eq!(s.inject_cycle(1, 0), 1);
+        assert_eq!(s.inject_cycle(3, 5), 5 + 3);
+    }
+
+    #[test]
+    fn east_hop_adds_one_cycle_per_column() {
+        let s = WsSchedule::new(PipelineKind::Skewed, 4, 4, 8);
+        assert_eq!(s.arrive_cycle(2, 3, 1) - s.arrive_cycle(2, 0, 1), 3);
+    }
+
+    #[test]
+    fn closed_form_totals() {
+        // T_base = (M−1) + (C−1) + 2R + 1 ; T_skew = (M−1) + (C−1) + R + 3.
+        let (m, r, c) = (16usize, 8usize, 4usize);
+        let b = WsSchedule::new(PipelineKind::Baseline3b, r, c, m);
+        let s = WsSchedule::new(PipelineKind::Skewed, r, c, m);
+        assert_eq!(b.total_cycles(), (m as u64 - 1) + (c as u64 - 1) + 2 * r as u64 + 1);
+        assert_eq!(s.total_cycles(), (m as u64 - 1) + (c as u64 - 1) + r as u64 + 3);
+    }
+
+    #[test]
+    fn skew_saves_about_r_cycles() {
+        let (m, r, c) = (32usize, 128usize, 128usize);
+        let b = WsSchedule::new(PipelineKind::Baseline3b, r, c, m).total_cycles();
+        let s = WsSchedule::new(PipelineKind::Skewed, r, c, m).total_cycles();
+        assert_eq!(b - s, r as u64 - 2);
+    }
+
+    #[test]
+    fn empty_stream_is_zero_cycles() {
+        let s = WsSchedule::new(PipelineKind::Skewed, 4, 4, 0);
+        assert_eq!(s.total_cycles(), 0);
+    }
+
+    #[test]
+    fn phases_ordering() {
+        let s = WsSchedule::new(PipelineKind::Baseline3b, 8, 8, 100);
+        let (fill, steady, drain) = s.phases();
+        assert!(fill <= steady && steady < drain);
+    }
+}

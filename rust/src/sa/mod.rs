@@ -1,0 +1,20 @@
+//! The cycle-accurate weight-stationary systolic-array simulator.
+//!
+//! * [`dataflow`] — WS input staircase + phase schedule per pipeline kind.
+//! * [`column`] — single-column reduction chain at register granularity.
+//! * [`array`] — full R×C arrays composed of columns.
+//! * [`tile`] — GEMM → weight-tile decomposition (K/N tiling, K-pass
+//!   accumulation).
+//! * [`trace`] — per-cycle stage-occupancy traces (viz + activity).
+
+pub mod array;
+pub mod column;
+pub mod dataflow;
+pub mod tile;
+pub mod trace;
+
+pub use array::ArraySim;
+pub use column::{ColOutput, ColumnSim, SimError};
+pub use dataflow::WsSchedule;
+pub use tile::{GemmShape, Tile, TilePlan};
+pub use trace::Trace;

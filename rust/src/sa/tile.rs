@@ -1,0 +1,187 @@
+//! GEMM → weight-tile decomposition.
+//!
+//! A GEMM `A(M×K) × W(K×N)` runs on an R×C weight-stationary array as
+//! `ceil(K/R) × ceil(N/C)` weight tiles.  All M input rows stream through
+//! each tile; K-tiles of the same N-block produce *partial* sums that the
+//! South-edge accumulators merge in the wide domain (one rounding per
+//! output — see [`crate::arith::accum::ColumnOracle::merge`]).
+//!
+//! Tile order is K-major within each N-block so the partial-sum
+//! accumulator for an output column is live across consecutive passes —
+//! the ordering invariant the coordinator's scheduler preserves.
+
+/// A GEMM problem shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    /// Streaming dimension (input rows).
+    pub m: usize,
+    /// Reduction dimension.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> Self {
+        assert!(m >= 1 && k >= 1 && n >= 1, "degenerate GEMM {m}x{k}x{n}");
+        GemmShape { m, k, n }
+    }
+
+    /// Total multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+/// One weight tile: a `k_len × n_len` slab of W mapped onto the array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// First reduction index covered.
+    pub k0: usize,
+    /// Rows of the array used (≤ R).
+    pub k_len: usize,
+    /// First output column covered.
+    pub n0: usize,
+    /// Columns of the array used (≤ C).
+    pub n_len: usize,
+    /// K-pass index within this tile's N-block (0 = first pass).
+    pub pass: usize,
+    /// Total K-passes in this N-block.
+    pub passes: usize,
+}
+
+impl Tile {
+    /// Whether this tile completes its N-block's accumulation.
+    pub fn is_last_pass(&self) -> bool {
+        self.pass + 1 == self.passes
+    }
+}
+
+/// The tile decomposition of a GEMM on an R×C array.
+#[derive(Clone, Debug)]
+pub struct TilePlan {
+    pub shape: GemmShape,
+    pub rows: usize,
+    pub cols: usize,
+    pub tiles: Vec<Tile>,
+}
+
+impl TilePlan {
+    /// Decompose `shape` for an `rows × cols` array.  Tiles are ordered
+    /// N-block-major, K-pass-minor (the accumulation-friendly order).
+    pub fn new(shape: GemmShape, rows: usize, cols: usize) -> Self {
+        assert!(rows >= 1 && cols >= 1);
+        let k_tiles = shape.k.div_ceil(rows);
+        let n_tiles = shape.n.div_ceil(cols);
+        let mut tiles = Vec::with_capacity(k_tiles * n_tiles);
+        for nt in 0..n_tiles {
+            let n0 = nt * cols;
+            let n_len = cols.min(shape.n - n0);
+            for kt in 0..k_tiles {
+                let k0 = kt * rows;
+                let k_len = rows.min(shape.k - k0);
+                tiles.push(Tile { k0, k_len, n0, n_len, pass: kt, passes: k_tiles });
+            }
+        }
+        TilePlan { shape, rows, cols, tiles }
+    }
+
+    pub fn k_tiles(&self) -> usize {
+        self.shape.k.div_ceil(self.rows)
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.shape.n.div_ceil(self.cols)
+    }
+
+    /// Number of weight tiles (= array reload count).
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Fraction of the array's PEs doing useful work, averaged over
+    /// tiles (edge tiles waste rows/columns).
+    pub fn occupancy(&self) -> f64 {
+        let full = (self.rows * self.cols * self.tile_count()) as f64;
+        let used: usize = self.tiles.iter().map(|t| t.k_len * t.n_len).sum();
+        used as f64 / full
+    }
+
+    /// Slice the weight matrix `w[k][n]` for a tile (bit-pattern values).
+    pub fn weight_slab(&self, w: &[Vec<u64>], t: &Tile) -> Vec<Vec<u64>> {
+        (t.k0..t.k0 + t.k_len)
+            .map(|k| (t.n0..t.n0 + t.n_len).map(|n| w[k][n]).collect())
+            .collect()
+    }
+
+    /// Slice the activation matrix `a[m][k]` for a tile.
+    pub fn activation_slab(&self, a: &[Vec<u64>], t: &Tile) -> Vec<Vec<u64>> {
+        a.iter().map(|row| row[t.k0..t.k0 + t.k_len].to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_fit_single_tile() {
+        let p = TilePlan::new(GemmShape::new(10, 8, 4), 8, 4);
+        assert_eq!(p.tile_count(), 1);
+        assert_eq!(p.tiles[0], Tile { k0: 0, k_len: 8, n0: 0, n_len: 4, pass: 0, passes: 1 });
+        assert!((p.occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_and_n_tiling_with_edges() {
+        let p = TilePlan::new(GemmShape::new(4, 20, 10), 8, 4);
+        assert_eq!(p.k_tiles(), 3);
+        assert_eq!(p.n_tiles(), 3);
+        assert_eq!(p.tile_count(), 9);
+        // Edge tiles are short.
+        let last = p.tiles.last().unwrap();
+        assert_eq!(last.k_len, 4); // 20 − 16
+        assert_eq!(last.n_len, 2); // 10 − 8
+        assert!(p.occupancy() < 1.0);
+    }
+
+    #[test]
+    fn k_major_order_within_n_block() {
+        let p = TilePlan::new(GemmShape::new(4, 20, 10), 8, 4);
+        for w in p.tiles.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if a.n0 == b.n0 {
+                assert_eq!(b.pass, a.pass + 1, "K-passes must be consecutive");
+            } else {
+                assert!(a.is_last_pass(), "N-block switched before last K-pass");
+                assert_eq!(b.pass, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn slabs_have_tile_dims() {
+        let p = TilePlan::new(GemmShape::new(3, 5, 6), 4, 4);
+        let w = vec![vec![7u64; 6]; 5];
+        let a = vec![vec![9u64; 5]; 3];
+        for t in &p.tiles {
+            let ws = p.weight_slab(&w, t);
+            assert_eq!(ws.len(), t.k_len);
+            assert_eq!(ws[0].len(), t.n_len);
+            let as_ = p.activation_slab(&a, t);
+            assert_eq!(as_.len(), 3);
+            assert_eq!(as_[0].len(), t.k_len);
+        }
+    }
+
+    #[test]
+    fn macs_counts() {
+        assert_eq!(GemmShape::new(2, 3, 4).macs(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_shape_panics() {
+        GemmShape::new(0, 1, 1);
+    }
+}

@@ -1,0 +1,111 @@
+//! Per-cycle occupancy traces of the pipeline stages.
+//!
+//! Feeds two consumers: the `pipeline_viz` example (which renders the
+//! paper's Fig. 4 / Fig. 6 interleaving diagrams as ASCII timelines) and
+//! the energy model's activity accounting (via the PE counters, which
+//! the trace complements with *when*).
+
+/// Stage occupancy of one PE in one cycle: which element (if any) each
+/// stage is processing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageOcc {
+    /// Element index being accepted/processed by stage 1 this cycle.
+    pub s1: Option<usize>,
+    /// Element index being processed by stage 2 this cycle.
+    pub s2: Option<usize>,
+}
+
+/// A full occupancy trace: `records[cycle][pe]`.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub records: Vec<Vec<StageOcc>>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace { records: Vec::new() }
+    }
+
+    /// Append one cycle's occupancy row.
+    pub fn push_cycle(&mut self, occ: Vec<StageOcc>) {
+        self.records.push(occ);
+    }
+
+    pub fn cycles(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Render an ASCII timeline in the style of the paper's Figs. 4/6:
+    /// one row per PE, one column per cycle, cells `1ₘ`/`2ₘ` for stage-1
+    /// and stage-2 activity on element `m` (shown mod 10 for width).
+    pub fn render(&self, max_cycles: usize) -> String {
+        let n_pe = self.records.first().map_or(0, |r| r.len());
+        let cycles = self.records.len().min(max_cycles);
+        let mut out = String::new();
+        out.push_str("        ");
+        for t in 0..cycles {
+            out.push_str(&format!("{t:^5}"));
+        }
+        out.push('\n');
+        for pe in 0..n_pe {
+            out.push_str(&format!("PE{pe:<3}  |"));
+            for t in 0..cycles {
+                let occ = self.records[t][pe];
+                let cell = match (occ.s1, occ.s2) {
+                    (Some(a), Some(b)) => format!("1{}2{}", a % 10, b % 10),
+                    (Some(a), None) => format!("1{} ·", a % 10),
+                    (None, Some(b)) => format!("· 2{}", b % 10),
+                    (None, None) => " ·  ".to_string(),
+                };
+                out.push_str(&format!("{cell:^4}|"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// First cycle at which `pe`'s stage 2 processes element `m`
+    /// (`None` if never observed).
+    pub fn stage2_cycle(&self, pe: usize, m: usize) -> Option<usize> {
+        self.records
+            .iter()
+            .position(|row| row.get(pe).map_or(false, |o| o.s2 == Some(m)))
+    }
+
+    /// First cycle at which `pe`'s stage 1 processes element `m`.
+    pub fn stage1_cycle(&self, pe: usize, m: usize) -> Option<usize> {
+        self.records
+            .iter()
+            .position(|row| row.get(pe).map_or(false, |o| o.s1 == Some(m)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_queries() {
+        let mut t = Trace::new();
+        t.push_cycle(vec![StageOcc { s1: Some(0), s2: None }, StageOcc::default()]);
+        t.push_cycle(vec![
+            StageOcc { s1: Some(1), s2: Some(0) },
+            StageOcc { s1: Some(0), s2: None },
+        ]);
+        assert_eq!(t.cycles(), 2);
+        assert_eq!(t.stage1_cycle(0, 0), Some(0));
+        assert_eq!(t.stage2_cycle(0, 0), Some(1));
+        assert_eq!(t.stage1_cycle(1, 0), Some(1));
+        assert_eq!(t.stage2_cycle(1, 3), None);
+    }
+
+    #[test]
+    fn render_has_row_per_pe() {
+        let mut t = Trace::new();
+        t.push_cycle(vec![StageOcc { s1: Some(0), s2: None }; 3]);
+        let r = t.render(10);
+        assert_eq!(r.lines().count(), 4); // header + 3 PEs
+        assert!(r.contains("PE0"));
+        assert!(r.contains("PE2"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Closed-form latency model, validated cycle-for-cycle against the
+//! cycle-accurate simulator by the integration tests.
+
+pub mod model;
+
+pub use model::{LayerTiming, TileTiming, TimingConfig};

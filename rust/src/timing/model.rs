@@ -1,0 +1,197 @@
+//! Closed-form SA latency model.
+//!
+//! The per-tile formula is exactly the one the cycle-accurate simulator
+//! obeys (asserted in `tests/integration_sa.rs`):
+//!
+//! ```text
+//! T_tile(kind, M, R, C_used) = (M−1) + (C_used−1) + S·(R−1) + 3 + tail
+//!     S    = 2 (baseline/regular) | 1 (skewed)
+//!     tail = 0 (baseline/regular) | 1 (skewed: the Fig. 6 extra add)
+//! ```
+//!
+//! so `T_base − T_skew = R − 2` per tile — the paper's per-column saving.
+//! Layer latency composes tiles sequentially with (optionally
+//! double-buffered) weight preloads, reproducing the §IV observation:
+//! layers with large `M` amortize the saving away, layers with small `M`
+//! (the late CNN layers, 7×7 spatial) gain the most.
+
+use crate::pe::PipelineKind;
+use crate::sa::dataflow::WsSchedule;
+use crate::sa::tile::TilePlan;
+
+/// Array + clock configuration for timing/energy evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct TimingConfig {
+    /// Array rows (reduction depth), paper: 128.
+    pub rows: usize,
+    /// Array columns, paper: 128.
+    pub cols: usize,
+    /// Clock frequency in GHz, paper: 1.0.
+    pub clock_ghz: f64,
+    /// Weight preloads overlap the previous tile's streaming (dedicated
+    /// fill path) — the state-of-the-art assumption; `false` serializes
+    /// every reload (ablation).
+    pub double_buffer: bool,
+}
+
+impl TimingConfig {
+    /// The paper's evaluation setup: 128×128 PEs @ 1 GHz (§IV).
+    pub const PAPER: TimingConfig =
+        TimingConfig { rows: 128, cols: 128, clock_ghz: 1.0, double_buffer: true };
+
+    /// Cycle count → nanoseconds at this clock.
+    pub fn ns(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_ghz
+    }
+}
+
+/// Timing of a single weight tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileTiming {
+    /// Streaming cycles (first injection → last rounded output).
+    pub compute: u64,
+    /// Weight preload cycles (R, the fill).
+    pub preload: u64,
+}
+
+impl TileTiming {
+    /// Closed-form per-tile timing.  `n_used` is the live column count
+    /// of (possibly edge-) tiles; the chain always spans the full `rows`
+    /// (unused rows stream zeros — the array does not reconfigure).
+    pub fn compute_cycles(kind: PipelineKind, m: usize, rows: usize, n_used: usize) -> u64 {
+        WsSchedule::new(kind, rows, n_used, m).total_cycles()
+    }
+
+    pub fn new(kind: PipelineKind, m: usize, rows: usize, n_used: usize) -> TileTiming {
+        TileTiming {
+            compute: Self::compute_cycles(kind, m, rows, n_used),
+            preload: rows as u64,
+        }
+    }
+}
+
+/// Timing of a full layer (one GEMM) on the array.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerTiming {
+    /// Total cycles including exposed preloads.
+    pub cycles: u64,
+    /// Cycles spent streaming (PEs active).
+    pub compute_cycles: u64,
+    /// Cycles of *exposed* (non-overlapped) weight preload.
+    pub exposed_preload: u64,
+    /// Number of weight tiles.
+    pub tiles: usize,
+    /// Wall-clock at the configured clock.
+    pub ns: f64,
+}
+
+/// Compose a tile plan into layer latency.
+///
+/// With double-buffering, tile `i+1`'s preload runs during tile `i`'s
+/// streaming and is exposed only if the stream is shorter than the fill;
+/// the first preload is always exposed.
+pub fn layer_timing(cfg: &TimingConfig, kind: PipelineKind, plan: &TilePlan) -> LayerTiming {
+    let m = plan.shape.m;
+    let mut t: u64 = 0;
+    let mut compute_total: u64 = 0;
+    let mut exposed: u64 = 0;
+    let mut preload_done: u64 = cfg.rows as u64; // first fill
+    for (i, tile) in plan.tiles.iter().enumerate() {
+        let tt = TileTiming::new(kind, m, cfg.rows, tile.n_len);
+        let start = t.max(preload_done);
+        exposed += start - t; // stall waiting for weights
+        let done = start + tt.compute;
+        compute_total += tt.compute;
+        // Next preload: overlapped (starts as soon as this tile's weights
+        // are committed) or serialized after this tile's drain.
+        if i + 1 < plan.tiles.len() {
+            preload_done = if cfg.double_buffer { start + tt.preload } else { done + tt.preload };
+        }
+        t = done;
+    }
+    LayerTiming {
+        cycles: t,
+        compute_cycles: compute_total,
+        exposed_preload: exposed,
+        tiles: plan.tile_count(),
+        ns: cfg.ns(t),
+    }
+}
+
+/// Convenience: latency of a whole GEMM shape under a config.
+pub fn gemm_timing(
+    cfg: &TimingConfig,
+    kind: PipelineKind,
+    shape: crate::sa::tile::GemmShape,
+) -> LayerTiming {
+    layer_timing(cfg, kind, &TilePlan::new(shape, cfg.rows, cfg.cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sa::tile::GemmShape;
+
+    #[test]
+    fn single_tile_formulas() {
+        // T_base = (M−1)+(C−1)+2R+1 ; T_skew = (M−1)+(C−1)+R+3.
+        let b = TileTiming::compute_cycles(PipelineKind::Baseline3b, 16, 8, 4);
+        assert_eq!(b, 15 + 3 + 17);
+        let s = TileTiming::compute_cycles(PipelineKind::Skewed, 16, 8, 4);
+        assert_eq!(s, 15 + 3 + 11);
+        assert_eq!(b - s, 8 - 2);
+    }
+
+    #[test]
+    fn paper_scale_tile_saving() {
+        // 128×128 array: R−2 = 126 cycles saved per tile.
+        let b = TileTiming::compute_cycles(PipelineKind::Baseline3b, 49, 128, 128);
+        let s = TileTiming::compute_cycles(PipelineKind::Skewed, 49, 128, 128);
+        assert_eq!(b - s, 126);
+        // Small M (late CNN layer): the saving is a large fraction.
+        assert!((b - s) as f64 / b as f64 > 0.23, "saving {} of {}", b - s, b);
+        // Large M (early layer): the saving is diluted.
+        let b2 = TileTiming::compute_cycles(PipelineKind::Baseline3b, 12544, 128, 128);
+        let s2 = TileTiming::compute_cycles(PipelineKind::Skewed, 12544, 128, 128);
+        assert!((b2 - s2) as f64 / (b2 as f64) < 0.01);
+    }
+
+    #[test]
+    fn layer_composition_double_buffered() {
+        let cfg = TimingConfig { rows: 8, cols: 8, clock_ghz: 1.0, double_buffer: true };
+        let plan = TilePlan::new(GemmShape::new(32, 16, 16), 8, 8);
+        assert_eq!(plan.tile_count(), 4);
+        let lt = layer_timing(&cfg, PipelineKind::Baseline3b, &plan);
+        let per_tile = TileTiming::compute_cycles(PipelineKind::Baseline3b, 32, 8, 8);
+        // Preloads fully hidden except the first (compute ≥ R here).
+        assert_eq!(lt.cycles, 8 + 4 * per_tile);
+        assert_eq!(lt.exposed_preload, 8);
+        assert_eq!(lt.compute_cycles, 4 * per_tile);
+    }
+
+    #[test]
+    fn layer_composition_serialized_reloads() {
+        let cfg = TimingConfig { rows: 8, cols: 8, clock_ghz: 1.0, double_buffer: false };
+        let plan = TilePlan::new(GemmShape::new(32, 16, 16), 8, 8);
+        let lt = layer_timing(&cfg, PipelineKind::Baseline3b, &plan);
+        let per_tile = TileTiming::compute_cycles(PipelineKind::Baseline3b, 32, 8, 8);
+        assert_eq!(lt.cycles, 8 + 4 * per_tile + 3 * 8);
+    }
+
+    #[test]
+    fn headline_direction_holds_for_small_m() {
+        // A late-CNN-layer-like GEMM: M=49, K=N=512 on the paper array.
+        let cfg = TimingConfig::PAPER;
+        let shape = GemmShape::new(49, 512, 512);
+        let b = gemm_timing(&cfg, PipelineKind::Baseline3b, shape);
+        let s = gemm_timing(&cfg, PipelineKind::Skewed, shape);
+        let saving = 1.0 - s.cycles as f64 / b.cycles as f64;
+        assert!(saving > 0.2, "late-layer saving {saving}");
+    }
+
+    #[test]
+    fn ns_conversion() {
+        let cfg = TimingConfig { rows: 8, cols: 8, clock_ghz: 2.0, double_buffer: true };
+        assert_eq!(cfg.ns(100), 50.0);
+    }
+}

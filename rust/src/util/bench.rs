@@ -1,0 +1,111 @@
+//! Minimal wall-clock measurement harness for the `harness = false`
+//! bench targets (criterion is not in the offline crate cache).
+//!
+//! Measures median-of-N with warmup, reports ns/iter and derived
+//! throughput.  Deterministic iteration counts keep bench logs diffable.
+
+use std::time::Instant;
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Median wall time per iteration (ns).
+    pub ns_per_iter: f64,
+    /// Iterations measured.
+    pub iters: u32,
+    /// Optional work units per iteration (for throughput lines).
+    pub units_per_iter: f64,
+    pub unit_name: &'static str,
+}
+
+impl Measurement {
+    /// Units per second implied by the median time.
+    pub fn throughput(&self) -> f64 {
+        if self.ns_per_iter == 0.0 {
+            0.0
+        } else {
+            self.units_per_iter * 1e9 / self.ns_per_iter
+        }
+    }
+
+    /// One-line report, `bench:`-prefixed for grep.
+    pub fn report(&self) -> String {
+        let mut s = format!("bench: {:<44} {:>12.0} ns/iter", self.name, self.ns_per_iter);
+        if self.units_per_iter > 0.0 {
+            s.push_str(&format!(
+                "  {:>12.3e} {}/s",
+                self.throughput(),
+                self.unit_name
+            ));
+        }
+        s
+    }
+}
+
+/// Measure `f` with `iters` timed iterations after `warmup` untimed
+/// ones; returns the median of `samples` runs.
+pub fn measure<F: FnMut()>(
+    name: &str,
+    warmup: u32,
+    iters: u32,
+    samples: u32,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..samples.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters.max(1) {
+                f();
+            }
+            t0.elapsed().as_nanos() as f64 / iters.max(1) as f64
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement {
+        name: name.to_string(),
+        ns_per_iter: times[times.len() / 2],
+        iters,
+        units_per_iter: 0.0,
+        unit_name: "",
+    }
+}
+
+/// Attach a throughput annotation to a measurement.
+pub fn with_units(mut m: Measurement, units: f64, unit_name: &'static str) -> Measurement {
+    m.units_per_iter = units;
+    m.unit_name = unit_name;
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut x = 0u64;
+        let m = measure("spin", 1, 100, 3, || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(m.ns_per_iter > 0.0);
+        assert!(m.report().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "t".into(),
+            ns_per_iter: 100.0,
+            iters: 1,
+            units_per_iter: 50.0,
+            unit_name: "ops",
+        };
+        assert_eq!(m.throughput(), 50.0 * 1e7);
+        assert!(m.report().contains("ops/s"));
+    }
+}

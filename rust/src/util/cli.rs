@@ -1,0 +1,235 @@
+//! Tiny CLI argument parser (clap is not in the offline crate cache).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declared option (for usage text and validation).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// CLI specification + parser.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, specs: Vec::new() }
+    }
+
+    /// Declare a `--key <value>` option with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    /// Declare a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let head = if spec.takes_value {
+                format!("  --{} <value>", spec.name)
+            } else {
+                format!("  --{}", spec.name)
+            };
+            s.push_str(&format!("{head:<28}{}", spec.help));
+            if let Some(d) = spec.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name).  Unknown options are
+    /// an error; `--help` is reported via `Err(Help)`.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help(self.usage()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.to_string()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.to_string()))?
+                        }
+                    };
+                    args.opts.insert(key.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError::UnexpectedValue(key.to_string()));
+                    }
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` and exit(2) on error / exit(0) on --help.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(CliError::Help(u)) => {
+                println!("{u}");
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|s| s.parse().ok())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|s| s.parse().ok())
+    }
+
+    /// Typed getter with a hard error message on parse failure.
+    pub fn req_usize(&self, key: &str) -> usize {
+        self.get_usize(key)
+            .unwrap_or_else(|| panic!("missing or invalid --{key}"))
+    }
+}
+
+/// CLI parse errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CliError {
+    Help(String),
+    Unknown(String),
+    MissingValue(String),
+    UnexpectedValue(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Help(_) => write!(f, "help requested"),
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+            CliError::MissingValue(k) => write!(f, "option --{k} needs a value"),
+            CliError::UnexpectedValue(k) => write!(f, "flag --{k} takes no value"),
+        }
+    }
+}
+impl std::error::Error for CliError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("rows", "array rows", Some("128"))
+            .opt("seed", "rng seed", None)
+            .flag("verbose", "chatty")
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_usize("rows"), Some(128));
+        assert_eq!(a.get("seed"), None);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cli().parse(&sv(&["--rows", "64", "--seed=7", "--verbose"])).unwrap();
+        assert_eq!(a.get_usize("rows"), Some(64));
+        assert_eq!(a.get_u64("seed"), Some(7));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = cli().parse(&sv(&["fig7", "--rows=4", "extra"])).unwrap();
+        assert_eq!(a.positional, vec!["fig7", "extra"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(cli().parse(&sv(&["--nope"])), Err(CliError::Unknown(_))));
+        assert!(matches!(cli().parse(&sv(&["--seed"])), Err(CliError::MissingValue(_))));
+        assert!(matches!(cli().parse(&sv(&["--verbose=x"])), Err(CliError::UnexpectedValue(_))));
+        assert!(matches!(cli().parse(&sv(&["--help"])), Err(CliError::Help(_))));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--rows"));
+        assert!(u.contains("default: 128"));
+    }
+}

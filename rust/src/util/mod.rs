@@ -1,0 +1,20 @@
+//! Std-only substrates: deterministic RNG, mini-JSON, CLI parsing, table
+//! rendering and a property-testing harness.
+//!
+//! The offline build environment has no `rand`, `serde`, `clap`,
+//! `criterion` or `proptest`; these modules replace exactly the slices of
+//! those crates the rest of the repo needs (see DESIGN.md §2, environment
+//! substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod mini_json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+pub use cli::{Args, Cli};
+pub use mini_json::Json;
+pub use prop::{Gen, Prop};
+pub use rng::Rng;
+pub use table::{fnum, pct, Align, Table};

@@ -1,0 +1,221 @@
+//! Minimal property-testing harness (proptest is not in the offline crate
+//! cache).
+//!
+//! Usage mirrors the proptest style the DESIGN.md test strategy calls for
+//! (`no_run`: doctest binaries don't carry the xla rpath in this image):
+//!
+//! ```no_run
+//! use skewsa::util::prop::{Prop, Gen};
+//! Prop::new("add-commutes", 1000).run(|g: &mut Gen| {
+//!     let a = g.i64_in(-100, 100);
+//!     let b = g.i64_in(-100, 100);
+//!     g.assert_eq("a+b == b+a", a + b, b + a);
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the case with the failing seed, shrinks
+//! integer draws toward zero (a bounded "shrink-lite" pass), and panics
+//! with the failing seed so the case is reproducible from the test log.
+
+use super::rng::Rng;
+
+/// Per-case generator handed to the property body.  Wraps the RNG and
+/// records draws so the shrinker can replay them with smaller values.
+pub struct Gen {
+    rng: Rng,
+    /// Scale in (0, 1]: shrink passes re-run with smaller scales, pulling
+    /// integer ranges toward their midpoint/zero.
+    scale: f64,
+    failed: Option<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Gen { rng: Rng::new(seed), scale, failed: None }
+    }
+
+    /// Uniform i64 in `[lo, hi]`, range narrowed by the shrink scale.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        if self.scale >= 1.0 {
+            return self.rng.range_i64(lo, hi);
+        }
+        // Shrink toward zero if the range spans it, else toward lo.
+        let anchor = if lo <= 0 && hi >= 0 { 0 } else { lo };
+        let lo2 = anchor + ((lo - anchor) as f64 * self.scale) as i64;
+        let hi2 = anchor + ((hi - anchor) as f64 * self.scale) as i64;
+        self.rng.range_i64(lo2.min(hi2), lo2.max(hi2))
+    }
+
+    /// Uniform usize in `[lo, hi]` (shrinks toward `lo`).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let hi2 = if self.scale >= 1.0 {
+            hi
+        } else {
+            lo + ((hi - lo) as f64 * self.scale) as usize
+        };
+        lo + self.rng.below((hi2 - lo + 1) as u64) as usize
+    }
+
+    /// Random bit pattern of `bits` width (not shrunk — bit patterns are
+    /// structure, not magnitude).
+    pub fn bits(&mut self, bits: u32) -> u64 {
+        self.rng.bits(bits)
+    }
+
+    /// Uniform f64 in `[lo, hi)` (shrinks toward the midpoint).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let mid = 0.5 * (lo + hi);
+        let half = 0.5 * (hi - lo) * self.scale;
+        self.rng.uniform(mid - half, mid + half)
+    }
+
+    /// Gaussian draw (shrinks toward the mean).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        self.rng.normal_scaled(mean, std * self.scale)
+    }
+
+    /// Bernoulli.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick one item from a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+
+    /// Record a failed assertion (does not unwind; the harness collects and
+    /// reports with the seed).
+    pub fn assert(&mut self, what: &str, ok: bool) {
+        if !ok && self.failed.is_none() {
+            self.failed = Some(what.to_string());
+        }
+    }
+
+    /// Equality assertion with debug rendering of both sides.
+    pub fn assert_eq<T: PartialEq + std::fmt::Debug>(&mut self, what: &str, a: T, b: T) {
+        if a != b && self.failed.is_none() {
+            self.failed = Some(format!("{what}: left={a:?} right={b:?}"));
+        }
+    }
+
+    /// Approximate equality for floats (absolute + relative tolerance).
+    pub fn assert_close(&mut self, what: &str, a: f64, b: f64, tol: f64) {
+        let ok = if a.is_nan() || b.is_nan() {
+            a.is_nan() && b.is_nan()
+        } else {
+            (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+        };
+        if !ok && self.failed.is_none() {
+            self.failed = Some(format!("{what}: left={a} right={b} tol={tol}"));
+        }
+    }
+}
+
+/// A named property with a case budget.
+pub struct Prop {
+    name: &'static str,
+    cases: u64,
+    seed: u64,
+}
+
+impl Prop {
+    /// New property running `cases` random cases.  The base seed is derived
+    /// from the name so distinct properties explore distinct streams but
+    /// each run is deterministic.
+    pub fn new(name: &'static str, cases: u64) -> Self {
+        let mut seed = 0xcbf2_9ce4_8422_2325u64; // FNV offset
+        for b in name.bytes() {
+            seed ^= b as u64;
+            seed = seed.wrapping_mul(0x100_0000_01b3);
+        }
+        Prop { name, cases, seed }
+    }
+
+    /// Override the base seed (used to reproduce logged failures).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property; panics with the failing seed + message on failure.
+    pub fn run<F: Fn(&mut Gen)>(self, body: F) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            let mut g = Gen::new(case_seed, 1.0);
+            body(&mut g);
+            if let Some(msg) = g.failed {
+                // Shrink-lite: replay the same seed at smaller scales and
+                // keep the smallest still-failing rendition's message.
+                let mut final_msg = msg;
+                for scale in [0.5, 0.25, 0.1, 0.02] {
+                    let mut gs = Gen::new(case_seed, scale);
+                    body(&mut gs);
+                    if let Some(m) = gs.failed {
+                        final_msg = format!("{m} (shrunk, scale={scale})");
+                    } else {
+                        break;
+                    }
+                }
+                panic!(
+                    "property '{}' failed at case {case} (seed {case_seed:#x}): {final_msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        Prop::new("tautology", 200).run(|g| {
+            let x = g.i64_in(-10, 10);
+            g.assert("x is in range", (-10..=10).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        Prop::new("always-fails", 10).run(|g| {
+            let x = g.i64_in(0, 100);
+            g.assert("x < 0 (impossible)", x < 0);
+        });
+    }
+
+    #[test]
+    fn deterministic_reruns() {
+        // Two runs of the same property observe identical draws.
+        use std::sync::Mutex;
+        static DRAWS: Mutex<Vec<i64>> = Mutex::new(Vec::new());
+        let run = || {
+            DRAWS.lock().unwrap().clear();
+            Prop::new("record", 20).run(|g| {
+                DRAWS.lock().unwrap().push(g.i64_in(-1000, 1000));
+            });
+            DRAWS.lock().unwrap().clone()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        Prop::new("close", 1).run(|g| {
+            g.assert_close("近い", 1.0, 1.0 + 1e-12, 1e-9);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_fails_when_far() {
+        Prop::new("far", 1).run(|g| {
+            g.assert_close("far apart", 1.0, 2.0, 1e-9);
+        });
+    }
+}

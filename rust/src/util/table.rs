@@ -1,0 +1,179 @@
+//! Aligned plain-text table rendering for reports and benches.
+//!
+//! Every figure/table emitter in [`crate::report`] prints through this so
+//! bench output lines up and stays grep-able (`row:` prefix per data row).
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: header + rows, column-aligned on render.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers; numeric-looking columns can
+    /// be right-aligned via [`Table::align`].
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Left; header.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set per-column alignment (panics on length mismatch).
+    pub fn align(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Right-align every column except the first (the common report shape).
+    pub fn numeric(mut self) -> Self {
+        for (i, a) in self.aligns.iter_mut().enumerate() {
+            *a = if i == 0 { Align::Left } else { Align::Right };
+        }
+        self
+    }
+
+    /// Append a row (panics on length mismatch).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: append a row of displayable items.
+    pub fn rowd(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with aligned columns, a separator under the header, and a
+    /// `row:`-prefixed body (machine-greppable).
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String], prefix: &str| -> String {
+            let mut line = String::from(prefix);
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let pad = width[i] - c.chars().count();
+                match self.aligns[i] {
+                    Align::Left => {
+                        line.push_str(c);
+                        if i + 1 != ncol {
+                            line.push_str(&" ".repeat(pad));
+                        }
+                    }
+                    Align::Right => {
+                        line.push_str(&" ".repeat(pad));
+                        line.push_str(c);
+                    }
+                }
+            }
+            line
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header, "     "));
+        out.push('\n');
+        out.push_str("     ");
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, "row: "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (no quoting needed for our numeric/identifier cells;
+    /// commas in cells are replaced by `;`).
+    pub fn to_csv(&self) -> String {
+        let clean = |s: &str| s.replace(',', ";");
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|h| clean(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| clean(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `prec` decimals, trimming to a compact form.
+pub fn fnum(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Format a ratio as a signed percentage, e.g. `-16.2%`.
+pub fn pct(ratio: f64) -> String {
+    format!("{:+.1}%", ratio * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["layer", "cycles"]).numeric();
+        t.row(&["conv1".into(), "123".into()]);
+        t.row(&["fc".into(), "7".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[2].starts_with("row: conv1"));
+        // Right alignment of the numeric column:
+        assert!(lines[3].ends_with("  7") || lines[3].ends_with("     7"), "{:?}", lines[3]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x,y".into(), "1".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\nx;y,1\n");
+    }
+
+    #[test]
+    fn pct_and_fnum() {
+        assert_eq!(pct(-0.162), "-16.2%");
+        assert_eq!(pct(0.08), "+8.0%");
+        assert_eq!(fnum(3.14159, 2), "3.14");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

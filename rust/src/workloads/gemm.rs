@@ -1,0 +1,158 @@
+//! Synthetic GEMM workload generation.
+//!
+//! Produces activation/weight matrices with ImageNet-like statistics for
+//! the numeric paths (DESIGN.md §2: the energy figures depend on layer
+//! shapes and activity, not image content; the *numeric verification*
+//! paths need realistic value distributions, which these generators
+//! provide: post-ReLU half-Gaussian activations, fan-in-scaled Gaussian
+//! weights).
+
+use crate::arith::format::FpFormat;
+use crate::sa::tile::GemmShape;
+use crate::util::rng::Rng;
+
+/// A generated GEMM problem instance (bit patterns in `fmt`).
+#[derive(Clone, Debug)]
+pub struct GemmData {
+    pub shape: GemmShape,
+    pub fmt: FpFormat,
+    /// `a[m][k]`.
+    pub a: Vec<Vec<u64>>,
+    /// `w[k][n]`.
+    pub w: Vec<Vec<u64>>,
+}
+
+impl GemmData {
+    /// ImageNet-CNN-like statistics: activations are post-ReLU
+    /// (half-Gaussian, unit scale), weights are Gaussian with He/fan-in
+    /// scaling `σ = sqrt(2/K)`.
+    pub fn cnn_like(shape: GemmShape, fmt: FpFormat, seed: u64) -> GemmData {
+        let mut rng = Rng::new(seed);
+        let wstd = (2.0 / shape.k as f64).sqrt();
+        let a = (0..shape.m)
+            .map(|_| {
+                (0..shape.k)
+                    .map(|_| fmt.from_f64(rng.normal().max(0.0)))
+                    .collect()
+            })
+            .collect();
+        let w = (0..shape.k)
+            .map(|_| {
+                (0..shape.n)
+                    .map(|_| fmt.from_f64(rng.normal_scaled(0.0, wstd)))
+                    .collect()
+            })
+            .collect();
+        GemmData { shape, fmt, a, w }
+    }
+
+    /// Small-integer-valued inputs: exact in every reduced format and in
+    /// f64, used where tests need loss-free reference comparisons.
+    pub fn integer_valued(shape: GemmShape, fmt: FpFormat, seed: u64) -> GemmData {
+        let mut rng = Rng::new(seed);
+        let a = (0..shape.m)
+            .map(|_| (0..shape.k).map(|_| fmt.from_f64(rng.range_i64(-8, 8) as f64)).collect())
+            .collect();
+        let w = (0..shape.k)
+            .map(|_| (0..shape.n).map(|_| fmt.from_f64(rng.range_i64(-4, 4) as f64)).collect())
+            .collect();
+        GemmData { shape, fmt, a, w }
+    }
+
+    /// Adversarial values: wide exponent spread and sign flips, to
+    /// stress alignment/cancellation paths end-to-end.
+    pub fn adversarial(shape: GemmShape, fmt: FpFormat, seed: u64) -> GemmData {
+        let mut rng = Rng::new(seed);
+        let gen = |rng: &mut Rng| {
+            let mag = 2.0f64.powi(rng.range_i64(-20, 20) as i32);
+            let sign = if rng.chance(0.5) { -1.0 } else { 1.0 };
+            fmt.from_f64(sign * mag * (1.0 + rng.unit_f64()))
+        };
+        let a = (0..shape.m).map(|_| (0..shape.k).map(|_| gen(&mut rng)).collect()).collect();
+        let w = (0..shape.k).map(|_| (0..shape.n).map(|_| gen(&mut rng)).collect()).collect();
+        GemmData { shape, fmt, a, w }
+    }
+
+    /// f64 reference product `A × W` (accumulated in f64 — the *loose*
+    /// reference; bit-exact references go through the column oracle).
+    pub fn reference_f64(&self) -> Vec<Vec<f64>> {
+        let GemmShape { m, k, n } = self.shape;
+        let mut y = vec![vec![0.0f64; n]; m];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = self.fmt.to_f64(self.a[i][kk]);
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    y[i][j] += av * self.fmt.to_f64(self.w[kk][j]);
+                }
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnn_like_is_relu_and_scaled() {
+        let g = GemmData::cnn_like(GemmShape::new(16, 64, 8), FpFormat::BF16, 1);
+        // All activations non-negative (post-ReLU).
+        for row in &g.a {
+            for &bits in row {
+                assert!(FpFormat::BF16.to_f64(bits) >= 0.0);
+            }
+        }
+        // Weight scale ≈ sqrt(2/64) = 0.177.
+        let mut s2 = 0.0;
+        let mut n = 0;
+        for row in &g.w {
+            for &bits in row {
+                let x = FpFormat::BF16.to_f64(bits);
+                s2 += x * x;
+                n += 1;
+            }
+        }
+        let std = (s2 / n as f64).sqrt();
+        assert!((std - 0.177).abs() < 0.04, "weight std {std}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let g1 = GemmData::cnn_like(GemmShape::new(4, 4, 4), FpFormat::BF16, 7);
+        let g2 = GemmData::cnn_like(GemmShape::new(4, 4, 4), FpFormat::BF16, 7);
+        assert_eq!(g1.a, g2.a);
+        assert_eq!(g1.w, g2.w);
+        let g3 = GemmData::cnn_like(GemmShape::new(4, 4, 4), FpFormat::BF16, 8);
+        assert_ne!(g1.a, g3.a);
+    }
+
+    #[test]
+    fn integer_reference_is_exact() {
+        let g = GemmData::integer_valued(GemmShape::new(3, 16, 3), FpFormat::BF16, 2);
+        let y = g.reference_f64();
+        for row in &y {
+            for &v in row {
+                assert_eq!(v, v.round(), "integer inputs give integer outputs");
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_spans_exponents() {
+        let g = GemmData::adversarial(GemmShape::new(8, 32, 4), FpFormat::BF16, 3);
+        let mut min_e = i32::MAX;
+        let mut max_e = i32::MIN;
+        for row in &g.a {
+            for &bits in row {
+                let u = FpFormat::BF16.decode(bits);
+                min_e = min_e.min(u.exp);
+                max_e = max_e.max(u.exp);
+            }
+        }
+        assert!(max_e - min_e > 20, "exponent spread {}", max_e - min_e);
+    }
+}

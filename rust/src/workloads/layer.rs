@@ -1,0 +1,139 @@
+//! CNN layer descriptors and their im2col GEMM lowering.
+//!
+//! Layer shapes (not weights or images) determine the timing/energy
+//! evaluation — the energy reported in the paper's Figs. 7/8 depends on
+//! the per-layer GEMM dimensions `(M, K, N)` and activity factors, not
+//! on what the pictures depict (DESIGN.md §2).
+//!
+//! Lowering conventions:
+//! * standard convolution → one GEMM with `M = H_out·W_out`,
+//!   `K = C_in·k_h·k_w`, `N = C_out` (im2col);
+//! * depthwise convolution → one GEMM with `M = H_out·W_out`,
+//!   `K = k_h·k_w`, `N = C` under the channel-per-column mapping (each
+//!   array column holds one channel's filter taps and receives that
+//!   channel's im2col stream — a West-edge-bandwidth-heavy but standard
+//!   way to keep depthwise work on a WS array; see DESIGN.md
+//!   §Depthwise-mapping);
+//! * fully-connected → `M = batch`, `K = C_in`, `N = C_out`.
+
+use crate::sa::tile::GemmShape;
+
+/// The operator types appearing in the evaluated CNNs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution.
+    Conv { kh: usize, kw: usize, stride: usize, cin: usize, cout: usize },
+    /// Depthwise convolution (one filter per channel).
+    DwConv { kh: usize, kw: usize, stride: usize, channels: usize },
+    /// Fully-connected / linear.
+    Fc { cin: usize, cout: usize },
+}
+
+/// One compute layer of a CNN.
+#[derive(Clone, Debug)]
+pub struct LayerDef {
+    /// Short name, e.g. `"conv2_1/3x3"`.
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input spatial size (H == W for the evaluated nets); 1 for FC.
+    pub in_hw: usize,
+}
+
+impl LayerDef {
+    pub fn conv(
+        name: &str,
+        in_hw: usize,
+        kh: usize,
+        stride: usize,
+        cin: usize,
+        cout: usize,
+    ) -> LayerDef {
+        LayerDef {
+            name: name.to_string(),
+            kind: LayerKind::Conv { kh, kw: kh, stride, cin, cout },
+            in_hw,
+        }
+    }
+
+    pub fn dw(name: &str, in_hw: usize, kh: usize, stride: usize, channels: usize) -> LayerDef {
+        LayerDef {
+            name: name.to_string(),
+            kind: LayerKind::DwConv { kh, kw: kh, stride, channels },
+            in_hw,
+        }
+    }
+
+    pub fn fc(name: &str, cin: usize, cout: usize) -> LayerDef {
+        LayerDef { name: name.to_string(), kind: LayerKind::Fc { cin, cout }, in_hw: 1 }
+    }
+
+    /// Output spatial size ("same" padding for stride 1, halving for
+    /// stride 2 — the convention of both evaluated networks).
+    pub fn out_hw(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { stride, .. } | LayerKind::DwConv { stride, .. } => {
+                self.in_hw.div_ceil(stride)
+            }
+            LayerKind::Fc { .. } => 1,
+        }
+    }
+
+    /// The layer's GEMM shape under the module's lowering conventions.
+    pub fn gemm(&self) -> GemmShape {
+        let s = self.out_hw();
+        match self.kind {
+            LayerKind::Conv { kh, kw, cin, cout, .. } => GemmShape::new(s * s, cin * kh * kw, cout),
+            LayerKind::DwConv { kh, kw, channels, .. } => GemmShape::new(s * s, kh * kw, channels),
+            LayerKind::Fc { cin, cout } => GemmShape::new(1, cin, cout),
+        }
+    }
+
+    /// Multiply-accumulate count of the layer.
+    pub fn macs(&self) -> u64 {
+        self.gemm().macs()
+    }
+
+    /// Parameter (weight) count.
+    pub fn params(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { kh, kw, cin, cout, .. } => (kh * kw * cin * cout) as u64,
+            LayerKind::DwConv { kh, kw, channels, .. } => (kh * kw * channels) as u64,
+            LayerKind::Fc { cin, cout } => (cin * cout) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_gemm_lowering() {
+        // 3×3 s2 conv, 224→112, 3→32 channels (MobileNet conv1).
+        let l = LayerDef::conv("conv1", 224, 3, 2, 3, 32);
+        assert_eq!(l.out_hw(), 112);
+        assert_eq!(l.gemm(), GemmShape::new(112 * 112, 27, 32));
+        assert_eq!(l.macs(), 112 * 112 * 27 * 32);
+    }
+
+    #[test]
+    fn dw_gemm_lowering() {
+        let l = LayerDef::dw("dw2", 112, 3, 2, 64);
+        assert_eq!(l.out_hw(), 56);
+        assert_eq!(l.gemm(), GemmShape::new(56 * 56, 9, 64));
+        assert_eq!(l.params(), 9 * 64);
+    }
+
+    #[test]
+    fn fc_lowering() {
+        let l = LayerDef::fc("fc", 1024, 1000);
+        assert_eq!(l.gemm(), GemmShape::new(1, 1024, 1000));
+        assert_eq!(l.params(), 1_024_000);
+    }
+
+    #[test]
+    fn stride_one_preserves_spatial() {
+        let l = LayerDef::conv("c", 56, 3, 1, 64, 64);
+        assert_eq!(l.out_hw(), 56);
+    }
+}

@@ -1,0 +1,90 @@
+//! MobileNetV1 (224×224, width 1.0) layer table [18].
+//!
+//! 28 compute layers: the stem convolution, 13 depthwise/pointwise
+//! pairs, and the classifier.  Shapes follow Table 1 of Howard et al.,
+//! arXiv:1704.04861.
+
+use super::layer::LayerDef;
+
+/// The 28 compute layers of MobileNetV1.
+pub fn layers() -> Vec<LayerDef> {
+    let mut l = Vec::with_capacity(28);
+    l.push(LayerDef::conv("conv1", 224, 3, 2, 3, 32));
+    // (in_hw, stride, cin, cout) per separable block.
+    let blocks: [(usize, usize, usize, usize); 13] = [
+        (112, 1, 32, 64),
+        (112, 2, 64, 128),
+        (56, 1, 128, 128),
+        (56, 2, 128, 256),
+        (28, 1, 256, 256),
+        (28, 2, 256, 512),
+        (14, 1, 512, 512),
+        (14, 1, 512, 512),
+        (14, 1, 512, 512),
+        (14, 1, 512, 512),
+        (14, 1, 512, 512),
+        (14, 2, 512, 1024),
+        (7, 1, 1024, 1024),
+    ];
+    for (i, &(hw, s, cin, cout)) in blocks.iter().enumerate() {
+        let n = i + 2; // block numbering matches the paper's layer index
+        l.push(LayerDef::dw(&format!("conv{n}/dw"), hw, 3, s, cin));
+        l.push(LayerDef::conv(&format!("conv{n}/pw"), hw / s, 1, 1, cin, cout));
+    }
+    l.push(LayerDef::fc("fc", 1024, 1000));
+    l
+}
+
+/// Total multiply-accumulates of the network (for sanity checks).
+pub fn total_macs() -> u64 {
+    layers().iter().map(|l| l.macs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::layer::LayerKind;
+
+    #[test]
+    fn has_28_compute_layers() {
+        assert_eq!(layers().len(), 28);
+    }
+
+    #[test]
+    fn macs_match_published_figure() {
+        // MobileNetV1 is cited at ~569M mult-adds (Howard et al. §4).
+        let m = total_macs();
+        assert!(
+            (540_000_000..600_000_000).contains(&m),
+            "MobileNet MACs {m} outside published ~569M band"
+        );
+    }
+
+    #[test]
+    fn params_match_published_figure() {
+        // ~4.2M parameters (conv + fc, ignoring BN).
+        let p: u64 = layers().iter().map(|l| l.params()).sum();
+        assert!((4_000_000..4_400_000).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn structure_alternates_dw_pw() {
+        let ls = layers();
+        for i in 0..13 {
+            let dw = &ls[1 + 2 * i];
+            let pw = &ls[2 + 2 * i];
+            assert!(matches!(dw.kind, LayerKind::DwConv { .. }), "{}", dw.name);
+            assert!(matches!(pw.kind, LayerKind::Conv { kh: 1, .. }), "{}", pw.name);
+            // The pointwise conv consumes the depthwise output resolution.
+            assert_eq!(pw.in_hw, dw.out_hw());
+        }
+    }
+
+    #[test]
+    fn final_feature_map_is_7x7x1024() {
+        let ls = layers();
+        let last_pw = &ls[27 - 1];
+        assert_eq!(last_pw.out_hw(), 7);
+        assert!(matches!(last_pw.kind, LayerKind::Conv { cout: 1024, .. }));
+    }
+}

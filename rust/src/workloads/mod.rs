@@ -1,0 +1,14 @@
+//! Evaluated workloads: CNN layer tables and synthetic GEMM generators.
+//!
+//! * [`layer`] — layer descriptors → im2col GEMM lowering.
+//! * [`mobilenet`] — MobileNetV1 224² (28 compute layers) [18].
+//! * [`resnet50`] — ResNet-50 224² (53 convs + FC) [19].
+//! * [`gemm`] — synthetic GEMM data with ImageNet-like statistics.
+
+pub mod gemm;
+pub mod layer;
+pub mod mobilenet;
+pub mod resnet50;
+
+pub use gemm::GemmData;
+pub use layer::{LayerDef, LayerKind};

@@ -1,0 +1,107 @@
+//! ResNet-50 (224×224) layer table [19].
+//!
+//! 54 compute layers: the 7×7 stem, 16 bottleneck blocks (each 1×1 →
+//! 3×3 → 1×1, with a 1×1 projection on the first block of every stage),
+//! and the classifier.  53 convolutions + 1 FC, matching He et al.,
+//! CVPR 2016, Table 1.
+
+use super::layer::LayerDef;
+
+/// Emit one bottleneck block's convolutions.
+fn bottleneck(
+    l: &mut Vec<LayerDef>,
+    stage: usize,
+    block: usize,
+    in_hw: usize,
+    cin: usize,
+    mid: usize,
+    stride: usize,
+) {
+    let tag = |part: &str| format!("conv{stage}_{block}/{part}");
+    let cout = 4 * mid;
+    // 1×1 reduce (carries the stride in the torchvision/v1.5 convention).
+    l.push(LayerDef::conv(&tag("1x1a"), in_hw, 1, 1, cin, mid));
+    l.push(LayerDef::conv(&tag("3x3"), in_hw, 3, stride, mid, mid));
+    l.push(LayerDef::conv(&tag("1x1b"), in_hw / stride, 1, 1, mid, cout));
+    if block == 1 {
+        // Projection shortcut on the first block of each stage.
+        l.push(LayerDef::conv(&tag("proj"), in_hw, 1, stride, cin, cout));
+    }
+}
+
+/// The 54 compute layers of ResNet-50.
+pub fn layers() -> Vec<LayerDef> {
+    let mut l = Vec::with_capacity(54);
+    l.push(LayerDef::conv("conv1", 224, 7, 2, 3, 64));
+    // conv1 output 112×112 is max-pooled (s2) to 56×56 before stage 2.
+    // (stage, blocks, in_hw, mid, stride of first block)
+    let stages: [(usize, usize, usize, usize, usize); 4] =
+        [(2, 3, 56, 64, 1), (3, 4, 56, 128, 2), (4, 6, 28, 256, 2), (5, 3, 14, 512, 2)];
+    for &(stage, blocks, mut in_hw, mid, first_stride) in &stages {
+        let mut cin = if stage == 2 { 64 } else { 2 * mid };
+        for b in 1..=blocks {
+            let stride = if b == 1 { first_stride } else { 1 };
+            bottleneck(&mut l, stage, b, in_hw, cin, mid, stride);
+            in_hw /= stride;
+            cin = 4 * mid;
+        }
+    }
+    l.push(LayerDef::fc("fc", 2048, 1000));
+    l
+}
+
+/// Total multiply-accumulates (sanity checks).
+pub fn total_macs() -> u64 {
+    layers().iter().map(|l| l.macs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::layer::LayerKind;
+
+    #[test]
+    fn has_53_convs_plus_fc() {
+        let ls = layers();
+        assert_eq!(ls.len(), 54);
+        let convs =
+            ls.iter().filter(|l| matches!(l.kind, LayerKind::Conv { .. })).count();
+        assert_eq!(convs, 53);
+    }
+
+    #[test]
+    fn macs_match_published_figure() {
+        // ResNet-50 is cited at ~3.8–4.1 GMACs at 224².
+        let m = total_macs();
+        assert!(
+            (3_700_000_000..4_200_000_000).contains(&m),
+            "ResNet50 MACs {m} outside published ~3.8G band"
+        );
+    }
+
+    #[test]
+    fn params_match_published_figure() {
+        // ~25.5M parameters; conv+fc (no BN) ≈ 25.0M.
+        let p: u64 = layers().iter().map(|l| l.params()).sum();
+        assert!((24_000_000..26_000_000).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn stage_resolutions_halve() {
+        let ls = layers();
+        // Last conv of the net runs at 7×7.
+        let last_conv = ls.iter().rev().find(|l| matches!(l.kind, LayerKind::Conv { .. })).unwrap();
+        assert_eq!(last_conv.out_hw(), 7);
+        // Stage 2 runs at 56.
+        assert!(ls.iter().any(|l| l.name == "conv2_1/3x3" && l.in_hw == 56));
+        assert!(ls.iter().any(|l| l.name == "conv5_3/1x1b" && l.out_hw() == 7));
+    }
+
+    #[test]
+    fn projection_only_on_first_blocks() {
+        let ls = layers();
+        let projs: Vec<&str> =
+            ls.iter().filter(|l| l.name.ends_with("/proj")).map(|l| l.name.as_str()).collect();
+        assert_eq!(projs, vec!["conv2_1/proj", "conv3_1/proj", "conv4_1/proj", "conv5_1/proj"]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Coordinator integration: multi-worker GEMM runs, backpressure,
+//! failure injection, end-to-end layer sweeps.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::config::{NumericMode, RunConfig};
+use skewsa::coordinator::{Coordinator, Executor, FaultPlan};
+use skewsa::pe::PipelineKind;
+use skewsa::sa::tile::{GemmShape, TilePlan};
+use skewsa::workloads::gemm::GemmData;
+use skewsa::workloads::mobilenet;
+use std::sync::Arc;
+
+#[test]
+fn multi_worker_multi_tile_gemm_verifies() {
+    let mut cfg = RunConfig::small();
+    cfg.workers = 4;
+    cfg.verify_fraction = 1.0;
+    let shape = GemmShape::new(24, 70, 40); // 9 K-tiles × 5 N-tiles
+    let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, 0xabcd));
+    let r = Coordinator::new(cfg).run_gemm(PipelineKind::Skewed, &data);
+    assert!(r.verify.ok(), "{:?}", r.verify);
+    assert_eq!(r.verify.checked, 24 * 40);
+    // All workers contributed (45 jobs across 4 workers).
+    assert!(r.per_worker.len() >= 2, "{:?}", r.per_worker);
+}
+
+#[test]
+fn tiny_queue_backpressure_still_completes() {
+    let mut cfg = RunConfig::small();
+    cfg.workers = 2;
+    cfg.queue_depth = 1; // maximal backpressure
+    cfg.verify_fraction = 1.0;
+    let shape = GemmShape::new(8, 33, 30);
+    let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, 0x9911));
+    let r = Coordinator::new(cfg).run_gemm(PipelineKind::Baseline3b, &data);
+    assert!(r.verify.ok());
+}
+
+#[test]
+fn worker_failures_recovered_transparently() {
+    let mut cfg = RunConfig::small();
+    cfg.workers = 3;
+    let shape = GemmShape::new(6, 40, 24);
+    let data = GemmData::integer_valued(shape, FpFormat::BF16, 0x77);
+    let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+    let mut ex = Executor::new(cfg, PipelineKind::Skewed);
+    ex.fault = FaultPlan { worker: 1, failures: 3 };
+    let out = ex.run(&Arc::new(data.clone()), &plan);
+    assert!(out.retries >= 1 && out.retries <= 3 * Executor::MAX_RETRIES);
+    // Numerics unharmed.
+    let want = data.reference_f64();
+    for m in 0..shape.m {
+        for n in 0..shape.n {
+            assert_eq!(out.y[m * shape.n + n] as f64, want[m][n]);
+        }
+    }
+}
+
+#[test]
+fn single_worker_equals_many_workers_bitwise() {
+    let shape = GemmShape::new(10, 50, 20);
+    let data = Arc::new(GemmData::adversarial(shape, FpFormat::BF16, 5));
+    let run = |workers: usize| -> Vec<u32> {
+        let mut cfg = RunConfig::small();
+        cfg.workers = workers;
+        cfg.verify_fraction = 0.0;
+        let r = Coordinator::new(cfg).run_gemm(PipelineKind::Skewed, &data);
+        r.y.iter().map(|v| v.to_bits()).collect()
+    };
+    assert_eq!(run(1), run(6), "determinism across pool sizes");
+}
+
+#[test]
+fn mobilenet_first_block_end_to_end_scaled() {
+    // The first three MobileNet layers, scaled to a 16×16 array, with
+    // full verification — the e2e driver in miniature.
+    let mut cfg = RunConfig::small();
+    cfg.rows = 16;
+    cfg.cols = 16;
+    cfg.workers = 4;
+    cfg.verify_fraction = 0.05;
+    let coord = Coordinator::new(cfg.clone());
+    for l in mobilenet::layers().iter().take(3) {
+        let mut shape = l.gemm();
+        // Scale M down so the test stays quick; K/N keep layer structure.
+        shape = GemmShape::new(shape.m.min(64), shape.k, shape.n);
+        let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, 0x600d));
+        let r = coord.run_gemm(PipelineKind::Skewed, &data);
+        assert!(r.verify.ok(), "layer {} failed verify", l.name);
+    }
+}
+
+#[test]
+fn cycle_mode_coordinator_run() {
+    let mut cfg = RunConfig::small();
+    cfg.mode = NumericMode::CycleAccurate;
+    cfg.verify_fraction = 1.0;
+    let shape = GemmShape::new(5, 20, 10);
+    let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, 0xc1c1e));
+    let r = Coordinator::new(cfg).run_gemm(PipelineKind::Skewed, &data);
+    assert!(r.verify.ok());
+}
+
+#[test]
+fn config_files_load_and_drive_runs() {
+    use skewsa::util::mini_json::Json;
+    // Every shipped config parses and applies cleanly.
+    for path in ["configs/paper.json", "configs/small.json", "configs/fp8.json"] {
+        let mut cfg = RunConfig::paper();
+        cfg.apply_file(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+        // And round-trips through the JSON layer.
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(Json::parse(&text).is_ok(), "{path}");
+    }
+    // The fp8 config runs a verified reduced-precision GEMM end-to-end.
+    let mut cfg = RunConfig::small();
+    cfg.apply_file("configs/fp8.json").unwrap();
+    cfg.rows = 8;
+    cfg.cols = 8;
+    cfg.verify_fraction = 1.0;
+    assert_eq!(cfg.in_fmt, FpFormat::FP8E4M3);
+    let data = Arc::new(GemmData::cnn_like(GemmShape::new(6, 16, 6), cfg.in_fmt, 1));
+    let r = Coordinator::new(cfg).run_gemm(PipelineKind::Skewed, &data);
+    assert!(r.verify.ok(), "{:?}", r.verify);
+}

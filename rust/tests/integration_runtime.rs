@@ -1,0 +1,142 @@
+//! Runtime integration: artifact load/execute round-trip vs host math.
+//!
+//! These tests need `make artifacts` to have run; when artifacts are
+//! absent they skip (printing why) rather than fail, so `cargo test`
+//! stays green on a fresh checkout.
+
+use skewsa::runtime::GoldenRuntime;
+use skewsa::util::rng::Rng;
+
+fn golden() -> Option<GoldenRuntime> {
+    let g = GoldenRuntime::try_open();
+    if g.is_none() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    g
+}
+
+fn host_gemm_bf16(a: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    // Mirror the artifact semantics: bf16-quantized inputs, f32 products
+    // accumulated in f32 (XLA rounds after every add).
+    let q = |x: f32| -> f32 {
+        let bits = skewsa::arith::format::FpFormat::BF16.from_f32(x);
+        skewsa::arith::format::FpFormat::BF16.to_f32(bits)
+    };
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = q(a[i * k + kk]);
+            for j in 0..n {
+                y[i * n + j] += av * q(w[kk * n + j]);
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(g) = golden() else { return };
+    assert!(g.artifacts.len() >= 4, "artifacts: {:?}", g.artifacts.names().collect::<Vec<_>>());
+    assert!(g.artifacts.all_present());
+    assert!(g.artifacts.find_gemm(64, 128, 64).is_some());
+}
+
+#[test]
+fn gemm_artifact_round_trip_small() {
+    let Some(g) = golden() else { return };
+    let (m, k, n) = (8, 16, 8);
+    let mut rng = Rng::new(0xfeed);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let y = g.run_gemm_f32(m, k, n, &a, &w).expect("execute").expect("artifact exists");
+    let want = host_gemm_bf16(&a, &w, m, k, n);
+    for (i, (&got, &want)) in y.iter().zip(&want).enumerate() {
+        let tol = 1e-2 * (1.0 + want.abs());
+        assert!((got - want).abs() <= tol, "y[{i}]: {got} vs {want}");
+    }
+}
+
+#[test]
+fn gemm_artifact_round_trip_large() {
+    let Some(g) = golden() else { return };
+    let (m, k, n) = (64, 128, 64);
+    let mut rng = Rng::new(0xdead);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let y = g.run_gemm_f32(m, k, n, &a, &w).expect("execute").expect("artifact exists");
+    let want = host_gemm_bf16(&a, &w, m, k, n);
+    let mut max_rel = 0.0f32;
+    for (&got, &want) in y.iter().zip(&want) {
+        max_rel = max_rel.max((got - want).abs() / (1.0 + want.abs()));
+    }
+    // XLA may reassociate the K loop; bf16 products in f32 keep this small.
+    assert!(max_rel < 2e-2, "max rel err {max_rel}");
+}
+
+#[test]
+fn tiny_cnn_artifact_executes() {
+    let Some(g) = golden() else { return };
+    let exe = g.load("tiny_cnn_16x16x4").expect("load tiny_cnn");
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..16 * 16 * 4).map(|_| rng.normal() as f32).collect();
+    let w1: Vec<f32> = (0..3 * 3 * 4 * 8).map(|_| rng.normal() as f32 * 0.3).collect();
+    let w2: Vec<f32> = (0..3 * 3 * 8 * 16).map(|_| rng.normal() as f32 * 0.3).collect();
+    let wfc: Vec<f32> = (0..16 * 10).map(|_| rng.normal() as f32 * 0.3).collect();
+    let y = exe
+        .run_f32(&[
+            (&x, &[1, 16, 16, 4]),
+            (&w1, &[3, 3, 4, 8]),
+            (&w2, &[3, 3, 8, 16]),
+            (&wfc, &[16, 10]),
+        ])
+        .expect("execute tiny_cnn");
+    assert_eq!(y.len(), 10);
+    assert!(y.iter().all(|v| v.is_finite()), "{y:?}");
+    assert!(y.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn shape_validation_rejects_bad_calls() {
+    let Some(g) = golden() else { return };
+    let exe = g.load("gemm_bf16_8x16x8").expect("load");
+    let a = vec![0f32; 8 * 16];
+    let w = vec![0f32; 16 * 8];
+    // Wrong declared shape.
+    assert!(exe.run_f32(&[(&a, &[16, 8]), (&w, &[16, 8])]).is_err());
+    // Wrong arity.
+    assert!(exe.run_f32(&[(&a, &[8, 16])]).is_err());
+}
+
+#[test]
+fn coordinator_matches_runtime_golden() {
+    // The end-to-end golden path (DESIGN §7): bit-accurate simulator
+    // output vs the XLA artifact, tolerance-based.
+    let Some(g) = golden() else { return };
+    use skewsa::arith::format::FpFormat;
+    use skewsa::config::RunConfig;
+    use skewsa::coordinator::Coordinator;
+    use skewsa::pe::PipelineKind;
+    use skewsa::sa::tile::GemmShape;
+    use skewsa::workloads::gemm::GemmData;
+    use std::sync::Arc;
+
+    let (m, k, n) = (64, 128, 64);
+    let mut cfg = RunConfig::small();
+    cfg.rows = 32;
+    cfg.cols = 32;
+    let data = Arc::new(GemmData::cnn_like(GemmShape::new(m, k, n), FpFormat::BF16, 99));
+    let r = Coordinator::new(cfg).run_gemm(PipelineKind::Skewed, &data);
+    assert!(r.verify.ok());
+
+    // Feed the same (bf16-rounded) values to the artifact as f32.
+    let a: Vec<f32> = data.a.iter().flatten().map(|&b| FpFormat::BF16.to_f32(b)).collect();
+    let w: Vec<f32> = data.w.iter().flatten().map(|&b| FpFormat::BF16.to_f32(b)).collect();
+    let gold = g.run_gemm_f32(m, k, n, &a, &w).expect("execute").expect("artifact");
+    let mut max_rel = 0.0f32;
+    for (&sim, &x) in r.y.iter().zip(&gold) {
+        max_rel = max_rel.max((sim - x).abs() / (1.0 + x.abs()));
+    }
+    // Simulator rounds once per column; XLA rounds per add: ≤ 2 ulp-ish.
+    assert!(max_rel < 2e-2, "sim vs XLA golden max rel err {max_rel}");
+}

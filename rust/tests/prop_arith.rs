@@ -1,0 +1,213 @@
+//! Property suite over the arithmetic substrate (DESIGN.md §9):
+//! skewed ≡ baseline bit-identity, softfloat exactness, rounding and
+//! LZA invariants — random plus adversarially-structured inputs.
+
+use skewsa::arith::accum::{ColumnOracle, RoundingUnit};
+use skewsa::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
+use skewsa::arith::format::{FpClass, FpFormat};
+use skewsa::arith::lza::{lza_anticipate, lzc};
+use skewsa::arith::softfloat::{pow2, ExactChain};
+use skewsa::util::prop::{Gen, Prop};
+
+const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+fn random_finite_bf16(g: &mut Gen) -> u64 {
+    loop {
+        let bits = g.bits(16);
+        if FpFormat::BF16.decode(bits).is_finite() {
+            return bits;
+        }
+    }
+}
+
+fn canon(s: &PsumSignal) -> (bool, i32, u64, bool) {
+    if s.val.sig == 0 {
+        return (false, 0, 0, s.val.sticky);
+    }
+    let l = lzc(s.val.sig, CFG.window);
+    (s.val.sign, s.val.exp_top - l as i32, s.val.sig << l, s.val.sticky)
+}
+
+/// THE paper property: the skewed datapath's speculation + fix is exact,
+/// so chained results are bit-identical to the baseline — over random
+/// chains of arbitrary finite bf16 values (subnormals included).
+#[test]
+fn prop_skewed_equals_baseline_random_chains() {
+    Prop::new("skew-eq-base", 400).run(|g| {
+        let len = g.usize_in(1, 96);
+        let mut b = PsumSignal::zero(&CFG);
+        let mut s = PsumSignal::zero(&CFG);
+        for _ in 0..len {
+            let a = random_finite_bf16(g);
+            let w = random_finite_bf16(g);
+            b = BaselineFmaPath.step(&CFG, &b, a, w);
+            s = SkewedFmaPath.step(&CFG, &s, a, w);
+        }
+        g.assert_eq("canonical signals equal", canon(&b), canon(&s));
+        let ru = RoundingUnit::new(CFG);
+        g.assert_eq("rounded bits equal", ru.round(&b), ru.round(&s));
+    });
+}
+
+/// Same property under adversarial cancellation: pairs engineered to
+/// cancel to a few ulps, forcing large LZA counts and deep speculation
+/// corrections.
+#[test]
+fn prop_skewed_equals_baseline_cancellation() {
+    Prop::new("skew-eq-base-cancel", 300).run(|g| {
+        let f = FpFormat::BF16;
+        let len = g.usize_in(2, 48);
+        let mut b = PsumSignal::zero(&CFG);
+        let mut s = PsumSignal::zero(&CFG);
+        let mut last: Option<(u64, u64)> = None;
+        for i in 0..len {
+            let (a, w) = if i % 2 == 1 && g.chance(0.8) {
+                // Near-perfect cancellation of the previous product.
+                let (pa, pw) = last.unwrap();
+                let tweak = if g.chance(0.5) { 0 } else { 1 };
+                (pa ^ (1 << 15), pw ^ tweak)
+            } else {
+                (random_finite_bf16(g), random_finite_bf16(g))
+            };
+            last = Some((a, w));
+            if !f.decode(a).is_finite() || !f.decode(w).is_finite() {
+                continue;
+            }
+            b = BaselineFmaPath.step(&CFG, &b, a, w);
+            s = SkewedFmaPath.step(&CFG, &s, a, w);
+        }
+        g.assert_eq("cancel chains equal", canon(&b), canon(&s));
+    });
+}
+
+/// The skewed ê/L bundle is self-consistent: L always equals the true
+/// leading-zero count of the forwarded raw sum, and ê−L equals the
+/// baseline's corrected exponent.
+#[test]
+fn prop_speculative_bundle_consistent() {
+    Prop::new("spec-bundle", 300).run(|g| {
+        let len = g.usize_in(1, 32);
+        let mut b = PsumSignal::zero(&CFG);
+        let mut s = PsumSignal::zero(&CFG);
+        for _ in 0..len {
+            let a = random_finite_bf16(g);
+            let w = random_finite_bf16(g);
+            b = BaselineFmaPath.step(&CFG, &b, a, w);
+            s = SkewedFmaPath.step(&CFG, &s, a, w);
+            if s.val.sig != 0 {
+                g.assert_eq("L == lzc(raw)", s.lza, lzc(s.val.sig, CFG.window));
+                g.assert_eq("ê−L == corrected", s.corrected_top(), b.val.exp_top);
+            }
+        }
+    });
+}
+
+/// Column oracle == exact chain when inputs are integer-valued (no
+/// window loss), for any column depth.
+#[test]
+fn prop_oracle_equals_exact_on_integers() {
+    Prop::new("oracle-exact-int", 250).run(|g| {
+        let len = g.usize_in(1, 128);
+        let mut o = ColumnOracle::new(CFG);
+        let mut e = ExactChain::new();
+        for _ in 0..len {
+            let a = FpFormat::BF16.from_f64(g.i64_in(-64, 64) as f64);
+            let w = FpFormat::BF16.from_f64(g.i64_in(-16, 16) as f64);
+            o.mac(a, w);
+            e.mac(FpFormat::BF16, a, w);
+        }
+        g.assert_eq("rounded results equal", o.result(), e.result(FpFormat::FP32));
+    });
+}
+
+/// Softfloat format round-trip: decode∘encode is the identity on every
+/// non-NaN pattern of every reduced format.
+#[test]
+fn prop_format_roundtrip() {
+    Prop::new("format-roundtrip", 400).run(|g| {
+        let fmt = *g.choose(&[
+            FpFormat::BF16,
+            FpFormat::FP16,
+            FpFormat::FP8E4M3,
+            FpFormat::FP8E5M2,
+        ]);
+        let bits = g.bits(fmt.width());
+        let x = fmt.to_f64(bits);
+        if x.is_nan() {
+            g.assert("nan classifies", fmt.decode(bits).class == FpClass::Nan);
+        } else {
+            g.assert_eq("roundtrip", fmt.from_f64(x), bits);
+        }
+    });
+}
+
+/// LZA anticipator invariant: within one of the exact count, both
+/// effective operations, across widths.
+#[test]
+fn prop_lza_within_one() {
+    Prop::new("lza-within-one", 500).run(|g| {
+        let width = g.usize_in(4, 48) as u32;
+        let a = g.bits(width);
+        let b = g.bits(width);
+        let sum = a + b;
+        if sum >> width == 0 && sum != 0 {
+            let ant = lza_anticipate(a, b, width, false);
+            g.assert("add ±1", ant.abs_diff(lzc(sum, width)) <= 1);
+        }
+        let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+        if hi != lo {
+            let ant = lza_anticipate(hi, lo, width, true);
+            g.assert("sub ±1", ant.abs_diff(lzc(hi - lo, width)) <= 1);
+        }
+    });
+}
+
+/// Rounding unit: the final result is within half an output ulp of the
+/// exact chain value (single-rounding bound), whenever no window loss
+/// occurred (sticky clear).
+#[test]
+fn prop_single_rounding_bound() {
+    Prop::new("round-half-ulp", 250).run(|g| {
+        let len = g.usize_in(1, 24);
+        let mut o = ColumnOracle::new(CFG);
+        let mut e = ExactChain::new();
+        for _ in 0..len {
+            let a = FpFormat::BF16.from_f64(g.normal(0.0, 4.0));
+            let w = FpFormat::BF16.from_f64(g.normal(0.0, 1.0));
+            o.mac(a, w);
+            e.mac(FpFormat::BF16, a, w);
+        }
+        if o.signal().val.sticky {
+            return; // window loss: the bound below doesn't apply
+        }
+        let got = FpFormat::FP32.to_f64(o.result());
+        let want = e.value_f64();
+        let ulp = pow2((want.abs().log2().floor() as i32 - 23).clamp(-149, 127));
+        g.assert(
+            "within half ulp",
+            (got - want).abs() <= 0.5 * ulp + f64::EPSILON * want.abs(),
+        );
+    });
+}
+
+/// Chain order sensitivity: permuting terms may change low bits but the
+/// exact reference catches gross errors — sim result always within 2
+/// fp32 ulps of the exact sum for CNN-like data.
+#[test]
+fn prop_chain_close_to_exact_cnn_data() {
+    Prop::new("chain-close-exact", 200).run(|g| {
+        let len = g.usize_in(1, 128);
+        let mut o = ColumnOracle::new(CFG);
+        let mut e = ExactChain::new();
+        for _ in 0..len {
+            let a = FpFormat::BF16.from_f64(g.normal(0.0, 1.0).max(0.0));
+            let w = FpFormat::BF16.from_f64(g.normal(0.0, 0.2));
+            o.mac(a, w);
+            e.mac(FpFormat::BF16, a, w);
+        }
+        let got = FpFormat::FP32.to_f64(o.result()) ;
+        let want = e.value_f64();
+        let scale = want.abs().max(pow2(-20));
+        g.assert("within 2^-21 relative", ((got - want) / scale).abs() < pow2(-21));
+    });
+}

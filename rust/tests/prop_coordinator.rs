@@ -1,0 +1,149 @@
+//! Property suite over the coordinator (DESIGN.md §9): tile assembly ≡
+//! full-matrix oracle, completion-order invariance, router balance.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::config::{NumericMode, RunConfig};
+use skewsa::coordinator::scheduler::Scheduler;
+use skewsa::coordinator::state::{RunState, TileResult};
+use skewsa::coordinator::{eval_tile, verify_oracle_sampled, Coordinator, Policy, Router};
+use skewsa::pe::PipelineKind;
+use skewsa::sa::tile::{GemmShape, TilePlan};
+use skewsa::util::prop::{Gen, Prop};
+use skewsa::workloads::gemm::GemmData;
+use std::sync::Arc;
+
+/// Assembled tile results equal the whole-matrix oracle for random
+/// shapes/seeds (bit-exact, sampled exhaustively for small outputs).
+#[test]
+fn prop_assembly_equals_oracle() {
+    Prop::new("assembly-eq-oracle", 12).run(|g: &mut Gen| {
+        let shape = GemmShape::new(g.usize_in(1, 12), g.usize_in(1, 40), g.usize_in(1, 14));
+        let seed = g.bits(32);
+        let mut cfg = RunConfig::small();
+        cfg.verify_fraction = 1.0;
+        cfg.workers = g.usize_in(1, 4);
+        let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, seed));
+        let r = Coordinator::new(cfg).run_gemm(PipelineKind::Skewed, &data);
+        g.assert("verified bit-exact", r.verify.ok());
+        g.assert_eq("checked all", r.verify.checked, shape.m * shape.n);
+    });
+}
+
+/// Assembly is invariant to tile completion order: folding results in
+/// any permutation produces identical bits.
+#[test]
+fn prop_assembly_order_invariant() {
+    Prop::new("assembly-order", 25).run(|g: &mut Gen| {
+        let shape = GemmShape::new(g.usize_in(1, 6), g.usize_in(9, 40), g.usize_in(9, 20));
+        let data = GemmData::cnn_like(shape, FpFormat::BF16, g.bits(32));
+        let plan = TilePlan::new(shape, 8, 8);
+        let sched = Scheduler::new(&plan);
+        let chain = RunConfig::small().chain();
+        let results: Vec<TileResult> = sched
+            .jobs()
+            .iter()
+            .map(|&job| TileResult {
+                job,
+                y_part: eval_tile(&chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &job),
+                worker: 0,
+            })
+            .collect();
+        // In-order assembly.
+        let mut st1 = RunState::new(shape.m, shape.n, 8, results.len());
+        for r in &results {
+            st1.accept(r.clone());
+        }
+        let y1 = st1.into_result();
+        // Shuffled assembly.
+        let mut order: Vec<usize> = (0..results.len()).collect();
+        for i in (1..order.len()).rev() {
+            let j = g.usize_in(0, i);
+            order.swap(i, j);
+        }
+        let mut st2 = RunState::new(shape.m, shape.n, 8, results.len());
+        for &i in &order {
+            st2.accept(results[i].clone());
+        }
+        let y2 = st2.into_result();
+        let b1: Vec<u32> = y1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = y2.iter().map(|v| v.to_bits()).collect();
+        g.assert_eq("order-invariant bits", b1, b2);
+    });
+}
+
+/// Numeric mode equivalence: oracle-mode and cycle-accurate-mode tiles
+/// produce identical bits (the sim IS the oracle with timing).
+#[test]
+fn prop_modes_equivalent() {
+    Prop::new("modes-equivalent", 8).run(|g: &mut Gen| {
+        let shape = GemmShape::new(g.usize_in(1, 6), g.usize_in(1, 24), g.usize_in(1, 10));
+        let seed = g.bits(32);
+        let data = Arc::new(GemmData::adversarial(shape, FpFormat::BF16, seed));
+        let mut cfg = RunConfig::small();
+        cfg.verify_fraction = 0.0;
+        let mut c1 = cfg.clone();
+        c1.mode = NumericMode::Oracle;
+        let mut c2 = cfg;
+        c2.mode = NumericMode::CycleAccurate;
+        let y1 = Coordinator::new(c1).run_gemm(PipelineKind::Skewed, &data).y;
+        let y2 = Coordinator::new(c2).run_gemm(PipelineKind::Skewed, &data).y;
+        let b1: Vec<u32> = y1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = y2.iter().map(|v| v.to_bits()).collect();
+        g.assert_eq("oracle == cycle bits", b1, b2);
+    });
+}
+
+/// Router balance bounds: round-robin never skews by more than 1 job
+/// without completions; least-loaded never exceeds the ideal by more
+/// than 1 under random completion patterns.
+#[test]
+fn prop_router_balance() {
+    Prop::new("router-balance", 120).run(|g: &mut Gen| {
+        let workers = g.usize_in(1, 8);
+        let jobs = g.usize_in(1, 200);
+        let rr = Router::new(Policy::RoundRobin, workers);
+        for _ in 0..jobs {
+            rr.dispatch();
+        }
+        g.assert("rr imbalance ≤ 1", rr.imbalance() <= 1);
+
+        let ll = Router::new(Policy::LeastLoaded, workers);
+        let mut inflight: Vec<usize> = Vec::new();
+        let mut max_seen = 0usize;
+        for _ in 0..jobs {
+            inflight.push(ll.dispatch());
+            for w in 0..workers {
+                max_seen = max_seen.max(ll.load(w));
+            }
+            // Randomly complete some jobs.
+            while !inflight.is_empty() && g.chance(0.5) {
+                let idx = g.usize_in(0, inflight.len() - 1);
+                ll.complete(inflight.swap_remove(idx));
+            }
+        }
+        // Upper bound: ceil(jobs/workers)+1 at any instant.
+        let bound = jobs.div_ceil(workers) + 1;
+        g.assert("ll bounded", max_seen <= bound);
+    });
+}
+
+/// Sampled verification catches random single-bit corruption with the
+/// exhaustive fraction.
+#[test]
+fn prop_verification_catches_corruption() {
+    Prop::new("verify-catches", 15).run(|g: &mut Gen| {
+        let shape = GemmShape::new(g.usize_in(2, 6), g.usize_in(4, 24), g.usize_in(2, 8));
+        let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, g.bits(32)));
+        let mut cfg = RunConfig::small();
+        cfg.verify_fraction = 0.0;
+        let coord = Coordinator::new(cfg.clone());
+        let mut r = coord.run_gemm(PipelineKind::Baseline3b, &data);
+        // Flip a mantissa bit somewhere.
+        let idx = g.usize_in(0, r.y.len() - 1);
+        let flipped = f32::from_bits(r.y[idx].to_bits() ^ 1);
+        r.y[idx] = flipped;
+        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let rep = verify_oracle_sampled(&cfg.chain(), &plan, &data, &r.y, 1.0, 1);
+        g.assert("corruption detected", !rep.ok());
+    });
+}

@@ -1,0 +1,139 @@
+//! Property suite over the cycle-accurate simulator: randomized
+//! (M, R, C) dimensions, both pipeline kinds, all invariants at once —
+//! latency ≡ closed form, numerics ≡ oracle, array ≡ column
+//! composition, schedule discipline.
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::arith::format::FpFormat;
+use skewsa::pe::PipelineKind;
+use skewsa::sa::array::ArraySim;
+use skewsa::sa::column::ColumnSim;
+use skewsa::sa::dataflow::WsSchedule;
+use skewsa::sa::tile::GemmShape;
+use skewsa::util::prop::{Gen, Prop};
+use skewsa::workloads::gemm::GemmData;
+
+const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+fn kinds(g: &mut Gen) -> PipelineKind {
+    *g.choose(&[PipelineKind::Baseline3b, PipelineKind::Skewed])
+}
+
+/// Random-dimension array runs: cycle count equals the closed form and
+/// every output lands on its scheduled cycle.
+#[test]
+fn prop_array_latency_equals_schedule() {
+    Prop::new("array-latency", 40).run(|g: &mut Gen| {
+        let (m, r, c) = (g.usize_in(1, 24), g.usize_in(1, 20), g.usize_in(1, 12));
+        let kind = kinds(g);
+        let data = GemmData::cnn_like(GemmShape::new(m, r, c), FpFormat::BF16, g.bits(32));
+        let mut sim = ArraySim::new(CFG, kind, &data.w, data.a);
+        if sim.run(1_000_000).is_err() {
+            g.assert("sim must not violate its own schedule", false);
+            return;
+        }
+        let sched = WsSchedule::new(kind, r, c, m);
+        g.assert_eq("total cycles", sim.cycles(), sched.total_cycles());
+        for o in sim.outputs() {
+            g.assert_eq("output cycle", o.cycle, sched.output_cycle(o.col, o.m));
+        }
+        g.assert_eq("no deep stalls", sim.stalls, 0);
+    });
+}
+
+/// Random-dimension array runs are bit-exact against the value oracle,
+/// for adversarial exponent-spread inputs.
+#[test]
+fn prop_array_bit_exact_vs_oracle() {
+    Prop::new("array-vs-oracle", 25).run(|g: &mut Gen| {
+        let (m, r, c) = (g.usize_in(1, 10), g.usize_in(1, 24), g.usize_in(1, 8));
+        let kind = kinds(g);
+        let data = GemmData::adversarial(GemmShape::new(m, r, c), FpFormat::BF16, g.bits(32));
+        let want = ArraySim::oracle_bits(&CFG, &data.w, &data.a);
+        let mut sim = ArraySim::new(CFG, kind, &data.w, data.a);
+        sim.run(1_000_000).unwrap();
+        g.assert_eq("result bits", sim.result_bits(), want);
+    });
+}
+
+/// The two pipeline kinds agree bit-for-bit on identical random arrays.
+#[test]
+fn prop_kinds_agree_on_arrays() {
+    Prop::new("kinds-agree", 25).run(|g: &mut Gen| {
+        let (m, r, c) = (g.usize_in(1, 8), g.usize_in(1, 24), g.usize_in(1, 8));
+        let data = GemmData::cnn_like(GemmShape::new(m, r, c), FpFormat::BF16, g.bits(32));
+        let mut b = ArraySim::new(CFG, PipelineKind::Baseline3b, &data.w, data.a.clone());
+        let mut s = ArraySim::new(CFG, PipelineKind::Skewed, &data.w, data.a);
+        b.run(1_000_000).unwrap();
+        s.run(1_000_000).unwrap();
+        g.assert_eq("bits equal", b.result_bits(), s.result_bits());
+        // Saving = R−2 per tile: the skewed design wins for R ≥ 3, ties
+        // at R = 2, and pays its extra tail stage at R = 1 (there is no
+        // chain to overlap — a degenerate array the paper never builds).
+        g.assert_eq(
+            "saving is R-2",
+            b.cycles() as i64 - s.cycles() as i64,
+            r as i64 - 2,
+        );
+    });
+}
+
+/// Column extraction: any column of a random array behaves exactly like
+/// a standalone column sim on that column's weights.
+#[test]
+fn prop_column_extraction() {
+    Prop::new("column-extraction", 20).run(|g: &mut Gen| {
+        let (m, r, c) = (g.usize_in(1, 8), g.usize_in(1, 16), g.usize_in(2, 6));
+        let kind = kinds(g);
+        let col = g.usize_in(0, c - 1);
+        let data = GemmData::cnn_like(GemmShape::new(m, r, c), FpFormat::BF16, g.bits(32));
+        let mut arr = ArraySim::new(CFG, kind, &data.w, data.a.clone());
+        arr.run(1_000_000).unwrap();
+        let weights: Vec<u64> = (0..r).map(|k| data.w[k][col]).collect();
+        let mut cs = ColumnSim::new(CFG, kind, &weights, data.a);
+        cs.run(1_000_000).unwrap();
+        let y = arr.result_bits();
+        for o in cs.outputs() {
+            g.assert_eq("column bits", o.bits, y[o.m][col]);
+        }
+    });
+}
+
+/// Different formats: the column sim is self-consistent (sim == oracle)
+/// for every reduced input format, not just bf16.
+#[test]
+fn prop_formats_column_consistent() {
+    Prop::new("formats-column", 30).run(|g: &mut Gen| {
+        let (inf, outf) = *g.choose(&[
+            (FpFormat::BF16, FpFormat::FP32),
+            (FpFormat::FP16, FpFormat::FP32),
+            (FpFormat::FP8E4M3, FpFormat::FP16),
+            (FpFormat::FP8E5M2, FpFormat::FP16),
+        ]);
+        let chain = ChainCfg::new(inf, outf);
+        let kind = kinds(g);
+        let (m, r) = (g.usize_in(1, 6), g.usize_in(1, 32));
+        let finite = |g: &mut Gen| loop {
+            let b = g.bits(inf.width());
+            if inf.decode(b).is_finite() {
+                return b;
+            }
+        };
+        let weights: Vec<u64> = (0..r).map(|_| finite(g)).collect();
+        let a: Vec<Vec<u64>> = (0..m).map(|_| (0..r).map(|_| finite(g)).collect()).collect();
+        let want: Vec<u64> = a
+            .iter()
+            .map(|row| {
+                let mut o = skewsa::arith::accum::ColumnOracle::new(chain);
+                for (k, &w) in weights.iter().enumerate() {
+                    o.mac(row[k], w);
+                }
+                o.result()
+            })
+            .collect();
+        let mut sim = ColumnSim::new(chain, kind, &weights, a);
+        sim.run(1_000_000).unwrap();
+        let got: Vec<u64> = sim.outputs().iter().map(|o| o.bits).collect();
+        g.assert_eq("format column bits", got, want);
+    });
+}
