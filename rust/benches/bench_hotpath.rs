@@ -1,14 +1,25 @@
 //! Hot-path microbenchmarks — the §Perf instrumentation.
 //!
-//! Tracks the three tiers the perf pass optimizes (EXPERIMENTS.md §Perf):
+//! Tracks the four tiers the perf pass optimizes (EXPERIMENTS.md §Perf):
 //!
 //! 1. `oracle-mac` — the value-level chained multiply-add step (the
 //!    coordinator's numeric inner loop);
-//! 2. `column-sim` / `array-sim` — cycle-accurate PE-cycles per second;
-//! 3. `executor` — coordinated GEMM throughput across the worker pool.
+//! 2. `column-sim` / `array-sim` — the dense reference simulators,
+//!    PE-cycles per second;
+//! 3. `fast-sim` — the allocation-free, wavefront-banded, column-parallel
+//!    rewrite ([`skewsa::sa::fast::FastArraySim`]), including the
+//!    paper-scale 128×128 tile the dense loop was never practical for;
+//! 4. `executor` — coordinated GEMM throughput across the worker pool.
+//!
+//! Every run appends its PE-cycles/sec numbers and the fast-vs-dense
+//! speedups to `BENCH_hotpath.json` at the repo root, so the perf
+//! trajectory is tracked across PRs.  Pass `--smoke` (or set
+//! `SKEWSA_BENCH_SMOKE=1`) for a fast CI-grade run with reduced
+//! iteration counts.
 //!
 //! ```text
 //! cargo bench --bench bench_hotpath
+//! cargo bench --bench bench_hotpath -- --smoke
 //! ```
 
 use skewsa::arith::accum::ColumnOracle;
@@ -19,8 +30,9 @@ use skewsa::coordinator::Coordinator;
 use skewsa::pe::PipelineKind;
 use skewsa::sa::array::ArraySim;
 use skewsa::sa::column::ColumnSim;
+use skewsa::sa::fast::FastArraySim;
 use skewsa::sa::tile::GemmShape;
-use skewsa::util::bench::{measure, with_units};
+use skewsa::util::bench::{append_json_run, measure, with_units, Measurement};
 use skewsa::util::rng::Rng;
 use skewsa::workloads::gemm::GemmData;
 use std::sync::Arc;
@@ -28,6 +40,16 @@ use std::sync::Arc;
 const CFG: ChainCfg = ChainCfg::BF16_FP32;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var_os("SKEWSA_BENCH_SMOKE").is_some();
+    // Iteration scaler: smoke runs keep every tier but cut the counts.
+    let it = |full: u32| if smoke { (full / 10).max(1) } else { full };
+    let mut tiers: Vec<(String, f64)> = Vec::new();
+    fn record(m: &Measurement, tiers: &mut Vec<(String, f64)>) {
+        println!("{}", m.report());
+        tiers.push((m.name.clone(), m.throughput()));
+    }
+
     let mut rng = Rng::new(0x407);
     let vals: Vec<(u64, u64)> = (0..1024)
         .map(|_| {
@@ -43,59 +65,110 @@ fn main() {
         ("hot:baseline-step", &BaselineFmaPath as &dyn ChainDatapath),
         ("hot:skewed-step", &SkewedFmaPath as &dyn ChainDatapath),
     ] {
-        let m = measure(name, 3, 200, 7, || {
+        let m = measure(name, 3, it(200), 7, || {
             let mut s = PsumSignal::zero(&CFG);
             for &(a, w) in &vals {
                 s = path.step(&CFG, &s, a, w);
             }
             std::hint::black_box(s.val.sig);
         });
-        println!("{}", with_units(m, 1024.0, "macs").report());
+        record(&with_units(m, 1024.0, "macs"), &mut tiers);
     }
 
     // --- oracle column (step + rounding) ---------------------------------
-    let m = measure("hot:oracle-column-128", 3, 200, 7, || {
+    let m = measure("hot:oracle-column-128", 3, it(200), 7, || {
         let mut o = ColumnOracle::new(CFG);
         for &(a, w) in vals.iter().take(128) {
             o.mac(a, w);
         }
         std::hint::black_box(o.result());
     });
-    println!("{}", with_units(m, 128.0, "macs").report());
+    record(&with_units(m, 128.0, "macs"), &mut tiers);
 
-    // --- 2. cycle-accurate sims ------------------------------------------
+    // --- 2. dense reference sims -----------------------------------------
     let data = GemmData::cnn_like(GemmShape::new(32, 32, 1), FpFormat::BF16, 1);
     let weights: Vec<u64> = (0..32).map(|k| data.w[k][0]).collect();
-    let m = measure("hot:column-sim-32x32", 2, 20, 5, || {
-        let mut sim = ColumnSim::new(CFG, PipelineKind::Skewed, &weights, data.a.clone());
-        sim.run(100_000).unwrap();
-        std::hint::black_box(sim.cycles());
-    });
-    // PE-cycles: cycles × 32 PEs.
     let cycles = {
         let mut sim = ColumnSim::new(CFG, PipelineKind::Skewed, &weights, data.a.clone());
         sim.run(100_000).unwrap();
         sim.cycles()
     };
-    println!("{}", with_units(m, cycles as f64 * 32.0, "PE-cycles").report());
-
-    let adata = GemmData::cnn_like(GemmShape::new(16, 32, 32), FpFormat::BF16, 2);
-    let m = measure("hot:array-sim-32x32xM16", 1, 5, 5, || {
-        let mut sim = ArraySim::new(CFG, PipelineKind::Skewed, &adata.w, adata.a.clone());
-        sim.run(1_000_000).unwrap();
+    let m = measure("hot:column-sim-32x32", 2, it(20), 5, || {
+        let mut sim = ColumnSim::new(CFG, PipelineKind::Skewed, &weights, data.a.clone());
+        sim.run(100_000).unwrap();
         std::hint::black_box(sim.cycles());
     });
+    record(&with_units(m, cycles as f64 * 32.0, "PE-cycles"), &mut tiers);
+
+    let adata = GemmData::cnn_like(GemmShape::new(16, 32, 32), FpFormat::BF16, 2);
     let acycles = {
         let mut sim = ArraySim::new(CFG, PipelineKind::Skewed, &adata.w, adata.a.clone());
         sim.run(1_000_000).unwrap();
         sim.cycles()
     };
-    println!(
-        "{}",
-        with_units(m, acycles as f64 * (32.0 * 32.0), "PE-cycles").report()
-    );
+    let apes = acycles as f64 * (32.0 * 32.0);
+    let m = measure("hot:array-sim-32x32xM16", 1, it(10), 5, || {
+        let mut sim = ArraySim::new(CFG, PipelineKind::Skewed, &adata.w, adata.a.clone());
+        sim.run(1_000_000).unwrap();
+        std::hint::black_box(sim.cycles());
+    });
+    let dense32 = with_units(m, apes, "PE-cycles");
+    record(&dense32, &mut tiers);
 
-    // --- 3. coordinated GEMM throughput ----------------------------------
+    // --- 3. fast banded simulator (same workload, then paper scale) ------
+    let m = measure("hot:fast-sim-32x32xM16", 2, it(50), 5, || {
+        let mut sim = FastArraySim::new(CFG, PipelineKind::Skewed, &adata.w, &adata.a);
+        sim.run(1_000_000).unwrap();
+        std::hint::black_box(sim.cycles());
+    });
+    let fast32 = with_units(m, apes, "PE-cycles");
+    record(&fast32, &mut tiers);
+
+    // Paper-scale 128×128 weight tile: the dense loop's practical limit
+    // was ~64×64; the banded simulator runs it directly.
+    let pdata = GemmData::cnn_like(GemmShape::new(32, 128, 128), FpFormat::BF16, 3);
+    let pcycles = {
+        let mut sim = FastArraySim::new(CFG, PipelineKind::Skewed, &pdata.w, &pdata.a);
+        sim.run(1_000_000).unwrap();
+        assert!(sim.latency_matches_schedule(), "fast sim must match the timing model");
+        sim.cycles()
+    };
+    let ppes = pcycles as f64 * (128.0 * 128.0);
+    let m = measure("hot:array-sim-128x128xM32", 0, it(10).min(2), 3, || {
+        let mut sim = ArraySim::new(CFG, PipelineKind::Skewed, &pdata.w, pdata.a.clone());
+        sim.run(1_000_000).unwrap();
+        std::hint::black_box(sim.cycles());
+    });
+    let dense128 = with_units(m, ppes, "PE-cycles");
+    record(&dense128, &mut tiers);
+
+    let m = measure("hot:fast-sim-128x128xM32", 1, it(20), 5, || {
+        let mut sim = FastArraySim::new(CFG, PipelineKind::Skewed, &pdata.w, &pdata.a);
+        sim.run(1_000_000).unwrap();
+        std::hint::black_box(sim.cycles());
+    });
+    let fast128 = with_units(m, ppes, "PE-cycles");
+    record(&fast128, &mut tiers);
+
+    // Fixed tier key (the worker count is machine-dependent and goes
+    // into its own JSON field so trajectories line up across hosts).
+    let workers = std::thread::available_parallelism().map_or(4, |n| n.get().min(8));
+    let m = measure("hot:fast-sim-128x128xM32-par", 1, it(20), 5, || {
+        let mut sim = FastArraySim::new(CFG, PipelineKind::Skewed, &pdata.w, &pdata.a);
+        sim.run_parallel(1_000_000, workers).unwrap();
+        std::hint::black_box(sim.cycles());
+    });
+    let fast128p = with_units(m, ppes, "PE-cycles");
+    record(&fast128p, &mut tiers);
+
+    let speedup32 = fast32.throughput() / dense32.throughput().max(1e-9);
+    let speedup128 = fast128.throughput() / dense128.throughput().max(1e-9);
+    let speedup128p = fast128p.throughput() / dense128.throughput().max(1e-9);
+    println!("bench: fast-vs-dense speedup   32x32xM16 {speedup32:>8.1}x");
+    println!("bench: fast-vs-dense speedup 128x128xM32 {speedup128:>8.1}x (serial)");
+    println!("bench: fast-vs-dense speedup 128x128xM32 {speedup128p:>8.1}x (par{workers})");
+
+    // --- 4. coordinated GEMM throughput ----------------------------------
     for workers in [1usize, 4, 8] {
         let mut cfg = RunConfig::small();
         cfg.rows = 32;
@@ -105,10 +178,33 @@ fn main() {
         let shape = GemmShape::new(64, 128, 64);
         let gdata = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, 3));
         let coord = Coordinator::new(cfg);
-        let m = measure(&format!("hot:executor-64x128x64-w{workers}"), 1, 3, 3, || {
+        let m = measure(&format!("hot:executor-64x128x64-w{workers}"), 1, it(3).min(3), 3, || {
             let r = coord.run_gemm(PipelineKind::Skewed, &gdata);
             std::hint::black_box(r.y.len());
         });
-        println!("{}", with_units(m, shape.macs() as f64, "macs").report());
+        record(&with_units(m, shape.macs() as f64, "macs"), &mut tiers);
+    }
+
+    // --- trajectory file -------------------------------------------------
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut entry = format!(
+        "  {{\"bench\": \"hotpath\", \"unix_time\": {ts}, \"smoke\": {smoke}, \
+         \"par_workers\": {workers}"
+    );
+    for (name, thru) in &tiers {
+        entry.push_str(&format!(", \"{name}\": {thru:.4e}"));
+    }
+    entry.push_str(&format!(
+        ", \"speedup_fast_vs_dense_32\": {speedup32:.2}, \
+         \"speedup_fast_vs_dense_128\": {speedup128:.2}, \
+         \"speedup_fast_par_vs_dense_128\": {speedup128p:.2}}}"
+    ));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
+    match append_json_run(&path, &entry) {
+        Ok(()) => println!("bench: trajectory appended to {}", path.display()),
+        Err(e) => eprintln!("bench: could not append trajectory: {e}"),
     }
 }

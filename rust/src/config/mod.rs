@@ -17,8 +17,9 @@ pub enum NumericMode {
     /// Value-level column oracle (bit-exact semantics, no per-cycle
     /// machinery) — the fast path for large workloads.
     Oracle,
-    /// Full cycle-accurate array simulation (validates timing too);
-    /// practical for tiles up to ~64×64.
+    /// Full cycle-accurate array simulation through the banded fast
+    /// simulator (validates the closed-form timing model per tile);
+    /// practical at the paper's full 128×128 tile size.
     CycleAccurate,
 }
 

@@ -18,7 +18,7 @@ use crate::coordinator::router::{Policy, Router};
 use crate::coordinator::scheduler::{Scheduler, TileJob};
 use crate::coordinator::state::{RunState, TileResult};
 use crate::pe::PipelineKind;
-use crate::sa::array::ArraySim;
+use crate::sa::fast::FastArraySim;
 use crate::sa::tile::TilePlan;
 use crate::workloads::gemm::GemmData;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -101,14 +101,24 @@ pub fn eval_tile(
             out
         }
         NumericMode::CycleAccurate => {
+            // The banded fast simulator runs paper-scale tiles directly
+            // (the dense loop was only practical to ~64×64).  The cycle
+            // budget is the closed-form model plus slack, and the run is
+            // cross-checked against that model afterwards — so cycle mode
+            // *validates* the timing formulas rather than substituting
+            // for them (ISSUE 1 / DESIGN.md §2).
             let w_slab: Vec<Vec<u64>> = (t.k0..t.k0 + t.k_len)
                 .map(|k| data.w[k][t.n0..t.n0 + t.n_len].to_vec())
                 .collect();
             let a_slab: Vec<Vec<u64>> =
                 data.a.iter().map(|row| row[t.k0..t.k0 + t.k_len].to_vec()).collect();
-            let mut sim = ArraySim::new(*chain, kind, &w_slab, a_slab);
-            let budget = 64 + 4 * (m_total as u64 + t.k_len as u64 * 2 + t.n_len as u64);
-            sim.run(budget.max(10_000)).expect("cycle-accurate tile run");
+            let mut sim = FastArraySim::new(*chain, kind, &w_slab, &a_slab);
+            let budget = sim.schedule().total_cycles() + 16;
+            sim.run(budget).expect("cycle-accurate tile run");
+            assert!(
+                sim.latency_matches_schedule(),
+                "cycle sim disagrees with the closed-form timing model"
+            );
             let mut out = Vec::with_capacity(m_total * t.n_len);
             for row in sim.result_bits() {
                 out.extend(row.iter().map(|&b| f32::from_bits(b as u32)));
@@ -274,5 +284,30 @@ mod tests {
         let (out, data) = run_case(NumericMode::Oracle, FaultPlan { worker: 0, failures: 2 });
         assert!(out.retries >= 1, "expected injected retries");
         check_against_f64(&out, &data);
+    }
+
+    #[test]
+    fn cycle_mode_runs_paper_scale_tiles() {
+        // A full 128×128 weight tile through the worker pool in
+        // cycle-accurate mode — the configuration that used to fall back
+        // to the closed-form model (ISSUE 1 headline case).
+        let mut cfg = RunConfig::small();
+        cfg.rows = 128;
+        cfg.cols = 128;
+        cfg.mode = NumericMode::CycleAccurate;
+        let chain = cfg.chain();
+        let shape = GemmShape::new(5, 128, 128);
+        let data = GemmData::cnn_like(shape, FpFormat::BF16, 0x128);
+        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        assert_eq!(plan.tile_count(), 1);
+        let ex = Executor::new(cfg, PipelineKind::Skewed);
+        let out = ex.run(&Arc::new(data.clone()), &plan);
+        let want = crate::sa::fast::FastArraySim::oracle_bits(&chain, &data.w, &data.a);
+        for m in 0..shape.m {
+            for n in 0..shape.n {
+                let got = out.y[m * shape.n + n].to_bits();
+                assert_eq!(got as u64, want[m][n], "y[{m}][{n}]");
+            }
+        }
     }
 }

@@ -12,9 +12,16 @@
 //!    (DESIGN.md §7).
 //! 3. **f64 reference** — always available; loose tolerance scaled by
 //!    the reduction depth.
+//!
+//! Plus one *timing* leg: [`verify_tiles_cycle_sim`] replays weight
+//! tiles through the fast banded cycle simulator and checks bit-exact
+//! numerics **and** closed-form latency in one pass — practical at the
+//! paper's full 128×128 tile size.
 
 use crate::arith::accum::ColumnOracle;
 use crate::arith::fma::ChainCfg;
+use crate::pe::PipelineKind;
+use crate::sa::fast::FastArraySim;
 use crate::sa::tile::TilePlan;
 use crate::util::rng::Rng;
 use crate::workloads::gemm::GemmData;
@@ -96,6 +103,54 @@ pub fn verify_oracle_sampled(
     rep
 }
 
+/// Cycle-simulate up to `max_tiles` of the plan's weight tiles through
+/// the fast banded simulator ([`FastArraySim`]) and cross-check both
+/// legs at once: numerics must be **bit-exact** against the column
+/// oracle, and every output must land on its closed-form
+/// [`crate::sa::dataflow::WsSchedule`] cycle (the sim *validates* the
+/// timing model instead of substituting for it — DESIGN.md §2).  Runs
+/// paper-scale 128×128 tiles directly; `threads` fans the column strips
+/// out across workers.
+///
+/// Each checked element counts toward `checked`; a bit mismatch, a
+/// latency mismatch, a stall, or a failed run all count as `failures`.
+pub fn verify_tiles_cycle_sim(
+    chain: &ChainCfg,
+    kind: PipelineKind,
+    plan: &TilePlan,
+    data: &GemmData,
+    max_tiles: usize,
+    threads: usize,
+) -> VerifyReport {
+    let mut rep = VerifyReport::default();
+    for tile in plan.tiles.iter().take(max_tiles) {
+        let w_slab = plan.weight_slab(&data.w, tile);
+        let a_slab = plan.activation_slab(&data.a, tile);
+        let mut sim = FastArraySim::new(*chain, kind, &w_slab, &a_slab);
+        let budget = sim.schedule().total_cycles() + 16;
+        if sim.run_parallel(budget, threads).is_err() {
+            rep.checked += data.shape.m * tile.n_len;
+            rep.failures += data.shape.m * tile.n_len;
+            continue;
+        }
+        let want = FastArraySim::oracle_bits(chain, &w_slab, &a_slab);
+        let got = sim.result_bits();
+        for (grow, wrow) in got.iter().zip(&want) {
+            for (g, w) in grow.iter().zip(wrow) {
+                rep.checked += 1;
+                if g != w {
+                    rep.failures += 1;
+                }
+            }
+        }
+        if !sim.latency_matches_schedule() {
+            rep.failures += 1;
+        }
+        rep.failures += sim.stalls() as usize;
+    }
+    rep
+}
+
 /// Tolerance comparison of a full matrix against a reference.
 pub fn verify_close(y: &[f32], reference: &[f64], rel_tol: f64) -> VerifyReport {
     assert_eq!(y.len(), reference.len());
@@ -168,5 +223,36 @@ mod tests {
     fn tolerance_scales_with_depth() {
         assert!(f64_tolerance(1024) > f64_tolerance(16));
         assert!(f64_tolerance(1) > 0.0);
+    }
+
+    #[test]
+    fn cycle_sim_cross_check_multi_tile() {
+        let cfg = RunConfig::small();
+        let shape = GemmShape::new(5, 20, 12); // 3 K-tiles × 2 N-tiles on 8×8
+        let data = GemmData::cnn_like(shape, FpFormat::BF16, 21);
+        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let rep = verify_tiles_cycle_sim(&cfg.chain(), kind, &plan, &data, usize::MAX, 2);
+            assert!(rep.ok(), "{kind}: {rep:?}");
+            // Every tile checks M × n_len elements: K-passes × M × N total.
+            assert_eq!(rep.checked, plan.k_tiles() * shape.m * shape.n);
+        }
+    }
+
+    #[test]
+    fn cycle_sim_cross_check_paper_scale_tile() {
+        // One full 128×128 weight tile, simulated directly — the dense
+        // loop was only practical to ~64×64 (ISSUE 1 headline case).
+        let mut cfg = RunConfig::paper();
+        cfg.workers = 4;
+        let shape = GemmShape::new(3, 128, 128);
+        let data = GemmData::cnn_like(shape, FpFormat::BF16, 0x2023);
+        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        assert_eq!(plan.tile_count(), 1);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let rep = verify_tiles_cycle_sim(&cfg.chain(), kind, &plan, &data, 1, cfg.workers);
+            assert!(rep.ok(), "{kind}: {rep:?}");
+            assert_eq!(rep.checked, 3 * 128);
+        }
     }
 }

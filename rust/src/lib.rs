@@ -15,8 +15,10 @@
 //! * [`pe`] — cycle-level pipelined processing-element models built on the
 //!   datapaths.
 //! * [`sa`] — the cycle-accurate weight-stationary systolic-array
-//!   simulator: single-column reduction chains, full R×C arrays, dataflow
-//!   scheduling, GEMM tiling and cycle traces.
+//!   simulator: single-column reduction chains, full R×C arrays (dense
+//!   reference loop + the allocation-free wavefront-banded
+//!   column-parallel fast simulator), dataflow scheduling, GEMM tiling
+//!   and cycle traces.
 //! * [`timing`] — the closed-form latency model, validated against the
 //!   cycle-accurate simulator by the test-suite.
 //! * [`energy`] — block-level area / power / energy models from which the

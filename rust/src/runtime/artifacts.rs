@@ -18,8 +18,9 @@
 //! manifest records the content fingerprint of the python compile
 //! sources at build time.
 
+use crate::rt_err;
+use crate::runtime::error::{Context, Result};
 use crate::util::mini_json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -41,9 +42,9 @@ pub struct Artifacts {
 
 fn parse_shape(j: &Json) -> Result<Vec<usize>> {
     j.as_arr()
-        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .ok_or_else(|| rt_err!("shape is not an array"))?
         .iter()
-        .map(|d| d.as_usize().ok_or_else(|| anyhow!("non-integer dim")))
+        .map(|d| d.as_usize().ok_or_else(|| rt_err!("non-integer dim")))
         .collect()
 }
 
@@ -64,7 +65,7 @@ impl Artifacts {
         let j = Json::parse(&text).with_context(|| format!("parsing {manifest:?}"))?;
         let obj = match &j {
             Json::Obj(m) => m,
-            _ => return Err(anyhow!("manifest root is not an object")),
+            _ => return Err(rt_err!("manifest root is not an object")),
         };
         let mut entries = BTreeMap::new();
         for (name, spec) in obj {
@@ -74,17 +75,17 @@ impl Artifacts {
             let path = dir.join(
                 spec.get("path")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("artifact '{name}': missing path"))?,
+                    .ok_or_else(|| rt_err!("artifact '{name}': missing path"))?,
             );
             let params = spec
                 .get("params")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("artifact '{name}': missing params"))?
+                .ok_or_else(|| rt_err!("artifact '{name}': missing params"))?
                 .iter()
                 .map(parse_shape)
                 .collect::<Result<Vec<_>>>()?;
             let result = parse_shape(
-                spec.get("result").ok_or_else(|| anyhow!("artifact '{name}': missing result"))?,
+                spec.get("result").ok_or_else(|| rt_err!("artifact '{name}': missing result"))?,
             )?;
             entries.insert(
                 name.clone(),

@@ -1,20 +1,37 @@
 //! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
 //! on the CPU client.
 //!
-//! This is the only place the `xla` crate is touched.  Artifacts are HLO
-//! **text** (see `python/compile/aot.py` and DESIGN.md §3 — jax ≥ 0.5
-//! serialized protos are rejected by xla_extension 0.5.1, text
-//! round-trips cleanly).  All artifact entry points take f32 buffers and
-//! perform the bf16 casts *inside* the lowered computation, so the rust
-//! side never constructs reduced-precision literals.
+//! This is the only place the `xla` crate is touched, and the crate is
+//! not in the offline build image's cache — so the whole PJRT leg is
+//! gated behind `--cfg skewsa_xla`.  Enabling it takes two steps on a
+//! machine that has the crate vendored: add `xla = { ... }` to
+//! `rust/Cargo.toml` `[dependencies]` (it is deliberately not declared
+//! there, not even as optional — cargo resolves optional deps into the
+//! lockfile, which would break the offline default build), then build
+//! with `RUSTFLAGS="--cfg skewsa_xla"`.  Without the cfg a stub with
+//! the same API is compiled: [`Runtime::cpu`] returns an error and
+//! callers degrade to oracle-only verification, exactly as they already
+//! do when artifacts have not been built.
+//!
+//! Artifacts are HLO **text** (see `python/compile/aot.py` and
+//! DESIGN.md §3 — jax ≥ 0.5 serialized protos are rejected by
+//! xla_extension 0.5.1, text round-trips cleanly).  All artifact entry
+//! points take f32 buffers and perform the bf16 casts *inside* the
+//! lowered computation, so the rust side never constructs
+//! reduced-precision literals.
 //!
 //! Python never runs at request time: `make artifacts` is the compile
 //! path; this module is the serve path.
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(not(skewsa_xla))]
+use crate::rt_err;
+use crate::runtime::error::Result;
+#[cfg(skewsa_xla)]
+use crate::runtime::error::{Context, RtError};
 
 /// A compiled artifact ready to execute.
 pub struct LoadedExec {
+    #[cfg(skewsa_xla)]
     exe: xla::PjRtLoadedExecutable,
     /// Declared parameter shapes (row-major dims), for call validation.
     pub param_shapes: Vec<Vec<usize>>,
@@ -25,9 +42,11 @@ pub struct LoadedExec {
 
 /// The PJRT CPU runtime.
 pub struct Runtime {
+    #[cfg(skewsa_xla)]
     client: xla::PjRtClient,
 }
 
+#[cfg(skewsa_xla)]
 impl Runtime {
     /// Construct a CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
@@ -54,7 +73,7 @@ impl Runtime {
         result_shape: Vec<usize>,
     ) -> Result<LoadedExec> {
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| RtError::msg("non-utf8 path"))?,
         )
         .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -66,15 +85,41 @@ impl Runtime {
     }
 }
 
+#[cfg(not(skewsa_xla))]
+impl Runtime {
+    /// Stub: the build carries no PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Err(rt_err!("built without --cfg skewsa_xla: PJRT runtime unavailable"))
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub (no xla)".to_string()
+    }
+
+    /// Stub: always errors (a [`Runtime`] cannot be constructed without
+    /// the cfg, so this is unreachable in practice).
+    pub fn load_hlo_text(
+        &self,
+        name: &str,
+        _path: &std::path::Path,
+        _param_shapes: Vec<Vec<usize>>,
+        _result_shape: Vec<usize>,
+    ) -> Result<LoadedExec> {
+        Err(rt_err!("built without --cfg skewsa_xla: cannot load artifact '{name}'"))
+    }
+}
+
 impl LoadedExec {
     /// Execute on f32 inputs (row-major, shapes must match the manifest).
     /// Returns the flattened f32 result.
     ///
     /// Artifacts are lowered with `return_tuple=True`, so the raw result
     /// is a 1-tuple that gets unwrapped here.
+    #[cfg(skewsa_xla)]
     pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
         if inputs.len() != self.param_shapes.len() {
-            return Err(anyhow!(
+            return Err(crate::rt_err!(
                 "artifact '{}' expects {} params, got {}",
                 self.name,
                 self.param_shapes.len(),
@@ -85,14 +130,17 @@ impl LoadedExec {
         for (i, (data, shape)) in inputs.iter().enumerate() {
             let want = &self.param_shapes[i];
             if *shape != want.as_slice() {
-                return Err(anyhow!(
+                return Err(crate::rt_err!(
                     "artifact '{}' param {i}: shape {shape:?} != manifest {want:?}",
                     self.name
                 ));
             }
             let n: usize = shape.iter().product();
             if data.len() != n {
-                return Err(anyhow!("param {i}: {} elements for shape {shape:?}", data.len()));
+                return Err(crate::rt_err!(
+                    "param {i}: {} elements for shape {shape:?}",
+                    data.len()
+                ));
             }
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
             let lit = xla::Literal::vec1(data)
@@ -104,18 +152,25 @@ impl LoadedExec {
             .exe
             .execute::<xla::Literal>(&literals)
             .with_context(|| format!("executing '{}'", self.name))?[0][0]
-            .to_literal_sync()?;
+            .to_literal_sync()
+            .context("syncing result literal")?;
         let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
         let values = out.to_vec::<f32>().context("reading f32 result")?;
         let expect: usize = self.result_shape.iter().product();
         if values.len() != expect {
-            return Err(anyhow!(
+            return Err(crate::rt_err!(
                 "artifact '{}': result has {} elements, manifest says {expect}",
                 self.name,
                 values.len()
             ));
         }
         Ok(values)
+    }
+
+    /// Stub: always errors (no executable can exist without the cfg).
+    #[cfg(not(skewsa_xla))]
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        Err(rt_err!("built without --cfg skewsa_xla: cannot execute '{}'", self.name))
     }
 }
 
@@ -126,9 +181,17 @@ mod tests {
     // Runtime tests that need built artifacts live in
     // `tests/integration_runtime.rs` (and skip gracefully when
     // `make artifacts` has not run).  Here: client construction only.
+    #[cfg(skewsa_xla)]
     #[test]
     fn cpu_client_constructs() {
         let rt = Runtime::cpu().expect("PJRT CPU client");
         assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+    }
+
+    #[cfg(not(skewsa_xla))]
+    #[test]
+    fn stub_client_reports_missing_cfg() {
+        let err = Runtime::cpu().err().expect("stub must not construct");
+        assert!(err.0.contains("skewsa_xla"), "{err}");
     }
 }

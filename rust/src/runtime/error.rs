@@ -1,0 +1,92 @@
+//! Minimal error plumbing for the runtime layer.
+//!
+//! The offline build image has no crate cache, so `anyhow` is not
+//! available; this module provides the tiny subset the runtime layer
+//! needs — a string-backed error type, a `Result` alias, an `anyhow!`-
+//! style constructor macro ([`rt_err!`](crate::rt_err)), and a
+//! [`Context`] extension trait for `Result`/`Option`.
+
+/// String-backed runtime error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RtError(pub String);
+
+impl RtError {
+    pub fn msg(s: impl Into<String>) -> RtError {
+        RtError(s.into())
+    }
+}
+
+impl std::fmt::Display for RtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+/// Runtime-layer result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = RtError> = std::result::Result<T, E>;
+
+/// `anyhow!`-style formatted-error constructor.
+#[macro_export]
+macro_rules! rt_err {
+    ($($arg:tt)*) => {
+        $crate::runtime::error::RtError(format!($($arg)*))
+    };
+}
+
+/// `anyhow::Context`-style error annotation for `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a static context message to the error case.
+    fn context(self, msg: impl std::fmt::Display) -> Result<T>;
+
+    /// Attach a lazily-built context message to the error case.
+    fn with_context<D: std::fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl std::fmt::Display) -> Result<T> {
+        self.map_err(|e| RtError(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: std::fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| RtError(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl std::fmt::Display) -> Result<T> {
+        self.ok_or_else(|| RtError(msg.to_string()))
+    }
+
+    fn with_context<D: std::fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| RtError(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_annotates_errors() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("opening manifest").unwrap_err();
+        assert!(e.0.contains("opening manifest"), "{e}");
+        assert!(e.0.contains("gone"), "{e}");
+    }
+
+    #[test]
+    fn option_context() {
+        let n: Option<u32> = None;
+        assert!(n.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = rt_err!("bad shape {:?}", [1, 2]);
+        assert_eq!(e.0, "bad shape [1, 2]");
+    }
+}

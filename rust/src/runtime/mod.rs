@@ -7,11 +7,13 @@
 
 pub mod artifacts;
 pub mod client;
+pub mod error;
 
 pub use artifacts::{ArtifactEntry, Artifacts};
 pub use client::{LoadedExec, Runtime};
+pub use error::{Result, RtError};
 
-use anyhow::Result;
+use crate::rt_err;
 
 /// Convenience bundle: registry + client + loaded executables on demand.
 pub struct GoldenRuntime {
@@ -33,7 +35,7 @@ impl GoldenRuntime {
         let e = self
             .artifacts
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+            .ok_or_else(|| rt_err!("artifact '{name}' not in manifest"))?;
         self.runtime.load_hlo_text(name, &e.path, e.param_shapes.clone(), e.result_shape.clone())
     }
 

@@ -7,10 +7,14 @@
 //! `A(M×R) × W(R×C) → Y(M×C)` with the paper's numeric semantics
 //! (double-width partial sums, one rounding per column output).
 //!
-//! For the paper-scale 128×128 array the per-tile simulation cost is
-//! ~10⁷ PE-cycles; the test-suite validates bit-exactness and latency on
-//! arrays up to 64×64 and per-column at depth 128, while whole-CNN runs
-//! use the (sim-validated) closed-form timing model — see DESIGN.md §2.
+//! This is the *dense reference loop*: it walks every PE every cycle and
+//! keeps the register file as `Option`-heavy structs, prioritising
+//! readability over speed.  The throughput-grade rewrite —
+//! [`crate::sa::fast::FastArraySim`]: flat SoA lanes, wavefront-banded
+//! iteration, column-parallel strips — simulates paper-scale 128×128
+//! tiles directly and is asserted cycle- and bit-identical to this loop;
+//! whole-CNN runs cross-check the closed-form timing model against it —
+//! see DESIGN.md §2.
 
 use crate::arith::accum::{ColumnOracle, RoundingUnit};
 use crate::arith::fma::{ChainCfg, PsumSignal};
@@ -47,6 +51,13 @@ pub struct ArraySim {
     round_q: Vec<VecDeque<(u64, usize, PsumSignal)>>,
     produced: usize,
     pub stalls: u64,
+    /// South-edge rounding unit, constructed once per simulator.
+    ru: RoundingUnit,
+    /// Reusable per-tick staging buffers (all-`None` between ticks): the
+    /// next output/stage-1 register values, committed at tick end.  Kept
+    /// in the struct so `tick` allocates nothing.
+    scratch_out: Vec<Option<OutReg>>,
+    scratch_s1: Vec<Option<S1Reg>>,
 }
 
 impl ArraySim {
@@ -81,6 +92,9 @@ impl ArraySim {
             round_q: vec![VecDeque::new(); cols],
             produced: 0,
             stalls: 0,
+            ru: RoundingUnit::new(cfg),
+            scratch_out: vec![None; rows * cols],
+            scratch_s1: vec![None; rows * cols],
         }
     }
 
@@ -110,7 +124,8 @@ impl ArraySim {
         let (rows, cols, t) = (self.rows, self.cols, self.cycle);
 
         // ---- stage-2 evaluation (current registers) --------------------
-        let mut next_out: Vec<Option<OutReg>> = vec![None; rows * cols];
+        // Staged into the reusable scratch buffers (left all-`None` by
+        // the previous commit), so the tick performs no allocation.
         for r in 0..rows {
             for c in 0..cols {
                 let i = self.idx(r, c);
@@ -139,7 +154,7 @@ impl ArraySim {
                         prev.taken = true;
                     }
                 }
-                next_out[i] = self.pes[i].eval_stage2(&self.cfg, psum_late.as_ref());
+                self.scratch_out[i] = self.pes[i].eval_stage2(&self.cfg, psum_late.as_ref());
             }
         }
 
@@ -158,14 +173,13 @@ impl ArraySim {
                     break;
                 }
                 self.round_q[c].pop_front();
-                let bits = RoundingUnit::new(self.cfg).round(&sig);
+                let bits = self.ru.round(&sig);
                 self.outputs.push(ArrayOutput { m, col: c, bits, cycle: ready });
                 self.produced += 1;
             }
         }
 
         // ---- stage-1 acceptance ----------------------------------------
-        let mut next_s1: Vec<Option<S1Reg>> = vec![None; rows * cols];
         for r in 0..rows {
             for c in 0..cols {
                 let i = self.idx(r, c);
@@ -215,14 +229,16 @@ impl ArraySim {
                     self.pes[up].out.as_mut().unwrap().taken = true;
                 }
                 let reg = S1Reg { m: want, a: self.a[want][r], psum: captured };
-                next_s1[i] = Some(self.pes[i].accept_stage1(reg));
+                self.scratch_s1[i] = Some(self.pes[i].accept_stage1(reg));
                 self.next_feed[i] = want + 1;
             }
         }
 
         // ---- commit -----------------------------------------------------
+        // `take()` drains the scratch buffers back to all-`None` for the
+        // next tick.
         for i in 0..rows * cols {
-            if let Some(new) = next_out[i] {
+            if let Some(new) = self.scratch_out[i].take() {
                 if let Some(old) = &self.pes[i].out {
                     if !old.taken {
                         return Err(SimError::PsumOverrun { pe: i, cycle: t, lost_m: old.m });
@@ -230,7 +246,7 @@ impl ArraySim {
                 }
                 self.pes[i].out = Some(new);
             }
-            self.pes[i].s1 = next_s1[i];
+            self.pes[i].s1 = self.scratch_s1[i].take();
         }
         self.cycle = t + 1;
         Ok(())

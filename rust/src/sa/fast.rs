@@ -1,0 +1,650 @@
+//! Allocation-free, wavefront-banded, column-parallel cycle simulator.
+//!
+//! [`FastArraySim`] is the throughput-grade rewrite of the dense
+//! reference loop in [`crate::sa::array::ArraySim`].  It simulates the
+//! *same* register-transfer semantics cycle for cycle (the test-suite
+//! asserts bit-, latency-, stall- and activity-parity against the dense
+//! loop), but restructured for speed — see DESIGN.md §2:
+//!
+//! * **Structure-of-arrays lanes.**  PE state lives in flat per-column
+//!   vectors (`s1_m` / `s1_a` / `s1_psum` / `out_m` / `out_sig` /
+//!   `out_taken`), not a `Vec<CyclePe>` of `Option`-heavy structs.  A
+//!   tick allocates nothing: the dense loop's two per-tick `rows×cols`
+//!   scratch `Vec`s are replaced by an in-place update that walks rows
+//!   **descending**, which makes the two-phase (evaluate-then-commit)
+//!   register discipline come out for free — row `r` only reads row
+//!   `r−1`'s *pre-tick* registers, and those are committed after row `r`
+//!   was processed.
+//!
+//! * **Wavefront banding.**  Under a [`WsSchedule`]-consistent run, PE
+//!   `(r, c)` can only change state during the cycle window
+//!   `S·r + c ≤ t ≤ (M−1) + S·r + c + 3` (first possible stage-1 accept
+//!   through last register touch, see the active-band invariant in
+//!   DESIGN.md §2).  Each tick iterates only that diagonal band of rows
+//!   instead of all `R` — an asymptotic win during fill/drain and for
+//!   small-`M` tiles where most of the array idles.  Activity counters
+//!   (which the dense loop accumulates per idle PE per cycle) are
+//!   recovered in closed form: every PE performs exactly `M` stage-1 and
+//!   `M` stage-2 evaluations, and everything else in `T` cycles is
+//!   bubbles.
+//!
+//! * **Column independence.**  Columns couple only through the
+//!   activation arrival schedule, which is closed-form
+//!   ([`WsSchedule::arrive_cycle`]) — so each column lane is simulated
+//!   start-to-finish on its own local working set (cache-resident for
+//!   any depth), and [`FastArraySim::run_parallel`] fans independent
+//!   column strips out across scoped threads.
+//!
+//! The per-column rounding queue is a fixed four-slot ring (the South
+//! edge holds at most two in-flight entries at `column_tail ≤ 1`), and
+//! the [`RoundingUnit`] is constructed once per simulator rather than
+//! per output.
+//!
+//! The fast simulator requires a schedule-consistent run (which
+//! [`FastArraySim::new`] guarantees by construction from [`WsSchedule`]):
+//! any drift surfaces as [`SimError::OutOfOrder`] / `PsumOverrun` /
+//! `Timeout` rather than silent corruption, and callers additionally
+//! cross-check the closed-form timing model via
+//! [`FastArraySim::latency_matches_schedule`].
+
+use crate::arith::accum::{ColumnOracle, RoundingUnit};
+use crate::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
+use crate::pe::cycle::PeActivity;
+use crate::pe::PipelineKind;
+use crate::sa::column::SimError;
+use crate::sa::dataflow::WsSchedule;
+
+/// Sentinel for "register empty" in the `*_m` element-index lanes.
+const EMPTY: u32 = u32::MAX;
+
+/// South-edge rounding ring capacity (occupancy is ≤ 2 for
+/// `column_tail ≤ 1`; 4 leaves headroom and keeps the modulo cheap).
+const RING: usize = 4;
+
+/// One column's complete simulation state: SoA over rows, plus the
+/// column's output slots.  Lanes are fully independent once constructed,
+/// which is what makes [`FastArraySim::run_parallel`] a safe data split.
+struct ColLane {
+    /// Column index in the array (fixes the arrival schedule offset).
+    col: usize,
+    /// Stationary weights down this column, `w[r]`.
+    w: Vec<u64>,
+    /// Stage-1 register: element index (`EMPTY` = bubble).
+    s1_m: Vec<u32>,
+    /// Stage-1 register: captured activation bits.
+    s1_a: Vec<u64>,
+    /// Stage-1 register: captured incoming psum (baseline capture
+    /// discipline; unused by the skewed organisation).
+    s1_psum: Vec<PsumSignal>,
+    /// Output register: element index (`EMPTY` = never written).
+    out_m: Vec<u32>,
+    /// Output register: forwarded partial-sum signal.
+    out_sig: Vec<PsumSignal>,
+    /// Output register: consumed-by-successor mark.
+    out_taken: Vec<bool>,
+    /// Next element index each PE expects to accept.
+    next_feed: Vec<u32>,
+    /// Rounded output bits per element, `y[m]`.
+    y_bits: Vec<u64>,
+    /// Cycle at whose end each output left the South edge.
+    y_cycle: Vec<u64>,
+    /// Outputs produced so far.
+    produced: u32,
+    /// Chain-ready-but-activation-late cycles (schedule skew detector).
+    stalls: u64,
+}
+
+/// Shared read-only context for a lane run (everything is `Copy` so the
+/// same value flows into each worker thread).
+#[derive(Clone, Copy)]
+struct LaneCtx<'a> {
+    cfg: ChainCfg,
+    ru: RoundingUnit,
+    sched: WsSchedule,
+    /// Activations, `a[m * rows + r]`.
+    a: &'a [u64],
+    max_cycles: u64,
+}
+
+/// Throughput-grade cycle-accurate R×C weight-stationary array.
+///
+/// Drop-in for [`crate::sa::array::ArraySim`] on the hot path: same
+/// construction shape, same numeric and timing semantics, ≥ an order of
+/// magnitude faster on paper-scale tiles (see `bench_hotpath`).
+pub struct FastArraySim {
+    pub cfg: ChainCfg,
+    pub kind: PipelineKind,
+    sched: WsSchedule,
+    rows: usize,
+    cols: usize,
+    m_total: usize,
+    /// Activations, `a[m * rows + r]` (flattened once at construction).
+    a: Vec<u64>,
+    lanes: Vec<ColLane>,
+    ru: RoundingUnit,
+}
+
+impl FastArraySim {
+    /// `weights[r][c]`; activations `a[m][r]` (borrowed, flattened).
+    pub fn new(cfg: ChainCfg, kind: PipelineKind, weights: &[Vec<u64>], a: &[Vec<u64>]) -> Self {
+        cfg.check();
+        let rows = weights.len();
+        assert!(rows >= 1, "empty array");
+        let cols = weights[0].len();
+        assert!(cols >= 1 && weights.iter().all(|w| w.len() == cols));
+        for row in a {
+            assert_eq!(row.len(), rows, "activation row width != array depth");
+        }
+        let m_total = a.len();
+        assert!(m_total < EMPTY as usize, "element count overflows the index lanes");
+        let mut a_flat = Vec::with_capacity(m_total * rows);
+        for row in a {
+            a_flat.extend_from_slice(row);
+        }
+        let zero = PsumSignal::zero(&cfg);
+        let lanes = (0..cols)
+            .map(|c| ColLane {
+                col: c,
+                w: (0..rows).map(|r| weights[r][c]).collect(),
+                s1_m: vec![EMPTY; rows],
+                s1_a: vec![0; rows],
+                s1_psum: vec![zero; rows],
+                out_m: vec![EMPTY; rows],
+                out_sig: vec![zero; rows],
+                out_taken: vec![false; rows],
+                next_feed: vec![0; rows],
+                y_bits: vec![0; m_total],
+                y_cycle: vec![0; m_total],
+                produced: 0,
+                stalls: 0,
+            })
+            .collect();
+        FastArraySim {
+            cfg,
+            kind,
+            sched: WsSchedule::new(kind, rows, cols, m_total),
+            rows,
+            cols,
+            m_total,
+            a: a_flat,
+            lanes,
+            ru: RoundingUnit::new(cfg),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn m_total(&self) -> usize {
+        self.m_total
+    }
+
+    pub fn schedule(&self) -> &WsSchedule {
+        &self.sched
+    }
+
+    /// Run every column lane to completion on the calling thread.
+    pub fn run(&mut self, max_cycles: u64) -> Result<(), SimError> {
+        let kind = self.kind;
+        let ctx = LaneCtx {
+            cfg: self.cfg,
+            ru: self.ru,
+            sched: self.sched,
+            a: &self.a,
+            max_cycles,
+        };
+        for lane in &mut self.lanes {
+            run_lane_dispatch(kind, ctx, lane)?;
+        }
+        Ok(())
+    }
+
+    /// Column-sliced parallel run: contiguous column strips are simulated
+    /// on `threads` scoped worker threads.  Legal because inter-column
+    /// coupling is only the precomputable arrival schedule; results are
+    /// identical to [`FastArraySim::run`] (asserted by the test-suite).
+    pub fn run_parallel(&mut self, max_cycles: u64, threads: usize) -> Result<(), SimError> {
+        let threads = threads.max(1).min(self.lanes.len().max(1));
+        if threads <= 1 {
+            return self.run(max_cycles);
+        }
+        let kind = self.kind;
+        let ctx = LaneCtx {
+            cfg: self.cfg,
+            ru: self.ru,
+            sched: self.sched,
+            a: &self.a,
+            max_cycles,
+        };
+        let chunk = self.lanes.len().div_ceil(threads);
+        let mut results: Vec<Result<(), SimError>> = Vec::with_capacity(threads);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(threads);
+            for strip in self.lanes.chunks_mut(chunk) {
+                handles.push(scope.spawn(move || {
+                    for lane in strip.iter_mut() {
+                        run_lane_dispatch(kind, ctx, lane)?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                results.push(h.join().expect("column-lane thread panicked"));
+            }
+        });
+        results.into_iter().collect()
+    }
+
+    /// Result matrix `Y[m][c]` as output-format bit patterns (valid after
+    /// a successful run).
+    pub fn result_bits(&self) -> Vec<Vec<u64>> {
+        let mut y = vec![vec![0u64; self.cols]; self.m_total];
+        for lane in &self.lanes {
+            for (m, &bits) in lane.y_bits.iter().enumerate() {
+                y[m][lane.col] = bits;
+            }
+        }
+        y
+    }
+
+    /// Result matrix as f32 (requires FP32 output format).
+    pub fn result_f32(&self) -> Vec<Vec<f32>> {
+        self.result_bits()
+            .into_iter()
+            .map(|row| row.into_iter().map(|b| f32::from_bits(b as u32)).collect())
+            .collect()
+    }
+
+    /// Cycle at whose end `Y[m][c]` left the South edge.
+    pub fn output_cycle(&self, m: usize, col: usize) -> u64 {
+        self.lanes[col].y_cycle[m]
+    }
+
+    /// Total cycles (valid after a successful run).
+    pub fn cycles(&self) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.y_cycle.iter().copied())
+            .max()
+            .map_or(0, |c| c + 1)
+    }
+
+    /// Chain-ready-but-activation-late cycles, summed across columns
+    /// (0 for any schedule-consistent run — parity with the dense loop
+    /// is a regression test).
+    pub fn stalls(&self) -> u64 {
+        self.lanes.iter().map(|l| l.stalls).sum()
+    }
+
+    /// Merged activity across all PEs, recovered in closed form: each PE
+    /// performs exactly `M` stage-1 and `M` stage-2 evaluations, and all
+    /// remaining stage-slots in `T` cycles are bubbles — exactly what the
+    /// dense loop counts one idle PE at a time (parity asserted in
+    /// tests).  Valid after a successful run.
+    pub fn activity(&self) -> PeActivity {
+        let t = self.cycles();
+        let pes = (self.rows * self.cols) as u64;
+        let evals = pes * self.m_total as u64;
+        let slots = pes * t;
+        PeActivity {
+            s1_evals: evals,
+            s2_evals: evals,
+            s1_bubbles: slots - evals,
+            s2_bubbles: slots - evals,
+        }
+    }
+
+    /// Cross-check against the closed-form timing model: every output
+    /// landed on its [`WsSchedule::output_cycle`] and the run drained in
+    /// [`WsSchedule::total_cycles`].
+    pub fn latency_matches_schedule(&self) -> bool {
+        self.cycles() == self.sched.total_cycles()
+            && self.lanes.iter().all(|lane| {
+                lane.y_cycle
+                    .iter()
+                    .enumerate()
+                    .all(|(m, &cyc)| cyc == self.sched.output_cycle(lane.col, m))
+            })
+    }
+
+    /// Golden result via the column oracle (same numeric semantics, no
+    /// timing) — shared with [`crate::sa::array::ArraySim::oracle_bits`].
+    pub fn oracle_bits(cfg: &ChainCfg, weights: &[Vec<u64>], a: &[Vec<u64>]) -> Vec<Vec<u64>> {
+        let rows = weights.len();
+        let cols = weights[0].len();
+        a.iter()
+            .map(|arow| {
+                (0..cols)
+                    .map(|c| {
+                        let mut o = ColumnOracle::new(*cfg);
+                        for r in 0..rows {
+                            o.mac(arow[r], weights[r][c]);
+                        }
+                        o.result()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Monomorphize the lane run over the two datapaths (devirtualizes the
+/// per-step dispatch out of the hot loop).
+fn run_lane_dispatch(
+    kind: PipelineKind,
+    ctx: LaneCtx<'_>,
+    lane: &mut ColLane,
+) -> Result<(), SimError> {
+    match kind {
+        PipelineKind::Skewed => run_lane(&SkewedFmaPath, true, ctx, lane),
+        PipelineKind::Regular3a | PipelineKind::Baseline3b => {
+            run_lane(&BaselineFmaPath, false, ctx, lane)
+        }
+    }
+}
+
+/// Simulate one column lane start-to-finish.
+///
+/// Per tick: South-edge rounding first (it reads the pre-tick last-row
+/// output register), then the active row band in **descending** row
+/// order — so every cross-row read (upstream `s1`/`out`) sees pre-tick
+/// state and every commit happens after all downstream consumers marked
+/// the register taken, reproducing the dense loop's evaluate-then-commit
+/// discipline without scratch buffers.
+fn run_lane<D: ChainDatapath>(
+    d: &D,
+    skewed: bool,
+    ctx: LaneCtx<'_>,
+    lane: &mut ColLane,
+) -> Result<(), SimError> {
+    let rows = lane.w.len();
+    let m_total = lane.y_bits.len();
+    if m_total == 0 {
+        return Ok(());
+    }
+    let c = lane.col;
+    let cols = ctx.sched.cols;
+    let spacing = ctx.sched.spacing();
+    let tail = ctx.sched.kind.column_tail();
+    let last = rows - 1;
+    let zero = PsumSignal::zero(&ctx.cfg);
+    // Band slack beyond the last stage-1 accept: stage-2 eval (+1),
+    // commit visibility (+1), downstream take (+1).
+    const SLACK: u64 = 3;
+    let reach = (m_total as u64 - 1) + SLACK;
+
+    // South-edge rounding ring: (ready_cycle, m, signal).
+    let mut ring = [(0u64, 0u32, zero); RING];
+    let (mut head, mut len) = (0usize, 0usize);
+
+    let mut t = c as u64;
+    while (lane.produced as usize) < m_total {
+        if t >= ctx.max_cycles {
+            return Err(SimError::Timeout {
+                cycle: t,
+                produced: lane.produced as usize,
+                expected: m_total,
+            });
+        }
+
+        // ---- South edge: consume the last PE's pre-tick register -------
+        if lane.out_m[last] != EMPTY && !lane.out_taken[last] {
+            debug_assert!(len < RING, "rounding ring overflow");
+            ring[(head + len) % RING] = (t + tail, lane.out_m[last], lane.out_sig[last]);
+            len += 1;
+            lane.out_taken[last] = true;
+        }
+        while len > 0 && ring[head].0 <= t {
+            let (ready, m, sig) = ring[head];
+            head = (head + 1) % RING;
+            len -= 1;
+            lane.y_bits[m as usize] = ctx.ru.round(&sig);
+            lane.y_cycle[m as usize] = ready;
+            lane.produced += 1;
+        }
+
+        // ---- Active band: S·r + c ∈ [t − (M−1) − SLACK, t] -------------
+        let off = t - c as u64;
+        let r_hi = ((off / spacing) as usize).min(last);
+        let r_lo = if off > reach {
+            (off - reach).div_ceil(spacing) as usize
+        } else {
+            0
+        };
+        if r_lo <= r_hi {
+            for r in (r_lo..=r_hi).rev() {
+                // ---- stage 2 on the pre-tick stage-1 register ----------
+                let s1m = lane.s1_m[r];
+                if s1m != EMPTY {
+                    let psum = if skewed {
+                        if r > 0 {
+                            let upm = lane.out_m[r - 1];
+                            if upm == EMPTY {
+                                unreachable!("skewed stage-2 with no upstream psum");
+                            }
+                            if upm != s1m {
+                                return Err(SimError::OutOfOrder {
+                                    pe: r * cols + c,
+                                    got: upm as usize,
+                                    want: s1m as usize,
+                                });
+                            }
+                            lane.out_taken[r - 1] = true;
+                            lane.out_sig[r - 1]
+                        } else {
+                            zero
+                        }
+                    } else {
+                        lane.s1_psum[r]
+                    };
+                    let sig = d.step(&ctx.cfg, &psum, lane.s1_a[r], lane.w[r]);
+                    // Commit: every downstream consumer of this PE's old
+                    // output register already ran (descending order /
+                    // South edge above), so an untaken value here is a
+                    // genuine schedule violation.
+                    if lane.out_m[r] != EMPTY && !lane.out_taken[r] {
+                        return Err(SimError::PsumOverrun {
+                            pe: r * cols + c,
+                            cycle: t,
+                            lost_m: lane.out_m[r] as usize,
+                        });
+                    }
+                    lane.out_m[r] = s1m;
+                    lane.out_sig[r] = sig;
+                    lane.out_taken[r] = false;
+                    lane.s1_m[r] = EMPTY;
+                }
+
+                // ---- stage 1 acceptance (pre-tick upstream registers) --
+                let want = lane.next_feed[r];
+                if (want as usize) >= m_total {
+                    continue;
+                }
+                let (ready, captured) = if r == 0 {
+                    (true, zero)
+                } else if skewed {
+                    // Predecessor's stage 2 computes `want` THIS cycle
+                    // (its s1 register holds it) — speculative ê forward.
+                    let upm = lane.s1_m[r - 1];
+                    if upm == want {
+                        (true, zero)
+                    } else if upm != EMPTY && upm > want {
+                        return Err(SimError::OutOfOrder {
+                            pe: r * cols + c,
+                            got: upm as usize,
+                            want: want as usize,
+                        });
+                    } else {
+                        (false, zero)
+                    }
+                } else {
+                    // Baseline: predecessor's output register holds
+                    // `want`, written at the end of the previous cycle.
+                    let upm = lane.out_m[r - 1];
+                    if upm == want && !lane.out_taken[r - 1] {
+                        (true, lane.out_sig[r - 1])
+                    } else if upm != EMPTY && upm > want {
+                        return Err(SimError::OutOfOrder {
+                            pe: r * cols + c,
+                            got: upm as usize,
+                            want: want as usize,
+                        });
+                    } else {
+                        (false, zero)
+                    }
+                };
+                if !ready {
+                    continue;
+                }
+                // Activation wavefront arrival at column c: row 0 waiting
+                // is normal fill; a chain-ready PE deeper down waiting on
+                // its activation is a schedule skew (psum at risk).
+                if ctx.sched.arrive_cycle(r, c, want as usize) > t {
+                    if r > 0 {
+                        lane.stalls += 1;
+                    }
+                    continue;
+                }
+                if r > 0 && !skewed {
+                    lane.out_taken[r - 1] = true;
+                }
+                lane.s1_m[r] = want;
+                lane.s1_a[r] = ctx.a[want as usize * rows + r];
+                if !skewed {
+                    lane.s1_psum[r] = captured;
+                }
+                lane.next_feed[r] = want + 1;
+            }
+        }
+        t += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::sa::array::ArraySim;
+    use crate::util::rng::Rng;
+
+    const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+    fn bf(x: f64) -> u64 {
+        FpFormat::BF16.from_f64(x)
+    }
+
+    fn random_case(
+        rng: &mut Rng,
+        m: usize,
+        r: usize,
+        c: usize,
+    ) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
+        let w: Vec<Vec<u64>> = (0..r)
+            .map(|_| (0..c).map(|_| bf(rng.normal_scaled(0.0, 1.0))).collect())
+            .collect();
+        let a: Vec<Vec<u64>> = (0..m)
+            .map(|_| (0..r).map(|_| bf(rng.normal_scaled(0.0, 2.0))).collect())
+            .collect();
+        (w, a)
+    }
+
+    #[test]
+    fn fast_matches_oracle_both_kinds() {
+        let mut rng = Rng::new(0xfa57);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            for (m, r, c) in [(1usize, 1usize, 1usize), (4, 3, 2), (8, 8, 8), (5, 16, 4)] {
+                let (w, a) = random_case(&mut rng, m, r, c);
+                let want = FastArraySim::oracle_bits(&CFG, &w, &a);
+                let mut sim = FastArraySim::new(CFG, kind, &w, &a);
+                sim.run(100_000).unwrap();
+                assert_eq!(sim.result_bits(), want, "{kind} m={m} r={r} c={c}");
+                assert_eq!(sim.stalls(), 0);
+                assert!(sim.latency_matches_schedule(), "{kind} m={m} r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_matches_dense_loop_exactly() {
+        // Bits, cycles, per-output cycles, stalls, and merged activity
+        // all agree with the dense reference simulator.
+        let mut rng = Rng::new(0xd00d);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            for (m, r, c) in [(1usize, 1usize, 1usize), (3, 5, 4), (8, 16, 8), (17, 8, 3)] {
+                let (w, a) = random_case(&mut rng, m, r, c);
+                let mut dense = ArraySim::new(CFG, kind, &w, a.clone());
+                dense.run(1_000_000).unwrap();
+                let mut fast = FastArraySim::new(CFG, kind, &w, &a);
+                fast.run(1_000_000).unwrap();
+                assert_eq!(fast.result_bits(), dense.result_bits(), "{kind} m={m} r={r} c={c}");
+                assert_eq!(fast.cycles(), dense.cycles(), "{kind} m={m} r={r} c={c}");
+                assert_eq!(fast.stalls(), dense.stalls, "{kind} m={m} r={r} c={c}");
+                assert_eq!(fast.activity(), dense.activity(), "{kind} m={m} r={r} c={c}");
+                for o in dense.outputs() {
+                    assert_eq!(fast.output_cycle(o.m, o.col), o.cycle, "{kind} m={}", o.m);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let mut rng = Rng::new(0x9a9);
+        let (w, a) = random_case(&mut rng, 6, 12, 10);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let mut serial = FastArraySim::new(CFG, kind, &w, &a);
+            serial.run(100_000).unwrap();
+            for threads in [2usize, 3, 16] {
+                let mut par = FastArraySim::new(CFG, kind, &w, &a);
+                par.run_parallel(100_000, threads).unwrap();
+                assert_eq!(par.result_bits(), serial.result_bits(), "{kind} threads={threads}");
+                assert_eq!(par.cycles(), serial.cycles(), "{kind} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_m_band_is_bit_exact_on_deep_arrays() {
+        // M ≪ R: the banded iteration's best case — most of the array
+        // idles every cycle.
+        let mut rng = Rng::new(0xbad5);
+        let (w, a) = random_case(&mut rng, 2, 64, 6);
+        let want = FastArraySim::oracle_bits(&CFG, &w, &a);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let mut sim = FastArraySim::new(CFG, kind, &w, &a);
+            sim.run(100_000).unwrap();
+            assert_eq!(sim.result_bits(), want, "{kind}");
+            assert!(sim.latency_matches_schedule(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn empty_stream_completes_at_zero_cycles() {
+        let w = vec![vec![bf(1.0); 3]; 4];
+        let a: Vec<Vec<u64>> = Vec::new();
+        let mut sim = FastArraySim::new(CFG, PipelineKind::Skewed, &w, &a);
+        sim.run(10).unwrap();
+        assert_eq!(sim.cycles(), 0);
+        assert_eq!(sim.activity(), PeActivity::default());
+    }
+
+    #[test]
+    fn timeout_reports_progress() {
+        let mut rng = Rng::new(0x71e);
+        let (w, a) = random_case(&mut rng, 8, 8, 2);
+        let mut sim = FastArraySim::new(CFG, PipelineKind::Baseline3b, &w, &a);
+        match sim.run(3) {
+            Err(SimError::Timeout { cycle, expected, .. }) => {
+                assert_eq!(cycle, 3);
+                assert_eq!(expected, 8);
+            }
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+}

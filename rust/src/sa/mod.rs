@@ -2,7 +2,10 @@
 //!
 //! * [`dataflow`] — WS input staircase + phase schedule per pipeline kind.
 //! * [`column`] — single-column reduction chain at register granularity.
-//! * [`array`] — full R×C arrays composed of columns.
+//! * [`array`] — full R×C arrays composed of columns (the dense
+//!   reference loop).
+//! * [`fast`] — the throughput-grade rewrite: allocation-free SoA lanes,
+//!   wavefront-banded iteration, column-parallel strips (DESIGN.md §2).
 //! * [`tile`] — GEMM → weight-tile decomposition (K/N tiling, K-pass
 //!   accumulation).
 //! * [`trace`] — per-cycle stage-occupancy traces (viz + activity).
@@ -10,11 +13,13 @@
 pub mod array;
 pub mod column;
 pub mod dataflow;
+pub mod fast;
 pub mod tile;
 pub mod trace;
 
 pub use array::ArraySim;
 pub use column::{ColOutput, ColumnSim, SimError};
 pub use dataflow::WsSchedule;
+pub use fast::FastArraySim;
 pub use tile::{GemmShape, Tile, TilePlan};
 pub use trace::Trace;

@@ -81,6 +81,33 @@ pub fn with_units(mut m: Measurement, units: f64, unit_name: &'static str) -> Me
     m
 }
 
+/// Append one run object to a JSON-array trajectory file (such as
+/// `BENCH_hotpath.json`), creating the file as a fresh array on first
+/// use.  `entry` must be a complete JSON object literal; the entry is
+/// spliced before the closing bracket so the file stays a valid JSON
+/// array without a parser round-trip.
+pub fn append_json_run(path: &std::path::Path, entry: &str) -> std::io::Result<()> {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim_end();
+    let body = if trimmed.is_empty() {
+        format!("[\n{entry}\n]\n")
+    } else {
+        let stripped = trimmed.strip_suffix(']').ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{}: trajectory file is not a JSON array", path.display()),
+            )
+        })?;
+        let stripped = stripped.trim_end();
+        if stripped.ends_with('[') {
+            format!("{stripped}\n{entry}\n]\n")
+        } else {
+            format!("{stripped},\n{entry}\n]\n")
+        }
+    };
+    std::fs::write(path, body)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +121,22 @@ mod tests {
         });
         assert!(m.ns_per_iter > 0.0);
         assert!(m.report().contains("spin"));
+    }
+
+    #[test]
+    fn append_json_run_builds_valid_array() {
+        use crate::util::mini_json::Json;
+        let path = std::env::temp_dir().join(format!("skewsa_bench_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        append_json_run(&path, "  {\"a\": 1}").unwrap();
+        append_json_run(&path, "  {\"a\": 2.5e9}").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).expect("appended file must stay valid JSON");
+        let arr = j.as_arr().expect("array root");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("a").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(arr[1].get("a").and_then(Json::as_f64), Some(2.5e9));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

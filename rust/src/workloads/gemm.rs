@@ -8,6 +8,10 @@
 //! weights).
 
 use crate::arith::format::FpFormat;
+use crate::arith::fma::ChainCfg;
+use crate::pe::PipelineKind;
+use crate::sa::column::SimError;
+use crate::sa::fast::FastArraySim;
 use crate::sa::tile::GemmShape;
 use crate::util::rng::Rng;
 
@@ -71,6 +75,23 @@ impl GemmData {
         let a = (0..shape.m).map(|_| (0..shape.k).map(|_| gen(&mut rng)).collect()).collect();
         let w = (0..shape.k).map(|_| (0..shape.n).map(|_| gen(&mut rng)).collect()).collect();
         GemmData { shape, fmt, a, w }
+    }
+
+    /// Run this GEMM through the fast cycle simulator as a single
+    /// `K×N` weight tile (the generated matrices are exactly one tile's
+    /// worth of data) and return the rounded `M×N` result.  Practical at
+    /// the paper's full 128×128 tile size; `threads` fans the column
+    /// strips out across workers.
+    pub fn cycle_sim_f32(
+        &self,
+        chain: &ChainCfg,
+        kind: PipelineKind,
+        threads: usize,
+    ) -> Result<Vec<Vec<f32>>, SimError> {
+        let mut sim = FastArraySim::new(*chain, kind, &self.w, &self.a);
+        let budget = sim.schedule().total_cycles() + 16;
+        sim.run_parallel(budget, threads)?;
+        Ok(sim.result_f32())
     }
 
     /// f64 reference product `A × W` (accumulated in f64 — the *loose*
@@ -137,6 +158,21 @@ mod tests {
         for row in &y {
             for &v in row {
                 assert_eq!(v, v.round(), "integer inputs give integer outputs");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_sim_single_tile_matches_oracle() {
+        let chain = ChainCfg::BF16_FP32;
+        let g = GemmData::cnn_like(GemmShape::new(4, 12, 6), FpFormat::BF16, 9);
+        let want = FastArraySim::oracle_bits(&chain, &g.w, &g.a);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let y = g.cycle_sim_f32(&chain, kind, 2).unwrap();
+            for (m, row) in y.iter().enumerate() {
+                for (n, v) in row.iter().enumerate() {
+                    assert_eq!(v.to_bits() as u64, want[m][n], "{kind} y[{m}][{n}]");
+                }
             }
         }
     }

@@ -16,7 +16,12 @@
 //!   §Depthwise-mapping);
 //! * fully-connected → `M = batch`, `K = C_in`, `N = C_out`.
 
+use crate::arith::fma::ChainCfg;
+use crate::pe::PipelineKind;
+use crate::sa::dataflow::WsSchedule;
+use crate::sa::fast::FastArraySim;
 use crate::sa::tile::GemmShape;
+use crate::workloads::gemm::GemmData;
 
 /// The operator types appearing in the evaluated CNNs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,6 +106,100 @@ impl LayerDef {
             LayerKind::Fc { cin, cout } => (cin * cout) as u64,
         }
     }
+
+    /// Cycle-simulate this layer's first weight tile on a `rows×cols`
+    /// array through the fast banded simulator, cross-checking the
+    /// closed-form timing model *and* bit-exact numerics in one pass
+    /// (DESIGN.md §2: cycle simulation validates the model the
+    /// whole-CNN figures are built on; it does not substitute for it).
+    ///
+    /// The streamed-row count is capped at `m_cap`: tile latency is
+    /// linear in `M`, so a capped stream exercises the same per-kind
+    /// coefficients (`S`, `tail`) at a fraction of the cost.  Weight
+    /// rows beyond the layer's `K` stream zeros, as the timing model
+    /// assumes (the array does not reconfigure).
+    pub fn cross_check_tile_sim(
+        &self,
+        chain: &ChainCfg,
+        rows: usize,
+        cols: usize,
+        kind: PipelineKind,
+        m_cap: usize,
+        threads: usize,
+    ) -> TileSimCheck {
+        let shape = self.gemm();
+        let m = shape.m.min(m_cap.max(1));
+        let n_used = shape.n.min(cols);
+        let k_used = shape.k.min(rows);
+        // Deterministic per-layer seed (FNV-1a over the layer name).
+        let seed = self
+            .name
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3));
+        let data = GemmData::cnn_like(GemmShape::new(m, k_used, n_used), chain.in_fmt, seed);
+        let mut w_full = data.w.clone();
+        w_full.resize(rows, vec![0u64; n_used]);
+        let mut a_full = data.a.clone();
+        for row in &mut a_full {
+            row.resize(rows, 0);
+        }
+        let model_cycles = WsSchedule::new(kind, rows, n_used, m).total_cycles();
+        let mut sim = FastArraySim::new(*chain, kind, &w_full, &a_full);
+        let ran = sim.run_parallel(model_cycles + 16, threads);
+        let bit_exact =
+            ran.is_ok() && sim.result_bits() == FastArraySim::oracle_bits(chain, &w_full, &a_full);
+        TileSimCheck {
+            layer: self.name.clone(),
+            kind,
+            m,
+            sim_cycles: sim.cycles(),
+            model_cycles,
+            bit_exact,
+            stalls: sim.stalls(),
+        }
+    }
+}
+
+/// Result of cross-checking one layer's representative weight tile
+/// through the fast cycle simulator ([`LayerDef::cross_check_tile_sim`]).
+#[derive(Clone, Debug)]
+pub struct TileSimCheck {
+    pub layer: String,
+    pub kind: PipelineKind,
+    /// Streamed rows actually simulated (the layer's `M`, capped).
+    pub m: usize,
+    pub sim_cycles: u64,
+    pub model_cycles: u64,
+    pub bit_exact: bool,
+    pub stalls: u64,
+}
+
+impl TileSimCheck {
+    /// Simulation and closed-form model agree, bit-exactly and on time.
+    pub fn ok(&self) -> bool {
+        self.bit_exact && self.sim_cycles == self.model_cycles && self.stalls == 0
+    }
+}
+
+/// Cross-check representative layers of a network (stem, mid-network,
+/// and the small-`M` late layers where the paper's saving concentrates)
+/// through the fast cycle simulator on the paper's 128×128 array, both
+/// pipeline kinds.  Shared by the MobileNetV1 / ResNet50 tables so the
+/// Fig. 7 and Fig. 8 validation legs cannot drift apart.
+pub fn cross_check_paper_tiles(
+    layers: &[LayerDef],
+    m_cap: usize,
+    threads: usize,
+) -> Vec<TileSimCheck> {
+    let chain = ChainCfg::BF16_FP32;
+    let picks = [0usize, layers.len() / 2, layers.len() - 2, layers.len() - 1];
+    let mut checks = Vec::with_capacity(picks.len() * 2);
+    for &i in &picks {
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            checks.push(layers[i].cross_check_tile_sim(&chain, 128, 128, kind, m_cap, threads));
+        }
+    }
+    checks
 }
 
 #[cfg(test)]
@@ -135,5 +234,20 @@ mod tests {
     fn stride_one_preserves_spatial() {
         let l = LayerDef::conv("c", 56, 3, 1, 64, 64);
         assert_eq!(l.out_hw(), 56);
+    }
+
+    #[test]
+    fn tile_sim_cross_check_validates_model() {
+        // K > rows exercises the tile clamp; K < rows (depthwise)
+        // exercises the zero-padded chain the model assumes.
+        let cases = [LayerDef::conv("c", 8, 3, 1, 4, 6), LayerDef::dw("d", 8, 3, 1, 6)];
+        for l in &cases {
+            for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+                let chk = l.cross_check_tile_sim(&ChainCfg::BF16_FP32, 16, 8, kind, 5, 2);
+                assert!(chk.ok(), "{chk:?}");
+                assert_eq!(chk.m, 5);
+                assert_eq!(chk.sim_cycles, chk.model_cycles);
+            }
+        }
     }
 }

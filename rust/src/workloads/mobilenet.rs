@@ -40,6 +40,14 @@ pub fn total_macs() -> u64 {
     layers().iter().map(|l| l.macs()).sum()
 }
 
+/// Cross-check representative layers through the fast cycle simulator
+/// on the paper's 128×128 array, both pipeline kinds — the per-layer
+/// Fig. 7 numbers are built on the closed-form model these checks
+/// validate (DESIGN.md §2).
+pub fn cross_check_paper_tiles(m_cap: usize, threads: usize) -> Vec<super::layer::TileSimCheck> {
+    super::layer::cross_check_paper_tiles(&layers(), m_cap, threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,6 +85,13 @@ mod tests {
             assert!(matches!(pw.kind, LayerKind::Conv { kh: 1, .. }), "{}", pw.name);
             // The pointwise conv consumes the depthwise output resolution.
             assert_eq!(pw.in_hw, dw.out_hw());
+        }
+    }
+
+    #[test]
+    fn paper_tiles_cycle_sim_validates_model() {
+        for chk in cross_check_paper_tiles(3, 4) {
+            assert!(chk.ok(), "{chk:?}");
         }
     }
 

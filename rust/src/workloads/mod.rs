@@ -11,4 +11,4 @@ pub mod mobilenet;
 pub mod resnet50;
 
 pub use gemm::GemmData;
-pub use layer::{LayerDef, LayerKind};
+pub use layer::{LayerDef, LayerKind, TileSimCheck};

@@ -55,6 +55,14 @@ pub fn total_macs() -> u64 {
     layers().iter().map(|l| l.macs()).sum()
 }
 
+/// Cross-check representative layers through the fast cycle simulator
+/// on the paper's 128×128 array, both pipeline kinds — the per-layer
+/// Fig. 8 numbers are built on the closed-form model these checks
+/// validate (DESIGN.md §2).
+pub fn cross_check_paper_tiles(m_cap: usize, threads: usize) -> Vec<super::layer::TileSimCheck> {
+    super::layer::cross_check_paper_tiles(&layers(), m_cap, threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +103,13 @@ mod tests {
         // Stage 2 runs at 56.
         assert!(ls.iter().any(|l| l.name == "conv2_1/3x3" && l.in_hw == 56));
         assert!(ls.iter().any(|l| l.name == "conv5_3/1x1b" && l.out_hw() == 7));
+    }
+
+    #[test]
+    fn paper_tiles_cycle_sim_validates_model() {
+        for chk in cross_check_paper_tiles(3, 4) {
+            assert!(chk.ok(), "{chk:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! Fast-simulator integration: the allocation-free banded simulator must
+//! agree with the dense reference loop, the value oracle, and the
+//! closed-form timing model — at paper scale (128×128), both pipeline
+//! kinds, serial and column-parallel.
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::arith::format::FpFormat;
+use skewsa::pe::PipelineKind;
+use skewsa::sa::array::ArraySim;
+use skewsa::sa::dataflow::WsSchedule;
+use skewsa::sa::fast::FastArraySim;
+use skewsa::sa::tile::GemmShape;
+use skewsa::util::prop::{Gen, Prop};
+use skewsa::workloads::gemm::GemmData;
+
+const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+/// The ISSUE 1 headline case: one full paper-scale 128×128 weight tile,
+/// simulated directly, bit-exact vs the oracle and cycle-exact vs the
+/// closed-form schedule, for both pipeline kinds.
+#[test]
+fn paper_scale_128x128_bit_exact_and_on_schedule() {
+    let (m, r, c) = (5usize, 128usize, 128usize);
+    let data = GemmData::cnn_like(GemmShape::new(m, r, c), FpFormat::BF16, 0x128_128);
+    let want = FastArraySim::oracle_bits(&CFG, &data.w, &data.a);
+    let mut cycles = Vec::new();
+    for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        let sched = WsSchedule::new(kind, r, c, m);
+        let mut sim = FastArraySim::new(CFG, kind, &data.w, &data.a);
+        sim.run(sched.total_cycles() + 16).unwrap();
+        assert_eq!(sim.result_bits(), want, "{kind}");
+        assert_eq!(sim.cycles(), sched.total_cycles(), "{kind}");
+        assert_eq!(sim.stalls(), 0, "{kind}");
+        for col in 0..c {
+            for mm in 0..m {
+                assert_eq!(sim.output_cycle(mm, col), sched.output_cycle(col, mm), "{kind}");
+            }
+        }
+        cycles.push(sim.cycles());
+    }
+    assert_eq!(cycles[0] - cycles[1], 126, "R−2 saving at R=128");
+}
+
+/// Column-parallel strips produce results identical to the serial run at
+/// paper scale (adversarial data stresses the numeric paths too).
+#[test]
+fn paper_scale_parallel_matches_serial() {
+    let data = GemmData::adversarial(GemmShape::new(4, 128, 128), FpFormat::BF16, 0xbead);
+    for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        let mut serial = FastArraySim::new(CFG, kind, &data.w, &data.a);
+        serial.run(1_000_000).unwrap();
+        let mut par = FastArraySim::new(CFG, kind, &data.w, &data.a);
+        par.run_parallel(1_000_000, 8).unwrap();
+        assert_eq!(par.result_bits(), serial.result_bits(), "{kind}");
+        assert_eq!(par.cycles(), serial.cycles(), "{kind}");
+        assert_eq!(par.stalls(), serial.stalls(), "{kind}");
+        assert!(par.latency_matches_schedule(), "{kind}");
+    }
+}
+
+/// Regression: the banded iteration reports the same `stalls` count (and
+/// bits, cycles, and merged activity) as the dense loop, across shapes
+/// where the band is respectively narrow (M ≪ R), wide (M ≫ R), and
+/// degenerate (single PE).
+#[test]
+fn banded_matches_dense_loop_stalls_and_activity() {
+    for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for &(m, r, c) in &[
+            (1usize, 1usize, 1usize),
+            (2, 48, 5),  // narrow band: deep array, short stream
+            (40, 4, 6),  // wide band: steady state dominates
+            (7, 16, 16), // square-ish
+        ] {
+            let data = GemmData::cnn_like(GemmShape::new(m, r, c), FpFormat::BF16, 77);
+            let mut dense = ArraySim::new(CFG, kind, &data.w, data.a.clone());
+            dense.run(1_000_000).unwrap();
+            let mut fast = FastArraySim::new(CFG, kind, &data.w, &data.a);
+            fast.run(1_000_000).unwrap();
+            assert_eq!(fast.stalls(), dense.stalls, "{kind} M={m} R={r} C={c}");
+            assert_eq!(fast.result_bits(), dense.result_bits(), "{kind} M={m} R={r} C={c}");
+            assert_eq!(fast.cycles(), dense.cycles(), "{kind} M={m} R={r} C={c}");
+            assert_eq!(fast.activity(), dense.activity(), "{kind} M={m} R={r} C={c}");
+        }
+    }
+}
+
+/// Property: on random dimensions and CNN-statistics data, the fast
+/// simulator is bit- and cycle-identical to the dense loop and lands on
+/// the closed-form schedule.
+#[test]
+fn prop_fast_matches_dense_and_schedule() {
+    Prop::new("fast-vs-dense", 30).run(|g: &mut Gen| {
+        let (m, r, c) = (g.usize_in(1, 20), g.usize_in(1, 24), g.usize_in(1, 10));
+        let kind = *g.choose(&[PipelineKind::Baseline3b, PipelineKind::Skewed]);
+        let data = GemmData::cnn_like(GemmShape::new(m, r, c), FpFormat::BF16, g.bits(32));
+        let mut dense = ArraySim::new(CFG, kind, &data.w, data.a.clone());
+        if dense.run(1_000_000).is_err() {
+            g.assert("dense sim must not violate its own schedule", false);
+            return;
+        }
+        let mut fast = FastArraySim::new(CFG, kind, &data.w, &data.a);
+        if fast.run(1_000_000).is_err() {
+            g.assert("fast sim must not violate its own schedule", false);
+            return;
+        }
+        g.assert_eq("bits", fast.result_bits(), dense.result_bits());
+        g.assert_eq("cycles", fast.cycles(), dense.cycles());
+        g.assert_eq("stalls", fast.stalls(), dense.stalls);
+        g.assert("on schedule", fast.latency_matches_schedule());
+    });
+}
