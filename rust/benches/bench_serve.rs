@@ -1,0 +1,170 @@
+//! Serving bench: the serve tentpole's headline measurement.
+//!
+//! Drives the full serve stack (queue → batcher → plan cache → shards)
+//! with a closed-loop client fleet over MobileNet+ResNet50 layer
+//! models, then runs the *same* request list sequentially through
+//! per-request `Coordinator` runs (equal total worker budget) — the
+//! pre-serve architecture.  Reports p50/p95/p99 latency and request
+//! throughput for the served path, the sequential baseline throughput,
+//! and the speedup; a sampled subset of requests is re-run solo and
+//! compared bit-for-bit against its served response.
+//!
+//! Every run appends to `BENCH_serve.json` at the repo root, mirroring
+//! the `BENCH_hotpath.json` perf trajectory.  Pass `--smoke` (or set
+//! `SKEWSA_BENCH_SMOKE=1`) for the CI-grade quick run.
+//!
+//! ```text
+//! cargo bench --bench bench_serve
+//! cargo bench --bench bench_serve -- --smoke
+//! ```
+
+use skewsa::config::{RunConfig, ServeConfig};
+use skewsa::report;
+use skewsa::serve::{gen_request, run_closed_loop, DeadlineClass, LoadSpec, Server};
+use skewsa::util::bench::append_json_run;
+use skewsa::workloads::serving::WeightStore;
+use skewsa::workloads::{mobilenet, resnet50};
+use skewsa::PipelineKind;
+use std::sync::Arc;
+use std::time::Instant;
+
+const CAP: usize = 64;
+
+fn run_cfg() -> RunConfig {
+    let mut cfg = RunConfig::small();
+    cfg.rows = 32;
+    cfg.cols = 32;
+    cfg.verify_fraction = 0.0;
+    cfg
+}
+
+fn main() {
+    let mut smoke = std::env::var_os("SKEWSA_BENCH_SMOKE").is_some();
+    for a in std::env::args().skip(1) {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            "--bench" => {} // appended by `cargo bench`
+            other => {
+                eprintln!("error: unknown option '{other}'\nusage: bench_serve [--smoke]");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let cfg = run_cfg();
+    let scfg = ServeConfig {
+        shards: 2,
+        workers_per_shard: 2,
+        queue_cap: 256,
+        batch_window_us: 500,
+        interactive_window_us: 0,
+        max_batch_requests: 16,
+        max_batch_rows: 256,
+        plan_cache_cap: 128,
+        ..ServeConfig::default()
+    };
+    let mut layers = mobilenet::layers();
+    layers.extend(resnet50::layers());
+    let store = Arc::new(WeightStore::from_layers(&layers, cfg.in_fmt, CAP, CAP));
+    let spec = LoadSpec {
+        clients: 8,
+        requests_per_client: if smoke { 6 } else { 30 },
+        kinds: vec![PipelineKind::Baseline3b, PipelineKind::Skewed],
+        interactive_fraction: 0.2,
+        min_rows: 2,
+        max_rows: 8,
+        seed: 0x5e12e_2023,
+    };
+    let total_requests = spec.clients * spec.requests_per_client;
+    println!(
+        "bench: serve {} models (K/N<={CAP}) on {} shards x {} workers, \
+         {} clients x {} requests{}",
+        store.len(),
+        scfg.shards,
+        scfg.workers_per_shard,
+        spec.clients,
+        spec.requests_per_client,
+        if smoke { " (smoke)" } else { "" },
+    );
+
+    // --- served path -----------------------------------------------------
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let load = run_closed_loop(&server, &spec);
+    let stats = server.stats();
+    assert_eq!(load.completed, total_requests, "every request must be served");
+    let rep = report::serve_summary(&load, &stats);
+    print!("{}", rep.render());
+
+    // --- sequential per-request Coordinator baseline ---------------------
+    // Same request list, same total worker budget, one GEMM at a time —
+    // the architecture before the serve layer existed.
+    let mut seq_cfg = cfg.clone();
+    seq_cfg.workers = scfg.shards * scfg.workers_per_shard;
+    let t0 = Instant::now();
+    for client in 0..spec.clients {
+        for i in 0..spec.requests_per_client {
+            let (model, kind, _class, a) = gen_request(&store, &spec, client, i);
+            let bits = store.solo_reference_bits(&seq_cfg, model, kind, &a);
+            std::hint::black_box(bits.len());
+        }
+    }
+    let seq_wall = t0.elapsed().as_secs_f64();
+    let seq_rps = total_requests as f64 / seq_wall;
+    let serve_rps = load.latency.throughput_rps;
+    let speedup = serve_rps / seq_rps.max(1e-9);
+    println!("bench: sequential baseline {seq_rps:>10.1} req/s ({seq_wall:.2}s total)");
+    println!("bench: served throughput   {serve_rps:>10.1} req/s");
+    println!("bench: serve-vs-sequential {speedup:>10.2}x");
+
+    // --- sampled bit-exactness: served == solo coordinator ---------------
+    let samples = if smoke { 4 } else { 8 };
+    for s in 0..samples {
+        let client = s % spec.clients;
+        let i = (s * 7) % spec.requests_per_client;
+        let (model, kind, _class, a) = gen_request(&store, &spec, client, i);
+        let rx = server.submit(model, kind, DeadlineClass::Interactive, a.clone());
+        let resp = rx.recv().expect("served sample");
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let want = store.solo_reference_bits(&seq_cfg, model, kind, &a);
+        assert_eq!(got, want, "served bits diverged from solo run (sample {s})");
+    }
+    println!("bench: bit-exactness      {samples} served samples == solo coordinator runs");
+
+    // --- trajectory file -------------------------------------------------
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let l = &load.latency;
+    // Exact tile-retry count from the shard counters (not the
+    // response-weighted LoadReport sum).
+    let tile_retries: u64 = stats.shards.iter().map(|s| s.retries).sum();
+    let entry = format!(
+        "  {{\"bench\": \"serve\", \"unix_time\": {ts}, \"smoke\": {smoke}, \
+         \"requests\": {total_requests}, \"clients\": {}, \"shards\": {}, \
+         \"workers_per_shard\": {}, \"cap\": {CAP}, \
+         \"p50_us\": {:.1}, \"p95_us\": {:.1}, \"p99_us\": {:.1}, \"mean_us\": {:.1}, \
+         \"serve_rps\": {:.2}, \"seq_rps\": {:.2}, \"speedup\": {:.3}, \
+         \"batched_fraction\": {:.3}, \"max_batch\": {}, \
+         \"cache_hit_rate\": {:.3}, \"retries\": {}}}",
+        spec.clients,
+        scfg.shards,
+        scfg.workers_per_shard,
+        l.p50_us,
+        l.p95_us,
+        l.p99_us,
+        l.mean_us,
+        serve_rps,
+        seq_rps,
+        speedup,
+        load.batched_fraction(),
+        load.max_batch,
+        stats.cache.hit_rate(),
+        tile_retries,
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_serve.json");
+    match append_json_run(&path, &entry) {
+        Ok(()) => println!("bench: trajectory appended to {}", path.display()),
+        Err(e) => eprintln!("bench: could not append trajectory: {e}"),
+    }
+}

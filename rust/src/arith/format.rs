@@ -32,8 +32,9 @@ pub enum FpClass {
 
 /// A floating-point *format descriptor*: field widths and special-value
 /// conventions.  `FpFormat` is a value type so simulations can be swept
-/// across formats at runtime.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// across formats at runtime (and hashed, so plan-cache keys can include
+/// the format).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct FpFormat {
     /// Human-readable name, e.g. `"bf16"`.
     pub name: &'static str,

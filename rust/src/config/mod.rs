@@ -7,6 +7,7 @@
 
 use crate::arith::fma::ChainCfg;
 use crate::arith::format::FpFormat;
+use crate::coordinator::router::Policy;
 use crate::timing::model::TimingConfig;
 use crate::util::cli::Args;
 use crate::util::mini_json::Json;
@@ -177,6 +178,122 @@ impl RunConfig {
     }
 }
 
+/// Serving-layer configuration (DESIGN.md §11): request queueing,
+/// dynamic batching, plan caching and multi-array sharding knobs for
+/// `skewsa serve` and the [`crate::serve`] subsystem.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Independent array shards (each owns a persistent worker pool).
+    pub shards: usize,
+    /// Tile-evaluation worker threads inside each shard's pool.
+    pub workers_per_shard: usize,
+    /// Bounded request-queue capacity (submitters block when full).
+    pub queue_cap: usize,
+    /// Coalescing window for `DeadlineClass::Batch` anchors, µs.
+    pub batch_window_us: u64,
+    /// Coalescing window for `DeadlineClass::Interactive` anchors, µs
+    /// (0 = flush immediately with whatever is already queued).
+    pub interactive_window_us: u64,
+    /// Most requests coalesced into one batch.
+    pub max_batch_requests: usize,
+    /// Most stacked activation rows in one batch (a single oversized
+    /// request still runs, alone).
+    pub max_batch_rows: usize,
+    /// Plan-cache capacity in entries (LRU beyond that).
+    pub plan_cache_cap: usize,
+    /// Routing policy lifted to the shard level.
+    pub shard_policy: Policy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            shards: 2,
+            workers_per_shard: 2,
+            queue_cap: 256,
+            batch_window_us: 200,
+            interactive_window_us: 0,
+            max_batch_requests: 32,
+            max_batch_rows: 512,
+            plan_cache_cap: 64,
+            shard_policy: Policy::LeastLoaded,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// A small deterministic config for tests.
+    pub fn small() -> ServeConfig {
+        ServeConfig {
+            shards: 2,
+            workers_per_shard: 2,
+            queue_cap: 32,
+            batch_window_us: 2_000,
+            interactive_window_us: 0,
+            max_batch_requests: 8,
+            max_batch_rows: 64,
+            plan_cache_cap: 16,
+            shard_policy: Policy::LeastLoaded,
+        }
+    }
+
+    /// Apply a parsed JSON config object over this one (flat keys,
+    /// sharing the file with [`RunConfig`]).
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        let get_usize = |key: &str| j.get(key).and_then(Json::as_usize);
+        if let Some(v) = get_usize("shards") {
+            self.shards = v.max(1);
+        }
+        if let Some(v) = get_usize("workers_per_shard") {
+            self.workers_per_shard = v.max(1);
+        }
+        if let Some(v) = get_usize("serve_queue_cap") {
+            self.queue_cap = v.max(1);
+        }
+        if let Some(v) = get_usize("batch_window_us") {
+            self.batch_window_us = v as u64;
+        }
+        if let Some(v) = get_usize("interactive_window_us") {
+            self.interactive_window_us = v as u64;
+        }
+        if let Some(v) = get_usize("max_batch_requests") {
+            self.max_batch_requests = v.max(1);
+        }
+        if let Some(v) = get_usize("max_batch_rows") {
+            self.max_batch_rows = v.max(1);
+        }
+        if let Some(v) = get_usize("plan_cache_cap") {
+            self.plan_cache_cap = v.max(1);
+        }
+        if let Some(v) = j.get("shard_policy").and_then(Json::as_str) {
+            self.shard_policy = v.parse()?;
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (`--shards`, `--shard-workers`, …).  A
+    /// malformed `--shard-policy` is a hard error, matching the JSON
+    /// path (silent fallback would defeat the strict-CLI guarantee).
+    pub fn apply_args(&mut self, a: &Args) -> Result<(), String> {
+        if let Some(v) = a.get_usize("shards") {
+            self.shards = v.max(1);
+        }
+        if let Some(v) = a.get_usize("shard-workers") {
+            self.workers_per_shard = v.max(1);
+        }
+        if let Some(v) = a.get_u64("batch-window-us") {
+            self.batch_window_us = v;
+        }
+        if let Some(v) = a.get_usize("batch-max") {
+            self.max_batch_requests = v.max(1);
+        }
+        if let Some(v) = a.get("shard-policy") {
+            self.shard_policy = v.parse()?;
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +328,40 @@ mod tests {
         let mut c = RunConfig::paper();
         let j = Json::parse(r#"{"in_fmt": "fp7"}"#).unwrap();
         assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn serve_config_json_and_args() {
+        let mut s = ServeConfig::default();
+        let j = Json::parse(
+            r#"{"shards": 4, "workers_per_shard": 3, "batch_window_us": 500,
+                "max_batch_requests": 16, "shard_policy": "rr"}"#,
+        )
+        .unwrap();
+        s.apply_json(&j).unwrap();
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.workers_per_shard, 3);
+        assert_eq!(s.batch_window_us, 500);
+        assert_eq!(s.max_batch_requests, 16);
+        assert_eq!(s.shard_policy, Policy::RoundRobin);
+        let bad = Json::parse(r#"{"shard_policy": "chaotic"}"#).unwrap();
+        assert!(s.apply_json(&bad).is_err());
+
+        use crate::util::cli::Cli;
+        let cli = Cli::new("t", "t")
+            .opt("shards", "", None)
+            .opt("shard-workers", "", None)
+            .opt("batch-window-us", "", None)
+            .opt("batch-max", "", None)
+            .opt("shard-policy", "", None);
+        let a = cli.parse(&["--shards=1".into(), "--shard-policy=ll".into()]).unwrap();
+        s.apply_args(&a).unwrap();
+        assert_eq!(s.shards, 1);
+        assert_eq!(s.shard_policy, Policy::LeastLoaded);
+        // A typo'd policy is a hard error, not a silent default.
+        let bad = cli.parse(&["--shard-policy=least".into()]).unwrap();
+        assert!(s.apply_args(&bad).is_err());
+        assert_eq!(s.shard_policy, Policy::LeastLoaded, "unchanged on error");
     }
 
     #[test]

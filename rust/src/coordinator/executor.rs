@@ -6,11 +6,21 @@
 //! back over a shared results channel.  Routing across queues is the
 //! [`Router`]'s job.
 //!
+//! Two lifetimes of the same machinery:
+//!
+//! * [`Executor`] — the classic one-GEMM facade: spawns a pool, runs,
+//!   tears down (unchanged public behaviour);
+//! * [`WorkerPool`] — a *persistent* pool that outlives any single GEMM,
+//!   so the serve layer can stream batches through long-lived workers
+//!   instead of paying thread spawn/teardown per request (DESIGN.md
+//!   §11).  `Executor::run` is implemented on top of it.
+//!
 //! Fault handling: a worker catches panics in job evaluation
 //! (`catch_unwind`) and reports a failure; the leader re-dispatches the
-//! job to a different worker up to [`Executor::MAX_RETRIES`] times —
+//! job up to [`Executor::MAX_RETRIES`] times, **excluding the workers
+//! the job already failed on** (a job is never handed straight back to
+//! the worker that just dropped it, unless it is the only worker) —
 //! exercised by the failure-injection integration tests.
-
 
 use crate::arith::fma::ChainCfg;
 use crate::config::{NumericMode, RunConfig};
@@ -21,14 +31,25 @@ use crate::pe::PipelineKind;
 use crate::sa::fast::FastArraySim;
 use crate::sa::tile::TilePlan;
 use crate::workloads::gemm::GemmData;
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 
+/// Everything a pool worker needs to evaluate one tile: the numeric
+/// context travels with the job, so one pool serves GEMMs of any
+/// format/mode/kind mix back-to-back.
+struct PoolJob {
+    chain: ChainCfg,
+    mode: NumericMode,
+    kind: PipelineKind,
+    data: Arc<GemmData>,
+    job: TileJob,
+}
+
 /// Message to a worker.
 enum WorkMsg {
-    Job(TileJob),
-    Stop,
+    Job(Box<PoolJob>),
 }
 
 /// Message back to the leader.
@@ -45,6 +66,187 @@ pub struct FaultPlan {
     pub worker: usize,
     /// Panic on this many jobs before behaving (0 = healthy).
     pub failures: usize,
+}
+
+impl FaultPlan {
+    /// A worker that fails every job it is ever handed (the pool must
+    /// route around it forever).
+    pub fn always(worker: usize) -> FaultPlan {
+        FaultPlan { worker, failures: usize::MAX }
+    }
+}
+
+/// A persistent pool of tile-evaluation workers.  Spawned once, fed any
+/// number of GEMMs via [`WorkerPool::run_gemm`]; workers join on drop.
+pub struct WorkerPool {
+    workers: usize,
+    queue_depth: usize,
+    job_txs: Vec<SyncSender<WorkMsg>>,
+    res_rx: Receiver<ResultMsg>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    router: Router,
+    /// GEMMs run through this pool (reuse statistics).
+    runs: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads, each with a bounded queue of
+    /// `queue_depth` jobs, routed by `policy`.
+    pub fn new(workers: usize, queue_depth: usize, policy: Policy) -> WorkerPool {
+        Self::with_fault(workers, queue_depth, policy, FaultPlan::default())
+    }
+
+    /// As [`WorkerPool::new`], with a failure-injection plan.
+    pub fn with_fault(
+        workers: usize,
+        queue_depth: usize,
+        policy: Policy,
+        fault: FaultPlan,
+    ) -> WorkerPool {
+        let workers = workers.max(1);
+        let queue_depth = queue_depth.max(1);
+        // Results outstanding never exceed total in-flight jobs, so this
+        // capacity means workers never block sending results.
+        let (res_tx, res_rx): (SyncSender<ResultMsg>, Receiver<ResultMsg>) =
+            sync_channel(workers * queue_depth);
+        let fault_budget = Arc::new(AtomicUsize::new(fault.failures));
+        let mut job_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx): (SyncSender<WorkMsg>, Receiver<WorkMsg>) = sync_channel(queue_depth);
+            job_txs.push(tx);
+            let res_tx = res_tx.clone();
+            let faulty = fault.worker == w;
+            let fault_budget = Arc::clone(&fault_budget);
+            handles.push(std::thread::spawn(move || {
+                while let Ok(WorkMsg::Job(pj)) = rx.recv() {
+                    let inject = faulty && fault_budget.load(Ordering::Relaxed) > 0;
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if inject && fault_budget.fetch_sub(1, Ordering::Relaxed) > 0 {
+                            panic!("injected fault");
+                        }
+                        eval_tile(&pj.chain, pj.mode, pj.kind, &pj.data, &pj.job)
+                    }));
+                    let msg = match run {
+                        Ok(y_part) => {
+                            ResultMsg::Done(TileResult { job: pj.job, y_part, worker: w })
+                        }
+                        Err(e) => ResultMsg::Failed {
+                            job: pj.job,
+                            worker: w,
+                            what: e
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .unwrap_or_else(|| "panic".into()),
+                        },
+                    };
+                    if res_tx.send(msg).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        let router = Router::new(policy, workers);
+        WorkerPool { workers, queue_depth, job_txs, res_rx, handles, router, runs: 0 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// GEMMs run through this pool so far.
+    pub fn runs(&self) -> usize {
+        self.runs
+    }
+
+    /// Run one GEMM through the persistent workers; blocks until
+    /// assembly completes.  `&mut self` serialises runs per pool (the
+    /// serve layer gives each shard its own pool).
+    ///
+    /// A job that exhausts [`Executor::MAX_RETRIES`] is an `Err`, not a
+    /// panic: a persistent pool lives on detached threads (shards),
+    /// where a panic would silently wedge the whole serving pipeline.
+    /// The pool drains its in-flight work before returning, so it
+    /// remains usable for subsequent runs.
+    pub fn run_gemm(
+        &mut self,
+        chain: ChainCfg,
+        mode: NumericMode,
+        kind: PipelineKind,
+        data: &Arc<GemmData>,
+        plan: &TilePlan,
+    ) -> Result<ExecOutcome, String> {
+        let sched = Scheduler::new(plan);
+        let mut state = RunState::new(data.shape.m, data.shape.n, plan.cols, sched.job_count());
+        let mut retries = 0usize;
+        let mut attempts = vec![0usize; sched.job_count()];
+        // Workers each retried job already failed on: the router must
+        // not hand the job straight back to any of them.
+        let mut failed_on: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); sched.job_count()];
+        let mut pending_jobs: std::collections::VecDeque<TileJob> =
+            sched.jobs().iter().copied().collect();
+        let mut inflight = 0usize;
+        while !state.complete() {
+            // Fill queues.
+            while inflight < self.workers * self.queue_depth {
+                let Some(job) = pending_jobs.pop_front() else { break };
+                let w = self.router.dispatch_excluding(&failed_on[job.id]);
+                let pj = PoolJob { chain, mode, kind, data: Arc::clone(data), job };
+                self.job_txs[w].send(WorkMsg::Job(Box::new(pj))).expect("worker hung up");
+                inflight += 1;
+            }
+            match self.res_rx.recv().expect("all workers died") {
+                ResultMsg::Done(r) => {
+                    self.router.complete(r.worker);
+                    inflight -= 1;
+                    state.accept(r);
+                }
+                ResultMsg::Failed { job, worker, what } => {
+                    self.router.complete(worker);
+                    inflight -= 1;
+                    attempts[job.id] += 1;
+                    retries += 1;
+                    if attempts[job.id] > Executor::MAX_RETRIES {
+                        self.drain_inflight(inflight);
+                        return Err(format!(
+                            "job {} failed {} times (last on worker {worker}): {what}",
+                            job.id,
+                            attempts[job.id]
+                        ));
+                    }
+                    failed_on[job.id].insert(worker);
+                    pending_jobs.push_back(job);
+                }
+            }
+        }
+        self.runs += 1;
+        let per_worker = state.per_worker.iter().map(|(&w, &n)| (w, n)).collect();
+        Ok(ExecOutcome { y: state.into_result(), per_worker, retries })
+    }
+
+    /// Consume the results of jobs still queued/running after an
+    /// aborted run, keeping the router accounting and the result
+    /// channel clean for the next run.
+    fn drain_inflight(&mut self, mut inflight: usize) {
+        while inflight > 0 {
+            match self.res_rx.recv() {
+                Ok(ResultMsg::Done(r)) => self.router.complete(r.worker),
+                Ok(ResultMsg::Failed { worker, .. }) => self.router.complete(worker),
+                Err(_) => break,
+            }
+            inflight -= 1;
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Dropping the job senders ends each worker's recv loop.
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 /// The worker pool executor for one GEMM.
@@ -135,102 +337,20 @@ impl Executor {
         Executor { cfg, kind, policy: Policy::LeastLoaded, fault: FaultPlan::default() }
     }
 
-    /// Run the whole GEMM through the pool; blocks until assembly
-    /// completes.
+    /// Run the whole GEMM through a fresh pool; blocks until assembly
+    /// completes.  Panics if a job exhausts the retry budget — the
+    /// historical one-shot contract (the caller owns the thread, so the
+    /// panic is visible); long-lived callers use [`WorkerPool`] and
+    /// handle the `Err` themselves.
     pub fn run(&self, data: &Arc<GemmData>, plan: &TilePlan) -> ExecOutcome {
-        let sched = Scheduler::new(plan);
-        let router = Arc::new(Router::new(self.policy, self.cfg.workers));
-        let chain = self.cfg.chain();
-        let mode = self.cfg.mode;
-        let kind = self.kind;
-
-        let (res_tx, res_rx): (SyncSender<ResultMsg>, Receiver<ResultMsg>) =
-            sync_channel(self.cfg.queue_depth.max(sched.job_count()));
-        let fault_budget = Arc::new(AtomicUsize::new(self.fault.failures));
-
-        let mut job_txs: Vec<SyncSender<WorkMsg>> = Vec::with_capacity(self.cfg.workers);
-        let mut handles = Vec::with_capacity(self.cfg.workers);
-        for w in 0..self.cfg.workers {
-            let (tx, rx): (SyncSender<WorkMsg>, Receiver<WorkMsg>) =
-                sync_channel(self.cfg.queue_depth);
-            job_txs.push(tx);
-            let res_tx = res_tx.clone();
-            let data = Arc::clone(data);
-            let faulty = self.fault.worker == w;
-            let fault_budget = Arc::clone(&fault_budget);
-            handles.push(std::thread::spawn(move || {
-                while let Ok(WorkMsg::Job(job)) = rx.recv() {
-                    let inject = faulty && fault_budget.load(Ordering::Relaxed) > 0;
-                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        if inject && fault_budget.fetch_sub(1, Ordering::Relaxed) > 0 {
-                            panic!("injected fault");
-                        }
-                        eval_tile(&chain, mode, kind, &data, &job)
-                    }));
-                    let msg = match run {
-                        Ok(y_part) => ResultMsg::Done(TileResult { job, y_part, worker: w }),
-                        Err(e) => ResultMsg::Failed {
-                            job,
-                            worker: w,
-                            what: e
-                                .downcast_ref::<&str>()
-                                .map(|s| s.to_string())
-                                .unwrap_or_else(|| "panic".into()),
-                        },
-                    };
-                    if res_tx.send(msg).is_err() {
-                        break;
-                    }
-                }
-            }));
-        }
-        drop(res_tx);
-
-        // Leader loop: dispatch with backpressure, collect, retry.
-        let mut state =
-            RunState::new(data.shape.m, data.shape.n, plan.cols, sched.job_count());
-        let mut retries = 0usize;
-        let mut attempts = vec![0usize; sched.job_count()];
-        let mut pending_jobs: std::collections::VecDeque<TileJob> =
-            sched.jobs().iter().copied().collect();
-        let mut inflight = 0usize;
-        while !state.complete() {
-            // Fill queues.
-            while inflight < self.cfg.workers * self.cfg.queue_depth {
-                let Some(job) = pending_jobs.pop_front() else { break };
-                let w = router.dispatch();
-                job_txs[w].send(WorkMsg::Job(job)).expect("worker hung up");
-                inflight += 1;
-            }
-            match res_rx.recv().expect("all workers died") {
-                ResultMsg::Done(r) => {
-                    router.complete(r.worker);
-                    inflight -= 1;
-                    state.accept(r);
-                }
-                ResultMsg::Failed { job, worker, what } => {
-                    router.complete(worker);
-                    inflight -= 1;
-                    attempts[job.id] += 1;
-                    retries += 1;
-                    assert!(
-                        attempts[job.id] <= Self::MAX_RETRIES,
-                        "job {} failed {} times: {what}",
-                        job.id,
-                        attempts[job.id]
-                    );
-                    pending_jobs.push_back(job);
-                }
-            }
-        }
-        for tx in &job_txs {
-            let _ = tx.send(WorkMsg::Stop);
-        }
-        for h in handles {
-            let _ = h.join();
-        }
-        let per_worker = state.per_worker.iter().map(|(&w, &n)| (w, n)).collect();
-        ExecOutcome { y: state.into_result(), per_worker, retries }
+        let mut pool = WorkerPool::with_fault(
+            self.cfg.workers,
+            self.cfg.queue_depth,
+            self.policy,
+            self.fault,
+        );
+        pool.run_gemm(self.cfg.chain(), self.cfg.mode, self.kind, data, plan)
+            .unwrap_or_else(|e| panic!("executor: {e}"))
     }
 }
 
@@ -284,6 +404,74 @@ mod tests {
         let (out, data) = run_case(NumericMode::Oracle, FaultPlan { worker: 0, failures: 2 });
         assert!(out.retries >= 1, "expected injected retries");
         check_against_f64(&out, &data);
+    }
+
+    #[test]
+    fn always_failing_worker_is_routed_around() {
+        // Worker 0 fails *every* job: the retry path must re-dispatch
+        // each failed job to a different worker (the pre-fix router
+        // could hand it straight back to worker 0 until MAX_RETRIES
+        // blew up).  Worker 0 therefore completes nothing.
+        let (out, data) = run_case(NumericMode::Oracle, FaultPlan::always(0));
+        assert!(out.retries >= 1, "worker 0 sees at least the first dispatch");
+        assert!(out.retries <= 6, "each job fails at most once: {}", out.retries);
+        assert!(
+            out.per_worker.iter().all(|&(w, _)| w != 0),
+            "worker 0 completed a job: {:?}",
+            out.per_worker
+        );
+        check_against_f64(&out, &data);
+    }
+
+    #[test]
+    fn retry_exhaustion_is_an_error_and_pool_survives() {
+        // A 1-worker pool (exclusion void) whose worker fails
+        // MAX_RETRIES+1 times: the run must return Err — not panic,
+        // which on a detached shard thread would wedge the server —
+        // and the drained pool must serve the next run cleanly.
+        let cfg = RunConfig::small();
+        let chain = cfg.chain();
+        let shape = GemmShape::new(2, 8, 8); // single tile on the 8×8 array
+        let data = Arc::new(GemmData::integer_valued(shape, FpFormat::BF16, 5));
+        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        assert_eq!(plan.tile_count(), 1);
+        let mut pool = WorkerPool::with_fault(
+            1,
+            4,
+            Policy::LeastLoaded,
+            FaultPlan { worker: 0, failures: Executor::MAX_RETRIES + 1 },
+        );
+        let err = pool
+            .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan)
+            .unwrap_err();
+        assert!(err.contains("failed"), "{err}");
+        // The fault budget is spent: the same pool now runs cleanly.
+        let ok = pool
+            .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan)
+            .expect("healed pool");
+        assert_eq!(ok.retries, 0);
+    }
+
+    #[test]
+    fn pool_reuse_across_gemms_is_bit_stable() {
+        // One persistent pool running three GEMMs back-to-back (the
+        // serve-layer lifetime) matches fresh per-GEMM executors.
+        let cfg = RunConfig::small();
+        let chain = cfg.chain();
+        let mut pool = WorkerPool::new(cfg.workers, cfg.queue_depth, Policy::LeastLoaded);
+        for seed in [1u64, 2, 3] {
+            let shape = GemmShape::new(5, 20, 9);
+            let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, seed));
+            let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+            let pooled = pool
+                .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan)
+                .expect("pooled run");
+            let fresh = Executor::new(cfg.clone(), PipelineKind::Skewed).run(&data, &plan);
+            let pb: Vec<u32> = pooled.y.iter().map(|v| v.to_bits()).collect();
+            let fb: Vec<u32> = fresh.y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(pb, fb);
+        }
+        assert_eq!(pool.runs(), 3);
     }
 
     #[test]

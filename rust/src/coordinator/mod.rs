@@ -18,7 +18,7 @@ pub mod scheduler;
 pub mod state;
 pub mod verify;
 
-pub use executor::{eval_tile, ExecOutcome, Executor, FaultPlan};
+pub use executor::{eval_tile, ExecOutcome, Executor, FaultPlan, WorkerPool};
 pub use router::{Policy, Router};
 pub use scheduler::{Scheduler, TileJob};
 pub use state::{RunState, TileResult};

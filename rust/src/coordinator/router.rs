@@ -8,6 +8,7 @@
 //!   completion), which keeps slow tiles (edge tiles, big M) from
 //!   starving a queue.
 
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -16,6 +17,27 @@ use std::sync::Arc;
 pub enum Policy {
     RoundRobin,
     LeastLoaded,
+}
+
+impl std::str::FromStr for Policy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rr" | "round_robin" | "round-robin" => Ok(Policy::RoundRobin),
+            "ll" | "least_loaded" | "least-loaded" => Ok(Policy::LeastLoaded),
+            other => Err(format!("unknown policy '{other}' (rr|ll)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Policy::RoundRobin => write!(f, "round_robin"),
+            Policy::LeastLoaded => write!(f, "least_loaded"),
+        }
+    }
 }
 
 /// Router state shared with the executor.
@@ -43,21 +65,38 @@ impl Router {
 
     /// Pick a worker for the next job and account for it.
     pub fn dispatch(&self) -> usize {
+        self.dispatch_excluding(&BTreeSet::new())
+    }
+
+    /// Pick a worker for the next job, never one in `excluded` (the
+    /// workers a retried job already failed on) — unless *every* worker
+    /// is excluded, in which case the exclusion is void (a 1-worker pool
+    /// can only retry in place).  Accounts for the pick.
+    pub fn dispatch_excluding(&self, excluded: &BTreeSet<usize>) -> usize {
+        let n = self.inflight.len();
+        let all_excluded = excluded.len() >= n;
         let w = match self.policy {
             Policy::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.inflight.len()
+                let mut w = self.rr_next.fetch_add(1, Ordering::Relaxed) % n;
+                while !all_excluded && excluded.contains(&w) {
+                    w = self.rr_next.fetch_add(1, Ordering::Relaxed) % n;
+                }
+                w
             }
             Policy::LeastLoaded => {
-                let mut best = 0;
+                let mut best = None;
                 let mut best_load = usize::MAX;
                 for (i, c) in self.inflight.iter().enumerate() {
+                    if !all_excluded && excluded.contains(&i) {
+                        continue;
+                    }
                     let l = c.load(Ordering::Relaxed);
                     if l < best_load {
                         best_load = l;
-                        best = i;
+                        best = Some(i);
                     }
                 }
-                best
+                best.expect("at least one dispatch candidate")
             }
         };
         self.inflight[w].fetch_add(1, Ordering::Relaxed);
@@ -114,6 +153,40 @@ mod tests {
             r.dispatch();
         }
         assert!(r.imbalance() <= 1, "imbalance {}", r.imbalance());
+    }
+
+    #[test]
+    fn exclusion_avoids_failed_workers_under_both_policies() {
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded] {
+            let r = Router::new(policy, 3);
+            let excluded: BTreeSet<usize> = [0].into_iter().collect();
+            for _ in 0..12 {
+                let w = r.dispatch_excluding(&excluded);
+                assert_ne!(w, 0, "{policy:?} picked an excluded worker");
+                r.complete(w);
+            }
+        }
+    }
+
+    #[test]
+    fn exclusion_of_all_workers_is_void() {
+        let r = Router::new(Policy::LeastLoaded, 2);
+        let excluded: BTreeSet<usize> = [0, 1].into_iter().collect();
+        // A 2-worker pool where the job failed on both must still get a
+        // dispatch target (retry in place rather than deadlock).
+        let w = r.dispatch_excluding(&excluded);
+        assert!(w < 2);
+        let r1 = Router::new(Policy::RoundRobin, 1);
+        let excluded: BTreeSet<usize> = [0].into_iter().collect();
+        assert_eq!(r1.dispatch_excluding(&excluded), 0);
+    }
+
+    #[test]
+    fn policy_parses_from_str() {
+        assert_eq!("rr".parse::<Policy>().unwrap(), Policy::RoundRobin);
+        assert_eq!("least_loaded".parse::<Policy>().unwrap(), Policy::LeastLoaded);
+        assert!("nope".parse::<Policy>().is_err());
+        assert_eq!(Policy::LeastLoaded.to_string(), "least_loaded");
     }
 
     #[test]

@@ -28,6 +28,11 @@
 //! * [`coordinator`] — the L3 orchestrator: layer→tile scheduling, a
 //!   worker pool of simulated arrays, result assembly and golden
 //!   verification.
+//! * [`serve`] — the multi-tenant GEMM serving layer: bounded request
+//!   queue, deadline-windowed dynamic batching, a memoising plan cache,
+//!   and multi-array sharding over persistent worker pools — the
+//!   production-shaped path that turns the paper's per-tile latency win
+//!   into end-to-end throughput.
 //! * [`runtime`] — PJRT wrapper that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them on the CPU
 //!   client; the golden reference for end-to-end numerics.
@@ -44,6 +49,7 @@ pub mod pe;
 pub mod report;
 pub mod runtime;
 pub mod sa;
+pub mod serve;
 pub mod timing;
 pub mod util;
 pub mod workloads;

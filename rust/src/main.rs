@@ -11,6 +11,7 @@
 //! skewsa formats     # Fig. 1 formats + delay inversion
 //! skewsa sweep       # design-space sweep: array size x format
 //! skewsa run         # coordinate a GEMM end-to-end (verify + report)
+//! skewsa serve       # multi-tenant serving: batching + cache + shards
 //! skewsa viz         # pipeline interleaving trace (Figs. 4/6)
 //! ```
 
@@ -42,8 +43,18 @@ fn cli() -> Cli {
     .opt("m", "GEMM M (run)", Some("256"))
     .opt("k", "GEMM K (run)", Some("256"))
     .opt("n", "GEMM N (run)", Some("256"))
-    .opt("pipeline", "pipeline kind: baseline|skewed", Some("skewed"))
+    .opt("pipeline", "pipeline kind: baseline|skewed|both", Some("skewed"))
     .opt("csv", "write the report table as CSV to this path", None)
+    .opt("shards", "serve: array shards", None)
+    .opt("shard-workers", "serve: worker threads per shard", None)
+    .opt("shard-policy", "serve: shard routing policy rr|ll", None)
+    .opt("batch-window-us", "serve: batch coalescing window", None)
+    .opt("batch-max", "serve: max requests per batch", None)
+    .opt("clients", "serve: closed-loop client threads", Some("4"))
+    .opt("requests", "serve: requests per client", Some("32"))
+    .opt("interactive", "serve: interactive request fraction", Some("0.25"))
+    .opt("net", "serve: model set mobilenet|resnet50|mix", Some("mix"))
+    .opt("cap", "serve: K/N clamp for served layers", Some("128"))
     .flag("quiet", "suppress per-layer rows")
 }
 
@@ -72,6 +83,10 @@ fn main() {
         "sweep" => report::design_sweep(cfg.clock_ghz),
         "run" => {
             run_gemm(&cfg, &args);
+            return;
+        }
+        "serve" => {
+            serve(&cfg, &args);
             return;
         }
         "viz" => {
@@ -107,8 +122,13 @@ fn run_gemm(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         args.req_usize("k"),
         args.req_usize("n"),
     );
-    let kind: PipelineKind =
-        args.get("pipeline").unwrap_or("skewed").parse().unwrap_or(PipelineKind::Skewed);
+    let kind: PipelineKind = match args.get("pipeline").unwrap_or("skewed").parse() {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("error: {e} (run takes baseline|skewed; 'both' is serve-only)");
+            std::process::exit(2);
+        }
+    };
     println!(
         "coordinating GEMM {}x{}x{} on {}x{} ({}), workers={} mode={:?}",
         shape.m, shape.k, shape.n, cfg.rows, cfg.cols, kind, cfg.workers, cfg.mode
@@ -136,6 +156,93 @@ fn run_gemm(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     if !r.verify.ok() {
         eprintln!("VERIFICATION FAILED");
         std::process::exit(1);
+    }
+}
+
+fn serve(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
+    use skewsa::config::ServeConfig;
+    use skewsa::serve::{run_closed_loop, LoadSpec, Server};
+    use skewsa::workloads::serving::WeightStore;
+    use skewsa::workloads::{mobilenet, resnet50};
+
+    let mut scfg = ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        // The run config already applied this file once; re-read it for
+        // the serve-layer keys under the same error convention (no raw
+        // panics for I/O races between the two reads).
+        let applied = std::fs::read_to_string(path)
+            .map_err(|e| format!("{path}: {e}"))
+            .and_then(|text| {
+                skewsa::util::mini_json::Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+            })
+            .and_then(|j| scfg.apply_json(&j));
+        if let Err(e) = applied {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }
+    }
+    if let Err(e) = scfg.apply_args(args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+
+    let cap = args.get_usize("cap").unwrap_or(128).max(1);
+    let net = args.get("net").unwrap_or("mix");
+    let layers = match net {
+        "mobilenet" => mobilenet::layers(),
+        "resnet50" => resnet50::layers(),
+        "mix" => {
+            let mut l = mobilenet::layers();
+            l.extend(resnet50::layers());
+            l
+        }
+        other => {
+            eprintln!("error: unknown net '{other}' (mobilenet|resnet50|mix)");
+            std::process::exit(2);
+        }
+    };
+    let store = Arc::new(WeightStore::from_layers(&layers, cfg.in_fmt, cap, cap));
+    // Reuse the canonical PipelineKind parser; "both" is serve-only.
+    let pk = args.get("pipeline").unwrap_or("skewed");
+    let kinds = if pk == "both" {
+        vec![PipelineKind::Baseline3b, PipelineKind::Skewed]
+    } else {
+        match pk.parse::<PipelineKind>() {
+            Ok(k) => vec![k],
+            Err(e) => {
+                eprintln!("error: {e} (baseline|skewed|both)");
+                std::process::exit(2);
+            }
+        }
+    };
+    let spec = LoadSpec {
+        clients: args.get_usize("clients").unwrap_or(4).max(1),
+        requests_per_client: args.get_usize("requests").unwrap_or(32).max(1),
+        kinds,
+        interactive_fraction: args.get_f64("interactive").unwrap_or(0.25).clamp(0.0, 1.0),
+        min_rows: 2,
+        max_rows: 8,
+        seed: cfg.seed,
+    };
+    println!(
+        "serving {} models ({net}, K/N<={cap}) on {} shard(s) x {} worker(s), \
+         {}x{} array, policy {}, window {}us",
+        store.len(),
+        scfg.shards,
+        scfg.workers_per_shard,
+        cfg.rows,
+        cfg.cols,
+        scfg.shard_policy,
+        scfg.batch_window_us,
+    );
+    let server = Server::start(cfg, &scfg, store);
+    let load = run_closed_loop(&server, &spec);
+    let stats = server.stats();
+    let rep = report::serve_summary(&load, &stats);
+    print!("{}", rep.render());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
+        eprintln!("wrote {path}");
     }
 }
 

@@ -273,6 +273,37 @@ pub fn design_sweep(clock_ghz: f64) -> Report {
     Report { title: "Design-space sweep: array size × format".into(), table, totals: None }
 }
 
+/// Serving summary: latency percentiles, throughput, batching and
+/// plan-cache effectiveness, per-shard load (DESIGN.md §11; rendered by
+/// `skewsa serve` and `bench_serve`).
+pub fn serve_summary(load: &crate::serve::LoadReport, stats: &crate::serve::ServerStats) -> Report {
+    // Absolute fractions, not deltas: plain percent, no forced sign.
+    let frac = |x: f64| format!("{:.1}%", x * 100.0);
+    let mut table = Table::new(&["metric", "value"]).numeric();
+    let l = &load.latency;
+    table.row(&["requests".into(), load.completed.to_string()]);
+    table.row(&["throughput (req/s)".into(), fnum(l.throughput_rps, 1)]);
+    table.row(&["latency p50 (us)".into(), fnum(l.p50_us, 1)]);
+    table.row(&["latency p95 (us)".into(), fnum(l.p95_us, 1)]);
+    table.row(&["latency p99 (us)".into(), fnum(l.p99_us, 1)]);
+    table.row(&["latency mean (us)".into(), fnum(l.mean_us, 1)]);
+    table.row(&["batched responses".into(), frac(load.batched_fraction())]);
+    table.row(&["max batch size".into(), load.max_batch.to_string()]);
+    table.row(&["plan-cache hit rate".into(), frac(stats.cache.hit_rate())]);
+    table.row(&["plan-cache entries".into(), stats.cache.entries.to_string()]);
+    // Exact tile-retry count from the shard counters (the per-response
+    // sum in LoadReport counts a batch's retries once per member).
+    let tile_retries: u64 = stats.shards.iter().map(|s| s.retries).sum();
+    table.row(&["tile retries".into(), tile_retries.to_string()]);
+    for (i, s) in stats.shards.iter().enumerate() {
+        table.row(&[
+            format!("shard {i} batches/requests/rows"),
+            format!("{}/{}/{}", s.batches, s.requests, s.rows),
+        ]);
+    }
+    Report { title: "Serve: multi-tenant GEMM serving summary".into(), table, totals: None }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -373,6 +404,39 @@ mod tests {
             cell.trim_end_matches('%').parse::<f64>().unwrap()
         };
         assert!(extract("256x256") < extract("64x64"));
+    }
+
+    #[test]
+    fn serve_summary_renders_metrics_and_shards() {
+        use crate::serve::{LatencySummary, LoadReport, ServerStats, ShardSnapshot};
+        let load = LoadReport {
+            latency: LatencySummary {
+                count: 10,
+                mean_us: 120.0,
+                p50_us: 100.0,
+                p95_us: 200.0,
+                p99_us: 250.0,
+                max_us: 260.0,
+                wall_s: 0.5,
+                throughput_rps: 20.0,
+            },
+            completed: 10,
+            batched_responses: 6,
+            max_batch: 4,
+            cache_hit_responses: 8,
+            retries_observed: 0,
+        };
+        let stats = ServerStats {
+            submitted: 10,
+            cache: crate::serve::CacheStats { hits: 4, misses: 1, evictions: 0, entries: 1 },
+            shards: vec![ShardSnapshot::default(), ShardSnapshot::default()],
+        };
+        let text = serve_summary(&load, &stats).render();
+        assert!(text.contains("latency p99"));
+        assert!(text.contains("shard 1"));
+        assert!(text.contains("plan-cache hit rate"));
+        assert!(text.contains("80.0%"), "hit rate 4/5 renders: {text}");
+        assert!(!text.contains("+80.0%"), "absolute rate must not carry a delta sign: {text}");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::pe::PipelineKind;
 
 /// The weight-stationary schedule for one tile: `rows`×`cols` PEs
 /// streaming `m_total` input rows.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WsSchedule {
     pub kind: PipelineKind,
     pub rows: usize,

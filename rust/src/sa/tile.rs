@@ -10,6 +10,8 @@
 //! accumulator for an output column is live across consecutive passes —
 //! the ordering invariant the coordinator's scheduler preserves.
 
+use crate::sa::dataflow::WsSchedule;
+
 /// A GEMM problem shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct GemmShape {
@@ -58,7 +60,11 @@ impl Tile {
 }
 
 /// The tile decomposition of a GEMM on an R×C array.
-#[derive(Clone, Debug)]
+///
+/// Derives `PartialEq`/`Eq` so plan-cache hits can be checked for
+/// *structural* identity against a freshly built plan (the serve-layer
+/// property tests rely on this).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TilePlan {
     pub shape: GemmShape,
     pub rows: usize,
@@ -117,6 +123,34 @@ impl TilePlan {
     /// Slice the activation matrix `a[m][k]` for a tile.
     pub fn activation_slab(&self, a: &[Vec<u64>], t: &Tile) -> Vec<Vec<u64>> {
         a.iter().map(|row| row[t.k0..t.k0 + t.k_len].to_vec()).collect()
+    }
+
+    /// The weight-stationary schedule for one of this plan's tiles: the
+    /// full `rows`-deep chain (short K-edge tiles stream zeros through
+    /// the unused rows, as the timing model assumes) over the tile's
+    /// used columns and all `M` streamed rows.
+    pub fn tile_schedule(&self, kind: crate::pe::PipelineKind, t: &Tile) -> WsSchedule {
+        WsSchedule::new(kind, self.rows, t.n_len, self.shape.m)
+    }
+
+    /// Per-tile schedules in plan order (memoised by the serve layer's
+    /// plan cache alongside the plan itself).
+    pub fn schedules(&self, kind: crate::pe::PipelineKind) -> Vec<WsSchedule> {
+        self.tiles.iter().map(|t| self.tile_schedule(kind, t)).collect()
+    }
+
+    /// Closed-form cycles to stream every tile of the plan serially on
+    /// one array, including per-tile weight preload (no double
+    /// buffering) — the service-time denominator for simulated-latency
+    /// accounting in the serve layer.
+    pub fn stream_cycles(&self, kind: crate::pe::PipelineKind) -> u64 {
+        self.tiles
+            .iter()
+            .map(|t| {
+                let s = self.tile_schedule(kind, t);
+                s.preload_cycles() + s.total_cycles()
+            })
+            .sum()
     }
 }
 
@@ -177,6 +211,39 @@ mod tests {
     #[test]
     fn macs_counts() {
         assert_eq!(GemmShape::new(2, 3, 4).macs(), 24);
+    }
+
+    #[test]
+    fn schedules_follow_tiles_and_full_chain_depth() {
+        use crate::pe::PipelineKind;
+        let p = TilePlan::new(GemmShape::new(6, 20, 10), 8, 4);
+        let scheds = p.schedules(PipelineKind::Skewed);
+        assert_eq!(scheds.len(), p.tile_count());
+        for (s, t) in scheds.iter().zip(&p.tiles) {
+            // Full chain depth even on short K-edge tiles (zeros stream
+            // through the unused rows).
+            assert_eq!(s.rows, 8);
+            assert_eq!(s.cols, t.n_len);
+            assert_eq!(s.m_total, 6);
+            assert_eq!(*s, p.tile_schedule(PipelineKind::Skewed, t));
+        }
+    }
+
+    #[test]
+    fn stream_cycles_sum_preload_plus_stream() {
+        use crate::pe::PipelineKind;
+        let p = TilePlan::new(GemmShape::new(6, 20, 10), 8, 4);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            let want: u64 = p
+                .schedules(kind)
+                .iter()
+                .map(|s| s.preload_cycles() + s.total_cycles())
+                .sum();
+            assert_eq!(p.stream_cycles(kind), want);
+            assert!(p.stream_cycles(kind) > 0);
+        }
+        // The skewed organisation streams strictly faster.
+        assert!(p.stream_cycles(PipelineKind::Skewed) < p.stream_cycles(PipelineKind::Baseline3b));
     }
 
     #[test]

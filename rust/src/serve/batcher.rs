@@ -1,0 +1,300 @@
+//! Dynamic batching: coalesce compatible requests into one stacked GEMM.
+//!
+//! Two requests are *compatible* when they target the same serving
+//! model (same weight matrix, same format) under the same pipeline
+//! kind: stacking their activation rows is then bit-exact per row
+//! (DESIGN.md §7/§11), and the weight-stationary array amortises its
+//! per-tile fixed costs (plan, preload, fill/drain, dispatch) across
+//! every stacked row.
+//!
+//! The window policy is anchor-driven: the batcher pops one anchor
+//! request, then keeps draining compatible arrivals until the anchor's
+//! deadline-class window closes or a size cap is hit.  Interactive
+//! anchors default to a zero window — they leave with whatever is
+//! already queued.
+
+use super::request::{DeadlineClass, Pending, RequestQueue};
+use crate::pe::PipelineKind;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batch compatibility key: same weights, same pipeline organisation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchKey {
+    pub model: usize,
+    pub kind: PipelineKind,
+}
+
+/// A coalesced batch ready for planning and shard dispatch.
+pub struct Batch {
+    pub key: BatchKey,
+    /// Member requests in arrival order (row offsets follow this order).
+    pub parts: Vec<Pending>,
+    /// Total stacked activation rows.
+    pub rows: usize,
+}
+
+/// Size/time bounds on batch formation.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchLimits {
+    pub max_requests: usize,
+    pub max_rows: usize,
+    pub batch_window: Duration,
+    pub interactive_window: Duration,
+}
+
+/// The batcher: drains a [`RequestQueue`] into [`Batch`]es.
+pub struct Batcher {
+    queue: Arc<RequestQueue>,
+    limits: BatchLimits,
+}
+
+impl Batcher {
+    pub fn new(queue: Arc<RequestQueue>, limits: BatchLimits) -> Batcher {
+        assert!(limits.max_requests >= 1 && limits.max_rows >= 1);
+        Batcher { queue, limits }
+    }
+
+    /// Form the next batch; blocks until at least one request is
+    /// available.  Returns `None` once the queue is closed and drained.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let anchor = self.queue.pop_anchor()?;
+        let key = BatchKey { model: anchor.req.model, kind: anchor.req.kind };
+        // The anchor's deadline class decides the coalescing window.
+        let window = match anchor.req.class {
+            DeadlineClass::Interactive => self.limits.interactive_window,
+            DeadlineClass::Batch => self.limits.batch_window,
+        };
+        let mut rows = anchor.req.rows();
+        let mut parts = vec![anchor];
+        let deadline = Instant::now() + window;
+        loop {
+            let (seen, interactive_waiting) = self.queue.take_matching(
+                key.model,
+                key.kind,
+                self.limits.max_requests,
+                self.limits.max_rows,
+                &mut parts,
+                &mut rows,
+            );
+            if parts.len() >= self.limits.max_requests || rows >= self.limits.max_rows {
+                break;
+            }
+            // An interactive request — absorbed into this batch or
+            // waiting (incompatibly) in the queue — closes the window
+            // early: its flush-now contract must not wait out a batch
+            // anchor's window.  The anchor itself is exempt (`skip(1)`):
+            // an interactive *anchor* already chose the interactive
+            // window above, which would otherwise be dead config.
+            if interactive_waiting
+                || parts.iter().skip(1).any(|p| p.req.class == DeadlineClass::Interactive)
+            {
+                break;
+            }
+            if self.queue.wait_new_push(seen, deadline).is_none() {
+                break;
+            }
+        }
+        Some(Batch { key, parts, rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::{Request, Response};
+    use std::sync::mpsc::{channel, Receiver};
+
+    fn pending(
+        id: u64,
+        model: usize,
+        kind: PipelineKind,
+        class: DeadlineClass,
+        m: usize,
+    ) -> (Pending, Receiver<Response>) {
+        let (tx, rx) = channel();
+        let p = Pending {
+            req: Request { id, model, kind, class, a: vec![vec![0u64; 4]; m] },
+            reply: tx,
+        };
+        (p, rx)
+    }
+
+    fn limits(max_requests: usize, max_rows: usize, window_us: u64) -> BatchLimits {
+        BatchLimits {
+            max_requests,
+            max_rows,
+            batch_window: Duration::from_micros(window_us),
+            interactive_window: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn queued_compatibles_coalesce_into_one_batch() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let mut rxs = Vec::new();
+        for id in 0..5 {
+            let (p, rx) = pending(id, 3, PipelineKind::Skewed, DeadlineClass::Batch, 2);
+            queue.push(p).unwrap();
+            rxs.push(rx);
+        }
+        let b = Batcher::new(Arc::clone(&queue), limits(8, 64, 0));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.parts.len(), 5);
+        assert_eq!(batch.rows, 10);
+        assert_eq!(batch.key, BatchKey { model: 3, kind: PipelineKind::Skewed });
+        // Arrival order preserved (row offsets depend on it).
+        let ids: Vec<u64> = batch.parts.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(queue.is_empty());
+    }
+
+    #[test]
+    fn incompatible_kinds_split_batches() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let mut rxs = Vec::new();
+        for (id, kind) in
+            [(0, PipelineKind::Skewed), (1, PipelineKind::Baseline3b), (2, PipelineKind::Skewed)]
+        {
+            let (p, rx) = pending(id, 0, kind, DeadlineClass::Batch, 1);
+            queue.push(p).unwrap();
+            rxs.push(rx);
+        }
+        let b = Batcher::new(Arc::clone(&queue), limits(8, 64, 0));
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.parts.len(), 2, "both skewed requests coalesce");
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.parts.len(), 1);
+        assert_eq!(second.key.kind, PipelineKind::Baseline3b);
+    }
+
+    #[test]
+    fn request_cap_bounds_batches() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let mut rxs = Vec::new();
+        for id in 0..6 {
+            let (p, rx) = pending(id, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1);
+            queue.push(p).unwrap();
+            rxs.push(rx);
+        }
+        let b = Batcher::new(Arc::clone(&queue), limits(4, 64, 0));
+        assert_eq!(b.next_batch().unwrap().parts.len(), 4);
+        assert_eq!(b.next_batch().unwrap().parts.len(), 2);
+    }
+
+    #[test]
+    fn oversized_single_request_still_runs_alone() {
+        let queue = Arc::new(RequestQueue::new(4));
+        let (p, _rx) = pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 100);
+        queue.push(p).unwrap();
+        let b = Batcher::new(Arc::clone(&queue), limits(8, 16, 0));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.parts.len(), 1);
+        assert_eq!(batch.rows, 100, "row cap never rejects an anchor");
+    }
+
+    #[test]
+    fn window_collects_late_arrivals() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let (p, _rx0) = pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1);
+        queue.push(p).unwrap();
+        let q2 = Arc::clone(&queue);
+        let pusher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            let (late, rx) = pending(1, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1);
+            q2.push(late).unwrap();
+            std::mem::forget(rx);
+        });
+        // A generous window: the late push lands well inside it; the
+        // request cap of 2 then closes the batch without waiting out
+        // the rest of the window.
+        let b = Batcher::new(Arc::clone(&queue), limits(2, 64, 500_000));
+        let batch = b.next_batch().unwrap();
+        pusher.join().unwrap();
+        assert_eq!(batch.parts.len(), 2, "window admitted the late arrival");
+    }
+
+    #[test]
+    fn interactive_arrival_closes_an_open_batch_window() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let (p, _rx0) = pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1);
+        queue.push(p).unwrap();
+        let q2 = Arc::clone(&queue);
+        let pusher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            // Incompatible (different model) interactive arrival.
+            let (late, rx) = pending(1, 9, PipelineKind::Skewed, DeadlineClass::Interactive, 1);
+            q2.push(late).unwrap();
+            std::mem::forget(rx);
+        });
+        // A very long batch window that must NOT be waited out.
+        let b = Batcher::new(Arc::clone(&queue), limits(8, 64, 30_000_000));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        pusher.join().unwrap();
+        assert_eq!(batch.parts.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(10), "interactive must close the window");
+        // The interactive request anchors the next batch immediately.
+        let next = b.next_batch().unwrap();
+        assert_eq!(next.parts[0].req.id, 1);
+    }
+
+    #[test]
+    fn absorbed_interactive_flushes_the_batch_immediately() {
+        let queue = Arc::new(RequestQueue::new(16));
+        let (p, _rx0) = pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1);
+        queue.push(p).unwrap();
+        let q2 = Arc::clone(&queue);
+        let pusher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            // Compatible interactive: rides along, and flushes the batch.
+            let (late, rx) = pending(1, 0, PipelineKind::Skewed, DeadlineClass::Interactive, 1);
+            q2.push(late).unwrap();
+            std::mem::forget(rx);
+        });
+        let b = Batcher::new(Arc::clone(&queue), limits(8, 64, 30_000_000));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        pusher.join().unwrap();
+        assert_eq!(batch.parts.len(), 2, "interactive coalesced into the open batch");
+        assert!(t0.elapsed() < Duration::from_secs(10), "absorption must flush the window");
+    }
+
+    #[test]
+    fn nonzero_interactive_window_coalesces_for_interactive_anchors() {
+        // The interactive window applies to the *anchor*: with a
+        // nonzero value, an interactive anchor waits for compatible
+        // arrivals (the flush-early rule exempts the anchor itself,
+        // else this knob would be dead config).
+        let queue = Arc::new(RequestQueue::new(16));
+        let (p, _rx0) = pending(0, 0, PipelineKind::Skewed, DeadlineClass::Interactive, 1);
+        queue.push(p).unwrap();
+        let q2 = Arc::clone(&queue);
+        let pusher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            let (late, rx) = pending(1, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1);
+            q2.push(late).unwrap();
+            std::mem::forget(rx);
+        });
+        let lim = BatchLimits {
+            max_requests: 2,
+            max_rows: 64,
+            batch_window: Duration::ZERO,
+            interactive_window: Duration::from_secs(30),
+        };
+        let b = Batcher::new(Arc::clone(&queue), lim);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        pusher.join().unwrap();
+        assert_eq!(batch.parts.len(), 2, "interactive window admitted the late arrival");
+        assert!(t0.elapsed() < Duration::from_secs(10), "request cap closed the window");
+    }
+
+    #[test]
+    fn closed_empty_queue_ends_batching() {
+        let queue = Arc::new(RequestQueue::new(4));
+        queue.close();
+        let b = Batcher::new(queue, limits(4, 16, 0));
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,221 @@
+//! Plan cache: memoised `TilePlan` + `WsSchedule` construction.
+//!
+//! Serving traffic is shape-repetitive — every MobileNet/ResNet50 layer
+//! is a fixed `(K, N)` and the batcher quantises `M` through its size
+//! caps — so hot shapes re-plan constantly without a cache.  Entries are
+//! keyed by `(GemmShape, FpFormat, PipelineKind, rows, cols)` and hold
+//! the tile decomposition, the per-tile weight-stationary schedules and
+//! the closed-form stream-cycle total.  Eviction is LRU beyond a fixed
+//! capacity.
+//!
+//! The contract the property tests pin down: a cache *hit* is
+//! structurally identical to a freshly built plan — caching can never
+//! change what runs.
+
+use crate::arith::format::FpFormat;
+use crate::pe::PipelineKind;
+use crate::sa::dataflow::WsSchedule;
+use crate::sa::tile::{GemmShape, TilePlan};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache key: everything plan + schedule construction depends on.
+///
+/// The key includes the full `GemmShape` — `m` included — so the
+/// memoised per-tile `WsSchedule`s (which are `m`-dependent) can be
+/// stored ready-to-use.  Variable-size batches of the same model
+/// therefore miss across distinct `m` values; that is deliberate: a
+/// miss only rebuilds a `TilePlan` (tile decomposition is `m`-free and
+/// O(tiles)), microseconds against the batch it plans, while fixed-`m`
+/// traffic — the steady state of a shaped client fleet — hits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub shape: GemmShape,
+    pub fmt: FpFormat,
+    pub kind: PipelineKind,
+    /// Array rows.
+    pub rows: usize,
+    /// Array columns.
+    pub cols: usize,
+}
+
+/// A memoised planning result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CachedPlan {
+    pub plan: TilePlan,
+    /// Per-tile weight-stationary schedules, in plan order.
+    pub schedules: Vec<WsSchedule>,
+    /// Closed-form cycles to stream the whole plan serially (preload +
+    /// stream per tile) — the simulated service time of a batch.
+    pub stream_cycles: u64,
+}
+
+impl CachedPlan {
+    /// Build from scratch (what a cache miss does; also what the
+    /// property tests compare hits against).  The stream-cycle total is
+    /// derived from the memoised schedules — they are built exactly
+    /// once per cache entry.
+    pub fn build(key: &PlanKey) -> CachedPlan {
+        let plan = TilePlan::new(key.shape, key.rows, key.cols);
+        let schedules = plan.schedules(key.kind);
+        let stream_cycles =
+            schedules.iter().map(|s| s.preload_cycles() + s.total_cycles()).sum();
+        CachedPlan { plan, schedules, stream_cycles }
+    }
+}
+
+/// Cache counters (monotone; `entries` is the current size).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction over all lookups (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    plan: Arc<CachedPlan>,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<PlanKey, Entry>,
+    tick: u64,
+}
+
+/// Thread-safe memoising plan cache with LRU eviction.
+pub struct PlanCache {
+    cap: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache {
+            cap: cap.max(1),
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up (or build + insert) the plan for `key`.  The second
+    /// element is `true` on a hit.
+    pub fn get(&self, key: PlanKey) -> (Arc<CachedPlan>, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&key) {
+            e.last_used = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (Arc::clone(&e.plan), true);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if inner.map.len() >= self.cap {
+            // Evict the least-recently-used entry.
+            let victim = inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                inner.map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let plan = Arc::new(CachedPlan::build(&key));
+        inner.map.insert(key, Entry { plan: Arc::clone(&plan), last_used: tick });
+        (plan, false)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.inner.lock().unwrap().map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: usize, k: usize, n: usize) -> PlanKey {
+        PlanKey {
+            shape: GemmShape::new(m, k, n),
+            fmt: FpFormat::BF16,
+            kind: PipelineKind::Skewed,
+            rows: 8,
+            cols: 8,
+        }
+    }
+
+    #[test]
+    fn hit_returns_identical_plan_and_counts() {
+        let c = PlanCache::new(8);
+        let (first, hit1) = c.get(key(4, 20, 12));
+        assert!(!hit1);
+        let (second, hit2) = c.get(key(4, 20, 12));
+        assert!(hit2);
+        assert_eq!(*first, *second);
+        assert_eq!(*second, CachedPlan::build(&key(4, 20, 12)));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let c = PlanCache::new(8);
+        let (a, _) = c.get(key(4, 20, 12));
+        let mut k2 = key(4, 20, 12);
+        k2.kind = PipelineKind::Baseline3b;
+        let (b, hit) = c.get(k2);
+        assert!(!hit, "kind is part of the key");
+        // Same tiles, different schedules/cycles.
+        assert_eq!(a.plan, b.plan);
+        assert_ne!(a.stream_cycles, b.stream_cycles);
+        let mut k3 = key(4, 20, 12);
+        k3.fmt = FpFormat::FP8E4M3;
+        assert!(!c.get(k3).1, "format is part of the key");
+    }
+
+    #[test]
+    fn lru_eviction_beyond_capacity() {
+        let c = PlanCache::new(2);
+        c.get(key(1, 8, 8));
+        c.get(key(2, 8, 8));
+        // Touch the first so the second becomes LRU.
+        c.get(key(1, 8, 8));
+        c.get(key(3, 8, 8)); // evicts key(2, ..)
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        assert!(c.get(key(1, 8, 8)).1, "recently used survived");
+        assert!(!c.get(key(2, 8, 8)).1, "LRU victim was evicted");
+    }
+
+    #[test]
+    fn stream_cycles_match_plan_helpers() {
+        let c = PlanCache::new(4);
+        let k = key(6, 20, 10);
+        let (p, _) = c.get(k);
+        assert_eq!(p.stream_cycles, p.plan.stream_cycles(k.kind));
+        assert_eq!(p.schedules, p.plan.schedules(k.kind));
+    }
+}

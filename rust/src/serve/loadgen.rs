@@ -1,0 +1,210 @@
+//! Closed-loop load generation against a [`Server`].
+//!
+//! `clients` threads each issue `requests_per_client` requests
+//! back-to-back (closed loop: a client waits for its response before
+//! submitting again), drawing models, batch sizes, pipeline kinds and
+//! deadline classes from a seeded stream.  Request generation is a pure
+//! function of `(spec, client, index)` — [`gen_request`] — so a bench or
+//! test can regenerate any request out-of-band and re-run it solo
+//! through a [`crate::coordinator::Coordinator`] for bit-exactness
+//! checks.
+
+use super::metrics::{LatencyRecorder, LatencySummary};
+use super::request::DeadlineClass;
+use super::server::Server;
+use crate::pe::PipelineKind;
+use crate::util::rng::Rng;
+use crate::workloads::serving::WeightStore;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Load-generation parameters.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// Pipeline kinds drawn uniformly per request (must be non-empty).
+    pub kinds: Vec<PipelineKind>,
+    /// Probability a request is `DeadlineClass::Interactive`.
+    pub interactive_fraction: f64,
+    /// Activation rows per request, drawn uniformly in this range.
+    pub min_rows: usize,
+    pub max_rows: usize,
+    pub seed: u64,
+}
+
+impl LoadSpec {
+    /// A small deterministic spec for tests.
+    pub fn small() -> LoadSpec {
+        LoadSpec {
+            clients: 4,
+            requests_per_client: 8,
+            kinds: vec![PipelineKind::Skewed],
+            interactive_fraction: 0.25,
+            min_rows: 2,
+            max_rows: 6,
+            seed: 0x5e12e,
+        }
+    }
+}
+
+/// Outcome of a closed-loop run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub latency: LatencySummary,
+    pub completed: usize,
+    /// Responses whose batch coalesced more than one request.
+    pub batched_responses: usize,
+    pub max_batch: usize,
+    pub cache_hit_responses: usize,
+    /// Tile-job retries summed over *responses* — response-weighted: a
+    /// batch's retries count once per member, so this over-counts under
+    /// batching.  The exact count lives in the shard counters
+    /// ([`crate::serve::ShardSnapshot::retries`]), which reports use.
+    pub retries_observed: usize,
+}
+
+impl LoadReport {
+    /// Fraction of responses that shared their batch.
+    pub fn batched_fraction(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.batched_responses as f64 / self.completed as f64
+        }
+    }
+
+    /// Fraction of responses served off a cached plan.
+    pub fn cache_hit_fraction(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.cache_hit_responses as f64 / self.completed as f64
+        }
+    }
+}
+
+/// Deterministically generate request `i` of client `client`:
+/// `(model, kind, class, activations)`.
+pub fn gen_request(
+    store: &WeightStore,
+    spec: &LoadSpec,
+    client: usize,
+    i: usize,
+) -> (usize, PipelineKind, DeadlineClass, Vec<Vec<u64>>) {
+    assert!(!spec.kinds.is_empty());
+    assert!(spec.min_rows >= 1 && spec.min_rows <= spec.max_rows);
+    let mut rng = Rng::new(
+        spec.seed
+            ^ (client as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ (i as u64 + 1).wrapping_mul(0xcbf2_9ce4_8422_2325),
+    );
+    let model = rng.below(store.len() as u64) as usize;
+    let m = spec.min_rows + rng.below((spec.max_rows - spec.min_rows + 1) as u64) as usize;
+    let kind = *rng_choose(&mut rng, &spec.kinds);
+    let class = if rng.chance(spec.interactive_fraction) {
+        DeadlineClass::Interactive
+    } else {
+        DeadlineClass::Batch
+    };
+    let a = store.gen_activations(model, m, &mut rng);
+    (model, kind, class, a)
+}
+
+fn rng_choose<'a, T>(rng: &mut Rng, items: &'a [T]) -> &'a T {
+    &items[rng.below(items.len() as u64) as usize]
+}
+
+/// Drive the server with `spec.clients` closed-loop client threads and
+/// collect the latency/throughput report.
+pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
+    let recorder = LatencyRecorder::new();
+    let completed = AtomicUsize::new(0);
+    let batched = AtomicUsize::new(0);
+    let max_batch = AtomicUsize::new(0);
+    let cache_hits = AtomicUsize::new(0);
+    let retries = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for client in 0..spec.clients {
+            let recorder = &recorder;
+            let completed = &completed;
+            let batched = &batched;
+            let max_batch = &max_batch;
+            let cache_hits = &cache_hits;
+            let retries = &retries;
+            s.spawn(move || {
+                for i in 0..spec.requests_per_client {
+                    let (model, kind, class, a) = gen_request(server.store(), spec, client, i);
+                    let t0 = Instant::now();
+                    let rx = server.submit(model, kind, class, a);
+                    let resp = rx.recv().expect("server replied");
+                    recorder.record(t0.elapsed());
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    if resp.batch_size > 1 {
+                        batched.fetch_add(1, Ordering::Relaxed);
+                    }
+                    max_batch.fetch_max(resp.batch_size, Ordering::Relaxed);
+                    if resp.cache_hit {
+                        cache_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    retries.fetch_add(resp.retries, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    LoadReport {
+        latency: recorder.summary(),
+        completed: completed.into_inner(),
+        batched_responses: batched.into_inner(),
+        max_batch: max_batch.into_inner(),
+        cache_hit_responses: cache_hits.into_inner(),
+        retries_observed: retries.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::config::{RunConfig, ServeConfig};
+    use crate::workloads::mobilenet;
+    use std::sync::Arc;
+
+    #[test]
+    fn gen_request_is_deterministic_and_in_bounds() {
+        let store = WeightStore::from_layers(&mobilenet::layers()[..4], FpFormat::BF16, 24, 16);
+        let spec = LoadSpec::small();
+        let (m1, k1, c1, a1) = gen_request(&store, &spec, 2, 5);
+        let (m2, k2, c2, a2) = gen_request(&store, &spec, 2, 5);
+        assert_eq!((m1, k1, c1), (m2, k2, c2));
+        assert_eq!(a1, a2);
+        assert!(m1 < store.len());
+        assert!((spec.min_rows..=spec.max_rows).contains(&a1.len()));
+        // Distinct indices draw distinct streams.
+        let (_, _, _, a3) = gen_request(&store, &spec, 2, 6);
+        assert_ne!(a1, a3);
+    }
+
+    #[test]
+    fn closed_loop_completes_and_reports() {
+        let mut run = RunConfig::small();
+        run.verify_fraction = 0.0;
+        let store = Arc::new(WeightStore::from_layers(
+            &mobilenet::layers()[..3],
+            FpFormat::BF16,
+            24,
+            16,
+        ));
+        let server = Server::start(&run, &ServeConfig::small(), store);
+        let spec = LoadSpec { clients: 3, requests_per_client: 5, ..LoadSpec::small() };
+        let report = run_closed_loop(&server, &spec);
+        assert_eq!(report.completed, 15);
+        assert_eq!(report.latency.count, 15);
+        assert!(report.latency.p50_us > 0.0);
+        assert!(report.max_batch >= 1);
+        let stats = server.stats();
+        assert_eq!(stats.submitted, 15);
+        let served: u64 = stats.shards.iter().map(|s| s.requests).sum();
+        assert_eq!(served, 15);
+    }
+}

@@ -1,0 +1,126 @@
+//! Latency recording: percentile summaries and throughput.
+//!
+//! Closed-loop load-generator clients record one submit→response
+//! duration per request; the summary reports nearest-rank percentiles
+//! (p50/p95/p99), which is what serving dashboards quote and what the
+//! `BENCH_serve.json` trajectory tracks across PRs.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Snapshot of recorded latencies.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Wall-clock seconds since the recorder was created.
+    pub wall_s: f64,
+    /// Completed requests per wall-clock second.
+    pub throughput_rps: f64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample set
+/// (`p` in (0, 100]); 0 for an empty set.
+pub fn percentile_ns(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Thread-safe latency recorder shared by the load-generator clients.
+pub struct LatencyRecorder {
+    start: Instant,
+    samples_ns: Mutex<Vec<u64>>,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder { start: Instant::now(), samples_ns: Mutex::new(Vec::new()) }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.samples_ns.lock().unwrap().push(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ns.lock().unwrap().len()
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let mut s = self.samples_ns.lock().unwrap().clone();
+        s.sort_unstable();
+        let wall_s = self.start.elapsed().as_secs_f64();
+        if s.is_empty() {
+            return LatencySummary { wall_s, ..LatencySummary::default() };
+        }
+        let to_us = |ns: u64| ns as f64 / 1_000.0;
+        let sum_ns: u64 = s.iter().sum();
+        LatencySummary {
+            count: s.len(),
+            mean_us: to_us(sum_ns) / s.len() as f64,
+            p50_us: to_us(percentile_ns(&s, 50.0)),
+            p95_us: to_us(percentile_ns(&s, 95.0)),
+            p99_us: to_us(percentile_ns(&s, 99.0)),
+            max_us: to_us(*s.last().unwrap()),
+            wall_s,
+            throughput_rps: if wall_s > 0.0 { s.len() as f64 / wall_s } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        // 1..=100: p50 = 50, p95 = 95, p99 = 99, p100 = 100.
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_ns(&s, 50.0), 50);
+        assert_eq!(percentile_ns(&s, 95.0), 95);
+        assert_eq!(percentile_ns(&s, 99.0), 99);
+        assert_eq!(percentile_ns(&s, 100.0), 100);
+        // Small sets: nearest rank rounds up.
+        let s = vec![10u64, 20, 30];
+        assert_eq!(percentile_ns(&s, 50.0), 20);
+        assert_eq!(percentile_ns(&s, 99.0), 30);
+        assert_eq!(percentile_ns(&s, 1.0), 10);
+        assert_eq!(percentile_ns(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn summary_orders_and_counts() {
+        let r = LatencyRecorder::new();
+        for us in [300u64, 100, 200] {
+            r.record(Duration::from_micros(us));
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.p50_us, 200.0);
+        assert_eq!(s.max_us, 300.0);
+        assert_eq!(s.mean_us, 200.0);
+        assert!(s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let r = LatencyRecorder::new();
+        let s = r.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99_us, 0.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! The multi-tenant GEMM serving layer (DESIGN.md §11).
+//!
+//! The coordinator answers "run this one GEMM"; this subsystem answers
+//! "serve a stream of them".  The paper's per-tile latency win (skewed
+//! pipelines drain an `R`-deep column in half the cycles) only turns
+//! into end-to-end throughput if the system in front of the arrays
+//! keeps them streaming — which is what this request path does:
+//!
+//! ```text
+//!  clients ──▶ RequestQueue ──▶ Batcher ──▶ PlanCache ──▶ ShardPool
+//!   (submit)    (bounded,        (dynamic     (memoised     (N arrays,
+//!    ▲           backpressure)    batching)    TilePlan +    persistent
+//!    └──────────────── responses ◀─────────────WsSchedule)   pools)
+//! ```
+//!
+//! * [`request`] — request/response types + the bounded front queue;
+//! * [`batcher`] — deadline-class-windowed dynamic batching (stacking
+//!   compatible requests' activation rows is bit-exact per row);
+//! * [`cache`] — the plan cache keyed by
+//!   `(GemmShape, FpFormat, PipelineKind, rows, cols)`;
+//! * [`shard`] — N simulated array chips behind the shard-level
+//!   [`crate::coordinator::Router`], each owning a persistent
+//!   [`crate::coordinator::WorkerPool`];
+//! * [`server`] — the facade wiring the pipeline together;
+//! * [`metrics`] — p50/p95/p99 latency + throughput recording;
+//! * [`loadgen`] — the closed-loop load generator behind
+//!   `skewsa serve` and `bench_serve`.
+
+pub mod batcher;
+pub mod cache;
+pub mod loadgen;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod shard;
+
+pub use batcher::{Batch, BatchKey, BatchLimits, Batcher};
+pub use cache::{CacheStats, CachedPlan, PlanCache, PlanKey};
+pub use loadgen::{gen_request, run_closed_loop, LoadReport, LoadSpec};
+pub use metrics::{percentile_ns, LatencyRecorder, LatencySummary};
+pub use request::{DeadlineClass, Pending, Request, RequestQueue, Response};
+pub use server::{Server, ServerStats};
+pub use shard::{BatchJob, ReplyPart, ShardPool, ShardSnapshot};

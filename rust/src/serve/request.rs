@@ -1,0 +1,348 @@
+//! Serving request/response types and the bounded request queue.
+//!
+//! The queue is the front door of the serve stack (DESIGN.md §11):
+//! client threads [`RequestQueue::push`] concurrently (blocking when the
+//! queue is full — closed-loop backpressure), the batcher thread pops an
+//! *anchor* request (interactive requests jump the line) and then drains
+//! compatible requests into the same batch.  A monotone push sequence
+//! number lets the batcher sleep between arrivals instead of spinning.
+
+use crate::pe::PipelineKind;
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Latency class a client attaches to a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeadlineClass {
+    /// Flush as soon as possible: the batcher coalesces only what is
+    /// already queued.
+    Interactive,
+    /// Throughput-oriented: the batcher may hold the request for the
+    /// configured window to grow the batch.
+    Batch,
+}
+
+/// One GEMM inference request against a registered serving model.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Server-assigned id (also the reply correlation key).
+    pub id: u64,
+    /// Index into the server's [`crate::workloads::serving::WeightStore`].
+    pub model: usize,
+    /// Pipeline organisation to run under.
+    pub kind: PipelineKind,
+    pub class: DeadlineClass,
+    /// Activation rows `m × k`, bit patterns in the model's format.
+    pub a: Vec<Vec<u64>>,
+}
+
+impl Request {
+    /// Activation rows this request contributes to a batch.
+    pub fn rows(&self) -> usize {
+        self.a.len()
+    }
+}
+
+/// The served result for one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Row-major `m × n`, f32 semantics of the output format — bit-exact
+    /// with a solo `Coordinator::run_gemm` of the same request.
+    pub y: Vec<f32>,
+    /// Shard that executed the batch.
+    pub shard: usize,
+    /// Requests coalesced into the producing batch (1 = ran alone).
+    pub batch_size: usize,
+    /// Whether the batch's plan came from the plan cache.
+    pub cache_hit: bool,
+    /// Tile-job retries observed by the producing batch.
+    pub retries: usize,
+    /// Closed-form array cycles of the producing batch (simulated
+    /// service time from the cached schedules).
+    pub batch_stream_cycles: u64,
+}
+
+/// A queued request: payload + reply channel.
+pub struct Pending {
+    pub req: Request,
+    pub reply: Sender<Response>,
+}
+
+struct QueueInner {
+    items: VecDeque<Pending>,
+    /// Incremented on every push (the batcher's arrival signal).
+    seq: u64,
+    /// Times the front request was bypassed by an interactive anchor
+    /// (starvation guard: see [`RequestQueue::MAX_FRONT_BYPASS`]).
+    front_bypassed: usize,
+    closed: bool,
+}
+
+/// Bounded MPMC request queue (mutex + condvars; std-only).
+pub struct RequestQueue {
+    cap: usize,
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl RequestQueue {
+    /// Interactive anchors may bypass the front request at most this
+    /// many consecutive times before the front is anchored regardless
+    /// of class — sustained interactive traffic cannot starve a queued
+    /// batch request indefinitely.
+    pub const MAX_FRONT_BYPASS: usize = 64;
+
+    pub fn new(cap: usize) -> RequestQueue {
+        RequestQueue {
+            cap: cap.max(1),
+            inner: Mutex::new(QueueInner {
+                items: VecDeque::new(),
+                seq: 0,
+                front_bypassed: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current push sequence number.
+    pub fn seq(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Enqueue, blocking while the queue is full.  Returns the pending
+    /// back if the queue has been closed.
+    pub fn push(&self, p: Pending) -> Result<(), Pending> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(p);
+            }
+            if q.items.len() < self.cap {
+                q.items.push_back(p);
+                q.seq += 1;
+                self.not_empty.notify_all();
+                return Ok(());
+            }
+            q = self.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Block until a request is available and pop the batch anchor: the
+    /// first interactive request if any, else the front — except that
+    /// after [`Self::MAX_FRONT_BYPASS`] consecutive bypasses the front
+    /// request is anchored regardless of class (no starvation).
+    /// Returns `None` once the queue is closed *and* drained.
+    pub fn pop_anchor(&self) -> Option<Pending> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            let interactive =
+                q.items.iter().position(|p| p.req.class == DeadlineClass::Interactive);
+            let idx = match interactive {
+                Some(i) if i > 0 && q.front_bypassed >= Self::MAX_FRONT_BYPASS => Some(0),
+                Some(i) => Some(i),
+                None if q.items.is_empty() => None,
+                None => Some(0),
+            };
+            if let Some(i) = idx {
+                if i == 0 {
+                    q.front_bypassed = 0;
+                } else {
+                    q.front_bypassed += 1;
+                }
+                let p = q.items.remove(i);
+                self.not_full.notify_all();
+                return p;
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Move every queued request compatible with `(model, kind)` into
+    /// `parts` (respecting the request-count and row caps), preserving
+    /// queue order.  Returns `(seq, interactive_waiting)`, both read
+    /// under the same lock: the current push sequence number (so the
+    /// caller cannot miss an arrival between the scan and its next
+    /// wait) and whether an interactive request is still queued (so an
+    /// open batch window can close early instead of holding it up).
+    pub fn take_matching(
+        &self,
+        model: usize,
+        kind: PipelineKind,
+        max_requests: usize,
+        max_rows: usize,
+        parts: &mut Vec<Pending>,
+        rows: &mut usize,
+    ) -> (u64, bool) {
+        let mut q = self.inner.lock().unwrap();
+        let mut i = 0;
+        let mut took = false;
+        while i < q.items.len() {
+            if parts.len() >= max_requests || *rows >= max_rows {
+                break;
+            }
+            let fits = {
+                let p = &q.items[i];
+                p.req.model == model
+                    && p.req.kind == kind
+                    && *rows + p.req.rows() <= max_rows
+            };
+            if fits {
+                let p = q.items.remove(i).expect("scanned index");
+                *rows += p.req.rows();
+                parts.push(p);
+                took = true;
+            } else {
+                i += 1;
+            }
+        }
+        if took {
+            self.not_full.notify_all();
+        }
+        let interactive_waiting =
+            q.items.iter().any(|p| p.req.class == DeadlineClass::Interactive);
+        (q.seq, interactive_waiting)
+    }
+
+    /// Wait until the push sequence number moves past `seen` or
+    /// `deadline` passes.  Returns the new sequence number, or `None` on
+    /// deadline/closure.  The deadline is checked *first*, so the batch
+    /// window is a hard bound: once it passes, the batch dispatches even
+    /// if (incompatible) pushes keep arriving — in particular a zero
+    /// window never admits a re-scan.
+    pub fn wait_new_push(&self, seen: u64, deadline: Instant) -> Option<u64> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            if q.seq != seen {
+                return Some(q.seq);
+            }
+            if q.closed {
+                return None;
+            }
+            let (guard, _timeout) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Close the queue: pushes fail from now on; `pop_anchor` drains the
+    /// remainder and then returns `None`.
+    pub fn close(&self) {
+        let mut q = self.inner.lock().unwrap();
+        q.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn pending(id: u64, model: usize, class: DeadlineClass, m: usize) -> Pending {
+        let (tx, _rx) = channel();
+        // Leak the receiver end deliberately: these queue tests never
+        // reply.
+        std::mem::forget(_rx);
+        Pending {
+            req: Request {
+                id,
+                model,
+                kind: crate::pe::PipelineKind::Skewed,
+                class,
+                a: vec![vec![0u64; 4]; m],
+            },
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn fifo_anchor_and_interactive_priority() {
+        let q = RequestQueue::new(8);
+        q.push(pending(0, 0, DeadlineClass::Batch, 1)).unwrap();
+        q.push(pending(1, 0, DeadlineClass::Batch, 1)).unwrap();
+        q.push(pending(2, 1, DeadlineClass::Interactive, 1)).unwrap();
+        // Interactive jumps the line …
+        assert_eq!(q.pop_anchor().unwrap().req.id, 2);
+        // … then FIFO.
+        assert_eq!(q.pop_anchor().unwrap().req.id, 0);
+        assert_eq!(q.pop_anchor().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn interactive_bypass_cannot_starve_the_front_batch_request() {
+        let bound = RequestQueue::MAX_FRONT_BYPASS;
+        let q = RequestQueue::new(bound + 8);
+        q.push(pending(0, 0, DeadlineClass::Batch, 1)).unwrap();
+        for id in 1..=(bound as u64 + 2) {
+            q.push(pending(id, 1, DeadlineClass::Interactive, 1)).unwrap();
+        }
+        // The first `bound` pops bypass the batch front…
+        for n in 0..bound {
+            assert_eq!(q.pop_anchor().unwrap().req.id, n as u64 + 1);
+        }
+        // …then the starved front is anchored regardless of class.
+        assert_eq!(q.pop_anchor().unwrap().req.id, 0, "front served after {bound} bypasses");
+        // And the counter reset: interactive priority resumes.
+        assert_eq!(q.pop_anchor().unwrap().req.id, bound as u64 + 1);
+    }
+
+    #[test]
+    fn take_matching_respects_key_and_caps() {
+        let q = RequestQueue::new(16);
+        for id in 0..6 {
+            let model = if id % 2 == 0 { 0 } else { 1 };
+            q.push(pending(id, model, DeadlineClass::Batch, 2)).unwrap();
+        }
+        let mut parts = Vec::new();
+        let mut rows = 0usize;
+        q.take_matching(0, crate::pe::PipelineKind::Skewed, 8, 4, &mut parts, &mut rows);
+        // Model-0 requests are ids 0, 2, 4 (2 rows each); the row cap of
+        // 4 admits exactly two of them.
+        assert_eq!(parts.len(), 2);
+        assert_eq!(rows, 4);
+        assert!(parts.iter().all(|p| p.req.model == 0));
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = RequestQueue::new(4);
+        q.push(pending(0, 0, DeadlineClass::Batch, 1)).unwrap();
+        q.close();
+        assert!(q.push(pending(1, 0, DeadlineClass::Batch, 1)).is_err());
+        assert_eq!(q.pop_anchor().unwrap().req.id, 0);
+        assert!(q.pop_anchor().is_none());
+    }
+
+    #[test]
+    fn wait_new_push_times_out_and_wakes() {
+        let q = RequestQueue::new(4);
+        let seen = q.seq();
+        let deadline = Instant::now() + std::time::Duration::from_millis(5);
+        assert_eq!(q.wait_new_push(seen, deadline), None, "timeout with no pushes");
+        q.push(pending(0, 0, DeadlineClass::Batch, 1)).unwrap();
+        let deadline = Instant::now() + std::time::Duration::from_millis(100);
+        assert_eq!(q.wait_new_push(seen, deadline), Some(seen + 1));
+    }
+}

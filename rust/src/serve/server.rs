@@ -1,0 +1,263 @@
+//! The serving facade: queue → batcher → plan cache → shards → replies.
+//!
+//! [`Server::start`] wires the pipeline up (DESIGN.md §11): a batcher
+//! thread drains the bounded [`RequestQueue`] into coalesced batches,
+//! memoises planning through the [`PlanCache`], stacks member
+//! activations into one `GemmData` sharing the model's weights, and
+//! routes the batch to a shard; the shard executes on its persistent
+//! worker pool and fans responses back out per request.  Clients only
+//! ever see [`Server::submit`] → a reply receiver.
+//!
+//! Dropping the server closes the queue, drains in-flight work, and
+//! joins every thread — no request accepted before shutdown is lost.
+
+use super::batcher::{Batch, Batcher, BatchLimits};
+use super::cache::{CacheStats, PlanCache, PlanKey};
+use super::request::{DeadlineClass, Pending, Request, RequestQueue, Response};
+use super::shard::{BatchJob, ReplyPart, ShardPool, ShardSnapshot};
+use crate::arith::fma::ChainCfg;
+use crate::arith::format::FpFormat;
+use crate::config::{NumericMode, RunConfig, ServeConfig};
+use crate::coordinator::FaultPlan;
+use crate::pe::PipelineKind;
+use crate::sa::tile::GemmShape;
+use crate::workloads::gemm::GemmData;
+use crate::workloads::serving::WeightStore;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    /// Requests accepted so far.
+    pub submitted: u64,
+    pub cache: CacheStats,
+    pub shards: Vec<ShardSnapshot>,
+}
+
+/// Planning + dispatch context owned by the batcher thread.
+struct Dispatcher {
+    store: Arc<WeightStore>,
+    cache: Arc<PlanCache>,
+    shards: Arc<ShardPool>,
+    rows: usize,
+    cols: usize,
+    out_fmt: FpFormat,
+    mode: NumericMode,
+}
+
+impl Dispatcher {
+    fn dispatch(&self, batch: Batch) {
+        let model = self.store.get(batch.key.model);
+        let shape = GemmShape::new(batch.rows, model.k, model.n);
+        let key = PlanKey {
+            shape,
+            fmt: model.fmt,
+            kind: batch.key.kind,
+            rows: self.rows,
+            cols: self.cols,
+        };
+        let (plan, cache_hit) = self.cache.get(key);
+        // One pass over the owned members: *move* each request's
+        // activation rows into the stacked matrix (no clone on the hot
+        // path) while building the reply routing in the same order.
+        // The weight matrix is still copied per batch — `GemmData`
+        // owns `w`, and sharing it via `Arc` would ripple into every
+        // constructor and the mutation sites (e.g. the layer
+        // cross-check's zero-padding); one K×N copy per *batch* is the
+        // amortised cost batching already pays for.
+        let mut a = Vec::with_capacity(batch.rows);
+        let mut parts = Vec::with_capacity(batch.parts.len());
+        for p in batch.parts {
+            let rows = p.req.rows();
+            a.extend(p.req.a);
+            parts.push(ReplyPart { id: p.req.id, rows, reply: p.reply });
+        }
+        let data = Arc::new(GemmData { shape, fmt: model.fmt, a, w: model.w.clone() });
+        let chain = ChainCfg::new(model.fmt, self.out_fmt);
+        self.shards.dispatch(BatchJob {
+            chain,
+            mode: self.mode,
+            kind: batch.key.kind,
+            data,
+            plan,
+            parts,
+            cache_hit,
+        });
+    }
+}
+
+/// The multi-tenant GEMM serving layer.
+pub struct Server {
+    queue: Arc<RequestQueue>,
+    cache: Arc<PlanCache>,
+    store: Arc<WeightStore>,
+    shards: Arc<ShardPool>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Start the serving pipeline: array geometry / formats / numeric
+    /// mode from `run`, serving knobs from `serve`.
+    pub fn start(run: &RunConfig, serve: &ServeConfig, store: Arc<WeightStore>) -> Server {
+        Self::start_with_fault(run, serve, store, FaultPlan::default())
+    }
+
+    /// As [`Server::start`], injecting a [`FaultPlan`] into every
+    /// shard's worker pool (resilience tests).
+    pub fn start_with_fault(
+        run: &RunConfig,
+        serve: &ServeConfig,
+        store: Arc<WeightStore>,
+        fault: FaultPlan,
+    ) -> Server {
+        assert!(!store.is_empty(), "serving needs at least one model");
+        let queue = Arc::new(RequestQueue::new(serve.queue_cap));
+        let cache = Arc::new(PlanCache::new(serve.plan_cache_cap));
+        let shards = Arc::new(ShardPool::with_fault(
+            serve.shards,
+            serve.workers_per_shard,
+            run.queue_depth,
+            serve.shard_policy,
+            fault,
+        ));
+        let limits = BatchLimits {
+            max_requests: serve.max_batch_requests,
+            max_rows: serve.max_batch_rows,
+            batch_window: Duration::from_micros(serve.batch_window_us),
+            interactive_window: Duration::from_micros(serve.interactive_window_us),
+        };
+        let batcher = Batcher::new(Arc::clone(&queue), limits);
+        let dispatcher = Dispatcher {
+            store: Arc::clone(&store),
+            cache: Arc::clone(&cache),
+            shards: Arc::clone(&shards),
+            rows: run.rows,
+            cols: run.cols,
+            out_fmt: run.out_fmt,
+            mode: run.mode,
+        };
+        let handle = std::thread::spawn(move || {
+            while let Some(batch) = batcher.next_batch() {
+                dispatcher.dispatch(batch);
+            }
+        });
+        Server { queue, cache, store, shards, batcher: Some(handle), next_id: AtomicU64::new(0) }
+    }
+
+    /// Submit one request; returns the reply receiver.  Blocks while
+    /// the request queue is full (closed-loop backpressure).
+    pub fn submit(
+        &self,
+        model: usize,
+        kind: PipelineKind,
+        class: DeadlineClass,
+        a: Vec<Vec<u64>>,
+    ) -> Receiver<Response> {
+        assert!(model < self.store.len(), "unknown model {model}");
+        let entry = self.store.get(model);
+        assert!(!a.is_empty(), "a request needs at least one activation row");
+        assert!(
+            a.iter().all(|row| row.len() == entry.k),
+            "activation rows must be K={} wide",
+            entry.k
+        );
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, model, kind, class, a };
+        let pending = Pending { req, reply: tx };
+        if self.queue.push(pending).is_err() {
+            panic!("serve queue closed");
+        }
+        rx
+    }
+
+    /// The model registry this server fronts.
+    pub fn store(&self) -> &WeightStore {
+        &self.store
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            submitted: self.next_id.load(Ordering::Relaxed),
+            cache: self.cache.stats(),
+            shards: self.shards.snapshots(),
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Stop intake, let the batcher drain the queue, then join it;
+        // the shard pool (joined by its own Drop once the last Arc
+        // falls) finishes every dispatched batch first.
+        self.queue.close();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mobilenet;
+
+    fn tiny_server(serve: ServeConfig) -> Server {
+        let mut run = RunConfig::small();
+        run.verify_fraction = 0.0;
+        let store = Arc::new(WeightStore::from_layers(
+            &mobilenet::layers()[..3],
+            FpFormat::BF16,
+            24,
+            16,
+        ));
+        Server::start(&run, &serve, store)
+    }
+
+    #[test]
+    fn submit_roundtrip_serves_a_request() {
+        let server = tiny_server(ServeConfig::small());
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a = server.store().gen_activations(0, 4, &mut rng);
+        let rx = server.submit(0, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.y.len(), 4 * server.store().get(0).n);
+        assert!(resp.batch_size >= 1);
+        assert!(resp.batch_stream_cycles > 0);
+        let stats = server.stats();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.cache.misses, 1);
+    }
+
+    #[test]
+    fn drop_drains_accepted_requests() {
+        let server = tiny_server(ServeConfig::small());
+        let mut rng = crate::util::rng::Rng::new(2);
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let a = server.store().gen_activations(i % 3, 2, &mut rng);
+            rxs.push(server.submit(i % 3, PipelineKind::Skewed, DeadlineClass::Batch, a));
+        }
+        drop(server);
+        for rx in rxs {
+            let resp = rx.recv().expect("accepted request must be served");
+            assert!(!resp.y.is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "K=")]
+    fn malformed_activation_width_is_rejected() {
+        let server = tiny_server(ServeConfig::small());
+        let _ = server.submit(
+            0,
+            PipelineKind::Skewed,
+            DeadlineClass::Batch,
+            vec![vec![0u64; 3]],
+        );
+    }
+}

@@ -1,0 +1,298 @@
+//! Shard layer: N independent simulated array "chips" behind a router.
+//!
+//! Each shard is a long-lived thread owning a persistent
+//! [`WorkerPool`] — the executor-reuse half of the serve tentpole:
+//! worker threads are spawned once per shard and stream any number of
+//! batches, instead of the per-GEMM spawn/teardown the one-shot
+//! [`crate::coordinator::Executor`] pays.  The existing [`Router`]
+//! policies are lifted to the shard level: the dispatcher picks a shard
+//! round-robin or least-loaded (by in-flight batches), and the shard
+//! reports completion back to the router when its batch retires.
+//!
+//! The shard also owns reply fan-out: a batch's stacked output rows are
+//! sliced back per member request and sent down each request's reply
+//! channel, so responses leave as soon as *their* batch retires.
+
+use super::cache::CachedPlan;
+use super::request::Response;
+use crate::arith::fma::ChainCfg;
+use crate::config::NumericMode;
+use crate::coordinator::router::{Policy, Router};
+use crate::coordinator::{FaultPlan, WorkerPool};
+use crate::pe::PipelineKind;
+use crate::workloads::gemm::GemmData;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Sender, SyncSender};
+use std::sync::Arc;
+
+/// One request's slice of a batch: which stacked rows reply where.
+pub struct ReplyPart {
+    pub id: u64,
+    pub rows: usize,
+    pub reply: Sender<Response>,
+}
+
+/// A planned batch handed to a shard for execution.
+pub struct BatchJob {
+    pub chain: ChainCfg,
+    pub mode: NumericMode,
+    pub kind: PipelineKind,
+    /// Stacked activations + shared weights.
+    pub data: Arc<GemmData>,
+    /// Memoised plan + schedules (from the [`super::cache::PlanCache`]).
+    pub plan: Arc<CachedPlan>,
+    /// Reply routing, in stacking order.
+    pub parts: Vec<ReplyPart>,
+    pub cache_hit: bool,
+}
+
+/// Per-shard counters, snapshotted for reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardSnapshot {
+    pub batches: u64,
+    pub requests: u64,
+    pub rows: u64,
+    pub retries: u64,
+}
+
+#[derive(Default)]
+struct ShardCounters {
+    batches: AtomicU64,
+    requests: AtomicU64,
+    rows: AtomicU64,
+    retries: AtomicU64,
+}
+
+struct Shard {
+    tx: Option<SyncSender<BatchJob>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The pool of shards plus the shard-level router.
+pub struct ShardPool {
+    shards: Vec<Shard>,
+    router: Arc<Router>,
+    counters: Arc<Vec<ShardCounters>>,
+}
+
+impl ShardPool {
+    /// Spawn `shards` shard threads, each owning a persistent
+    /// `workers_per_shard`-thread [`WorkerPool`].
+    pub fn new(
+        shards: usize,
+        workers_per_shard: usize,
+        queue_depth: usize,
+        policy: Policy,
+    ) -> ShardPool {
+        Self::with_fault(shards, workers_per_shard, queue_depth, policy, FaultPlan::default())
+    }
+
+    /// As [`ShardPool::new`], injecting `fault` into every shard's
+    /// worker pool (resilience tests: served results must survive a
+    /// permanently failing worker via retry + exclusion).
+    pub fn with_fault(
+        shards: usize,
+        workers_per_shard: usize,
+        queue_depth: usize,
+        policy: Policy,
+        fault: FaultPlan,
+    ) -> ShardPool {
+        let shards = shards.max(1);
+        let router = Arc::new(Router::new(policy, shards));
+        let counters: Arc<Vec<ShardCounters>> =
+            Arc::new((0..shards).map(|_| ShardCounters::default()).collect());
+        let built = (0..shards)
+            .map(|idx| {
+                // A small mailbox: the batcher backpressures instead of
+                // queueing unboundedly ahead of a busy shard.
+                let (tx, rx) = sync_channel::<BatchJob>(2);
+                let router = Arc::clone(&router);
+                let counters = Arc::clone(&counters);
+                let handle = std::thread::spawn(move || {
+                    let mut pool = WorkerPool::with_fault(
+                        workers_per_shard,
+                        queue_depth,
+                        Policy::LeastLoaded,
+                        fault,
+                    );
+                    while let Ok(job) = rx.recv() {
+                        let run =
+                            pool.run_gemm(job.chain, job.mode, job.kind, &job.data, &job.plan.plan);
+                        let out = match run {
+                            Ok(out) => out,
+                            Err(e) => {
+                                // Dropping `job` drops every member's
+                                // reply sender: clients see a recv
+                                // error instead of a hung server.
+                                eprintln!("serve: shard {idx} dropped a batch: {e}");
+                                router.complete(idx);
+                                continue;
+                            }
+                        };
+                        let n = job.data.shape.n;
+                        let batch_size = job.parts.len();
+                        let total_rows: usize = job.parts.iter().map(|p| p.rows).sum();
+                        // Account *before* fanning replies out: a client
+                        // unblocked by its reply must already see this
+                        // batch in the counters (tests read stats right
+                        // after the last recv).
+                        let c = &counters[idx];
+                        c.batches.fetch_add(1, Ordering::Relaxed);
+                        c.requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+                        c.rows.fetch_add(total_rows as u64, Ordering::Relaxed);
+                        c.retries.fetch_add(out.retries as u64, Ordering::Relaxed);
+                        router.complete(idx);
+                        let mut row0 = 0usize;
+                        for part in &job.parts {
+                            let y = out.y[row0 * n..(row0 + part.rows) * n].to_vec();
+                            row0 += part.rows;
+                            let _ = part.reply.send(Response {
+                                id: part.id,
+                                y,
+                                shard: idx,
+                                batch_size,
+                                cache_hit: job.cache_hit,
+                                retries: out.retries,
+                                batch_stream_cycles: job.plan.stream_cycles,
+                            });
+                        }
+                    }
+                });
+                Shard { tx: Some(tx), handle: Some(handle) }
+            })
+            .collect();
+        ShardPool { shards: built, router, counters }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Route a batch to a shard (policy decides which) and enqueue it;
+    /// blocks when the chosen shard's mailbox is full.
+    pub fn dispatch(&self, job: BatchJob) {
+        let s = self.router.dispatch();
+        self.shards[s].tx.as_ref().expect("pool alive").send(job).expect("shard alive");
+    }
+
+    /// Snapshot per-shard counters.
+    pub fn snapshots(&self) -> Vec<ShardSnapshot> {
+        self.counters
+            .iter()
+            .map(|c| ShardSnapshot {
+                batches: c.batches.load(Ordering::Relaxed),
+                requests: c.requests.load(Ordering::Relaxed),
+                rows: c.rows.load(Ordering::Relaxed),
+                retries: c.retries.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for s in &mut self.shards {
+            s.tx = None; // close the mailbox; the shard loop exits
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::serve::cache::{PlanCache, PlanKey};
+    use crate::sa::tile::GemmShape;
+    use std::sync::mpsc::channel;
+
+    fn one_request_job(
+        m: usize,
+        reply: Sender<Response>,
+        cache: &PlanCache,
+    ) -> (BatchJob, GemmData) {
+        let shape = GemmShape::new(m, 12, 6);
+        let data = GemmData::integer_valued(shape, FpFormat::BF16, 9);
+        let key = PlanKey {
+            shape,
+            fmt: FpFormat::BF16,
+            kind: PipelineKind::Skewed,
+            rows: 8,
+            cols: 8,
+        };
+        let (plan, hit) = cache.get(key);
+        let job = BatchJob {
+            chain: ChainCfg::BF16_FP32,
+            mode: NumericMode::Oracle,
+            kind: PipelineKind::Skewed,
+            data: Arc::new(data.clone()),
+            plan,
+            parts: vec![ReplyPart { id: 0, rows: m, reply }],
+            cache_hit: hit,
+        };
+        (job, data)
+    }
+
+    #[test]
+    fn shard_executes_and_replies() {
+        let pool = ShardPool::new(2, 2, 4, Policy::RoundRobin);
+        let cache = PlanCache::new(4);
+        let (tx, rx) = channel();
+        let (job, data) = one_request_job(3, tx, &cache);
+        pool.dispatch(job);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.batch_size, 1);
+        assert_eq!(resp.y.len(), 3 * 6);
+        let want = data.reference_f64();
+        for m in 0..3 {
+            for n in 0..6 {
+                assert_eq!(resp.y[m * 6 + n] as f64, want[m][n]);
+            }
+        }
+        let snaps = pool.snapshots();
+        let total: u64 = snaps.iter().map(|s| s.batches).sum();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    fn round_robin_spreads_batches_across_shards() {
+        let pool = ShardPool::new(3, 1, 2, Policy::RoundRobin);
+        let cache = PlanCache::new(4);
+        let mut rxs = Vec::new();
+        for _ in 0..6 {
+            let (tx, rx) = channel();
+            let (job, _) = one_request_job(2, tx, &cache);
+            pool.dispatch(job);
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let snaps = pool.snapshots();
+        assert_eq!(snaps.len(), 3);
+        for s in &snaps {
+            assert_eq!(s.batches, 2, "round-robin splits 6 batches 2/2/2: {snaps:?}");
+        }
+    }
+
+    #[test]
+    fn faulty_worker_inside_every_shard_is_survived() {
+        let pool = ShardPool::with_fault(2, 2, 4, Policy::RoundRobin, FaultPlan::always(0));
+        let cache = PlanCache::new(4);
+        let (tx, rx) = channel();
+        let (job, data) = one_request_job(4, tx, &cache);
+        pool.dispatch(job);
+        let resp = rx.recv().unwrap();
+        assert!(resp.retries >= 1, "the failing worker forced retries");
+        let want = data.reference_f64();
+        for m in 0..4 {
+            for n in 0..6 {
+                assert_eq!(resp.y[m * 6 + n] as f64, want[m][n]);
+            }
+        }
+    }
+}

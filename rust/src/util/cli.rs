@@ -2,6 +2,11 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional
 //! arguments, with typed getters and a generated usage string.
+//!
+//! Unknown options are *hard errors*, including single-dash typos like
+//! `-worker` (which used to fall through as positionals and be silently
+//! ignored); the error suggests the nearest declared option when one is
+//! within edit distance 2.  Negative numbers still parse as positionals.
 
 use std::collections::BTreeMap;
 
@@ -89,7 +94,7 @@ impl Cli {
                     .specs
                     .iter()
                     .find(|s| s.name == key)
-                    .ok_or_else(|| CliError::Unknown(key.to_string()))?;
+                    .ok_or_else(|| CliError::Unknown(self.describe_unknown(key)))?;
                 if spec.takes_value {
                     let val = match inline_val {
                         Some(v) => v,
@@ -107,12 +112,43 @@ impl Cli {
                     }
                     args.flags.push(key.to_string());
                 }
+            } else if a.len() > 1 && a.starts_with('-') && a[1..].parse::<f64>().is_err() {
+                // A single-dash token that is not a number is a typo'd
+                // option (`-worker`), not a positional: reject it loudly
+                // instead of silently ignoring it.  A key that exactly
+                // matches a declared option gets the dash hint rather
+                // than a self-contradictory "unknown --rows (did you
+                // mean --rows?)".
+                let key = a.trim_start_matches('-');
+                if self.specs.iter().any(|s| s.name == key) {
+                    return Err(CliError::SingleDash(key.to_string()));
+                }
+                return Err(CliError::Unknown(self.describe_unknown(key)));
             } else {
                 args.positional.push(a.clone());
             }
             i += 1;
         }
         Ok(args)
+    }
+
+    /// Render an unknown option with a did-you-mean hint when a declared
+    /// option is within edit distance 2.
+    fn describe_unknown(&self, key: &str) -> String {
+        match self.suggest(key) {
+            Some(best) => format!("{key} (did you mean --{best}?)"),
+            None => key.to_string(),
+        }
+    }
+
+    /// Nearest declared option name within edit distance 2, if any.
+    fn suggest(&self, key: &str) -> Option<&'static str> {
+        self.specs
+            .iter()
+            .map(|s| (edit_distance(key, s.name), s.name))
+            .filter(|&(d, _)| d <= 2)
+            .min_by_key(|&(d, _)| d)
+            .map(|(_, name)| name)
     }
 
     /// Parse `std::env::args()` and exit(2) on error / exit(0) on --help.
@@ -160,11 +196,30 @@ impl Args {
     }
 }
 
+/// Levenshtein edit distance (small inputs; O(|a|·|b|) rolling row).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = Vec::with_capacity(b.len() + 1);
+        cur.push(i + 1);
+        for (j, &cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur.push((prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
 /// CLI parse errors.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CliError {
     Help(String),
     Unknown(String),
+    /// A declared option written with one dash (`-rows`).
+    SingleDash(String),
     MissingValue(String),
     UnexpectedValue(String),
 }
@@ -174,6 +229,7 @@ impl std::fmt::Display for CliError {
         match self {
             CliError::Help(_) => write!(f, "help requested"),
             CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+            CliError::SingleDash(k) => write!(f, "option -{k} needs two dashes: --{k}"),
             CliError::MissingValue(k) => write!(f, "option --{k} needs a value"),
             CliError::UnexpectedValue(k) => write!(f, "flag --{k} takes no value"),
         }
@@ -224,6 +280,46 @@ mod tests {
         assert!(matches!(cli().parse(&sv(&["--seed"])), Err(CliError::MissingValue(_))));
         assert!(matches!(cli().parse(&sv(&["--verbose=x"])), Err(CliError::UnexpectedValue(_))));
         assert!(matches!(cli().parse(&sv(&["--help"])), Err(CliError::Help(_))));
+    }
+
+    #[test]
+    fn single_dash_typos_are_rejected() {
+        // `-rows 4` used to pass silently as two positionals; the key
+        // is declared, so the error teaches the dash count instead of
+        // calling a known option unknown.
+        let err = cli().parse(&sv(&["-rows", "4"])).unwrap_err();
+        assert_eq!(err, CliError::SingleDash("rows".into()));
+        assert!(err.to_string().contains("needs two dashes: --rows"), "{err}");
+        assert!(matches!(cli().parse(&sv(&["-x"])), Err(CliError::Unknown(_))));
+        // Negative numbers and a bare dash stay positional.
+        let a = cli().parse(&sv(&["-3.5", "-42", "-"])).unwrap();
+        assert_eq!(a.positional, vec!["-3.5", "-42", "-"]);
+    }
+
+    #[test]
+    fn unknown_options_suggest_nearest_name() {
+        let Err(CliError::Unknown(msg)) = cli().parse(&sv(&["--row"])) else {
+            panic!("expected Unknown");
+        };
+        assert!(msg.contains("did you mean --rows?"), "{msg}");
+        let Err(CliError::Unknown(msg)) = cli().parse(&sv(&["-seeed", "1"])) else {
+            panic!("expected Unknown");
+        };
+        assert!(msg.contains("did you mean --seed?"), "{msg}");
+        // Nothing close: no hint.
+        let Err(CliError::Unknown(msg)) = cli().parse(&sv(&["--zzzzzz"])) else {
+            panic!("expected Unknown");
+        };
+        assert!(!msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("rows", "rows"), 0);
+        assert_eq!(edit_distance("row", "rows"), 1);
+        assert_eq!(edit_distance("worker", "workers"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

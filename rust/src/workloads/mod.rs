@@ -4,11 +4,15 @@
 //! * [`mobilenet`] — MobileNetV1 224² (28 compute layers) [18].
 //! * [`resnet50`] — ResNet-50 224² (53 convs + FC) [19].
 //! * [`gemm`] — synthetic GEMM data with ImageNet-like statistics.
+//! * [`serving`] — per-layer serving models + request generation for
+//!   the `skewsa serve` stack (DESIGN.md §11).
 
 pub mod gemm;
 pub mod layer;
 pub mod mobilenet;
 pub mod resnet50;
+pub mod serving;
 
 pub use gemm::GemmData;
 pub use layer::{LayerDef, LayerKind, TileSimCheck};
+pub use serving::{ServingModel, WeightStore};

@@ -1,0 +1,175 @@
+//! Per-layer serving workloads: the request side of `skewsa serve`.
+//!
+//! A *serving model* is one deployed CNN layer: its weight matrix is
+//! fixed at registration (weight-stationary in the large), and requests
+//! stream activation row-batches through it — the ML-serving pattern
+//! where many users share one set of weights.  That is exactly what
+//! makes dynamic batching bit-exact here: tile numerics are
+//! row-independent (DESIGN.md §7), so stacking several requests'
+//! activation rows into one GEMM produces, row for row, the bits a solo
+//! run of each request would.
+//!
+//! Weights are generated deterministically from the layer name (FNV-1a
+//! seed, He/fan-in scale), so a verification run can rebuild the same
+//! model out-of-band and compare served bits against a direct
+//! [`crate::coordinator::Coordinator::run_gemm`].
+
+use crate::arith::format::FpFormat;
+use crate::config::RunConfig;
+use crate::coordinator::Coordinator;
+use crate::pe::PipelineKind;
+use crate::sa::tile::GemmShape;
+use crate::util::rng::Rng;
+use crate::workloads::gemm::GemmData;
+use crate::workloads::layer::LayerDef;
+use std::sync::Arc;
+
+/// FNV-1a over a layer name: the deterministic weight seed.
+pub fn layer_seed(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
+/// One servable entry: a fixed `K×N` weight matrix in a given format.
+#[derive(Clone, Debug)]
+pub struct ServingModel {
+    /// Layer name the entry was built from.
+    pub name: String,
+    /// Element format of weights and request activations.
+    pub fmt: FpFormat,
+    /// Reduction depth (rows of W).
+    pub k: usize,
+    /// Output columns (columns of W).
+    pub n: usize,
+    /// `w[k][n]` bit patterns in `fmt` (He-scaled, seeded by name).
+    pub w: Vec<Vec<u64>>,
+}
+
+/// The registry of deployed models a [`crate::serve::Server`] fronts.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    models: Vec<ServingModel>,
+}
+
+impl WeightStore {
+    /// Build a store from CNN layer definitions, clamping each layer's
+    /// GEMM to `k_cap × n_cap` (the serving path is identical under the
+    /// clamp; the softfloat oracle just stays tractable).
+    pub fn from_layers(
+        layers: &[LayerDef],
+        fmt: FpFormat,
+        k_cap: usize,
+        n_cap: usize,
+    ) -> WeightStore {
+        assert!(k_cap >= 1 && n_cap >= 1);
+        let models = layers
+            .iter()
+            .map(|l| {
+                let g = l.gemm();
+                let k = g.k.min(k_cap);
+                let n = g.n.min(n_cap);
+                let mut rng = Rng::new(layer_seed(&l.name));
+                let wstd = (2.0 / k as f64).sqrt();
+                let w = (0..k)
+                    .map(|_| {
+                        (0..n).map(|_| fmt.from_f64(rng.normal_scaled(0.0, wstd))).collect()
+                    })
+                    .collect();
+                ServingModel { name: l.name.clone(), fmt, k, n, w }
+            })
+            .collect();
+        WeightStore { models }
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn get(&self, id: usize) -> &ServingModel {
+        &self.models[id]
+    }
+
+    /// Generate `m` activation rows for a model: post-ReLU half-Gaussian
+    /// statistics, matching [`crate::workloads::gemm::GemmData::cnn_like`].
+    pub fn gen_activations(&self, model: usize, m: usize, rng: &mut Rng) -> Vec<Vec<u64>> {
+        let entry = self.get(model);
+        (0..m)
+            .map(|_| (0..entry.k).map(|_| entry.fmt.from_f64(rng.normal().max(0.0))).collect())
+            .collect()
+    }
+
+    /// Run one request's GEMM solo through a fresh [`Coordinator`] and
+    /// return the output bit patterns: the *canonical* reference the
+    /// serving path must match bit-for-bit (shared by the serve
+    /// integration tests and `bench_serve`, so they can never verify
+    /// against diverging references).
+    pub fn solo_reference_bits(
+        &self,
+        cfg: &RunConfig,
+        model: usize,
+        kind: PipelineKind,
+        a: &[Vec<u64>],
+    ) -> Vec<u32> {
+        let entry = self.get(model);
+        let shape = GemmShape::new(a.len(), entry.k, entry.n);
+        let data = Arc::new(GemmData {
+            shape,
+            fmt: entry.fmt,
+            a: a.to_vec(),
+            w: entry.w.clone(),
+        });
+        let r = Coordinator::new(cfg.clone()).run_gemm(kind, &data);
+        r.y.iter().map(|v| v.to_bits()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mobilenet;
+
+    #[test]
+    fn store_covers_layers_with_caps() {
+        let layers = mobilenet::layers();
+        let store = WeightStore::from_layers(&layers, FpFormat::BF16, 64, 48);
+        assert_eq!(store.len(), layers.len());
+        for i in 0..store.len() {
+            let m = store.get(i);
+            assert!(m.k >= 1 && m.k <= 64);
+            assert!(m.n >= 1 && m.n <= 48);
+            assert_eq!(m.w.len(), m.k);
+            assert_eq!(m.w[0].len(), m.n);
+        }
+    }
+
+    #[test]
+    fn weights_deterministic_per_name() {
+        let layers = mobilenet::layers();
+        let a = WeightStore::from_layers(&layers[..3], FpFormat::BF16, 32, 32);
+        let b = WeightStore::from_layers(&layers[..3], FpFormat::BF16, 32, 32);
+        for i in 0..a.len() {
+            assert_eq!(a.get(i).w, b.get(i).w);
+        }
+        // Distinct layers get distinct weights.
+        assert_ne!(a.get(1).w, a.get(2).w);
+    }
+
+    #[test]
+    fn activations_are_post_relu_and_sized() {
+        let store =
+            WeightStore::from_layers(&mobilenet::layers()[..1], FpFormat::BF16, 27, 32);
+        let mut rng = Rng::new(7);
+        let a = store.gen_activations(0, 5, &mut rng);
+        assert_eq!(a.len(), 5);
+        for row in &a {
+            assert_eq!(row.len(), store.get(0).k);
+            for &bits in row {
+                assert!(FpFormat::BF16.to_f64(bits) >= 0.0);
+            }
+        }
+    }
+}

@@ -3,7 +3,7 @@
 
 use skewsa::arith::format::FpFormat;
 use skewsa::config::{NumericMode, RunConfig};
-use skewsa::coordinator::{Coordinator, Executor, FaultPlan};
+use skewsa::coordinator::{verify_oracle_sampled, Coordinator, Executor, FaultPlan, Policy};
 use skewsa::pe::PipelineKind;
 use skewsa::sa::tile::{GemmShape, TilePlan};
 use skewsa::workloads::gemm::GemmData;
@@ -54,6 +54,38 @@ fn worker_failures_recovered_transparently() {
             assert_eq!(out.y[m * shape.n + n] as f64, want[m][n]);
         }
     }
+}
+
+#[test]
+fn paper_scale_least_loaded_backpressure_and_fault_injection() {
+    // The paper's 128×128 array under Policy::LeastLoaded, maximal
+    // backpressure (queue depth 1) and a worker that fails *every* job:
+    // the run must stay bit-exact against the exact oracle and the
+    // retry accounting must show worker 0 was routed around.
+    let mut cfg = RunConfig::paper();
+    cfg.workers = 3;
+    cfg.queue_depth = 1;
+    cfg.verify_fraction = 0.0;
+    let chain = cfg.chain();
+    let shape = GemmShape::new(6, 300, 200); // 3 K-passes × 2 N-blocks on 128×128
+    let data = GemmData::cnn_like(shape, FpFormat::BF16, 0xfa17);
+    let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+    assert_eq!(plan.tile_count(), 6);
+    let mut ex = Executor::new(cfg, PipelineKind::Skewed);
+    ex.policy = Policy::LeastLoaded;
+    ex.fault = FaultPlan::always(0);
+    let out = ex.run(&Arc::new(data.clone()), &plan);
+    // Bit-exact over every output element.
+    let rep = verify_oracle_sampled(&chain, &plan, &data, &out.y, 1.0, 1);
+    assert!(rep.ok(), "{rep:?}");
+    assert_eq!(rep.checked, 6 * 200);
+    // Retry accounting: each job fails at most once (on worker 0), then
+    // succeeds elsewhere; worker 0 completes nothing.
+    assert!(out.retries >= 1, "least-loaded offers worker 0 the first job");
+    assert!(out.retries <= plan.tile_count(), "retries {}", out.retries);
+    assert!(out.per_worker.iter().all(|&(w, _)| w != 0), "{:?}", out.per_worker);
+    let done: usize = out.per_worker.iter().map(|&(_, n)| n).sum();
+    assert_eq!(done, plan.tile_count());
 }
 
 #[test]

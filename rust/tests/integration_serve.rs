@@ -1,0 +1,247 @@
+//! Serve-layer integration: served results must be bit-exact with a
+//! direct `Coordinator::run_gemm` of the same request (the serving
+//! stack may batch, cache and shard, but it may never change a bit),
+//! across pipeline kinds and formats; plus batching, shard-spread,
+//! plan-cache and fault-resilience behaviour end-to-end.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::config::{NumericMode, RunConfig, ServeConfig};
+use skewsa::coordinator::{FaultPlan, Policy};
+use skewsa::pe::PipelineKind;
+use skewsa::serve::{DeadlineClass, Server};
+use skewsa::util::rng::Rng;
+use skewsa::workloads::mobilenet;
+use skewsa::workloads::serving::WeightStore;
+use std::sync::Arc;
+
+fn run_cfg(fmt: FpFormat) -> RunConfig {
+    let mut cfg = RunConfig::small();
+    cfg.rows = 16;
+    cfg.cols = 16;
+    cfg.in_fmt = fmt;
+    cfg.out_fmt = FpFormat::FP32;
+    cfg.verify_fraction = 0.0;
+    cfg
+}
+
+/// Run one request's GEMM directly through a fresh coordinator: the
+/// golden reference the serving path must match bit-for-bit (the
+/// canonical helper shared with `bench_serve`).
+fn solo_bits(
+    cfg: &RunConfig,
+    store: &WeightStore,
+    model: usize,
+    kind: PipelineKind,
+    a: &[Vec<u64>],
+) -> Vec<u32> {
+    store.solo_reference_bits(cfg, model, kind, a)
+}
+
+#[test]
+fn served_bit_exact_vs_coordinator_all_formats_and_kinds() {
+    // Acceptance sweep: both pipeline kinds × FP32 + BF16 + FP8-E4M3.
+    for fmt in [FpFormat::FP32, FpFormat::BF16, FpFormat::FP8E4M3] {
+        let cfg = run_cfg(fmt);
+        // K=40 → 3 K-passes, N=24 → 2 N-blocks on the 16×16 array:
+        // multi-tile assembly is on the served path.
+        let store =
+            Arc::new(WeightStore::from_layers(&mobilenet::layers()[..4], fmt, 40, 24));
+        let server = Server::start(&cfg, &ServeConfig::small(), Arc::clone(&store));
+        let mut rng = Rng::new(0x1234 ^ fmt.man_bits as u64);
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            for model in 0..store.len() {
+                let a = store.gen_activations(model, 3, &mut rng);
+                let rx = server.submit(model, kind, DeadlineClass::Interactive, a.clone());
+                let resp = rx.recv().expect("served");
+                let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+                let want = solo_bits(&cfg, &store, model, kind, &a);
+                assert_eq!(got, want, "{} {kind} model {model}", fmt.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_requests_stay_bit_exact_per_member() {
+    let cfg = run_cfg(FpFormat::BF16);
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..1],
+        FpFormat::BF16,
+        27,
+        16,
+    ));
+    let mut scfg = ServeConfig::small();
+    // A long window that the request cap closes early: all six
+    // pre-submitted compatible requests coalesce, deterministically.
+    scfg.batch_window_us = 2_000_000;
+    scfg.max_batch_requests = 6;
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let mut rng = Rng::new(7);
+    let mut submitted = Vec::new();
+    for _ in 0..6 {
+        let a = store.gen_activations(0, 2, &mut rng);
+        let rx = server.submit(0, PipelineKind::Skewed, DeadlineClass::Batch, a.clone());
+        submitted.push((a, rx));
+    }
+    let mut max_batch = 0usize;
+    for (a, rx) in submitted {
+        let resp = rx.recv().expect("served");
+        max_batch = max_batch.max(resp.batch_size);
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let want = solo_bits(&cfg, &store, 0, PipelineKind::Skewed, &a);
+        assert_eq!(got, want, "batched member diverged from its solo run");
+    }
+    assert!(max_batch >= 2, "dynamic batching coalesced nothing");
+    let stats = server.stats();
+    let batches: u64 = stats.shards.iter().map(|s| s.batches).sum();
+    assert!(batches < 6, "six requests ran as {batches} batches — no coalescing");
+}
+
+#[test]
+fn cycle_accurate_serving_matches_oracle_serving() {
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..2],
+        FpFormat::BF16,
+        12,
+        8,
+    ));
+    let serve_bits = |mode: NumericMode| -> Vec<Vec<u32>> {
+        let mut cfg = run_cfg(FpFormat::BF16);
+        cfg.rows = 8;
+        cfg.cols = 8;
+        cfg.mode = mode;
+        let server = Server::start(&cfg, &ServeConfig::small(), Arc::clone(&store));
+        let mut out = Vec::new();
+        let mut rng = Rng::new(0xc1c1e);
+        for model in 0..store.len() {
+            let a = store.gen_activations(model, 2, &mut rng);
+            let rx = server.submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+            out.push(rx.recv().unwrap().y.iter().map(|v| v.to_bits()).collect());
+        }
+        out
+    };
+    assert_eq!(serve_bits(NumericMode::Oracle), serve_bits(NumericMode::CycleAccurate));
+}
+
+#[test]
+fn batched_cycle_accurate_serving_stays_bit_exact_per_member() {
+    // Row-independence under stacking is exactly what batching relies
+    // on (DESIGN.md §7/§11); assert it holds on the *cycle-accurate*
+    // path too: a coalesced batch through FastArraySim must reproduce
+    // each member's solo cycle-accurate run bit-for-bit.
+    let mut cfg = run_cfg(FpFormat::BF16);
+    cfg.rows = 8;
+    cfg.cols = 8;
+    cfg.mode = NumericMode::CycleAccurate;
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..1],
+        FpFormat::BF16,
+        12,
+        8,
+    ));
+    let mut scfg = ServeConfig::small();
+    scfg.batch_window_us = 2_000_000;
+    scfg.max_batch_requests = 4;
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let mut rng = Rng::new(0xbc1c1e);
+    let mut submitted = Vec::new();
+    for _ in 0..4 {
+        let a = store.gen_activations(0, 2, &mut rng);
+        let rx = server.submit(0, PipelineKind::Skewed, DeadlineClass::Batch, a.clone());
+        submitted.push((a, rx));
+    }
+    let mut max_batch = 0usize;
+    for (a, rx) in submitted {
+        let resp = rx.recv().expect("served");
+        max_batch = max_batch.max(resp.batch_size);
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let want = solo_bits(&cfg, &store, 0, PipelineKind::Skewed, &a);
+        assert_eq!(got, want, "cycle-accurate batched member diverged from its solo run");
+    }
+    assert!(max_batch >= 2, "cycle-accurate requests did not coalesce");
+}
+
+#[test]
+fn round_robin_shards_split_sequential_batches_evenly() {
+    let cfg = run_cfg(FpFormat::BF16);
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..3],
+        FpFormat::BF16,
+        24,
+        16,
+    ));
+    let mut scfg = ServeConfig::small();
+    scfg.shards = 3;
+    scfg.shard_policy = Policy::RoundRobin;
+    scfg.batch_window_us = 0;
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let mut rng = Rng::new(11);
+    for i in 0..12 {
+        let class = if i % 2 == 0 { DeadlineClass::Interactive } else { DeadlineClass::Batch };
+        let kind =
+            if i % 3 == 0 { PipelineKind::Baseline3b } else { PipelineKind::Skewed };
+        let a = store.gen_activations(i % 3, 2, &mut rng);
+        // Sequential closed loop: every request runs as its own batch.
+        let resp = server.submit(i % 3, kind, class, a).recv().expect("served");
+        assert_eq!(resp.batch_size, 1);
+        assert!(resp.shard < 3);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.submitted, 12);
+    for (i, s) in stats.shards.iter().enumerate() {
+        assert_eq!(s.batches, 4, "round-robin splits 12 batches 4/4/4, shard {i}: {stats:?}");
+    }
+}
+
+#[test]
+fn hot_shapes_hit_the_plan_cache() {
+    let cfg = run_cfg(FpFormat::BF16);
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..1],
+        FpFormat::BF16,
+        27,
+        16,
+    ));
+    let server = Server::start(&cfg, &ServeConfig::small(), Arc::clone(&store));
+    let mut rng = Rng::new(3);
+    for i in 0..5 {
+        // Same model, same row count, sequential: one hot shape.
+        let a = store.gen_activations(0, 4, &mut rng);
+        let resp = server
+            .submit(0, PipelineKind::Skewed, DeadlineClass::Interactive, a)
+            .recv()
+            .expect("served");
+        assert_eq!(resp.cache_hit, i > 0, "request {i}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.cache.misses, 1);
+    assert_eq!(stats.cache.hits, 4);
+    assert_eq!(stats.cache.entries, 1);
+}
+
+#[test]
+fn serving_survives_an_always_failing_worker_in_every_shard() {
+    let cfg = run_cfg(FpFormat::BF16);
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..2],
+        FpFormat::BF16,
+        24,
+        16,
+    ));
+    let server = Server::start_with_fault(
+        &cfg,
+        &ServeConfig::small(),
+        Arc::clone(&store),
+        FaultPlan::always(0),
+    );
+    let mut rng = Rng::new(0xfa11);
+    for i in 0..6 {
+        let a = store.gen_activations(i % 2, 3, &mut rng);
+        let rx = server.submit(i % 2, PipelineKind::Skewed, DeadlineClass::Interactive, a.clone());
+        let resp = rx.recv().expect("served despite faults");
+        assert!(resp.retries >= 1, "worker 0 always fails first: request {i}");
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let want = solo_bits(&cfg, &store, i % 2, PipelineKind::Skewed, &a);
+        assert_eq!(got, want, "fault recovery changed bits on request {i}");
+    }
+}

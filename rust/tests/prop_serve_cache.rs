@@ -1,0 +1,67 @@
+//! Property tests for the serve-layer plan cache: caching must be
+//! invisible — a cache-hit plan is structurally identical to a freshly
+//! built one across a random sweep of shapes × formats × pipeline kinds
+//! × array geometries, including under eviction churn.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::pe::PipelineKind;
+use skewsa::sa::tile::{GemmShape, TilePlan};
+use skewsa::serve::{CachedPlan, PlanCache, PlanKey};
+use skewsa::util::prop::{Gen, Prop};
+
+const FMTS: [FpFormat; 5] = [
+    FpFormat::BF16,
+    FpFormat::FP16,
+    FpFormat::FP8E4M3,
+    FpFormat::FP8E5M2,
+    FpFormat::FP32,
+];
+const KINDS: [PipelineKind; 2] = [PipelineKind::Baseline3b, PipelineKind::Skewed];
+
+fn random_key(g: &mut Gen) -> PlanKey {
+    PlanKey {
+        shape: GemmShape::new(g.usize_in(1, 64), g.usize_in(1, 300), g.usize_in(1, 300)),
+        fmt: *g.choose(&FMTS),
+        kind: *g.choose(&KINDS),
+        rows: g.usize_in(1, 128),
+        cols: g.usize_in(1, 128),
+    }
+}
+
+#[test]
+fn cache_hit_plans_structurally_identical_across_sweep() {
+    // Roomy capacity: nothing is evicted, every second lookup must hit.
+    let cache = PlanCache::new(1 << 14);
+    Prop::new("plan-cache-structural-identity", 300).run(|g: &mut Gen| {
+        let key = random_key(g);
+        let (first, _) = cache.get(key);
+        let (second, hit) = cache.get(key);
+        g.assert("second lookup is a hit", hit);
+        g.assert("hit equals first lookup", *first == *second);
+        let fresh = CachedPlan::build(&key);
+        g.assert("cached plan == fresh plan", second.plan == fresh.plan);
+        g.assert("cached schedules == fresh schedules", second.schedules == fresh.schedules);
+        g.assert_eq("stream cycles", second.stream_cycles, fresh.stream_cycles);
+        g.assert(
+            "fresh build is the canonical TilePlan",
+            fresh.plan == TilePlan::new(key.shape, key.rows, key.cols),
+        );
+        g.assert_eq("one schedule per tile", second.schedules.len(), second.plan.tile_count());
+    });
+    let stats = cache.stats();
+    assert!(stats.hits >= 300, "every case re-looked its key up: {stats:?}");
+    assert_eq!(stats.evictions, 0, "capacity was never exceeded: {stats:?}");
+}
+
+#[test]
+fn small_cache_under_eviction_churn_still_builds_correct_plans() {
+    let cache = PlanCache::new(8);
+    Prop::new("plan-cache-churn", 200).run(|g: &mut Gen| {
+        let key = random_key(g);
+        let (p, _) = cache.get(key);
+        g.assert("churned entry equals fresh build", *p == CachedPlan::build(&key));
+    });
+    let stats = cache.stats();
+    assert!(stats.evictions > 0, "200 random keys must evict from 8 slots: {stats:?}");
+    assert!(stats.entries <= 8, "{stats:?}");
+}
