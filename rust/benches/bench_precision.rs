@@ -1,0 +1,117 @@
+//! Precision-planner bench: analysis throughput + planning outcomes.
+//!
+//! Measures the per-layer error-analysis rate (oracle MAC steps per
+//! second — the planner's hot loop), then runs the full budgeted study
+//! on MobileNetV1 and reports the planned mixed-precision energy
+//! against the all-FP32 and all-BF16 uniform plans.
+//!
+//! Every run appends to `BENCH_precision.json` at the repo root,
+//! mirroring the `BENCH_hotpath.json` / `BENCH_serve.json`
+//! trajectories.  Pass `--smoke` (or set `SKEWSA_BENCH_SMOKE=1`) for
+//! the CI-grade quick run.
+//!
+//! ```text
+//! cargo bench --bench bench_precision
+//! cargo bench --bench bench_precision -- --smoke
+//! ```
+
+use skewsa::precision::{analyze_layer, AnalysisConfig, PlannerConfig, PrecisionStudy};
+use skewsa::timing::model::TimingConfig;
+use skewsa::util::bench::{append_json_run, measure, with_units};
+use skewsa::workloads::layer::LayerDef;
+use skewsa::workloads::mobilenet;
+use skewsa::FpFormat;
+use skewsa::PipelineKind;
+use std::time::Instant;
+
+fn main() {
+    let mut smoke = std::env::var_os("SKEWSA_BENCH_SMOKE").is_some();
+    for a in std::env::args().skip(1) {
+        match a.as_str() {
+            "--smoke" => smoke = true,
+            "--bench" => {} // appended by `cargo bench`
+            other => {
+                eprintln!("error: unknown option '{other}'\nusage: bench_precision [--smoke]");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    // --- tier 1: analysis throughput (the planner's hot loop) ------------
+    let probe = LayerDef::conv("bench/conv", 16, 3, 1, 32, 32);
+    let acfg = AnalysisConfig { m_cap: 4, n_cap: 8, seed: 1 };
+    let shape = probe.gemm();
+    let macs = (shape.m.min(acfg.m_cap) * shape.k * shape.n.min(acfg.n_cap)) as f64;
+    let (iters, samples) = if smoke { (2, 2) } else { (8, 5) };
+    for fmt in [FpFormat::BF16, FpFormat::FP8E4M3, FpFormat::FP32] {
+        let m = measure(&format!("analyze-layer/{}", fmt.display_name()), 1, iters, samples, || {
+            let a = analyze_layer(&probe, fmt, &acfg);
+            std::hint::black_box(a.stats.samples);
+        });
+        println!("{}", with_units(m, macs, "mac").report());
+    }
+
+    // --- tier 2: the full MobileNet study at the paper point --------------
+    let budget = 1e-2;
+    let layers = mobilenet::layers();
+    let pcfg = PlannerConfig {
+        budget,
+        kind: PipelineKind::Skewed,
+        candidates: FpFormat::ALL.to_vec(),
+        analysis: AnalysisConfig {
+            m_cap: if smoke { 2 } else { 8 },
+            n_cap: if smoke { 4 } else { 16 },
+            seed: 0x5eed_2023,
+        },
+        tcfg: TimingConfig::PAPER,
+    };
+    let t0 = Instant::now();
+    let study = PrecisionStudy::run(&layers, &pcfg);
+    let study_s = t0.elapsed().as_secs_f64();
+    let energy = |label: &str| {
+        study
+            .plans()
+            .into_iter()
+            .find(|p| p.label == label)
+            .map(|p| p.total_energy_uj())
+            .expect("study plan")
+    };
+    let (mixed_uj, fp32_uj, bf16_uj) = (energy("mixed"), energy("FP32"), energy("BF16"));
+    let saving = 1.0 - mixed_uj / fp32_uj;
+    println!(
+        "bench: mobilenet study in {study_s:.2}s — mixed {mixed_uj:.1} uJ \
+         vs FP32 {fp32_uj:.1} uJ ({:.1}% saved), BF16 uniform {bf16_uj:.1} uJ, \
+         worst-rel {:.3e}, meets-budget {}",
+        saving * 100.0,
+        study.mixed.worst_rel(),
+        study.mixed.meets_budget(),
+    );
+    assert!(bf16_uj < fp32_uj, "reduced-precision plans must cost less energy");
+    assert!(mixed_uj <= fp32_uj, "the planner never beats FP32 on cost upward");
+
+    // --- trajectory file -------------------------------------------------
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let worst = study.mixed.worst_rel();
+    // `inf` is not JSON: an over-budget plan records null here.
+    let worst_json =
+        if worst.is_finite() { format!("{worst:.4e}") } else { "null".to_string() };
+    let entry = format!(
+        "  {{\"bench\": \"precision\", \"unix_time\": {ts}, \"smoke\": {smoke}, \
+         \"workload\": \"mobilenet\", \"budget\": {budget}, \
+         \"m_cap\": {}, \"n_cap\": {}, \"study_s\": {study_s:.3}, \
+         \"mixed_uj\": {mixed_uj:.2}, \"fp32_uj\": {fp32_uj:.2}, \
+         \"bf16_uj\": {bf16_uj:.2}, \"energy_saving\": {saving:.4}, \
+         \"worst_rel\": {worst_json}, \"meets_budget\": {}}}",
+        pcfg.analysis.m_cap,
+        pcfg.analysis.n_cap,
+        study.mixed.meets_budget(),
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_precision.json");
+    match append_json_run(&path, &entry) {
+        Ok(()) => println!("bench: trajectory appended to {}", path.display()),
+        Err(e) => eprintln!("bench: could not append trajectory: {e}"),
+    }
+}

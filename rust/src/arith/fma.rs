@@ -18,7 +18,7 @@
 //!   shift.  The PE forwards the raw adder output, `ê_i`, and `L_i`.
 //!
 //! Both paths bottom out in the same window primitives ([`WindowVal`],
-//! [`add_at_top`]), differing only in *which exponent reference they use
+//! [`add_same_top`]), differing only in *which exponent reference they use
 //! when* — exactly the paper's structural distinction.  Because the fix
 //! equations recover the corrected alignment exactly, the two paths are
 //! **bit-identical**; `tests/prop_arith.rs` enforces this over random and

@@ -69,6 +69,32 @@ impl FpFormat {
     pub const REDUCED: [FpFormat; 4] =
         [Self::BF16, Self::FP16, Self::FP8E4M3, Self::FP8E5M2];
 
+    /// Every supported input format (FP32 first, then the reduced set)
+    /// — the candidate list the precision planner searches.
+    pub const ALL: [FpFormat; 5] =
+        [Self::FP32, Self::BF16, Self::FP16, Self::FP8E4M3, Self::FP8E5M2];
+
+    /// Canonical human-facing name, used by **every** report table and
+    /// summary so format spellings cannot drift between emitters (the
+    /// machine-facing `name` field stays lowercase for CLI/JSON
+    /// parsing).
+    ///
+    /// ```
+    /// use skewsa::FpFormat;
+    /// assert_eq!(FpFormat::FP8E4M3.display_name(), "FP8-E4M3");
+    /// assert_eq!(FpFormat::BF16.to_string(), "BF16"); // Display delegates
+    /// ```
+    pub const fn display_name(&self) -> &'static str {
+        match (self.exp_bits, self.man_bits) {
+            (8, 23) => "FP32",
+            (8, 7) => "BF16",
+            (5, 10) => "FP16",
+            (4, 3) => "FP8-E4M3",
+            (5, 2) => "FP8-E5M2",
+            _ => "FP?",
+        }
+    }
+
     /// Total storage width in bits (1 + exponent + fraction).
     pub const fn width(&self) -> u32 {
         1 + self.exp_bits + self.man_bits
@@ -257,6 +283,33 @@ impl FpFormat {
 
     /// Convert an `f64` to this format with RNE (used by tests and input
     /// quantisation).  Exact for every `f64` input.
+    ///
+    /// Every representable value round-trips bit-exactly through
+    /// [`FpFormat::to_f64`]:
+    ///
+    /// ```
+    /// use skewsa::FpFormat;
+    /// for fmt in FpFormat::ALL {
+    ///     let bits = fmt.from_f64(1.5);
+    ///     assert_eq!(fmt.to_f64(bits), 1.5);
+    ///     assert_eq!(fmt.from_f64(fmt.to_f64(bits)), bits);
+    /// }
+    /// ```
+    ///
+    /// FP8-E4M3 has no infinity: overflow **saturates to NaN** per the
+    /// OCP FP8 convention (`S.1111.111`), while the top exponent's other
+    /// mantissa codes stay finite (448 is the max finite):
+    ///
+    /// ```
+    /// use skewsa::FpFormat;
+    /// let e4m3 = FpFormat::FP8E4M3;
+    /// assert_eq!(e4m3.from_f64(448.0), 0x7e);          // max finite survives
+    /// assert!(e4m3.to_f64(e4m3.from_f64(1e9)).is_nan()); // overflow -> NaN
+    /// assert!(e4m3.to_f64(e4m3.from_f64(f64::INFINITY)).is_nan());
+    /// // IEEE-like formats overflow to a real infinity instead.
+    /// assert_eq!(FpFormat::FP8E5M2.to_f64(FpFormat::FP8E5M2.from_f64(1e9)),
+    ///            f64::INFINITY);
+    /// ```
     pub fn from_f64(&self, x: f64) -> u64 {
         let bits = x.to_bits();
         let sign = bits >> 63 == 1;
@@ -318,6 +371,12 @@ impl FpFormat {
     /// values outside f32 range (cannot occur: all formats ⊆ f32 range).
     pub fn to_f32(&self, bits: u64) -> f32 {
         self.to_f64(bits) as f32
+    }
+}
+
+impl std::fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.display_name())
     }
 }
 
@@ -399,6 +458,17 @@ mod tests {
         assert_eq!(FpFormat::FP16.bias(), 15);
         assert_eq!(FpFormat::FP8E4M3.bias(), 7);
         assert_eq!(FpFormat::FP8E5M2.bias(), 15);
+    }
+
+    #[test]
+    fn display_names_are_canonical_and_distinct() {
+        let names: Vec<&str> = FpFormat::ALL.iter().map(|f| f.display_name()).collect();
+        assert_eq!(names, ["FP32", "BF16", "FP16", "FP8-E4M3", "FP8-E5M2"]);
+        assert_eq!(format!("{}", FpFormat::FP8E5M2), "FP8-E5M2");
+        // The machine names stay lowercase (CLI/JSON contract).
+        for f in FpFormat::ALL {
+            assert!(f.name.chars().all(|c| !c.is_ascii_uppercase()), "{}", f.name);
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!   right-only aligner on the product path, and adds the fix block.
 //!
 //! Technology coefficients are calibrated once (documented in DESIGN.md
-//! §Energy-calibration) so the *ratios* between blocks match published
+//! §14) so the *ratios* between blocks match published
 //! FP-unit breakdowns; the paper's overhead percentages then emerge from
 //! the counted structures rather than being hard-coded — the tests below
 //! assert the emergent ratio lands in the published range.

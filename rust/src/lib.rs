@@ -25,6 +25,11 @@
 //!   paper's +9% area and +7% power overheads *emerge*.
 //! * [`workloads`] — CNN layer tables (MobileNetV1, ResNet50) and their
 //!   im2col GEMM lowering.
+//! * [`precision`] — mixed-precision analysis and planning: per-layer
+//!   numerical-error measurement through the bit-exact `arith` path
+//!   against an f64 oracle, and a greedy-by-energy per-layer format
+//!   search under an error budget (the quality half of the paper's
+//!   quality-vs-hardware-cost tradeoff, made searchable).
 //! * [`coordinator`] — the L3 orchestrator: layer→tile scheduling, a
 //!   worker pool of simulated arrays, result assembly and golden
 //!   verification.
@@ -46,6 +51,7 @@ pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod pe;
+pub mod precision;
 pub mod report;
 pub mod runtime;
 pub mod sa;

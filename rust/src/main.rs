@@ -12,6 +12,7 @@
 //! skewsa sweep       # design-space sweep: array size x format
 //! skewsa run         # coordinate a GEMM end-to-end (verify + report)
 //! skewsa serve       # multi-tenant serving: batching + cache + shards
+//! skewsa precision   # mixed-precision planner: budget -> per-layer plan
 //! skewsa viz         # pipeline interleaving trace (Figs. 4/6)
 //! ```
 
@@ -55,6 +56,10 @@ fn cli() -> Cli {
     .opt("interactive", "serve: interactive request fraction", Some("0.25"))
     .opt("net", "serve: model set mobilenet|resnet50|mix", Some("mix"))
     .opt("cap", "serve: K/N clamp for served layers", Some("128"))
+    .opt("workload", "precision: mobilenet|resnet50", Some("mobilenet"))
+    .opt("budget", "precision: per-layer error budget (peak-normalized)", Some("1e-2"))
+    .opt("m-cap", "precision: sampled rows per layer (full K always)", Some("8"))
+    .opt("n-cap", "precision: sampled columns per layer", Some("16"))
     .flag("quiet", "suppress per-layer rows")
 }
 
@@ -87,6 +92,10 @@ fn main() {
         }
         "serve" => {
             serve(&cfg, &args);
+            return;
+        }
+        "precision" => {
+            precision(&cfg, &args);
             return;
         }
         "viz" => {
@@ -242,6 +251,79 @@ fn serve(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     print!("{}", rep.render());
     if let Some(path) = args.get("csv") {
         std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
+        eprintln!("wrote {path}");
+    }
+}
+
+fn precision(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
+    use skewsa::precision::{AnalysisConfig, PlannerConfig, PrecisionStudy};
+    use skewsa::workloads::{mobilenet, resnet50};
+    use skewsa::FpFormat;
+
+    let net = args.get("workload").unwrap_or("mobilenet");
+    let layers = match net {
+        "mobilenet" => mobilenet::layers(),
+        "resnet50" => resnet50::layers(),
+        other => {
+            eprintln!("error: unknown workload '{other}' (mobilenet|resnet50)");
+            std::process::exit(2);
+        }
+    };
+    let kind: PipelineKind = match args.get("pipeline").unwrap_or("skewed").parse() {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("error: {e} (precision takes baseline|skewed)");
+            std::process::exit(2);
+        }
+    };
+    // The budget is the subcommand's central knob: a typo must not
+    // silently plan at the default (same hard-error contract as
+    // --workload/--pipeline above).
+    let budget = match args.get_f64("budget") {
+        Some(b) if b >= 0.0 => b,
+        _ => {
+            eprintln!(
+                "error: invalid --budget '{}' (non-negative number, e.g. 1e-2)",
+                args.get("budget").unwrap_or("")
+            );
+            std::process::exit(2);
+        }
+    };
+    let cap = |key: &str| match args.get_usize(key) {
+        Some(v) if v >= 1 => v,
+        _ => {
+            eprintln!(
+                "error: invalid --{key} '{}' (positive integer)",
+                args.get(key).unwrap_or("")
+            );
+            std::process::exit(2);
+        }
+    };
+    let pcfg = PlannerConfig {
+        budget,
+        kind,
+        candidates: FpFormat::ALL.to_vec(),
+        analysis: AnalysisConfig { m_cap: cap("m-cap"), n_cap: cap("n-cap"), seed: cfg.seed },
+        tcfg: cfg.timing(),
+    };
+    println!(
+        "planning {net}: budget {:.1e}, {kind}, {}x{} array, error sweep {}x{} \
+         sampled outputs/layer at full reduction depth",
+        pcfg.budget, cfg.rows, cfg.cols, pcfg.analysis.m_cap, pcfg.analysis.n_cap,
+    );
+    let study = PrecisionStudy::run(&layers, &pcfg);
+    let per_layer = report::precision_per_layer(net, &study);
+    if !args.has("quiet") {
+        print!("{}", per_layer.render());
+    }
+    print!("{}", report::precision_pareto(net, &study).render());
+    if !study.mixed.meets_budget() {
+        eprintln!(
+            "note: some layers fell back to FP32 over budget (see the in-budget column)"
+        );
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, per_layer.table.to_csv()).expect("writing CSV");
         eprintln!("wrote {path}");
     }
 }

@@ -1,0 +1,360 @@
+//! Per-layer numerical-error analysis against the f64 oracle.
+//!
+//! The paper trades deep-learning quality against hardware cost by
+//! dropping input precision; this module measures the *quality* half of
+//! that tradeoff so the planner in [`crate::precision::plan`] can search
+//! it.  For one CNN layer and one candidate input format the analysis
+//!
+//! 1. draws master activation/weight matrices in **f64** with the same
+//!    ImageNet-like statistics the workload generators use (post-ReLU
+//!    half-Gaussian activations, He/fan-in-scaled weights, seeded per
+//!    layer name — deterministic across runs);
+//! 2. quantizes them into the candidate format through the exact-
+//!    accumulator oracle path ([`quantize_oracle`], bit-identical to
+//!    [`FpFormat::from_f64`] — pinned by `tests/prop_precision.rs`),
+//!    counting FP8-E4M3 saturation-to-NaN events separately;
+//! 3. runs every sampled output through the **bit-exact datapath
+//!    semantics** ([`ColumnOracle`]: the paper's chained reduction with
+//!    one South-edge rounding — identical bits to the cycle simulators);
+//! 4. compares against the unquantized f64 reference product and folds
+//!    the differences into [`ErrorStats`].
+//!
+//! The headline metric is the *scaled* L∞ relative error
+//! `max_i |y_i − ŷ_i| / max_j |ŷ_j|` — absolute error normalized by the
+//! layer's peak output magnitude.  A plain element-wise relative error
+//! explodes on near-cancelled outputs (any format, FP32 included, looks
+//! infinitely wrong wherever the reference crosses zero), which would
+//! make every budget unsatisfiable; peak-normalized error is the robust
+//! form quality budgets are quoted in.  ULP distances (in the chain's
+//! accumulation format) and overflow/NaN/saturation counts are tracked
+//! alongside because a budget must also reject plans that merely *kept
+//! the error finite* by saturating.
+//!
+//! Cost: the analysis streams `m_cap × n_cap` sampled outputs through
+//! the full reduction depth `K` — depth is what drives accumulation
+//! error, so `K` is never capped; the spatial dimensions are, because
+//! error statistics converge after a few dozen sampled outputs.
+
+use crate::arith::accum::ColumnOracle;
+use crate::arith::fma::ChainCfg;
+use crate::arith::format::{FpClass, FpFormat};
+use crate::arith::softfloat::BigFixed;
+use crate::util::rng::Rng;
+use crate::workloads::layer::LayerDef;
+use crate::workloads::serving::layer_seed;
+
+/// The canonical accumulation pairing for an input format: double-width
+/// reduction per the paper (§IV runs Bfloat16 into FP32; the FP8 pair
+/// reduces into FP16, mirroring the `report::format_sweep` chain table).
+pub fn chain_for(fmt: FpFormat) -> ChainCfg {
+    let out = if fmt.width() == 8 { FpFormat::FP16 } else { FpFormat::FP32 };
+    ChainCfg::new(fmt, out)
+}
+
+/// Quantize an `f64` into `fmt` through the *oracle* path: the value is
+/// decomposed exactly into the [`BigFixed`] accumulator and rounded by
+/// [`BigFixed::round_to`], i.e. the same `encode_rne` route the exact
+/// chained reference takes at the South edge.  Bit-identical to
+/// [`FpFormat::from_f64`] for every input (the property suite enforces
+/// this): the analysis keeps an independently-derived path so a codec
+/// regression cannot silently re-calibrate the error statistics.
+///
+/// Specials and zeros share the codec path (NaN/Inf/±0 have no exact-
+/// accumulator representation), as do magnitudes beyond the `BigFixed`
+/// window (≥ 2^420: far past overflow of every supported format).
+pub fn quantize_oracle(fmt: FpFormat, x: f64) -> u64 {
+    if x == 0.0 || !x.is_finite() {
+        return fmt.from_f64(x);
+    }
+    let bits = x.to_bits();
+    let sign = bits >> 63 == 1;
+    let exp_field = ((bits >> 52) & 0x7ff) as i32;
+    let frac = bits & ((1u64 << 52) - 1);
+    // Exponent weight of bit 0 of the 53-bit significand.
+    let (exp_lsb, sig) = if exp_field == 0 {
+        (-1022 - 52, frac)
+    } else {
+        (exp_field - 1023 - 52, (1u64 << 52) | frac)
+    };
+    if exp_lsb < -460 {
+        // Below half of every supported format's smallest subnormal
+        // (and below the BigFixed window): rounds to signed zero.
+        return (sign as u64) << (fmt.width() - 1);
+    }
+    if exp_lsb > 420 {
+        // Beyond the BigFixed window; overflows every supported format,
+        // which the codec's encode_rne resolves (Inf, or NaN for E4M3).
+        return fmt.from_f64(x);
+    }
+    let mut acc = BigFixed::zero();
+    acc.add_scaled(sign, sig, exp_lsb);
+    acc.round_to(fmt)
+}
+
+/// Map a bit pattern to a monotone signed key: consecutive representable
+/// values (zero included, both signs) differ by exactly 1, so key
+/// differences *are* ULP distances.  Caller excludes NaN patterns.
+fn ulp_key(fmt: FpFormat, bits: u64) -> i64 {
+    let w = fmt.width();
+    let sign = (bits >> (w - 1)) & 1 == 1;
+    let mag = (bits & (fmt.mask() >> 1)) as i64;
+    if sign {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// ULP distance between two non-NaN bit patterns of `fmt` (the ordering
+/// treats ±0 as adjacent and Inf as one step past the largest finite).
+pub fn ulp_distance(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    ulp_key(fmt, a).abs_diff(ulp_key(fmt, b))
+}
+
+/// Per-layer, per-format error statistics against the f64 oracle.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorStats {
+    /// Outputs sampled (finite-reference outputs enter the error means).
+    pub samples: usize,
+    /// Peak-normalized L∞ relative error (see module docs).
+    pub max_rel: f64,
+    /// Peak-normalized mean relative error.
+    pub mean_rel: f64,
+    /// Largest ULP distance, measured in the chain's accumulation
+    /// format, between the datapath output and the rounded f64 oracle.
+    pub max_ulp: u64,
+    /// Finite-reference outputs the datapath drove to ±Inf.
+    pub overflow: usize,
+    /// Finite-reference outputs the datapath drove to NaN.
+    pub nan: usize,
+    /// Input quantizations that saturated to NaN (FP8-E4M3's overflow
+    /// convention has no Inf to saturate to) — reported separately from
+    /// output overflow because they poison whole output rows/columns.
+    pub sat_events: usize,
+    /// Peak |reference| of the sampled outputs (the error denominator).
+    pub ref_scale: f64,
+}
+
+impl ErrorStats {
+    /// The budget-facing error: the peak-normalized L∞ error, promoted
+    /// to +∞ when any sampled output overflowed, went NaN, or any input
+    /// saturated — a plan must not "meet" a finite budget by clipping.
+    pub fn worst(&self) -> f64 {
+        if self.overflow > 0 || self.nan > 0 || self.sat_events > 0 {
+            f64::INFINITY
+        } else {
+            self.max_rel
+        }
+    }
+
+    /// Whether this format's error fits under a per-layer budget.
+    pub fn meets(&self, budget: f64) -> bool {
+        self.worst() <= budget
+    }
+}
+
+/// Knobs of the per-layer analysis sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct AnalysisConfig {
+    /// Streamed rows sampled per layer (`M` is capped; error statistics
+    /// converge in a few dozen outputs and latency is M-linear anyway).
+    pub m_cap: usize,
+    /// Output columns sampled per layer.
+    pub n_cap: usize,
+    /// Extra seed mixed into each layer's deterministic name seed.
+    pub seed: u64,
+}
+
+impl Default for AnalysisConfig {
+    fn default() -> Self {
+        AnalysisConfig { m_cap: 8, n_cap: 16, seed: 0 }
+    }
+}
+
+/// One layer's analysis under one candidate format.
+#[derive(Clone, Copy, Debug)]
+pub struct FormatAnalysis {
+    pub fmt: FpFormat,
+    /// The chain the layer would run under (input + accumulation format).
+    pub chain: ChainCfg,
+    pub stats: ErrorStats,
+}
+
+/// Master (unquantized) f64 data for one layer's sampled GEMM slice.
+struct MasterData {
+    /// `a[m][k]`.
+    a: Vec<Vec<f64>>,
+    /// `w[k][n]`.
+    w: Vec<Vec<f64>>,
+}
+
+fn master_data(layer: &LayerDef, cfg: &AnalysisConfig) -> MasterData {
+    let shape = layer.gemm();
+    let m = shape.m.min(cfg.m_cap.max(1));
+    let n = shape.n.min(cfg.n_cap.max(1));
+    let k = shape.k;
+    let mut rng = Rng::new(layer_seed(&layer.name) ^ cfg.seed);
+    let wstd = (2.0 / k as f64).sqrt();
+    let a = (0..m).map(|_| (0..k).map(|_| rng.normal().max(0.0)).collect()).collect();
+    let w = (0..k).map(|_| (0..n).map(|_| rng.normal_scaled(0.0, wstd)).collect()).collect();
+    MasterData { a, w }
+}
+
+/// Analyze one layer under one candidate input format: quantize the
+/// master data, run the bit-exact datapath semantics, compare to the
+/// f64 oracle.  Deterministic in `(layer.name, cfg.seed)`.
+pub fn analyze_layer(layer: &LayerDef, fmt: FpFormat, cfg: &AnalysisConfig) -> FormatAnalysis {
+    let chain = chain_for(fmt);
+    let master = master_data(layer, cfg);
+    let (m, k, n) = (master.a.len(), master.w.len(), master.w[0].len());
+
+    let mut sat_events = 0usize;
+    let mut quantize = |x: f64| {
+        let q = quantize_oracle(fmt, x);
+        if x.is_finite() && fmt.decode(q).class == FpClass::Nan {
+            sat_events += 1;
+        }
+        q
+    };
+    let qa: Vec<Vec<u64>> =
+        master.a.iter().map(|row| row.iter().map(|&x| quantize(x)).collect()).collect();
+    let qw: Vec<Vec<u64>> =
+        master.w.iter().map(|row| row.iter().map(|&x| quantize(x)).collect()).collect();
+
+    // f64 oracle outputs + the peak magnitude (the error denominator).
+    let mut reference = vec![vec![0.0f64; n]; m];
+    for (i, a_row) in master.a.iter().enumerate() {
+        for (kk, w_row) in master.w.iter().enumerate() {
+            let av = a_row[kk];
+            if av == 0.0 {
+                continue;
+            }
+            for (j, &wv) in w_row.iter().enumerate() {
+                reference[i][j] += av * wv;
+            }
+        }
+    }
+    let ref_scale = reference
+        .iter()
+        .flat_map(|row| row.iter())
+        .fold(0.0f64, |acc, &v| acc.max(v.abs()))
+        .max(f64::MIN_POSITIVE);
+
+    let mut stats = ErrorStats { ref_scale, ..ErrorStats::default() };
+    let mut err_sum = 0.0f64;
+    let mut oracle = ColumnOracle::new(chain);
+    for i in 0..m {
+        for j in 0..n {
+            oracle.reset();
+            for kk in 0..k {
+                oracle.mac(qa[i][kk], qw[kk][j]);
+            }
+            let out_bits = oracle.result();
+            let got = chain.out_fmt.to_f64(out_bits);
+            let want = reference[i][j];
+            stats.samples += 1;
+            if got.is_nan() {
+                stats.nan += 1;
+                continue;
+            }
+            if got.is_infinite() && want.is_finite() {
+                stats.overflow += 1;
+                continue;
+            }
+            let rel = (got - want).abs() / ref_scale;
+            stats.max_rel = stats.max_rel.max(rel);
+            err_sum += rel;
+            let want_bits = chain.out_fmt.from_f64(want);
+            stats.max_ulp = stats.max_ulp.max(ulp_distance(chain.out_fmt, out_bits, want_bits));
+        }
+    }
+    let measured = stats.samples - stats.nan - stats.overflow;
+    if measured > 0 {
+        stats.mean_rel = err_sum / measured as f64;
+    }
+    stats.sat_events = sat_events;
+    FormatAnalysis { fmt, chain, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_pairings_are_double_width() {
+        assert_eq!(chain_for(FpFormat::BF16).out_fmt, FpFormat::FP32);
+        assert_eq!(chain_for(FpFormat::FP16).out_fmt, FpFormat::FP32);
+        assert_eq!(chain_for(FpFormat::FP32).out_fmt, FpFormat::FP32);
+        assert_eq!(chain_for(FpFormat::FP8E4M3).out_fmt, FpFormat::FP16);
+        assert_eq!(chain_for(FpFormat::FP8E5M2).out_fmt, FpFormat::FP16);
+        for f in FpFormat::ALL {
+            chain_for(f).check();
+        }
+    }
+
+    #[test]
+    fn quantize_oracle_matches_codec_on_structured_values() {
+        for f in FpFormat::ALL {
+            for &x in &[
+                0.0,
+                -0.0,
+                1.0,
+                -1.5,
+                3.14159,
+                448.0,
+                449.0,
+                1e9,
+                -1e9,
+                1e-30,
+                -1e-42,
+                f64::INFINITY,
+                f64::NEG_INFINITY,
+                f64::MIN_POSITIVE / 4.0,
+            ] {
+                assert_eq!(quantize_oracle(f, x), f.from_f64(x), "{} {x}", f.name);
+            }
+            assert_eq!(quantize_oracle(f, f64::NAN), f.from_f64(f64::NAN));
+        }
+    }
+
+    #[test]
+    fn ulp_distance_counts_representable_steps() {
+        let f = FpFormat::BF16;
+        assert_eq!(ulp_distance(f, f.from_f64(1.0), f.from_f64(1.0)), 0);
+        // 1.0 and the next bf16 up are one ULP apart.
+        let one = f.from_f64(1.0);
+        assert_eq!(ulp_distance(f, one, one + 1), 1);
+        // ±0 are adjacent.
+        assert_eq!(ulp_distance(f, 0x0000, 0x8000), 0);
+        let two = f.from_f64(2.0);
+        assert_eq!(ulp_distance(f, two, f.from_f64(-2.0)), 2 * ulp_key(f, two) as u64);
+    }
+
+    #[test]
+    fn analysis_is_deterministic_and_ordered_by_precision() {
+        let layer = LayerDef::conv("c", 8, 3, 1, 16, 8);
+        let cfg = AnalysisConfig { m_cap: 4, n_cap: 4, seed: 1 };
+        let a1 = analyze_layer(&layer, FpFormat::BF16, &cfg);
+        let a2 = analyze_layer(&layer, FpFormat::BF16, &cfg);
+        assert_eq!(a1.stats.max_rel, a2.stats.max_rel);
+        assert_eq!(a1.stats.max_ulp, a2.stats.max_ulp);
+        // More mantissa bits ⇒ (weakly) less peak-normalized error on
+        // the same data; fp32 ≪ bf16 ≪ fp8 in practice.
+        let fp32 = analyze_layer(&layer, FpFormat::FP32, &cfg);
+        let fp8 = analyze_layer(&layer, FpFormat::FP8E4M3, &cfg);
+        assert!(fp32.stats.max_rel < a1.stats.max_rel);
+        assert!(a1.stats.max_rel < fp8.stats.worst());
+        assert!(fp32.stats.max_rel > 0.0, "fp32 still quantizes inputs");
+        assert_eq!(a1.stats.samples, 16);
+    }
+
+    #[test]
+    fn saturation_poisons_the_budget() {
+        let s = ErrorStats { sat_events: 1, max_rel: 1e-6, ..ErrorStats::default() };
+        assert!(s.worst().is_infinite());
+        assert!(!s.meets(1.0));
+        let ok = ErrorStats { max_rel: 1e-3, ..ErrorStats::default() };
+        assert!(ok.meets(1e-2));
+        assert!(!ok.meets(1e-4));
+    }
+}

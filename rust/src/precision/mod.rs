@@ -1,0 +1,38 @@
+//! Mixed-precision analysis and planning (DESIGN.md §12).
+//!
+//! The systolic-array designs under study trade deep-learning quality
+//! against hardware cost through their input format, but the rest of
+//! the crate can only *run* a format — this subsystem *chooses* one,
+//! per layer, by measuring both halves of the tradeoff:
+//!
+//! * [`error`] — per-layer numerical-error analysis: every candidate
+//!   format's GEMM runs through the bit-exact `arith` reduction
+//!   semantics (quantized inputs, wide accumulation, one South-edge
+//!   rounding) and is scored against the unquantized f64 oracle —
+//!   peak-normalized L∞/mean error, ULP distance, overflow/NaN counts,
+//!   and FP8-E4M3 saturation events tracked separately;
+//! * [`plan`] — the per-layer format search: candidates are walked
+//!   cheapest-modeled-energy first (the existing `energy`/`timing`
+//!   models cost each format's chain at the layer's shape), greedily
+//!   accepting the first format inside the per-layer error budget and
+//!   backtracking on violations, with an explicitly-flagged FP32
+//!   fallback; plus the uniform-plan Pareto study behind the
+//!   `skewsa precision` report tables.
+//!
+//! Downstream, a [`PrecisionPlan`] deploys through the serving stack:
+//! [`crate::workloads::serving::WeightStore::from_plan`] registers each
+//! layer in its planned format, and the serve-layer plan cache already
+//! keys on `FpFormat`, so mixed-precision traffic rides the existing
+//! per-tile memoisation unchanged.
+
+pub mod error;
+pub mod plan;
+
+pub use error::{
+    analyze_layer, chain_for, quantize_oracle, ulp_distance, AnalysisConfig, ErrorStats,
+    FormatAnalysis,
+};
+pub use plan::{
+    layer_format_energy, plan_layers, uniform_plan, LayerPlan, PlannerConfig, PrecisionPlan,
+    PrecisionStudy,
+};

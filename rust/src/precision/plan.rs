@@ -1,0 +1,391 @@
+//! Per-layer format assignment: greedy-by-energy search under an error
+//! budget, and the uniform-plan Pareto study behind `skewsa precision`.
+//!
+//! The planner answers the question the paper leaves to the designer:
+//! *which* reduced-precision format should each layer run in?  Energy is
+//! costed with the existing block-level models (a format's multiplier,
+//! window and register widths set the PE area, hence power, hence
+//! energy at the layer's closed-form latency); quality is costed with
+//! the [`crate::precision::error`] analysis against the f64 oracle.
+//!
+//! **Search.**  For each layer the candidates are ordered by modeled
+//! energy, cheapest first, and the planner walks that order greedily:
+//! the first format whose measured error fits the per-layer budget
+//! wins.  A budget violation *backtracks* to the next-cheapest
+//! candidate, and when every candidate is over budget the layer falls
+//! back to FP32 (flagged `within_budget = false` rather than silently
+//! accepted — a zero budget therefore plans all-FP32, the most exact
+//! datapath on offer, and an infinite budget plans the cheapest format
+//! everywhere).  Error analyses run lazily along the walk, so a
+//! permissive budget never pays for the formats it skipped.
+//!
+//! Per-layer budgets make the greedy walk exact (layers are
+//! independent: the serving deployment quantizes each layer's weights
+//! separately and re-quantizes activations at layer boundaries), so
+//! backtracking never crosses layers.
+
+use super::error::{analyze_layer, chain_for, AnalysisConfig, ErrorStats};
+use crate::arith::format::FpFormat;
+use crate::energy::{layer_energy, AreaModel, PowerModel};
+use crate::pe::PipelineKind;
+use crate::sa::tile::{GemmShape, TilePlan};
+use crate::timing::model::TimingConfig;
+use crate::workloads::layer::LayerDef;
+
+/// Planner knobs: the quality budget, the hardware point to cost
+/// against, and the analysis sweep size.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Per-layer error budget (peak-normalized L∞, see
+    /// [`crate::precision::error`]); `f64::INFINITY` disables the
+    /// quality constraint.
+    pub budget: f64,
+    /// Pipeline organisation to cost (energy and cycles).
+    pub kind: PipelineKind,
+    /// Candidate input formats (the planner appends FP32 as the
+    /// fallback if it is missing).
+    pub candidates: Vec<FpFormat>,
+    pub analysis: AnalysisConfig,
+    pub tcfg: TimingConfig,
+}
+
+impl PlannerConfig {
+    /// Paper-point defaults: all five formats, skewed pipeline, the
+    /// §IV 128×128 @ 1 GHz array, and a 1% error budget.
+    pub fn paper(budget: f64) -> PlannerConfig {
+        PlannerConfig {
+            budget,
+            kind: PipelineKind::Skewed,
+            candidates: FpFormat::ALL.to_vec(),
+            analysis: AnalysisConfig::default(),
+            tcfg: TimingConfig::PAPER,
+        }
+    }
+}
+
+/// One layer's assignment in a [`PrecisionPlan`].
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub layer: String,
+    pub shape: GemmShape,
+    /// The chosen input format (accumulation format follows
+    /// [`chain_for`]).
+    pub fmt: FpFormat,
+    pub stats: ErrorStats,
+    /// Modeled layer energy under `fmt` (µJ).
+    pub energy_uj: f64,
+    /// Layer latency in cycles (shape- and kind-dependent only —
+    /// identical across formats, which is what makes energy the
+    /// format-sensitive axis).
+    pub cycles: u64,
+    /// `false` when the layer fell back to FP32 over budget.
+    pub within_budget: bool,
+}
+
+/// A per-layer format assignment for a network.
+#[derive(Clone, Debug)]
+pub struct PrecisionPlan {
+    /// Human-readable plan label (`"mixed"` or a uniform format name).
+    pub label: String,
+    pub budget: f64,
+    pub kind: PipelineKind,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl PrecisionPlan {
+    /// Total modeled energy of the plan (µJ).
+    pub fn total_energy_uj(&self) -> f64 {
+        self.layers.iter().map(|l| l.energy_uj).sum()
+    }
+
+    /// Total latency (cycles; format-independent).
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    /// The plan's worst per-layer error (budget metric).
+    pub fn worst_rel(&self) -> f64 {
+        self.layers.iter().map(|l| l.stats.worst()).fold(0.0, f64::max)
+    }
+
+    /// Whether every layer met its budget (no FP32 fallbacks forced).
+    pub fn meets_budget(&self) -> bool {
+        self.layers.iter().all(|l| l.within_budget)
+    }
+
+    /// Layer count per chosen format, in [`FpFormat::ALL`] order.
+    pub fn format_histogram(&self) -> Vec<(FpFormat, usize)> {
+        FpFormat::ALL
+            .iter()
+            .map(|&f| (f, self.layers.iter().filter(|l| l.fmt == f).count()))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+}
+
+/// Modeled energy of one layer under one input format: the format sets
+/// the chain (multiplier/window/register widths → area → power), the
+/// shape sets the latency; energy composes the two exactly as the
+/// Figs. 7/8 pipeline-comparison path does.
+pub fn layer_format_energy(
+    tcfg: &TimingConfig,
+    kind: PipelineKind,
+    fmt: FpFormat,
+    shape: GemmShape,
+) -> (f64, u64) {
+    let pmodel = PowerModel::new(AreaModel::new(chain_for(fmt)));
+    let plan = TilePlan::new(shape, tcfg.rows, tcfg.cols);
+    let e = layer_energy(tcfg, &pmodel, kind, &plan);
+    (e.energy_uj, e.timing.cycles)
+}
+
+/// The configured candidate list with the FP32 fallback guaranteed in.
+fn candidates_with_fp32(cfg: &PlannerConfig) -> Vec<FpFormat> {
+    let mut candidates = cfg.candidates.clone();
+    if !candidates.contains(&FpFormat::FP32) {
+        candidates.push(FpFormat::FP32);
+    }
+    candidates
+}
+
+/// The error-statistics source a plan builds from: `(layer index,
+/// layer, format) → stats`.  [`plan_layers`]/[`uniform_plan`] analyze
+/// on demand; [`PrecisionStudy::run`] memoises so the mixed plan and
+/// the uniform plans share one analysis per (layer, format).
+type StatsOf = dyn FnMut(usize, &LayerDef, FpFormat) -> ErrorStats;
+
+fn plan_with(layers: &[LayerDef], cfg: &PlannerConfig, stats_of: &mut StatsOf) -> PrecisionPlan {
+    let candidates = candidates_with_fp32(cfg);
+    let assignments = layers
+        .iter()
+        .enumerate()
+        .map(|(li, layer)| {
+            let shape = layer.gemm();
+            // Cheapest-first walk order for this layer.
+            let mut costed: Vec<(FpFormat, f64, u64)> = candidates
+                .iter()
+                .map(|&f| {
+                    let (uj, cyc) = layer_format_energy(&cfg.tcfg, cfg.kind, f, shape);
+                    (f, uj, cyc)
+                })
+                .collect();
+            costed.sort_by(|a, b| a.1.total_cmp(&b.1));
+            let mut fallback = None;
+            let mut chosen = None;
+            for &(f, uj, cyc) in &costed {
+                let stats = stats_of(li, layer, f);
+                if f == FpFormat::FP32 {
+                    fallback = Some((f, uj, cyc, stats));
+                }
+                if stats.meets(cfg.budget) {
+                    chosen = Some((f, uj, cyc, stats, true));
+                    break;
+                }
+                // Over budget: backtrack to the next-cheapest candidate.
+            }
+            let (f, uj, cyc, stats, within) = chosen.unwrap_or_else(|| {
+                // Every candidate busted the budget; FP32 was analyzed on
+                // the walk (it is always a candidate) — take it, flagged.
+                let (f, uj, cyc, stats) = fallback.expect("FP32 is always walked");
+                (f, uj, cyc, stats, false)
+            });
+            LayerPlan {
+                layer: layer.name.clone(),
+                shape,
+                fmt: f,
+                stats,
+                energy_uj: uj,
+                cycles: cyc,
+                within_budget: within,
+            }
+        })
+        .collect();
+    PrecisionPlan {
+        label: "mixed".into(),
+        budget: cfg.budget,
+        kind: cfg.kind,
+        layers: assignments,
+    }
+}
+
+fn uniform_with(
+    layers: &[LayerDef],
+    fmt: FpFormat,
+    cfg: &PlannerConfig,
+    stats_of: &mut StatsOf,
+) -> PrecisionPlan {
+    let assignments = layers
+        .iter()
+        .enumerate()
+        .map(|(li, layer)| {
+            let shape = layer.gemm();
+            let (uj, cyc) = layer_format_energy(&cfg.tcfg, cfg.kind, fmt, shape);
+            let stats = stats_of(li, layer, fmt);
+            LayerPlan {
+                layer: layer.name.clone(),
+                shape,
+                fmt,
+                stats,
+                energy_uj: uj,
+                cycles: cyc,
+                within_budget: stats.meets(cfg.budget),
+            }
+        })
+        .collect();
+    PrecisionPlan {
+        label: fmt.display_name().to_string(),
+        budget: cfg.budget,
+        kind: cfg.kind,
+        layers: assignments,
+    }
+}
+
+/// Plan one network: per-layer greedy-by-energy with backtracking.
+/// Error analyses run lazily along the walk, so a permissive budget
+/// never pays for the formats it skipped.
+pub fn plan_layers(layers: &[LayerDef], cfg: &PlannerConfig) -> PrecisionPlan {
+    plan_with(layers, cfg, &mut |_, layer, f| analyze_layer(layer, f, &cfg.analysis).stats)
+}
+
+/// A uniform (single-format) plan: the Pareto baseline points.
+pub fn uniform_plan(layers: &[LayerDef], fmt: FpFormat, cfg: &PlannerConfig) -> PrecisionPlan {
+    uniform_with(layers, fmt, cfg, &mut |_, layer, f| {
+        analyze_layer(layer, f, &cfg.analysis).stats
+    })
+}
+
+/// The full study behind the `skewsa precision` reports: the budgeted
+/// mixed plan plus every uniform candidate plan (the quality-vs-energy
+/// Pareto frontier the designer actually chooses from).
+#[derive(Clone, Debug)]
+pub struct PrecisionStudy {
+    pub mixed: PrecisionPlan,
+    pub uniform: Vec<PrecisionPlan>,
+}
+
+impl PrecisionStudy {
+    /// Build the mixed plan and every uniform plan from **one** error
+    /// analysis per (layer, format): the uniform plans need the full
+    /// matrix anyway, so the mixed plan's walk shares it through a memo
+    /// instead of re-running the oracle sweeps (the study's dominant
+    /// cost) a second time.
+    pub fn run(layers: &[LayerDef], cfg: &PlannerConfig) -> PrecisionStudy {
+        let candidates = candidates_with_fp32(cfg);
+        let mut memo: std::collections::HashMap<(usize, FpFormat), ErrorStats> =
+            std::collections::HashMap::new();
+        let mut stats_of = |li: usize, layer: &LayerDef, f: FpFormat| {
+            *memo
+                .entry((li, f))
+                .or_insert_with(|| analyze_layer(layer, f, &cfg.analysis).stats)
+        };
+        let mixed = plan_with(layers, cfg, &mut stats_of);
+        let uniform = candidates
+            .iter()
+            .map(|&f| uniform_with(layers, f, cfg, &mut stats_of))
+            .collect();
+        PrecisionStudy { mixed, uniform }
+    }
+
+    /// All plans, mixed first, as `(label, plan)` rows.
+    pub fn plans(&self) -> Vec<&PrecisionPlan> {
+        std::iter::once(&self.mixed).chain(self.uniform.iter()).collect()
+    }
+
+    /// Whether a plan is Pareto-efficient within this study: no other
+    /// plan has both (weakly) lower worst-error and (weakly) lower
+    /// energy, with at least one strict.
+    pub fn is_pareto(&self, plan: &PrecisionPlan) -> bool {
+        let (e, q) = (plan.total_energy_uj(), plan.worst_rel());
+        !self.plans().iter().any(|other| {
+            let (oe, oq) = (other.total_energy_uj(), other.worst_rel());
+            (oe <= e && oq <= q) && (oe < e || oq < q)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(budget: f64) -> PlannerConfig {
+        PlannerConfig {
+            budget,
+            kind: PipelineKind::Skewed,
+            candidates: FpFormat::ALL.to_vec(),
+            analysis: AnalysisConfig { m_cap: 3, n_cap: 4, seed: 7 },
+            tcfg: TimingConfig { rows: 16, cols: 16, clock_ghz: 1.0, double_buffer: true },
+        }
+    }
+
+    fn tiny_layers() -> Vec<LayerDef> {
+        vec![LayerDef::conv("c1", 8, 3, 1, 8, 8), LayerDef::dw("d1", 8, 3, 1, 8)]
+    }
+
+    #[test]
+    fn zero_budget_plans_fp32_everywhere() {
+        let plan = plan_layers(&tiny_layers(), &small_cfg(0.0));
+        assert!(plan.layers.iter().all(|l| l.fmt == FpFormat::FP32));
+        // Even FP32 quantizes inputs, so a zero budget is unmeetable and
+        // the fallback is flagged.
+        assert!(!plan.meets_budget());
+    }
+
+    #[test]
+    fn infinite_budget_plans_the_cheapest_format_everywhere() {
+        let cfg = small_cfg(f64::INFINITY);
+        let plan = plan_layers(&tiny_layers(), &cfg);
+        for l in &plan.layers {
+            let cheapest = FpFormat::ALL
+                .iter()
+                .map(|&f| (f, layer_format_energy(&cfg.tcfg, cfg.kind, f, l.shape).0))
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .unwrap()
+                .0;
+            assert_eq!(l.fmt, cheapest, "{}", l.layer);
+            assert!(l.within_budget);
+        }
+        assert!(plan.meets_budget());
+    }
+
+    #[test]
+    fn energy_orders_formats_by_width() {
+        let shape = GemmShape::new(32, 64, 32);
+        let t = TimingConfig::PAPER;
+        let e = |f| layer_format_energy(&t, PipelineKind::Skewed, f, shape).0;
+        assert!(e(FpFormat::FP8E5M2) < e(FpFormat::BF16));
+        assert!(e(FpFormat::BF16) < e(FpFormat::FP32));
+        assert!(e(FpFormat::FP16) < e(FpFormat::FP32));
+        // Cycles are format-independent.
+        let c = |f| layer_format_energy(&t, PipelineKind::Skewed, f, shape).1;
+        assert_eq!(c(FpFormat::FP32), c(FpFormat::FP8E4M3));
+    }
+
+    #[test]
+    fn moderate_budget_mixes_and_meets() {
+        let cfg = small_cfg(2e-2);
+        let plan = plan_layers(&tiny_layers(), &cfg);
+        assert!(plan.meets_budget());
+        for l in &plan.layers {
+            assert!(l.stats.meets(cfg.budget), "{}: {}", l.layer, l.stats.worst());
+            assert_ne!(l.fmt, FpFormat::FP32, "a 2% budget should admit a reduced format");
+        }
+        assert!(plan.worst_rel() <= cfg.budget);
+    }
+
+    #[test]
+    fn study_pareto_contains_the_extremes() {
+        let cfg = small_cfg(1e-2);
+        let study = PrecisionStudy::run(&tiny_layers(), &cfg);
+        assert_eq!(study.uniform.len(), FpFormat::ALL.len());
+        // The cheapest plan and the most exact plan are always Pareto
+        // members (nothing can dominate an extreme point).
+        let cheapest = study
+            .plans()
+            .into_iter()
+            .min_by(|a, b| a.total_energy_uj().total_cmp(&b.total_energy_uj()))
+            .unwrap();
+        assert!(study.is_pareto(cheapest));
+        let histogram: usize = study.mixed.format_histogram().iter().map(|&(_, n)| n).sum();
+        assert_eq!(histogram, study.mixed.layers.len());
+    }
+}

@@ -115,7 +115,11 @@ pub fn table1_area_power(chain: ChainCfg, rows: usize, cols: usize) -> Report {
         pct(area.overhead(rows, cols)),
         pct(power.overhead(rows, cols, 0.7)),
     ]);
-    Report { title: "Table: area & power (paper §IV: +9% area, +7% power)".into(), table, totals: None }
+    Report {
+        title: "Table: area & power (paper §IV: +9% area, +7% power)".into(),
+        table,
+        totals: None,
+    }
 }
 
 /// §I/§IV headline: whole-network latency/energy deltas.
@@ -186,7 +190,11 @@ pub fn ablation_pipelines(chain: ChainCfg, tcfg: &TimingConfig) -> Report {
             tile.to_string(),
         ]);
     }
-    Report { title: "Ablation: pipeline organisations (Fig. 3a / 3b / skewed)".into(), table, totals: None }
+    Report {
+        title: "Ablation: pipeline organisations (Fig. 3a / 3b / skewed)".into(),
+        table,
+        totals: None,
+    }
 }
 
 /// Format sweep (Fig. 1 context): delay profile inversion across formats.
@@ -212,7 +220,7 @@ pub fn format_sweep() -> Report {
         let b = crate::pe::delay::BlockDelays::for_cfg(&chain);
         let inverted = b.exp_compute + b.align > b.mult;
         table.row(&[
-            f.name.to_string(),
+            f.display_name().to_string(),
             f.exp_bits.to_string(),
             f.man_bits.to_string(),
             fnum(b.mult, 1),
@@ -261,7 +269,7 @@ pub fn design_sweep(clock_ghz: f64) -> Report {
                 }
                 table.row(&[
                     format!("{r}x{r}"),
-                    format!("{}->{}", inf.name, outf.name),
+                    format!("{}->{}", inf.display_name(), outf.display_name()),
                     net.to_string(),
                     pct(tot.latency_delta()),
                     pct(tot.energy_delta()),
@@ -271,6 +279,109 @@ pub fn design_sweep(clock_ghz: f64) -> Report {
         }
     }
     Report { title: "Design-space sweep: array size × format".into(), table, totals: None }
+}
+
+/// Scientific-notation cell for error magnitudes (`inf` when a plan
+/// overflowed/saturated — the unmeetable-budget marker).
+fn sci(x: f64) -> String {
+    if x.is_infinite() {
+        "inf".into()
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+/// Per-layer mixed-precision plan (DESIGN.md §12): the format the
+/// planner assigned each layer, its measured error against the f64
+/// oracle, and its modeled energy.  Rendered by `skewsa precision`.
+pub fn precision_per_layer(net: &str, study: &crate::precision::PrecisionStudy) -> Report {
+    let plan = &study.mixed;
+    let mut table = Table::new(&[
+        "layer",
+        "M",
+        "K",
+        "N",
+        "format",
+        "max-rel",
+        "mean-rel",
+        "max-ULP",
+        "sat",
+        "E(uJ)",
+        "in-budget",
+    ])
+    .numeric();
+    for l in &plan.layers {
+        table.row(&[
+            l.layer.clone(),
+            l.shape.m.to_string(),
+            l.shape.k.to_string(),
+            l.shape.n.to_string(),
+            l.fmt.display_name().to_string(),
+            sci(l.stats.max_rel),
+            sci(l.stats.mean_rel),
+            l.stats.max_ulp.to_string(),
+            l.stats.sat_events.to_string(),
+            fnum(l.energy_uj, 2),
+            if l.within_budget { "yes".into() } else { "NO (fp32 fallback)".into() },
+        ]);
+    }
+    Report {
+        title: format!(
+            "Precision plan: {net} ({}, budget {:.1e}, {} layers)",
+            plan.kind.name(),
+            plan.budget,
+            plan.layers.len()
+        ),
+        table,
+        totals: None,
+    }
+}
+
+/// Quality-vs-energy-vs-latency Pareto table (DESIGN.md §12): the
+/// budgeted mixed plan against every uniform-format plan, with energy
+/// deltas versus the all-FP32 baseline and Pareto-efficiency markers.
+pub fn precision_pareto(net: &str, study: &crate::precision::PrecisionStudy) -> Report {
+    use crate::arith::format::FpFormat;
+    let fp32_energy = study
+        .uniform
+        .iter()
+        .find(|p| p.label == FpFormat::FP32.display_name())
+        .map(|p| p.total_energy_uj())
+        .unwrap_or(f64::NAN);
+    let mut table = Table::new(&[
+        "plan",
+        "formats",
+        "worst-rel",
+        "E(uJ)",
+        "E-vs-FP32",
+        "cycles",
+        "meets-budget",
+        "pareto",
+    ])
+    .numeric();
+    for plan in study.plans() {
+        let formats = plan
+            .format_histogram()
+            .iter()
+            .map(|(f, n)| format!("{}x{}", n, f.display_name()))
+            .collect::<Vec<_>>()
+            .join("+");
+        table.row(&[
+            plan.label.clone(),
+            formats,
+            sci(plan.worst_rel()),
+            fnum(plan.total_energy_uj(), 1),
+            pct(plan.total_energy_uj() / fp32_energy - 1.0),
+            plan.total_cycles().to_string(),
+            if plan.meets_budget() { "yes".into() } else { "no".into() },
+            if study.is_pareto(plan) { "*".into() } else { "".into() },
+        ]);
+    }
+    Report {
+        title: format!("Precision Pareto: {net} — quality vs energy vs latency"),
+        table,
+        totals: None,
+    }
 }
 
 /// Serving summary: latency percentiles, throughput, batching and
@@ -383,10 +494,13 @@ mod tests {
     #[test]
     fn format_sweep_inversion_pattern() {
         let text = format_sweep().render();
-        let fp32_row = text.lines().find(|l| l.contains("fp32")).unwrap();
+        // Canonical display names (FpFormat::display_name) everywhere.
+        let fp32_row = text.lines().find(|l| l.contains("FP32")).unwrap();
         assert!(fp32_row.ends_with("no"));
-        let bf16_row = text.lines().find(|l| l.contains("bf16")).unwrap();
+        let bf16_row = text.lines().find(|l| l.contains("BF16")).unwrap();
         assert!(bf16_row.ends_with("yes"));
+        assert!(text.contains("FP8-E4M3"), "canonical FP8 spelling: {text}");
+        assert!(!text.contains("fp8e4m3"), "machine names must not leak into tables");
     }
 
     #[test]
@@ -398,12 +512,37 @@ mod tests {
         let extract = |needle: &str| -> f64 {
             let row = text
                 .lines()
-                .find(|l| l.contains(needle) && l.contains("resnet50") && l.contains("bf16"))
+                .find(|l| l.contains(needle) && l.contains("resnet50") && l.contains("BF16"))
                 .unwrap();
             let cell = row.split_whitespace().nth(4).unwrap();
             cell.trim_end_matches('%').parse::<f64>().unwrap()
         };
         assert!(extract("256x256") < extract("64x64"));
+    }
+
+    #[test]
+    fn precision_reports_render_plan_and_pareto() {
+        use crate::arith::format::FpFormat;
+        use crate::precision::{AnalysisConfig, PlannerConfig, PrecisionStudy};
+        let layers = vec![LayerDef::conv("c1", 8, 3, 1, 8, 8), LayerDef::fc("f1", 32, 16)];
+        let cfg = PlannerConfig {
+            budget: 1e-2,
+            kind: PipelineKind::Skewed,
+            candidates: FpFormat::ALL.to_vec(),
+            analysis: AnalysisConfig { m_cap: 2, n_cap: 3, seed: 0 },
+            tcfg: TimingConfig { rows: 16, cols: 16, clock_ghz: 1.0, double_buffer: true },
+        };
+        let study = PrecisionStudy::run(&layers, &cfg);
+        let per = precision_per_layer("tiny", &study);
+        assert_eq!(per.table.n_rows(), 2);
+        assert!(per.render().contains("budget"));
+        let pareto = precision_pareto("tiny", &study);
+        // Mixed plan + one row per candidate format.
+        assert_eq!(pareto.table.n_rows(), 1 + FpFormat::ALL.len());
+        let text = pareto.render();
+        assert!(text.contains("mixed"));
+        assert!(text.contains("FP8-E4M3"), "canonical names in the pareto table: {text}");
+        assert!(text.contains("+0.0%"), "the FP32 row is its own energy baseline: {text}");
     }
 
     #[test]

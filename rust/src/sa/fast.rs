@@ -46,6 +46,24 @@
 //! `Timeout` rather than silent corruption, and callers additionally
 //! cross-check the closed-form timing model via
 //! [`FastArraySim::latency_matches_schedule`].
+//!
+//! Simulating one weight tile end-to-end:
+//!
+//! ```
+//! use skewsa::arith::fma::ChainCfg;
+//! use skewsa::pe::PipelineKind;
+//! use skewsa::sa::fast::FastArraySim;
+//!
+//! let chain = ChainCfg::BF16_FP32;
+//! let bf = |x: f64| chain.in_fmt.from_f64(x);
+//! let w = vec![vec![bf(1.0), bf(2.0)], vec![bf(3.0), bf(4.0)]]; // w[k][n]
+//! let a = vec![vec![bf(1.0), bf(1.0)]];                         // a[m][k]
+//! let mut sim = FastArraySim::new(chain, PipelineKind::Skewed, &w, &a);
+//! let budget = sim.schedule().total_cycles() + 16;
+//! sim.run_parallel(budget, 1).unwrap();
+//! assert_eq!(sim.result_f32(), vec![vec![4.0, 6.0]]);
+//! assert!(sim.latency_matches_schedule());
+//! ```
 
 use crate::arith::accum::{ColumnOracle, RoundingUnit};
 use crate::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};

@@ -11,6 +11,11 @@
 //! The contract the property tests pin down: a cache *hit* is
 //! structurally identical to a freshly built plan — caching can never
 //! change what runs.
+//!
+//! Because `FpFormat` is part of the key, mixed-precision serving
+//! (DESIGN.md §12: a [`crate::precision::PrecisionPlan`] deployed via
+//! `WeightStore::from_plan`) needs no cache changes — each layer's
+//! chosen format memoises its own tile plans alongside the others.
 
 use crate::arith::format::FpFormat;
 use crate::pe::PipelineKind;

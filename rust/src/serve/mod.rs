@@ -25,6 +25,32 @@
 //! * [`metrics`] — p50/p95/p99 latency + throughput recording;
 //! * [`loadgen`] — the closed-loop load generator behind
 //!   `skewsa serve` and `bench_serve`.
+//!
+//! Mixed-precision plans (DESIGN.md §12) deploy through this stack
+//! unchanged: [`crate::workloads::serving::WeightStore::from_plan`]
+//! registers each layer in its planned format, requests inherit the
+//! model's format, and the plan cache — keyed on `FpFormat` — memoises
+//! each precision's tile plans separately.
+//!
+//! End-to-end shape of the API:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use skewsa::config::{RunConfig, ServeConfig};
+//! use skewsa::serve::{DeadlineClass, Server};
+//! use skewsa::workloads::{mobilenet, serving::WeightStore};
+//! use skewsa::{FpFormat, PipelineKind};
+//!
+//! let mut run = RunConfig::small();
+//! run.verify_fraction = 0.0;
+//! let store = Arc::new(WeightStore::from_layers(
+//!     &mobilenet::layers()[..2], FpFormat::BF16, 16, 8));
+//! let server = Server::start(&run, &ServeConfig::small(), Arc::clone(&store));
+//! let a = store.gen_activations(0, 2, &mut skewsa::util::rng::Rng::new(1));
+//! let reply = server.submit(0, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+//! let resp = reply.recv().unwrap();
+//! assert_eq!(resp.y.len(), 2 * store.get(0).n);
+//! ```
 
 pub mod batcher;
 pub mod cache;

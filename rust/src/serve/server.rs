@@ -115,6 +115,31 @@ impl Server {
         fault: FaultPlan,
     ) -> Server {
         assert!(!store.is_empty(), "serving needs at least one model");
+        // Serving accumulates every batch into `run.out_fmt`, while a
+        // plan-deployed store (`WeightStore::from_plan`) certified its
+        // error budgets under each format's canonical chain
+        // (`precision::chain_for`).  For those stores — and only those:
+        // a plain `from_layers` store never certified anything — require
+        // the serving accumulator to be at least as wide as every
+        // model's certified accumulation format.  This is the
+        // *necessary* condition for the certified budgets to transfer
+        // (a narrower accumulator invalidates them outright); the
+        // budgets themselves are statistical — measured on seeded
+        // draws of the full layer shape, not on the store's possibly
+        // K/N-clamped weights (see `WeightStore::from_plan`).
+        if store.is_planned() {
+            for id in 0..store.len() {
+                let certified = crate::precision::chain_for(store.get(id).fmt).out_fmt;
+                assert!(
+                    run.out_fmt.man_bits >= certified.man_bits
+                        && run.out_fmt.exp_bits >= certified.exp_bits,
+                    "serving out_fmt {} is narrower than model {id}'s certified \
+                     accumulation format {}",
+                    run.out_fmt.name,
+                    certified.name
+                );
+            }
+        }
         let queue = Arc::new(RequestQueue::new(serve.queue_cap));
         let cache = Arc::new(PlanCache::new(serve.plan_cache_cap));
         let shards = Arc::new(ShardPool::with_fault(
@@ -247,6 +272,60 @@ mod tests {
             let resp = rx.recv().expect("accepted request must be served");
             assert!(!resp.y.is_empty());
         }
+    }
+
+    fn planned_store(fmt: FpFormat) -> WeightStore {
+        use crate::precision::{LayerPlan, PrecisionPlan};
+        let layers = &mobilenet::layers()[..1];
+        let plan = PrecisionPlan {
+            label: "mixed".into(),
+            budget: 1e-2,
+            kind: PipelineKind::Skewed,
+            layers: layers
+                .iter()
+                .map(|l| LayerPlan {
+                    layer: l.name.clone(),
+                    shape: l.gemm(),
+                    fmt,
+                    stats: Default::default(),
+                    energy_uj: 0.0,
+                    cycles: 0,
+                    within_budget: true,
+                })
+                .collect(),
+        };
+        WeightStore::from_plan(layers, &plan, 8, 8)
+    }
+
+    #[test]
+    #[should_panic(expected = "narrower")]
+    fn narrow_accumulator_rejected_for_plan_deployed_stores() {
+        // A plan certified BF16 layers under an FP32 accumulation
+        // chain; serving that plan into a BF16 accumulator must refuse.
+        let mut run = RunConfig::small();
+        run.out_fmt = FpFormat::BF16;
+        let store = Arc::new(planned_store(FpFormat::BF16));
+        let _ = Server::start(&run, &ServeConfig::small(), store);
+    }
+
+    #[test]
+    fn uncertified_stores_skip_the_accumulator_guard() {
+        // A plain from_layers store never certified a budget: the §12
+        // width guard must not reject configs that predate it.
+        let mut run = RunConfig::small();
+        run.verify_fraction = 0.0;
+        run.out_fmt = FpFormat::FP32;
+        let store = Arc::new(WeightStore::from_layers(
+            &mobilenet::layers()[..1],
+            FpFormat::BF16,
+            8,
+            8,
+        ));
+        assert!(!store.is_planned());
+        let _ = Server::start(&run, &ServeConfig::small(), store);
+        // And a planned store under a wide-enough accumulator starts.
+        let planned = Arc::new(planned_store(FpFormat::BF16));
+        let _ = Server::start(&run, &ServeConfig::small(), planned);
     }
 
     #[test]

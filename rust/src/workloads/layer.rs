@@ -12,8 +12,7 @@
 //!   `K = k_h·k_w`, `N = C` under the channel-per-column mapping (each
 //!   array column holds one channel's filter taps and receives that
 //!   channel's im2col stream — a West-edge-bandwidth-heavy but standard
-//!   way to keep depthwise work on a WS array; see DESIGN.md
-//!   §Depthwise-mapping);
+//!   way to keep depthwise work on a WS array; see DESIGN.md §13);
 //! * fully-connected → `M = batch`, `K = C_in`, `N = C_out`.
 
 use crate::arith::fma::ChainCfg;

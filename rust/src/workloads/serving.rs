@@ -49,6 +49,11 @@ pub struct ServingModel {
 #[derive(Clone, Debug)]
 pub struct WeightStore {
     models: Vec<ServingModel>,
+    /// `true` for stores built from a mixed-precision plan
+    /// ([`WeightStore::from_plan`]): the plan certified per-layer error
+    /// budgets under each format's canonical accumulation chain, and
+    /// the server enforces that certification at startup.
+    planned: bool,
 }
 
 impl WeightStore {
@@ -62,23 +67,69 @@ impl WeightStore {
         n_cap: usize,
     ) -> WeightStore {
         assert!(k_cap >= 1 && n_cap >= 1);
+        let models =
+            layers.iter().map(|l| Self::build_model(l, fmt, k_cap, n_cap)).collect();
+        WeightStore { models, planned: false }
+    }
+
+    /// Build a store from a mixed-precision plan: each layer registers
+    /// in the format the planner assigned it.  Requests then carry that
+    /// model's format implicitly, and the serve-layer plan cache —
+    /// already keyed on `FpFormat` — memoises each precision's tile
+    /// plans separately, so mixed-precision traffic rides the existing
+    /// per-tile cache unchanged (DESIGN.md §12).
+    ///
+    /// The plan certified each layer's error under its canonical
+    /// accumulation chain ([`crate::precision::chain_for`]) on seeded
+    /// master draws of the **full** layer GEMM; the server enforces at
+    /// startup the *necessary* half of that certification — its
+    /// accumulator must be at least as wide as every model's certified
+    /// one.  The budgets themselves transfer *statistically*: the
+    /// served weights are fresh draws from the same distribution
+    /// (He-scaled for the served depth), and with `k_cap`/`n_cap`
+    /// below the layer shape the served reduction is shallower than
+    /// the certified one — peak-normalized error is dominated by the
+    /// format's input roundoff, which is depth-insensitive, but a
+    /// clamped deployment is an approximation of the certified layer,
+    /// not a bit-level replay of it.
+    pub fn from_plan(
+        layers: &[LayerDef],
+        plan: &crate::precision::PrecisionPlan,
+        k_cap: usize,
+        n_cap: usize,
+    ) -> WeightStore {
+        assert!(k_cap >= 1 && n_cap >= 1);
+        assert_eq!(layers.len(), plan.layers.len(), "plan does not cover the layer table");
         let models = layers
             .iter()
-            .map(|l| {
-                let g = l.gemm();
-                let k = g.k.min(k_cap);
-                let n = g.n.min(n_cap);
-                let mut rng = Rng::new(layer_seed(&l.name));
-                let wstd = (2.0 / k as f64).sqrt();
-                let w = (0..k)
-                    .map(|_| {
-                        (0..n).map(|_| fmt.from_f64(rng.normal_scaled(0.0, wstd))).collect()
-                    })
-                    .collect();
-                ServingModel { name: l.name.clone(), fmt, k, n, w }
+            .zip(&plan.layers)
+            .map(|(l, lp)| {
+                assert_eq!(l.name, lp.layer, "plan/layer tables out of order");
+                Self::build_model(l, lp.fmt, k_cap, n_cap)
             })
             .collect();
-        WeightStore { models }
+        WeightStore { models, planned: true }
+    }
+
+    /// Whether this store was deployed from a mixed-precision plan
+    /// (and therefore carries certified error budgets to enforce).
+    pub fn is_planned(&self) -> bool {
+        self.planned
+    }
+
+    /// One layer's serving entry: weights drawn from the deterministic
+    /// name seed *before* format quantization, so every format of the
+    /// same layer quantizes the same underlying master weights.
+    fn build_model(l: &LayerDef, fmt: FpFormat, k_cap: usize, n_cap: usize) -> ServingModel {
+        let g = l.gemm();
+        let k = g.k.min(k_cap);
+        let n = g.n.min(n_cap);
+        let mut rng = Rng::new(layer_seed(&l.name));
+        let wstd = (2.0 / k as f64).sqrt();
+        let w = (0..k)
+            .map(|_| (0..n).map(|_| fmt.from_f64(rng.normal_scaled(0.0, wstd))).collect())
+            .collect();
+        ServingModel { name: l.name.clone(), fmt, k, n, w }
     }
 
     pub fn len(&self) -> usize {
@@ -115,6 +166,11 @@ impl WeightStore {
         a: &[Vec<u64>],
     ) -> Vec<u32> {
         let entry = self.get(model);
+        // The serve dispatcher derives each batch's chain from the
+        // *model's* format; mirror that here so mixed-precision stores
+        // (`from_plan`) reference the same chain the server ran.
+        let mut cfg = cfg.clone();
+        cfg.in_fmt = entry.fmt;
         let shape = GemmShape::new(a.len(), entry.k, entry.n);
         let data = Arc::new(GemmData {
             shape,
@@ -122,7 +178,7 @@ impl WeightStore {
             a: a.to_vec(),
             w: entry.w.clone(),
         });
-        let r = Coordinator::new(cfg.clone()).run_gemm(kind, &data);
+        let r = Coordinator::new(cfg).run_gemm(kind, &data);
         r.y.iter().map(|v| v.to_bits()).collect()
     }
 }
@@ -156,6 +212,39 @@ mod tests {
         }
         // Distinct layers get distinct weights.
         assert_ne!(a.get(1).w, a.get(2).w);
+    }
+
+    #[test]
+    fn from_plan_registers_per_layer_formats() {
+        use crate::precision::{LayerPlan, PrecisionPlan};
+        let layers = &mobilenet::layers()[..2];
+        let fmts = [FpFormat::BF16, FpFormat::FP8E5M2];
+        let plan = PrecisionPlan {
+            label: "mixed".into(),
+            budget: 1.0,
+            kind: PipelineKind::Skewed,
+            layers: layers
+                .iter()
+                .zip(fmts)
+                .map(|(l, fmt)| LayerPlan {
+                    layer: l.name.clone(),
+                    shape: l.gemm(),
+                    fmt,
+                    stats: Default::default(),
+                    energy_uj: 0.0,
+                    cycles: 0,
+                    within_budget: true,
+                })
+                .collect(),
+        };
+        let store = WeightStore::from_plan(layers, &plan, 16, 8);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(0).fmt, FpFormat::BF16);
+        assert_eq!(store.get(1).fmt, FpFormat::FP8E5M2);
+        // Same master weights, different quantization: the bf16 entry
+        // decodes to different bits than an fp8 build of layer 0 would.
+        let alt = WeightStore::from_layers(&layers[..1], FpFormat::FP8E5M2, 16, 8);
+        assert_ne!(store.get(0).w, alt.get(0).w);
     }
 
     #[test]

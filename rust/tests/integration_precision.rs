@@ -1,0 +1,161 @@
+//! Integration tests for the mixed-precision planner (DESIGN.md §12):
+//! budget-extreme behaviour, the paper-workload acceptance run (every
+//! planned layer meets its budget against the f64 oracle, and reduced-
+//! precision plans are strictly cheaper in modeled energy), and the
+//! serve-layer deployment of a mixed plan.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::config::{RunConfig, ServeConfig};
+use skewsa::pe::PipelineKind;
+use skewsa::precision::{
+    analyze_layer, layer_format_energy, plan_layers, AnalysisConfig, PlannerConfig,
+    PrecisionStudy,
+};
+use skewsa::serve::{DeadlineClass, Server};
+use skewsa::timing::model::TimingConfig;
+use skewsa::workloads::mobilenet;
+use skewsa::workloads::serving::WeightStore;
+use std::sync::Arc;
+
+fn planner_cfg(budget: f64) -> PlannerConfig {
+    PlannerConfig {
+        budget,
+        kind: PipelineKind::Skewed,
+        candidates: FpFormat::ALL.to_vec(),
+        // Small sampled slice (full K): keeps the debug-mode oracle
+        // sweep fast while still exercising every layer's real
+        // accumulation depth.
+        analysis: AnalysisConfig { m_cap: 4, n_cap: 4, seed: 0x5eed },
+        tcfg: TimingConfig::PAPER,
+    }
+}
+
+#[test]
+fn zero_budget_always_plans_fp32() {
+    let layers = mobilenet::layers();
+    let plan = plan_layers(&layers[..6], &planner_cfg(0.0));
+    for l in &plan.layers {
+        assert_eq!(l.fmt, FpFormat::FP32, "{}", l.layer);
+        assert!(!l.within_budget, "even FP32 quantizes inputs; zero budget is unmeetable");
+    }
+}
+
+#[test]
+fn infinite_budget_always_plans_the_cheapest_format() {
+    let cfg = planner_cfg(f64::INFINITY);
+    let layers = mobilenet::layers();
+    let plan = plan_layers(&layers[..6], &cfg);
+    for l in &plan.layers {
+        let cheapest = FpFormat::ALL
+            .iter()
+            .map(|&f| (f, layer_format_energy(&cfg.tcfg, cfg.kind, f, l.shape).0))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap()
+            .0;
+        assert_eq!(l.fmt, cheapest, "{}", l.layer);
+        assert!(l.within_budget);
+    }
+}
+
+/// The acceptance run: `skewsa precision --workload mobilenet
+/// --budget 1e-2` semantics — every layer of the emitted plan meets its
+/// error budget (re-measured here against the f64 oracle), and the
+/// reduced-precision uniform plans are strictly cheaper in modeled
+/// energy than all-FP32.
+#[test]
+fn mobilenet_budget_1e2_meets_budget_and_beats_fp32_energy() {
+    let cfg = planner_cfg(1e-2);
+    let layers = mobilenet::layers();
+    let study = PrecisionStudy::run(&layers, &cfg);
+    let plan = &study.mixed;
+    assert_eq!(plan.layers.len(), layers.len());
+    assert!(plan.meets_budget(), "worst {}", plan.worst_rel());
+    for (layer, lp) in layers.iter().zip(&plan.layers) {
+        // Independent re-measurement against the f64 oracle.
+        let again = analyze_layer(layer, lp.fmt, &cfg.analysis);
+        assert!(
+            again.stats.meets(cfg.budget),
+            "{} in {}: {} > {}",
+            lp.layer,
+            lp.fmt.display_name(),
+            again.stats.worst(),
+            cfg.budget
+        );
+        assert_eq!(again.stats.max_rel, lp.stats.max_rel, "analysis must be deterministic");
+    }
+    // A 1% budget must admit reduced precision somewhere (MobileNet's
+    // shallow depthwise layers are easy); all-FP32 would be a planner
+    // regression.
+    assert!(
+        plan.layers.iter().any(|l| l.fmt != FpFormat::FP32),
+        "1e-2 budget planned all-FP32"
+    );
+
+    // Pareto acceptance: BF16/FP8 uniform plans strictly cheaper in
+    // modeled energy than the all-FP32 plan, and the mixed plan never
+    // costs more than FP32.
+    let energy = |name: &str| {
+        study
+            .plans()
+            .into_iter()
+            .find(|p| p.label == name)
+            .map(|p| p.total_energy_uj())
+            .unwrap()
+    };
+    let fp32 = energy("FP32");
+    for reduced in ["BF16", "FP16", "FP8-E4M3", "FP8-E5M2"] {
+        assert!(energy(reduced) < fp32, "{reduced} must undercut FP32 ({fp32} uJ)");
+    }
+    assert!(energy("mixed") <= fp32);
+    assert!(energy("mixed") < fp32, "with reduced formats admitted, mixed must save energy");
+
+    // Latency is format-independent: every plan shows the same cycles.
+    let cycles: Vec<u64> = study.plans().iter().map(|p| p.total_cycles()).collect();
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "{cycles:?}");
+}
+
+/// Deploy a mixed-precision plan through the serving stack: each layer
+/// registers in its planned format, requests ride the format-keyed plan
+/// cache, and every served response stays bit-exact with a solo
+/// coordinator run of the same request under the same chain.
+#[test]
+fn mixed_plan_serves_bit_exact_per_layer_formats() {
+    let layers = &mobilenet::layers()[..3];
+    let mut cfg = planner_cfg(f64::INFINITY);
+    cfg.analysis.m_cap = 2;
+    cfg.analysis.n_cap = 2;
+    // Force a genuinely mixed assignment: plan under an infinite budget
+    // (cheapest formats), then pin distinct formats per layer.
+    let mut plan = plan_layers(layers, &cfg);
+    plan.layers[0].fmt = FpFormat::BF16;
+    plan.layers[1].fmt = FpFormat::FP8E5M2;
+    plan.layers[2].fmt = FpFormat::FP16;
+
+    let mut run = RunConfig::small();
+    run.verify_fraction = 0.0;
+    let store = Arc::new(WeightStore::from_plan(layers, &plan, 24, 16));
+    assert_eq!(store.get(0).fmt, FpFormat::BF16);
+    assert_eq!(store.get(1).fmt, FpFormat::FP8E5M2);
+    assert_eq!(store.get(2).fmt, FpFormat::FP16);
+
+    let server = Server::start(&run, &ServeConfig::small(), Arc::clone(&store));
+    let mut rng = skewsa::util::rng::Rng::new(42);
+    let mut pending = Vec::new();
+    for model in 0..3 {
+        for _ in 0..2 {
+            let a = store.gen_activations(model, 3, &mut rng);
+            let rx =
+                server.submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a.clone());
+            pending.push((model, a, rx));
+        }
+    }
+    for (model, a, rx) in pending {
+        let resp = rx.recv().expect("served");
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let want = store.solo_reference_bits(&run, model, PipelineKind::Skewed, &a);
+        assert_eq!(got, want, "model {model} served bits diverged from solo run");
+    }
+    let stats = server.stats();
+    // Three distinct formats (and shapes) cannot share cache entries.
+    assert!(stats.cache.misses >= 3, "{:?}", stats.cache);
+}

@@ -1,0 +1,93 @@
+//! Property suite for the precision subsystem (DESIGN.md §12):
+//! the error-analysis oracle path must agree bit-exactly with the
+//! format codec, and ULP distances must behave like a metric over the
+//! formats' value order.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::precision::{quantize_oracle, ulp_distance};
+use skewsa::util::prop::{Gen, Prop};
+
+/// A random f64 with a bounded exponent (inside the BigFixed window and
+/// spanning far past every format's overflow/underflow thresholds),
+/// plus occasional exact zeros.
+fn gen_f64(g: &mut Gen) -> f64 {
+    if g.chance(0.02) {
+        return if g.chance(0.5) { 0.0 } else { -0.0 };
+    }
+    let exp = g.i64_in(-320, 320) as i32;
+    let frac = g.bits(52);
+    let sign = if g.chance(0.5) { 1u64 } else { 0 };
+    f64::from_bits((sign << 63) | (((exp + 1023) as u64) << 52) | frac)
+}
+
+/// THE satellite property: `encode_rne` reached through the error
+/// analysis' exact-accumulator oracle path produces the same bits as
+/// [`FpFormat::from_f64`], for every format, across the full exponent
+/// range (underflow-to-zero, subnormals, normals, overflow-to-Inf and
+/// E4M3 overflow-saturation-to-NaN included).
+#[test]
+fn prop_quantize_oracle_matches_from_f64_all_formats() {
+    Prop::new("quantize-oracle-eq-codec", 2000).run(|g| {
+        let x = gen_f64(g);
+        for fmt in FpFormat::ALL {
+            let oracle = quantize_oracle(fmt, x);
+            let codec = fmt.from_f64(x);
+            g.assert_eq(fmt.display_name(), oracle, codec);
+        }
+    });
+}
+
+/// Same property, adversarially centred on each format's rounding
+/// boundaries: values a hair around representable midpoints, the
+/// overflow threshold, and the subnormal floor.
+#[test]
+fn prop_quantize_oracle_matches_codec_near_boundaries() {
+    Prop::new("quantize-oracle-boundaries", 800).run(|g| {
+        for fmt in FpFormat::ALL {
+            // A representable value, nudged by fractions of its ULP.
+            let bits = g.bits(fmt.width()) & fmt.mask();
+            let base = fmt.to_f64(bits);
+            if base.is_nan() {
+                continue;
+            }
+            let ulp = 2.0f64.powi(-(fmt.man_bits as i32));
+            let nudge = g.f64_in(-1.0, 1.0) * ulp * base.abs().max(1e-40);
+            let x = base + nudge;
+            g.assert_eq(fmt.display_name(), quantize_oracle(fmt, x), fmt.from_f64(x));
+            // Near the overflow cliff.
+            let (sig, e) = fmt.max_finite();
+            let max = sig as f64 * 2.0f64.powi(e - fmt.man_bits as i32);
+            let y = max * g.f64_in(0.95, 1.1);
+            g.assert_eq("overflow cliff", quantize_oracle(fmt, y), fmt.from_f64(y));
+        }
+    });
+}
+
+/// ULP distance is a metric consistent with the value order: for
+/// value-sorted a ≤ b ≤ c, d(a,c) = d(a,b) + d(b,c); and the distance
+/// between distinct representable values is ≥ 1.
+#[test]
+fn prop_ulp_distance_is_additive_along_the_value_order() {
+    Prop::new("ulp-additive", 1500).run(|g| {
+        let fmt = FpFormat::ALL[g.usize_in(0, FpFormat::ALL.len() - 1)];
+        let mut pats: Vec<u64> = (0..3)
+            .map(|_| loop {
+                let b = g.bits(fmt.width()) & fmt.mask();
+                if !fmt.to_f64(b).is_nan() {
+                    break b;
+                }
+            })
+            .collect();
+        pats.sort_by(|&x, &y| fmt.to_f64(x).total_cmp(&fmt.to_f64(y)));
+        let (a, b, c) = (pats[0], pats[1], pats[2]);
+        g.assert_eq(
+            "additivity",
+            ulp_distance(fmt, a, c),
+            ulp_distance(fmt, a, b) + ulp_distance(fmt, b, c),
+        );
+        g.assert_eq("symmetry", ulp_distance(fmt, a, c), ulp_distance(fmt, c, a));
+        if fmt.to_f64(a) != fmt.to_f64(b) {
+            g.assert("distinct values are >= 1 ULP apart", ulp_distance(fmt, a, b) >= 1);
+        }
+    });
+}
