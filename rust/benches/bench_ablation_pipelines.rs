@@ -1,5 +1,6 @@
-//! E5 — architecture ablation across the three pipeline organisations
-//! (Fig. 3a, Fig. 3b, skewed) and the four reduced-precision formats:
+//! E5 — architecture ablation across every registered pipeline
+//! organisation (see `skewsa pipelines`) and the four reduced-precision
+//! formats:
 //! stage delays / clock feasibility, column latency (cycle-accurate),
 //! and the design-choice ablations DESIGN.md calls out (double-buffered
 //! weight reloads, chain window width).
@@ -34,7 +35,12 @@ fn main() {
         let chain = ChainCfg::new(inf, outf);
         let r = 64;
         let mut base_cycles = 0u64;
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in [
+            PipelineKind::Baseline3b,
+            PipelineKind::Skewed,
+            PipelineKind::Transparent,
+            PipelineKind::Deep3,
+        ] {
             let weights: Vec<u64> = (0..r)
                 .map(|_| loop {
                     let b = rng.bits(inf.width());

@@ -124,6 +124,24 @@ fn main() {
     let fast32 = with_units(m, apes, "PE-cycles");
     record(&fast32, &mut tiers);
 
+    // All-kinds sweep: every registered pipeline organisation through
+    // the fast simulator on the same tile, so the registry's per-kind
+    // throughput trajectory lands in BENCH_hotpath.json (ISSUE 4).
+    for kind in PipelineKind::ALL {
+        let kcycles = {
+            let mut sim = FastArraySim::new(CFG, kind, &adata.w, &adata.a);
+            sim.run(1_000_000).unwrap();
+            assert!(sim.latency_matches_schedule(), "{kind} off-formula");
+            sim.cycles()
+        };
+        let m = measure(&format!("hot:fast-sim-32x32xM16-{}", kind.name()), 1, it(30), 5, || {
+            let mut sim = FastArraySim::new(CFG, kind, &adata.w, &adata.a);
+            sim.run(1_000_000).unwrap();
+            std::hint::black_box(sim.cycles());
+        });
+        record(&with_units(m, kcycles as f64 * (32.0 * 32.0), "PE-cycles"), &mut tiers);
+    }
+
     // Paper-scale 128×128 weight tile: the dense loop's practical limit
     // was ~64×64; the banded simulator runs it directly.
     let pdata = GemmData::cnn_like(GemmShape::new(32, 128, 128), FpFormat::BF16, 3);

@@ -56,7 +56,7 @@ fn main() {
     let layers = mobilenet::layers();
     let pcfg = PlannerConfig {
         budget,
-        kind: PipelineKind::Skewed,
+        kinds: vec![PipelineKind::Skewed],
         candidates: FpFormat::ALL.to_vec(),
         analysis: AnalysisConfig {
             m_cap: if smoke { 2 } else { 8 },

@@ -8,6 +8,7 @@
 use crate::arith::fma::ChainCfg;
 use crate::arith::format::FpFormat;
 use crate::coordinator::router::Policy;
+use crate::pe::PipelineKind;
 use crate::timing::model::TimingConfig;
 use crate::util::cli::Args;
 use crate::util::mini_json::Json;
@@ -43,6 +44,9 @@ pub struct RunConfig {
     pub workers: usize,
     /// Numeric evaluation mode.
     pub mode: NumericMode,
+    /// Default pipeline organisation (subcommands without an explicit
+    /// `--pipeline` run this one; the flag still overrides per run).
+    pub pipeline: PipelineKind,
     /// Bounded job-queue depth (backpressure).
     pub queue_depth: usize,
     /// RNG seed for workload generation.
@@ -64,6 +68,7 @@ impl RunConfig {
             double_buffer: true,
             workers: std::thread::available_parallelism().map_or(4, |n| n.get().min(16)),
             mode: NumericMode::Oracle,
+            pipeline: PipelineKind::Skewed,
             queue_depth: 64,
             seed: 0x5eed_2023,
             verify_fraction: 0.02,
@@ -140,6 +145,11 @@ impl RunConfig {
                 "cycle" => NumericMode::CycleAccurate,
                 _ => return Err(format!("unknown mode '{v}'")),
             };
+        }
+        if let Some(v) = j.get("pipeline").and_then(Json::as_str) {
+            // The registry parser's error already lists valid names and
+            // suggests the nearest one.
+            self.pipeline = v.parse()?;
         }
         Ok(())
     }
@@ -312,7 +322,8 @@ mod tests {
         let mut c = RunConfig::paper();
         let j = Json::parse(
             r#"{"rows": 16, "cols": 8, "in_fmt": "fp8e4m3", "out_fmt": "fp16",
-                "mode": "cycle", "workers": 3, "verify_fraction": 0.5}"#,
+                "mode": "cycle", "workers": 3, "verify_fraction": 0.5,
+                "pipeline": "deep3"}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -321,6 +332,16 @@ mod tests {
         assert_eq!(c.mode, NumericMode::CycleAccurate);
         assert_eq!(c.workers, 3);
         assert_eq!(c.verify_fraction, 0.5);
+        assert_eq!(c.pipeline, PipelineKind::Deep3);
+    }
+
+    #[test]
+    fn bad_pipeline_is_an_error_with_suggestion() {
+        let mut c = RunConfig::paper();
+        let j = Json::parse(r#"{"pipeline": "skewd"}"#).unwrap();
+        let err = c.apply_json(&j).unwrap_err();
+        assert!(err.contains("did you mean 'skewed'?"), "{err}");
+        assert_eq!(c.pipeline, PipelineKind::Skewed, "unchanged on error");
     }
 
     #[test]

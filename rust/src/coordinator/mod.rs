@@ -59,12 +59,19 @@ impl Coordinator {
     }
 
     /// Coordinate one GEMM with the given pipeline kind driving the
-    /// numeric workers; timing/energy are evaluated for *both* kinds
-    /// (the numerics are bit-identical between them by construction).
+    /// numeric workers; timing/energy compare the chosen organisation
+    /// against the Fig. 3(b) reference (the numerics are bit-identical
+    /// between all registered kinds by construction).
     pub fn run_gemm(&self, kind: PipelineKind, data: &Arc<GemmData>) -> GemmRunResult {
         let plan = TilePlan::new(data.shape, self.cfg.rows, self.cfg.cols);
         let outcome = Executor::new(self.cfg.clone(), kind).run(data, &plan);
-        let comparison = LayerComparison::evaluate(&self.cfg.timing(), &self.power, &plan);
+        let comparison = LayerComparison::evaluate_pair(
+            &self.cfg.timing(),
+            &self.power,
+            &plan,
+            PipelineKind::Baseline3b,
+            kind,
+        );
         let verify = if self.cfg.verify_fraction > 0.0 {
             verify_oracle_sampled(
                 &self.cfg.chain(),
@@ -123,5 +130,38 @@ mod tests {
         let bits_b: Vec<u32> = rb.y.iter().map(|v| v.to_bits()).collect();
         let bits_s: Vec<u32> = rs.y.iter().map(|v| v.to_bits()).collect();
         assert_eq!(bits_b, bits_s, "the paper's functional claim, end-to-end");
+    }
+
+    #[test]
+    fn registered_organisations_run_end_to_end() {
+        // The two related-work registrations drive the full coordinator
+        // path (cycle-accurate workers included) bit-identically to the
+        // baseline, with the comparison against Fig. 3(b) signed right.
+        let mut cfg = RunConfig::small();
+        cfg.mode = crate::config::NumericMode::CycleAccurate;
+        let coord = Coordinator::new(cfg);
+        let data = Arc::new(GemmData::cnn_like(
+            crate::sa::tile::GemmShape::new(5, 20, 9),
+            crate::arith::format::FpFormat::BF16,
+            11,
+        ));
+        let reference: Vec<u32> = coord
+            .run_gemm(PipelineKind::Baseline3b, &data)
+            .y
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        for kind in [PipelineKind::Transparent, PipelineKind::Deep3] {
+            let r = coord.run_gemm(kind, &data);
+            let bits: Vec<u32> = r.y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits, reference, "{kind}");
+            assert!(r.verify.ok(), "{kind}: {:?}", r.verify);
+        }
+        // Transparent is strictly faster than baseline; deep3 strictly
+        // slower (one fill cycle per tile).
+        let rt = coord.run_gemm(PipelineKind::Transparent, &data);
+        assert!(rt.comparison.latency_delta() < 0.0);
+        let rd = coord.run_gemm(PipelineKind::Deep3, &data);
+        assert!(rd.comparison.latency_delta() > 0.0);
     }
 }

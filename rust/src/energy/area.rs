@@ -4,16 +4,21 @@
 //! attributed to "the extra pipeline registers required ... to pass
 //! intermediate exponent and LZA output values across the two pipeline
 //! stages, and the extra combinational logic of the exponent fix
-//! module".  This model *counts* exactly those structures:
+//! module".  This model *counts* exactly those structures, and it
+//! counts them from the [`PipelineSpec`] descriptor rather than from
+//! per-kind `match` arms:
 //!
-//! * register bit inventories are enumerated from the datapath structs
-//!   (what physically crosses each stage boundary in
-//!   [`crate::arith::fma`]);
+//! * register bit inventories are enumerated from the spec's
+//!   stage-boundary [`RegField`](crate::pe::spec::RegField) list (what
+//!   physically crosses each boundary in [`crate::arith::fma`]);
 //! * combinational blocks use standard gate-count rules of thumb
-//!   (multiplier ∝ (m+1)², barrel shifter ∝ W·log₂W, adder/LZA ∝ W);
-//! * the skewed design replaces the baseline's post-add normalizer with
-//!   the Fig. 6 parallel left/right shifter pair on the psum path plus a
-//!   right-only aligner on the product path, and adds the fix block.
+//!   (multiplier ∝ (m+1)², barrel shifter ∝ W·log₂W, adder/LZA ∝ W),
+//!   weighted by the spec's per-stage block inventory — e.g. the skewed
+//!   spec counts the Fig. 6 parallel left/right shifter pair on the
+//!   psum path (1.2× one unit) plus the right-only product aligner,
+//!   and the fix block;
+//! * a deeper pipeline (e.g. the `deep3` registration) pays for its
+//!   extra boundary rank purely through its longer register inventory.
 //!
 //! Technology coefficients are calibrated once (documented in DESIGN.md
 //! §14) so the *ratios* between blocks match published
@@ -22,6 +27,7 @@
 //! assert the emergent ratio lands in the published range.
 
 use crate::arith::fma::ChainCfg;
+use crate::pe::spec::{clog2, Block, PipelineSpec};
 use crate::pe::PipelineKind;
 
 /// Gate-count coefficients (NAND2-equivalents).  See module docs.
@@ -59,10 +65,6 @@ impl AreaCoeffs {
     };
 }
 
-fn clog2(n: u32) -> f64 {
-    (n.max(2) as f64).log2().ceil()
-}
-
 /// Per-PE area breakdown in gate equivalents.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PeArea {
@@ -83,40 +85,12 @@ impl PeArea {
     }
 }
 
-/// Count the pipeline-register bits of one PE.
-///
-/// Shared: the East-flowing activation register and the stationary
-/// weight.  Stage-boundary contents follow the datapath structures:
-///
-/// * baseline s1→s2: raw product + sign, ê (computed max), alignment
-///   amount `d`; the incoming psum is read live from the predecessor's
-///   output register (it stays valid through this PE's stage 2).
-/// * baseline out: normalized sum (window) + sign + sticky + exponent.
-/// * skewed s1→s2: raw product + sign, **both** `e_M` and `ê_{i−1}`
-///   (paper: "e′_i ... comprises the two values e_Mi and ê_{i−1} that
-///   are being forwarded"), speculative `d′` (signed).
-/// * skewed out: **unnormalized** sum + sign + sticky + `ê_i` + `L_i`
-///   (the extra cross-PE forwarding the paper charges the area to).
+/// Count the pipeline-register bits of one PE: the shared East-flowing
+/// activation register and the stationary weight plus the spec's
+/// stage-boundary field inventory (see `pe/spec.rs` for the per-preset
+/// derivations from the datapath structures).
 pub fn register_bits(kind: PipelineKind, cfg: &ChainCfg) -> u32 {
-    let inw = cfg.in_fmt.width(); // activation register
-    let w = cfg.window;
-    let e = cfg.in_fmt.exp_bits + 2; // exponent with overflow headroom
-    let m2 = 2 * (cfg.in_fmt.man_bits + 1); // raw product
-    let shamt = clog2(w) as u32 + 1; // alignment amount
-    let common = inw + inw; // a-reg + weight
-    match kind {
-        PipelineKind::Regular3a | PipelineKind::Baseline3b => {
-            let s1 = m2 + 1 + e + shamt;
-            let out = w + 1 + 1 + e;
-            common + s1 + out
-        }
-        PipelineKind::Skewed => {
-            let s1 = m2 + 1 + e + e + (shamt + 1);
-            let l = clog2(w) as u32;
-            let out = w + 1 + 1 + e + l;
-            common + s1 + out
-        }
-    }
+    kind.spec().register_bits(cfg)
 }
 
 /// Area model for a chain configuration.
@@ -131,33 +105,29 @@ impl AreaModel {
         AreaModel { cfg, coeffs: AreaCoeffs::DEFAULT }
     }
 
-    /// Per-PE area breakdown for a pipeline kind.
+    /// Per-PE area breakdown for a registered pipeline kind.
     pub fn pe_area(&self, kind: PipelineKind) -> PeArea {
+        self.pe_area_spec(kind.spec())
+    }
+
+    /// Per-PE area breakdown from any spec: each block's unit gate
+    /// count, weighted by the spec's (area-scaled) inventory, plus the
+    /// register-bit inventory.
+    pub fn pe_area_spec(&self, spec: &PipelineSpec) -> PeArea {
         let c = &self.coeffs;
         let m1 = self.cfg.in_fmt.man_bits + 1;
         let e = self.cfg.in_fmt.exp_bits;
         let w = self.cfg.window;
         let shifter_unit = c.ksh * w as f64 * clog2(w);
-        let shifters = match kind {
-            // Fig. 3(a)/(b): one alignment shifter + one normalizer.
-            PipelineKind::Regular3a | PipelineKind::Baseline3b => 2.0 * shifter_unit,
-            // Fig. 6: psum path left ∥ right shifters (a direction-muxed
-            // pair sharing the shift-amount decode, ≈1.2× one unit) plus
-            // the right-only product aligner.
-            PipelineKind::Skewed => 2.2 * shifter_unit,
-        };
-        let fix = match kind {
-            PipelineKind::Skewed => c.kf * e as f64,
-            _ => 0.0,
-        };
         PeArea {
-            mult: c.km * (m1 * m1) as f64,
-            exp: c.ke * e as f64,
-            shifters,
-            add: c.ka * w as f64,
-            lza: c.kl * w as f64,
-            fix,
-            regs: c.kreg * register_bits(kind, &self.cfg) as f64,
+            mult: c.km * (m1 * m1) as f64 * spec.block_count(Block::Mult),
+            exp: c.ke * e as f64 * spec.block_count(Block::ExpCompute),
+            shifters: shifter_unit
+                * (spec.block_count(Block::Align) + spec.block_count(Block::Norm)),
+            add: c.ka * w as f64 * spec.block_count(Block::Add),
+            lza: c.kl * w as f64 * spec.block_count(Block::Lza),
+            fix: c.kf * e as f64 * spec.block_count(Block::Fix),
+            regs: c.kreg * spec.register_bits(&self.cfg) as f64,
             misc: c.misc,
         }
     }
@@ -231,5 +201,50 @@ mod tests {
             m.pe_area(PipelineKind::Regular3a).total(),
             m.pe_area(PipelineKind::Baseline3b).total()
         );
+    }
+
+    #[test]
+    fn transparent_saves_registers_deep3_pays_for_them() {
+        // Transparency empties the s1→s2 boundary; a third stage adds a
+        // whole boundary rank.
+        let b = register_bits(PipelineKind::Baseline3b, &CFG);
+        let t = register_bits(PipelineKind::Transparent, &CFG);
+        let d = register_bits(PipelineKind::Deep3, &CFG);
+        assert!(t < b, "transparent regs {t} vs baseline {b}");
+        assert!(d > b, "deep3 regs {d} vs baseline {b}");
+        let m = AreaModel::new(CFG);
+        assert!(
+            m.pe_area(PipelineKind::Transparent).total()
+                < m.pe_area(PipelineKind::Baseline3b).total()
+        );
+        assert!(
+            m.pe_area(PipelineKind::Deep3).total() > m.pe_area(PipelineKind::Baseline3b).total()
+        );
+        // The deep3 premium is registers only: no fix logic, the same
+        // single aligner + normalizer as the baseline.
+        let d3 = m.pe_area(PipelineKind::Deep3);
+        let b3 = m.pe_area(PipelineKind::Baseline3b);
+        assert_eq!(d3.fix, 0.0);
+        assert_eq!(d3.shifters, b3.shifters);
+        assert_eq!(d3.total() - b3.total(), d3.regs - b3.regs);
+    }
+
+    #[test]
+    fn spec_driven_area_matches_the_handwritten_inventory() {
+        // The refactor's no-regression pin: the spec composition equals
+        // the formulas the match arms used to hard-code.
+        let m = AreaModel::new(CFG);
+        let c = AreaCoeffs::DEFAULT;
+        let m1 = CFG.in_fmt.man_bits + 1;
+        let e = CFG.in_fmt.exp_bits;
+        let w = CFG.window;
+        let unit = c.ksh * w as f64 * clog2(w);
+        let b = m.pe_area(PipelineKind::Baseline3b);
+        assert_eq!(b.mult, c.km * (m1 * m1) as f64);
+        assert_eq!(b.shifters, 2.0 * unit);
+        assert_eq!(b.fix, 0.0);
+        let s = m.pe_area(PipelineKind::Skewed);
+        assert!((s.shifters - 2.2 * unit).abs() < 1e-9);
+        assert_eq!(s.fix, c.kf * e as f64);
     }
 }

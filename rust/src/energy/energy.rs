@@ -50,7 +50,10 @@ pub fn layer_energy(
     LayerEnergy { timing, alpha, power_uw, energy_uj }
 }
 
-/// Side-by-side comparison of the two designs on one layer.
+/// Side-by-side comparison of two pipeline organisations on one layer.
+/// Field names keep the paper's framing (`baseline` = the reference
+/// design, `skewed` = the contender), but any registered pair can be
+/// compared via [`LayerComparison::evaluate_pair`].
 #[derive(Clone, Copy, Debug)]
 pub struct LayerComparison {
     pub baseline: LayerEnergy,
@@ -58,10 +61,22 @@ pub struct LayerComparison {
 }
 
 impl LayerComparison {
+    /// The paper's comparison: Fig. 3(b) baseline vs the skewed design.
     pub fn evaluate(tcfg: &TimingConfig, pmodel: &PowerModel, plan: &TilePlan) -> Self {
+        Self::evaluate_pair(tcfg, pmodel, plan, PipelineKind::Baseline3b, PipelineKind::Skewed)
+    }
+
+    /// Compare any contender organisation against any reference.
+    pub fn evaluate_pair(
+        tcfg: &TimingConfig,
+        pmodel: &PowerModel,
+        plan: &TilePlan,
+        reference: PipelineKind,
+        contender: PipelineKind,
+    ) -> Self {
         LayerComparison {
-            baseline: layer_energy(tcfg, pmodel, PipelineKind::Baseline3b, plan),
-            skewed: layer_energy(tcfg, pmodel, PipelineKind::Skewed, plan),
+            baseline: layer_energy(tcfg, pmodel, reference, plan),
+            skewed: layer_energy(tcfg, pmodel, contender, plan),
         }
     }
 

@@ -61,4 +61,4 @@ pub mod util;
 pub mod workloads;
 
 pub use arith::format::FpFormat;
-pub use pe::PipelineKind;
+pub use pe::{PipelineKind, PipelineSpec};

@@ -7,7 +7,8 @@
 //! skewsa fig8        # Fig. 8: ResNet50 per-layer energy
 //! skewsa table1      # §IV area/power overheads
 //! skewsa headline    # whole-network latency/energy totals
-//! skewsa ablation    # Fig. 3a / 3b / skewed stage delays + latency
+//! skewsa pipelines   # the pipeline-organisation registry (specs table)
+//! skewsa ablation    # per-organisation stage delays + latency
 //! skewsa formats     # Fig. 1 formats + delay inversion
 //! skewsa sweep       # design-space sweep: array size x format
 //! skewsa run         # coordinate a GEMM end-to-end (verify + report)
@@ -15,6 +16,10 @@
 //! skewsa precision   # mixed-precision planner: budget -> per-layer plan
 //! skewsa viz         # pipeline interleaving trace (Figs. 4/6)
 //! ```
+//!
+//! `--pipeline` selects any registered organisation everywhere it
+//! appears; `serve` and `precision` additionally accept comma lists,
+//! `all`, and (serve only, historically) `both`.
 
 use skewsa::arith::fma::ChainCfg;
 use skewsa::config::RunConfig;
@@ -44,7 +49,11 @@ fn cli() -> Cli {
     .opt("m", "GEMM M (run)", Some("256"))
     .opt("k", "GEMM K (run)", Some("256"))
     .opt("n", "GEMM N (run)", Some("256"))
-    .opt("pipeline", "pipeline kind: baseline|skewed|both", Some("skewed"))
+    .opt(
+        "pipeline",
+        "pipeline organisation (see `skewsa pipelines`); serve/precision take comma lists or 'all'",
+        None,
+    )
     .opt("csv", "write the report table as CSV to this path", None)
     .opt("shards", "serve: array shards", None)
     .opt("shard-workers", "serve: worker threads per shard", None)
@@ -83,9 +92,10 @@ fn main() {
         "fig8" => report::fig8_resnet50(&tcfg, &pmodel),
         "table1" => report::table1_area_power(cfg.chain(), cfg.rows, cfg.cols),
         "headline" => report::headline(&tcfg, &pmodel),
+        "pipelines" => report::pipelines_registry(cfg.chain()),
         "ablation" => report::ablation_pipelines(cfg.chain(), &tcfg),
         "formats" => report::format_sweep(),
-        "sweep" => report::design_sweep(cfg.clock_ghz),
+        "sweep" => report::design_sweep(cfg.clock_ghz, single_kind(&cfg, &args, "sweep")),
         "run" => {
             run_gemm(&cfg, &args);
             return;
@@ -125,19 +135,45 @@ fn main() {
     }
 }
 
+/// Resolve a single-organisation `--pipeline` value: the flag when
+/// given (hard error on typos, with the registry's suggestions), else
+/// the config default.
+fn single_kind(cfg: &RunConfig, args: &skewsa::util::cli::Args, cmd: &str) -> PipelineKind {
+    match args.get("pipeline") {
+        None => cfg.pipeline,
+        Some(v) => match v.parse() {
+            Ok(k) => k,
+            Err(e) => {
+                eprintln!("error: {e} ({cmd} takes a single organisation)");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
+/// Resolve a list-valued `--pipeline` (serve/precision): comma lists,
+/// `all`, and `both` are accepted; defaults to the config organisation.
+fn kind_list(cfg: &RunConfig, args: &skewsa::util::cli::Args, cmd: &str) -> Vec<PipelineKind> {
+    let Some(v) = args.get("pipeline") else {
+        return vec![cfg.pipeline];
+    };
+    let parsed = PipelineKind::parse_list(v);
+    match parsed {
+        Ok(kinds) => kinds,
+        Err(e) => {
+            eprintln!("error: {e} ({cmd} takes a comma list, 'all' or 'both')");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn run_gemm(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     let shape = GemmShape::new(
         args.req_usize("m"),
         args.req_usize("k"),
         args.req_usize("n"),
     );
-    let kind: PipelineKind = match args.get("pipeline").unwrap_or("skewed").parse() {
-        Ok(k) => k,
-        Err(e) => {
-            eprintln!("error: {e} (run takes baseline|skewed; 'both' is serve-only)");
-            std::process::exit(2);
-        }
-    };
+    let kind = single_kind(cfg, args, "run");
     println!(
         "coordinating GEMM {}x{}x{} on {}x{} ({}), workers={} mode={:?}",
         shape.m, shape.k, shape.n, cfg.rows, cfg.cols, kind, cfg.workers, cfg.mode
@@ -154,8 +190,9 @@ fn run_gemm(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         r.retries
     );
     println!(
-        "timing: baseline {} cyc, skewed {} cyc ({}); energy {:.2} uJ -> {:.2} uJ ({})",
+        "timing: baseline-3b {} cyc, {} {} cyc ({}); energy {:.2} uJ -> {:.2} uJ ({})",
         r.comparison.baseline.timing.cycles,
+        kind.name(),
         r.comparison.skewed.timing.cycles,
         pct(r.comparison.latency_delta()),
         r.comparison.baseline.energy_uj,
@@ -211,19 +248,7 @@ fn serve(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         }
     };
     let store = Arc::new(WeightStore::from_layers(&layers, cfg.in_fmt, cap, cap));
-    // Reuse the canonical PipelineKind parser; "both" is serve-only.
-    let pk = args.get("pipeline").unwrap_or("skewed");
-    let kinds = if pk == "both" {
-        vec![PipelineKind::Baseline3b, PipelineKind::Skewed]
-    } else {
-        match pk.parse::<PipelineKind>() {
-            Ok(k) => vec![k],
-            Err(e) => {
-                eprintln!("error: {e} (baseline|skewed|both)");
-                std::process::exit(2);
-            }
-        }
-    };
+    let kinds = kind_list(cfg, args, "serve");
     let spec = LoadSpec {
         clients: args.get_usize("clients").unwrap_or(4).max(1),
         requests_per_client: args.get_usize("requests").unwrap_or(32).max(1),
@@ -269,13 +294,7 @@ fn precision(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
             std::process::exit(2);
         }
     };
-    let kind: PipelineKind = match args.get("pipeline").unwrap_or("skewed").parse() {
-        Ok(k) => k,
-        Err(e) => {
-            eprintln!("error: {e} (precision takes baseline|skewed)");
-            std::process::exit(2);
-        }
-    };
+    let kinds = kind_list(cfg, args, "precision");
     // The budget is the subcommand's central knob: a typo must not
     // silently plan at the default (same hard-error contract as
     // --workload/--pipeline above).
@@ -301,15 +320,20 @@ fn precision(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     };
     let pcfg = PlannerConfig {
         budget,
-        kind,
+        kinds,
         candidates: FpFormat::ALL.to_vec(),
         analysis: AnalysisConfig { m_cap: cap("m-cap"), n_cap: cap("n-cap"), seed: cfg.seed },
         tcfg: cfg.timing(),
     };
     println!(
-        "planning {net}: budget {:.1e}, {kind}, {}x{} array, error sweep {}x{} \
+        "planning {net}: budget {:.1e}, kinds {}, {}x{} array, error sweep {}x{} \
          sampled outputs/layer at full reduction depth",
-        pcfg.budget, cfg.rows, cfg.cols, pcfg.analysis.m_cap, pcfg.analysis.n_cap,
+        pcfg.budget,
+        pcfg.kinds_label(),
+        cfg.rows,
+        cfg.cols,
+        pcfg.analysis.m_cap,
+        pcfg.analysis.n_cap,
     );
     let study = PrecisionStudy::run(&layers, &pcfg);
     let per_layer = report::precision_per_layer(net, &study);

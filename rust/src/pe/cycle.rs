@@ -1,32 +1,37 @@
 //! Cycle-level processing element with explicit stage registers.
 //!
-//! A [`CyclePe`] holds the two pipeline registers of the paper's
-//! two-stage FMA designs plus per-block activity counters.  The
-//! column/array simulators in [`crate::sa`] own the scheduling (when a
-//! stage fires, where the incoming partial sum is read from — which is
-//! exactly what distinguishes the baseline from the skewed organisation);
-//! the PE provides the register state and the datapath evaluation.
+//! A [`CyclePe`] holds the pipeline registers of a
+//! [`PipelineSpec`](crate::pe::PipelineSpec)-described FMA design — a
+//! rank of [`StageReg`] slots per internal stage boundary plus the
+//! [`OutReg`] handed down the chain — and per-stage activity counters.
+//! The column/array simulators in [`crate::sa`] own the scheduling
+//! (when a stage fires, where the incoming partial sum is read from —
+//! which is exactly what distinguishes the organisations); the PE
+//! provides the register state and the counters.
+//!
+//! An element accepted at cycle `t` occupies stage `k` (1-indexed)
+//! during cycle `t + k − 1`: it sits in `pipe[k−1]` from the end of
+//! that cycle, and lands in `out` at the end of cycle `t + depth − 1`.
+//! The datapath value is computed at the spec's psum stage
+//! (`depth − spacing + 1`) and carried in [`StageReg::val`] from there.
 
-use crate::arith::fma::{ChainCfg, PsumSignal};
+use crate::arith::fma::PsumSignal;
 use crate::pe::PipelineKind;
 
-/// Stage-1 pipeline register: the element captured by the multiply /
-/// exponent-compute stage.
+/// An in-flight element inside the PE pipeline.
 #[derive(Clone, Copy, Debug)]
-pub struct S1Reg {
+pub struct StageReg {
     /// Element (input-row) index this PE is processing.
     pub m: usize,
-    /// Activation bits (input format).
+    /// Activation bits (input format), needed until the psum stage runs
+    /// the datapath.
     pub a: u64,
-    /// Incoming partial sum, captured at stage 1 — the baseline (Fig. 3b)
-    /// latches the whole normalized psum here.  The skewed PE does *not*
-    /// capture the sum at stage 1 (only the speculative exponent, which
-    /// is folded into the datapath step); it reads the raw sum from the
-    /// previous PE's output register during its stage 2.
-    pub psum: Option<PsumSignal>,
+    /// The computed chained-FMA result, present from the psum stage
+    /// onward (immediately on acceptance under the capture discipline).
+    pub val: Option<PsumSignal>,
 }
 
-/// Output (stage-2) pipeline register: the partial sum handed South.
+/// Output pipeline register: the partial sum handed South.
 #[derive(Clone, Copy, Debug)]
 pub struct OutReg {
     pub m: usize,
@@ -36,17 +41,22 @@ pub struct OutReg {
     pub taken: bool,
 }
 
-/// Per-block activity counters, accumulated across a run; the energy
-/// model converts these into dynamic-energy estimates.
+/// Per-PE activity counters, accumulated across a run; the energy model
+/// converts these into dynamic-energy estimates.  `s1` counts the entry
+/// (multiplier) stage, `s2` the exit (result-commit) stage — the two
+/// stages every organisation has.  Intermediate carry stages of deeper
+/// pipelines contribute area/power through their register inventory,
+/// not through these counters, which keeps the closed-form recovery in
+/// the fast simulator depth-independent.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PeActivity {
-    /// Stage-1 evaluations (multiplier + exponent logic fired).
+    /// Entry-stage evaluations (multiplier + exponent logic fired).
     pub s1_evals: u64,
-    /// Stage-2 evaluations (align/add/LZA — and normalize or fix).
+    /// Exit-stage evaluations (a result committed to the out register).
     pub s2_evals: u64,
-    /// Cycles this PE had an empty stage 1 (pipeline bubble).
+    /// Cycles this PE had an empty entry stage (pipeline bubble).
     pub s1_bubbles: u64,
-    /// Cycles this PE had an empty stage 2.
+    /// Cycles this PE had an empty exit stage.
     pub s2_bubbles: u64,
 }
 
@@ -70,68 +80,74 @@ impl PeActivity {
     }
 }
 
-/// A cycle-level PE: weight-stationary operand + the two stage registers.
+/// A cycle-level PE: weight-stationary operand + the stage registers of
+/// a `depth`-stage pipeline (`pipe.len() == depth − 1` internal
+/// boundaries, plus `out`).
 #[derive(Clone, Debug)]
 pub struct CyclePe {
-    pub kind: PipelineKind,
     /// The stationary weight (input-format bits).
     pub weight: u64,
-    pub s1: Option<S1Reg>,
+    /// Internal stage-boundary registers: `pipe[k]` holds the element
+    /// that has completed stages `1..=k+1`.
+    pub pipe: Vec<Option<StageReg>>,
     pub out: Option<OutReg>,
     pub activity: PeActivity,
 }
 
 impl CyclePe {
+    /// A PE of a registered organisation.
     pub fn new(kind: PipelineKind, weight: u64) -> Self {
-        CyclePe { kind, weight, s1: None, out: None, activity: PeActivity::default() }
+        Self::with_depth(kind.stages() as usize, weight)
     }
 
-    /// Evaluate stage 2 on the current stage-1 register, producing the
-    /// next output-register value.  `psum_late` supplies the partial sum
-    /// for organisations that read it at stage 2 (the skewed design reads
-    /// the previous PE's raw adder output + `L` here); the baseline uses
-    /// the psum captured in its own stage-1 register.
-    ///
-    /// Returns `None` when stage 1 is empty (bubble).
-    pub fn eval_stage2(
-        &mut self,
-        cfg: &ChainCfg,
-        psum_late: Option<&PsumSignal>,
-    ) -> Option<OutReg> {
-        let s1 = match self.s1 {
-            Some(s) => s,
-            None => {
-                self.activity.s2_bubbles += 1;
-                return None;
-            }
-        };
-        let zero = PsumSignal::zero(cfg);
-        let psum = match self.kind {
-            PipelineKind::Regular3a | PipelineKind::Baseline3b => {
-                s1.psum.as_ref().unwrap_or(&zero)
-            }
-            PipelineKind::Skewed => psum_late.unwrap_or(&zero),
-        };
-        let sig = self.kind.datapath().step(cfg, psum, s1.a, self.weight);
-        self.activity.s2_evals += 1;
-        Some(OutReg { m: s1.m, sig, taken: false })
+    /// A PE with an explicit pipeline depth (custom specs).
+    pub fn with_depth(depth: usize, weight: u64) -> Self {
+        assert!(depth >= 2, "PE depth must be >= 2");
+        CyclePe {
+            weight,
+            pipe: vec![None; depth - 1],
+            out: None,
+            activity: PeActivity::default(),
+        }
     }
 
-    /// Record a stage-1 acceptance (the multiplier fires this cycle).
-    pub fn accept_stage1(&mut self, next: S1Reg) -> S1Reg {
+    /// Pipeline depth this PE was built for.
+    pub fn depth(&self) -> usize {
+        self.pipe.len() + 1
+    }
+
+    /// The register feeding the exit stage (`pipe[depth−2]`).
+    pub fn exit_slot(&self) -> Option<StageReg> {
+        self.pipe[self.pipe.len() - 1]
+    }
+
+    /// Record an entry-stage acceptance (the multiplier fires).
+    pub fn accept_stage1(&mut self, next: StageReg) -> StageReg {
         self.activity.s1_evals += 1;
         next
     }
 
-    /// Record an idle stage-1 cycle.
+    /// Record an idle entry-stage cycle.
     pub fn stage1_bubble(&mut self) {
         self.activity.s1_bubbles += 1;
+    }
+
+    /// Advance the internal pipeline by one stage: `pipe[k] ← pipe[k−1]`,
+    /// with `accepted` entering at `pipe[0]`.  The exit slot's previous
+    /// content must already have been staged to `out` by the caller.
+    pub fn shift(&mut self, accepted: Option<StageReg>) {
+        for k in (1..self.pipe.len()).rev() {
+            self.pipe[k] = self.pipe[k - 1];
+        }
+        self.pipe[0] = accepted;
     }
 
     /// Replace the weight (weight-tile reload) and clear in-flight state.
     pub fn reload(&mut self, weight: u64) {
         self.weight = weight;
-        self.s1 = None;
+        for slot in &mut self.pipe {
+            *slot = None;
+        }
         self.out = None;
     }
 }
@@ -139,6 +155,7 @@ impl CyclePe {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arith::fma::{ChainCfg, ChainDatapath, SkewedFmaPath};
     use crate::arith::format::FpFormat;
 
     const CFG: ChainCfg = ChainCfg::BF16_FP32;
@@ -148,49 +165,55 @@ mod tests {
     }
 
     #[test]
-    fn baseline_stage2_uses_captured_psum() {
-        let mut pe = CyclePe::new(PipelineKind::Baseline3b, bf(3.0));
-        let mut seed = PsumSignal::zero(&CFG);
-        // Pre-charge a psum of 10.0 via a forged capture.
-        use crate::arith::fma::{BaselineFmaPath, ChainDatapath};
-        seed = BaselineFmaPath.step(&CFG, &seed, bf(2.0), bf(5.0));
-        pe.s1 = Some(S1Reg { m: 0, a: bf(4.0), psum: Some(seed) });
-        let out = pe.eval_stage2(&CFG, None).unwrap();
-        assert_eq!(out.sig.val.value_f64(CFG.window), 10.0 + 12.0);
-        assert_eq!(pe.activity.s2_evals, 1);
+    fn depth_matches_registered_specs() {
+        assert_eq!(CyclePe::new(PipelineKind::Baseline3b, 0).depth(), 2);
+        assert_eq!(CyclePe::new(PipelineKind::Skewed, 0).depth(), 2);
+        assert_eq!(CyclePe::new(PipelineKind::Deep3, 0).depth(), 3);
     }
 
     #[test]
-    fn skewed_stage2_uses_late_psum() {
-        use crate::arith::fma::{ChainDatapath, SkewedFmaPath};
-        let mut pe = CyclePe::new(PipelineKind::Skewed, bf(3.0));
+    fn shift_advances_elements_toward_the_exit() {
+        let mut pe = CyclePe::with_depth(3, bf(1.0));
+        pe.shift(Some(StageReg { m: 0, a: bf(2.0), val: None }));
+        assert_eq!(pe.pipe[0].unwrap().m, 0);
+        assert!(pe.exit_slot().is_none());
+        pe.shift(Some(StageReg { m: 1, a: bf(3.0), val: None }));
+        assert_eq!(pe.pipe[0].unwrap().m, 1);
+        assert_eq!(pe.exit_slot().unwrap().m, 0);
+    }
+
+    #[test]
+    fn value_rides_the_pipeline_once_computed() {
         let mut psum = PsumSignal::zero(&CFG);
         psum = SkewedFmaPath.step(&CFG, &psum, bf(2.0), bf(5.0));
-        pe.s1 = Some(S1Reg { m: 0, a: bf(4.0), psum: None });
-        let out = pe.eval_stage2(&CFG, Some(&psum)).unwrap();
-        assert_eq!(out.sig.val.value_f64(CFG.window), 22.0);
+        let mut pe = CyclePe::with_depth(3, bf(1.0));
+        pe.shift(Some(StageReg { m: 0, a: bf(4.0), val: Some(psum) }));
+        pe.shift(None);
+        let slot = pe.exit_slot().unwrap();
+        assert_eq!(slot.val.unwrap().val.value_f64(CFG.window), 10.0);
     }
 
     #[test]
-    fn empty_stage1_is_a_bubble() {
+    fn counters_track_entry_and_exit_stages() {
         let mut pe = CyclePe::new(PipelineKind::Baseline3b, bf(1.0));
-        assert!(pe.eval_stage2(&CFG, None).is_none());
-        assert_eq!(pe.activity.s2_bubbles, 1);
-    }
-
-    #[test]
-    fn utilization_mixes_evals_and_bubbles() {
-        let a = PeActivity { s1_evals: 3, s2_evals: 3, s1_bubbles: 1, s2_bubbles: 1 };
-        assert!((a.utilization() - 0.75).abs() < 1e-12);
+        pe.accept_stage1(StageReg { m: 0, a: bf(1.0), val: None });
+        pe.stage1_bubble();
+        pe.activity.s2_evals += 1;
+        pe.activity.s2_bubbles += 1;
+        assert_eq!(pe.activity.s1_evals, 1);
+        assert_eq!(pe.activity.s1_bubbles, 1);
+        assert!((pe.activity.utilization() - 0.5).abs() < 1e-12);
         assert_eq!(PeActivity::default().utilization(), 0.0);
     }
 
     #[test]
     fn reload_clears_pipeline_state() {
         let mut pe = CyclePe::new(PipelineKind::Skewed, bf(1.0));
-        pe.s1 = Some(S1Reg { m: 0, a: bf(1.0), psum: None });
+        pe.shift(Some(StageReg { m: 0, a: bf(1.0), val: None }));
+        pe.out = Some(OutReg { m: 0, sig: PsumSignal::zero(&CFG), taken: false });
         pe.reload(bf(2.0));
-        assert!(pe.s1.is_none());
+        assert!(pe.pipe.iter().all(Option::is_none));
+        assert!(pe.out.is_none());
         assert_eq!(pe.weight, bf(2.0));
     }
 }

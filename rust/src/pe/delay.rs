@@ -6,10 +6,13 @@
 //! (or narrower than) the exponent, so the exponent-side logic stops
 //! being free.  This module provides a technology-neutral gate-level
 //! delay estimate (in FO4-equivalent units) per datapath block, and
-//! composes them into per-stage critical paths for each
-//! [`PipelineKind`].  The ablation bench (E5) uses it to reproduce the
-//! paper's clock-feasibility argument; the energy model uses the block
-//! inventory for area/power accounting.
+//! composes them into per-stage critical paths from a
+//! [`PipelineSpec`]'s stage tables: a stage's delay is the sum over its
+//! serial segments of the max over each segment's parallel paths of the
+//! path's serial block delays, plus register overhead.  The ablation
+//! bench (E5) uses it to reproduce the paper's clock-feasibility
+//! argument; the energy model uses the same block inventory for
+//! area/power accounting.
 //!
 //! Delay formulas follow standard logic-synthesis rules of thumb:
 //! a radix-4 Booth/Wallace multiplier of width `n` costs
@@ -18,13 +21,9 @@
 //! per block hand-off.  Absolute numbers are *not* the claim — ratios
 //! and crossovers are (DESIGN.md §2).
 
+use super::spec::{clog2, Block, PipelineSpec};
 use super::PipelineKind;
 use crate::arith::fma::ChainCfg;
-
-/// ceil(log2(n)) over positive integers.
-fn clog2(n: u32) -> f64 {
-    (n.max(2) as f64).log2().ceil()
-}
 
 /// Per-block FO4 delay estimates for a given chain configuration.
 #[derive(Clone, Copy, Debug)]
@@ -65,52 +64,79 @@ impl BlockDelays {
             reg_overhead: 3.0,
         }
     }
+
+    /// FO4 delay of one datapath block.
+    pub fn block(&self, b: Block) -> f64 {
+        match b {
+            Block::Mult => self.mult,
+            Block::ExpCompute => self.exp_compute,
+            Block::Align => self.align,
+            Block::Add => self.add,
+            Block::Lza => self.lza,
+            Block::Norm => self.norm,
+            Block::Fix => self.fix,
+        }
+    }
 }
 
 /// Critical-path summary for one pipeline organisation.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct StageDelays {
-    pub kind: PipelineKind,
-    /// Stage-1 critical path (FO4).
-    pub stage1: f64,
-    /// Stage-2 critical path (FO4).
-    pub stage2: f64,
+    /// Registry name of the organisation.
+    pub name: &'static str,
+    /// Per-stage critical paths (FO4), `stages[i]` = stage `i+1`.
+    pub stages: Vec<f64>,
 }
 
 impl StageDelays {
-    /// Compose per-stage critical paths for a PE kind.
-    ///
-    /// * Fig. 3(a): stage 1 = max(mult, exp + **align**) — the alignment
-    ///   rides in stage 1 under the multiplier-dominance assumption;
-    ///   stage 2 = add (∥ LZA) + norm.
-    /// * Fig. 3(b): stage 1 = max(mult, exp); stage 2 = align + add
-    ///   (∥ LZA) + norm — alignment moved to stage 2 where the shallow
-    ///   reduced-precision multiplier can no longer hide it.
-    /// * Skewed: stage 1 = max(mult, speculative exp); stage 2 = fix +
-    ///   merged align/normalize shifter + add (∥ LZA); the separate
-    ///   normalization shifter is retimed away (Fig. 6), which is what
-    ///   keeps the fix logic from blowing the cycle time.
+    /// Compose per-stage critical paths for a registered kind.
     pub fn for_kind(kind: PipelineKind, cfg: &ChainCfg) -> StageDelays {
+        Self::for_spec(kind.spec(), cfg)
+    }
+
+    /// Compose per-stage critical paths from any spec's stage tables:
+    /// `delay(stage) = Σ_segments max_paths Σ_blocks delay(block)`
+    /// `+ reg_overhead`.
+    pub fn for_spec(spec: &PipelineSpec, cfg: &ChainCfg) -> StageDelays {
         let b = BlockDelays::for_cfg(cfg);
-        let (s1, s2) = match kind {
-            PipelineKind::Regular3a => {
-                (b.mult.max(b.exp_compute + b.align), b.add.max(b.lza) + b.norm)
-            }
-            PipelineKind::Baseline3b => {
-                (b.mult.max(b.exp_compute), b.align + b.add.max(b.lza) + b.norm)
-            }
-            PipelineKind::Skewed => {
-                // The merged shifter replaces align+norm with a single
-                // left-or-right barrel shift (only one direction fires).
-                (b.mult.max(b.exp_compute), b.fix + b.align + b.add.max(b.lza))
-            }
-        };
-        StageDelays { kind, stage1: s1 + b.reg_overhead, stage2: s2 + b.reg_overhead }
+        let stages = spec
+            .stages
+            .iter()
+            .map(|stage| {
+                let logic: f64 = stage
+                    .iter()
+                    .map(|segment| {
+                        segment
+                            .iter()
+                            .map(|path| path.iter().map(|u| b.block(u.block)).sum::<f64>())
+                            .fold(0.0, f64::max)
+                    })
+                    .sum();
+                logic + b.reg_overhead
+            })
+            .collect();
+        StageDelays { name: spec.name, stages }
+    }
+
+    /// Stage `i` (1-indexed) critical path, `None` past the depth.
+    pub fn stage(&self, i: usize) -> Option<f64> {
+        (i >= 1).then(|| self.stages.get(i - 1).copied()).flatten()
+    }
+
+    /// Stage-1 critical path (every organisation has one).
+    pub fn stage1(&self) -> f64 {
+        self.stages[0]
+    }
+
+    /// Stage-2 critical path (every registered organisation has ≥ 2
+    /// stages — enforced by [`PipelineSpec::validate`]).
+    pub fn stage2(&self) -> f64 {
+        self.stages[1]
     }
 
     /// The cycle-time bound (FO4) this organisation imposes.
     pub fn critical(&self) -> f64 {
-        self.stage1.max(self.stage2)
+        self.stages.iter().copied().fold(0.0, f64::max)
     }
 
     /// Whether the organisation closes timing at a clock period of
@@ -157,14 +183,32 @@ mod tests {
         let a = StageDelays::for_kind(PipelineKind::Regular3a, &cfg);
         let b = StageDelays::for_kind(PipelineKind::Baseline3b, &cfg);
         // 3(a)'s stage-1 carries the alignment it can no longer hide.
-        assert!(a.stage1 > b.stage1, "3a s1 {} vs 3b s1 {}", a.stage1, b.stage1);
+        assert!(a.stage1() > b.stage1(), "3a s1 {} vs 3b s1 {}", a.stage1(), b.stage1());
+    }
+
+    #[test]
+    fn spec_composition_reproduces_the_hand_formulas() {
+        // The data-driven composition must equal the formulas the match
+        // arms used to hard-code (the refactor's no-regression pin).
+        let cfg = ChainCfg::BF16_FP32;
+        let b = BlockDelays::for_cfg(&cfg);
+        let d3a = StageDelays::for_kind(PipelineKind::Regular3a, &cfg);
+        assert_eq!(d3a.stage1(), b.mult.max(b.exp_compute + b.align) + b.reg_overhead);
+        assert_eq!(d3a.stage2(), b.add.max(b.lza) + b.norm + b.reg_overhead);
+        let d3b = StageDelays::for_kind(PipelineKind::Baseline3b, &cfg);
+        assert_eq!(d3b.stage1(), b.mult.max(b.exp_compute) + b.reg_overhead);
+        assert_eq!(d3b.stage2(), b.align + b.add.max(b.lza) + b.norm + b.reg_overhead);
+        let ds = StageDelays::for_kind(PipelineKind::Skewed, &cfg);
+        assert_eq!(ds.stage1(), b.mult.max(b.exp_compute) + b.reg_overhead);
+        assert_eq!(ds.stage2(), b.fix + b.align + b.add.max(b.lza) + b.reg_overhead);
     }
 
     #[test]
     fn all_reduced_kinds_close_timing_at_reference_clock() {
-        // The paper assumes both designs are optimised to 1 GHz (§IV).
+        // The paper assumes both contender designs are optimised to
+        // 1 GHz (§IV); the deep3 registration closes timing with slack.
         let cfg = ChainCfg::BF16_FP32;
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed, PipelineKind::Deep3] {
             let d = StageDelays::for_kind(kind, &cfg);
             assert!(
                 d.feasible_at(CLOCK_PERIOD_FO4),
@@ -177,6 +221,32 @@ mod tests {
     }
 
     #[test]
+    fn transparent_trades_clock_for_spacing() {
+        // ArrayFlex-style transparency: the whole exponent path lands in
+        // stage 2, which busts the 1 GHz reference clock — spacing 1 is
+        // bought with cycle time, unlike the skewed organisation.
+        let cfg = ChainCfg::BF16_FP32;
+        let t = StageDelays::for_kind(PipelineKind::Transparent, &cfg);
+        assert!(!t.feasible_at(CLOCK_PERIOD_FO4), "critical {}", t.critical());
+        let s = StageDelays::for_kind(PipelineKind::Skewed, &cfg);
+        assert!(s.feasible_at(CLOCK_PERIOD_FO4));
+        assert!(t.stage2() > s.stage2());
+    }
+
+    #[test]
+    fn deep3_shortens_the_critical_stage() {
+        // Splitting normalization out buys clock headroom over the
+        // baseline (the arXiv 2408.11997 motivation).
+        let cfg = ChainCfg::BF16_FP32;
+        let d3 = StageDelays::for_kind(PipelineKind::Deep3, &cfg);
+        let b = StageDelays::for_kind(PipelineKind::Baseline3b, &cfg);
+        assert_eq!(d3.stages.len(), 3);
+        assert!(d3.critical() < b.critical(), "{} vs {}", d3.critical(), b.critical());
+        assert!(d3.stage(3).is_some());
+        assert_eq!(b.stage(3), None);
+    }
+
+    #[test]
     fn skewed_stage2_overhead_is_bounded() {
         // The fix logic adds delay, but the retimed normalization keeps
         // the skewed stage 2 within ~15% of the baseline's (the paper's
@@ -184,7 +254,7 @@ mod tests {
         let cfg = ChainCfg::BF16_FP32;
         let b = StageDelays::for_kind(PipelineKind::Baseline3b, &cfg);
         let s = StageDelays::for_kind(PipelineKind::Skewed, &cfg);
-        assert!(s.stage2 < b.stage2 * 1.15, "skewed s2 {} vs base s2 {}", s.stage2, b.stage2);
+        assert!(s.stage2() < b.stage2() * 1.15, "skewed s2 {} vs base s2 {}", s.stage2(), b.stage2());
     }
 
     #[test]

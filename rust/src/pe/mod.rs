@@ -1,91 +1,131 @@
 //! Processing-element models.
 //!
-//! * [`PipelineKind`] — the three PE micro-architectures under study:
-//!   the classic full-precision-oriented pipeline (Fig. 3a), the
-//!   state-of-the-art reduced-precision pipeline (Fig. 3b, the paper's
-//!   baseline), and the proposed skewed pipeline (Figs. 5/6).
-//! * [`delay`] — the per-stage combinational delay model that captures
-//!   the paper's motivating observation: in reduced precision the
-//!   exponent/alignment logic no longer hides under the multiplier.
+//! * [`spec`] — the data-driven [`PipelineSpec`] descriptor: chain
+//!   spacing, pipeline depth, column tail, per-stage datapath-block
+//!   assignment, stage-boundary register inventory, and the value-level
+//!   datapath handle.  Every downstream model (delay, area/power,
+//!   closed-form timing, all three cycle simulators) derives its
+//!   behaviour from the spec.
+//! * [`PipelineKind`] — the *named-preset registry* over specs: the
+//!   paper's three organisations (Fig. 3(a) regular, Fig. 3(b)
+//!   baseline, Figs. 5/6 skewed) plus two registered from related work
+//!   (ArrayFlex-style transparent chaining, arXiv 2211.12600; a
+//!   3-stage deep pipeline with split-out normalization,
+//!   arXiv 2408.11997).  The `spec()` table below is the **only**
+//!   `match` over `PipelineKind` in the crate.
+//! * [`delay`] — the per-stage combinational delay model composed from
+//!   the spec's block assignment.
 //! * [`cycle`] — the cycle-level PE with explicit stage registers, used
-//!   by the cycle-accurate column/array simulators in [`crate::sa`].
+//!   by the cycle-accurate simulators in [`crate::sa`].
 
 pub mod cycle;
 pub mod delay;
+pub mod spec;
 
-use crate::arith::fma::{BaselineFmaPath, ChainDatapath, SkewedFmaPath};
+use crate::arith::fma::ChainDatapath;
+pub use spec::{DatapathId, PipelineSpec};
 
-/// The PE pipeline organisations compared in the paper.
+/// The registered PE pipeline organisations.
+///
+/// This enum is only an *index* into the preset registry: all behaviour
+/// lives in the [`PipelineSpec`] each variant names.  Registering a new
+/// organisation = one spec const in [`spec`] + one variant + one
+/// registry row here (see the README walkthrough).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PipelineKind {
-    /// Fig. 3(a): multiply ∥ (exponent compute + align) in stage 1,
-    /// add + LZA + normalize in stage 2.  The traditional organisation —
-    /// assumes the multiplier delay hides the exponent/align logic, which
-    /// fails for reduced-precision formats (§II).
+    /// Fig. 3(a): the traditional organisation — alignment hides under
+    /// the multiplier, which fails at reduced precision (§II).
     Regular3a,
-    /// Fig. 3(b): multiply ∥ exponent compute in stage 1; align + add +
-    /// LZA + normalize in stage 2.  The state-of-the-art reference design
-    /// for reduced precision; chains serialize with spacing 2 (§III-A).
+    /// Fig. 3(b): the state-of-the-art reduced-precision baseline;
+    /// chains serialize with spacing 2 (§III-A).
     Baseline3b,
-    /// Figs. 5/6: speculative exponent forwarding + fix logic + retimed
-    /// normalization.  Consecutive PEs overlap stages; spacing 1.
+    /// Figs. 5/6: the paper's skewed pipeline — speculative exponent
+    /// forwarding, fix logic, retimed normalization; spacing 1.
     Skewed,
+    /// ArrayFlex-style transparent chaining (arXiv 2211.12600):
+    /// spacing 1 with the baseline datapath, trading cycle time for
+    /// chain latency.
+    Transparent,
+    /// Three-stage deep pipeline with split-out normalization
+    /// (arXiv 2408.11997 style): clock headroom for +1 fill cycle.
+    Deep3,
 }
 
 impl PipelineKind {
-    /// All kinds, in presentation order.
-    pub const ALL: [PipelineKind; 3] =
-        [PipelineKind::Regular3a, PipelineKind::Baseline3b, PipelineKind::Skewed];
+    /// All registered kinds, in presentation order.
+    pub const ALL: [PipelineKind; 5] = [
+        PipelineKind::Regular3a,
+        PipelineKind::Baseline3b,
+        PipelineKind::Skewed,
+        PipelineKind::Transparent,
+        PipelineKind::Deep3,
+    ];
 
-    /// Report name.
+    /// The preset registry: variant → spec.  The single `match` over
+    /// `PipelineKind` in the crate.
+    pub fn spec(&self) -> &'static PipelineSpec {
+        match self {
+            PipelineKind::Regular3a => &spec::REGULAR_3A,
+            PipelineKind::Baseline3b => &spec::BASELINE_3B,
+            PipelineKind::Skewed => &spec::SKEWED,
+            PipelineKind::Transparent => &spec::TRANSPARENT,
+            PipelineKind::Deep3 => &spec::DEEP3,
+        }
+    }
+
+    /// Registry name.
     pub fn name(&self) -> &'static str {
-        match self {
-            PipelineKind::Regular3a => "regular-3a",
-            PipelineKind::Baseline3b => "baseline-3b",
-            PipelineKind::Skewed => "skewed",
-        }
+        self.spec().name
     }
 
-    /// Chain spacing `S`: cycles between PE *i* starting an element and
-    /// PE *i+1* being able to start the same element (§III; DESIGN §6).
+    /// Chain spacing `S` (§III; DESIGN §6).
     pub fn chain_spacing(&self) -> u64 {
-        match self {
-            PipelineKind::Regular3a | PipelineKind::Baseline3b => 2,
-            PipelineKind::Skewed => 1,
-        }
+        self.spec().spacing
     }
 
-    /// Pipeline depth of one PE (all three are two-stage designs at the
-    /// paper's reduced-precision operating point).
+    /// Pipeline depth of one PE.
     pub fn stages(&self) -> u64 {
-        2
+        self.spec().depth
     }
 
-    /// Extra pipeline cycles at the column foot before rounding: the
-    /// skewed column needs the extra addition stage of Fig. 6 (last
-    /// paragraph of §III-B).
+    /// Extra pipeline cycles at the column foot before rounding.
     pub fn column_tail(&self) -> u64 {
-        match self {
-            PipelineKind::Regular3a | PipelineKind::Baseline3b => 0,
-            PipelineKind::Skewed => 1,
-        }
+        self.spec().column_tail
     }
 
-    /// The value-level datapath executed by this PE kind.  Fig. 3(a) and
-    /// Fig. 3(b) differ only in *where* alignment happens in time, not in
-    /// the computed value, so both use the baseline datapath; the skewed
-    /// PE uses the speculative datapath (bit-identical by construction —
-    /// enforced in tests).
+    /// The value-level datapath executed by this organisation.  All
+    /// registered datapaths are bit-identical by construction (enforced
+    /// in tests); they differ in *when* values move, not in the values.
     pub fn datapath(&self) -> &'static dyn ChainDatapath {
-        match self {
-            PipelineKind::Regular3a | PipelineKind::Baseline3b => &BaselineFmaPath,
-            PipelineKind::Skewed => &SkewedFmaPath,
-        }
+        self.spec().datapath.handle()
     }
 
     /// True for the paper's proposed design.
     pub fn is_skewed(&self) -> bool {
-        matches!(self, PipelineKind::Skewed)
+        self.spec().datapath == DatapathId::Skewed
+    }
+
+    /// Parse a comma-separated kind list; `all` expands to every
+    /// registered organisation and `both` to the paper's baseline-vs-
+    /// proposed pair (the historical `--pipeline both` serve spelling).
+    pub fn parse_list(s: &str) -> Result<Vec<PipelineKind>, String> {
+        match s {
+            "all" => return Ok(PipelineKind::ALL.to_vec()),
+            "both" => return Ok(vec![PipelineKind::Baseline3b, PipelineKind::Skewed]),
+            _ => {}
+        }
+        s.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(str::parse)
+            .collect::<Result<Vec<_>, _>>()
+            .and_then(|kinds| {
+                if kinds.is_empty() {
+                    Err(format!("empty pipeline list '{s}'"))
+                } else {
+                    Ok(kinds)
+                }
+            })
     }
 }
 
@@ -97,13 +137,27 @@ impl std::fmt::Display for PipelineKind {
 
 impl std::str::FromStr for PipelineKind {
     type Err = String;
+
+    /// Accepts every registry name and alias; an unknown name errors
+    /// with the full valid-name list and a did-you-mean suggestion
+    /// (edit distance ≤ 2, same contract as the CLI flag parser).
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s {
-            "regular-3a" | "regular" | "3a" => Ok(PipelineKind::Regular3a),
-            "baseline-3b" | "baseline" | "3b" => Ok(PipelineKind::Baseline3b),
-            "skewed" | "skew" => Ok(PipelineKind::Skewed),
-            _ => Err(format!("unknown pipeline kind '{s}'")),
+        for kind in PipelineKind::ALL {
+            let sp = kind.spec();
+            if sp.name == s || sp.aliases.contains(&s) {
+                return Ok(kind);
+            }
         }
+        let valid: Vec<&str> = PipelineKind::ALL.iter().map(|k| k.name()).collect();
+        let hint = PipelineKind::ALL
+            .iter()
+            .flat_map(|k| std::iter::once(k.name()).chain(k.spec().aliases.iter().copied()))
+            .map(|name| (crate::util::cli::edit_distance(s, name), name))
+            .filter(|&(d, _)| d <= 2)
+            .min_by_key(|&(d, _)| d)
+            .map(|(_, name)| format!(" (did you mean '{name}'?)"))
+            .unwrap_or_default();
+        Err(format!("unknown pipeline kind '{s}'{hint}; valid: {}", valid.join("|")))
     }
 }
 
@@ -116,19 +170,62 @@ mod tests {
         assert_eq!(PipelineKind::Baseline3b.chain_spacing(), 2);
         assert_eq!(PipelineKind::Regular3a.chain_spacing(), 2);
         assert_eq!(PipelineKind::Skewed.chain_spacing(), 1);
+        // The related-work registrations.
+        assert_eq!(PipelineKind::Transparent.chain_spacing(), 1);
+        assert_eq!(PipelineKind::Deep3.chain_spacing(), 2);
+        assert_eq!(PipelineKind::Deep3.stages(), 3);
     }
 
     #[test]
     fn parse_roundtrip() {
         for k in PipelineKind::ALL {
             assert_eq!(k.name().parse::<PipelineKind>().unwrap(), k);
+            for &alias in k.spec().aliases {
+                assert_eq!(alias.parse::<PipelineKind>().unwrap(), k, "{alias}");
+            }
         }
         assert!("nope".parse::<PipelineKind>().is_err());
+    }
+
+    #[test]
+    fn parse_errors_list_names_and_suggest() {
+        let err = "skewd".parse::<PipelineKind>().unwrap_err();
+        assert!(err.contains("did you mean 'skewed'?"), "{err}");
+        assert!(err.contains("regular-3a|baseline-3b|skewed|transparent|deep3"), "{err}");
+        let err = "transparnt".parse::<PipelineKind>().unwrap_err();
+        assert!(err.contains("did you mean 'transparent'?"), "{err}");
+        // Nothing close: names listed, no hint.
+        let err = "zzzzzz".parse::<PipelineKind>().unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("valid:"), "{err}");
+    }
+
+    #[test]
+    fn parse_list_forms() {
+        assert_eq!(PipelineKind::parse_list("all").unwrap(), PipelineKind::ALL.to_vec());
+        assert_eq!(
+            PipelineKind::parse_list("both").unwrap(),
+            vec![PipelineKind::Baseline3b, PipelineKind::Skewed]
+        );
+        assert_eq!(
+            PipelineKind::parse_list("skewed, deep3").unwrap(),
+            vec![PipelineKind::Skewed, PipelineKind::Deep3]
+        );
+        assert!(PipelineKind::parse_list("skewed,nope").is_err());
+        assert!(PipelineKind::parse_list("").is_err());
     }
 
     #[test]
     fn skewed_has_column_tail() {
         assert_eq!(PipelineKind::Skewed.column_tail(), 1);
         assert_eq!(PipelineKind::Baseline3b.column_tail(), 0);
+        assert_eq!(PipelineKind::Transparent.column_tail(), 0);
+    }
+
+    #[test]
+    fn only_the_skewed_preset_runs_the_speculative_datapath() {
+        for k in PipelineKind::ALL {
+            assert_eq!(k.is_skewed(), k == PipelineKind::Skewed, "{k}");
+        }
     }
 }

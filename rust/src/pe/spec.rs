@@ -1,0 +1,553 @@
+//! The data-driven PE micro-architecture descriptor.
+//!
+//! A [`PipelineSpec`] captures *everything* that distinguishes one
+//! pipeline organisation from another — chain spacing, pipeline depth,
+//! column tail, the per-stage datapath-block assignment, the
+//! stage-boundary register inventory, and the value-level datapath —
+//! so the delay model, the area/power models, the closed-form timing
+//! formula and all three cycle simulators derive their behaviour from
+//! one table instead of per-module `match` arms.
+//!
+//! The registry of *named* organisations lives in
+//! [`crate::pe::PipelineKind`]; this module holds the descriptor type,
+//! the composition rules, and the preset spec constants.  Registering a
+//! new organisation is one const here plus one registry entry there
+//! (see the README walkthrough).
+//!
+//! **Timing contract** (validated by `tests/prop_pipelines.rs` and the
+//! cycle sims): a spec with spacing `S`, depth `D` and tail `τ` streams
+//! an `M × R × C_used` tile in
+//!
+//! ```text
+//! T = (M−1) + (C_used−1) + S·(R−1) + D + 1 + τ
+//! ```
+//!
+//! and hands partial sums down the chain under one of two disciplines,
+//! both fixed by `(S, D)`:
+//!
+//! * `S == D` — **capture**: PE `i+1` latches PE `i`'s output register
+//!   at its own stage-1 acceptance (the Fig. 3(a)/(b) organisations).
+//! * `S < D` — **late read**: PE `i+1` accepts the element while PE `i`
+//!   is still mid-pipeline and reads the output register live during its
+//!   own stage `D − S + 1` (the skewed/transparent organisations; for
+//!   the paper's skewed PE the stage-1 overlap is what the speculative
+//!   exponent forwarding buys).
+
+use crate::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, SkewedFmaPath};
+
+/// ceil(log2(n)) over positive integers (shared by the delay/area
+/// width formulas).
+pub(crate) fn clog2(n: u32) -> f64 {
+    (n.max(2) as f64).log2().ceil()
+}
+
+/// A combinational datapath block of the FMA pipeline.  Delay and area
+/// formulas per block live in [`crate::pe::delay::BlockDelays`] and
+/// [`crate::energy::area::AreaModel`]; the spec only says *which* blocks
+/// sit in *which* stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Block {
+    /// Mantissa multiplier, (m+1)×(m+1).
+    Mult,
+    /// Exponent add + compare (max / difference).
+    ExpCompute,
+    /// Alignment barrel shifter across the accumulator window (also
+    /// stands in for the skewed design's merged align/normalize shifter,
+    /// which has the same single-barrel delay).
+    Align,
+    /// Wide significand adder.
+    Add,
+    /// LZA / LZC tree.
+    Lza,
+    /// Normalization barrel shifter.
+    Norm,
+    /// The skewed design's Fix Sign & Exponent block (paper §III-B).
+    Fix,
+}
+
+/// One use of a block inside a stage.  `area_scale` lets a spec count a
+/// merged or duplicated structure honestly in the area inventory while
+/// keeping the *delay* of one barrel traversal — e.g. the skewed
+/// design's direction-muxed left∥right shifter pair is 1.2× one
+/// shifter's area but still one shift deep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockUse {
+    pub block: Block,
+    pub area_scale: f64,
+}
+
+/// A plain block use (area scale 1).
+pub const fn blk(block: Block) -> BlockUse {
+    BlockUse { block, area_scale: 1.0 }
+}
+
+/// A block use with a non-unit area scale.
+pub const fn blk_scaled(block: Block, area_scale: f64) -> BlockUse {
+    BlockUse { block, area_scale }
+}
+
+/// A serial chain of blocks: delay = sum of block delays.
+pub type PathBlocks = &'static [BlockUse];
+
+/// Parallel alternatives: delay = max over paths; area = sum over paths
+/// (every path physically exists).
+pub type Segment = &'static [PathBlocks];
+
+/// One pipeline stage: serial segments of parallel paths.
+/// `delay(stage) = Σ_segments max_paths Σ_blocks delay(block)`.
+pub type StageBlocks = &'static [Segment];
+
+/// A register field crossing a stage boundary (beyond the activation
+/// and stationary-weight registers every PE carries).  Widths are
+/// functions of the chain configuration, so one inventory serves every
+/// format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegField {
+    /// Raw (unrounded) significand product, `2·(m+1)` bits.
+    RawProduct,
+    /// A sign bit.
+    Sign,
+    /// An exponent with overflow headroom, `e + 2` bits.
+    Exponent,
+    /// Alignment shift amount, `clog2(W) + 1` bits.
+    ShiftAmount,
+    /// Signed (left-or-right) shift amount, `clog2(W) + 2` bits — the
+    /// skewed design's speculative `d′`.
+    ShiftAmountSigned,
+    /// The accumulator significand window, `W` bits.
+    WindowSum,
+    /// The sticky bit.
+    Sticky,
+    /// An LZA count, `clog2(W)` bits.
+    LzaCount,
+}
+
+impl RegField {
+    /// Field width in bits for a chain configuration.
+    pub fn bits(self, cfg: &ChainCfg) -> u32 {
+        let w = cfg.window;
+        match self {
+            RegField::RawProduct => 2 * (cfg.in_fmt.man_bits + 1),
+            RegField::Sign => 1,
+            RegField::Exponent => cfg.in_fmt.exp_bits + 2,
+            RegField::ShiftAmount => clog2(w) as u32 + 1,
+            RegField::ShiftAmountSigned => clog2(w) as u32 + 2,
+            RegField::WindowSum => w,
+            RegField::Sticky => 1,
+            RegField::LzaCount => clog2(w) as u32,
+        }
+    }
+}
+
+/// The value-level datapath a spec executes.  All organisations are
+/// bit-identical by construction (enforced in tests); the id selects
+/// which structural path the simulators monomorphize over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DatapathId {
+    /// Normalized-psum forwarding (Figs. 3(a)/3(b) and retimed deep
+    /// variants thereof).
+    Baseline,
+    /// Speculative-exponent forwarding with fix logic (Figs. 5/6).
+    Skewed,
+}
+
+impl DatapathId {
+    /// The executable datapath.
+    pub fn handle(self) -> &'static dyn ChainDatapath {
+        match self {
+            DatapathId::Baseline => &BaselineFmaPath,
+            DatapathId::Skewed => &SkewedFmaPath,
+        }
+    }
+
+    /// Report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DatapathId::Baseline => "baseline",
+            DatapathId::Skewed => "speculative",
+        }
+    }
+}
+
+/// A complete pipeline-organisation descriptor.
+///
+/// Identity is the `name`: two specs compare (and hash) equal iff their
+/// names match, so registry names must be unique — which also keeps
+/// `f64` area scales out of `Eq`.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineSpec {
+    /// Registry name (`--pipeline` value, report label, identity).
+    pub name: &'static str,
+    /// Accepted CLI/config aliases.
+    pub aliases: &'static [&'static str],
+    /// One-line description for the `skewsa pipelines` table.
+    pub summary: &'static str,
+    /// Chain spacing `S`: cycles between PE `i` starting an element and
+    /// PE `i+1` being able to start the same element.
+    pub spacing: u64,
+    /// Pipeline depth `D` (stages per PE).
+    pub depth: u64,
+    /// Extra pipeline cycles at the column foot before rounding.
+    pub column_tail: u64,
+    /// Per-stage datapath-block assignment (`len == depth`); drives both
+    /// the critical-path delay model and the area/power inventory.
+    pub stages: &'static [StageBlocks],
+    /// Stage-boundary register fields beyond the common activation +
+    /// weight registers; drives the register-bit area inventory.
+    pub regs: &'static [RegField],
+    /// The value-level datapath.
+    pub datapath: DatapathId,
+}
+
+impl PartialEq for PipelineSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.name == other.name
+    }
+}
+impl Eq for PipelineSpec {}
+impl std::hash::Hash for PipelineSpec {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.name.hash(state);
+    }
+}
+
+impl std::fmt::Display for PipelineSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name)
+    }
+}
+
+impl PipelineSpec {
+    /// The pipeline stage (1-indexed) at which the incoming partial sum
+    /// is acquired from the predecessor's output register:
+    /// `D − S + 1`.  Stage 1 ⇒ the capture discipline (latched at
+    /// acceptance); ≥ 2 ⇒ the late-read discipline.
+    pub fn psum_stage(&self) -> u64 {
+        self.depth - self.spacing + 1
+    }
+
+    /// Whether the incoming psum is captured at stage-1 acceptance
+    /// (`S == D`) rather than read mid-pipeline.
+    pub fn captures_at_accept(&self) -> bool {
+        self.spacing == self.depth
+    }
+
+    /// Structural invariants every registered spec must satisfy; called
+    /// by the simulator constructors, so a malformed custom spec fails
+    /// fast instead of corrupting a run.
+    pub fn validate(&self) {
+        assert!(self.depth >= 2, "{}: depth must be >= 2 (two-phase PE)", self.name);
+        assert!(
+            self.spacing >= 1 && self.spacing <= self.depth,
+            "{}: spacing must satisfy 1 <= S <= depth (got S={} D={})",
+            self.name,
+            self.spacing,
+            self.depth
+        );
+        assert!(self.column_tail <= 2, "{}: column tail > 2 is not modeled", self.name);
+        assert_eq!(
+            self.stages.len(),
+            self.depth as usize,
+            "{}: stage table length must equal depth",
+            self.name
+        );
+    }
+
+    /// Total register bits per PE (common activation + weight registers
+    /// plus the spec's stage-boundary fields).
+    pub fn register_bits(&self, cfg: &ChainCfg) -> u32 {
+        let common = 2 * cfg.in_fmt.width(); // a-reg + stationary weight
+        common + self.regs.iter().map(|f| f.bits(cfg)).sum::<u32>()
+    }
+
+    /// Area-inventory count of a block across all stages (sum of
+    /// `area_scale` over every use).
+    pub fn block_count(&self, block: Block) -> f64 {
+        self.stages
+            .iter()
+            .flat_map(|stage| stage.iter())
+            .flat_map(|segment| segment.iter())
+            .flat_map(|path| path.iter())
+            .filter(|u| u.block == block)
+            .map(|u| u.area_scale)
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Preset stage tables.  Shorthand: a stage is a list of serial segments,
+// each segment a list of parallel paths, each path a serial block chain.
+// ---------------------------------------------------------------------------
+
+use Block::{Add, Align, ExpCompute, Fix, Lza, Mult, Norm};
+
+/// Fig. 3(a): stage 1 = mult ∥ (exp + align) — alignment rides under the
+/// multiplier-dominance assumption; stage 2 = (add ∥ LZA) + norm.
+const REGULAR_3A_STAGES: &[StageBlocks] = &[
+    &[&[&[blk(Mult)], &[blk(ExpCompute), blk(Align)]]],
+    &[&[&[blk(Add)], &[blk(Lza)]], &[&[blk(Norm)]]],
+];
+
+/// Fig. 3(b): stage 1 = mult ∥ exp; stage 2 = align + (add ∥ LZA) + norm.
+const BASELINE_3B_STAGES: &[StageBlocks] = &[
+    &[&[&[blk(Mult)], &[blk(ExpCompute)]]],
+    &[&[&[blk(Align)]], &[&[blk(Add)], &[blk(Lza)]], &[&[blk(Norm)]]],
+];
+
+/// Figs. 5/6: stage 1 = mult ∥ speculative exp; stage 2 = fix + merged
+/// align/normalize shifter (the 1.2×-area direction-muxed pair, one
+/// barrel deep, in parallel with the right-only product aligner) +
+/// (add ∥ LZA).  The separate normalizer is retimed away.
+const SKEWED_STAGES: &[StageBlocks] = &[
+    &[&[&[blk(Mult)], &[blk(ExpCompute)]]],
+    &[
+        &[&[blk(Fix)]],
+        &[&[blk_scaled(Align, 1.2)], &[blk(Align)]],
+        &[&[blk(Add)], &[blk(Lza)]],
+    ],
+];
+
+/// ArrayFlex-style transparent chaining (arXiv 2211.12600): the psum
+/// pipeline boundary between neighbouring PEs is made transparent, so
+/// the successor starts one cycle after its predecessor (S = 1) with the
+/// *baseline* datapath.  The price is that the exponent compare against
+/// the late-arriving psum moves into stage 2, which therefore carries
+/// exp + align + add + norm serially — a longer critical path that
+/// trades clock slack for chain latency.
+const TRANSPARENT_STAGES: &[StageBlocks] = &[
+    &[&[&[blk(Mult)]]],
+    &[
+        &[&[blk(ExpCompute)]],
+        &[&[blk(Align)]],
+        &[&[blk(Add)], &[blk(Lza)]],
+        &[&[blk(Norm)]],
+    ],
+];
+
+/// Three-stage deep pipeline in the style of low-cost matrix-engine FMA
+/// units with normalization split out (arXiv 2408.11997): stage 1 =
+/// mult ∥ exp, stage 2 = align + (add ∥ LZA), stage 3 = norm.  Shorter
+/// stages buy clock headroom for one extra cycle of fill latency and an
+/// extra rank of pipeline registers.
+const DEEP3_STAGES: &[StageBlocks] = &[
+    &[&[&[blk(Mult)], &[blk(ExpCompute)]]],
+    &[&[&[blk(Align)]], &[&[blk(Add)], &[blk(Lza)]]],
+    &[&[&[blk(Norm)]]],
+];
+
+// ---------------------------------------------------------------------------
+// Preset register inventories (what physically crosses stage boundaries;
+// see the module docs of `energy::area` for the derivation).
+// ---------------------------------------------------------------------------
+
+use RegField::{
+    Exponent, LzaCount, RawProduct, ShiftAmount, ShiftAmountSigned, Sign, Sticky, WindowSum,
+};
+
+/// Fig. 3(a)/(b): s1→s2 carries raw product + sign, computed ê, and the
+/// alignment amount; the output register carries the normalized sum +
+/// sign + sticky + exponent.
+const BASELINE_REGS: &[RegField] =
+    &[RawProduct, Sign, Exponent, ShiftAmount, WindowSum, Sign, Sticky, Exponent];
+
+/// Skewed: s1→s2 forwards *both* `e_M` and `ê_{i−1}` plus the signed
+/// speculative `d′`; the output register adds the LZA count `L` (the
+/// extra cross-PE forwarding the paper charges the +9% area to).
+const SKEWED_REGS: &[RegField] = &[
+    RawProduct,
+    Sign,
+    Exponent,
+    Exponent,
+    ShiftAmountSigned,
+    WindowSum,
+    Sign,
+    Sticky,
+    Exponent,
+    LzaCount,
+];
+
+/// Transparent: with the whole exponent path in stage 2 the s1→s2
+/// boundary carries only the raw product + sign — transparency *saves*
+/// register bits relative to Fig. 3(b).
+const TRANSPARENT_REGS: &[RegField] =
+    &[RawProduct, Sign, WindowSum, Sign, Sticky, Exponent];
+
+/// Deep3: s1→s2 as the baseline minus the precomputed shift amount
+/// (computed in stage 2); s2→s3 carries the unnormalized sum + L for the
+/// stage-3 normalizer; the output register is baseline-shaped.  Two
+/// boundary ranks ⇒ the register-area cost of the deeper pipeline.
+const DEEP3_REGS: &[RegField] = &[
+    RawProduct,
+    Sign,
+    Exponent,
+    WindowSum,
+    Sign,
+    Sticky,
+    Exponent,
+    LzaCount,
+    WindowSum,
+    Sign,
+    Sticky,
+    Exponent,
+];
+
+// ---------------------------------------------------------------------------
+// The preset specs.
+// ---------------------------------------------------------------------------
+
+/// Fig. 3(a): the traditional full-precision-oriented organisation.
+pub const REGULAR_3A: PipelineSpec = PipelineSpec {
+    name: "regular-3a",
+    aliases: &["regular", "3a"],
+    summary: "Fig. 3(a): align in stage 1 under the multiplier",
+    spacing: 2,
+    depth: 2,
+    column_tail: 0,
+    stages: REGULAR_3A_STAGES,
+    regs: BASELINE_REGS,
+    datapath: DatapathId::Baseline,
+};
+
+/// Fig. 3(b): the state-of-the-art reduced-precision baseline.
+pub const BASELINE_3B: PipelineSpec = PipelineSpec {
+    name: "baseline-3b",
+    aliases: &["baseline", "3b"],
+    summary: "Fig. 3(b): state-of-the-art reduced-precision baseline",
+    spacing: 2,
+    depth: 2,
+    column_tail: 0,
+    stages: BASELINE_3B_STAGES,
+    regs: BASELINE_REGS,
+    datapath: DatapathId::Baseline,
+};
+
+/// Figs. 5/6: the paper's proposed skewed pipeline.
+pub const SKEWED: PipelineSpec = PipelineSpec {
+    name: "skewed",
+    aliases: &["skew"],
+    summary: "Figs. 5/6: speculative-exponent skewed pipeline (the paper)",
+    spacing: 1,
+    depth: 2,
+    column_tail: 1,
+    stages: SKEWED_STAGES,
+    regs: SKEWED_REGS,
+    datapath: DatapathId::Skewed,
+};
+
+/// ArrayFlex-style transparent chaining (arXiv 2211.12600).
+pub const TRANSPARENT: PipelineSpec = PipelineSpec {
+    name: "transparent",
+    aliases: &["arrayflex", "transparent-s1"],
+    summary: "ArrayFlex-style transparent chaining: S=1, longer stage 2",
+    spacing: 1,
+    depth: 2,
+    column_tail: 0,
+    stages: TRANSPARENT_STAGES,
+    regs: TRANSPARENT_REGS,
+    datapath: DatapathId::Baseline,
+};
+
+/// Three-stage deep pipeline with split-out normalization
+/// (arXiv 2408.11997 style).
+pub const DEEP3: PipelineSpec = PipelineSpec {
+    name: "deep3",
+    aliases: &["3stage", "deep-3"],
+    summary: "3-stage deep pipeline: norm split out, clock headroom",
+    spacing: 2,
+    depth: 3,
+    column_tail: 0,
+    stages: DEEP3_STAGES,
+    regs: DEEP3_REGS,
+    datapath: DatapathId::Baseline,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::PipelineKind;
+
+    #[test]
+    fn all_presets_validate() {
+        for kind in PipelineKind::ALL {
+            kind.spec().validate();
+        }
+    }
+
+    #[test]
+    fn preset_names_and_aliases_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for kind in PipelineKind::ALL {
+            let s = kind.spec();
+            assert!(seen.insert(s.name), "duplicate name {}", s.name);
+            for &a in s.aliases {
+                assert!(seen.insert(a), "duplicate alias {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn psum_stage_encodes_the_two_disciplines() {
+        // Capture at accept for S == D, late read at stage D−S+1 else.
+        assert_eq!(BASELINE_3B.psum_stage(), 1);
+        assert!(BASELINE_3B.captures_at_accept());
+        assert_eq!(SKEWED.psum_stage(), 2);
+        assert!(!SKEWED.captures_at_accept());
+        assert_eq!(TRANSPARENT.psum_stage(), 2);
+        assert_eq!(DEEP3.psum_stage(), 2);
+        assert!(!DEEP3.captures_at_accept());
+    }
+
+    #[test]
+    fn block_inventory_matches_the_figures() {
+        // Fig. 3(a)/(b): one aligner + one normalizer.
+        let shifters =
+            |s: &PipelineSpec| s.block_count(Block::Align) + s.block_count(Block::Norm);
+        assert_eq!(shifters(&BASELINE_3B), 2.0);
+        assert_eq!(shifters(&REGULAR_3A), 2.0);
+        // Fig. 6: merged pair (1.2×) + product aligner, no normalizer.
+        assert!((shifters(&SKEWED) - 2.2).abs() < 1e-12);
+        assert_eq!(SKEWED.block_count(Block::Fix), 1.0);
+        assert_eq!(BASELINE_3B.block_count(Block::Fix), 0.0);
+        // Every organisation has exactly one multiplier and one adder.
+        for kind in PipelineKind::ALL {
+            assert_eq!(kind.spec().block_count(Block::Mult), 1.0, "{kind}");
+            assert_eq!(kind.spec().block_count(Block::Add), 1.0, "{kind}");
+        }
+    }
+
+    #[test]
+    fn spec_identity_is_the_name() {
+        let mut renamed = SKEWED;
+        renamed.name = "custom";
+        assert_ne!(renamed, SKEWED);
+        assert_eq!(SKEWED, *PipelineKind::Skewed.spec());
+    }
+
+    #[test]
+    fn custom_spec_with_configurable_spacing_validates() {
+        // The ArrayFlex axis the registry is built for: a const spec
+        // with any 1 ≤ S ≤ D is a first-class organisation.
+        const WIDE: PipelineSpec = PipelineSpec {
+            name: "custom-s3",
+            aliases: &[],
+            summary: "spacing-3 capture organisation",
+            spacing: 3,
+            depth: 3,
+            column_tail: 0,
+            stages: DEEP3_STAGES,
+            regs: DEEP3_REGS,
+            datapath: DatapathId::Baseline,
+        };
+        WIDE.validate();
+        assert_eq!(WIDE.psum_stage(), 1);
+        assert!(WIDE.captures_at_accept());
+    }
+
+    #[test]
+    #[should_panic]
+    fn spacing_beyond_depth_is_rejected() {
+        let mut bad = BASELINE_3B;
+        bad.spacing = 3;
+        bad.validate();
+    }
+}

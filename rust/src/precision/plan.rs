@@ -8,16 +8,24 @@
 //! energy at the layer's closed-form latency); quality is costed with
 //! the [`crate::precision::error`] analysis against the f64 oracle.
 //!
-//! **Search.**  For each layer the candidates are ordered by modeled
-//! energy, cheapest first, and the planner walks that order greedily:
-//! the first format whose measured error fits the per-layer budget
-//! wins.  A budget violation *backtracks* to the next-cheapest
-//! candidate, and when every candidate is over budget the layer falls
-//! back to FP32 (flagged `within_budget = false` rather than silently
-//! accepted — a zero budget therefore plans all-FP32, the most exact
-//! datapath on offer, and an infinite budget plans the cheapest format
-//! everywhere).  Error analyses run lazily along the walk, so a
-//! permissive budget never pays for the formats it skipped.
+//! **Search.**  The candidate space is **format × pipeline
+//! organisation**: every configured [`FpFormat`] crossed with every
+//! configured [`PipelineKind`] (the registry axis ISSUE 4 opened).  Per
+//! layer the candidates are ordered clock-feasible-first (an
+//! organisation whose critical stage busts the costed clock for the
+//! format's chain — [`clock_feasible`] — is a last resort, never a
+//! bargain), cheapest modeled energy within each class, and the
+//! planner walks that order greedily: the first candidate whose
+//! measured error fits the per-layer budget wins.  Numerical error is a
+//! property of the *format alone* — all registered organisations are
+//! bit-identical by construction — so error analyses are shared across
+//! kinds and run lazily along the walk; a budget violation *backtracks*
+//! to the next-cheapest candidate, and when every candidate is over
+//! budget the layer falls back to FP32 under its cheapest organisation
+//! (flagged `within_budget = false` rather than silently accepted — a
+//! zero budget therefore plans all-FP32, the most exact datapath on
+//! offer, and an infinite budget plans the cheapest candidate
+//! everywhere).
 //!
 //! Per-layer budgets make the greedy walk exact (layers are
 //! independent: the serving deployment quantizes each layer's weights
@@ -27,10 +35,28 @@
 use super::error::{analyze_layer, chain_for, AnalysisConfig, ErrorStats};
 use crate::arith::format::FpFormat;
 use crate::energy::{layer_energy, AreaModel, PowerModel};
+use crate::pe::delay::{StageDelays, CLOCK_PERIOD_FO4};
 use crate::pe::PipelineKind;
 use crate::sa::tile::{GemmShape, TilePlan};
 use crate::timing::model::TimingConfig;
 use crate::workloads::layer::LayerDef;
+
+/// Human-readable label of an organisation candidate set (report
+/// titles; shared by [`PlannerConfig`] and [`PrecisionPlan`]).
+pub fn kinds_label(kinds: &[PipelineKind]) -> String {
+    kinds.iter().map(|k| k.name()).collect::<Vec<_>>().join("+")
+}
+
+/// Whether an organisation closes timing for a format's chain at the
+/// configured clock (the reference [`CLOCK_PERIOD_FO4`] is the 1 GHz
+/// point, so the available period scales inversely with the clock).
+/// The planner prefers clock-feasible candidates and flags the chosen
+/// one either way — an "energy-cheapest" plan on an organisation the
+/// delay model says cannot run at the costed clock would be fiction.
+pub fn clock_feasible(kind: PipelineKind, fmt: FpFormat, tcfg: &TimingConfig) -> bool {
+    let chain = chain_for(fmt);
+    StageDelays::for_spec(kind.spec(), &chain).feasible_at(CLOCK_PERIOD_FO4 / tcfg.clock_ghz)
+}
 
 /// Planner knobs: the quality budget, the hardware point to cost
 /// against, and the analysis sweep size.
@@ -40,8 +66,9 @@ pub struct PlannerConfig {
     /// [`crate::precision::error`]); `f64::INFINITY` disables the
     /// quality constraint.
     pub budget: f64,
-    /// Pipeline organisation to cost (energy and cycles).
-    pub kind: PipelineKind,
+    /// Candidate pipeline organisations (must be non-empty; the
+    /// candidate space is `candidates × kinds`).
+    pub kinds: Vec<PipelineKind>,
     /// Candidate input formats (the planner appends FP32 as the
     /// fallback if it is missing).
     pub candidates: Vec<FpFormat>,
@@ -55,11 +82,16 @@ impl PlannerConfig {
     pub fn paper(budget: f64) -> PlannerConfig {
         PlannerConfig {
             budget,
-            kind: PipelineKind::Skewed,
+            kinds: vec![PipelineKind::Skewed],
             candidates: FpFormat::ALL.to_vec(),
             analysis: AnalysisConfig::default(),
             tcfg: TimingConfig::PAPER,
         }
+    }
+
+    /// Human-readable label of the organisation axis (report titles).
+    pub fn kinds_label(&self) -> String {
+        kinds_label(&self.kinds)
     }
 }
 
@@ -71,8 +103,10 @@ pub struct LayerPlan {
     /// The chosen input format (accumulation format follows
     /// [`chain_for`]).
     pub fmt: FpFormat,
+    /// The chosen pipeline organisation.
+    pub kind: PipelineKind,
     pub stats: ErrorStats,
-    /// Modeled layer energy under `fmt` (µJ).
+    /// Modeled layer energy under `(fmt, kind)` (µJ).
     pub energy_uj: f64,
     /// Layer latency in cycles (shape- and kind-dependent only —
     /// identical across formats, which is what makes energy the
@@ -80,15 +114,21 @@ pub struct LayerPlan {
     pub cycles: u64,
     /// `false` when the layer fell back to FP32 over budget.
     pub within_budget: bool,
+    /// Whether the chosen organisation closes timing for the chosen
+    /// format's chain at the costed clock ([`clock_feasible`]).  The
+    /// walk prefers feasible candidates; this flags the (rare) plans
+    /// where no candidate closes timing.
+    pub clock_feasible: bool,
 }
 
-/// A per-layer format assignment for a network.
+/// A per-layer (format, organisation) assignment for a network.
 #[derive(Clone, Debug)]
 pub struct PrecisionPlan {
     /// Human-readable plan label (`"mixed"` or a uniform format name).
     pub label: String,
     pub budget: f64,
-    pub kind: PipelineKind,
+    /// The organisation candidate set the plan was drawn from.
+    pub kinds: Vec<PipelineKind>,
     pub layers: Vec<LayerPlan>,
 }
 
@@ -120,6 +160,21 @@ impl PrecisionPlan {
             .map(|&f| (f, self.layers.iter().filter(|l| l.fmt == f).count()))
             .filter(|&(_, n)| n > 0)
             .collect()
+    }
+
+    /// Layer count per chosen organisation, in [`PipelineKind::ALL`]
+    /// order.
+    pub fn kind_histogram(&self) -> Vec<(PipelineKind, usize)> {
+        PipelineKind::ALL
+            .iter()
+            .map(|&k| (k, self.layers.iter().filter(|l| l.kind == k).count()))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
+    /// Human-readable label of the plan's organisation candidate set.
+    pub fn kinds_label(&self) -> String {
+        kinds_label(&self.kinds)
     }
 }
 
@@ -155,55 +210,67 @@ fn candidates_with_fp32(cfg: &PlannerConfig) -> Vec<FpFormat> {
 type StatsOf = dyn FnMut(usize, &LayerDef, FpFormat) -> ErrorStats;
 
 fn plan_with(layers: &[LayerDef], cfg: &PlannerConfig, stats_of: &mut StatsOf) -> PrecisionPlan {
+    assert!(!cfg.kinds.is_empty(), "planner needs at least one pipeline organisation");
     let candidates = candidates_with_fp32(cfg);
     let assignments = layers
         .iter()
         .enumerate()
         .map(|(li, layer)| {
             let shape = layer.gemm();
-            // Cheapest-first walk order for this layer.
-            let mut costed: Vec<(FpFormat, f64, u64)> = candidates
-                .iter()
-                .map(|&f| {
-                    let (uj, cyc) = layer_format_energy(&cfg.tcfg, cfg.kind, f, shape);
-                    (f, uj, cyc)
-                })
-                .collect();
-            costed.sort_by(|a, b| a.1.total_cmp(&b.1));
+            // Walk order over format × organisation: clock-feasible
+            // candidates first, cheapest-energy within each class — an
+            // organisation that cannot close timing at the costed clock
+            // (e.g. `transparent` on wide chains) is a last resort, not
+            // a bargain.
+            let mut costed: Vec<(FpFormat, PipelineKind, f64, u64, bool)> =
+                Vec::with_capacity(candidates.len() * cfg.kinds.len());
+            for &f in &candidates {
+                for &k in &cfg.kinds {
+                    let (uj, cyc) = layer_format_energy(&cfg.tcfg, k, f, shape);
+                    costed.push((f, k, uj, cyc, clock_feasible(k, f, &cfg.tcfg)));
+                }
+            }
+            costed.sort_by(|a, b| b.4.cmp(&a.4).then(a.2.total_cmp(&b.2)));
             let mut fallback = None;
             let mut chosen = None;
-            for &(f, uj, cyc) in &costed {
+            for &(f, k, uj, cyc, clk) in &costed {
+                // Error depends on the format only (all organisations
+                // are bit-identical), so the analysis is shared across
+                // kinds of the same format by the memoising `stats_of`.
                 let stats = stats_of(li, layer, f);
-                if f == FpFormat::FP32 {
-                    fallback = Some((f, uj, cyc, stats));
+                if f == FpFormat::FP32 && fallback.is_none() {
+                    // Preferred FP32 candidate in walk order.
+                    fallback = Some((f, k, uj, cyc, clk, stats));
                 }
                 if stats.meets(cfg.budget) {
-                    chosen = Some((f, uj, cyc, stats, true));
+                    chosen = Some((f, k, uj, cyc, clk, stats, true));
                     break;
                 }
-                // Over budget: backtrack to the next-cheapest candidate.
+                // Over budget: backtrack to the next candidate.
             }
-            let (f, uj, cyc, stats, within) = chosen.unwrap_or_else(|| {
-                // Every candidate busted the budget; FP32 was analyzed on
-                // the walk (it is always a candidate) — take it, flagged.
-                let (f, uj, cyc, stats) = fallback.expect("FP32 is always walked");
-                (f, uj, cyc, stats, false)
+            let (f, k, uj, cyc, clk, stats, within) = chosen.unwrap_or_else(|| {
+                // Every candidate busted the budget; FP32 was walked (it
+                // is always a candidate) — take it, flagged.
+                let (f, k, uj, cyc, clk, stats) = fallback.expect("FP32 is always walked");
+                (f, k, uj, cyc, clk, stats, false)
             });
             LayerPlan {
                 layer: layer.name.clone(),
                 shape,
                 fmt: f,
+                kind: k,
                 stats,
                 energy_uj: uj,
                 cycles: cyc,
                 within_budget: within,
+                clock_feasible: clk,
             }
         })
         .collect();
     PrecisionPlan {
         label: "mixed".into(),
         budget: cfg.budget,
-        kind: cfg.kind,
+        kinds: cfg.kinds.clone(),
         layers: assignments,
     }
 }
@@ -214,37 +281,58 @@ fn uniform_with(
     cfg: &PlannerConfig,
     stats_of: &mut StatsOf,
 ) -> PrecisionPlan {
+    assert!(!cfg.kinds.is_empty(), "planner needs at least one pipeline organisation");
     let assignments = layers
         .iter()
         .enumerate()
         .map(|(li, layer)| {
             let shape = layer.gemm();
-            let (uj, cyc) = layer_format_energy(&cfg.tcfg, cfg.kind, fmt, shape);
+            // Uniform in format; the organisation axis still picks the
+            // preferred registered kind per layer (clock-feasible
+            // first, cheapest within each class — same key as the
+            // mixed walk).
+            let (kind, uj, cyc, clk) = cfg
+                .kinds
+                .iter()
+                .map(|&k| {
+                    let (uj, cyc) = layer_format_energy(&cfg.tcfg, k, fmt, shape);
+                    (k, uj, cyc, clock_feasible(k, fmt, &cfg.tcfg))
+                })
+                .min_by(|a, b| b.3.cmp(&a.3).then(a.1.total_cmp(&b.1)))
+                .expect("non-empty kinds");
             let stats = stats_of(li, layer, fmt);
             LayerPlan {
                 layer: layer.name.clone(),
                 shape,
                 fmt,
+                kind,
                 stats,
                 energy_uj: uj,
                 cycles: cyc,
                 within_budget: stats.meets(cfg.budget),
+                clock_feasible: clk,
             }
         })
         .collect();
     PrecisionPlan {
         label: fmt.display_name().to_string(),
         budget: cfg.budget,
-        kind: cfg.kind,
+        kinds: cfg.kinds.clone(),
         layers: assignments,
     }
 }
 
-/// Plan one network: per-layer greedy-by-energy with backtracking.
-/// Error analyses run lazily along the walk, so a permissive budget
-/// never pays for the formats it skipped.
+/// Plan one network: per-layer greedy-by-energy with backtracking over
+/// the format × organisation candidate space.  Error analyses run
+/// lazily along the walk and are memoised per (layer, format), so a
+/// permissive budget never pays for the candidates it skipped and the
+/// organisation axis never re-runs an analysis.
 pub fn plan_layers(layers: &[LayerDef], cfg: &PlannerConfig) -> PrecisionPlan {
-    plan_with(layers, cfg, &mut |_, layer, f| analyze_layer(layer, f, &cfg.analysis).stats)
+    let mut memo: std::collections::HashMap<(usize, FpFormat), ErrorStats> =
+        std::collections::HashMap::new();
+    plan_with(layers, cfg, &mut |li, layer, f| {
+        *memo.entry((li, f)).or_insert_with(|| analyze_layer(layer, f, &cfg.analysis).stats)
+    })
 }
 
 /// A uniform (single-format) plan: the Pareto baseline points.
@@ -310,7 +398,7 @@ mod tests {
     fn small_cfg(budget: f64) -> PlannerConfig {
         PlannerConfig {
             budget,
-            kind: PipelineKind::Skewed,
+            kinds: vec![PipelineKind::Skewed],
             candidates: FpFormat::ALL.to_vec(),
             analysis: AnalysisConfig { m_cap: 3, n_cap: 4, seed: 7 },
             tcfg: TimingConfig { rows: 16, cols: 16, clock_ghz: 1.0, double_buffer: true },
@@ -337,14 +425,105 @@ mod tests {
         for l in &plan.layers {
             let cheapest = FpFormat::ALL
                 .iter()
-                .map(|&f| (f, layer_format_energy(&cfg.tcfg, cfg.kind, f, l.shape).0))
+                .map(|&f| (f, layer_format_energy(&cfg.tcfg, cfg.kinds[0], f, l.shape).0))
                 .min_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap()
                 .0;
             assert_eq!(l.fmt, cheapest, "{}", l.layer);
+            assert_eq!(l.kind, PipelineKind::Skewed, "single-kind config");
             assert!(l.within_budget);
         }
         assert!(plan.meets_budget());
+    }
+
+    #[test]
+    fn organisation_axis_picks_the_cheapest_feasible_kind() {
+        // format × organisation walk: with every registered kind
+        // offered and no quality constraint, each layer lands on the
+        // (format, kind) pair that is cheapest among the clock-feasible
+        // candidates (feasible-first, then energy — the walk's key).
+        let mut cfg = small_cfg(f64::INFINITY);
+        cfg.kinds = PipelineKind::ALL.to_vec();
+        let plan = plan_layers(&tiny_layers(), &cfg);
+        for l in &plan.layers {
+            let mut best: Option<(FpFormat, PipelineKind, f64, bool)> = None;
+            for &f in &FpFormat::ALL {
+                for &k in &cfg.kinds {
+                    let e = layer_format_energy(&cfg.tcfg, k, f, l.shape).0;
+                    let clk = clock_feasible(k, f, &cfg.tcfg);
+                    let better = match best {
+                        None => true,
+                        // Same key as the walk: feasibility class
+                        // first, energy within the class.
+                        Some((_, _, be, bclk)) => {
+                            if clk != bclk {
+                                clk
+                            } else {
+                                e < be
+                            }
+                        }
+                    };
+                    if better {
+                        best = Some((f, k, e, clk));
+                    }
+                }
+            }
+            let (bf, bk, _, bclk) = best.unwrap();
+            assert_eq!((l.fmt, l.kind), (bf, bk), "{}", l.layer);
+            assert!(bclk, "some candidate always closes timing at 1 GHz");
+            assert!(l.clock_feasible, "{}", l.layer);
+        }
+        // The plan records the candidate set it was drawn from.
+        assert_eq!(plan.kinds, PipelineKind::ALL.to_vec());
+        let counted: usize = plan.kind_histogram().iter().map(|&(_, n)| n).sum();
+        assert_eq!(counted, plan.layers.len());
+    }
+
+    #[test]
+    fn clock_infeasible_kinds_are_a_last_resort() {
+        // Transparent busts the 1 GHz clock on the BF16 chain (pinned in
+        // pe/delay tests) but closes it on the narrow FP8 chains — the
+        // feasibility gate is per (kind, format), not per kind.
+        let tcfg = TimingConfig { rows: 16, cols: 16, clock_ghz: 1.0, double_buffer: true };
+        assert!(!clock_feasible(PipelineKind::Transparent, FpFormat::BF16, &tcfg));
+        assert!(clock_feasible(PipelineKind::Baseline3b, FpFormat::BF16, &tcfg));
+        assert!(clock_feasible(PipelineKind::Transparent, FpFormat::FP8E5M2, &tcfg));
+        // BF16-only candidates + {baseline, transparent}: transparent is
+        // modeled cheaper (fewer cycles, less area) but infeasible, so
+        // the walk must land on the baseline — flagged feasible.
+        let mut cfg = small_cfg(f64::INFINITY);
+        cfg.candidates = vec![FpFormat::BF16];
+        cfg.kinds = vec![PipelineKind::Baseline3b, PipelineKind::Transparent];
+        let plan = plan_layers(&tiny_layers(), &cfg);
+        for l in &plan.layers {
+            assert_eq!(l.fmt, FpFormat::BF16, "{}", l.layer);
+            assert_eq!(l.kind, PipelineKind::Baseline3b, "{}", l.layer);
+            assert!(l.clock_feasible, "{}", l.layer);
+        }
+        // At a clock no candidate closes, the plan still emerges — every
+        // layer flagged clock-infeasible instead of silently "cheap".
+        let mut fast = small_cfg(f64::INFINITY);
+        fast.tcfg.clock_ghz = 4.0;
+        fast.candidates = vec![FpFormat::BF16];
+        fast.kinds = vec![PipelineKind::Baseline3b];
+        let plan = plan_layers(&tiny_layers(), &fast);
+        for l in &plan.layers {
+            assert!(!l.clock_feasible, "{}", l.layer);
+        }
+    }
+
+    #[test]
+    fn organisation_axis_changes_energy_ordering() {
+        // A spacing-1 organisation finishes layers sooner, so at equal
+        // format its modeled energy undercuts the spacing-2 baseline —
+        // the axis the planner can now explore.
+        let shape = GemmShape::new(16, 64, 32);
+        let t = TimingConfig { rows: 16, cols: 16, clock_ghz: 1.0, double_buffer: true };
+        let e = |k| layer_format_energy(&t, k, FpFormat::BF16, shape).0;
+        assert!(e(PipelineKind::Transparent) < e(PipelineKind::Baseline3b));
+        let c = |k| layer_format_energy(&t, k, FpFormat::BF16, shape).1;
+        assert!(c(PipelineKind::Transparent) < c(PipelineKind::Baseline3b));
+        assert!(c(PipelineKind::Deep3) > c(PipelineKind::Baseline3b));
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! activation register per hop, so column `c` sees `a[m][r]` exactly one
 //! cycle after column `c−1`.  The array computes one weight-tile GEMM
 //! `A(M×R) × W(R×C) → Y(M×C)` with the paper's numeric semantics
-//! (double-width partial sums, one rounding per column output).
+//! (double-width partial sums, one rounding per column output), under
+//! any registered (or custom) [`PipelineSpec`] — the capture/late-read
+//! hand-off discipline is derived from the spec exactly as in the
+//! column simulator.
 //!
 //! This is the *dense reference loop*: it walks every PE every cycle and
 //! keeps the register file as `Option`-heavy structs, prioritising
@@ -18,8 +21,8 @@
 
 use crate::arith::accum::{ColumnOracle, RoundingUnit};
 use crate::arith::fma::{ChainCfg, PsumSignal};
-use crate::pe::cycle::{CyclePe, OutReg, PeActivity, S1Reg};
-use crate::pe::PipelineKind;
+use crate::pe::cycle::{CyclePe, OutReg, PeActivity, StageReg};
+use crate::pe::{PipelineKind, PipelineSpec};
 use crate::sa::column::SimError;
 use crate::sa::dataflow::WsSchedule;
 use std::collections::VecDeque;
@@ -36,7 +39,8 @@ pub struct ArrayOutput {
 /// Cycle-accurate R×C array simulator.
 pub struct ArraySim {
     pub cfg: ChainCfg,
-    pub kind: PipelineKind,
+    /// The pipeline organisation under simulation.
+    pub spec: PipelineSpec,
     sched: WsSchedule,
     /// PE grid, row-major: `pes[r * cols + c]`.
     pes: Vec<CyclePe>,
@@ -54,16 +58,27 @@ pub struct ArraySim {
     /// South-edge rounding unit, constructed once per simulator.
     ru: RoundingUnit,
     /// Reusable per-tick staging buffers (all-`None` between ticks): the
-    /// next output/stage-1 register values, committed at tick end.  Kept
-    /// in the struct so `tick` allocates nothing.
+    /// next output/acceptance register values, committed at tick end.
+    /// Kept in the struct so `tick` allocates nothing.
     scratch_out: Vec<Option<OutReg>>,
-    scratch_s1: Vec<Option<S1Reg>>,
+    scratch_accept: Vec<Option<StageReg>>,
 }
 
 impl ArraySim {
     /// `weights[r][c]`; activations `a[m][r]`.
     pub fn new(cfg: ChainCfg, kind: PipelineKind, weights: &[Vec<u64>], a: Vec<Vec<u64>>) -> Self {
+        Self::with_spec(cfg, *kind.spec(), weights, a)
+    }
+
+    /// As [`ArraySim::new`], for any (possibly custom) pipeline spec.
+    pub fn with_spec(
+        cfg: ChainCfg,
+        spec: PipelineSpec,
+        weights: &[Vec<u64>],
+        a: Vec<Vec<u64>>,
+    ) -> Self {
         cfg.check();
+        spec.validate();
         let rows = weights.len();
         assert!(rows >= 1, "empty array");
         let cols = weights[0].len();
@@ -71,16 +86,17 @@ impl ArraySim {
         for row in &a {
             assert_eq!(row.len(), rows, "activation row width != array depth");
         }
+        let depth = spec.depth as usize;
         let mut pes = Vec::with_capacity(rows * cols);
         for r in 0..rows {
             for c in 0..cols {
-                pes.push(CyclePe::new(kind, weights[r][c]));
+                pes.push(CyclePe::with_depth(depth, weights[r][c]));
             }
         }
-        let sched = WsSchedule::new(kind, rows, cols, a.len());
+        let sched = WsSchedule::with_spec(spec, rows, cols, a.len());
         ArraySim {
             cfg,
-            kind,
+            spec,
             sched,
             pes,
             rows,
@@ -94,7 +110,7 @@ impl ArraySim {
             stalls: 0,
             ru: RoundingUnit::new(cfg),
             scratch_out: vec![None; rows * cols],
-            scratch_s1: vec![None; rows * cols],
+            scratch_accept: vec![None; rows * cols],
         }
     }
 
@@ -122,39 +138,55 @@ impl ArraySim {
     /// Advance one clock cycle.
     pub fn tick(&mut self) -> Result<(), SimError> {
         let (rows, cols, t) = (self.rows, self.cols, self.cycle);
+        let psum_stage = self.spec.psum_stage() as usize;
+        let capture = self.spec.captures_at_accept();
+        let datapath = self.spec.datapath.handle();
+        let zero = PsumSignal::zero(&self.cfg);
 
-        // ---- stage-2 evaluation (current registers) --------------------
+        // ---- psum acquisition + exit-stage staging ---------------------
         // Staged into the reusable scratch buffers (left all-`None` by
         // the previous commit), so the tick performs no allocation.
         for r in 0..rows {
             for c in 0..cols {
                 let i = self.idx(r, c);
-                let psum_late = if self.kind.is_skewed() && r > 0 {
-                    let up = self.idx(r - 1, c);
-                    match (&self.pes[i].s1, &self.pes[up].out) {
-                        (Some(s1), Some(prev)) => {
-                            if prev.m != s1.m {
-                                return Err(SimError::OutOfOrder {
-                                    pe: i,
-                                    got: prev.m,
-                                    want: s1.m,
-                                });
+                if !capture {
+                    let slot_idx = psum_stage - 2;
+                    if let Some(slot) = self.pes[i].pipe[slot_idx] {
+                        let psum = if r == 0 {
+                            zero
+                        } else {
+                            let up = self.idx(r - 1, c);
+                            match self.pes[up].out {
+                                Some(prev) => {
+                                    if prev.m != slot.m {
+                                        return Err(SimError::OutOfOrder {
+                                            pe: i,
+                                            got: prev.m,
+                                            want: slot.m,
+                                        });
+                                    }
+                                    self.pes[up].out.as_mut().unwrap().taken = true;
+                                    prev.sig
+                                }
+                                None => unreachable!("late psum read with no upstream psum"),
                             }
-                            Some(prev.sig)
-                        }
-                        (Some(_), None) => unreachable!("skewed stage-2 with no upstream psum"),
-                        _ => None,
-                    }
-                } else {
-                    None
-                };
-                if self.kind.is_skewed() && r > 0 && self.pes[i].s1.is_some() {
-                    let up = self.idx(r - 1, c);
-                    if let Some(prev) = self.pes[up].out.as_mut() {
-                        prev.taken = true;
+                        };
+                        let w = self.pes[i].weight;
+                        let val = datapath.step(&self.cfg, &psum, slot.a, w);
+                        self.pes[i].pipe[slot_idx].as_mut().unwrap().val = Some(val);
                     }
                 }
-                self.scratch_out[i] = self.pes[i].eval_stage2(&self.cfg, psum_late.as_ref());
+                self.scratch_out[i] = match self.pes[i].exit_slot() {
+                    Some(slot) => {
+                        let sig = slot.val.expect("datapath value computed by the psum stage");
+                        self.pes[i].activity.s2_evals += 1;
+                        Some(OutReg { m: slot.m, sig, taken: false })
+                    }
+                    None => {
+                        self.pes[i].activity.s2_bubbles += 1;
+                        None
+                    }
+                };
             }
         }
 
@@ -163,7 +195,7 @@ impl ArraySim {
             let i = self.idx(rows - 1, c);
             if let Some(last) = self.pes[i].out.as_mut() {
                 if !last.taken {
-                    let ready = t + self.kind.column_tail();
+                    let ready = t + self.spec.column_tail;
                     self.round_q[c].push_back((ready, last.m, last.sig));
                     last.taken = true;
                 }
@@ -190,21 +222,21 @@ impl ArraySim {
                 }
                 let (ready, captured): (bool, Option<PsumSignal>) = if r == 0 {
                     (true, None)
-                } else if self.kind.is_skewed() {
-                    let up = self.idx(r - 1, c);
-                    match self.pes[up].s1 {
-                        Some(s) if s.m == want => (true, None),
-                        Some(s) if s.m > want => {
-                            return Err(SimError::OutOfOrder { pe: i, got: s.m, want })
-                        }
-                        _ => (false, None),
-                    }
-                } else {
+                } else if capture {
                     let up = self.idx(r - 1, c);
                     match self.pes[up].out {
                         Some(o) if o.m == want && !o.taken => (true, Some(o.sig)),
                         Some(o) if o.m > want => {
                             return Err(SimError::OutOfOrder { pe: i, got: o.m, want })
+                        }
+                        _ => (false, None),
+                    }
+                } else {
+                    let up = self.idx(r - 1, c);
+                    match self.pes[up].pipe[self.spec.spacing as usize - 1] {
+                        Some(s) if s.m == want => (true, None),
+                        Some(s) if s.m > want => {
+                            return Err(SimError::OutOfOrder { pe: i, got: s.m, want })
                         }
                         _ => (false, None),
                     }
@@ -224,12 +256,19 @@ impl ArraySim {
                     self.pes[i].stage1_bubble();
                     continue;
                 }
-                if r > 0 && !self.kind.is_skewed() {
+                if r > 0 && capture {
                     let up = self.idx(r - 1, c);
                     self.pes[up].out.as_mut().unwrap().taken = true;
                 }
-                let reg = S1Reg { m: want, a: self.a[want][r], psum: captured };
-                self.scratch_s1[i] = Some(self.pes[i].accept_stage1(reg));
+                let a = self.a[want][r];
+                let val = if psum_stage == 1 {
+                    let psum = captured.unwrap_or(zero);
+                    Some(datapath.step(&self.cfg, &psum, a, self.pes[i].weight))
+                } else {
+                    None
+                };
+                let reg = StageReg { m: want, a, val };
+                self.scratch_accept[i] = Some(self.pes[i].accept_stage1(reg));
                 self.next_feed[i] = want + 1;
             }
         }
@@ -246,7 +285,8 @@ impl ArraySim {
                 }
                 self.pes[i].out = Some(new);
             }
-            self.pes[i].s1 = self.scratch_s1[i].take();
+            let accepted = self.scratch_accept[i].take();
+            self.pes[i].shift(accepted);
         }
         self.cycle = t + 1;
         Ok(())
@@ -351,9 +391,9 @@ mod tests {
     }
 
     #[test]
-    fn array_matches_oracle_both_kinds() {
+    fn array_matches_oracle_every_kind() {
         let mut rng = Rng::new(0xa11a);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in PipelineKind::ALL {
             for (m, r, c) in [(1usize, 1usize, 1usize), (4, 3, 2), (8, 8, 8), (5, 16, 4)] {
                 let (w, a) = random_case(&mut rng, m, r, c);
                 let want = ArraySim::oracle_bits(&CFG, &w, &a);
@@ -368,7 +408,7 @@ mod tests {
     #[test]
     fn array_latency_matches_closed_form() {
         let mut rng = Rng::new(0xbee);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in PipelineKind::ALL {
             for (m, r, c) in [(4usize, 4usize, 4usize), (16, 8, 2), (2, 2, 16)] {
                 let (w, a) = random_case(&mut rng, m, r, c);
                 let mut sim = ArraySim::new(CFG, kind, &w, a);
@@ -387,7 +427,7 @@ mod tests {
         let mut rng = Rng::new(0x3232);
         let (w, a) = random_case(&mut rng, 16, 32, 32);
         let want = ArraySim::oracle_bits(&CFG, &w, &a);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed, PipelineKind::Deep3] {
             let mut sim = ArraySim::new(CFG, kind, &w, a.clone());
             sim.run(1_000_000).unwrap();
             assert_eq!(sim.result_bits(), want, "{kind}");
@@ -418,7 +458,7 @@ mod tests {
             .map(|_| (0..r).map(|_| bf(rng.normal_scaled(0.0, 2.0))).collect())
             .collect();
         let want = ArraySim::oracle_bits(&CFG, &w, &a);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in PipelineKind::ALL {
             let mut sim = ArraySim::new(CFG, kind, &w, a.clone());
             sim.run(100_000).unwrap();
             assert_eq!(sim.result_bits(), want, "{kind}");

@@ -1,34 +1,51 @@
 //! Weight-stationary dataflow scheduling.
 //!
 //! Generates the West-edge input staircase ("skew") and the derived
-//! fill/stream/drain phase boundaries for a given PE pipeline kind.
-//! The paper's central timing effect lives here: the baseline pipeline
-//! forces a chain spacing of **2** cycles per row (PE *i+1* starts an
-//! element only after PE *i* finishes both stages, Fig. 4), while the
-//! skewed pipeline needs only **1** (Fig. 6) — so the input staircase is
-//! half as steep and the column drains in half the time.
+//! fill/stream/drain phase boundaries for a given PE pipeline
+//! organisation.  The paper's central timing effect lives here: the
+//! baseline pipeline forces a chain spacing of **2** cycles per row
+//! (PE *i+1* starts an element only after PE *i* finishes both stages,
+//! Fig. 4), while the skewed pipeline needs only **1** (Fig. 6) — so the
+//! input staircase is half as steep and the column drains in half the
+//! time.  The schedule is fully determined by the organisation's
+//! [`PipelineSpec`]: spacing `S`, depth `D` and column tail `τ` give
+//!
+//! ```text
+//! T_tile = (M−1) + (C_used−1) + S·(R−1) + D + 1 + τ
+//! ```
+//!
+//! which the cycle simulators reproduce register-for-register
+//! (`tests/prop_pipelines.rs` sweeps every registered organisation).
 
-use crate::pe::PipelineKind;
+use crate::pe::{PipelineKind, PipelineSpec};
 
 /// The weight-stationary schedule for one tile: `rows`×`cols` PEs
-/// streaming `m_total` input rows.
+/// streaming `m_total` input rows under one pipeline organisation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WsSchedule {
-    pub kind: PipelineKind,
+    /// The pipeline organisation (identity = spec name).
+    pub spec: PipelineSpec,
     pub rows: usize,
     pub cols: usize,
     pub m_total: usize,
 }
 
 impl WsSchedule {
+    /// Schedule for a registered organisation.
     pub fn new(kind: PipelineKind, rows: usize, cols: usize, m_total: usize) -> Self {
-        assert!(rows >= 1 && cols >= 1);
-        WsSchedule { kind, rows, cols, m_total }
+        Self::with_spec(*kind.spec(), rows, cols, m_total)
     }
 
-    /// Chain spacing `S` of this schedule's pipeline kind.
+    /// Schedule for any (possibly custom) spec.
+    pub fn with_spec(spec: PipelineSpec, rows: usize, cols: usize, m_total: usize) -> Self {
+        assert!(rows >= 1 && cols >= 1);
+        spec.validate();
+        WsSchedule { spec, rows, cols, m_total }
+    }
+
+    /// Chain spacing `S` of this schedule's organisation.
     pub fn spacing(&self) -> u64 {
-        self.kind.chain_spacing()
+        self.spec.spacing
     }
 
     /// Cycle at which activation `a[m][r]` must be present at the West
@@ -48,19 +65,21 @@ impl WsSchedule {
     ///
     /// Derivation (validated cycle-for-cycle by the simulator tests):
     /// PE `(R−1, c)` starts stage 1 of element `m` at
-    /// `m + S·(R−1) + c`, its stage 2 ends one cycle later, the skewed
-    /// design spends `column_tail` extra cycles (the Fig. 6 extra
-    /// addition stage), and rounding takes one cycle.
+    /// `m + S·(R−1) + c`, its last stage ends `D − 1` cycles later, the
+    /// organisation spends `column_tail` extra cycles at the column foot
+    /// (the skewed design's Fig. 6 extra addition), and rounding takes
+    /// one cycle.
     pub fn output_cycle(&self, c: usize, m: usize) -> u64 {
         m as u64
             + self.spacing() * (self.rows as u64 - 1)
             + c as u64
-            + 2
-            + self.kind.column_tail()
+            + self.spec.depth
+            + self.spec.column_tail
     }
 
     /// Total cycles to stream the whole tile (first injection at cycle 0
-    /// through the last South-edge output), *excluding* weight preload.
+    /// through the last South-edge output), *excluding* weight preload:
+    /// `(M−1) + (C−1) + S·(R−1) + D + 1 + tail`.
     pub fn total_cycles(&self) -> u64 {
         if self.m_total == 0 {
             return 0;
@@ -98,6 +117,9 @@ mod tests {
         assert_eq!(b.inject_cycle(3, 5), 5 + 6);
         assert_eq!(s.inject_cycle(1, 0), 1);
         assert_eq!(s.inject_cycle(3, 5), 5 + 3);
+        // The transparent organisation shares the spacing-1 staircase.
+        let t = WsSchedule::new(PipelineKind::Transparent, 4, 4, 8);
+        assert_eq!(t.inject_cycle(3, 5), 5 + 3);
     }
 
     #[test]
@@ -108,8 +130,24 @@ mod tests {
 
     #[test]
     fn closed_form_totals() {
-        // T_base = (M−1) + (C−1) + 2R + 1 ; T_skew = (M−1) + (C−1) + R + 3.
+        // T = (M−1) + (C−1) + S·(R−1) + D + 1 + tail for every
+        // registered organisation.
         let (m, r, c) = (16usize, 8usize, 4usize);
+        for kind in PipelineKind::ALL {
+            let sp = kind.spec();
+            let want = (m as u64 - 1)
+                + (c as u64 - 1)
+                + sp.spacing * (r as u64 - 1)
+                + sp.depth
+                + 1
+                + sp.column_tail;
+            assert_eq!(
+                WsSchedule::new(kind, r, c, m).total_cycles(),
+                want,
+                "{kind}"
+            );
+        }
+        // The paper's two hand-derived forms, as printed in §III:
         let b = WsSchedule::new(PipelineKind::Baseline3b, r, c, m);
         let s = WsSchedule::new(PipelineKind::Skewed, r, c, m);
         assert_eq!(b.total_cycles(), (m as u64 - 1) + (c as u64 - 1) + 2 * r as u64 + 1);
@@ -122,6 +160,12 @@ mod tests {
         let b = WsSchedule::new(PipelineKind::Baseline3b, r, c, m).total_cycles();
         let s = WsSchedule::new(PipelineKind::Skewed, r, c, m).total_cycles();
         assert_eq!(b - s, r as u64 - 2);
+        // Transparent drops the tail too: one cycle faster than skewed.
+        let t = WsSchedule::new(PipelineKind::Transparent, r, c, m).total_cycles();
+        assert_eq!(s - t, 1);
+        // Deep3 pays exactly one fill cycle over the baseline.
+        let d = WsSchedule::new(PipelineKind::Deep3, r, c, m).total_cycles();
+        assert_eq!(d - b, 1);
     }
 
     #[test]
@@ -132,8 +176,31 @@ mod tests {
 
     #[test]
     fn phases_ordering() {
-        let s = WsSchedule::new(PipelineKind::Baseline3b, 8, 8, 100);
-        let (fill, steady, drain) = s.phases();
-        assert!(fill <= steady && steady < drain);
+        for kind in PipelineKind::ALL {
+            let s = WsSchedule::new(kind, 8, 8, 100);
+            let (fill, steady, drain) = s.phases();
+            assert!(fill <= steady && steady < drain, "{kind}");
+        }
+    }
+
+    #[test]
+    fn custom_spec_schedules_on_formula() {
+        // The configurable-spacing axis: a custom capture-discipline
+        // spec at S = 3, D = 3 schedules by the same closed form.
+        use crate::pe::spec::{DatapathId, PipelineSpec};
+        const WIDE: PipelineSpec = PipelineSpec {
+            spacing: 3,
+            depth: 3,
+            column_tail: 0,
+            name: "custom-s3",
+            aliases: &[],
+            summary: "test",
+            stages: crate::pe::spec::DEEP3.stages,
+            regs: crate::pe::spec::DEEP3.regs,
+            datapath: DatapathId::Baseline,
+        };
+        let s = WsSchedule::with_spec(WIDE, 8, 4, 16);
+        assert_eq!(s.total_cycles(), 15 + 3 + 3 * 7 + 3 + 1);
+        assert_eq!(s.inject_cycle(2, 0), 6);
     }
 }

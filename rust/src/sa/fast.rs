@@ -4,12 +4,14 @@
 //! reference loop in [`crate::sa::array::ArraySim`].  It simulates the
 //! *same* register-transfer semantics cycle for cycle (the test-suite
 //! asserts bit-, latency-, stall- and activity-parity against the dense
-//! loop), but restructured for speed — see DESIGN.md §2:
+//! loop) for **any** registered [`PipelineSpec`], but restructured for
+//! speed — see DESIGN.md §2:
 //!
 //! * **Structure-of-arrays lanes.**  PE state lives in flat per-column
-//!   vectors (`s1_m` / `s1_a` / `s1_psum` / `out_m` / `out_sig` /
-//!   `out_taken`), not a `Vec<CyclePe>` of `Option`-heavy structs.  A
-//!   tick allocates nothing: the dense loop's two per-tick `rows×cols`
+//!   vectors — a `(depth−1)`-strided pipe (`pipe_m` / `pipe_a` /
+//!   `pipe_val`) plus the output-register lanes (`out_m` / `out_sig` /
+//!   `out_taken`) — not a `Vec<CyclePe>` of `Option`-heavy structs.  A
+//!   tick allocates nothing: the dense loop's per-tick `rows×cols`
 //!   scratch `Vec`s are replaced by an in-place update that walks rows
 //!   **descending**, which makes the two-phase (evaluate-then-commit)
 //!   register discipline come out for free — row `r` only reads row
@@ -18,15 +20,17 @@
 //!
 //! * **Wavefront banding.**  Under a [`WsSchedule`]-consistent run, PE
 //!   `(r, c)` can only change state during the cycle window
-//!   `S·r + c ≤ t ≤ (M−1) + S·r + c + 3` (first possible stage-1 accept
-//!   through last register touch, see the active-band invariant in
-//!   DESIGN.md §2).  Each tick iterates only that diagonal band of rows
-//!   instead of all `R` — an asymptotic win during fill/drain and for
-//!   small-`M` tiles where most of the array idles.  Activity counters
-//!   (which the dense loop accumulates per idle PE per cycle) are
-//!   recovered in closed form: every PE performs exactly `M` stage-1 and
-//!   `M` stage-2 evaluations, and everything else in `T` cycles is
-//!   bubbles.
+//!   `S·r + c ≤ t ≤ (M−1) + S·r + c + D − 1` (first possible stage-1
+//!   accept through the last element's out-commit at accept `+ D − 1`);
+//!   the implementation keeps one extra cycle of downstream-take margin
+//!   (`reach = (M−1) + D` — see the active-band invariant in DESIGN.md
+//!   §2).  Each tick iterates only that diagonal band of
+//!   rows instead of all `R` — an asymptotic win during fill/drain and
+//!   for small-`M` tiles where most of the array idles.  Activity
+//!   counters (which the dense loop accumulates per idle PE per cycle)
+//!   are recovered in closed form: every PE performs exactly `M` entry-
+//!   and `M` exit-stage evaluations, and everything else in `T` cycles
+//!   is bubbles.
 //!
 //! * **Column independence.**  Columns couple only through the
 //!   activation arrival schedule, which is closed-form
@@ -36,7 +40,7 @@
 //!   column strips out across scoped threads.
 //!
 //! The per-column rounding queue is a fixed four-slot ring (the South
-//! edge holds at most two in-flight entries at `column_tail ≤ 1`), and
+//! edge holds at most `column_tail + 1 ≤ 3` in-flight entries), and
 //! the [`RoundingUnit`] is constructed once per simulator rather than
 //! per output.
 //!
@@ -68,15 +72,17 @@
 use crate::arith::accum::{ColumnOracle, RoundingUnit};
 use crate::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
 use crate::pe::cycle::PeActivity;
-use crate::pe::PipelineKind;
+use crate::pe::spec::DatapathId;
+use crate::pe::{PipelineKind, PipelineSpec};
 use crate::sa::column::SimError;
 use crate::sa::dataflow::WsSchedule;
 
 /// Sentinel for "register empty" in the `*_m` element-index lanes.
 const EMPTY: u32 = u32::MAX;
 
-/// South-edge rounding ring capacity (occupancy is ≤ 2 for
-/// `column_tail ≤ 1`; 4 leaves headroom and keeps the modulo cheap).
+/// South-edge rounding ring capacity (occupancy is ≤ `column_tail + 1`
+/// and `PipelineSpec::validate` caps the tail at 2; 4 leaves headroom
+/// and keeps the modulo cheap).
 const RING: usize = 4;
 
 /// One column's complete simulation state: SoA over rows, plus the
@@ -87,13 +93,15 @@ struct ColLane {
     col: usize,
     /// Stationary weights down this column, `w[r]`.
     w: Vec<u64>,
-    /// Stage-1 register: element index (`EMPTY` = bubble).
-    s1_m: Vec<u32>,
-    /// Stage-1 register: captured activation bits.
-    s1_a: Vec<u64>,
-    /// Stage-1 register: captured incoming psum (baseline capture
-    /// discipline; unused by the skewed organisation).
-    s1_psum: Vec<PsumSignal>,
+    /// Internal pipe registers, stride `depth − 1` per row: element
+    /// index at `[r·(D−1) + k]` = the element that has completed stages
+    /// `1..=k+1` (`EMPTY` = bubble).
+    pipe_m: Vec<u32>,
+    /// Pipe registers: activation bits riding with the element.
+    pipe_a: Vec<u64>,
+    /// Pipe registers: the computed datapath value, valid from the
+    /// spec's psum stage onward (from acceptance under capture).
+    pipe_val: Vec<PsumSignal>,
     /// Output register: element index (`EMPTY` = never written).
     out_m: Vec<u32>,
     /// Output register: forwarded partial-sum signal.
@@ -131,7 +139,8 @@ struct LaneCtx<'a> {
 /// magnitude faster on paper-scale tiles (see `bench_hotpath`).
 pub struct FastArraySim {
     pub cfg: ChainCfg,
-    pub kind: PipelineKind,
+    /// The pipeline organisation under simulation.
+    pub spec: PipelineSpec,
     sched: WsSchedule,
     rows: usize,
     cols: usize,
@@ -145,7 +154,18 @@ pub struct FastArraySim {
 impl FastArraySim {
     /// `weights[r][c]`; activations `a[m][r]` (borrowed, flattened).
     pub fn new(cfg: ChainCfg, kind: PipelineKind, weights: &[Vec<u64>], a: &[Vec<u64>]) -> Self {
+        Self::with_spec(cfg, *kind.spec(), weights, a)
+    }
+
+    /// As [`FastArraySim::new`], for any (possibly custom) pipeline spec.
+    pub fn with_spec(
+        cfg: ChainCfg,
+        spec: PipelineSpec,
+        weights: &[Vec<u64>],
+        a: &[Vec<u64>],
+    ) -> Self {
         cfg.check();
+        spec.validate();
         let rows = weights.len();
         assert!(rows >= 1, "empty array");
         let cols = weights[0].len();
@@ -160,13 +180,14 @@ impl FastArraySim {
             a_flat.extend_from_slice(row);
         }
         let zero = PsumSignal::zero(&cfg);
+        let stride = spec.depth as usize - 1;
         let lanes = (0..cols)
             .map(|c| ColLane {
                 col: c,
                 w: (0..rows).map(|r| weights[r][c]).collect(),
-                s1_m: vec![EMPTY; rows],
-                s1_a: vec![0; rows],
-                s1_psum: vec![zero; rows],
+                pipe_m: vec![EMPTY; rows * stride],
+                pipe_a: vec![0; rows * stride],
+                pipe_val: vec![zero; rows * stride],
                 out_m: vec![EMPTY; rows],
                 out_sig: vec![zero; rows],
                 out_taken: vec![false; rows],
@@ -179,8 +200,8 @@ impl FastArraySim {
             .collect();
         FastArraySim {
             cfg,
-            kind,
-            sched: WsSchedule::new(kind, rows, cols, m_total),
+            spec,
+            sched: WsSchedule::with_spec(spec, rows, cols, m_total),
             rows,
             cols,
             m_total,
@@ -208,7 +229,7 @@ impl FastArraySim {
 
     /// Run every column lane to completion on the calling thread.
     pub fn run(&mut self, max_cycles: u64) -> Result<(), SimError> {
-        let kind = self.kind;
+        let spec = self.spec;
         let ctx = LaneCtx {
             cfg: self.cfg,
             ru: self.ru,
@@ -217,7 +238,7 @@ impl FastArraySim {
             max_cycles,
         };
         for lane in &mut self.lanes {
-            run_lane_dispatch(kind, ctx, lane)?;
+            run_lane_dispatch(&spec, ctx, lane)?;
         }
         Ok(())
     }
@@ -231,7 +252,7 @@ impl FastArraySim {
         if threads <= 1 {
             return self.run(max_cycles);
         }
-        let kind = self.kind;
+        let spec = self.spec;
         let ctx = LaneCtx {
             cfg: self.cfg,
             ru: self.ru,
@@ -246,7 +267,7 @@ impl FastArraySim {
             for strip in self.lanes.chunks_mut(chunk) {
                 handles.push(scope.spawn(move || {
                     for lane in strip.iter_mut() {
-                        run_lane_dispatch(kind, ctx, lane)?;
+                        run_lane_dispatch(&spec, ctx, lane)?;
                     }
                     Ok(())
                 }));
@@ -300,10 +321,12 @@ impl FastArraySim {
     }
 
     /// Merged activity across all PEs, recovered in closed form: each PE
-    /// performs exactly `M` stage-1 and `M` stage-2 evaluations, and all
-    /// remaining stage-slots in `T` cycles are bubbles — exactly what the
-    /// dense loop counts one idle PE at a time (parity asserted in
-    /// tests).  Valid after a successful run.
+    /// performs exactly `M` entry- and `M` exit-stage evaluations, and
+    /// all remaining stage-slots in `T` cycles are bubbles — exactly
+    /// what the dense loop counts one idle PE at a time (parity asserted
+    /// in tests; depth-independent because the counters track only the
+    /// entry and exit stages, see [`PeActivity`]).  Valid after a
+    /// successful run.
     pub fn activity(&self) -> PeActivity {
         let t = self.cycles();
         let pes = (self.rows * self.cols) as u64;
@@ -351,18 +374,16 @@ impl FastArraySim {
     }
 }
 
-/// Monomorphize the lane run over the two datapaths (devirtualizes the
-/// per-step dispatch out of the hot loop).
+/// Monomorphize the lane run over the registered datapaths
+/// (devirtualizes the per-step dispatch out of the hot loop).
 fn run_lane_dispatch(
-    kind: PipelineKind,
+    spec: &PipelineSpec,
     ctx: LaneCtx<'_>,
     lane: &mut ColLane,
 ) -> Result<(), SimError> {
-    match kind {
-        PipelineKind::Skewed => run_lane(&SkewedFmaPath, true, ctx, lane),
-        PipelineKind::Regular3a | PipelineKind::Baseline3b => {
-            run_lane(&BaselineFmaPath, false, ctx, lane)
-        }
+    match spec.datapath {
+        DatapathId::Skewed => run_lane(&SkewedFmaPath, spec, ctx, lane),
+        DatapathId::Baseline => run_lane(&BaselineFmaPath, spec, ctx, lane),
     }
 }
 
@@ -370,13 +391,15 @@ fn run_lane_dispatch(
 ///
 /// Per tick: South-edge rounding first (it reads the pre-tick last-row
 /// output register), then the active row band in **descending** row
-/// order — so every cross-row read (upstream `s1`/`out`) sees pre-tick
-/// state and every commit happens after all downstream consumers marked
-/// the register taken, reproducing the dense loop's evaluate-then-commit
-/// discipline without scratch buffers.
+/// order — so every cross-row read (upstream pipe/out registers) sees
+/// pre-tick state and every commit happens after all downstream
+/// consumers marked the register taken, reproducing the dense loop's
+/// evaluate-then-commit discipline without scratch buffers.  Within a
+/// row the order is: psum acquisition at the spec's psum stage →
+/// exit-stage commit → pipe shift → stage-1 acceptance.
 fn run_lane<D: ChainDatapath>(
     d: &D,
-    skewed: bool,
+    spec: &PipelineSpec,
     ctx: LaneCtx<'_>,
     lane: &mut ColLane,
 ) -> Result<(), SimError> {
@@ -387,14 +410,18 @@ fn run_lane<D: ChainDatapath>(
     }
     let c = lane.col;
     let cols = ctx.sched.cols;
-    let spacing = ctx.sched.spacing();
-    let tail = ctx.sched.kind.column_tail();
+    let spacing = spec.spacing;
+    let depth = spec.depth as usize;
+    let stride = depth - 1;
+    let psum_stage = spec.psum_stage() as usize;
+    let capture = spec.captures_at_accept();
+    let tail = spec.column_tail;
     let last = rows - 1;
     let zero = PsumSignal::zero(&ctx.cfg);
-    // Band slack beyond the last stage-1 accept: stage-2 eval (+1),
-    // commit visibility (+1), downstream take (+1).
-    const SLACK: u64 = 3;
-    let reach = (m_total as u64 - 1) + SLACK;
+    // Band slack beyond the last stage-1 accept: the element's last
+    // register touch is its out-commit at accept + depth − 1, plus one
+    // cycle of downstream-take margin.
+    let reach = (m_total as u64 - 1) + depth as u64;
 
     // South-edge rounding ring: (ready_cycle, m, signal).
     let mut ring = [(0u64, 0u32, zero); RING];
@@ -426,7 +453,7 @@ fn run_lane<D: ChainDatapath>(
             lane.produced += 1;
         }
 
-        // ---- Active band: S·r + c ∈ [t − (M−1) − SLACK, t] -------------
+        // ---- Active band: S·r + c ∈ [t − (M−1) − D, t] -----------------
         let off = t - c as u64;
         let r_hi = ((off / spacing) as usize).min(last);
         let r_lo = if off > reach {
@@ -436,35 +463,43 @@ fn run_lane<D: ChainDatapath>(
         };
         if r_lo <= r_hi {
             for r in (r_lo..=r_hi).rev() {
-                // ---- stage 2 on the pre-tick stage-1 register ----------
-                let s1m = lane.s1_m[r];
-                if s1m != EMPTY {
-                    let psum = if skewed {
-                        if r > 0 {
+                let base = r * stride;
+
+                // ---- psum acquisition at the spec's psum stage ---------
+                // (late-read disciplines only; reads the upstream
+                // pre-tick output register, written last cycle.)
+                if !capture {
+                    let idx = base + (psum_stage - 2);
+                    let mslot = lane.pipe_m[idx];
+                    if mslot != EMPTY {
+                        let psum = if r > 0 {
                             let upm = lane.out_m[r - 1];
                             if upm == EMPTY {
-                                unreachable!("skewed stage-2 with no upstream psum");
+                                unreachable!("late psum read with no upstream psum");
                             }
-                            if upm != s1m {
+                            if upm != mslot {
                                 return Err(SimError::OutOfOrder {
                                     pe: r * cols + c,
                                     got: upm as usize,
-                                    want: s1m as usize,
+                                    want: mslot as usize,
                                 });
                             }
                             lane.out_taken[r - 1] = true;
                             lane.out_sig[r - 1]
                         } else {
                             zero
-                        }
-                    } else {
-                        lane.s1_psum[r]
-                    };
-                    let sig = d.step(&ctx.cfg, &psum, lane.s1_a[r], lane.w[r]);
-                    // Commit: every downstream consumer of this PE's old
-                    // output register already ran (descending order /
-                    // South edge above), so an untaken value here is a
-                    // genuine schedule violation.
+                        };
+                        lane.pipe_val[idx] = d.step(&ctx.cfg, &psum, lane.pipe_a[idx], lane.w[r]);
+                    }
+                }
+
+                // ---- exit-stage commit on the pre-tick pipe ------------
+                // Every downstream consumer of this PE's old output
+                // register already ran (descending order / South edge
+                // above), so an untaken value here is a genuine schedule
+                // violation.
+                let exit = base + (depth - 2);
+                if lane.pipe_m[exit] != EMPTY {
                     if lane.out_m[r] != EMPTY && !lane.out_taken[r] {
                         return Err(SimError::PsumOverrun {
                             pe: r * cols + c,
@@ -472,25 +507,32 @@ fn run_lane<D: ChainDatapath>(
                             lost_m: lane.out_m[r] as usize,
                         });
                     }
-                    lane.out_m[r] = s1m;
-                    lane.out_sig[r] = sig;
+                    lane.out_m[r] = lane.pipe_m[exit];
+                    lane.out_sig[r] = lane.pipe_val[exit];
                     lane.out_taken[r] = false;
-                    lane.s1_m[r] = EMPTY;
                 }
 
-                // ---- stage 1 acceptance (pre-tick upstream registers) --
+                // ---- pipe shift (within-PE, pre-tick values) -----------
+                for k in (1..stride).rev() {
+                    lane.pipe_m[base + k] = lane.pipe_m[base + k - 1];
+                    lane.pipe_a[base + k] = lane.pipe_a[base + k - 1];
+                    lane.pipe_val[base + k] = lane.pipe_val[base + k - 1];
+                }
+                lane.pipe_m[base] = EMPTY;
+
+                // ---- stage-1 acceptance (pre-tick upstream registers) --
                 let want = lane.next_feed[r];
                 if (want as usize) >= m_total {
                     continue;
                 }
                 let (ready, captured) = if r == 0 {
                     (true, zero)
-                } else if skewed {
-                    // Predecessor's stage 2 computes `want` THIS cycle
-                    // (its s1 register holds it) — speculative ê forward.
-                    let upm = lane.s1_m[r - 1];
-                    if upm == want {
-                        (true, zero)
+                } else if capture {
+                    // Predecessor's output register holds `want`,
+                    // written at the end of the previous cycle.
+                    let upm = lane.out_m[r - 1];
+                    if upm == want && !lane.out_taken[r - 1] {
+                        (true, lane.out_sig[r - 1])
                     } else if upm != EMPTY && upm > want {
                         return Err(SimError::OutOfOrder {
                             pe: r * cols + c,
@@ -501,11 +543,12 @@ fn run_lane<D: ChainDatapath>(
                         (false, zero)
                     }
                 } else {
-                    // Baseline: predecessor's output register holds
-                    // `want`, written at the end of the previous cycle.
-                    let upm = lane.out_m[r - 1];
-                    if upm == want && !lane.out_taken[r - 1] {
-                        (true, lane.out_sig[r - 1])
+                    // Predecessor completed stage S on `want` last cycle
+                    // (for the skewed organisation: speculative ê
+                    // forwarding).
+                    let upm = lane.pipe_m[(r - 1) * stride + (spacing as usize - 1)];
+                    if upm == want {
+                        (true, zero)
                     } else if upm != EMPTY && upm > want {
                         return Err(SimError::OutOfOrder {
                             pe: r * cols + c,
@@ -528,13 +571,16 @@ fn run_lane<D: ChainDatapath>(
                     }
                     continue;
                 }
-                if r > 0 && !skewed {
+                if r > 0 && capture {
                     lane.out_taken[r - 1] = true;
                 }
-                lane.s1_m[r] = want;
-                lane.s1_a[r] = ctx.a[want as usize * rows + r];
-                if !skewed {
-                    lane.s1_psum[r] = captured;
+                lane.pipe_m[base] = want;
+                lane.pipe_a[base] = ctx.a[want as usize * rows + r];
+                if capture {
+                    // Psum in hand: run the datapath now, let the value
+                    // ride the pipe to the exit stage.
+                    lane.pipe_val[base] =
+                        d.step(&ctx.cfg, &captured, lane.pipe_a[base], lane.w[r]);
                 }
                 lane.next_feed[r] = want + 1;
             }
@@ -573,9 +619,9 @@ mod tests {
     }
 
     #[test]
-    fn fast_matches_oracle_both_kinds() {
+    fn fast_matches_oracle_every_kind() {
         let mut rng = Rng::new(0xfa57);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in PipelineKind::ALL {
             for (m, r, c) in [(1usize, 1usize, 1usize), (4, 3, 2), (8, 8, 8), (5, 16, 4)] {
                 let (w, a) = random_case(&mut rng, m, r, c);
                 let want = FastArraySim::oracle_bits(&CFG, &w, &a);
@@ -591,9 +637,10 @@ mod tests {
     #[test]
     fn fast_matches_dense_loop_exactly() {
         // Bits, cycles, per-output cycles, stalls, and merged activity
-        // all agree with the dense reference simulator.
+        // all agree with the dense reference simulator — for every
+        // registered organisation.
         let mut rng = Rng::new(0xd00d);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in PipelineKind::ALL {
             for (m, r, c) in [(1usize, 1usize, 1usize), (3, 5, 4), (8, 16, 8), (17, 8, 3)] {
                 let (w, a) = random_case(&mut rng, m, r, c);
                 let mut dense = ArraySim::new(CFG, kind, &w, a.clone());
@@ -615,7 +662,7 @@ mod tests {
     fn parallel_equals_serial() {
         let mut rng = Rng::new(0x9a9);
         let (w, a) = random_case(&mut rng, 6, 12, 10);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in PipelineKind::ALL {
             let mut serial = FastArraySim::new(CFG, kind, &w, &a);
             serial.run(100_000).unwrap();
             for threads in [2usize, 3, 16] {
@@ -634,7 +681,7 @@ mod tests {
         let mut rng = Rng::new(0xbad5);
         let (w, a) = random_case(&mut rng, 2, 64, 6);
         let want = FastArraySim::oracle_bits(&CFG, &w, &a);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for kind in PipelineKind::ALL {
             let mut sim = FastArraySim::new(CFG, kind, &w, &a);
             sim.run(100_000).unwrap();
             assert_eq!(sim.result_bits(), want, "{kind}");
@@ -664,5 +711,31 @@ mod tests {
             }
             other => panic!("expected timeout, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn custom_spec_lane_is_bit_exact() {
+        // Configurable spacing end-to-end: a custom capture spec with
+        // S = D = 3 through the fast lanes.
+        use crate::pe::spec::{DatapathId, PipelineSpec};
+        const WIDE: PipelineSpec = PipelineSpec {
+            spacing: 3,
+            depth: 3,
+            column_tail: 0,
+            name: "custom-s3",
+            aliases: &[],
+            summary: "test",
+            stages: crate::pe::spec::DEEP3.stages,
+            regs: crate::pe::spec::DEEP3.regs,
+            datapath: DatapathId::Baseline,
+        };
+        let mut rng = Rng::new(0x517e);
+        let (w, a) = random_case(&mut rng, 5, 12, 4);
+        let want = FastArraySim::oracle_bits(&CFG, &w, &a);
+        let mut sim = FastArraySim::with_spec(CFG, WIDE, &w, &a);
+        sim.run(100_000).unwrap();
+        assert_eq!(sim.result_bits(), want);
+        assert!(sim.latency_matches_schedule());
+        assert_eq!(sim.stalls(), 0);
     }
 }

@@ -259,78 +259,113 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
-    fn pending(id: u64, model: usize, class: DeadlineClass, m: usize) -> Pending {
+    /// Queue-test request factory: the pipeline organisation under test
+    /// is a parameter (a hardcoded kind used to hide batch-key bugs for
+    /// every organisation but the one baked in).
+    fn pending(
+        id: u64,
+        model: usize,
+        kind: crate::pe::PipelineKind,
+        class: DeadlineClass,
+        m: usize,
+    ) -> Pending {
         let (tx, _rx) = channel();
         // Leak the receiver end deliberately: these queue tests never
         // reply.
         std::mem::forget(_rx);
         Pending {
-            req: Request {
-                id,
-                model,
-                kind: crate::pe::PipelineKind::Skewed,
-                class,
-                a: vec![vec![0u64; 4]; m],
-            },
+            req: Request { id, model, kind, class, a: vec![vec![0u64; 4]; m] },
             reply: tx,
         }
     }
 
+    use crate::pe::PipelineKind;
+
+    /// The organisations the queue tests sweep: the paper's proposed
+    /// design plus a related-work registration, so queue semantics are
+    /// pinned independent of the pipeline kind in the request.
+    const KINDS: [PipelineKind; 2] = [PipelineKind::Skewed, PipelineKind::Deep3];
+
     #[test]
     fn fifo_anchor_and_interactive_priority() {
-        let q = RequestQueue::new(8);
-        q.push(pending(0, 0, DeadlineClass::Batch, 1)).unwrap();
-        q.push(pending(1, 0, DeadlineClass::Batch, 1)).unwrap();
-        q.push(pending(2, 1, DeadlineClass::Interactive, 1)).unwrap();
-        // Interactive jumps the line …
-        assert_eq!(q.pop_anchor().unwrap().req.id, 2);
-        // … then FIFO.
-        assert_eq!(q.pop_anchor().unwrap().req.id, 0);
-        assert_eq!(q.pop_anchor().unwrap().req.id, 1);
+        for kind in KINDS {
+            let q = RequestQueue::new(8);
+            q.push(pending(0, 0, kind, DeadlineClass::Batch, 1)).unwrap();
+            q.push(pending(1, 0, kind, DeadlineClass::Batch, 1)).unwrap();
+            q.push(pending(2, 1, kind, DeadlineClass::Interactive, 1)).unwrap();
+            // Interactive jumps the line …
+            assert_eq!(q.pop_anchor().unwrap().req.id, 2, "{kind}");
+            // … then FIFO.
+            assert_eq!(q.pop_anchor().unwrap().req.id, 0, "{kind}");
+            assert_eq!(q.pop_anchor().unwrap().req.id, 1, "{kind}");
+        }
     }
 
     #[test]
     fn interactive_bypass_cannot_starve_the_front_batch_request() {
         let bound = RequestQueue::MAX_FRONT_BYPASS;
-        let q = RequestQueue::new(bound + 8);
-        q.push(pending(0, 0, DeadlineClass::Batch, 1)).unwrap();
-        for id in 1..=(bound as u64 + 2) {
-            q.push(pending(id, 1, DeadlineClass::Interactive, 1)).unwrap();
+        for kind in KINDS {
+            let q = RequestQueue::new(bound + 8);
+            q.push(pending(0, 0, kind, DeadlineClass::Batch, 1)).unwrap();
+            for id in 1..=(bound as u64 + 2) {
+                q.push(pending(id, 1, kind, DeadlineClass::Interactive, 1)).unwrap();
+            }
+            // The first `bound` pops bypass the batch front…
+            for n in 0..bound {
+                assert_eq!(q.pop_anchor().unwrap().req.id, n as u64 + 1, "{kind}");
+            }
+            // …then the starved front is anchored regardless of class.
+            assert_eq!(q.pop_anchor().unwrap().req.id, 0, "{kind}: front after {bound}");
+            // And the counter reset: interactive priority resumes.
+            assert_eq!(q.pop_anchor().unwrap().req.id, bound as u64 + 1, "{kind}");
         }
-        // The first `bound` pops bypass the batch front…
-        for n in 0..bound {
-            assert_eq!(q.pop_anchor().unwrap().req.id, n as u64 + 1);
-        }
-        // …then the starved front is anchored regardless of class.
-        assert_eq!(q.pop_anchor().unwrap().req.id, 0, "front served after {bound} bypasses");
-        // And the counter reset: interactive priority resumes.
-        assert_eq!(q.pop_anchor().unwrap().req.id, bound as u64 + 1);
     }
 
     #[test]
     fn take_matching_respects_key_and_caps() {
-        let q = RequestQueue::new(16);
-        for id in 0..6 {
-            let model = if id % 2 == 0 { 0 } else { 1 };
-            q.push(pending(id, model, DeadlineClass::Batch, 2)).unwrap();
+        for kind in KINDS {
+            let q = RequestQueue::new(16);
+            for id in 0..6 {
+                let model = if id % 2 == 0 { 0 } else { 1 };
+                q.push(pending(id, model, kind, DeadlineClass::Batch, 2)).unwrap();
+            }
+            let mut parts = Vec::new();
+            let mut rows = 0usize;
+            q.take_matching(0, kind, 8, 4, &mut parts, &mut rows);
+            // Model-0 requests are ids 0, 2, 4 (2 rows each); the row cap
+            // of 4 admits exactly two of them.
+            assert_eq!(parts.len(), 2, "{kind}");
+            assert_eq!(rows, 4, "{kind}");
+            assert!(parts.iter().all(|p| p.req.model == 0), "{kind}");
+            assert_eq!(q.len(), 4, "{kind}");
         }
+    }
+
+    #[test]
+    fn take_matching_filters_on_pipeline_kind() {
+        // Mixed-kind traffic on one model: the batch key must separate
+        // organisations (stacking rows across kinds would silently run
+        // one request under the wrong pipeline).
+        let (skewed, deep3) = (PipelineKind::Skewed, PipelineKind::Deep3);
+        let q = RequestQueue::new(16);
+        q.push(pending(0, 0, skewed, DeadlineClass::Batch, 1)).unwrap();
+        q.push(pending(1, 0, deep3, DeadlineClass::Batch, 1)).unwrap();
+        q.push(pending(2, 0, skewed, DeadlineClass::Batch, 1)).unwrap();
         let mut parts = Vec::new();
         let mut rows = 0usize;
-        q.take_matching(0, crate::pe::PipelineKind::Skewed, 8, 4, &mut parts, &mut rows);
-        // Model-0 requests are ids 0, 2, 4 (2 rows each); the row cap of
-        // 4 admits exactly two of them.
-        assert_eq!(parts.len(), 2);
-        assert_eq!(rows, 4);
-        assert!(parts.iter().all(|p| p.req.model == 0));
-        assert_eq!(q.len(), 4);
+        q.take_matching(0, skewed, 8, 8, &mut parts, &mut rows);
+        let ids: Vec<u64> = parts.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        assert_eq!(q.len(), 1, "the deep3 request stays queued");
+        assert_eq!(q.pop_anchor().unwrap().req.kind, deep3);
     }
 
     #[test]
     fn close_drains_then_ends() {
         let q = RequestQueue::new(4);
-        q.push(pending(0, 0, DeadlineClass::Batch, 1)).unwrap();
+        q.push(pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).unwrap();
         q.close();
-        assert!(q.push(pending(1, 0, DeadlineClass::Batch, 1)).is_err());
+        assert!(q.push(pending(1, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).is_err());
         assert_eq!(q.pop_anchor().unwrap().req.id, 0);
         assert!(q.pop_anchor().is_none());
     }
@@ -341,7 +376,7 @@ mod tests {
         let seen = q.seq();
         let deadline = Instant::now() + std::time::Duration::from_millis(5);
         assert_eq!(q.wait_new_push(seen, deadline), None, "timeout with no pushes");
-        q.push(pending(0, 0, DeadlineClass::Batch, 1)).unwrap();
+        q.push(pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).unwrap();
         let deadline = Instant::now() + std::time::Duration::from_millis(100);
         assert_eq!(q.wait_new_push(seen, deadline), Some(seen + 1));
     }

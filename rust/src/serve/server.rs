@@ -280,17 +280,19 @@ mod tests {
         let plan = PrecisionPlan {
             label: "mixed".into(),
             budget: 1e-2,
-            kind: PipelineKind::Skewed,
+            kinds: vec![PipelineKind::Skewed],
             layers: layers
                 .iter()
                 .map(|l| LayerPlan {
                     layer: l.name.clone(),
                     shape: l.gemm(),
                     fmt,
+                    kind: PipelineKind::Skewed,
                     stats: Default::default(),
                     energy_uj: 0.0,
                     cycles: 0,
                     within_budget: true,
+                    clock_feasible: true,
                 })
                 .collect(),
         };

@@ -1,15 +1,20 @@
 //! Closed-form SA latency model.
 //!
 //! The per-tile formula is exactly the one the cycle-accurate simulator
-//! obeys (asserted in `tests/integration_sa.rs`):
+//! obeys (asserted in `tests/integration_sa.rs` and, across every
+//! registered organisation, `tests/prop_pipelines.rs`), fully
+//! determined by the organisation's [`PipelineSpec`] parameters —
+//! spacing `S`, pipeline depth `D` and column tail `τ`:
 //!
 //! ```text
-//! T_tile(kind, M, R, C_used) = (M−1) + (C_used−1) + S·(R−1) + 3 + tail
-//!     S    = 2 (baseline/regular) | 1 (skewed)
-//!     tail = 0 (baseline/regular) | 1 (skewed: the Fig. 6 extra add)
+//! T_tile(spec, M, R, C_used) = (M−1) + (C_used−1) + S·(R−1) + D + 1 + τ
 //! ```
 //!
-//! so `T_base − T_skew = R − 2` per tile — the paper's per-column saving.
+//! For the paper's pair (`S,D,τ` = 2,2,0 baseline vs 1,2,1 skewed) this
+//! collapses to the §III hand-derived forms and
+//! `T_base − T_skew = R − 2` per tile — the paper's per-column saving.
+//!
+//! [`PipelineSpec`]: crate::pe::PipelineSpec
 //! Layer latency composes tiles sequentially with (optionally
 //! double-buffered) weight preloads, reproducing the §IV observation:
 //! layers with large `M` amortize the saving away, layers with small `M`
@@ -140,6 +145,39 @@ mod tests {
         let s = TileTiming::compute_cycles(PipelineKind::Skewed, 16, 8, 4);
         assert_eq!(s, 15 + 3 + 11);
         assert_eq!(b - s, 8 - 2);
+    }
+
+    #[test]
+    fn generalized_tile_formula_every_kind() {
+        // T = (M−1) + (C_used−1) + S·(R−1) + D + 1 + tail for every
+        // registered spec, including edge tiles (C_used < cols).
+        for kind in PipelineKind::ALL {
+            let sp = kind.spec();
+            for (m, r, c) in [(16usize, 8usize, 4usize), (1, 1, 1), (49, 128, 128), (7, 12, 3)] {
+                let want = (m as u64 - 1)
+                    + (c as u64 - 1)
+                    + sp.spacing * (r as u64 - 1)
+                    + sp.depth
+                    + 1
+                    + sp.column_tail;
+                assert_eq!(
+                    TileTiming::compute_cycles(kind, m, r, c),
+                    want,
+                    "{kind} m={m} r={r} c={c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn related_work_organisations_order_as_expected() {
+        // Per tile: transparent < skewed < baseline < deep3 (spacing
+        // dominates; deep3 pays exactly one fill cycle over baseline).
+        let t = |k| TileTiming::compute_cycles(k, 49, 128, 128);
+        assert_eq!(t(PipelineKind::Skewed) - t(PipelineKind::Transparent), 1);
+        assert!(t(PipelineKind::Transparent) < t(PipelineKind::Skewed));
+        assert!(t(PipelineKind::Skewed) < t(PipelineKind::Baseline3b));
+        assert_eq!(t(PipelineKind::Deep3) - t(PipelineKind::Baseline3b), 1);
     }
 
     #[test]

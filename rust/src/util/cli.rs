@@ -197,7 +197,10 @@ impl Args {
 }
 
 /// Levenshtein edit distance (small inputs; O(|a|·|b|) rolling row).
-fn edit_distance(a: &str, b: &str) -> usize {
+/// Public because every name-like parser in the crate (CLI options
+/// here, the `PipelineKind` registry, …) shares it for did-you-mean
+/// suggestions.
+pub fn edit_distance(a: &str, b: &str) -> usize {
     let a: Vec<char> = a.chars().collect();
     let b: Vec<char> = b.chars().collect();
     let mut prev: Vec<usize> = (0..=b.len()).collect();

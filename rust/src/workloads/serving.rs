@@ -222,7 +222,7 @@ mod tests {
         let plan = PrecisionPlan {
             label: "mixed".into(),
             budget: 1.0,
-            kind: PipelineKind::Skewed,
+            kinds: vec![PipelineKind::Skewed],
             layers: layers
                 .iter()
                 .zip(fmts)
@@ -230,10 +230,12 @@ mod tests {
                     layer: l.name.clone(),
                     shape: l.gemm(),
                     fmt,
+                    kind: PipelineKind::Skewed,
                     stats: Default::default(),
                     energy_uj: 0.0,
                     cycles: 0,
                     within_budget: true,
+                    clock_feasible: true,
                 })
                 .collect(),
         };

@@ -91,7 +91,7 @@ fn banded_matches_dense_loop_stalls_and_activity() {
 fn prop_fast_matches_dense_and_schedule() {
     Prop::new("fast-vs-dense", 30).run(|g: &mut Gen| {
         let (m, r, c) = (g.usize_in(1, 20), g.usize_in(1, 24), g.usize_in(1, 10));
-        let kind = *g.choose(&[PipelineKind::Baseline3b, PipelineKind::Skewed]);
+        let kind = *g.choose(&PipelineKind::ALL);
         let data = GemmData::cnn_like(GemmShape::new(m, r, c), FpFormat::BF16, g.bits(32));
         let mut dense = ArraySim::new(CFG, kind, &data.w, data.a.clone());
         if dense.run(1_000_000).is_err() {

@@ -20,7 +20,7 @@ use std::sync::Arc;
 fn planner_cfg(budget: f64) -> PlannerConfig {
     PlannerConfig {
         budget,
-        kind: PipelineKind::Skewed,
+        kinds: vec![PipelineKind::Skewed],
         candidates: FpFormat::ALL.to_vec(),
         // Small sampled slice (full K): keeps the debug-mode oracle
         // sweep fast while still exercising every layer's real
@@ -48,7 +48,7 @@ fn infinite_budget_always_plans_the_cheapest_format() {
     for l in &plan.layers {
         let cheapest = FpFormat::ALL
             .iter()
-            .map(|&f| (f, layer_format_energy(&cfg.tcfg, cfg.kind, f, l.shape).0))
+            .map(|&f| (f, layer_format_energy(&cfg.tcfg, cfg.kinds[0], f, l.shape).0))
             .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap()
             .0;

@@ -16,11 +16,11 @@ use skewsa::workloads::gemm::GemmData;
 const CFG: ChainCfg = ChainCfg::BF16_FP32;
 
 /// The closed-form tile latency equals the cycle-accurate array run,
-/// swept over (M, R, C) × both pipeline kinds.
+/// swept over (M, R, C) × every registered pipeline organisation.
 #[test]
 fn timing_model_equals_simulator_sweep() {
     let mut rng = Rng::new(0x715);
-    for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+    for kind in PipelineKind::ALL {
         for &(m, r, c) in &[
             (1usize, 1usize, 1usize),
             (1, 16, 1),
@@ -99,7 +99,7 @@ fn depth_128_column_bit_exact_adversarial() {
             o.result()
         })
         .collect();
-    for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+    for kind in PipelineKind::ALL {
         let mut sim = ColumnSim::new(CFG, kind, &weights, data.a.clone());
         sim.run(100_000).unwrap();
         let got: Vec<u64> = sim.outputs().iter().map(|o| o.bits).collect();

@@ -1,0 +1,176 @@
+//! Property suite for the pipeline-organisation registry (ISSUE 4):
+//! every registered [`PipelineSpec`] must drive the cycle simulators
+//! bit-exactly against the value oracle AND land every output on the
+//! generalized closed-form schedule
+//! `T = (M−1) + (C_used−1) + S·(R−1) + D + 1 + tail`,
+//! with zero stalls, on random shapes — including the edge tiles a
+//! `TilePlan` produces.  This is the contract that makes the registry
+//! extensible: a new organisation that satisfies `PipelineSpec::validate`
+//! and these properties is a first-class citizen of every layer above.
+
+use skewsa::arith::accum::ColumnOracle;
+use skewsa::arith::fma::ChainCfg;
+use skewsa::arith::format::FpFormat;
+use skewsa::pe::PipelineKind;
+use skewsa::sa::array::ArraySim;
+use skewsa::sa::column::ColumnSim;
+use skewsa::sa::dataflow::WsSchedule;
+use skewsa::sa::fast::FastArraySim;
+use skewsa::sa::tile::{GemmShape, TilePlan};
+use skewsa::util::prop::{Gen, Prop};
+
+const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+fn bf(g: &mut Gen) -> u64 {
+    FpFormat::BF16.from_f64(g.normal(0.0, 1.5))
+}
+
+fn random_case(g: &mut Gen, m: usize, r: usize, c: usize) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
+    let w: Vec<Vec<u64>> = (0..r).map(|_| (0..c).map(|_| bf(g)).collect()).collect();
+    let a: Vec<Vec<u64>> = (0..m).map(|_| (0..r).map(|_| bf(g)).collect()).collect();
+    (w, a)
+}
+
+fn oracle_bits(w: &[Vec<u64>], a: &[Vec<u64>]) -> Vec<Vec<u64>> {
+    a.iter()
+        .map(|arow| {
+            (0..w[0].len())
+                .map(|c| {
+                    let mut o = ColumnOracle::new(CFG);
+                    for (r, wrow) in w.iter().enumerate() {
+                        o.mac(arow[r], wrow[c]);
+                    }
+                    o.result()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Fast sim vs oracle + closed form, all registered kinds, random shapes.
+#[test]
+fn every_spec_fast_sim_matches_oracle_and_formula() {
+    Prop::new("pipelines-fast-oracle-formula", 40).run(|g| {
+        let m = g.usize_in(1, 12);
+        let r = g.usize_in(1, 24);
+        let c = g.usize_in(1, 10);
+        let (w, a) = random_case(g, m, r, c);
+        let want = oracle_bits(&w, &a);
+        for kind in PipelineKind::ALL {
+            let sp = kind.spec();
+            let mut sim = FastArraySim::new(CFG, kind, &w, &a);
+            let sched = *sim.schedule();
+            if sim.run(1_000_000).is_err() {
+                g.assert(&format!("{kind}: run must not error"), false);
+                continue;
+            }
+            g.assert_eq(&format!("{kind}: bits m={m} r={r} c={c}"), sim.result_bits(), want.clone());
+            let t = (m as u64 - 1)
+                + (c as u64 - 1)
+                + sp.spacing * (r as u64 - 1)
+                + sp.depth
+                + 1
+                + sp.column_tail;
+            g.assert_eq(&format!("{kind}: total cycles"), sim.cycles(), t);
+            g.assert_eq(&format!("{kind}: stalls"), sim.stalls(), 0);
+            g.assert(&format!("{kind}: per-output schedule"), sim.latency_matches_schedule());
+            g.assert_eq(&format!("{kind}: model agrees"), sched.total_cycles(), t);
+        }
+    });
+}
+
+/// Dense reference loop parity: bits, cycles, stalls, merged activity.
+#[test]
+fn every_spec_dense_and_fast_agree() {
+    Prop::new("pipelines-dense-fast-parity", 15).run(|g| {
+        let m = g.usize_in(1, 8);
+        let r = g.usize_in(1, 12);
+        let c = g.usize_in(1, 6);
+        let (w, a) = random_case(g, m, r, c);
+        for kind in PipelineKind::ALL {
+            let mut dense = ArraySim::new(CFG, kind, &w, a.clone());
+            if dense.run(1_000_000).is_err() {
+                g.assert(&format!("{kind}: dense run must not error"), false);
+                continue;
+            }
+            let mut fast = FastArraySim::new(CFG, kind, &w, &a);
+            if fast.run(1_000_000).is_err() {
+                g.assert(&format!("{kind}: fast run must not error"), false);
+                continue;
+            }
+            g.assert_eq(&format!("{kind}: bits"), fast.result_bits(), dense.result_bits());
+            g.assert_eq(&format!("{kind}: cycles"), fast.cycles(), dense.cycles());
+            g.assert_eq(&format!("{kind}: stalls"), fast.stalls(), dense.stalls);
+            g.assert_eq(&format!("{kind}: activity"), fast.activity(), dense.activity());
+        }
+    });
+}
+
+/// Column chains: every output lands on `output_cycle`, bit-exact.
+#[test]
+fn every_spec_column_on_schedule() {
+    Prop::new("pipelines-column-schedule", 40).run(|g| {
+        let m = g.usize_in(1, 20);
+        let r = g.usize_in(1, 32);
+        let (w2, a) = random_case(g, m, r, 1);
+        let w: Vec<u64> = w2.iter().map(|row| row[0]).collect();
+        let want: Vec<u64> = oracle_bits(&w2, &a).iter().map(|row| row[0]).collect();
+        for kind in PipelineKind::ALL {
+            let mut sim = ColumnSim::new(CFG, kind, &w, a.clone());
+            if sim.run(1_000_000).is_err() {
+                g.assert(&format!("{kind}: column run must not error"), false);
+                continue;
+            }
+            let got: Vec<u64> = sim.outputs().iter().map(|o| o.bits).collect();
+            g.assert_eq(&format!("{kind}: column bits m={m} r={r}"), got, want.clone());
+            let sched = WsSchedule::new(kind, r, 1, m);
+            g.assert_eq(&format!("{kind}: column cycles"), sim.cycles(), sched.total_cycles());
+            for o in sim.outputs() {
+                g.assert_eq(
+                    &format!("{kind}: output {} cycle", o.m),
+                    o.cycle,
+                    sched.output_cycle(0, o.m),
+                );
+            }
+            g.assert_eq(&format!("{kind}: column stalls"), sim.stalls, 0);
+        }
+    });
+}
+
+/// Edge tiles from a real `TilePlan` (short K- and N-edges): the slab
+/// the executor would run stays bit-exact and on-formula for every
+/// registered organisation.
+#[test]
+fn every_spec_edge_tiles_bit_exact() {
+    Prop::new("pipelines-edge-tiles", 12).run(|g| {
+        let rows = g.usize_in(2, 8);
+        let cols = g.usize_in(2, 8);
+        // Shapes that do NOT divide the array evenly → edge tiles.
+        let shape = GemmShape::new(
+            g.usize_in(1, 6),
+            rows * g.usize_in(1, 2) + g.usize_in(1, rows - 1),
+            cols * g.usize_in(1, 2) + g.usize_in(1, cols - 1),
+        );
+        let plan = TilePlan::new(shape, rows, cols);
+        let w: Vec<Vec<u64>> =
+            (0..shape.k).map(|_| (0..shape.n).map(|_| bf(g)).collect()).collect();
+        let a: Vec<Vec<u64>> =
+            (0..shape.m).map(|_| (0..shape.k).map(|_| bf(g)).collect()).collect();
+        // The last tile is short on both axes by construction.
+        let tile = *plan.tiles.last().unwrap();
+        g.assert("edge tile is short", tile.k_len < rows && tile.n_len < cols);
+        let w_slab = plan.weight_slab(&w, &tile);
+        let a_slab = plan.activation_slab(&a, &tile);
+        let want = oracle_bits(&w_slab, &a_slab);
+        for kind in PipelineKind::ALL {
+            let mut sim = FastArraySim::new(CFG, kind, &w_slab, &a_slab);
+            if sim.run(1_000_000).is_err() {
+                g.assert(&format!("{kind}: edge-tile run must not error"), false);
+                continue;
+            }
+            g.assert_eq(&format!("{kind}: edge-tile bits"), sim.result_bits(), want.clone());
+            g.assert(&format!("{kind}: edge-tile schedule"), sim.latency_matches_schedule());
+            g.assert_eq(&format!("{kind}: edge-tile stalls"), sim.stalls(), 0);
+        }
+    });
+}
