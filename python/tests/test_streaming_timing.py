@@ -1,0 +1,375 @@
+"""Differential validation of the multi-tile streaming discipline (ISSUE 5).
+
+No Rust toolchain ships in the build container, so the scheduling
+semantics implemented twice in Rust -- the closed-form layer composition
+(`timing::layer_timing`) and the streaming cycle simulator
+(`sa::stream::StreamingSim`) -- are validated here by a third,
+independent implementation: a **single-clock tag-level machine** that
+ticks every register of an R x C weight-stationary array, the fill
+path, and the two weight banks cycle by cycle, across a whole tile
+plan.  Nothing in the machine knows the closed form; stream hand-offs
+happen when the controller *observes* (a) the previous tile drained and
+(b) the preload delivered -- so agreement with the ported closed form
+over randomized shapes, organisations (presets + custom (S, D, tail)
+combos) and both double-buffer modes is genuine evidence, not
+circularity.
+
+Checks per case:
+  * per-output cycles and per-tile durations vs the tile formula
+    T = (M-1) + (C_used-1) + S*(R-1) + D + 1 + tail
+  * whole-plan totals / exposed preload / drain vs the ported
+    layer_timing composition (both double_buffer modes)
+  * two-buffer constraint audited event-by-event (fill path free, target
+    bank dead) -- the satellite-3 audit
+  * serialized total == historical per-tile sum (R + T per tile)
+  * under double buffering only the first fill is exposed (T > R)
+  * assembled integer outputs == A x W exactly (K-pass folding with
+    n-block offsets)
+
+Run:  python3 python/tests/test_streaming_timing.py
+"""
+
+import random
+import sys
+from dataclasses import dataclass, field
+
+# --------------------------------------------------------------------------
+# Organisations: (name, spacing S, depth D, column tail)
+# --------------------------------------------------------------------------
+PRESETS = [
+    ("regular-3a", 2, 2, 0),
+    ("baseline-3b", 2, 2, 0),
+    ("skewed", 1, 2, 1),
+    ("transparent", 1, 2, 0),
+    ("deep3", 2, 3, 0),
+]
+CUSTOM = [
+    ("custom-s3d3", 3, 3, 0),
+    ("custom-s1d4", 1, 4, 1),
+    ("custom-s1d2t2", 1, 2, 2),
+]
+SPECS = PRESETS + CUSTOM
+
+
+# --------------------------------------------------------------------------
+# Ported closed form (timing/model.rs)
+# --------------------------------------------------------------------------
+def tile_cycles(S, D, tail, m, rows, n_used):
+    return (m - 1) + (n_used - 1) + S * (rows - 1) + D + 1 + tail
+
+
+def tile_plan(m, k, n, rows, cols):
+    """Tiles in N-block-major, K-pass-minor order: (k0, k_len, n0, n_len)."""
+    tiles = []
+    for n0 in range(0, n, cols):
+        n_len = min(cols, n - n0)
+        for k0 in range(0, k, rows):
+            k_len = min(rows, k - k0)
+            tiles.append((k0, k_len, n0, n_len))
+    return tiles
+
+
+def layer_spans(S, D, tail, m, rows, tiles, double_buffer):
+    spans = []
+    drained = 0
+    for t in tiles:
+        if not spans:
+            p_start = 0
+        elif double_buffer:
+            p_start = spans[-1][2]  # previous stream_start
+        else:
+            p_start = spans[-1][3]  # previous stream_done
+        p_done = p_start + rows
+        s_start = max(drained, p_done)
+        s_done = s_start + tile_cycles(S, D, tail, m, rows, t[3])
+        spans.append((p_start, p_done, s_start, s_done))
+        drained = s_done
+    return spans
+
+
+def layer_timing(S, D, tail, m, rows, tiles, double_buffer):
+    spans = layer_spans(S, D, tail, m, rows, tiles, double_buffer)
+    total = spans[-1][3] if spans else 0
+    compute = sum(s[3] - s[2] for s in spans)
+    exposed, drained = 0, 0
+    for s in spans:
+        exposed += s[2] - drained
+        drained = s[3]
+    drain = sum((s[3] - s[2]) - min(s[3] - s[2], m) for s in spans)
+    return total, compute, exposed, drain, spans
+
+
+# --------------------------------------------------------------------------
+# The single-clock tag-level machine
+# --------------------------------------------------------------------------
+@dataclass
+class PE:
+    w: int = 0
+    w_shadow: int = 0
+    # pipe[k]: element that completed stages 1..k+1, as (m, a, val|None)
+    pipe: list = field(default_factory=list)
+    out: tuple = None  # (m, val, taken)
+    next_feed: int = 0
+
+
+class Machine:
+    """R x C array + fill engine + two weight banks, one global clock."""
+
+    def __init__(self, S, D, tail, rows, cols, A, W, tiles, double_buffer):
+        self.S, self.D, self.tail = S, D, tail
+        self.rows, self.cols = rows, cols
+        self.A, self.W = A, W  # A[m][k], W[k][n] small ints
+        self.tiles = tiles
+        self.db = double_buffer
+        self.m_total = len(A)
+        self.pes = [[PE(pipe=[None] * (D - 1)) for _ in range(cols)] for _ in range(rows)]
+        self.round_q = [[] for _ in range(cols)]  # (ready, m, val)
+        self.t = 0
+        self.base = 0
+        self.tile_idx = -1
+        self.produced = 0
+        self.n_live = 0
+        self.outputs = {}  # (tile_idx, m, c_local) -> (cycle, val)
+        self.y = [[0] * len(W[0]) for _ in range(self.m_total)]
+        # fill engine: preload_jobs[i] = (start, done, bank); audited.
+        self.fill_free_at = 0
+        self.bank_free_at = [0, 0]
+        self.preload = {}  # tile -> (start, done, bank)
+        self.spans = []  # (p_start, p_done, s_start, s_done)
+        self._schedule_preload(0, 0)
+
+    def _schedule_preload(self, tile, start):
+        bank = (tile % 2) if self.db else 0
+        assert start >= self.fill_free_at, "fill path busy"
+        assert start >= self.bank_free_at[bank], "bank still live"
+        done = start + self.rows
+        self.fill_free_at = done
+        self.preload[tile] = (start, done, bank)
+
+    def _tile_drained(self):
+        return self.produced == self.m_total * self.n_live and not any(self.round_q)
+
+    def _close_span(self):
+        """Record the drained tile's end and free its weight bank; in
+        serial mode the (single-bank) reload can only start now."""
+        if self.tile_idx < 0 or self.spans[-1][3] is not None:
+            return
+        if not self._tile_drained():
+            return
+        ps, pd, ss = self.spans[-1][:3]
+        self.spans[-1] = (ps, pd, ss, self.t_drained)
+        bank = (self.tile_idx % 2) if self.db else 0
+        self.bank_free_at[bank] = self.t_drained
+        nxt = self.tile_idx + 1
+        if not self.db and nxt < len(self.tiles):
+            self._schedule_preload(nxt, self.t_drained)
+
+    def _try_handoff(self):
+        """Start the next tile's stream if its weights landed and the
+        previous tile drained -- observed, not computed."""
+        self._close_span()
+        nxt = self.tile_idx + 1
+        if nxt >= len(self.tiles):
+            return False
+        if self.tile_idx >= 0 and self.spans[-1][3] is None:
+            return False  # previous tile still streaming
+        if nxt not in self.preload:
+            return False  # serial reload not yet launched
+        p_start, p_done, bank = self.preload[nxt]
+        if self.t < p_done:
+            return False
+        k0, k_len, n0, n_len = self.tiles[nxt]
+        for r in range(self.rows):
+            for c in range(self.cols):
+                pe = self.pes[r][c]
+                assert all(s is None for s in pe.pipe), "handoff with live pipe"
+                assert pe.out is None or pe.out[2], "handoff with unconsumed psum"
+                pe.out = None
+                pe.next_feed = 0
+                pe.w = self.W[k0 + r][n0 + c] if (r < k_len and c < n_len) else 0
+        self.tile_idx = nxt
+        self.base = self.t
+        self.produced = 0
+        self.n_live = n_len
+        self.spans.append((p_start, p_done, self.t, None))
+        # double-buffered: the following preload launches the moment this
+        # stream starts (the fill path and the dead bank both freed up)
+        if self.db and nxt + 1 < len(self.tiles):
+            self._schedule_preload(nxt + 1, self.t)
+        return True
+
+    def a_bits(self, m, r):
+        k0, k_len, _, _ = self.tiles[self.tile_idx]
+        return self.A[m][k0 + r] if r < k_len else 0
+
+    def tick(self):
+        """One cycle of the dense two-phase tick (array.rs semantics)."""
+        S, D, tail = self.S, self.D, self.tail
+        rows, t, base = self.rows, self.t, self.base
+        n_live = self.n_live
+        capture = S == D
+        psum_stage = D - S + 1
+        scratch_out = [[None] * self.cols for _ in range(rows)]
+        scratch_acc = [[None] * self.cols for _ in range(rows)]
+
+        for r in range(rows):
+            for c in range(n_live):
+                pe = self.pes[r][c]
+                if not capture:
+                    slot = pe.pipe[psum_stage - 2]
+                    if slot is not None:
+                        m, a, _ = slot
+                        if r == 0:
+                            psum = 0
+                        else:
+                            up = self.pes[r - 1][c]
+                            assert up.out is not None and up.out[0] == m, "out of order"
+                            psum = up.out[1]
+                            self.pes[r - 1][c].out = (up.out[0], up.out[1], True)
+                        pe.pipe[psum_stage - 2] = (m, a, psum + a * pe.w)
+                exit_slot = pe.pipe[D - 2]
+                if exit_slot is not None:
+                    m, a, val = exit_slot
+                    assert val is not None
+                    scratch_out[r][c] = (m, val, False)
+
+        # south edge
+        for c in range(n_live):
+            last = self.pes[rows - 1][c]
+            if last.out is not None and not last.out[2]:
+                self.round_q[c].append((t + tail, last.out[0], last.out[1]))
+                last.out = (last.out[0], last.out[1], True)
+            while self.round_q[c] and self.round_q[c][0][0] <= t:
+                ready, m, val = self.round_q[c].pop(0)
+                _, _, n0, _ = self.tiles[self.tile_idx]
+                self.outputs[(self.tile_idx, m, c)] = (ready, val)
+                self.y[m][n0 + c] += val
+                self.produced += 1
+                if self._tile_drained():
+                    self.t_drained = ready + 1
+
+        # stage-1 acceptance
+        for r in range(rows):
+            for c in range(n_live):
+                pe = self.pes[r][c]
+                want = pe.next_feed
+                if want >= self.m_total:
+                    continue
+                if r == 0:
+                    ready, captured = True, 0
+                elif capture:
+                    up = self.pes[r - 1][c]
+                    if up.out is not None and up.out[0] == want and not up.out[2]:
+                        ready, captured = True, up.out[1]
+                    else:
+                        assert up.out is None or up.out[0] <= want, "out of order"
+                        ready, captured = False, None
+                else:
+                    up = self.pes[r - 1][c]
+                    s = up.pipe[S - 1]
+                    ready, captured = (s is not None and s[0] == want), None
+                if not ready:
+                    continue
+                if base + want + S * r + c > t:  # activation wavefront
+                    continue
+                if r > 0 and capture:
+                    up = self.pes[r - 1][c]
+                    self.pes[r - 1][c].out = (up.out[0], up.out[1], True)
+                a = self.a_bits(want, r)
+                val = captured + a * pe.w if capture else None
+                scratch_acc[r][c] = (want, a, val)
+                pe.next_feed = want + 1
+
+        # commit
+        for r in range(rows):
+            for c in range(n_live):
+                pe = self.pes[r][c]
+                if scratch_out[r][c] is not None:
+                    assert pe.out is None or pe.out[2], "psum overrun"
+                    pe.out = scratch_out[r][c]
+                for k in range(D - 2, 0, -1):
+                    pe.pipe[k] = pe.pipe[k - 1]
+                pe.pipe[0] = scratch_acc[r][c]
+        self.t += 1
+
+    def run(self, budget=200000):
+        while True:
+            while self._try_handoff():
+                pass
+            if self.tile_idx == len(self.tiles) - 1 and self._tile_drained():
+                self._close_span()
+                return
+            assert self.t < budget, "machine wedged"
+            self.tick()
+
+
+# --------------------------------------------------------------------------
+# The differential test
+# --------------------------------------------------------------------------
+def one_case(rng, name, S, D, tail, db):
+    rows = rng.randint(max(2, S), 7)  # validate() requires S <= D and rows >= 1
+    cols = rng.randint(1, 5)
+    m = rng.randint(1, 6)
+    k = rng.randint(1, 3 * rows)
+    n = rng.randint(1, 2 * cols)
+    A = [[rng.randint(-4, 4) for _ in range(k)] for _ in range(m)]
+    W = [[rng.randint(-3, 3) for _ in range(n)] for _ in range(k)]
+    tiles = tile_plan(m, k, n, rows, cols)
+    mc = Machine(S, D, tail, rows, cols, A, W, tiles, db)
+    mc.run()
+
+    # numeric assembly
+    for mi in range(m):
+        for ni in range(n):
+            want = sum(A[mi][ki] * W[ki][ni] for ki in range(k))
+            assert mc.y[mi][ni] == want, f"{name}: y[{mi}][{ni}] {mc.y[mi][ni]} != {want}"
+
+    # per-tile durations + per-output cycles on the tile formula
+    total_model = layer_timing(S, D, tail, m, rows, tiles, db)
+    t_total, t_compute, t_exposed, t_drain, spans_model = total_model
+    for i, (tile, span) in enumerate(zip(tiles, mc.spans)):
+        dur = span[3] - span[2]
+        T = tile_cycles(S, D, tail, m, rows, tile[3])
+        assert dur == T, f"{name} db={db}: tile {i} duration {dur} != {T}"
+        for mi in range(m):
+            for c in range(tile[3]):
+                cyc, _ = mc.outputs[(i, mi, c)]
+                want = span[2] + mi + S * (rows - 1) + c + D + tail
+                assert cyc == want, f"{name}: output ({i},{mi},{c}) at {cyc} != {want}"
+
+    # whole-plan composition vs the ported closed form
+    assert mc.spans == spans_model, f"{name} db={db}: spans {mc.spans} != {spans_model}"
+    total = mc.spans[-1][3]
+    assert total == t_total, f"{name} db={db}: total {total} != {t_total}"
+
+    # audit corollaries
+    if db:
+        exposed = sum(s[2] - (mc.spans[i - 1][3] if i else 0) for i, s in enumerate(mc.spans))
+        assert exposed == rows, f"{name}: exposed {exposed} != first fill {rows}"
+        for prev, cur in zip(mc.spans, mc.spans[1:]):
+            assert cur[1] < prev[3], f"{name}: preload not hidden under the stream"
+            assert cur[0] >= prev[1], f"{name}: fill path overlap"
+    else:
+        serial_sum = sum(rows + tile_cycles(S, D, tail, m, rows, t[3]) for t in tiles)
+        assert total == serial_sum, f"{name}: serialized {total} != per-tile sum {serial_sum}"
+    # db hides exactly (tiles-1)*R
+    t_serial = layer_timing(S, D, tail, m, rows, tiles, False)[0]
+    t_db = layer_timing(S, D, tail, m, rows, tiles, True)[0]
+    assert t_serial - t_db == (len(tiles) - 1) * rows
+
+
+def main():
+    rng = random.Random(0x5EED_1559)
+    cases = 0
+    for name, S, D, tail in SPECS:
+        for db in (True, False):
+            for _ in range(40):
+                one_case(rng, name, S, D, tail, db)
+                cases += 1
+    print(f"OK: {cases} randomized multi-tile streaming cases "
+          f"({len(SPECS)} organisations x both double-buffer modes) "
+          f"agree with the ported layer_timing composition")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,10 @@
 //! 3. `fast-sim` — the allocation-free, wavefront-banded, column-parallel
 //!    rewrite ([`skewsa::sa::fast::FastArraySim`]), including the
 //!    paper-scale 128×128 tile the dense loop was never practical for;
-//! 4. `executor` — coordinated GEMM throughput across the worker pool.
+//! 4. `stream` — the multi-tile streaming executor on a 4-tile
+//!    paper-scale plan, serialized vs double-buffered weight preload
+//!    (both pinned to the closed-form layer model);
+//! 5. `executor` — coordinated GEMM throughput across the worker pool.
 //!
 //! Every run appends its PE-cycles/sec numbers and the fast-vs-dense
 //! speedups to `BENCH_hotpath.json` at the repo root, so the perf
@@ -31,7 +34,8 @@ use skewsa::pe::PipelineKind;
 use skewsa::sa::array::ArraySim;
 use skewsa::sa::column::ColumnSim;
 use skewsa::sa::fast::FastArraySim;
-use skewsa::sa::tile::GemmShape;
+use skewsa::sa::stream::StreamingSim;
+use skewsa::sa::tile::{GemmShape, TilePlan};
 use skewsa::util::bench::{append_json_run, measure, with_units, Measurement};
 use skewsa::util::rng::Rng;
 use skewsa::workloads::gemm::GemmData;
@@ -179,6 +183,45 @@ fn main() {
     let fast128p = with_units(m, ppes, "PE-cycles");
     record(&fast128p, &mut tiers);
 
+    // --- streaming tier: multi-tile 128×128 plan ------------------------
+    // A 4-tile (2 K-passes × 2 N-blocks) paper-scale plan streamed as one
+    // continuous run with double-buffered vs serialized weight preload
+    // (ISSUE 5).  Simulated totals are pinned to the closed-form layer
+    // model before the numbers are trusted.
+    let sdata = GemmData::cnn_like(GemmShape::new(32, 256, 256), FpFormat::BF16, 5);
+    let splan = TilePlan::new(GemmShape::new(32, 256, 256), 128, 128);
+    assert_eq!(splan.tile_count(), 4);
+    let stream_workers = std::thread::available_parallelism().map_or(4, |n| n.get().min(8));
+    let mut stream_tiers: Vec<(&str, bool, f64)> = Vec::new();
+    for (name, db) in [
+        ("hot:stream-4x128x128-serial-preload", false),
+        ("hot:stream-4x128x128-double-buffered", true),
+    ] {
+        let scycles = {
+            let mut sim =
+                StreamingSim::new(CFG, PipelineKind::Skewed, &splan, &sdata.w, &sdata.a, db);
+            sim.run_parallel(10_000_000, stream_workers).unwrap();
+            assert!(sim.matches_layer_timing(), "stream must match the layer model");
+            sim.report().unwrap().cycles
+        };
+        let m = measure(name, 1, it(10), 3, || {
+            let mut sim =
+                StreamingSim::new(CFG, PipelineKind::Skewed, &splan, &sdata.w, &sdata.a, db);
+            sim.run_parallel(10_000_000, stream_workers).unwrap();
+            std::hint::black_box(sim.report().unwrap().cycles);
+        });
+        let m = with_units(m, scycles as f64 * (128.0 * 128.0), "PE-cycles");
+        record(&m, &mut tiers);
+        stream_tiers.push((name, db, scycles as f64));
+    }
+    let overlap_saving = 1.0 - stream_tiers[1].2 / stream_tiers[0].2;
+    println!(
+        "bench: double-buffered preload hides {:.1}% of the 4-tile stream ({} -> {} cycles)",
+        overlap_saving * 100.0,
+        stream_tiers[0].2,
+        stream_tiers[1].2
+    );
+
     let speedup32 = fast32.throughput() / dense32.throughput().max(1e-9);
     let speedup128 = fast128.throughput() / dense128.throughput().max(1e-9);
     let speedup128p = fast128p.throughput() / dense128.throughput().max(1e-9);
@@ -218,7 +261,10 @@ fn main() {
     entry.push_str(&format!(
         ", \"speedup_fast_vs_dense_32\": {speedup32:.2}, \
          \"speedup_fast_vs_dense_128\": {speedup128:.2}, \
-         \"speedup_fast_par_vs_dense_128\": {speedup128p:.2}}}"
+         \"speedup_fast_par_vs_dense_128\": {speedup128p:.2}, \
+         \"stream_serial_cycles\": {}, \"stream_overlapped_cycles\": {}, \
+         \"stream_overlap_saving\": {overlap_saving:.4}}}",
+        stream_tiers[0].2, stream_tiers[1].2
     ));
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json");
     match append_json_run(&path, &entry) {

@@ -29,6 +29,7 @@ use crate::coordinator::scheduler::{Scheduler, TileJob};
 use crate::coordinator::state::{RunState, TileResult};
 use crate::pe::PipelineKind;
 use crate::sa::fast::FastArraySim;
+use crate::sa::stream::StreamingSim;
 use crate::sa::tile::TilePlan;
 use crate::workloads::gemm::GemmData;
 use std::collections::BTreeSet;
@@ -163,6 +164,19 @@ impl WorkerPool {
     /// assembly completes.  `&mut self` serialises runs per pool (the
     /// serve layer gives each shard its own pool).
     ///
+    /// `double_buffer` is the weight-preload discipline of the array
+    /// being modeled.  In [`NumericMode::Oracle`] it only matters for
+    /// reported service time; in [`NumericMode::CycleAccurate`] the
+    /// whole plan runs as **one continuous stream** through the
+    /// multi-tile [`StreamingSim`] (tile `i+1` preloading while tile `i`
+    /// streams) instead of as independent per-tile jobs — the run is
+    /// cross-checked against the closed-form layer model, so simulated
+    /// service time and [`TilePlan::stream_cycles`] are one number.
+    /// Note the streaming path never touches the worker queues, so a
+    /// configured [`FaultPlan`] does not fire (and its budget is not
+    /// consumed) in cycle-accurate mode — fault injection targets the
+    /// per-tile job machinery.
+    ///
     /// A job that exhausts [`Executor::MAX_RETRIES`] is an `Err`, not a
     /// panic: a persistent pool lives on detached threads (shards),
     /// where a panic would silently wedge the whole serving pipeline.
@@ -175,7 +189,11 @@ impl WorkerPool {
         kind: PipelineKind,
         data: &Arc<GemmData>,
         plan: &TilePlan,
+        double_buffer: bool,
     ) -> Result<ExecOutcome, String> {
+        if mode == NumericMode::CycleAccurate {
+            return self.run_gemm_streaming(chain, kind, data, plan, double_buffer);
+        }
         let sched = Scheduler::new(plan);
         let mut state = RunState::new(data.shape.m, data.shape.n, plan.cols, sched.job_count());
         let mut retries = 0usize;
@@ -221,7 +239,42 @@ impl WorkerPool {
         }
         self.runs += 1;
         let per_worker = state.per_worker.iter().map(|(&w, &n)| (w, n)).collect();
-        Ok(ExecOutcome { y: state.into_result(), per_worker, retries })
+        Ok(ExecOutcome { y: state.into_result(), per_worker, retries, stream_cycles: None })
+    }
+
+    /// The cycle-accurate path: stream the whole plan through the
+    /// multi-tile simulator (column lanes fanned across this pool's
+    /// worker *count* as scoped threads — tile jobs cannot be split
+    /// across workers when the array is one physically continuous
+    /// machine), then cross-check the composition against the
+    /// closed-form layer timing before trusting either number.
+    fn run_gemm_streaming(
+        &mut self,
+        chain: ChainCfg,
+        kind: PipelineKind,
+        data: &Arc<GemmData>,
+        plan: &TilePlan,
+        double_buffer: bool,
+    ) -> Result<ExecOutcome, String> {
+        let mut sim = StreamingSim::new(chain, kind, plan, &data.w, &data.a, double_buffer);
+        let budget = plan.stream_cycles(kind, double_buffer) + 64;
+        let report = sim
+            .run_parallel(budget, self.workers)
+            .map_err(|e| format!("streaming cycle sim: {e}"))?;
+        // An `Err`, not a panic: this runs on detached shard threads in
+        // the serving path (see the run_gemm contract above).
+        if !sim.matches_layer_timing() {
+            return Err(format!(
+                "streaming cycle sim disagrees with the closed-form layer timing: {report:?}"
+            ));
+        }
+        self.runs += 1;
+        Ok(ExecOutcome {
+            y: sim.result_f32().to_vec(),
+            per_worker: Vec::new(),
+            retries: 0,
+            stream_cycles: Some(report.cycles),
+        })
     }
 
     /// Consume the results of jobs still queued/running after an
@@ -262,10 +315,15 @@ pub struct Executor {
 pub struct ExecOutcome {
     /// Row-major `M×N` output (f32 semantics of the out format).
     pub y: Vec<f32>,
-    /// Jobs executed per worker.
+    /// Jobs executed per worker (empty on the streaming cycle path,
+    /// which runs the plan as one continuous machine).
     pub per_worker: Vec<(usize, usize)>,
     /// Jobs that failed and were retried.
     pub retries: usize,
+    /// Simulated service time in array cycles — `Some` on the
+    /// cycle-accurate streaming path, where it is asserted equal to the
+    /// closed-form [`TilePlan::stream_cycles`] before being reported.
+    pub stream_cycles: Option<u64>,
 }
 
 /// Evaluate one tile job's numerics (pure function — runs on workers).
@@ -349,8 +407,15 @@ impl Executor {
             self.policy,
             self.fault,
         );
-        pool.run_gemm(self.cfg.chain(), self.cfg.mode, self.kind, data, plan)
-            .unwrap_or_else(|e| panic!("executor: {e}"))
+        pool.run_gemm(
+            self.cfg.chain(),
+            self.cfg.mode,
+            self.kind,
+            data,
+            plan,
+            self.cfg.double_buffer,
+        )
+        .unwrap_or_else(|e| panic!("executor: {e}"))
     }
 }
 
@@ -442,12 +507,12 @@ mod tests {
             FaultPlan { worker: 0, failures: Executor::MAX_RETRIES + 1 },
         );
         let err = pool
-            .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan)
+            .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan, true)
             .unwrap_err();
         assert!(err.contains("failed"), "{err}");
         // The fault budget is spent: the same pool now runs cleanly.
         let ok = pool
-            .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan)
+            .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan, true)
             .expect("healed pool");
         assert_eq!(ok.retries, 0);
     }
@@ -464,7 +529,7 @@ mod tests {
             let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, seed));
             let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
             let pooled = pool
-                .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan)
+                .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan, true)
                 .expect("pooled run");
             let fresh = Executor::new(cfg.clone(), PipelineKind::Skewed).run(&data, &plan);
             let pb: Vec<u32> = pooled.y.iter().map(|v| v.to_bits()).collect();

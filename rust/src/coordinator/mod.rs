@@ -22,7 +22,10 @@ pub use executor::{eval_tile, ExecOutcome, Executor, FaultPlan, WorkerPool};
 pub use router::{Policy, Router};
 pub use scheduler::{Scheduler, TileJob};
 pub use state::{RunState, TileResult};
-pub use verify::{verify_close, verify_oracle_sampled, verify_tiles_cycle_sim, VerifyReport};
+pub use verify::{
+    verify_close, verify_oracle_sampled, verify_plan_stream_sim, verify_tiles_cycle_sim,
+    VerifyReport,
+};
 
 use crate::config::RunConfig;
 use crate::energy::{AreaModel, LayerComparison, PowerModel};

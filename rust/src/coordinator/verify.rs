@@ -14,14 +14,18 @@
 //!    the reduction depth.
 //!
 //! Plus one *timing* leg: [`verify_tiles_cycle_sim`] replays weight
-//! tiles through the fast banded cycle simulator and checks bit-exact
-//! numerics **and** closed-form latency in one pass — practical at the
-//! paper's full 128×128 tile size.
+//! tiles through the cycle simulators and checks bit-exact numerics
+//! **and** closed-form latency in one pass — practical at the paper's
+//! full 128×128 tile size.  When it covers the whole plan it runs the
+//! multi-tile **streaming** simulator ([`verify_plan_stream_sim`]), so
+//! the inter-tile composition (double-buffered preload overlap, drain
+//! serialization) is validated too, not just each tile in isolation.
 
 use crate::arith::accum::ColumnOracle;
 use crate::arith::fma::ChainCfg;
 use crate::pe::PipelineKind;
 use crate::sa::fast::FastArraySim;
+use crate::sa::stream::StreamingSim;
 use crate::sa::tile::TilePlan;
 use crate::util::rng::Rng;
 use crate::workloads::gemm::GemmData;
@@ -103,14 +107,64 @@ pub fn verify_oracle_sampled(
     rep
 }
 
-/// Cycle-simulate up to `max_tiles` of the plan's weight tiles through
-/// the fast banded simulator ([`FastArraySim`]) and cross-check both
-/// legs at once: numerics must be **bit-exact** against the column
-/// oracle, and every output must land on its closed-form
-/// [`crate::sa::dataflow::WsSchedule`] cycle (the sim *validates* the
-/// timing model instead of substituting for it — DESIGN.md §2).  Runs
-/// paper-scale 128×128 tiles directly; `threads` fans the column strips
-/// out across workers.
+/// Stream the **whole plan** through the multi-tile cycle simulator
+/// ([`StreamingSim`]) with the given weight-preload discipline and
+/// cross-check every leg at once: the assembled `M×N` output must be
+/// **bit-exact** against the per-element oracle assembly
+/// ([`oracle_element`]), and the run's cycle accounting — total,
+/// compute, exposed preload, drain, per-tile spans — must equal the
+/// closed-form [`crate::timing::layer_timing`] (the sim *validates*
+/// the layer composition instead of substituting for it — DESIGN.md
+/// §15).  `threads` fans each tile's column strips out across workers.
+///
+/// Each assembled element counts toward `checked`; a bit mismatch
+/// counts per element, and a timing-model mismatch, a stall, or a
+/// failed run count as additional `failures`.
+pub fn verify_plan_stream_sim(
+    chain: &ChainCfg,
+    kind: PipelineKind,
+    plan: &TilePlan,
+    data: &GemmData,
+    double_buffer: bool,
+    threads: usize,
+) -> VerifyReport {
+    let (m_total, n_total) = (data.shape.m, data.shape.n);
+    let mut rep = VerifyReport::default();
+    let mut sim = StreamingSim::new(*chain, kind, plan, &data.w, &data.a, double_buffer);
+    let budget = plan.stream_cycles(kind, double_buffer) + 64;
+    if sim.run_parallel(budget, threads).is_err() {
+        rep.checked = m_total * n_total;
+        rep.failures = m_total * n_total;
+        return rep;
+    }
+    let y = sim.result_f32();
+    for m in 0..m_total {
+        for n in 0..n_total {
+            rep.checked += 1;
+            let want = oracle_element(chain, plan, data, m, n);
+            if y[m * n_total + n].to_bits() != want.to_bits() {
+                rep.failures += 1;
+            }
+        }
+    }
+    if !sim.matches_layer_timing() {
+        rep.failures += 1;
+    }
+    rep.failures += sim.stalls() as usize;
+    rep
+}
+
+/// Cycle-simulate up to `max_tiles` of the plan's weight tiles and
+/// cross-check both legs at once: numerics must be **bit-exact** and
+/// latency must land on the closed form.  Covering the whole plan
+/// (`max_tiles ≥ tile_count`) routes through the multi-tile streaming
+/// simulator ([`verify_plan_stream_sim`], crate-default double-buffered
+/// preload), which additionally validates the inter-tile composition;
+/// a partial sample replays isolated tiles through the fast banded
+/// simulator ([`FastArraySim`]) against per-tile oracle bits and
+/// [`crate::sa::dataflow::WsSchedule`] cycles.  Runs paper-scale
+/// 128×128 tiles directly; `threads` fans the column strips out across
+/// workers.
 ///
 /// Each checked element counts toward `checked`; a bit mismatch, a
 /// latency mismatch, a stall, or a failed run all count as `failures`.
@@ -122,6 +176,9 @@ pub fn verify_tiles_cycle_sim(
     max_tiles: usize,
     threads: usize,
 ) -> VerifyReport {
+    if max_tiles >= plan.tile_count() {
+        return verify_plan_stream_sim(chain, kind, plan, data, true, threads);
+    }
     let mut rep = VerifyReport::default();
     for tile in plan.tiles.iter().take(max_tiles) {
         let w_slab = plan.weight_slab(&data.w, tile);
@@ -232,11 +289,57 @@ mod tests {
         let data = GemmData::cnn_like(shape, FpFormat::BF16, 21);
         let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
         for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+            // Whole-plan coverage routes through the streaming simulator
+            // and checks the assembled M×N output + layer composition.
             let rep = verify_tiles_cycle_sim(&cfg.chain(), kind, &plan, &data, usize::MAX, 2);
             assert!(rep.ok(), "{kind}: {rep:?}");
-            // Every tile checks M × n_len elements: K-passes × M × N total.
-            assert_eq!(rep.checked, plan.k_tiles() * shape.m * shape.n);
+            assert_eq!(rep.checked, shape.m * shape.n);
+            // Both preload disciplines hold via the explicit entry point.
+            for db in [true, false] {
+                let rep = verify_plan_stream_sim(&cfg.chain(), kind, &plan, &data, db, 2);
+                assert!(rep.ok(), "{kind} db={db}: {rep:?}");
+            }
+            // A partial sample still replays isolated tiles per-tile.
+            let sampled = verify_tiles_cycle_sim(&cfg.chain(), kind, &plan, &data, 2, 2);
+            assert!(sampled.ok(), "{kind}: {sampled:?}");
+            assert_eq!(sampled.checked, 2 * shape.m * plan.tiles[0].n_len);
         }
+    }
+
+    #[test]
+    fn stream_sim_catches_corrupted_weights() {
+        // Sanity of the failure leg: corrupt one weight *after* planning
+        // the oracle comparison and the streaming run must disagree.
+        let cfg = RunConfig::small();
+        let shape = GemmShape::new(4, 16, 6);
+        let data = GemmData::integer_valued(shape, FpFormat::BF16, 31);
+        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let mut bad = data.clone();
+        bad.w[3][2] = FpFormat::BF16.from_f64(99.0);
+        let y_good =
+            verify_plan_stream_sim(&cfg.chain(), PipelineKind::Skewed, &plan, &data, true, 1);
+        assert!(y_good.ok());
+        // Oracle recomputed from `bad` but sim run on `bad` too → still
+        // consistent; the mismatch only appears across datasets.
+        let mut sim = crate::sa::stream::StreamingSim::new(
+            cfg.chain(),
+            PipelineKind::Skewed,
+            &plan,
+            &bad.w,
+            &bad.a,
+            true,
+        );
+        sim.run(100_000).unwrap();
+        let mut diffs = 0;
+        for m in 0..shape.m {
+            for n in 0..shape.n {
+                let want = oracle_element(&cfg.chain(), &plan, &data, m, n);
+                if sim.result_f32()[m * shape.n + n].to_bits() != want.to_bits() {
+                    diffs += 1;
+                }
+            }
+        }
+        assert!(diffs > 0, "corrupted weight must surface in the assembled output");
     }
 
     #[test]

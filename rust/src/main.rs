@@ -14,6 +14,7 @@
 //! skewsa run         # coordinate a GEMM end-to-end (verify + report)
 //! skewsa serve       # multi-tenant serving: batching + cache + shards
 //! skewsa precision   # mixed-precision planner: budget -> per-layer plan
+//! skewsa stream      # multi-tile layer latency: serialized vs overlapped
 //! skewsa viz         # pipeline interleaving trace (Figs. 4/6)
 //! ```
 //!
@@ -65,7 +66,7 @@ fn cli() -> Cli {
     .opt("interactive", "serve: interactive request fraction", Some("0.25"))
     .opt("net", "serve: model set mobilenet|resnet50|mix", Some("mix"))
     .opt("cap", "serve: K/N clamp for served layers", Some("128"))
-    .opt("workload", "precision: mobilenet|resnet50", Some("mobilenet"))
+    .opt("workload", "precision/stream: mobilenet|resnet50", Some("mobilenet"))
     .opt("budget", "precision: per-layer error budget (peak-normalized)", Some("1e-2"))
     .opt("m-cap", "precision: sampled rows per layer (full K always)", Some("8"))
     .opt("n-cap", "precision: sampled columns per layer", Some("16"))
@@ -96,6 +97,29 @@ fn main() {
         "ablation" => report::ablation_pipelines(cfg.chain(), &tcfg),
         "formats" => report::format_sweep(),
         "sweep" => report::design_sweep(cfg.clock_ghz, single_kind(&cfg, &args, "sweep")),
+        "stream" => {
+            use skewsa::workloads::{mobilenet, resnet50};
+            let net = args.get("workload").unwrap_or("mobilenet");
+            let layers = match net {
+                "mobilenet" => mobilenet::layers(),
+                "resnet50" => resnet50::layers(),
+                other => {
+                    eprintln!("error: unknown workload '{other}' (mobilenet|resnet50)");
+                    std::process::exit(2);
+                }
+            };
+            let kind = single_kind(&cfg, &args, "stream");
+            report::multi_tile_latency(
+                &format!(
+                    "Stream: {net} multi-tile latency, {kind} on {}x{} \
+                     (double-buffered vs serialized preload)",
+                    cfg.rows, cfg.cols
+                ),
+                &layers,
+                &tcfg,
+                kind,
+            )
+        }
         "run" => {
             run_gemm(&cfg, &args);
             return;

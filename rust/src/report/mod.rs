@@ -484,6 +484,58 @@ pub fn precision_pareto(net: &str, study: &crate::precision::PrecisionStudy) -> 
 /// Serving summary: latency percentiles, throughput, batching and
 /// plan-cache effectiveness, per-shard load (DESIGN.md §11; rendered by
 /// `skewsa serve` and `bench_serve`).
+/// Multi-tile layer latency: serialized vs double-buffered weight
+/// preload for every layer of a network (the `skewsa stream`
+/// subcommand; the README's "multi-tile latency" walkthrough quotes
+/// this table for a ResNet-50 layer).  All numbers are the closed-form
+/// [`crate::timing::layer_timing`], which the streaming cycle simulator
+/// pins exactly (`tests/prop_streaming.rs`).
+pub fn multi_tile_latency(
+    title: &str,
+    layers: &[LayerDef],
+    tcfg: &TimingConfig,
+    kind: PipelineKind,
+) -> Report {
+    use crate::timing::model::layer_timing;
+    let mut table = Table::new(&[
+        "layer",
+        "M",
+        "K",
+        "N",
+        "tiles",
+        "cyc-serial",
+        "cyc-overlap",
+        "saved",
+        "exposed",
+        "drain",
+    ])
+    .numeric();
+    let overlap = TimingConfig { double_buffer: true, ..*tcfg };
+    let serial = TimingConfig { double_buffer: false, ..*tcfg };
+    for l in layers {
+        let shape = l.gemm();
+        let plan = TilePlan::new(shape, tcfg.rows, tcfg.cols);
+        let o = layer_timing(&overlap, kind, &plan);
+        let s = layer_timing(&serial, kind, &plan);
+        // Fraction of the serialized latency that double buffering
+        // hides (positive = saved).
+        let saved = 1.0 - o.cycles as f64 / s.cycles as f64;
+        table.row(&[
+            l.name.clone(),
+            shape.m.to_string(),
+            shape.k.to_string(),
+            shape.n.to_string(),
+            plan.tile_count().to_string(),
+            s.cycles.to_string(),
+            o.cycles.to_string(),
+            pct(saved),
+            o.exposed_preload.to_string(),
+            o.drain_cycles.to_string(),
+        ]);
+    }
+    Report { title: title.to_string(), table, totals: None }
+}
+
 pub fn serve_summary(load: &crate::serve::LoadReport, stats: &crate::serve::ServerStats) -> Report {
     // Absolute fractions, not deltas: plain percent, no forced sign.
     let frac = |x: f64| format!("{:.1}%", x * 100.0);
@@ -499,6 +551,12 @@ pub fn serve_summary(load: &crate::serve::LoadReport, stats: &crate::serve::Serv
     table.row(&["max batch size".into(), load.max_batch.to_string()]);
     table.row(&["plan-cache hit rate".into(), frac(stats.cache.hit_rate())]);
     table.row(&["plan-cache entries".into(), stats.cache.entries.to_string()]);
+    // Simulated array-time under the configured preload discipline —
+    // the overlapped-timing number the streaming cycle simulator pins.
+    table.row(&[
+        "sim service cycles (resp-weighted)".into(),
+        load.stream_cycles_observed.to_string(),
+    ]);
     // Exact tile-retry count from the shard counters (the per-response
     // sum in LoadReport counts a batch's retries once per member).
     let tile_retries: u64 = stats.shards.iter().map(|s| s.retries).sum();
@@ -683,6 +741,7 @@ mod tests {
             max_batch: 4,
             cache_hit_responses: 8,
             retries_observed: 0,
+            stream_cycles_observed: 12_345,
         };
         let stats = ServerStats {
             submitted: 10,
@@ -693,6 +752,8 @@ mod tests {
         assert!(text.contains("latency p99"));
         assert!(text.contains("shard 1"));
         assert!(text.contains("plan-cache hit rate"));
+        assert!(text.contains("sim service cycles"));
+        assert!(text.contains("12345"), "stream cycles render: {text}");
         assert!(text.contains("80.0%"), "hit rate 4/5 renders: {text}");
         assert!(!text.contains("+80.0%"), "absolute rate must not carry a delta sign: {text}");
     }
@@ -703,5 +764,28 @@ mod tests {
         let text = headline(&t, &p).render();
         assert!(text.contains("MobileNetV1"));
         assert!(text.contains("ResNet50"));
+    }
+
+    #[test]
+    fn multi_tile_latency_shows_overlap_saving() {
+        use crate::timing::model::layer_timing;
+        let layers = resnet50::layers();
+        let r = multi_tile_latency("stream", &layers, &TimingConfig::PAPER, PipelineKind::Skewed);
+        assert_eq!(r.table.n_rows(), layers.len());
+        let text = r.render();
+        assert!(text.contains("cyc-serial") && text.contains("cyc-overlap"));
+        // Every multi-tile ResNet-50 layer streams strictly faster
+        // overlapped; exposed preload collapses to one fill (R = 128).
+        for l in &layers {
+            let plan = TilePlan::new(l.gemm(), 128, 128);
+            let o = layer_timing(&TimingConfig::PAPER, PipelineKind::Skewed, &plan);
+            let s = layer_timing(
+                &TimingConfig { double_buffer: false, ..TimingConfig::PAPER },
+                PipelineKind::Skewed,
+                &plan,
+            );
+            assert_eq!(o.exposed_preload, 128, "{}", l.name);
+            assert_eq!(s.cycles - o.cycles, (plan.tile_count() as u64 - 1) * 128, "{}", l.name);
+        }
     }
 }

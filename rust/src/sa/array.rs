@@ -51,6 +51,14 @@ pub struct ArraySim {
     /// Per-PE next expected element.
     next_feed: Vec<usize>,
     cycle: u64,
+    /// Global cycle at which the current tile's stream began (the
+    /// arrival schedule is relative to it) — advances at every
+    /// [`ArraySim::begin_next_tile`] hand-off.
+    base_cycle: u64,
+    /// The shadow weight bank, row-major `[r * cols + c]` — the next
+    /// tile's weights, delivered by [`ArraySim::preload_shadow`] while
+    /// the current tile streams.
+    shadow_w: Vec<u64>,
     outputs: Vec<ArrayOutput>,
     round_q: Vec<VecDeque<(u64, usize, PsumSignal)>>,
     produced: usize,
@@ -104,6 +112,8 @@ impl ArraySim {
             a,
             next_feed: vec![0; rows * cols],
             cycle: 0,
+            base_cycle: 0,
+            shadow_w: Vec::new(),
             outputs: Vec::new(),
             round_q: vec![VecDeque::new(); cols],
             produced: 0,
@@ -133,6 +143,57 @@ impl ArraySim {
 
     pub fn schedule(&self) -> &WsSchedule {
         &self.sched
+    }
+
+    /// The global clock (monotone across tile hand-offs).
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Deliver the next tile's weights into the shadow bank (what the
+    /// dedicated fill path does while the current tile streams under
+    /// double buffering).
+    pub fn preload_shadow(&mut self, weights: &[Vec<u64>]) {
+        assert_eq!(weights.len(), self.rows);
+        assert!(weights.iter().all(|w| w.len() == self.cols));
+        self.shadow_w = (0..self.rows * self.cols)
+            .map(|i| weights[i / self.cols][i % self.cols])
+            .collect();
+    }
+
+    /// Tile hand-off on the continuous clock: swap the shadow bank into
+    /// every PE's stationary-weight register and start streaming `a`
+    /// with the arrival schedule re-anchored at the *current* cycle.
+    /// The pipes must have drained naturally (asserted — no state
+    /// reset); idle-[`ArraySim::tick`] first if the hand-off must wait
+    /// for a preload still in flight.
+    pub fn begin_next_tile(&mut self, a: Vec<Vec<u64>>) {
+        assert!(!self.shadow_w.is_empty(), "tile hand-off without a preloaded shadow bank");
+        for (i, pe) in self.pes.iter().enumerate() {
+            assert!(
+                pe.pipe.iter().all(|s| s.is_none()),
+                "tile hand-off with elements still in PE {i}'s pipe"
+            );
+            let consumed = match pe.out {
+                Some(o) => o.taken,
+                None => true,
+            };
+            assert!(consumed, "tile hand-off with an unconsumed partial sum at PE {i}");
+        }
+        assert!(self.round_q.iter().all(|q| q.is_empty()), "rounding still in flight");
+        for row in &a {
+            assert_eq!(row.len(), self.rows, "activation row width != array depth");
+        }
+        for (pe, &w) in self.pes.iter_mut().zip(&self.shadow_w) {
+            pe.weight = w;
+            pe.out = None; // element tags rename per tile; value was consumed
+        }
+        self.shadow_w = Vec::new();
+        self.sched = WsSchedule::with_spec(self.spec, self.rows, self.cols, a.len());
+        self.a = a;
+        self.next_feed.fill(0);
+        self.produced = 0;
+        self.base_cycle = self.cycle;
     }
 
     /// Advance one clock cycle.
@@ -245,8 +306,10 @@ impl ArraySim {
                     self.pes[i].stage1_bubble();
                     continue;
                 }
-                // Activation wavefront arrival at column c.
-                if self.sched.arrive_cycle(r, c, want) > t {
+                // Activation wavefront arrival at column c (the
+                // schedule is anchored at the current tile's stream
+                // start on the continuous clock).
+                if self.base_cycle + self.sched.arrive_cycle(r, c, want) > t {
                     // Row 0 waiting on the wavefront is normal fill; a
                     // *chain-ready* PE deeper down waiting on its
                     // activation is a schedule skew (psum at risk).
@@ -443,6 +506,48 @@ mod tests {
         b.run(100_000).unwrap();
         s.run(100_000).unwrap();
         assert_eq!(b.cycles() - s.cycles(), 24 - 2);
+    }
+
+    #[test]
+    fn dense_two_tile_stream_on_continuous_clock() {
+        // The dense reference loop streams two weight tiles through one
+        // continuously ticking machine: tile 1's weights ride the shadow
+        // bank while tile 0 streams, the hand-off happens at tile 0's
+        // drain (the preload hid under the stream — T > R), and every
+        // tile-1 output lands exactly `T_0` cycles after its solo-run
+        // position on the global clock.
+        let mut rng = Rng::new(0x2711);
+        for kind in PipelineKind::ALL {
+            let (w0, a0) = random_case(&mut rng, 6, 8, 4);
+            let (w1, a1) = random_case(&mut rng, 6, 8, 4);
+            let mut solo1 = ArraySim::new(CFG, kind, &w1, a1.clone());
+            solo1.run(100_000).unwrap();
+            let mut sim = ArraySim::new(CFG, kind, &w0, a0.clone());
+            sim.preload_shadow(&w1);
+            sim.run(100_000).unwrap();
+            let t0 = sim.cycles();
+            assert_eq!(t0, sim.schedule().total_cycles(), "{kind}");
+            assert_eq!(sim.cycle(), t0, "{kind}: machine stops at the drain");
+            let n0 = sim.outputs().len();
+            sim.begin_next_tile(a1.clone());
+            sim.run(100_000).unwrap();
+            assert_eq!(sim.result_bits(), solo1.result_bits(), "{kind}");
+            for (o, s) in sim.outputs()[n0..].iter().zip(solo1.outputs()) {
+                assert_eq!(o.cycle, t0 + s.cycle, "{kind} m={} col={}", o.m, o.col);
+                assert_eq!(o.bits, s.bits, "{kind}");
+            }
+            assert_eq!(sim.stalls, 0, "{kind}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shadow bank")]
+    fn hand_off_without_preload_is_rejected() {
+        let mut rng = Rng::new(0x99);
+        let (w, a) = random_case(&mut rng, 2, 4, 2);
+        let mut sim = ArraySim::new(CFG, PipelineKind::Skewed, &w, a.clone());
+        sim.run(10_000).unwrap();
+        sim.begin_next_tile(a);
     }
 
     #[test]

@@ -93,6 +93,16 @@ impl WsSchedule {
         self.rows as u64
     }
 
+    /// Pipeline-drain cycles of this tile's stream: everything past the
+    /// last West-edge injection while the wavefront crosses the array,
+    /// `T − M = (C−1) + S·(R−1) + D + 1 + tail − 1`.  The second leg of
+    /// the streaming executor's stall taxonomy (the first being exposed
+    /// preload — see [`crate::sa::stream::StreamingSim`]).
+    pub fn drain_cycles(&self) -> u64 {
+        let t = self.total_cycles();
+        t - t.min(self.m_total as u64)
+    }
+
     /// Phase boundaries for occupancy traces / the viz example:
     /// `(fill_end, steady_end, drain_end)` — cycles at which the array
     /// finishes filling (first element reaches the last row), the last
@@ -172,6 +182,22 @@ mod tests {
     fn empty_stream_is_zero_cycles() {
         let s = WsSchedule::new(PipelineKind::Skewed, 4, 4, 0);
         assert_eq!(s.total_cycles(), 0);
+        assert_eq!(s.drain_cycles(), 0);
+    }
+
+    #[test]
+    fn drain_is_total_minus_stream_and_exceeds_preload() {
+        for kind in PipelineKind::ALL {
+            let s = WsSchedule::new(kind, 8, 4, 16);
+            assert_eq!(s.drain_cycles(), s.total_cycles() - 16, "{kind}");
+            // T ≥ R + 2 for every valid spec: a full-chain stream always
+            // covers its own fill, so overlapped preloads never surface
+            // (the layer model's corollary).
+            assert!(
+                WsSchedule::new(kind, 8, 1, 1).total_cycles() >= 8 + 2,
+                "{kind}"
+            );
+        }
     }
 
     #[test]

@@ -88,11 +88,19 @@ const RING: usize = 4;
 /// One column's complete simulation state: SoA over rows, plus the
 /// column's output slots.  Lanes are fully independent once constructed,
 /// which is what makes [`FastArraySim::run_parallel`] a safe data split.
-struct ColLane {
+///
+/// `pub(crate)` so the multi-tile streaming executor
+/// ([`crate::sa::stream::StreamingSim`]) can drive the same lane
+/// machinery tile after tile through the double-buffered weight bank.
+pub(crate) struct ColLane {
     /// Column index in the array (fixes the arrival schedule offset).
-    col: usize,
-    /// Stationary weights down this column, `w[r]`.
-    w: Vec<u64>,
+    pub(crate) col: usize,
+    /// Stationary weights down this column, `w[r]` — the *active* bank.
+    pub(crate) w: Vec<u64>,
+    /// The shadow weight bank: the next tile's column, delivered by the
+    /// (modeled) fill path while this tile streams; swapped into `w` at
+    /// the tile hand-off ([`ColLane::begin_tile`]).
+    pub(crate) w_shadow: Vec<u64>,
     /// Internal pipe registers, stride `depth − 1` per row: element
     /// index at `[r·(D−1) + k]` = the element that has completed stages
     /// `1..=k+1` (`EMPTY` = bubble).
@@ -111,25 +119,89 @@ struct ColLane {
     /// Next element index each PE expects to accept.
     next_feed: Vec<u32>,
     /// Rounded output bits per element, `y[m]`.
-    y_bits: Vec<u64>,
-    /// Cycle at whose end each output left the South edge.
-    y_cycle: Vec<u64>,
+    pub(crate) y_bits: Vec<u64>,
+    /// Cycle at whose end each output left the South edge (local to the
+    /// current tile's stream window).
+    pub(crate) y_cycle: Vec<u64>,
     /// Outputs produced so far.
     produced: u32,
     /// Chain-ready-but-activation-late cycles (schedule skew detector).
-    stalls: u64,
+    pub(crate) stalls: u64,
+}
+
+impl ColLane {
+    /// A drained lane with `w` in the active bank.
+    pub(crate) fn new(
+        col: usize,
+        w: Vec<u64>,
+        m_total: usize,
+        stride: usize,
+        zero: PsumSignal,
+    ) -> ColLane {
+        let rows = w.len();
+        ColLane {
+            col,
+            w,
+            w_shadow: Vec::new(),
+            pipe_m: vec![EMPTY; rows * stride],
+            pipe_a: vec![0; rows * stride],
+            pipe_val: vec![zero; rows * stride],
+            out_m: vec![EMPTY; rows],
+            out_sig: vec![zero; rows],
+            out_taken: vec![false; rows],
+            next_feed: vec![0; rows],
+            y_bits: vec![0; m_total],
+            y_cycle: vec![0; m_total],
+            produced: 0,
+            stalls: 0,
+        }
+    }
+
+    /// Deliver the next tile's weight column into the shadow bank (what
+    /// the fill path does while the current tile streams).
+    pub(crate) fn preload_shadow(&mut self, w: Vec<u64>) {
+        debug_assert_eq!(w.len(), self.w.len());
+        self.w_shadow = w;
+    }
+
+    /// Tile hand-off: swap the shadow bank into the active position and
+    /// rearm the per-tile stream counters.  *No state reset*: the pipe
+    /// must already be drained (asserted) — a correct schedule leaves it
+    /// empty because the next stream only starts after the previous
+    /// drain.  The out-register element tags are cleared (renamed for
+    /// the new tile); their values were all consumed downstream.
+    pub(crate) fn begin_tile(&mut self) {
+        assert!(
+            self.pipe_m.iter().all(|&m| m == EMPTY),
+            "tile hand-off with elements still in the pipe"
+        );
+        for (i, &m) in self.out_m.iter().enumerate() {
+            assert!(
+                m == EMPTY || self.out_taken[i],
+                "tile hand-off with an unconsumed partial sum at row {i}"
+            );
+        }
+        assert!(!self.w_shadow.is_empty(), "tile hand-off without a preloaded shadow bank");
+        // `take`, not `swap`: the emptied shadow bank keeps the
+        // preload-before-hand-off assert meaningful on every later tile
+        // (a swap would leave the stale active bank in it).
+        self.w = std::mem::take(&mut self.w_shadow);
+        self.out_m.fill(EMPTY);
+        self.next_feed.fill(0);
+        self.produced = 0;
+    }
 }
 
 /// Shared read-only context for a lane run (everything is `Copy` so the
 /// same value flows into each worker thread).
 #[derive(Clone, Copy)]
-struct LaneCtx<'a> {
-    cfg: ChainCfg,
-    ru: RoundingUnit,
-    sched: WsSchedule,
+pub(crate) struct LaneCtx<'a> {
+    pub(crate) cfg: ChainCfg,
+    pub(crate) ru: RoundingUnit,
+    pub(crate) sched: WsSchedule,
     /// Activations, `a[m * rows + r]`.
-    a: &'a [u64],
-    max_cycles: u64,
+    pub(crate) a: &'a [u64],
+    pub(crate) max_cycles: u64,
 }
 
 /// Throughput-grade cycle-accurate R×C weight-stationary array.
@@ -182,20 +254,8 @@ impl FastArraySim {
         let zero = PsumSignal::zero(&cfg);
         let stride = spec.depth as usize - 1;
         let lanes = (0..cols)
-            .map(|c| ColLane {
-                col: c,
-                w: (0..rows).map(|r| weights[r][c]).collect(),
-                pipe_m: vec![EMPTY; rows * stride],
-                pipe_a: vec![0; rows * stride],
-                pipe_val: vec![zero; rows * stride],
-                out_m: vec![EMPTY; rows],
-                out_sig: vec![zero; rows],
-                out_taken: vec![false; rows],
-                next_feed: vec![0; rows],
-                y_bits: vec![0; m_total],
-                y_cycle: vec![0; m_total],
-                produced: 0,
-                stalls: 0,
+            .map(|c| {
+                ColLane::new(c, (0..rows).map(|r| weights[r][c]).collect(), m_total, stride, zero)
             })
             .collect();
         FastArraySim {
@@ -376,7 +436,7 @@ impl FastArraySim {
 
 /// Monomorphize the lane run over the registered datapaths
 /// (devirtualizes the per-step dispatch out of the hot loop).
-fn run_lane_dispatch(
+pub(crate) fn run_lane_dispatch(
     spec: &PipelineSpec,
     ctx: LaneCtx<'_>,
     lane: &mut ColLane,

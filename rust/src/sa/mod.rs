@@ -6,6 +6,9 @@
 //!   reference loop).
 //! * [`fast`] — the throughput-grade rewrite: allocation-free SoA lanes,
 //!   wavefront-banded iteration, column-parallel strips (DESIGN.md §2).
+//! * [`stream`] — the multi-tile streaming executor: a whole [`TilePlan`]
+//!   as one continuous run with double-buffered weight preload,
+//!   validating the layer-level timing composition (DESIGN.md §15).
 //! * [`tile`] — GEMM → weight-tile decomposition (K/N tiling, K-pass
 //!   accumulation).
 //! * [`trace`] — per-cycle stage-occupancy traces (viz + activity).
@@ -14,6 +17,7 @@ pub mod array;
 pub mod column;
 pub mod dataflow;
 pub mod fast;
+pub mod stream;
 pub mod tile;
 pub mod trace;
 
@@ -21,5 +25,6 @@ pub use array::ArraySim;
 pub use column::{ColOutput, ColumnSim, SimError};
 pub use dataflow::WsSchedule;
 pub use fast::FastArraySim;
+pub use stream::{StreamReport, StreamingSim};
 pub use tile::{GemmShape, Tile, TilePlan};
 pub use trace::Trace;

@@ -1,0 +1,528 @@
+//! Multi-tile streaming executor: one continuous cycle-accurate run of
+//! an entire [`TilePlan`] with double-buffered weight preload.
+//!
+//! The per-tile simulators ([`crate::sa::fast::FastArraySim`] and the
+//! dense loops) validate the closed-form *tile* formula; this module
+//! validates the *layer* composition ([`crate::timing::layer_timing`]):
+//! how consecutive weight-stationary tiles chain on one array.  Each
+//! column lane carries **two weight banks** — while tile `i` streams
+//! from the active bank, the (modeled) fill path delivers tile `i+1`'s
+//! column into the shadow bank; at the hand-off the banks swap and the
+//! next stream begins with *no state reset* (the lane asserts its pipe
+//! drained naturally rather than clearing it).  See DESIGN.md §15 for
+//! the hand-off discipline and the stall taxonomy.
+//!
+//! Event accounting is audited, not assumed: every preload event asserts
+//! the fill path is free and the target bank is dead (the two-buffer
+//! constraint of [`crate::timing::model::layer_spans`]), per-tile stream
+//! durations come from the lane simulation itself (not the closed form),
+//! and [`StreamingSim::matches_layer_timing`] then checks the whole
+//! composition — total cycles, compute, exposed preload, drain — against
+//! the model, which `tests/prop_streaming.rs` pins for every registered
+//! organisation in both double-buffer modes.
+//!
+//! Outputs commit per tile: each K-pass tile's rounded partials fold
+//! into the assembled `M×N` matrix in pass order, exactly as the
+//! coordinator's [`crate::coordinator::RunState`] assembly does — so a
+//! streamed plan is bit-identical to the per-tile executor path (also
+//! pinned by the property suite).
+
+use crate::arith::accum::RoundingUnit;
+use crate::arith::fma::{ChainCfg, PsumSignal};
+use crate::pe::cycle::PeActivity;
+use crate::pe::{PipelineKind, PipelineSpec};
+use crate::sa::column::SimError;
+use crate::sa::dataflow::WsSchedule;
+use crate::sa::fast::{run_lane_dispatch, ColLane, LaneCtx};
+use crate::sa::tile::{Tile, TilePlan};
+use crate::timing::model::{layer_timing_spec, TileSpanTiming, TimingConfig};
+
+/// Cycle accounting of one streamed plan.  `spans` uses the timing
+/// model's span type so simulator and model schedules compare directly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StreamReport {
+    /// Total cycles, first preload push → last rounded output.
+    pub cycles: u64,
+    /// Cycles spent streaming tiles (simulated per-tile durations).
+    pub compute_cycles: u64,
+    /// Cycles the array sat idle waiting on weights (stall taxonomy leg
+    /// 1; under double buffering only the first fill, since `T > R`).
+    pub exposed_preload: u64,
+    /// Cycles past each tile's last West-edge injection while the
+    /// wavefront crossed the array (stall taxonomy leg 2).
+    pub drain_cycles: u64,
+    /// Weight tiles streamed.
+    pub tiles: usize,
+    /// Per-tile preload/stream spans on the global clock.
+    pub spans: Vec<TileSpanTiming>,
+}
+
+/// Cycle-accurate multi-tile streaming simulator.
+///
+/// Streaming a 2-tile plan end-to-end and checking it against the
+/// closed-form layer model:
+///
+/// ```
+/// use skewsa::arith::fma::ChainCfg;
+/// use skewsa::pe::PipelineKind;
+/// use skewsa::sa::stream::StreamingSim;
+/// use skewsa::sa::tile::{GemmShape, TilePlan};
+///
+/// let chain = ChainCfg::BF16_FP32;
+/// let bf = |x: f64| chain.in_fmt.from_f64(x);
+/// // K = 4 on a 2×2 array → two K-pass tiles per N-block.
+/// let w: Vec<Vec<u64>> = (0..4).map(|k| vec![bf(1.0 + k as f64), bf(2.0)]).collect();
+/// let a = vec![vec![bf(1.0); 4]];
+/// let plan = TilePlan::new(GemmShape::new(1, 4, 2), 2, 2);
+/// let mut sim = StreamingSim::new(chain, PipelineKind::Skewed, &plan, &w, &a, true);
+/// let report = sim.run(10_000).unwrap();
+/// assert_eq!(report.tiles, 2);
+/// assert!(sim.matches_layer_timing());
+/// assert_eq!(sim.result_f32()[0], 10.0); // 1+2+3+4
+/// ```
+pub struct StreamingSim {
+    pub cfg: ChainCfg,
+    /// The pipeline organisation under simulation.
+    pub spec: PipelineSpec,
+    plan: TilePlan,
+    double_buffer: bool,
+    rows: usize,
+    cols: usize,
+    m_total: usize,
+    n_total: usize,
+    /// Full weight matrix `w[k][n]` (tiles slice it at preload time).
+    w: Vec<Vec<u64>>,
+    /// Full activation matrix `a[m][k]`.
+    a: Vec<Vec<u64>>,
+    lanes: Vec<ColLane>,
+    ru: RoundingUnit,
+    /// Assembled output, row-major `M×N`, folded across K-passes in
+    /// pass order (the coordinator's assembly semantics).
+    y: Vec<f32>,
+    /// Global cycle at whose end each output's *final* K-pass left the
+    /// South edge.
+    out_cycle: Vec<u64>,
+    report: Option<StreamReport>,
+}
+
+impl StreamingSim {
+    /// Build a streaming run of `plan` over the full matrices
+    /// `w[k][n]` / `a[m][k]` for a registered organisation.
+    pub fn new(
+        cfg: ChainCfg,
+        kind: PipelineKind,
+        plan: &TilePlan,
+        w: &[Vec<u64>],
+        a: &[Vec<u64>],
+        double_buffer: bool,
+    ) -> Self {
+        Self::with_spec(cfg, *kind.spec(), plan, w, a, double_buffer)
+    }
+
+    /// As [`StreamingSim::new`], for any (possibly custom) spec.
+    pub fn with_spec(
+        cfg: ChainCfg,
+        spec: PipelineSpec,
+        plan: &TilePlan,
+        w: &[Vec<u64>],
+        a: &[Vec<u64>],
+        double_buffer: bool,
+    ) -> Self {
+        cfg.check();
+        spec.validate();
+        let shape = plan.shape;
+        assert_eq!(w.len(), shape.k, "weight rows != K");
+        assert!(w.iter().all(|row| row.len() == shape.n), "weight row width != N");
+        assert_eq!(a.len(), shape.m, "activation rows != M");
+        assert!(a.iter().all(|row| row.len() == shape.k), "activation row width != K");
+        let (rows, cols) = (plan.rows, plan.cols);
+        let zero = PsumSignal::zero(&cfg);
+        let stride = spec.depth as usize - 1;
+        // Lanes start with a dead dummy bank; tile 0's preload delivers
+        // the first live weights like every later tile's.
+        let lanes = (0..cols)
+            .map(|c| ColLane::new(c, vec![0; rows], shape.m, stride, zero))
+            .collect();
+        StreamingSim {
+            cfg,
+            spec,
+            plan: plan.clone(),
+            double_buffer,
+            rows,
+            cols,
+            m_total: shape.m,
+            n_total: shape.n,
+            w: w.to_vec(),
+            a: a.to_vec(),
+            lanes,
+            ru: RoundingUnit::new(cfg),
+            y: vec![0.0; shape.m * shape.n],
+            out_cycle: vec![0; shape.m * shape.n],
+            report: None,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn double_buffer(&self) -> bool {
+        self.double_buffer
+    }
+
+    pub fn plan(&self) -> &TilePlan {
+        &self.plan
+    }
+
+    /// Stream every tile of the plan on the calling thread.
+    pub fn run(&mut self, max_cycles: u64) -> Result<StreamReport, SimError> {
+        self.run_parallel(max_cycles, 1)
+    }
+
+    /// As [`StreamingSim::run`], fanning each tile's column lanes out
+    /// across `threads` scoped workers (the inter-tile hand-off is a
+    /// barrier: the next stream start depends on every lane's drain).
+    pub fn run_parallel(
+        &mut self,
+        max_cycles: u64,
+        threads: usize,
+    ) -> Result<StreamReport, SimError> {
+        let (rows, m_total) = (self.rows, self.m_total);
+        let spec = self.spec;
+        let tiles: Vec<Tile> = self.plan.tiles.clone();
+        let expected: usize = tiles.iter().map(|t| m_total * t.n_len).sum();
+        let mut produced_total = 0usize;
+
+        let mut spans: Vec<TileSpanTiming> = Vec::with_capacity(tiles.len());
+        // Fill-engine state: when the single fill path frees up, and
+        // when each weight bank's current occupant drains.
+        let mut fill_free_at: u64 = 0;
+        let mut bank_free_at = [0u64; 2];
+        let mut drained: u64 = 0;
+        let (mut exposed, mut compute, mut drain) = (0u64, 0u64, 0u64);
+
+        for (i, tile) in tiles.iter().enumerate() {
+            // ---- fill engine: schedule this tile's preload -------------
+            let preload_start = match spans.last() {
+                None => 0,
+                Some(prev) if self.double_buffer => prev.stream_start,
+                Some(prev) => prev.stream_done,
+            };
+            let bank = if self.double_buffer { i % 2 } else { 0 };
+            // The two-buffer constraint, audited event-by-event (not
+            // assumed from the closed form): one fill path, and the
+            // target bank must be dead before the shift-chain touches it.
+            assert!(
+                preload_start >= fill_free_at,
+                "tile {i}: preload at {preload_start} but fill path busy until {fill_free_at}"
+            );
+            assert!(
+                preload_start >= bank_free_at[bank],
+                "tile {i}: preload into bank {bank} while it feeds live PEs (free at {})",
+                bank_free_at[bank]
+            );
+            let preload_done = preload_start + rows as u64;
+            fill_free_at = preload_done;
+            // Deliver the tile's weight columns into the shadow banks,
+            // zero-padding short K-edge tiles to the full chain depth
+            // (the array does not reconfigure; unused rows stream zeros).
+            for c in 0..tile.n_len {
+                let wcol: Vec<u64> = (0..rows)
+                    .map(|r| if r < tile.k_len { self.w[tile.k0 + r][tile.n0 + c] } else { 0 })
+                    .collect();
+                self.lanes[c].preload_shadow(wcol);
+            }
+
+            // ---- hand-off: wait for drain AND weights ------------------
+            let stream_start = drained.max(preload_done);
+            if stream_start >= max_cycles {
+                return Err(SimError::Timeout {
+                    cycle: stream_start,
+                    produced: produced_total,
+                    expected,
+                });
+            }
+            exposed += stream_start - drained;
+            for lane in &mut self.lanes[..tile.n_len] {
+                lane.begin_tile();
+            }
+
+            // Zero-padded activation slab for this tile's K-slice.
+            let mut a_flat = vec![0u64; m_total * rows];
+            for (m, arow) in self.a.iter().enumerate() {
+                for r in 0..tile.k_len {
+                    a_flat[m * rows + r] = arow[tile.k0 + r];
+                }
+            }
+            let sched = WsSchedule::with_spec(spec, rows, tile.n_len, m_total);
+            let ctx = LaneCtx {
+                cfg: self.cfg,
+                ru: self.ru,
+                sched,
+                a: &a_flat,
+                max_cycles: max_cycles - stream_start,
+            };
+            let lanes = &mut self.lanes[..tile.n_len];
+            let run: Result<(), SimError> = if threads <= 1 || lanes.len() <= 1 {
+                lanes.iter_mut().try_for_each(|lane| run_lane_dispatch(&spec, ctx, lane))
+            } else {
+                let threads = threads.min(lanes.len());
+                let chunk = lanes.len().div_ceil(threads);
+                let mut results: Vec<Result<(), SimError>> = Vec::with_capacity(threads);
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(threads);
+                    for strip in lanes.chunks_mut(chunk) {
+                        handles.push(scope.spawn(move || {
+                            strip
+                                .iter_mut()
+                                .try_for_each(|lane| run_lane_dispatch(&spec, ctx, lane))
+                        }));
+                    }
+                    for h in handles {
+                        results.push(h.join().expect("column-lane thread panicked"));
+                    }
+                });
+                results.into_iter().collect()
+            };
+            // Re-express lane-local timeout cycles on the global clock.
+            run.map_err(|e| match e {
+                SimError::Timeout { cycle, produced, expected: exp } => SimError::Timeout {
+                    cycle: stream_start + cycle,
+                    produced: produced_total + produced,
+                    expected: exp,
+                },
+                other => other,
+            })?;
+
+            // ---- per-tile output commit (K-pass fold, pass order) ------
+            let mut dur = 0u64;
+            for lane in self.lanes[..tile.n_len].iter() {
+                for m in 0..m_total {
+                    let idx = m * self.n_total + tile.n0 + lane.col;
+                    // South-edge accumulator: one f32 (out-format) add
+                    // per K-pass, the coordinator's assembly semantics.
+                    self.y[idx] += f32::from_bits(lane.y_bits[m] as u32);
+                    self.out_cycle[idx] = stream_start + lane.y_cycle[m];
+                    dur = dur.max(lane.y_cycle[m] + 1);
+                }
+            }
+            produced_total += m_total * tile.n_len;
+            let stream_done = stream_start + dur;
+            compute += dur;
+            // Measured drain: deliberately derived from the *simulated*
+            // duration, not [`WsSchedule::drain_cycles`] — the equality
+            // of the two is exactly what `matches_layer_timing` checks.
+            drain += dur - dur.min(m_total as u64);
+            bank_free_at[bank] = stream_done;
+            spans.push(TileSpanTiming { preload_start, preload_done, stream_start, stream_done });
+            drained = stream_done;
+        }
+
+        let report = StreamReport {
+            cycles: drained,
+            compute_cycles: compute,
+            exposed_preload: exposed,
+            drain_cycles: drain,
+            tiles: tiles.len(),
+            spans,
+        };
+        self.report = Some(report.clone());
+        Ok(report)
+    }
+
+    /// The last run's report (valid after a successful run).
+    pub fn report(&self) -> Option<&StreamReport> {
+        self.report.as_ref()
+    }
+
+    /// Assembled output, row-major `M×N` (f32 semantics of the output
+    /// format, K-passes folded in pass order).
+    pub fn result_f32(&self) -> &[f32] {
+        &self.y
+    }
+
+    /// Global cycle at whose end output `(m, n)`'s final K-pass left the
+    /// South edge.
+    pub fn output_cycle(&self, m: usize, n: usize) -> u64 {
+        self.out_cycle[m * self.n_total + n]
+    }
+
+    /// Chain-ready-but-activation-late cycles summed over lanes and
+    /// tiles (0 for any schedule-consistent run).
+    pub fn stalls(&self) -> u64 {
+        self.lanes.iter().map(|l| l.stalls).sum()
+    }
+
+    /// Merged activity in closed form over the whole stream: every PE of
+    /// a tile's **live columns** performs exactly `M` entry- and
+    /// exit-stage evaluations (edge tiles idle their unused lanes); all
+    /// remaining stage-slots of the run — pipeline drain, idle edge
+    /// lanes *and* exposed-preload gaps — are bubbles.  Valid after a
+    /// successful run.
+    pub fn activity(&self) -> PeActivity {
+        let Some(rep) = &self.report else { return PeActivity::default() };
+        let live_cols: u64 = self.plan.tiles.iter().map(|t| t.n_len as u64).sum();
+        let evals = self.rows as u64 * self.m_total as u64 * live_cols;
+        let slots = (self.rows * self.cols) as u64 * rep.cycles;
+        PeActivity {
+            s1_evals: evals,
+            s2_evals: evals,
+            s1_bubbles: slots - evals,
+            s2_bubbles: slots - evals,
+        }
+    }
+
+    /// The [`TimingConfig`] this run realizes (1 GHz nominal clock).
+    pub fn timing_config(&self) -> TimingConfig {
+        TimingConfig {
+            rows: self.rows,
+            cols: self.cols,
+            clock_ghz: 1.0,
+            double_buffer: self.double_buffer,
+        }
+    }
+
+    /// Cross-check the whole composition against the closed-form layer
+    /// model: total cycles, compute cycles, exposed preload, drain
+    /// taxonomy and every per-tile span must agree, and no lane may have
+    /// stalled.  Valid after a successful run.
+    pub fn matches_layer_timing(&self) -> bool {
+        let Some(rep) = &self.report else { return false };
+        let cfg = self.timing_config();
+        let model = layer_timing_spec(&cfg, self.spec, &self.plan);
+        rep.cycles == model.cycles
+            && rep.compute_cycles == model.compute_cycles
+            && rep.exposed_preload == model.exposed_preload
+            && rep.drain_cycles == model.drain_cycles
+            && rep.spans == crate::timing::model::layer_spans(&cfg, self.spec, &self.plan)
+            && self.stalls() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::sa::fast::FastArraySim;
+    use crate::sa::tile::GemmShape;
+    use crate::util::rng::Rng;
+
+    const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+    fn random_gemm(rng: &mut Rng, m: usize, k: usize, n: usize) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
+        let bf = |x: f64| FpFormat::BF16.from_f64(x);
+        let w = (0..k).map(|_| (0..n).map(|_| bf(rng.normal_scaled(0.0, 1.0))).collect()).collect();
+        let a = (0..m).map(|_| (0..k).map(|_| bf(rng.normal_scaled(0.0, 2.0))).collect()).collect();
+        (w, a)
+    }
+
+    /// The per-tile oracle assembly: each tile through the single-tile
+    /// fast simulator, folded in pass order with f32 adds.
+    fn per_tile_reference(
+        plan: &TilePlan,
+        kind: PipelineKind,
+        w: &[Vec<u64>],
+        a: &[Vec<u64>],
+    ) -> Vec<f32> {
+        let shape = plan.shape;
+        let mut y = vec![0.0f32; shape.m * shape.n];
+        for t in &plan.tiles {
+            let w_slab = plan.weight_slab(w, t);
+            let a_slab = plan.activation_slab(a, t);
+            let mut sim = FastArraySim::new(CFG, kind, &w_slab, &a_slab);
+            sim.run(1_000_000).unwrap();
+            for (m, row) in sim.result_bits().iter().enumerate() {
+                for (j, &bits) in row.iter().enumerate() {
+                    y[m * shape.n + t.n0 + j] += f32::from_bits(bits as u32);
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn streaming_matches_per_tile_assembly_and_model() {
+        let mut rng = Rng::new(0x57e4);
+        for kind in PipelineKind::ALL {
+            // Edge tiles in both K and N: 20 = 2×8+4, 10 = 8+2.
+            let (w, a) = random_gemm(&mut rng, 5, 20, 10);
+            let plan = TilePlan::new(GemmShape::new(5, 20, 10), 8, 8);
+            assert_eq!(plan.tile_count(), 6);
+            let want = per_tile_reference(&plan, kind, &w, &a);
+            for db in [true, false] {
+                let mut sim = StreamingSim::new(CFG, kind, &plan, &w, &a, db);
+                let rep = sim.run(1_000_000).unwrap();
+                let got: Vec<u32> = sim.result_f32().iter().map(|v| v.to_bits()).collect();
+                let wantb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, wantb, "{kind} db={db}");
+                assert!(sim.matches_layer_timing(), "{kind} db={db}: {rep:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_hides_all_but_the_first_fill() {
+        let mut rng = Rng::new(0x0f0);
+        let (w, a) = random_gemm(&mut rng, 12, 32, 8);
+        let plan = TilePlan::new(GemmShape::new(12, 32, 8), 8, 8);
+        let mut db = StreamingSim::new(CFG, PipelineKind::Skewed, &plan, &w, &a, true);
+        let rep_db = db.run(1_000_000).unwrap();
+        assert_eq!(rep_db.exposed_preload, 8, "only the first fill is exposed");
+        let mut ser = StreamingSim::new(CFG, PipelineKind::Skewed, &plan, &w, &a, false);
+        let rep_ser = ser.run(1_000_000).unwrap();
+        assert_eq!(rep_ser.exposed_preload, 4 * 8);
+        assert_eq!(rep_ser.cycles - rep_db.cycles, 3 * 8);
+        // Identical numerics either way.
+        assert_eq!(db.result_f32(), ser.result_f32());
+    }
+
+    #[test]
+    fn parallel_equals_serial_streaming() {
+        let mut rng = Rng::new(0x9aa);
+        let (w, a) = random_gemm(&mut rng, 6, 20, 12);
+        let plan = TilePlan::new(GemmShape::new(6, 20, 12), 8, 8);
+        let mut serial = StreamingSim::new(CFG, PipelineKind::Deep3, &plan, &w, &a, true);
+        let rep_s = serial.run(1_000_000).unwrap();
+        for threads in [2usize, 5] {
+            let mut par = StreamingSim::new(CFG, PipelineKind::Deep3, &plan, &w, &a, true);
+            let rep_p = par.run_parallel(1_000_000, threads).unwrap();
+            assert_eq!(rep_p, rep_s, "threads={threads}");
+            assert_eq!(par.result_f32(), serial.result_f32(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn final_pass_output_cycles_land_on_schedule() {
+        let mut rng = Rng::new(0xface);
+        let (w, a) = random_gemm(&mut rng, 4, 16, 4);
+        let plan = TilePlan::new(GemmShape::new(4, 16, 4), 8, 4);
+        let mut sim = StreamingSim::new(CFG, PipelineKind::Skewed, &plan, &w, &a, true);
+        let rep = sim.run(1_000_000).unwrap();
+        // The last K-pass tile of the single N-block is tile 1.
+        let last = rep.spans[1];
+        let sched = WsSchedule::new(PipelineKind::Skewed, 8, 4, 4);
+        for m in 0..4 {
+            for n in 0..4 {
+                assert_eq!(sim.output_cycle(m, n), last.stream_start + sched.output_cycle(n, m));
+            }
+        }
+    }
+
+    #[test]
+    fn timeout_reports_global_cycle() {
+        let mut rng = Rng::new(0x7e0);
+        let (w, a) = random_gemm(&mut rng, 4, 16, 4);
+        let plan = TilePlan::new(GemmShape::new(4, 16, 4), 8, 4);
+        let mut sim = StreamingSim::new(CFG, PipelineKind::Skewed, &plan, &w, &a, true);
+        match sim.run(20) {
+            Err(SimError::Timeout { cycle, .. }) => {
+                assert!(cycle >= 8, "global cycle, got {cycle}")
+            }
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+}

@@ -139,18 +139,25 @@ impl TilePlan {
         self.tiles.iter().map(|t| self.tile_schedule(kind, t)).collect()
     }
 
-    /// Closed-form cycles to stream every tile of the plan serially on
-    /// one array, including per-tile weight preload (no double
-    /// buffering) — the service-time denominator for simulated-latency
-    /// accounting in the serve layer.
-    pub fn stream_cycles(&self, kind: crate::pe::PipelineKind) -> u64 {
-        self.tiles
-            .iter()
-            .map(|t| {
-                let s = self.tile_schedule(kind, t);
-                s.preload_cycles() + s.total_cycles()
-            })
-            .sum()
+    /// Closed-form cycles to stream every tile of the plan on one array,
+    /// including weight preloads — the service-time denominator for
+    /// simulated-latency accounting in the serve layer.
+    ///
+    /// This is exactly [`crate::timing::layer_timing`]'s total for this
+    /// plan (pinned by a regression test): with `double_buffer`, tile
+    /// `i+1`'s preload hides under tile `i`'s stream and only the first
+    /// fill is exposed; without it, every reload serializes after the
+    /// previous drain.  (The pre-fix version always serialized, so the
+    /// serve layer quoted a different latency than the timing model for
+    /// the same plan.)
+    pub fn stream_cycles(&self, kind: crate::pe::PipelineKind, double_buffer: bool) -> u64 {
+        let cfg = crate::timing::model::TimingConfig {
+            rows: self.rows,
+            cols: self.cols,
+            clock_ghz: 1.0,
+            double_buffer,
+        };
+        crate::timing::model::layer_timing(&cfg, kind, self).cycles
     }
 }
 
@@ -230,20 +237,43 @@ mod tests {
     }
 
     #[test]
-    fn stream_cycles_sum_preload_plus_stream() {
+    fn stream_cycles_pin_the_layer_timing_model() {
+        // The satellite regression: the serve layer's service-time
+        // denominator and the timing model must be one number, in both
+        // double-buffer modes, on a multi-tile plan with edge tiles
+        // (20 = 2×8+4 in K, 10 = 2×4+2 in N).
         use crate::pe::PipelineKind;
+        use crate::timing::model::{layer_timing, TimingConfig};
         let p = TilePlan::new(GemmShape::new(6, 20, 10), 8, 4);
-        for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
-            let want: u64 = p
+        assert!(p.tiles.iter().any(|t| t.k_len < 8 || t.n_len < 4), "edge tiles on the path");
+        for kind in PipelineKind::ALL {
+            for db in [true, false] {
+                let cfg = TimingConfig { rows: 8, cols: 4, clock_ghz: 1.0, double_buffer: db };
+                assert_eq!(
+                    p.stream_cycles(kind, db),
+                    layer_timing(&cfg, kind, &p).cycles,
+                    "{kind} db={db}"
+                );
+            }
+            // Serialized = the historical per-tile sum; overlapped hides
+            // every fill but the first.
+            let serial: u64 = p
                 .schedules(kind)
                 .iter()
                 .map(|s| s.preload_cycles() + s.total_cycles())
                 .sum();
-            assert_eq!(p.stream_cycles(kind), want);
-            assert!(p.stream_cycles(kind) > 0);
+            assert_eq!(p.stream_cycles(kind, false), serial, "{kind}");
+            assert_eq!(
+                serial - p.stream_cycles(kind, true),
+                (p.tile_count() as u64 - 1) * 8,
+                "{kind}"
+            );
         }
         // The skewed organisation streams strictly faster.
-        assert!(p.stream_cycles(PipelineKind::Skewed) < p.stream_cycles(PipelineKind::Baseline3b));
+        assert!(
+            p.stream_cycles(PipelineKind::Skewed, true)
+                < p.stream_cycles(PipelineKind::Baseline3b, true)
+        );
     }
 
     #[test]

@@ -51,22 +51,44 @@ pub struct CachedPlan {
     pub plan: TilePlan,
     /// Per-tile weight-stationary schedules, in plan order.
     pub schedules: Vec<WsSchedule>,
-    /// Closed-form cycles to stream the whole plan serially (preload +
-    /// stream per tile) — the simulated service time of a batch.
-    pub stream_cycles: u64,
+    /// Closed-form service time with **double-buffered** weight preload
+    /// (tile `i+1`'s fill hides under tile `i`'s stream) — equal to
+    /// [`crate::timing::layer_timing`] under the crate-default
+    /// `double_buffer: true`.  The pre-fix cache only held the
+    /// serialized number, so the serve layer quoted a latency the
+    /// timing model (and now the streaming cycle simulator) contradicts.
+    pub stream_cycles_overlapped: u64,
+    /// Closed-form service time with every reload serialized after the
+    /// previous drain (the single-bank ablation).
+    pub stream_cycles_serialized: u64,
 }
 
 impl CachedPlan {
     /// Build from scratch (what a cache miss does; also what the
-    /// property tests compare hits against).  The stream-cycle total is
+    /// property tests compare hits against).  The serialized total is
     /// derived from the memoised schedules — they are built exactly
-    /// once per cache entry.
+    /// once per cache entry — and the overlapped total hides every fill
+    /// but the first (`T > R` for every tile; see the layer model's
+    /// two-buffer audit).
     pub fn build(key: &PlanKey) -> CachedPlan {
         let plan = TilePlan::new(key.shape, key.rows, key.cols);
         let schedules = plan.schedules(key.kind);
-        let stream_cycles =
+        let stream_cycles_serialized =
             schedules.iter().map(|s| s.preload_cycles() + s.total_cycles()).sum();
-        CachedPlan { plan, schedules, stream_cycles }
+        let stream_cycles_overlapped = plan.stream_cycles(key.kind, true);
+        debug_assert_eq!(stream_cycles_serialized, plan.stream_cycles(key.kind, false));
+        CachedPlan { plan, schedules, stream_cycles_overlapped, stream_cycles_serialized }
+    }
+
+    /// The service-time denominator for the configured preload
+    /// discipline (one number with the timing model and the streaming
+    /// cycle simulator — pinned by `tests/integration_serve.rs`).
+    pub fn stream_cycles(&self, double_buffer: bool) -> u64 {
+        if double_buffer {
+            self.stream_cycles_overlapped
+        } else {
+            self.stream_cycles_serialized
+        }
     }
 }
 
@@ -194,7 +216,7 @@ mod tests {
         assert!(!hit, "kind is part of the key");
         // Same tiles, different schedules/cycles.
         assert_eq!(a.plan, b.plan);
-        assert_ne!(a.stream_cycles, b.stream_cycles);
+        assert_ne!(a.stream_cycles_overlapped, b.stream_cycles_overlapped);
         let mut k3 = key(4, 20, 12);
         k3.fmt = FpFormat::FP8E4M3;
         assert!(!c.get(k3).1, "format is part of the key");
@@ -220,7 +242,10 @@ mod tests {
         let c = PlanCache::new(4);
         let k = key(6, 20, 10);
         let (p, _) = c.get(k);
-        assert_eq!(p.stream_cycles, p.plan.stream_cycles(k.kind));
+        for db in [true, false] {
+            assert_eq!(p.stream_cycles(db), p.plan.stream_cycles(k.kind, db), "db={db}");
+        }
+        assert!(p.stream_cycles_overlapped < p.stream_cycles_serialized);
         assert_eq!(p.schedules, p.plan.schedules(k.kind));
     }
 }

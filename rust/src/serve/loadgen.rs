@@ -62,6 +62,12 @@ pub struct LoadReport {
     /// batching.  The exact count lives in the shard counters
     /// ([`crate::serve::ShardSnapshot::retries`]), which reports use.
     pub retries_observed: usize,
+    /// Simulated service time summed over responses (array cycles of
+    /// each response's producing batch — response-weighted like
+    /// `retries_observed`).  With the timing model and the streaming
+    /// simulator pinned equal, this is the load's total simulated
+    /// array-time as the serve layer accounts it.
+    pub stream_cycles_observed: u64,
 }
 
 impl LoadReport {
@@ -124,6 +130,7 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
     let max_batch = AtomicUsize::new(0);
     let cache_hits = AtomicUsize::new(0);
     let retries = AtomicUsize::new(0);
+    let stream_cycles = std::sync::atomic::AtomicU64::new(0);
     std::thread::scope(|s| {
         for client in 0..spec.clients {
             let recorder = &recorder;
@@ -132,6 +139,7 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
             let max_batch = &max_batch;
             let cache_hits = &cache_hits;
             let retries = &retries;
+            let stream_cycles = &stream_cycles;
             s.spawn(move || {
                 for i in 0..spec.requests_per_client {
                     let (model, kind, class, a) = gen_request(server.store(), spec, client, i);
@@ -148,6 +156,7 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
                         cache_hits.fetch_add(1, Ordering::Relaxed);
                     }
                     retries.fetch_add(resp.retries, Ordering::Relaxed);
+                    stream_cycles.fetch_add(resp.batch_stream_cycles, Ordering::Relaxed);
                 }
             });
         }
@@ -159,6 +168,7 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
         max_batch: max_batch.into_inner(),
         cache_hit_responses: cache_hits.into_inner(),
         retries_observed: retries.into_inner(),
+        stream_cycles_observed: stream_cycles.into_inner(),
     }
 }
 

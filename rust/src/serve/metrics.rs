@@ -23,13 +23,28 @@ pub struct LatencySummary {
     pub throughput_rps: f64,
 }
 
-/// Nearest-rank percentile of an ascending-sorted sample set
-/// (`p` in (0, 100]); 0 for an empty set.
+/// Nearest-rank percentile of an ascending-sorted sample set; 0 for an
+/// empty set.
+///
+/// The domain is `p ∈ (0, 100]` and it is *enforced*: the pre-fix
+/// version silently clamped, so `p = 0` or a negative `p` returned the
+/// minimum sample and `p > 100` returned the maximum — a dashboard
+/// typo like `p99.9 → 999` would quietly report the max instead of
+/// failing loudly.  NaN is rejected for the same reason.
+///
+/// # Panics
+/// If `p` is NaN, `p <= 0` or `p > 100`.
 pub fn percentile_ns(sorted: &[u64], p: f64) -> u64 {
+    assert!(
+        p.is_finite() && p > 0.0 && p <= 100.0,
+        "percentile p={p} outside the (0, 100] domain"
+    );
     if sorted.is_empty() {
         return 0;
     }
     let n = sorted.len();
+    // Nearest rank: ceil(p/100 · n), at least 1 (p > 0 can still round
+    // a tiny rank product down to 0 in floating point).
     let rank = ((p / 100.0) * n as f64).ceil() as usize;
     sorted[rank.clamp(1, n) - 1]
 }
@@ -99,6 +114,50 @@ mod tests {
         assert_eq!(percentile_ns(&s, 99.0), 30);
         assert_eq!(percentile_ns(&s, 1.0), 10);
         assert_eq!(percentile_ns(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn percentile_boundaries() {
+        // n = 1: every in-domain p lands on the single sample.
+        let one = [42u64];
+        for p in [0.001, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile_ns(&one, p), 42, "p={p}");
+        }
+        // Non-integer ranks round up (nearest rank): n = 4.
+        let s = [1u64, 2, 3, 4];
+        assert_eq!(percentile_ns(&s, 50.0), 2); // rank ceil(2.0) = 2
+        assert_eq!(percentile_ns(&s, 50.1), 3); // rank ceil(2.004) = 3
+        assert_eq!(percentile_ns(&s, 95.0), 4); // rank ceil(3.8) = 4
+        assert_eq!(percentile_ns(&s, 99.0), 4);
+        assert_eq!(percentile_ns(&s, 25.0), 1);
+        assert_eq!(percentile_ns(&s, 25.1), 2);
+        // A vanishing p stays in-domain and returns the minimum.
+        assert_eq!(percentile_ns(&s, 1e-9), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the (0, 100] domain")]
+    fn percentile_rejects_zero() {
+        percentile_ns(&[1, 2, 3], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the (0, 100] domain")]
+    fn percentile_rejects_negative() {
+        percentile_ns(&[1, 2, 3], -5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the (0, 100] domain")]
+    fn percentile_rejects_above_100() {
+        // The pre-fix behaviour silently returned the max here.
+        percentile_ns(&[1, 2, 3], 100.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the (0, 100] domain")]
+    fn percentile_rejects_nan() {
+        percentile_ns(&[1, 2, 3], f64::NAN);
     }
 
     #[test]

@@ -60,8 +60,10 @@ pub struct Response {
     pub cache_hit: bool,
     /// Tile-job retries observed by the producing batch.
     pub retries: usize,
-    /// Closed-form array cycles of the producing batch (simulated
-    /// service time from the cached schedules).
+    /// Simulated service time of the producing batch in array cycles —
+    /// [`crate::timing::layer_timing`] for the batch's plan under the
+    /// server's weight-preload discipline, equal to the streaming cycle
+    /// simulator's total in cycle-accurate mode (asserted by the shard).
     pub batch_stream_cycles: u64,
 }
 

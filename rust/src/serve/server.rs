@@ -46,6 +46,10 @@ struct Dispatcher {
     cols: usize,
     out_fmt: FpFormat,
     mode: NumericMode,
+    /// Weight-preload discipline (from [`RunConfig::double_buffer`]):
+    /// selects the service-time number every response reports and, in
+    /// cycle-accurate mode, how the streaming simulator chains tiles.
+    double_buffer: bool,
 }
 
 impl Dispatcher {
@@ -81,6 +85,7 @@ impl Dispatcher {
             chain,
             mode: self.mode,
             kind: batch.key.kind,
+            double_buffer: self.double_buffer,
             data,
             plan,
             parts,
@@ -164,6 +169,7 @@ impl Server {
             cols: run.cols,
             out_fmt: run.out_fmt,
             mode: run.mode,
+            double_buffer: run.double_buffer,
         };
         let handle = std::thread::spawn(move || {
             while let Some(batch) = batcher.next_batch() {

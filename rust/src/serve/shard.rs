@@ -37,6 +37,10 @@ pub struct BatchJob {
     pub chain: ChainCfg,
     pub mode: NumericMode,
     pub kind: PipelineKind,
+    /// Weight-preload discipline of the modeled array: selects which of
+    /// the cached plan's service-time numbers is reported (and, in
+    /// cycle-accurate mode, how the streaming simulator chains tiles).
+    pub double_buffer: bool,
     /// Stacked activations + shared weights.
     pub data: Arc<GemmData>,
     /// Memoised plan + schedules (from the [`super::cache::PlanCache`]).
@@ -116,8 +120,14 @@ impl ShardPool {
                         fault,
                     );
                     while let Ok(job) = rx.recv() {
-                        let run =
-                            pool.run_gemm(job.chain, job.mode, job.kind, &job.data, &job.plan.plan);
+                        let run = pool.run_gemm(
+                            job.chain,
+                            job.mode,
+                            job.kind,
+                            &job.data,
+                            &job.plan.plan,
+                            job.double_buffer,
+                        );
                         let out = match run {
                             Ok(out) => out,
                             Err(e) => {
@@ -129,6 +139,26 @@ impl ShardPool {
                                 continue;
                             }
                         };
+                        // One number everywhere: the reported service
+                        // time is the cached closed form for the
+                        // configured preload discipline, and the
+                        // cycle-accurate streaming path must agree with
+                        // it exactly (it already checked itself against
+                        // the layer model; this ties the *reported*
+                        // value to the simulated one).  A mismatch
+                        // drops the batch like any other failed run —
+                        // never a panic on a detached shard thread.
+                        let batch_stream_cycles = job.plan.stream_cycles(job.double_buffer);
+                        if let Some(simulated) = out.stream_cycles {
+                            if simulated != batch_stream_cycles {
+                                eprintln!(
+                                    "serve: shard {idx} dropped a batch: simulated service \
+                                     time {simulated} != plan-cache {batch_stream_cycles}"
+                                );
+                                router.complete(idx);
+                                continue;
+                            }
+                        }
                         let n = job.data.shape.n;
                         let batch_size = job.parts.len();
                         let total_rows: usize = job.parts.iter().map(|p| p.rows).sum();
@@ -153,7 +183,7 @@ impl ShardPool {
                                 batch_size,
                                 cache_hit: job.cache_hit,
                                 retries: out.retries,
-                                batch_stream_cycles: job.plan.stream_cycles,
+                                batch_stream_cycles,
                             });
                         }
                     }
@@ -229,6 +259,7 @@ mod tests {
             chain: ChainCfg::BF16_FP32,
             mode: NumericMode::Oracle,
             kind: PipelineKind::Skewed,
+            double_buffer: true,
             data: Arc::new(data.clone()),
             plan,
             parts: vec![ReplyPart { id: 0, rows: m, reply }],

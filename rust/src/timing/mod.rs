@@ -1,6 +1,11 @@
 //! Closed-form latency model, validated cycle-for-cycle against the
-//! cycle-accurate simulator by the integration tests.
+//! cycle-accurate simulators — per tile by the integration tests, and
+//! across whole multi-tile plans (both double-buffer modes) by the
+//! streaming executor's property suite (`tests/prop_streaming.rs`).
 
 pub mod model;
 
-pub use model::{LayerTiming, TileTiming, TimingConfig};
+pub use model::{
+    layer_spans, layer_timing, layer_timing_spec, LayerTiming, TileSpanTiming, TileTiming,
+    TimingConfig,
+};

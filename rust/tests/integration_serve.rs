@@ -127,8 +127,9 @@ fn cycle_accurate_serving_matches_oracle_serving() {
 fn batched_cycle_accurate_serving_stays_bit_exact_per_member() {
     // Row-independence under stacking is exactly what batching relies
     // on (DESIGN.md §7/§11); assert it holds on the *cycle-accurate*
-    // path too: a coalesced batch through FastArraySim must reproduce
-    // each member's solo cycle-accurate run bit-for-bit.
+    // path too: a coalesced batch through the multi-tile streaming
+    // simulator must reproduce each member's solo cycle-accurate run
+    // bit-for-bit.
     let mut cfg = run_cfg(FpFormat::BF16);
     cfg.rows = 8;
     cfg.cols = 8;
@@ -159,6 +160,61 @@ fn batched_cycle_accurate_serving_stays_bit_exact_per_member() {
         assert_eq!(got, want, "cycle-accurate batched member diverged from its solo run");
     }
     assert!(max_batch >= 2, "cycle-accurate requests did not coalesce");
+}
+
+#[test]
+fn reported_service_time_pins_the_overlapped_timing_model() {
+    // ISSUE 5 acceptance: `skewsa serve`'s batch_stream_cycles must be
+    // the same number as the closed-form layer timing — which the
+    // streaming cycle simulator pins exactly (and, in cycle-accurate
+    // mode, re-derives by simulation on the serve path itself, asserted
+    // inside the shard).  Covers both double_buffer modes.
+    use skewsa::sa::tile::{GemmShape, TilePlan};
+    use skewsa::timing::model::{layer_timing, TimingConfig};
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..2],
+        FpFormat::BF16,
+        40, // 3 K-passes on the 16×16 array
+        24, // 2 N-blocks
+    ));
+    for mode in [NumericMode::Oracle, NumericMode::CycleAccurate] {
+        for db in [true, false] {
+            let mut cfg = run_cfg(FpFormat::BF16);
+            cfg.mode = mode;
+            cfg.double_buffer = db;
+            let server = Server::start(&cfg, &ServeConfig::small(), Arc::clone(&store));
+            let mut rng = Rng::new(0x7157 ^ db as u64);
+            for model in 0..store.len() {
+                let m = 3 + model;
+                let a = store.gen_activations(model, m, &mut rng);
+                let resp = server
+                    .submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a)
+                    .recv()
+                    .expect("served");
+                assert_eq!(resp.batch_size, 1, "quiet server: request runs alone");
+                let entry = store.get(model);
+                let shape = GemmShape::new(m, entry.k, entry.n);
+                let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+                assert!(plan.tile_count() >= 2, "multi-tile on the served path");
+                let tcfg = TimingConfig {
+                    rows: cfg.rows,
+                    cols: cfg.cols,
+                    clock_ghz: cfg.clock_ghz,
+                    double_buffer: db,
+                };
+                let model_cycles = layer_timing(&tcfg, PipelineKind::Skewed, &plan).cycles;
+                assert_eq!(
+                    resp.batch_stream_cycles, model_cycles,
+                    "mode={mode:?} db={db} model={model}: serve and timing model disagree"
+                );
+                assert_eq!(
+                    resp.batch_stream_cycles,
+                    plan.stream_cycles(PipelineKind::Skewed, db),
+                    "mode={mode:?} db={db}: TilePlan::stream_cycles drifted"
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -41,7 +41,21 @@ fn cache_hit_plans_structurally_identical_across_sweep() {
         let fresh = CachedPlan::build(&key);
         g.assert("cached plan == fresh plan", second.plan == fresh.plan);
         g.assert("cached schedules == fresh schedules", second.schedules == fresh.schedules);
-        g.assert_eq("stream cycles", second.stream_cycles, fresh.stream_cycles);
+        g.assert_eq(
+            "overlapped stream cycles",
+            second.stream_cycles_overlapped,
+            fresh.stream_cycles_overlapped,
+        );
+        g.assert_eq(
+            "serialized stream cycles",
+            second.stream_cycles_serialized,
+            fresh.stream_cycles_serialized,
+        );
+        g.assert(
+            "both disciplines match the timing model",
+            second.stream_cycles(true) == fresh.plan.stream_cycles(key.kind, true)
+                && second.stream_cycles(false) == fresh.plan.stream_cycles(key.kind, false),
+        );
         g.assert(
             "fresh build is the canonical TilePlan",
             fresh.plan == TilePlan::new(key.shape, key.rows, key.cols),
