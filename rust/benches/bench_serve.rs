@@ -10,8 +10,11 @@
 //! compared bit-for-bit against its served response.
 //!
 //! Every run appends to `BENCH_serve.json` at the repo root, mirroring
-//! the `BENCH_hotpath.json` perf trajectory.  Pass `--smoke` (or set
-//! `SKEWSA_BENCH_SMOKE=1`) for the CI-grade quick run.
+//! the `BENCH_hotpath.json` perf trajectory.  A second *chaos* tier
+//! re-runs the fleet under seeded SDC injection + stragglers (ABFT on)
+//! and appends a `serve_faults` entry: the detection/recovery ledger
+//! and the throughput overhead against the clean run.  Pass `--smoke`
+//! (or set `SKEWSA_BENCH_SMOKE=1`) for the CI-grade quick run.
 //!
 //! ```text
 //! cargo bench --bench bench_serve
@@ -19,8 +22,11 @@
 //! ```
 
 use skewsa::config::{RunConfig, ServeConfig};
+use skewsa::coordinator::FaultModel;
 use skewsa::report;
-use skewsa::serve::{gen_request, run_closed_loop, DeadlineClass, LoadSpec, Server};
+use skewsa::serve::{
+    gen_request, recv_response, run_closed_loop, DeadlineClass, LoadSpec, Server, ShardSnapshot,
+};
 use skewsa::util::bench::append_json_run;
 use skewsa::workloads::serving::WeightStore;
 use skewsa::workloads::{mobilenet, resnet50};
@@ -123,7 +129,7 @@ fn main() {
         let i = (s * 7) % spec.requests_per_client;
         let (model, kind, _class, a) = gen_request(&store, &spec, client, i);
         let rx = server.submit(model, kind, DeadlineClass::Interactive, a.clone());
-        let resp = rx.recv().expect("served sample");
+        let resp = recv_response(&rx, "served sample");
         let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
         let want = store.solo_reference_bits(&seq_cfg, model, kind, &a);
         assert_eq!(got, want, "served bits diverged from solo run (sample {s})");
@@ -166,5 +172,70 @@ fn main() {
     match append_json_run(&path, &entry) {
         Ok(()) => println!("bench: trajectory appended to {}", path.display()),
         Err(e) => eprintln!("bench: could not append trajectory: {e}"),
+    }
+
+    // --- fault-tolerance tier --------------------------------------------
+    // The same closed-loop fleet against a server under seeded chaos:
+    // silent bit-flips into psums/outputs plus stragglers, with the
+    // ABFT checksums verifying every assembled block.  Measures the
+    // detection/recovery overhead against the clean served throughput
+    // above and records the fault ledger alongside it.
+    let mut fault_scfg = scfg.clone();
+    fault_scfg.fault = FaultModel {
+        sdc_rate: 0.05,
+        slow_rate: 0.02,
+        slow_us: 100,
+        seed: 0xfa175,
+        abft: true,
+        ..FaultModel::none()
+    };
+    println!("bench: chaos tier, fault [{}]", fault_scfg.fault);
+    let fault_server = Server::start(&cfg, &fault_scfg, Arc::clone(&store));
+    let fault_load = run_closed_loop(&fault_server, &spec);
+    let fault_stats = fault_server.stats();
+    assert_eq!(
+        fault_load.completed + fault_load.shed,
+        total_requests,
+        "every chaos request must be answered or explicitly shed"
+    );
+    let fsum = |f: fn(&ShardSnapshot) -> u64| -> u64 { fault_stats.shards.iter().map(f).sum() };
+    assert_eq!(fsum(|s| s.sdc_unresolved), 0, "chaos run left corrupted blocks unresolved");
+    let fault_rps = fault_load.latency.throughput_rps;
+    let overhead = serve_rps / fault_rps.max(1e-9);
+    println!(
+        "bench: chaos sdc inj/det/rec {}/{}/{}, {} failed batches, {} quarantines, {} shed",
+        fsum(|s| s.sdc_injected),
+        fsum(|s| s.sdc_detected),
+        fsum(|s| s.sdc_recovered),
+        fsum(|s| s.failed_batches),
+        fsum(|s| s.quarantines),
+        fault_stats.shed,
+    );
+    println!("bench: chaos throughput    {fault_rps:>10.1} req/s ({overhead:.2}x slowdown)");
+    let fl = &fault_load.latency;
+    let fault_entry = format!(
+        "  {{\"bench\": \"serve_faults\", \"unix_time\": {ts}, \"smoke\": {smoke}, \
+         \"requests\": {total_requests}, \"sdc_rate\": 0.05, \"slow_rate\": 0.02, \
+         \"p50_us\": {:.1}, \"p95_us\": {:.1}, \"p99_us\": {:.1}, \
+         \"fault_rps\": {:.2}, \"clean_rps\": {:.2}, \"overhead\": {:.3}, \
+         \"sdc_injected\": {}, \"sdc_detected\": {}, \"sdc_recovered\": {}, \
+         \"sdc_unresolved\": {}, \"failed_batches\": {}, \"quarantines\": {}, \"shed\": {}}}",
+        fl.p50_us,
+        fl.p95_us,
+        fl.p99_us,
+        fault_rps,
+        serve_rps,
+        overhead,
+        fsum(|s| s.sdc_injected),
+        fsum(|s| s.sdc_detected),
+        fsum(|s| s.sdc_recovered),
+        fsum(|s| s.sdc_unresolved),
+        fsum(|s| s.failed_batches),
+        fsum(|s| s.quarantines),
+        fault_stats.shed,
+    );
+    match append_json_run(&path, &fault_entry) {
+        Ok(()) => println!("bench: chaos trajectory appended to {}", path.display()),
+        Err(e) => eprintln!("bench: could not append chaos trajectory: {e}"),
     }
 }

@@ -8,7 +8,9 @@
 use crate::arith::fma::ChainCfg;
 use crate::arith::format::FpFormat;
 use crate::coordinator::router::Policy;
+use crate::coordinator::FaultModel;
 use crate::pe::PipelineKind;
+use crate::serve::health::HealthPolicy;
 use crate::timing::model::TimingConfig;
 use crate::util::cli::Args;
 use crate::util::mini_json::Json;
@@ -213,6 +215,21 @@ pub struct ServeConfig {
     pub plan_cache_cap: usize,
     /// Routing policy lifted to the shard level.
     pub shard_policy: Policy,
+    /// Queue depth at which batch-class requests are shed with an
+    /// immediate rejection instead of queueing (0 disables shedding;
+    /// interactive requests always queue up to `queue_cap`).
+    pub shed_watermark: usize,
+    /// Shard-health rolling window, in batches (DESIGN.md §16).
+    pub health_window: usize,
+    /// Faults within the window that quarantine a shard.
+    pub health_fault_threshold: u64,
+    /// Dispatch ticks a quarantined shard sits out.
+    pub quarantine_batches: u64,
+    /// Clean probation batches before a shard is healthy again.
+    pub probation_batches: u64,
+    /// Fault model injected into every shard's worker pool
+    /// (decorrelated per shard via [`FaultModel::for_shard`]).
+    pub fault: FaultModel,
 }
 
 impl Default for ServeConfig {
@@ -227,6 +244,12 @@ impl Default for ServeConfig {
             max_batch_rows: 512,
             plan_cache_cap: 64,
             shard_policy: Policy::LeastLoaded,
+            shed_watermark: 0,
+            health_window: 8,
+            health_fault_threshold: 3,
+            quarantine_batches: 16,
+            probation_batches: 8,
+            fault: FaultModel::none(),
         }
     }
 }
@@ -239,11 +262,20 @@ impl ServeConfig {
             workers_per_shard: 2,
             queue_cap: 32,
             batch_window_us: 2_000,
-            interactive_window_us: 0,
             max_batch_requests: 8,
             max_batch_rows: 64,
             plan_cache_cap: 16,
-            shard_policy: Policy::LeastLoaded,
+            ..ServeConfig::default()
+        }
+    }
+
+    /// The health-board policy implied by the knobs.
+    pub fn health_policy(&self) -> HealthPolicy {
+        HealthPolicy {
+            window: self.health_window,
+            fault_threshold: self.health_fault_threshold,
+            quarantine_batches: self.quarantine_batches,
+            probation_batches: self.probation_batches,
         }
     }
 
@@ -278,6 +310,24 @@ impl ServeConfig {
         if let Some(v) = j.get("shard_policy").and_then(Json::as_str) {
             self.shard_policy = v.parse()?;
         }
+        if let Some(v) = get_usize("shed_watermark") {
+            self.shed_watermark = v;
+        }
+        if let Some(v) = get_usize("health_window") {
+            self.health_window = v.max(1);
+        }
+        if let Some(v) = get_usize("health_fault_threshold") {
+            self.health_fault_threshold = (v as u64).max(1);
+        }
+        if let Some(v) = get_usize("quarantine_batches") {
+            self.quarantine_batches = (v as u64).max(1);
+        }
+        if let Some(v) = get_usize("probation_batches") {
+            self.probation_batches = (v as u64).max(1);
+        }
+        if let Some(v) = j.get("fault").and_then(Json::as_str) {
+            self.fault = FaultModel::parse(v)?;
+        }
         Ok(())
     }
 
@@ -299,6 +349,12 @@ impl ServeConfig {
         }
         if let Some(v) = a.get("shard-policy") {
             self.shard_policy = v.parse()?;
+        }
+        if let Some(v) = a.get_usize("shed-watermark") {
+            self.shed_watermark = v;
+        }
+        if let Some(v) = a.get("fault") {
+            self.fault = FaultModel::parse(v)?;
         }
         Ok(())
     }
@@ -383,6 +439,45 @@ mod tests {
         let bad = cli.parse(&["--shard-policy=least".into()]).unwrap();
         assert!(s.apply_args(&bad).is_err());
         assert_eq!(s.shard_policy, Policy::LeastLoaded, "unchanged on error");
+    }
+
+    #[test]
+    fn serve_config_fault_and_shed_surface() {
+        use crate::coordinator::SdcTarget;
+        let mut s = ServeConfig::default();
+        let j = Json::parse(
+            r#"{"shed_watermark": 12, "health_window": 5, "health_fault_threshold": 2,
+                "quarantine_batches": 10, "probation_batches": 3,
+                "fault": "sdc_rate=1e-3,seed=7,targets=psum+output"}"#,
+        )
+        .unwrap();
+        s.apply_json(&j).unwrap();
+        assert_eq!(s.shed_watermark, 12);
+        let hp = s.health_policy();
+        assert_eq!(hp.window, 5);
+        assert_eq!(hp.fault_threshold, 2);
+        assert_eq!(hp.quarantine_batches, 10);
+        assert_eq!(hp.probation_batches, 3);
+        assert_eq!(s.fault.sdc_rate, 1e-3);
+        assert_eq!(s.fault.seed, 7);
+        assert_eq!(s.fault.targets, vec![SdcTarget::Psum, SdcTarget::Output]);
+        assert!(s.fault.abft, "abft defaults on when sdc_rate > 0");
+        // A typo'd fault key is a hard error with a suggestion.
+        let bad = Json::parse(r#"{"fault": "sdc_rat=1e-3"}"#).unwrap();
+        let err = s.apply_json(&bad).unwrap_err();
+        assert!(err.contains("sdc_rate"), "{err}");
+
+        use crate::util::cli::Cli;
+        let cli = Cli::new("t", "t").opt("fault", "", None).opt("shed-watermark", "", None);
+        let a = cli
+            .parse(&["--fault=slow_rate=0.5,slow_us=40".into(), "--shed-watermark=6".into()])
+            .unwrap();
+        s.apply_args(&a).unwrap();
+        assert_eq!(s.fault.slow_rate, 0.5);
+        assert_eq!(s.fault.slow_us, 40);
+        assert_eq!(s.shed_watermark, 6);
+        let bad = cli.parse(&["--fault=bogus=1".into()]).unwrap();
+        assert!(s.apply_args(&bad).is_err());
     }
 
     #[test]

@@ -15,27 +15,58 @@
 //!   instead of paying thread spawn/teardown per request (DESIGN.md
 //!   §11).  `Executor::run` is implemented on top of it.
 //!
-//! Fault handling: a worker catches panics in job evaluation
-//! (`catch_unwind`) and reports a failure; the leader re-dispatches the
-//! job up to [`Executor::MAX_RETRIES`] times, **excluding the workers
-//! the job already failed on** (a job is never handed straight back to
-//! the worker that just dropped it, unless it is the only worker) —
-//! exercised by the failure-injection integration tests.
+//! Fault handling (DESIGN.md §16): the pool's [`FaultModel`] covers
+//! three failure classes.
+//!
+//! * **Clean failures** — a worker catches panics in job evaluation
+//!   (`catch_unwind`) and reports a failure; the leader re-dispatches
+//!   the job up to [`Executor::MAX_RETRIES`] times, **excluding the
+//!   workers the job already failed on** (a job is never handed straight
+//!   back to the worker that just dropped it, unless it is the only
+//!   worker) — exercised by the failure-injection integration tests.
+//! * **Silent corruption** — the leader draws a deterministic
+//!   [`TileFault`] per dispatched job; the worker applies the flip at
+//!   the drawn site (weight bank / psum register / output word) and the
+//!   result comes back *looking healthy*.  Detection is the post-
+//!   assembly ABFT pass ([`abft_check`]); recovery zeroes the suspect
+//!   N-block and recomputes its jobs on different workers, injection-
+//!   free, which re-converges to the clean bits because the pass-order
+//!   fold is column-independent.
+//! * **Slow workers** — the drawn `slow_us` inflates the job's service
+//!   time before evaluation (wall-clock only; numerics untouched).
 
 use crate::arith::fma::ChainCfg;
 use crate::config::{NumericMode, RunConfig};
+use crate::coordinator::fault::{
+    flip_exp_msb, FaultModel, JobFaults, SdcStats, SdcTarget, TileFault,
+};
 use crate::coordinator::router::{Policy, Router};
 use crate::coordinator::scheduler::{Scheduler, TileJob};
 use crate::coordinator::state::{RunState, TileResult};
+use crate::coordinator::verify::abft::{abft_check, AbftReport};
 use crate::pe::PipelineKind;
 use crate::sa::fast::FastArraySim;
 use crate::sa::stream::StreamingSim;
-use crate::sa::tile::TilePlan;
+use crate::sa::tile::{Tile, TilePlan};
 use crate::workloads::gemm::GemmData;
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
+
+pub use crate::coordinator::fault::FaultPlan;
+
+/// Rounds of detect → recompute → re-verify before giving up and
+/// reporting the residue as unresolved.  Recovery recomputations are
+/// injection-free, so round 2 normally verifies clean; the headroom
+/// covers clean-failure churn during recomputation.
+const MAX_ABFT_ROUNDS: usize = 4;
+
+/// Atomically consume one unit of the clean-failure budget, if any
+/// remains (saturating at zero rather than wrapping).
+fn take_fault_budget(budget: &AtomicUsize) -> bool {
+    budget.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| b.checked_sub(1)).is_ok()
+}
 
 /// Everything a pool worker needs to evaluate one tile: the numeric
 /// context travels with the job, so one pool serves GEMMs of any
@@ -46,6 +77,8 @@ struct PoolJob {
     kind: PipelineKind,
     data: Arc<GemmData>,
     job: TileJob,
+    /// Leader-drawn fault decisions for this dispatch attempt.
+    faults: JobFaults,
 }
 
 /// Message to a worker.
@@ -59,24 +92,6 @@ enum ResultMsg {
     Failed { job: TileJob, worker: usize, what: String },
 }
 
-/// Failure-injection hook for tests: panic on the `n`-th evaluated job
-/// of a given worker.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct FaultPlan {
-    /// Worker index that misbehaves.
-    pub worker: usize,
-    /// Panic on this many jobs before behaving (0 = healthy).
-    pub failures: usize,
-}
-
-impl FaultPlan {
-    /// A worker that fails every job it is ever handed (the pool must
-    /// route around it forever).
-    pub fn always(worker: usize) -> FaultPlan {
-        FaultPlan { worker, failures: usize::MAX }
-    }
-}
-
 /// A persistent pool of tile-evaluation workers.  Spawned once, fed any
 /// number of GEMMs via [`WorkerPool::run_gemm`]; workers join on drop.
 pub struct WorkerPool {
@@ -86,23 +101,45 @@ pub struct WorkerPool {
     res_rx: Receiver<ResultMsg>,
     handles: Vec<std::thread::JoinHandle<()>>,
     router: Router,
-    /// GEMMs run through this pool (reuse statistics).
+    fault: FaultModel,
+    /// GEMMs run through this pool (reuse statistics; also the fault
+    /// model's epoch key, so every run draws a fresh fault pattern).
     runs: usize,
+}
+
+/// Borrowed per-run context threaded through the recovery helpers.
+struct RunCtx<'a> {
+    chain: ChainCfg,
+    mode: NumericMode,
+    kind: PipelineKind,
+    data: &'a Arc<GemmData>,
+    plan: &'a TilePlan,
 }
 
 impl WorkerPool {
     /// Spawn `workers` threads, each with a bounded queue of
     /// `queue_depth` jobs, routed by `policy`.
     pub fn new(workers: usize, queue_depth: usize, policy: Policy) -> WorkerPool {
-        Self::with_fault(workers, queue_depth, policy, FaultPlan::default())
+        Self::with_fault_model(workers, queue_depth, policy, FaultModel::none())
     }
 
-    /// As [`WorkerPool::new`], with a failure-injection plan.
+    /// As [`WorkerPool::new`], with a clean-failure injection plan (the
+    /// historical surface; silent corruption and slowdown stay off).
     pub fn with_fault(
         workers: usize,
         queue_depth: usize,
         policy: Policy,
         fault: FaultPlan,
+    ) -> WorkerPool {
+        Self::with_fault_model(workers, queue_depth, policy, FaultModel::from_plan(fault))
+    }
+
+    /// As [`WorkerPool::new`], with a full [`FaultModel`].
+    pub fn with_fault_model(
+        workers: usize,
+        queue_depth: usize,
+        policy: Policy,
+        fault: FaultModel,
     ) -> WorkerPool {
         let workers = workers.max(1);
         let queue_depth = queue_depth.max(1);
@@ -110,23 +147,34 @@ impl WorkerPool {
         // capacity means workers never block sending results.
         let (res_tx, res_rx): (SyncSender<ResultMsg>, Receiver<ResultMsg>) =
             sync_channel(workers * queue_depth);
-        let fault_budget = Arc::new(AtomicUsize::new(fault.failures));
+        let fault_budget = Arc::new(AtomicUsize::new(fault.clean.failures));
         let mut job_txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let (tx, rx): (SyncSender<WorkMsg>, Receiver<WorkMsg>) = sync_channel(queue_depth);
             job_txs.push(tx);
             let res_tx = res_tx.clone();
-            let faulty = fault.worker == w;
+            let faulty = fault.clean.worker == w;
             let fault_budget = Arc::clone(&fault_budget);
             handles.push(std::thread::spawn(move || {
                 while let Ok(WorkMsg::Job(pj)) = rx.recv() {
-                    let inject = faulty && fault_budget.load(Ordering::Relaxed) > 0;
+                    if pj.faults.slow_us > 0 {
+                        // Slow-worker injection: pure service-time
+                        // inflation, numerics untouched.
+                        std::thread::sleep(std::time::Duration::from_micros(pj.faults.slow_us));
+                    }
                     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        if inject && fault_budget.fetch_sub(1, Ordering::Relaxed) > 0 {
+                        if faulty && take_fault_budget(&fault_budget) {
                             panic!("injected fault");
                         }
-                        eval_tile(&pj.chain, pj.mode, pj.kind, &pj.data, &pj.job)
+                        eval_tile_with_fault(
+                            &pj.chain,
+                            pj.mode,
+                            pj.kind,
+                            &pj.data,
+                            &pj.job,
+                            pj.faults.sdc,
+                        )
                     }));
                     let msg = match run {
                         Ok(y_part) => {
@@ -148,7 +196,7 @@ impl WorkerPool {
             }));
         }
         let router = Router::new(policy, workers);
-        WorkerPool { workers, queue_depth, job_txs, res_rx, handles, router, runs: 0 }
+        WorkerPool { workers, queue_depth, job_txs, res_rx, handles, router, fault, runs: 0 }
     }
 
     pub fn workers(&self) -> usize {
@@ -174,8 +222,10 @@ impl WorkerPool {
     /// service time and [`TilePlan::stream_cycles`] are one number.
     /// Note the streaming path never touches the worker queues, so a
     /// configured [`FaultPlan`] does not fire (and its budget is not
-    /// consumed) in cycle-accurate mode — fault injection targets the
-    /// per-tile job machinery.
+    /// consumed) in cycle-accurate mode — clean-failure injection
+    /// targets the per-tile job machinery.  Silent corruption *does*
+    /// fire there: the drawn flips land in the streaming lanes
+    /// ([`StreamingSim::set_faults`]).
     ///
     /// A job that exhausts [`Executor::MAX_RETRIES`] is an `Err`, not a
     /// panic: a persistent pool lives on detached threads (shards),
@@ -194,6 +244,7 @@ impl WorkerPool {
         if mode == NumericMode::CycleAccurate {
             return self.run_gemm_streaming(chain, kind, data, plan, double_buffer);
         }
+        let epoch = self.runs as u64;
         let sched = Scheduler::new(plan);
         let mut state = RunState::new(data.shape.m, data.shape.n, plan.cols, sched.job_count());
         let mut retries = 0usize;
@@ -201,15 +252,24 @@ impl WorkerPool {
         // Workers each retried job already failed on: the router must
         // not hand the job straight back to any of them.
         let mut failed_on: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); sched.job_count()];
+        // Which worker produced each accepted result (ABFT recovery
+        // recomputes elsewhere) and whether that result carried an
+        // injected flip (overwritten per dispatch attempt, so only the
+        // accepted attempt's draw is counted).
+        let mut worker_of = vec![0usize; sched.job_count()];
+        let mut injected = vec![false; sched.job_count()];
         let mut pending_jobs: std::collections::VecDeque<TileJob> =
             sched.jobs().iter().copied().collect();
         let mut inflight = 0usize;
+        let mut sdc = SdcStats::default();
         while !state.complete() {
             // Fill queues.
             while inflight < self.workers * self.queue_depth {
                 let Some(job) = pending_jobs.pop_front() else { break };
                 let w = self.router.dispatch_excluding(&failed_on[job.id]);
-                let pj = PoolJob { chain, mode, kind, data: Arc::clone(data), job };
+                let faults = self.fault.draw(epoch, job.id as u64, attempts[job.id] as u64);
+                injected[job.id] = faults.sdc.is_some();
+                let pj = PoolJob { chain, mode, kind, data: Arc::clone(data), job, faults };
                 self.job_txs[w].send(WorkMsg::Job(Box::new(pj))).expect("worker hung up");
                 inflight += 1;
             }
@@ -217,6 +277,10 @@ impl WorkerPool {
                 ResultMsg::Done(r) => {
                     self.router.complete(r.worker);
                     inflight -= 1;
+                    worker_of[r.job.id] = r.worker;
+                    if injected[r.job.id] {
+                        sdc.injected += 1;
+                    }
                     state.accept(r);
                 }
                 ResultMsg::Failed { job, worker, what } => {
@@ -239,7 +303,112 @@ impl WorkerPool {
         }
         self.runs += 1;
         let per_worker = state.per_worker.iter().map(|(&w, &n)| (w, n)).collect();
-        Ok(ExecOutcome { y: state.into_result(), per_worker, retries, stream_cycles: None })
+        let mut y = state.into_result();
+        if self.fault.abft {
+            let ctx = RunCtx { chain, mode, kind, data, plan };
+            self.abft_recover(&ctx, &mut y, &mut worker_of, &mut sdc)?;
+        }
+        Ok(ExecOutcome { y, per_worker, retries, stream_cycles: None, sdc })
+    }
+
+    /// Post-assembly ABFT: verify the checksums, recompute suspect
+    /// N-blocks on different workers, re-verify.  Recomputations skip
+    /// the fault draw (a trusted recovery path — anything they produce
+    /// is still re-checked by the next round), so the loop converges at
+    /// any injection rate.
+    fn abft_recover(
+        &mut self,
+        ctx: &RunCtx<'_>,
+        y: &mut [f32],
+        worker_of: &mut [usize],
+        sdc: &mut SdcStats,
+    ) -> Result<(), String> {
+        let mut report = abft_check(&ctx.chain, ctx.plan, ctx.data, y);
+        let mut rounds = 0;
+        loop {
+            let suspects = suspect_set(&report, ctx.plan);
+            if suspects.is_empty() || rounds >= MAX_ABFT_ROUNDS {
+                sdc.unresolved = suspects.len();
+                return Ok(());
+            }
+            rounds += 1;
+            sdc.detected += suspects.len();
+            for &blk in &suspects {
+                self.recompute_block(ctx, blk, y, worker_of)?;
+            }
+            report = abft_check(&ctx.chain, ctx.plan, ctx.data, y);
+            let after = suspect_set(&report, ctx.plan);
+            sdc.recovered += suspects.iter().filter(|&&b| !after.contains(&b)).count();
+        }
+    }
+
+    /// Zero one N-block's output columns and re-run its tile jobs
+    /// through the pool, excluding the worker whose result the block's
+    /// corruption was assembled from, then re-fold in pass order — the
+    /// same f32 addition sequence as a clean assembly, so the recovered
+    /// block is bit-identical to a fault-free run.
+    fn recompute_block(
+        &mut self,
+        ctx: &RunCtx<'_>,
+        blk: usize,
+        y: &mut [f32],
+        worker_of: &mut [usize],
+    ) -> Result<(), String> {
+        let sched = Scheduler::new(ctx.plan);
+        let jobs: Vec<TileJob> =
+            sched.jobs().iter().copied().filter(|j| j.n_block == blk).collect();
+        assert!(!jobs.is_empty(), "suspect block {blk} has no jobs");
+        zero_block(y, ctx.data, &jobs[0].tile);
+        let mut results: Vec<Option<Vec<f32>>> = vec![None; jobs.len()];
+        let mut attempts_left = vec![Executor::MAX_RETRIES + 1; jobs.len()];
+        let mut excluded: Vec<BTreeSet<usize>> =
+            jobs.iter().map(|j| BTreeSet::from([worker_of[j.id]])).collect();
+        let mut pendq: std::collections::VecDeque<usize> = (0..jobs.len()).collect();
+        let mut inflight = 0usize;
+        while results.iter().any(Option::is_none) {
+            while inflight < self.workers * self.queue_depth {
+                let Some(i) = pendq.pop_front() else { break };
+                let w = self.router.dispatch_excluding(&excluded[i]);
+                let pj = PoolJob {
+                    chain: ctx.chain,
+                    mode: ctx.mode,
+                    kind: ctx.kind,
+                    data: Arc::clone(ctx.data),
+                    job: jobs[i],
+                    faults: JobFaults::default(),
+                };
+                self.job_txs[w].send(WorkMsg::Job(Box::new(pj))).expect("worker hung up");
+                inflight += 1;
+            }
+            match self.res_rx.recv().expect("all workers died") {
+                ResultMsg::Done(r) => {
+                    self.router.complete(r.worker);
+                    inflight -= 1;
+                    let i = jobs.iter().position(|j| j.id == r.job.id).expect("recovery job");
+                    worker_of[r.job.id] = r.worker;
+                    results[i] = Some(r.y_part);
+                }
+                ResultMsg::Failed { job, worker, .. } => {
+                    self.router.complete(worker);
+                    inflight -= 1;
+                    let i = jobs.iter().position(|j| j.id == job.id).expect("recovery job");
+                    attempts_left[i] -= 1;
+                    if attempts_left[i] == 0 {
+                        self.drain_inflight(inflight);
+                        return Err(format!(
+                            "ABFT recovery of block {blk} exhausted retries on job {}",
+                            job.id
+                        ));
+                    }
+                    excluded[i].insert(worker);
+                    pendq.push_back(i);
+                }
+            }
+        }
+        for (i, job) in jobs.iter().enumerate() {
+            fold_part(y, ctx.data, &job.tile, results[i].as_ref().expect("collected"));
+        }
+        Ok(())
     }
 
     /// The cycle-accurate path: stream the whole plan through the
@@ -256,7 +425,18 @@ impl WorkerPool {
         plan: &TilePlan,
         double_buffer: bool,
     ) -> Result<ExecOutcome, String> {
+        let epoch = self.runs as u64;
+        let mut faults: Vec<(usize, TileFault)> = Vec::new();
+        if self.fault.sdc_rate > 0.0 {
+            for t in 0..plan.tile_count() {
+                if let Some(f) = self.fault.draw(epoch, t as u64, 0).sdc {
+                    faults.push((t, f));
+                }
+            }
+        }
+        let mut sdc = SdcStats { injected: faults.len(), ..SdcStats::default() };
         let mut sim = StreamingSim::new(chain, kind, plan, &data.w, &data.a, double_buffer);
+        sim.set_faults(faults);
         let budget = plan.stream_cycles(kind, double_buffer) + 64;
         let report = sim
             .run_parallel(budget, self.workers)
@@ -269,11 +449,20 @@ impl WorkerPool {
             ));
         }
         self.runs += 1;
+        let mut y = sim.result_f32().to_vec();
+        if self.fault.abft {
+            // No worker pool involved: recompute suspect blocks
+            // in-thread via the oracle tile path, which is bit-identical
+            // to the streaming lanes by the pinned cycle≡oracle
+            // equivalence.
+            abft_recover_local(&chain, kind, data, plan, &mut y, &mut sdc);
+        }
         Ok(ExecOutcome {
-            y: sim.result_f32().to_vec(),
+            y,
             per_worker: Vec::new(),
             retries: 0,
             stream_cycles: Some(report.cycles),
+            sdc,
         })
     }
 
@@ -302,12 +491,84 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Zero the output columns of the N-block that `tile` belongs to.
+fn zero_block(y: &mut [f32], data: &GemmData, tile: &Tile) {
+    let n = data.shape.n;
+    for m in 0..data.shape.m {
+        for j in 0..tile.n_len {
+            y[m * n + tile.n0 + j] = 0.0;
+        }
+    }
+}
+
+/// Fold one tile's partial result into the output — the same per-pass
+/// f32 `+=` the assembly state machine performs, in the same order.
+fn fold_part(y: &mut [f32], data: &GemmData, tile: &Tile, part: &[f32]) {
+    let n = data.shape.n;
+    for m in 0..data.shape.m {
+        for j in 0..tile.n_len {
+            y[m * n + tile.n0 + j] += part[m * tile.n_len + j];
+        }
+    }
+}
+
+/// In-thread ABFT recovery for the streaming path: recompute suspect
+/// blocks through the oracle tile evaluator (injection-free) and
+/// re-verify, up to [`MAX_ABFT_ROUNDS`].
+fn abft_recover_local(
+    chain: &ChainCfg,
+    kind: PipelineKind,
+    data: &Arc<GemmData>,
+    plan: &TilePlan,
+    y: &mut [f32],
+    sdc: &mut SdcStats,
+) {
+    let sched = Scheduler::new(plan);
+    let mut report = abft_check(chain, plan, data, y);
+    let mut rounds = 0;
+    loop {
+        let suspects = suspect_set(&report, plan);
+        if suspects.is_empty() || rounds >= MAX_ABFT_ROUNDS {
+            sdc.unresolved = suspects.len();
+            return;
+        }
+        rounds += 1;
+        sdc.detected += suspects.len();
+        for &blk in &suspects {
+            let jobs: Vec<&TileJob> = sched.jobs().iter().filter(|j| j.n_block == blk).collect();
+            zero_block(y, data, &jobs[0].tile);
+            for job in jobs {
+                let part = eval_tile(chain, NumericMode::Oracle, kind, data, job);
+                fold_part(y, data, &job.tile, &part);
+            }
+        }
+        report = abft_check(chain, plan, data, y);
+        let after = suspect_set(&report, plan);
+        sdc.recovered += suspects.iter().filter(|&&b| !after.contains(&b)).count();
+    }
+}
+
+/// The blocks one detection round should recompute: the column-localized
+/// suspects when the column checksums fired, or — when only the row
+/// checksums tripped (a corruption whose per-column deviations happened
+/// to cancel below the column tolerance) — every block, since a row leg
+/// spans all N-blocks and cannot localize further.
+fn suspect_set(report: &AbftReport, plan: &TilePlan) -> Vec<usize> {
+    if !report.suspect_blocks.is_empty() {
+        report.suspect_blocks.clone()
+    } else if !report.suspect_rows.is_empty() {
+        (0..plan.shape.n.div_ceil(plan.cols)).collect()
+    } else {
+        Vec::new()
+    }
+}
+
 /// The worker pool executor for one GEMM.
 pub struct Executor {
     pub cfg: RunConfig,
     pub kind: PipelineKind,
     pub policy: Policy,
-    pub fault: FaultPlan,
+    pub fault: FaultModel,
 }
 
 /// Execution outcome: assembled matrix + run statistics.
@@ -324,6 +585,9 @@ pub struct ExecOutcome {
     /// cycle-accurate streaming path, where it is asserted equal to the
     /// closed-form [`TilePlan::stream_cycles`] before being reported.
     pub stream_cycles: Option<u64>,
+    /// Silent-corruption lifecycle counters for this run (all zero on a
+    /// healthy pool).
+    pub sdc: SdcStats,
 }
 
 /// Evaluate one tile job's numerics (pure function — runs on workers).
@@ -333,6 +597,25 @@ pub fn eval_tile(
     kind: PipelineKind,
     data: &GemmData,
     job: &TileJob,
+) -> Vec<f32> {
+    eval_tile_with_fault(chain, mode, kind, data, job, None)
+}
+
+/// [`eval_tile`] with an optional silent corruption applied at the
+/// drawn site.  `Weight` flips a word of the tile's stationary weight
+/// slab *before* evaluation (the corruption propagates through every
+/// output of that column, scaled by the activations); `Psum`/`Output`
+/// flip one drained result word — in the value-level paths the psum
+/// drain and the output word are the same storage site, so both targets
+/// land there (the streaming simulator distinguishes them for real —
+/// [`StreamingSim::set_faults`]).
+fn eval_tile_with_fault(
+    chain: &ChainCfg,
+    mode: NumericMode,
+    kind: PipelineKind,
+    data: &GemmData,
+    job: &TileJob,
+    fault: Option<TileFault>,
 ) -> Vec<f32> {
     let t = &job.tile;
     let m_total = data.shape.m;
@@ -344,9 +627,14 @@ pub fn eval_tile(
             // Transpose the weight slab once: the inner reduction then
             // walks two contiguous slices instead of chasing one Vec per
             // K step (§Perf iteration 2: ~1.5× on the tile hot loop).
-            let wcols: Vec<Vec<u64>> = (0..t.n_len)
+            let mut wcols: Vec<Vec<u64>> = (0..t.n_len)
                 .map(|n| (t.k0..t.k0 + t.k_len).map(|k| data.w[k][t.n0 + n]).collect())
                 .collect();
+            if let Some(f) = fault.filter(|f| f.target == SdcTarget::Weight) {
+                let idx = (f.word % (t.n_len * t.k_len) as u64) as usize;
+                let w = &mut wcols[idx / t.k_len][idx % t.k_len];
+                *w = flip_exp_msb(*w, chain.in_fmt);
+            }
             let mut out = Vec::with_capacity(m_total * t.n_len);
             for m in 0..m_total {
                 let arow = &data.a[m][t.k0..t.k0 + t.k_len];
@@ -357,6 +645,16 @@ pub fn eval_tile(
                     }
                     out.push(f32::from_bits(ru.round(&s) as u32));
                 }
+            }
+            // In the value-level path the psum drain and the assembled
+            // output word are one storage site, so both targets land on
+            // the result word (the cycle paths distinguish them).
+            if let Some(f) =
+                fault.filter(|f| matches!(f.target, SdcTarget::Psum | SdcTarget::Output))
+            {
+                let idx = (f.word % out.len() as u64) as usize;
+                let bits = out[idx].to_bits() as u64;
+                out[idx] = f32::from_bits(flip_exp_msb(bits, chain.out_fmt) as u32);
             }
             out
         }
@@ -373,12 +671,20 @@ pub fn eval_tile(
             let a_slab: Vec<Vec<u64>> =
                 data.a.iter().map(|row| row[t.k0..t.k0 + t.k_len].to_vec()).collect();
             let mut sim = FastArraySim::new(*chain, kind, &w_slab, &a_slab);
+            if let Some(f) = fault.filter(|f| f.target == SdcTarget::Weight) {
+                sim.inject_fault(f);
+            }
             let budget = sim.schedule().total_cycles() + 16;
             sim.run(budget).expect("cycle-accurate tile run");
             assert!(
                 sim.latency_matches_schedule(),
                 "cycle sim disagrees with the closed-form timing model"
             );
+            if let Some(f) =
+                fault.filter(|f| matches!(f.target, SdcTarget::Psum | SdcTarget::Output))
+            {
+                sim.inject_fault(f);
+            }
             let mut out = Vec::with_capacity(m_total * t.n_len);
             for row in sim.result_bits() {
                 out.extend(row.iter().map(|&b| f32::from_bits(b as u32)));
@@ -392,7 +698,7 @@ impl Executor {
     pub const MAX_RETRIES: usize = 3;
 
     pub fn new(cfg: RunConfig, kind: PipelineKind) -> Executor {
-        Executor { cfg, kind, policy: Policy::LeastLoaded, fault: FaultPlan::default() }
+        Executor { cfg, kind, policy: Policy::LeastLoaded, fault: FaultModel::none() }
     }
 
     /// Run the whole GEMM through a fresh pool; blocks until assembly
@@ -401,11 +707,11 @@ impl Executor {
     /// panic is visible); long-lived callers use [`WorkerPool`] and
     /// handle the `Err` themselves.
     pub fn run(&self, data: &Arc<GemmData>, plan: &TilePlan) -> ExecOutcome {
-        let mut pool = WorkerPool::with_fault(
+        let mut pool = WorkerPool::with_fault_model(
             self.cfg.workers,
             self.cfg.queue_depth,
             self.policy,
-            self.fault,
+            self.fault.clone(),
         );
         pool.run_gemm(
             self.cfg.chain(),
@@ -426,6 +732,10 @@ mod tests {
     use crate::sa::tile::GemmShape;
 
     fn run_case(mode: NumericMode, fault: FaultPlan) -> (ExecOutcome, GemmData) {
+        run_case_model(mode, FaultModel::from_plan(fault))
+    }
+
+    fn run_case_model(mode: NumericMode, fault: FaultModel) -> (ExecOutcome, GemmData) {
         let mut cfg = RunConfig::small();
         cfg.mode = mode;
         let shape = GemmShape::new(6, 20, 10);
@@ -452,6 +762,7 @@ mod tests {
         let (out, data) = run_case(NumericMode::Oracle, FaultPlan::default());
         check_against_f64(&out, &data);
         assert_eq!(out.retries, 0);
+        assert_eq!(out.sdc, SdcStats::default());
         let total: usize = out.per_worker.iter().map(|&(_, n)| n).sum();
         assert_eq!(total, 6); // 3 K-tiles × 2 N-tiles on an 8×8 array
     }
@@ -562,5 +873,91 @@ mod tests {
                 assert_eq!(got as u64, want[m][n], "y[{m}][{n}]");
             }
         }
+    }
+
+    /// The chaos contract, pool path: every job corrupted, ABFT on —
+    /// the assembled output must equal the clean run bit-for-bit, with
+    /// the full lifecycle counted.
+    #[test]
+    fn sdc_injection_with_abft_recovers_clean_bits() {
+        let (clean, data) = run_case(NumericMode::Oracle, FaultPlan::default());
+        for target in SdcTarget::ALL {
+            let model = FaultModel {
+                sdc_rate: 1.0,
+                targets: vec![target],
+                seed: 0xdead,
+                abft: true,
+                ..FaultModel::none()
+            };
+            let (out, _) = run_case_model(NumericMode::Oracle, model);
+            let cb: Vec<u32> = clean.y.iter().map(|v| v.to_bits()).collect();
+            let ob: Vec<u32> = out.y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(cb, ob, "{target:?}: recovered bits differ from clean");
+            assert_eq!(out.sdc.injected, 6, "{target:?}: every tile job draws a flip");
+            assert!(out.sdc.detected >= 1, "{target:?}: {:?}", out.sdc);
+            assert_eq!(out.sdc.recovered, out.sdc.detected, "{target:?}: {:?}", out.sdc);
+            assert_eq!(out.sdc.unresolved, 0, "{target:?}: {:?}", out.sdc);
+            check_against_f64(&out, &data);
+        }
+    }
+
+    /// Without ABFT the same injection visibly corrupts the output —
+    /// the counters prove the faults really fired in the recovery test.
+    #[test]
+    fn sdc_injection_without_abft_corrupts_output() {
+        let (clean, _) = run_case(NumericMode::Oracle, FaultPlan::default());
+        let model = FaultModel {
+            sdc_rate: 1.0,
+            targets: vec![SdcTarget::Output],
+            seed: 0xdead,
+            abft: false,
+            ..FaultModel::none()
+        };
+        let (out, _) = run_case_model(NumericMode::Oracle, model);
+        assert_eq!(out.sdc.injected, 6);
+        assert_eq!(out.sdc.detected, 0, "abft off: nothing checked");
+        let cb: Vec<u32> = clean.y.iter().map(|v| v.to_bits()).collect();
+        let ob: Vec<u32> = out.y.iter().map(|v| v.to_bits()).collect();
+        assert_ne!(cb, ob, "injection must corrupt the unprotected output");
+    }
+
+    /// Streaming (cycle-accurate) path: flips land in the simulator
+    /// lanes and the local recovery restores the clean bits.
+    #[test]
+    fn sdc_injection_streaming_recovers_clean_bits() {
+        let (clean, data) = run_case(NumericMode::CycleAccurate, FaultPlan::default());
+        for target in SdcTarget::ALL {
+            let model = FaultModel {
+                sdc_rate: 1.0,
+                targets: vec![target],
+                seed: 0xbeef,
+                abft: true,
+                ..FaultModel::none()
+            };
+            let (out, _) = run_case_model(NumericMode::CycleAccurate, model);
+            let cb: Vec<u32> = clean.y.iter().map(|v| v.to_bits()).collect();
+            let ob: Vec<u32> = out.y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(cb, ob, "{target:?}: recovered bits differ from clean");
+            assert_eq!(out.sdc.injected, 6, "{target:?}: every tile draws a flip");
+            assert!(out.sdc.detected >= 1 && out.sdc.unresolved == 0, "{target:?}: {:?}", out.sdc);
+            check_against_f64(&out, &data);
+        }
+    }
+
+    /// Slow-worker injection inflates service time without touching
+    /// numerics.
+    #[test]
+    fn slow_workers_only_cost_time() {
+        let (clean, data) = run_case(NumericMode::Oracle, FaultPlan::default());
+        let model = FaultModel { slow_rate: 1.0, slow_us: 100, seed: 3, ..FaultModel::none() };
+        let t0 = std::time::Instant::now();
+        let (out, _) = run_case_model(NumericMode::Oracle, model);
+        let elapsed = t0.elapsed();
+        assert_eq!(out.y, clean.y);
+        assert_eq!(out.sdc, SdcStats::default());
+        check_against_f64(&out, &data);
+        // Every job sleeps 100µs and the leader waits for all of them,
+        // so at least one worker's serial share is a hard lower bound.
+        assert!(elapsed >= std::time::Duration::from_micros(100), "{elapsed:?}");
     }
 }

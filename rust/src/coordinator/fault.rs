@@ -1,0 +1,402 @@
+//! Seeded, deterministic fault modelling (DESIGN.md §16).
+//!
+//! Real fleets lose work to more than clean "worker returns an error"
+//! failures: silent data corruption (SDC) flips bits in weight banks,
+//! partial-sum registers and output words without tripping any error
+//! path, and degraded hosts run slow without dying.  [`FaultModel`]
+//! generalises the historical [`FaultPlan`] (clean injected panics)
+//! into all three classes:
+//!
+//! * **clean failures** — the `FaultPlan` budget: a chosen worker
+//!   panics on its next `failures` jobs (caught, retried, routed
+//!   around — unchanged behaviour);
+//! * **silent bit-flips** — with probability `sdc_rate` per tile job, a
+//!   single exponent-MSB flip lands in one of the configured
+//!   [`SdcTarget`] sites.  Detection is the ABFT checksum layer's job
+//!   ([`crate::coordinator::verify::abft`]);
+//! * **slow workers** — with probability `slow_rate` per job, the
+//!   evaluation is inflated by `slow_us` of wall time (service-time
+//!   degradation the serve-layer health machinery observes).
+//!
+//! Every decision is drawn **leader-side** from a generator keyed on
+//! `(seed, epoch, job, attempt)` and attached to the dispatched job, so
+//! the injected fault pattern is a pure function of the seed and the
+//! work — independent of thread scheduling.  A retried job (bumped
+//! `attempt`) re-draws, and ABFT *recovery* recomputations skip the
+//! draw entirely: the recompute path re-verifies its result against the
+//! checksums, so modelling it as trusted keeps the recovery loop
+//! convergent at any injection rate.
+
+use crate::arith::format::FpFormat;
+use crate::util::cli::edit_distance;
+use crate::util::rng::Rng;
+
+/// Failure-injection hook for clean failures: panic on the `n`-th
+/// evaluated job of a given worker (caught by the pool and retried).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Worker index that misbehaves.
+    pub worker: usize,
+    /// Panic on this many jobs before behaving (0 = healthy).
+    pub failures: usize,
+}
+
+impl FaultPlan {
+    /// A worker that fails every job it is ever handed (the pool must
+    /// route around it forever).
+    pub fn always(worker: usize) -> FaultPlan {
+        FaultPlan { worker, failures: usize::MAX }
+    }
+}
+
+/// Where a silent bit-flip lands during one tile evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SdcTarget {
+    /// A word of the stationary weight bank, corrupted before the tile
+    /// streams (the flip propagates into every output of that column,
+    /// scaled by the activations).
+    Weight,
+    /// A drained partial-sum register word, corrupted before the
+    /// K-pass merge.
+    Psum,
+    /// An assembled output word, corrupted after the tile commits.
+    Output,
+}
+
+impl SdcTarget {
+    pub const ALL: [SdcTarget; 3] = [SdcTarget::Weight, SdcTarget::Psum, SdcTarget::Output];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SdcTarget::Weight => "weight",
+            SdcTarget::Psum => "psum",
+            SdcTarget::Output => "output",
+        }
+    }
+}
+
+/// One injected silent corruption for one tile evaluation: a single
+/// exponent-MSB flip at the chosen site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileFault {
+    pub target: SdcTarget,
+    /// Selector for the corrupted word, reduced modulo the word count
+    /// at the injection site (so one draw addresses any tile shape).
+    pub word: u64,
+}
+
+/// Flip the exponent MSB of a `fmt`-width bit pattern — the loudest
+/// single-bit corruption: the magnitude moves by a factor of
+/// `2^(2^(exp_bits−1))` (or lands on a special), never by less than the
+/// format's unit scale, which is what makes exponent-side SDC the class
+/// worth detecting (mantissa-LSB flips are below the reduced-precision
+/// noise floor by construction).
+pub fn flip_exp_msb(bits: u64, fmt: FpFormat) -> u64 {
+    bits ^ (1u64 << (fmt.width() - 2))
+}
+
+/// Per-job fault decisions drawn by the leader and attached to the
+/// dispatched job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JobFaults {
+    /// A silent corruption to apply during evaluation, if any.
+    pub sdc: Option<TileFault>,
+    /// Wall-time inflation to apply before evaluation (0 = none).
+    pub slow_us: u64,
+}
+
+/// Counters of one run's SDC lifecycle, carried on
+/// [`crate::coordinator::ExecOutcome`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SdcStats {
+    /// Tile evaluations whose accepted result carried an injected flip.
+    pub injected: usize,
+    /// Suspect N-blocks the ABFT checksums flagged (over all rounds).
+    pub detected: usize,
+    /// Flagged blocks whose recomputation cleared the checksums.
+    pub recovered: usize,
+    /// Blocks still failing the checksums when recovery gave up.
+    pub unresolved: usize,
+}
+
+impl SdcStats {
+    pub fn add(&mut self, o: &SdcStats) {
+        self.injected += o.injected;
+        self.detected += o.detected;
+        self.recovered += o.recovered;
+        self.unresolved += o.unresolved;
+    }
+}
+
+/// The full fault model: clean failures + silent corruption + slowdown,
+/// with the ABFT verification switch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultModel {
+    /// Clean-failure budget (the historical [`FaultPlan`]).
+    pub clean: FaultPlan,
+    /// Probability a tile job's accepted evaluation carries one flip.
+    pub sdc_rate: f64,
+    /// Sites a drawn flip may land on (uniform among these).
+    pub targets: Vec<SdcTarget>,
+    /// Probability a job is served by a slow worker.
+    pub slow_rate: f64,
+    /// Service-time inflation of a slow job, microseconds.
+    pub slow_us: u64,
+    /// Root seed of the deterministic draw stream.
+    pub seed: u64,
+    /// Run ABFT checksum verification + recovery after assembly.
+    pub abft: bool,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel::none()
+    }
+}
+
+const KEYS: [&str; 8] =
+    ["sdc_rate", "slow_rate", "slow_us", "seed", "worker", "failures", "targets", "abft"];
+
+impl FaultModel {
+    /// The healthy model: nothing injected, ABFT off.
+    pub fn none() -> FaultModel {
+        FaultModel {
+            clean: FaultPlan::default(),
+            sdc_rate: 0.0,
+            targets: SdcTarget::ALL.to_vec(),
+            slow_rate: 0.0,
+            slow_us: 0,
+            seed: 0,
+            abft: false,
+        }
+    }
+
+    /// Wrap a clean-failure plan (the historical injection surface).
+    pub fn from_plan(plan: FaultPlan) -> FaultModel {
+        FaultModel { clean: plan, ..FaultModel::none() }
+    }
+
+    /// Whether any injection (of any class) is configured.
+    pub fn injects(&self) -> bool {
+        self.sdc_rate > 0.0 || self.slow_rate > 0.0 || self.clean.failures > 0
+    }
+
+    /// Derive a shard-local model: same knobs, decorrelated seed (so
+    /// identical batches on different shards draw independent faults).
+    pub fn for_shard(&self, shard: usize) -> FaultModel {
+        let mut m = self.clone();
+        m.seed = self.seed ^ (shard as u64 + 1).wrapping_mul(0x2545_f491_4f6c_dd1d);
+        m
+    }
+
+    /// Draw one job's fault decisions.  A pure function of
+    /// `(seed, epoch, job, attempt)` — re-running a seeded workload
+    /// re-injects the same faults regardless of scheduling.
+    pub fn draw(&self, epoch: u64, job: u64, attempt: u64) -> JobFaults {
+        if self.sdc_rate <= 0.0 && self.slow_rate <= 0.0 {
+            return JobFaults::default();
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ (epoch + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ (job + 1).wrapping_mul(0xcbf2_9ce4_8422_2325)
+                ^ (attempt + 1).wrapping_mul(0x100_0000_01b3),
+        );
+        let sdc = if !self.targets.is_empty() && rng.chance(self.sdc_rate) {
+            let target = self.targets[rng.below(self.targets.len() as u64) as usize];
+            Some(TileFault { target, word: rng.next_u64() })
+        } else {
+            None
+        };
+        let slow_us = if self.slow_us > 0 && rng.chance(self.slow_rate) { self.slow_us } else { 0 };
+        JobFaults { sdc, slow_us }
+    }
+
+    /// Parse a `key=value,key=value` spec (the `--fault` flag and the
+    /// JSON `"fault"` string).  Keys: `sdc_rate`, `slow_rate`,
+    /// `slow_us`, `seed`, `worker`, `failures` (a count, or `always`),
+    /// `targets` (`+`-separated subset of `weight+psum+output`) and
+    /// `abft` (`on`/`off`).  Unless `abft` is given explicitly, ABFT
+    /// verification is enabled exactly when `sdc_rate > 0` — corruption
+    /// without detection is a misconfiguration, not a default.
+    /// Unknown keys are hard errors with the CLI's did-you-mean style.
+    pub fn parse(spec: &str) -> Result<FaultModel, String> {
+        let mut m = FaultModel::none();
+        let mut abft_explicit = false;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec '{part}' is not key=value"))?;
+            let (key, val) = (key.trim(), val.trim());
+            let f64_val = || -> Result<f64, String> {
+                val.parse().map_err(|_| format!("fault {key}: invalid number '{val}'"))
+            };
+            let u64_val = || -> Result<u64, String> {
+                val.parse().map_err(|_| format!("fault {key}: invalid integer '{val}'"))
+            };
+            match key {
+                "sdc_rate" => m.sdc_rate = f64_val()?.clamp(0.0, 1.0),
+                "slow_rate" => m.slow_rate = f64_val()?.clamp(0.0, 1.0),
+                "slow_us" => m.slow_us = u64_val()?,
+                "seed" => m.seed = u64_val()?,
+                "worker" => m.clean.worker = u64_val()? as usize,
+                "failures" => {
+                    m.clean.failures =
+                        if val == "always" { usize::MAX } else { u64_val()? as usize }
+                }
+                "targets" => m.targets = Self::parse_targets(val)?,
+                "abft" => {
+                    abft_explicit = true;
+                    m.abft = match val {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        other => return Err(format!("fault abft: '{other}' (on|off)")),
+                    };
+                }
+                other => return Err(Self::describe_unknown(other)),
+            }
+        }
+        if !abft_explicit {
+            m.abft = m.sdc_rate > 0.0;
+        }
+        Ok(m)
+    }
+
+    fn parse_targets(val: &str) -> Result<Vec<SdcTarget>, String> {
+        let mut targets = Vec::new();
+        for name in val.split('+').map(str::trim).filter(|t| !t.is_empty()) {
+            let t = SdcTarget::ALL
+                .into_iter()
+                .find(|t| t.name() == name)
+                .ok_or_else(|| {
+                    format!("fault targets: unknown site '{name}' (weight|psum|output)")
+                })?;
+            if !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        if targets.is_empty() {
+            return Err("fault targets: empty list".into());
+        }
+        Ok(targets)
+    }
+
+    fn describe_unknown(key: &str) -> String {
+        let hint = KEYS
+            .iter()
+            .map(|k| (edit_distance(key, k), *k))
+            .filter(|&(d, _)| d <= 2)
+            .min_by_key(|&(d, _)| d)
+            .map(|(_, k)| format!(" (did you mean {k}?)"))
+            .unwrap_or_default();
+        format!("unknown fault key '{key}'{hint}")
+    }
+}
+
+impl std::fmt::Display for FaultModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let targets: Vec<&str> = self.targets.iter().map(|t| t.name()).collect();
+        write!(
+            f,
+            "sdc_rate={} targets={} slow_rate={} slow_us={} seed={} abft={}",
+            self.sdc_rate,
+            targets.join("+"),
+            self.slow_rate,
+            self.slow_us,
+            self.seed,
+            if self.abft { "on" } else { "off" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_are_deterministic_and_keyed() {
+        let m = FaultModel {
+            sdc_rate: 0.5,
+            slow_rate: 0.5,
+            slow_us: 10,
+            seed: 7,
+            ..FaultModel::none()
+        };
+        for epoch in 0..4u64 {
+            for job in 0..16u64 {
+                assert_eq!(m.draw(epoch, job, 0), m.draw(epoch, job, 0));
+            }
+        }
+        // A bumped attempt re-draws: over many jobs, at least one
+        // decision differs between attempts.
+        let differs = (0..64u64).any(|j| m.draw(0, j, 0) != m.draw(0, j, 1));
+        assert!(differs, "attempt must be part of the draw key");
+        // And the rate is roughly honoured.
+        let hits = (0..1000u64).filter(|&j| m.draw(0, j, 0).sdc.is_some()).count();
+        assert!((300..700).contains(&hits), "sdc draws {hits}/1000 at rate 0.5");
+    }
+
+    #[test]
+    fn zero_rates_draw_nothing() {
+        let m = FaultModel::none();
+        for j in 0..64u64 {
+            assert_eq!(m.draw(0, j, 0), JobFaults::default());
+        }
+        assert!(!m.injects());
+        assert!(FaultModel { sdc_rate: 0.1, ..FaultModel::none() }.injects());
+        assert!(FaultModel::from_plan(FaultPlan::always(0)).injects());
+    }
+
+    #[test]
+    fn shard_models_decorrelate() {
+        let m = FaultModel { sdc_rate: 0.5, seed: 3, ..FaultModel::none() };
+        let (a, b) = (m.for_shard(0), m.for_shard(1));
+        assert_ne!(a.seed, b.seed);
+        let differs = (0..64u64).any(|j| a.draw(0, j, 0) != b.draw(0, j, 0));
+        assert!(differs);
+    }
+
+    #[test]
+    fn parse_round_trips_the_readme_example() {
+        let m = FaultModel::parse("sdc_rate=1e-3,seed=7").unwrap();
+        assert_eq!(m.sdc_rate, 1e-3);
+        assert_eq!(m.seed, 7);
+        assert!(m.abft, "sdc without abft is a misconfiguration, not a default");
+        assert_eq!(m.targets, SdcTarget::ALL.to_vec());
+        let m = FaultModel::parse("sdc_rate=0.2,targets=psum+output,abft=off").unwrap();
+        assert_eq!(m.targets, vec![SdcTarget::Psum, SdcTarget::Output]);
+        assert!(!m.abft);
+        let m = FaultModel::parse("worker=1,failures=always,slow_rate=0.1,slow_us=50").unwrap();
+        assert_eq!(m.clean, FaultPlan::always(1));
+        assert_eq!((m.slow_rate, m.slow_us), (0.1, 50));
+        assert!(!m.abft, "no sdc configured");
+        assert_eq!(FaultModel::parse("").unwrap(), FaultModel::none());
+    }
+
+    #[test]
+    fn parse_rejects_unknowns_with_suggestions() {
+        let err = FaultModel::parse("sdc_rat=0.1").unwrap_err();
+        assert!(err.contains("did you mean sdc_rate?"), "{err}");
+        let err = FaultModel::parse("zzz=1").unwrap_err();
+        assert!(err.contains("unknown fault key") && !err.contains("did you mean"), "{err}");
+        assert!(FaultModel::parse("sdc_rate").unwrap_err().contains("not key=value"));
+        assert!(FaultModel::parse("sdc_rate=x").unwrap_err().contains("invalid number"));
+        assert!(FaultModel::parse("targets=weight+banana").unwrap_err().contains("banana"));
+        assert!(FaultModel::parse("targets=").unwrap_err().contains("empty"));
+        assert!(FaultModel::parse("abft=maybe").unwrap_err().contains("on|off"));
+    }
+
+    #[test]
+    fn exp_msb_flip_is_loud_on_fp32() {
+        let f = FpFormat::FP32;
+        // 0.0 flips to 2.0: the *minimum* deviation an exponent-MSB
+        // flip can produce on a finite fp32 word.
+        let flipped = flip_exp_msb(0f32.to_bits() as u64, f);
+        assert_eq!(f32::from_bits(flipped as u32), 2.0);
+        for v in [0.75f32, 1.5, 3.0, 1e-8, 1e20, -0.1] {
+            let fv = f32::from_bits(flip_exp_msb(v.to_bits() as u64, f) as u32);
+            let dev = if fv.is_finite() { (fv - v).abs() } else { f32::INFINITY };
+            assert!(dev >= 1.99, "flip of {v} moved only {dev}");
+        }
+    }
+}

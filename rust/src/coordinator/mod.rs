@@ -8,20 +8,26 @@
 //! * [`scheduler`] — GEMM → ordered tile jobs;
 //! * [`router`] — queue selection (round-robin / least-loaded);
 //! * [`executor`] — bounded-queue worker pool with retry-on-failure;
+//! * [`fault`] — seeded fault model: clean failures, silent bit-flips,
+//!   slow workers (DESIGN.md §16);
 //! * [`state`] — pass-ordered assembly (deterministic under any
 //!   completion order);
-//! * [`verify`] — oracle / runtime / f64 golden comparison.
+//! * [`verify`] — oracle / runtime / f64 golden comparison, plus the
+//!   ABFT checksum layer ([`verify::abft`]).
 
 pub mod executor;
+pub mod fault;
 pub mod router;
 pub mod scheduler;
 pub mod state;
 pub mod verify;
 
-pub use executor::{eval_tile, ExecOutcome, Executor, FaultPlan, WorkerPool};
+pub use executor::{eval_tile, ExecOutcome, Executor, WorkerPool};
+pub use fault::{FaultModel, FaultPlan, JobFaults, SdcStats, SdcTarget, TileFault};
 pub use router::{Policy, Router};
 pub use scheduler::{Scheduler, TileJob};
 pub use state::{RunState, TileResult};
+pub use verify::abft::{abft_check, AbftReport};
 pub use verify::{
     verify_close, verify_oracle_sampled, verify_plan_stream_sim, verify_tiles_cycle_sim,
     VerifyReport,

@@ -1,0 +1,380 @@
+//! Algorithm-based fault tolerance (ABFT) for the tiled GEMM: Huang–
+//! Abraham row/column checksums with a *format-aware* tolerance.
+//!
+//! The classic scheme appends a checksum row/column to each operand so
+//! that `checksum(A·W) = checksum(A)·W`; a corrupted element breaks the
+//! identity in exactly one row and one column, which localizes it.  In
+//! exact arithmetic the comparison is equality — here it cannot be: the
+//! reduced-precision chain (windowed accumulation, South-edge rounding,
+//! cross-pass f32 merge) *legitimately* deviates from the f64 checksum
+//! reference, and so does every registered pipeline organisation
+//! (including `deep3`, which is bit-identical to the same
+//! [`crate::arith::accum::ColumnOracle`] semantics).  The tolerance
+//! must cover every clean run of every format with zero false
+//! positives, while staying far below the smallest deviation an
+//! exponent-MSB flip can cause (≥ 2.0 on an fp32 word — see
+//! [`crate::coordinator::fault::flip_exp_msb`]).
+//!
+//! # Tolerance derivation (DESIGN.md §16)
+//!
+//! Write `row_abs[m][j] = Σ_k |a[m][k]·w[k][j]|` and its column sum
+//! `t_abs[j] = Σ_m row_abs[m][j]`.  One output element accumulates, per
+//! K-pass, up to `k_len` windowed adds (each losing at most one window
+//! ULP of the running magnitude: relative `2^(1−window)` with carry
+//! headroom, bounded by `2^(3−window)` of `row_abs`) plus one rounding
+//! to `out_fmt` (`2^(1−man)` relative), and `p−1` f32 merge adds across
+//! the `p = k_tiles` passes.  Summing over the column and adding the
+//! absolute subnormal floor (`ulp_floor`) where the relative bound
+//! degenerates, plus the f64 error of computing the checksums
+//! themselves, a clean column-sum deviation is below
+//!
+//! ```text
+//! tol[j] = S·( (K·2^(3−w) + (2p−1)·2^(1−man))·t_abs[j]
+//!            + (2p−1)·M·ulp_floor(out)
+//!            + (M+K+4)·2^(−52)·t_abs[j] )          S = 4 (safety)
+//! ```
+//!
+//! A flip's deviation is ≥ 2.0 (or non-finite); `tol` is ~1e-5·t_abs
+//! for BF16→FP32, so the bands are separated by orders of magnitude at
+//! every shape this stack serves.
+//!
+//! # Non-finite outputs
+//!
+//! An exponent-MSB flip of a word in `[1, 2)` lands on Inf/NaN, but a
+//! clean FP8 run can *legitimately* saturate to a special.  The checker
+//! proves cleanliness first: with `cap[j] = Σ_k max_m|a[m][k]|·|w[k][j]|`,
+//! a column satisfying `4·cap[j] < max_finite(out_fmt)` cannot overflow
+//! on a clean run (window values stay within 2× the partial-sum bound),
+//! so a non-finite word there is corruption.  Columns that fail the
+//! bound are reported as *unbounded* and never flagged — no false
+//! positives on legitimate saturation, at the cost of recall in ranges
+//! the serving planner refuses to certify anyway.
+//!
+//! Localization: the column leg names the N-block (the recovery
+//! granularity — K-passes of one block are output-indistinguishable);
+//! the row leg is diagnostic, pinning the corrupted activation row.
+
+use crate::arith::fma::ChainCfg;
+use crate::arith::format::FpFormat;
+use crate::precision::error::{max_finite_f64, ulp_floor};
+use crate::sa::tile::TilePlan;
+use crate::workloads::gemm::GemmData;
+
+/// Safety factor applied on top of the analytic clean-run bound.
+pub const SAFETY: f64 = 4.0;
+
+/// Outcome of one checksum verification pass over an assembled `M×N`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AbftReport {
+    /// Columns whose checksum was compared against the tolerance.
+    pub cols_checked: usize,
+    /// Columns skipped because a clean run could legitimately overflow
+    /// (or the inputs themselves carry specials).
+    pub cols_unbounded: usize,
+    /// Activation rows covered by the row-checksum leg.
+    pub rows_checked: usize,
+    /// Suspect N-block indices (sorted, deduplicated): the recovery
+    /// granularity.
+    pub suspect_blocks: Vec<usize>,
+    /// Suspect activation rows (diagnostic localization only).
+    pub suspect_rows: Vec<usize>,
+    /// Largest observed `|deviation| / tol` over checked columns — the
+    /// clean-run margin monitor (≪ 1 on healthy hardware).
+    pub max_ratio: f64,
+    /// The check declined to run (non-FP32 accumulator with multiple
+    /// K-passes: the cross-pass merge is not value-meaningful there).
+    pub skipped: bool,
+}
+
+impl AbftReport {
+    /// No corruption detected.
+    pub fn clean(&self) -> bool {
+        self.suspect_blocks.is_empty() && self.suspect_rows.is_empty()
+    }
+}
+
+/// The per-column deviation tolerance for a clean run (module docs).
+/// Public so the property suite can assert the separation between the
+/// clean band and the injected-fault band directly.
+pub fn column_tolerance(chain: &ChainCfg, plan: &TilePlan, m_rows: usize, t_abs: f64) -> f64 {
+    element_tolerance(chain, plan, m_rows, t_abs)
+}
+
+/// Shared body of the column/row tolerances: `count` is the number of
+/// output elements the checksum sums over (M for a column, N for a row).
+fn element_tolerance(chain: &ChainCfg, plan: &TilePlan, count: usize, t_abs: f64) -> f64 {
+    let k = plan.shape.k as f64;
+    let p = plan.k_tiles() as f64;
+    let roundings = 2.0 * p - 1.0;
+    let rel = k * 2f64.powi(3 - chain.window as i32)
+        + roundings * 2f64.powi(1 - chain.out_fmt.man_bits as i32);
+    let floor = roundings * count as f64 * ulp_floor(chain.out_fmt);
+    let fsum = (count as f64 + k + 4.0) * 2f64.powi(-52) * t_abs;
+    SAFETY * (rel * t_abs + floor + fsum)
+}
+
+/// Decode one assembled output word as a value.  The executor stores
+/// `f32::from_bits(round(...))`: a genuine f32 when the accumulator is
+/// FP32 (every serving configuration), otherwise an `out_fmt` bit
+/// pattern in an f32 container.
+fn out_value(out_fmt: FpFormat, word: f32) -> f64 {
+    if out_fmt == FpFormat::FP32 {
+        word as f64
+    } else {
+        out_fmt.to_f64(word.to_bits() as u64 & out_fmt.mask())
+    }
+}
+
+/// Verify an assembled result `y` (row-major `M×N`) against the
+/// Huang–Abraham checksums of its inputs.  Pure read-only analysis:
+/// recovery (zero + recompute the suspect blocks) is the executor's
+/// job, keyed on [`AbftReport::suspect_blocks`].
+pub fn abft_check(chain: &ChainCfg, plan: &TilePlan, data: &GemmData, y: &[f32]) -> AbftReport {
+    let (m_rows, k, n) = (data.shape.m, data.shape.k, data.shape.n);
+    assert_eq!(y.len(), m_rows * n, "assembled result does not match the plan shape");
+    let mut rep = AbftReport::default();
+    if chain.out_fmt != FpFormat::FP32 && plan.k_tiles() > 1 {
+        // The cross-pass merge adds out_fmt bit patterns as if they
+        // were f32 values; checksums over that container space are
+        // meaningless, so decline rather than mis-fire.
+        rep.cols_unbounded = n;
+        rep.skipped = true;
+        return rep;
+    }
+
+    // Input checksum vectors (one decode pass over A, one over W).
+    let mut s = vec![0.0f64; k]; // Σ_m a[m][k]
+    let mut sabs = vec![0.0f64; k]; // Σ_m |a[m][k]|
+    let mut amax = vec![0.0f64; k]; // max_m |a[m][k]|
+    let mut inputs_finite = true;
+    let av: Vec<Vec<f64>> = data
+        .a
+        .iter()
+        .map(|row| row.iter().map(|&bits| chain.in_fmt.to_f64(bits)).collect())
+        .collect();
+    for row in &av {
+        for (kk, &v) in row.iter().enumerate() {
+            inputs_finite &= v.is_finite();
+            s[kk] += v;
+            sabs[kk] += v.abs();
+            amax[kk] = amax[kk].max(v.abs());
+        }
+    }
+    let wv: Vec<Vec<f64>> = data
+        .w
+        .iter()
+        .map(|row| row.iter().map(|&bits| chain.in_fmt.to_f64(bits)).collect())
+        .collect();
+    inputs_finite &= wv.iter().all(|row| row.iter().all(|v| v.is_finite()));
+    let out_max = max_finite_f64(chain.out_fmt);
+
+    // ---- column leg: detection + N-block localization ----------------
+    let mut all_outputs_finite = true;
+    for j in 0..n {
+        let (mut t_ref, mut t_abs, mut cap) = (0.0f64, 0.0f64, 0.0f64);
+        for kk in 0..k {
+            let w = wv[kk][j];
+            t_ref += s[kk] * w;
+            t_abs += sabs[kk] * w.abs();
+            cap += amax[kk] * w.abs();
+        }
+        let bounded = cap.is_finite() && 4.0 * cap < out_max;
+        let mut t_obs = 0.0f64;
+        let mut col_finite = true;
+        for m in 0..m_rows {
+            let v = out_value(chain.out_fmt, y[m * n + j]);
+            col_finite &= v.is_finite();
+            t_obs += v;
+        }
+        all_outputs_finite &= col_finite;
+        if !col_finite {
+            if bounded {
+                // A clean run provably cannot produce a special here.
+                push_unique(&mut rep.suspect_blocks, j / plan.cols);
+            } else {
+                rep.cols_unbounded += 1;
+            }
+            continue;
+        }
+        if !bounded || !t_abs.is_finite() {
+            rep.cols_unbounded += 1;
+            continue;
+        }
+        let tol = element_tolerance(chain, plan, m_rows, t_abs);
+        let dev = (t_obs - t_ref).abs();
+        rep.max_ratio = rep.max_ratio.max(dev / tol);
+        if dev > tol {
+            push_unique(&mut rep.suspect_blocks, j / plan.cols);
+        }
+        rep.cols_checked += 1;
+    }
+
+    // ---- row leg: diagnostic localization -----------------------------
+    // Only meaningful when every output word is a finite value and the
+    // inputs carry no specials (a single unbounded column poisons every
+    // row sum it participates in).
+    if inputs_finite && all_outputs_finite && rep.cols_unbounded == 0 {
+        let mut rw = vec![0.0f64; k]; // Σ_j w[k][j]
+        let mut rwabs = vec![0.0f64; k]; // Σ_j |w[k][j]|
+        for kk in 0..k {
+            for j in 0..n {
+                rw[kk] += wv[kk][j];
+                rwabs[kk] += wv[kk][j].abs();
+            }
+        }
+        for m in 0..m_rows {
+            let (mut r_ref, mut r_abs) = (0.0f64, 0.0f64);
+            for kk in 0..k {
+                r_ref += av[m][kk] * rw[kk];
+                r_abs += av[m][kk].abs() * rwabs[kk];
+            }
+            let r_obs: f64 =
+                (0..n).map(|j| out_value(chain.out_fmt, y[m * n + j])).sum();
+            let tol = element_tolerance(chain, plan, n, r_abs);
+            if (r_obs - r_ref).abs() > tol {
+                rep.suspect_rows.push(m);
+            }
+            rep.rows_checked += 1;
+        }
+    }
+    rep
+}
+
+fn push_unique(v: &mut Vec<usize>, x: usize) {
+    if !v.contains(&x) {
+        v.push(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::format::FpFormat;
+    use crate::coordinator::fault::flip_exp_msb;
+    use crate::coordinator::verify::oracle_element;
+    use crate::sa::tile::GemmShape;
+    use crate::workloads::gemm::GemmData;
+
+    /// The exact clean assembly: per-element oracle, f32 pass merge —
+    /// what the executor produces on healthy hardware.
+    fn clean_y(chain: &ChainCfg, plan: &TilePlan, data: &GemmData) -> Vec<f32> {
+        let (m, n) = (data.shape.m, data.shape.n);
+        let mut y = vec![0.0f32; m * n];
+        for mm in 0..m {
+            for nn in 0..n {
+                y[mm * n + nn] = oracle_element(chain, plan, data, mm, nn);
+            }
+        }
+        y
+    }
+
+    fn case(fmt: FpFormat, seed: u64) -> (ChainCfg, TilePlan, GemmData, Vec<f32>) {
+        let chain = ChainCfg::new(fmt, FpFormat::FP32);
+        let shape = GemmShape::new(6, 20, 12); // 3 K-passes × 2 N-blocks on 8×8
+        let data = GemmData::cnn_like(shape, fmt, seed);
+        let plan = TilePlan::new(shape, 8, 8);
+        let y = clean_y(&chain, &plan, &data);
+        (chain, plan, data, y)
+    }
+
+    #[test]
+    fn clean_runs_pass_with_margin() {
+        for fmt in FpFormat::ALL {
+            let (chain, plan, data, y) = case(fmt, 0x11);
+            let rep = abft_check(&chain, &plan, &data, &y);
+            assert!(rep.clean(), "{}: {rep:?}", fmt.name);
+            assert_eq!(rep.cols_checked + rep.cols_unbounded, 12);
+            assert_eq!(rep.suspect_blocks, Vec::<usize>::new());
+            if rep.cols_checked > 0 {
+                assert!(rep.max_ratio < 1.0, "{}: ratio {}", fmt.name, rep.max_ratio);
+            }
+        }
+    }
+
+    #[test]
+    fn exp_flip_is_detected_and_localized() {
+        let (chain, plan, data, y) = case(FpFormat::BF16, 0x22);
+        let n = data.shape.n;
+        for (m, j) in [(0usize, 0usize), (3, 5), (5, 11), (2, 8)] {
+            let mut bad = y.clone();
+            let idx = m * n + j;
+            bad[idx] =
+                f32::from_bits(flip_exp_msb(bad[idx].to_bits() as u64, FpFormat::FP32) as u32);
+            let rep = abft_check(&chain, &plan, &data, &bad);
+            assert_eq!(rep.suspect_blocks, vec![j / plan.cols], "flip at ({m},{j})");
+            if rep.suspect_rows.is_empty() {
+                // Non-finite flip result: the row leg declines, but the
+                // column leg already localized the block.
+                assert!(!f32::from_bits(bad[idx].to_bits()).is_finite());
+            } else {
+                assert_eq!(rep.suspect_rows, vec![m], "flip at ({m},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn nonfinite_in_bounded_column_is_corruption() {
+        let (chain, plan, data, y) = case(FpFormat::BF16, 0x33);
+        let mut bad = y.clone();
+        bad[7] = f32::NAN;
+        let rep = abft_check(&chain, &plan, &data, &bad);
+        assert_eq!(rep.suspect_blocks, vec![7 / plan.cols]);
+    }
+
+    #[test]
+    fn legitimately_saturating_columns_are_unbounded_not_suspect() {
+        // FP8-E4M3 into FP16: inputs near 448 overflow a clean fp16
+        // accumulator, so the checker must refuse to judge the column.
+        let chain = ChainCfg::new(FpFormat::FP8E4M3, FpFormat::FP16);
+        let shape = GemmShape::new(2, 4, 3);
+        let mut data = GemmData::cnn_like(shape, FpFormat::FP8E4M3, 0x44);
+        for row in data.a.iter_mut().chain(data.w.iter_mut()) {
+            for v in row.iter_mut() {
+                *v = FpFormat::FP8E4M3.from_f64(400.0);
+            }
+        }
+        let plan = TilePlan::new(shape, 8, 8); // single pass: fp16 out allowed
+        // Saturated output: every word pinned at fp16 +Inf.
+        let y = vec![f32::from_bits(FpFormat::FP16.inf_bits() as u32); 6];
+        let rep = abft_check(&chain, &plan, &data, &y);
+        assert!(rep.clean(), "{rep:?}");
+        assert_eq!(rep.cols_unbounded, 3);
+        assert_eq!(rep.cols_checked, 0);
+    }
+
+    #[test]
+    fn non_fp32_multipass_declines() {
+        let chain = ChainCfg::new(FpFormat::FP8E4M3, FpFormat::FP16);
+        let shape = GemmShape::new(2, 20, 3); // 3 K-passes on 8 rows
+        let data = GemmData::cnn_like(shape, FpFormat::FP8E4M3, 0x55);
+        let plan = TilePlan::new(shape, 8, 8);
+        let rep = abft_check(&chain, &plan, &data, &vec![0.0f32; 6]);
+        assert!(rep.skipped);
+        assert!(rep.clean());
+        assert_eq!(rep.cols_checked, 0);
+    }
+
+    #[test]
+    fn tolerance_is_far_below_the_flip_band() {
+        // For the serving formats (fp32 accumulator) at test shapes,
+        // the clean tolerance sits orders of magnitude under the ≥ 2.0
+        // deviation of an exponent-MSB flip.
+        let (chain, plan, data, _) = case(FpFormat::BF16, 0x66);
+        let t_abs_worst = (0..data.shape.n)
+            .map(|j| {
+                (0..data.shape.k)
+                    .map(|kk| {
+                        let w = chain.in_fmt.to_f64(data.w[kk][j]).abs();
+                        (0..data.shape.m)
+                            .map(|m| chain.in_fmt.to_f64(data.a[m][kk]).abs())
+                            .sum::<f64>()
+                            * w
+                    })
+                    .sum::<f64>()
+            })
+            .fold(0.0f64, f64::max);
+        let tol = column_tolerance(&chain, &plan, data.shape.m, t_abs_worst);
+        assert!(tol < 0.02, "tol {tol} vs flip band 2.0");
+        assert!(tol > 0.0);
+    }
+}

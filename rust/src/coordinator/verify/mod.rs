@@ -21,6 +21,8 @@
 //! the inter-tile composition (double-buffered preload overlap, drain
 //! serialization) is validated too, not just each tile in isolation.
 
+pub mod abft;
+
 use crate::arith::accum::ColumnOracle;
 use crate::arith::fma::ChainCfg;
 use crate::pe::PipelineKind;

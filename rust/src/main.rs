@@ -13,6 +13,7 @@
 //! skewsa sweep       # design-space sweep: array size x format
 //! skewsa run         # coordinate a GEMM end-to-end (verify + report)
 //! skewsa serve       # multi-tenant serving: batching + cache + shards
+//! skewsa faults      # chaos run: SDC injection + ABFT + quarantine
 //! skewsa precision   # mixed-precision planner: budget -> per-layer plan
 //! skewsa stream      # multi-tile layer latency: serialized vs overlapped
 //! skewsa viz         # pipeline interleaving trace (Figs. 4/6)
@@ -70,6 +71,9 @@ fn cli() -> Cli {
     .opt("budget", "precision: per-layer error budget (peak-normalized)", Some("1e-2"))
     .opt("m-cap", "precision: sampled rows per layer (full K always)", Some("8"))
     .opt("n-cap", "precision: sampled columns per layer", Some("16"))
+    .opt("fault", "serve/faults: fault model, e.g. sdc_rate=1e-3,seed=7", None)
+    .opt("shed-watermark", "serve/faults: queue depth that sheds batch requests", None)
+    .flag("smoke", "faults: small deterministic chaos run (CI)")
     .flag("quiet", "suppress per-layer rows")
 }
 
@@ -126,6 +130,10 @@ fn main() {
         }
         "serve" => {
             serve(&cfg, &args);
+            return;
+        }
+        "faults" => {
+            faults(&cfg, &args);
             return;
         }
         "precision" => {
@@ -301,6 +309,81 @@ fn serve(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     if let Some(path) = args.get("csv") {
         std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
         eprintln!("wrote {path}");
+    }
+}
+
+/// Chaos run: serve a closed-loop load under an injecting fault model
+/// and report the SDC/health/shed lifecycle.  Exits non-zero when any
+/// detected corruption stayed unresolved — the CI smoke gate.
+fn faults(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
+    use skewsa::config::ServeConfig;
+    use skewsa::coordinator::FaultModel;
+    use skewsa::serve::{run_closed_loop, LoadSpec, Server};
+    use skewsa::workloads::mobilenet;
+    use skewsa::workloads::serving::WeightStore;
+
+    let mut scfg = ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        let applied = std::fs::read_to_string(path)
+            .map_err(|e| format!("{path}: {e}"))
+            .and_then(|text| {
+                skewsa::util::mini_json::Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+            })
+            .and_then(|j| scfg.apply_json(&j));
+        if let Err(e) = applied {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }
+    }
+    if let Err(e) = scfg.apply_args(args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+    // A chaos run with nothing injected would only measure the happy
+    // path: default to a representative mix (SDCs on all sites, a few
+    // slow workers, ABFT on) unless the user configured their own.
+    if !scfg.fault.injects() {
+        scfg.fault = FaultModel {
+            sdc_rate: 0.05,
+            slow_rate: 0.02,
+            slow_us: 200,
+            seed: cfg.seed,
+            abft: true,
+            ..FaultModel::none()
+        };
+    }
+    let smoke = args.has("smoke");
+    let store = Arc::new(WeightStore::from_layers(&mobilenet::layers(), cfg.in_fmt, 64, 64));
+    let kinds = kind_list(cfg, args, "faults");
+    let spec = LoadSpec {
+        clients: if smoke { 2 } else { 4 },
+        requests_per_client: if smoke { 6 } else { 24 },
+        kinds,
+        interactive_fraction: 0.25,
+        min_rows: 2,
+        max_rows: 8,
+        seed: cfg.seed,
+    };
+    println!(
+        "chaos: {} models on {} shard(s) x {} worker(s), fault [{}]",
+        store.len(),
+        scfg.shards,
+        scfg.workers_per_shard,
+        scfg.fault,
+    );
+    let server = Server::start(cfg, &scfg, store);
+    let load = run_closed_loop(&server, &spec);
+    let stats = server.stats();
+    let rep = report::faults_summary(&load, &stats);
+    print!("{}", rep.render());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
+        eprintln!("wrote {path}");
+    }
+    let unresolved: u64 = stats.shards.iter().map(|s| s.sdc_unresolved).sum();
+    if unresolved > 0 {
+        eprintln!("CHAOS RUN FAILED: {unresolved} corrupted block(s) left unresolved");
+        std::process::exit(1);
     }
 }
 

@@ -111,6 +111,24 @@ pub fn ulp_distance(fmt: FpFormat, a: u64, b: u64) -> u64 {
     ulp_key(fmt, a).abs_diff(ulp_key(fmt, b))
 }
 
+/// The smallest positive value of `fmt` (one subnormal ULP,
+/// `2^(emin − man_bits)`): the absolute spacing floor every rounding
+/// step can introduce near zero.  The ABFT tolerance derivation
+/// (DESIGN.md §16) uses it as the per-rounding absolute term where the
+/// relative ULP bound degenerates.
+pub fn ulp_floor(fmt: FpFormat) -> f64 {
+    2f64.powi(fmt.emin() - fmt.man_bits as i32)
+}
+
+/// The largest finite magnitude of `fmt` as an `f64` (exact: every
+/// supported format's extremum fits a double).  Used by the ABFT
+/// checker to prove a clean column cannot overflow before treating a
+/// non-finite output word as corruption.
+pub fn max_finite_f64(fmt: FpFormat) -> f64 {
+    let (sig, exp) = fmt.max_finite();
+    sig as f64 * 2f64.powi(exp - fmt.man_bits as i32)
+}
+
 /// Per-layer, per-format error statistics against the f64 oracle.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ErrorStats {
@@ -346,6 +364,23 @@ mod tests {
         assert!(a1.stats.max_rel < fp8.stats.worst());
         assert!(fp32.stats.max_rel > 0.0, "fp32 still quantizes inputs");
         assert_eq!(a1.stats.samples, 16);
+    }
+
+    #[test]
+    fn ulp_floor_and_max_finite_are_exact() {
+        // fp32: min subnormal 2^-149, max finite (2−2^-23)·2^127.
+        assert_eq!(ulp_floor(FpFormat::FP32), 2f64.powi(-149));
+        assert_eq!(max_finite_f64(FpFormat::FP32), f32::MAX as f64);
+        // bf16 shares fp32's exponent range with a 7-bit fraction.
+        assert_eq!(ulp_floor(FpFormat::BF16), 2f64.powi(-133));
+        // E4M3's top-exponent finites: max is 448, not an IEEE 240.
+        assert_eq!(max_finite_f64(FpFormat::FP8E4M3), 448.0);
+        assert_eq!(max_finite_f64(FpFormat::FP8E5M2), 57344.0);
+        for f in FpFormat::ALL {
+            // Both round-trip through the codec: representable exactly.
+            assert_eq!(f.to_f64(f.from_f64(ulp_floor(f))), ulp_floor(f), "{}", f.name);
+            assert_eq!(f.to_f64(f.from_f64(max_finite_f64(f))), max_finite_f64(f), "{}", f.name);
+        }
     }
 
     #[test]

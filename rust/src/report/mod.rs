@@ -561,6 +561,23 @@ pub fn serve_summary(load: &crate::serve::LoadReport, stats: &crate::serve::Serv
     // sum in LoadReport counts a batch's retries once per member).
     let tile_retries: u64 = stats.shards.iter().map(|s| s.retries).sum();
     table.row(&["tile retries".into(), tile_retries.to_string()]);
+    // Fault-tolerance lifecycle (DESIGN.md §16), aggregated over shards.
+    let sum = |f: fn(&crate::serve::ShardSnapshot) -> u64| -> u64 {
+        stats.shards.iter().map(f).sum()
+    };
+    table.row(&["requests shed".into(), stats.shed.to_string()]);
+    table.row(&[
+        "sdc injected/detected/recovered/unresolved".into(),
+        format!(
+            "{}/{}/{}/{}",
+            sum(|s| s.sdc_injected),
+            sum(|s| s.sdc_detected),
+            sum(|s| s.sdc_recovered),
+            sum(|s| s.sdc_unresolved)
+        ),
+    ]);
+    table.row(&["failed batches".into(), sum(|s| s.failed_batches).to_string()]);
+    table.row(&["shard quarantines".into(), sum(|s| s.quarantines).to_string()]);
     for (i, s) in stats.shards.iter().enumerate() {
         table.row(&[
             format!("shard {i} batches/requests/rows"),
@@ -568,6 +585,35 @@ pub fn serve_summary(load: &crate::serve::LoadReport, stats: &crate::serve::Serv
         ]);
     }
     Report { title: "Serve: multi-tenant GEMM serving summary".into(), table, totals: None }
+}
+
+/// The `skewsa faults` chaos-run report: the serve summary's fault
+/// rows, expanded per shard with the health board's state.
+pub fn faults_summary(
+    load: &crate::serve::LoadReport,
+    stats: &crate::serve::ServerStats,
+) -> Report {
+    let mut table = Table::new(&["metric", "value"]).numeric();
+    table.row(&["requests completed".into(), load.completed.to_string()]);
+    // The server-side counter is authoritative; the client-observed
+    // count (load.shed) also includes post-shutdown rejections.
+    table.row(&["requests shed".into(), stats.shed.to_string()]);
+    table.row(&["latency p99 (us)".into(), fnum(load.latency.p99_us, 1)]);
+    for (i, s) in stats.shards.iter().enumerate() {
+        table.row(&[
+            format!("shard {i} sdc inj/det/rec/unres"),
+            format!(
+                "{}/{}/{}/{}",
+                s.sdc_injected, s.sdc_detected, s.sdc_recovered, s.sdc_unresolved
+            ),
+        ]);
+        table.row(&[
+            format!("shard {i} failed batches / quarantines"),
+            format!("{}/{}", s.failed_batches, s.quarantines),
+        ]);
+        table.row(&[format!("shard {i} health"), s.health.to_string()]);
+    }
+    Report { title: "Faults: chaos run summary".into(), table, totals: None }
 }
 
 #[cfg(test)]
@@ -742,15 +788,22 @@ mod tests {
             cache_hit_responses: 8,
             retries_observed: 0,
             stream_cycles_observed: 12_345,
+            shed: 0,
         };
         let stats = ServerStats {
             submitted: 10,
+            shed: 2,
             cache: crate::serve::CacheStats { hits: 4, misses: 1, evictions: 0, entries: 1 },
             shards: vec![ShardSnapshot::default(), ShardSnapshot::default()],
         };
         let text = serve_summary(&load, &stats).render();
         assert!(text.contains("latency p99"));
         assert!(text.contains("shard 1"));
+        assert!(text.contains("requests shed"));
+        assert!(text.contains("sdc injected/detected/recovered/unresolved"));
+        let faults = faults_summary(&load, &stats).render();
+        assert!(faults.contains("shard 0 health"));
+        assert!(faults.contains("healthy"), "default snapshot renders healthy: {faults}");
         assert!(text.contains("plan-cache hit rate"));
         assert!(text.contains("sim service cycles"));
         assert!(text.contains("12345"), "stream cycles render: {text}");

@@ -71,6 +71,7 @@
 
 use crate::arith::accum::{ColumnOracle, RoundingUnit};
 use crate::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
+use crate::coordinator::fault::{flip_exp_msb, SdcTarget, TileFault};
 use crate::pe::cycle::PeActivity;
 use crate::pe::spec::DatapathId;
 use crate::pe::{PipelineKind, PipelineSpec};
@@ -337,6 +338,32 @@ impl FastArraySim {
             }
         });
         results.into_iter().collect()
+    }
+
+    /// Apply one silent corruption to this tile run — the per-tile leg
+    /// of the fault model (the multi-tile streaming analogue is
+    /// [`crate::sa::stream::StreamingSim::set_faults`]).  `Weight` flips
+    /// a word of a lane's stationary bank and must be armed **before**
+    /// [`FastArraySim::run`]; `Psum`/`Output` flip one drained
+    /// South-edge word and land **after** it.  Values only: timing and
+    /// [`FastArraySim::latency_matches_schedule`] are untouched, which
+    /// is what makes the corruption silent and the ABFT checksum layer
+    /// ([`crate::coordinator::verify::abft`]) necessary.
+    pub fn inject_fault(&mut self, fault: TileFault) {
+        match fault.target {
+            SdcTarget::Weight => {
+                let idx = (fault.word % (self.cols * self.rows) as u64) as usize;
+                let lane = &mut self.lanes[idx / self.rows];
+                let r = idx % self.rows;
+                lane.w[r] = flip_exp_msb(lane.w[r], self.cfg.in_fmt);
+            }
+            SdcTarget::Psum | SdcTarget::Output => {
+                let idx = (fault.word % (self.cols * self.m_total) as u64) as usize;
+                let lane = &mut self.lanes[idx / self.m_total];
+                let m = idx % self.m_total;
+                lane.y_bits[m] = flip_exp_msb(lane.y_bits[m], self.cfg.out_fmt);
+            }
+        }
     }
 
     /// Result matrix `Y[m][c]` as output-format bit patterns (valid after

@@ -29,6 +29,7 @@
 
 use crate::arith::accum::RoundingUnit;
 use crate::arith::fma::{ChainCfg, PsumSignal};
+use crate::coordinator::fault::{flip_exp_msb, SdcTarget, TileFault};
 use crate::pe::cycle::PeActivity;
 use crate::pe::{PipelineKind, PipelineSpec};
 use crate::sa::column::SimError;
@@ -102,6 +103,10 @@ pub struct StreamingSim {
     /// Global cycle at whose end each output's *final* K-pass left the
     /// South edge.
     out_cycle: Vec<u64>,
+    /// Injected silent corruptions, `(tile_index, fault)` — applied to
+    /// the lanes as the stream passes that tile
+    /// ([`StreamingSim::set_faults`]).
+    faults: Vec<(usize, TileFault)>,
     report: Option<StreamReport>,
 }
 
@@ -158,8 +163,22 @@ impl StreamingSim {
             ru: RoundingUnit::new(cfg),
             y: vec![0.0; shape.m * shape.n],
             out_cycle: vec![0; shape.m * shape.n],
+            faults: Vec::new(),
             report: None,
         }
+    }
+
+    /// Arm silent corruptions: each `(tile_index, fault)` pair lands one
+    /// exponent-MSB flip in the named lane site while that tile streams —
+    /// `Weight` in the shadow bank at preload, `Psum` in a lane's
+    /// drained South-edge register before the K-pass commit, `Output` in
+    /// the assembled word after it.  Values only: the flip never touches
+    /// event timing, so a corrupted run still satisfies
+    /// [`StreamingSim::matches_layer_timing`] — which is exactly what
+    /// makes the corruption *silent* and the ABFT checksum layer
+    /// ([`crate::coordinator::verify::abft`]) necessary.
+    pub fn set_faults(&mut self, faults: Vec<(usize, TileFault)>) {
+        self.faults = faults;
     }
 
     pub fn rows(&self) -> usize {
@@ -206,6 +225,7 @@ impl StreamingSim {
         let (mut exposed, mut compute, mut drain) = (0u64, 0u64, 0u64);
 
         for (i, tile) in tiles.iter().enumerate() {
+            let fault = self.faults.iter().find(|&&(t, _)| t == i).map(|&(_, f)| f);
             // ---- fill engine: schedule this tile's preload -------------
             let preload_start = match spans.last() {
                 None => 0,
@@ -231,9 +251,16 @@ impl StreamingSim {
             // zero-padding short K-edge tiles to the full chain depth
             // (the array does not reconfigure; unused rows stream zeros).
             for c in 0..tile.n_len {
-                let wcol: Vec<u64> = (0..rows)
+                let mut wcol: Vec<u64> = (0..rows)
                     .map(|r| if r < tile.k_len { self.w[tile.k0 + r][tile.n0 + c] } else { 0 })
                     .collect();
+                if let Some(f) = fault.filter(|f| f.target == SdcTarget::Weight) {
+                    let idx = (f.word % (tile.n_len * tile.k_len) as u64) as usize;
+                    if idx / tile.k_len == c {
+                        let r = idx % tile.k_len;
+                        wcol[r] = flip_exp_msb(wcol[r], self.cfg.in_fmt);
+                    }
+                }
                 self.lanes[c].preload_shadow(wcol);
             }
 
@@ -299,6 +326,12 @@ impl StreamingSim {
             })?;
 
             // ---- per-tile output commit (K-pass fold, pass order) ------
+            if let Some(f) = fault.filter(|f| f.target == SdcTarget::Psum) {
+                let idx = (f.word % (tile.n_len * m_total) as u64) as usize;
+                let (c, m) = (idx / m_total, idx % m_total);
+                let bits = self.lanes[c].y_bits[m];
+                self.lanes[c].y_bits[m] = flip_exp_msb(bits, self.cfg.out_fmt);
+            }
             let mut dur = 0u64;
             for lane in self.lanes[..tile.n_len].iter() {
                 for m in 0..m_total {
@@ -309,6 +342,13 @@ impl StreamingSim {
                     self.out_cycle[idx] = stream_start + lane.y_cycle[m];
                     dur = dur.max(lane.y_cycle[m] + 1);
                 }
+            }
+            if let Some(f) = fault.filter(|f| f.target == SdcTarget::Output) {
+                let idx = (f.word % (tile.n_len * m_total) as u64) as usize;
+                let (c, m) = (idx / m_total, idx % m_total);
+                let g = m * self.n_total + tile.n0 + c;
+                let bits = self.y[g].to_bits() as u64;
+                self.y[g] = f32::from_bits(flip_exp_msb(bits, self.cfg.out_fmt) as u32);
             }
             produced_total += m_total * tile.n_len;
             let stream_done = stream_start + dur;
@@ -509,6 +549,29 @@ mod tests {
             for n in 0..4 {
                 assert_eq!(sim.output_cycle(m, n), last.stream_start + sched.output_cycle(n, m));
             }
+        }
+    }
+
+    #[test]
+    fn injected_faults_corrupt_values_but_never_timing() {
+        let mut rng = Rng::new(0x5dc);
+        let (w, a) = random_gemm(&mut rng, 5, 20, 10);
+        let plan = TilePlan::new(GemmShape::new(5, 20, 10), 8, 8);
+        let mut clean = StreamingSim::new(CFG, PipelineKind::Skewed, &plan, &w, &a, true);
+        let rep_clean = clean.run(1_000_000).unwrap();
+        for target in SdcTarget::ALL {
+            let mut sim = StreamingSim::new(CFG, PipelineKind::Skewed, &plan, &w, &a, true);
+            sim.set_faults(vec![(0, TileFault { target, word: 12345 })]);
+            let rep = sim.run(1_000_000).unwrap();
+            assert_ne!(
+                sim.result_f32(),
+                clean.result_f32(),
+                "{target:?}: the flip must corrupt the output"
+            );
+            // The corruption is *silent*: event accounting is untouched
+            // and the run still matches the closed-form layer model.
+            assert_eq!(rep, rep_clean, "{target:?}");
+            assert!(sim.matches_layer_timing(), "{target:?}");
         }
     }
 

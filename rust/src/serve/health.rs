@@ -1,0 +1,275 @@
+//! Shard health tracking: rolling fault windows feeding a
+//! quarantine / probation state machine (DESIGN.md §16).
+//!
+//! Every completed batch reports a fault count for its shard (detected
+//! or unresolved SDCs, or a wholesale batch failure); the board keeps a
+//! rolling window of the last few batches per shard.  A shard whose
+//! window crosses the fault threshold is *quarantined*: the dispatcher
+//! excludes it for a fixed number of dispatch ticks (the board's
+//! clock), after which it re-enters on *probation* — it takes traffic
+//! again, but a single faulty batch sends it straight back to
+//! quarantine, while a run of clean batches re-admits it as healthy.
+//!
+//! Exclusion is advisory in the limit: if every shard is quarantined at
+//! once the exclusion set is void (matching the worker-level
+//! [`crate::coordinator::Router`] contract) — a degraded server keeps
+//! serving rather than deadlocking.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::Mutex;
+
+/// Knobs of the quarantine state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HealthPolicy {
+    /// Rolling window length, in batches per shard.
+    pub window: usize,
+    /// Fault count within the window that triggers quarantine.
+    pub fault_threshold: u64,
+    /// Dispatch ticks a quarantined shard sits out.
+    pub quarantine_batches: u64,
+    /// Clean batches a probationary shard must serve to be healthy.
+    pub probation_batches: u64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { window: 8, fault_threshold: 3, quarantine_batches: 16, probation_batches: 8 }
+    }
+}
+
+/// Where a shard stands in the quarantine state machine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardState {
+    /// Taking traffic, rolling window armed.
+    #[default]
+    Healthy,
+    /// Excluded from dispatch until the board clock reaches `until`.
+    Quarantined { until: u64 },
+    /// Taking traffic again; `remaining` clean batches to re-admission,
+    /// any fault re-quarantines.
+    Probation { remaining: u64 },
+}
+
+impl std::fmt::Display for ShardState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardState::Healthy => write!(f, "healthy"),
+            ShardState::Quarantined { until } => write!(f, "quarantined(until tick {until})"),
+            ShardState::Probation { remaining } => write!(f, "probation({remaining} to go)"),
+        }
+    }
+}
+
+#[derive(Default)]
+struct ShardHealth {
+    state: ShardState,
+    /// Fault counts of the most recent batches, newest last.
+    window: VecDeque<u64>,
+    /// Times this shard has entered quarantine (reporting).
+    quarantines: u64,
+}
+
+struct Inner {
+    /// Advances once per dispatch; quarantine expiry is measured in
+    /// dispatch ticks so an idle server does not silently pardon shards.
+    clock: u64,
+    shards: Vec<ShardHealth>,
+}
+
+/// Shared health state: one entry per shard, ticked by the dispatcher.
+pub struct HealthBoard {
+    policy: HealthPolicy,
+    inner: Mutex<Inner>,
+}
+
+impl HealthBoard {
+    pub fn new(policy: HealthPolicy, shards: usize) -> HealthBoard {
+        let shards = (0..shards.max(1)).map(|_| ShardHealth::default()).collect();
+        HealthBoard { policy, inner: Mutex::new(Inner { clock: 0, shards }) }
+    }
+
+    pub fn policy(&self) -> HealthPolicy {
+        self.policy
+    }
+
+    /// Advance the dispatch clock and promote expired quarantines to
+    /// probation.  Call once per dispatched batch, before routing.
+    pub fn tick(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let probation = self.policy.probation_batches.max(1);
+        for s in &mut g.shards {
+            if let ShardState::Quarantined { until } = s.state {
+                if clock >= until {
+                    s.state = ShardState::Probation { remaining: probation };
+                }
+            }
+        }
+    }
+
+    /// Shards the router must avoid (currently quarantined).  Void when
+    /// every shard is quarantined: a fully degraded pool keeps serving.
+    pub fn excluded(&self) -> BTreeSet<usize> {
+        let g = self.inner.lock().unwrap();
+        let out: BTreeSet<usize> = g
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.state, ShardState::Quarantined { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        if out.len() >= g.shards.len() {
+            BTreeSet::new()
+        } else {
+            out
+        }
+    }
+
+    /// Record one completed batch on `shard` with `faults` health-
+    /// relevant events (detected/unresolved SDCs, or 1 for a failed
+    /// batch) and run the state machine.
+    pub fn record(&self, shard: usize, faults: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let clock = g.clock;
+        let quarantine = ShardState::Quarantined { until: clock + self.policy.quarantine_batches };
+        let s = &mut g.shards[shard];
+        match s.state {
+            // A straggler batch finishing while quarantined neither
+            // extends nor clears the sentence.
+            ShardState::Quarantined { .. } => {}
+            ShardState::Probation { remaining } => {
+                if faults > 0 {
+                    s.quarantines += 1;
+                    s.window.clear();
+                    s.state = quarantine;
+                } else if remaining <= 1 {
+                    s.state = ShardState::Healthy;
+                } else {
+                    s.state = ShardState::Probation { remaining: remaining - 1 };
+                }
+            }
+            ShardState::Healthy => {
+                s.window.push_back(faults);
+                while s.window.len() > self.policy.window {
+                    s.window.pop_front();
+                }
+                if s.window.iter().sum::<u64>() >= self.policy.fault_threshold {
+                    s.quarantines += 1;
+                    s.window.clear();
+                    s.state = quarantine;
+                }
+            }
+        }
+    }
+
+    /// Current state of one shard.
+    pub fn state(&self, shard: usize) -> ShardState {
+        self.inner.lock().unwrap().shards[shard].state
+    }
+
+    /// How many times each shard has been quarantined.
+    pub fn quarantine_counts(&self) -> Vec<u64> {
+        self.inner.lock().unwrap().shards.iter().map(|s| s.quarantines).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> HealthPolicy {
+        HealthPolicy { window: 4, fault_threshold: 3, quarantine_batches: 5, probation_batches: 2 }
+    }
+
+    #[test]
+    fn crossing_the_threshold_quarantines_and_probation_readmits() {
+        let b = HealthBoard::new(policy(), 2);
+        // Three faulty batches on shard 1 cross the threshold.
+        for _ in 0..3 {
+            assert_eq!(b.state(1), ShardState::Healthy);
+            b.tick();
+            b.record(1, 1);
+        }
+        assert_eq!(b.state(1), ShardState::Quarantined { until: 3 + 5 });
+        assert_eq!(b.excluded(), BTreeSet::from([1]));
+        assert_eq!(b.quarantine_counts(), vec![0, 1]);
+        // Five more dispatch ticks (served by shard 0) expire the
+        // sentence into probation …
+        for _ in 0..5 {
+            b.tick();
+            b.record(0, 0);
+        }
+        assert_eq!(b.state(1), ShardState::Probation { remaining: 2 });
+        assert!(b.excluded().is_empty(), "probation takes traffic");
+        // … and two clean batches re-admit the shard.
+        b.tick();
+        b.record(1, 0);
+        assert_eq!(b.state(1), ShardState::Probation { remaining: 1 });
+        b.tick();
+        b.record(1, 0);
+        assert_eq!(b.state(1), ShardState::Healthy);
+        assert_eq!(b.quarantine_counts(), vec![0, 1]);
+    }
+
+    #[test]
+    fn fault_during_probation_requarantines() {
+        let b = HealthBoard::new(policy(), 1);
+        for _ in 0..3 {
+            b.tick();
+            b.record(0, 1);
+        }
+        for _ in 0..5 {
+            b.tick();
+        }
+        assert!(matches!(b.state(0), ShardState::Probation { .. }));
+        b.tick();
+        b.record(0, 2);
+        assert!(matches!(b.state(0), ShardState::Quarantined { .. }));
+        assert_eq!(b.quarantine_counts(), vec![2]);
+    }
+
+    #[test]
+    fn window_rolls_off_old_faults() {
+        let b = HealthBoard::new(policy(), 1);
+        // Two faults, then enough clean batches to roll them out of the
+        // 4-batch window: no quarantine.
+        b.tick();
+        b.record(0, 2);
+        for _ in 0..4 {
+            b.tick();
+            b.record(0, 0);
+        }
+        b.tick();
+        b.record(0, 2);
+        assert_eq!(b.state(0), ShardState::Healthy, "2+2 faults never shared a window");
+    }
+
+    #[test]
+    fn exclusion_of_every_shard_is_void() {
+        let b = HealthBoard::new(policy(), 2);
+        for shard in 0..2 {
+            for _ in 0..3 {
+                b.tick();
+                b.record(shard, 1);
+            }
+        }
+        assert!(matches!(b.state(0), ShardState::Quarantined { .. }));
+        assert!(matches!(b.state(1), ShardState::Quarantined { .. }));
+        assert!(b.excluded().is_empty(), "fully degraded pool keeps serving");
+    }
+
+    #[test]
+    fn straggler_batches_do_not_extend_quarantine() {
+        let b = HealthBoard::new(policy(), 1);
+        for _ in 0..3 {
+            b.tick();
+            b.record(0, 1);
+        }
+        let ShardState::Quarantined { until } = b.state(0) else {
+            panic!("not quarantined");
+        };
+        b.record(0, 5); // in-flight batch retiring late
+        assert_eq!(b.state(0), ShardState::Quarantined { until });
+    }
+}

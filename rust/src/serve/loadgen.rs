@@ -10,7 +10,7 @@
 //! checks.
 
 use super::metrics::{LatencyRecorder, LatencySummary};
-use super::request::DeadlineClass;
+use super::request::{recv_response, DeadlineClass, ResponseStatus};
 use super::server::Server;
 use crate::pe::PipelineKind;
 use crate::util::rng::Rng;
@@ -68,6 +68,10 @@ pub struct LoadReport {
     /// simulator pinned equal, this is the load's total simulated
     /// array-time as the serve layer accounts it.
     pub stream_cycles_observed: u64,
+    /// Requests answered with a rejection (shed at the overload
+    /// watermark, or arriving after shutdown) — not counted in
+    /// `completed` and not latency-recorded.
+    pub shed: usize,
 }
 
 impl LoadReport {
@@ -131,6 +135,7 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
     let cache_hits = AtomicUsize::new(0);
     let retries = AtomicUsize::new(0);
     let stream_cycles = std::sync::atomic::AtomicU64::new(0);
+    let shed = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for client in 0..spec.clients {
             let recorder = &recorder;
@@ -140,12 +145,17 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
             let cache_hits = &cache_hits;
             let retries = &retries;
             let stream_cycles = &stream_cycles;
+            let shed = &shed;
             s.spawn(move || {
                 for i in 0..spec.requests_per_client {
                     let (model, kind, class, a) = gen_request(server.store(), spec, client, i);
                     let t0 = Instant::now();
                     let rx = server.submit(model, kind, class, a);
-                    let resp = rx.recv().expect("server replied");
+                    let resp = recv_response(&rx, "closed-loop client");
+                    if resp.status != ResponseStatus::Ok {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
                     recorder.record(t0.elapsed());
                     completed.fetch_add(1, Ordering::Relaxed);
                     if resp.batch_size > 1 {
@@ -169,6 +179,7 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
         cache_hit_responses: cache_hits.into_inner(),
         retries_observed: retries.into_inner(),
         stream_cycles_observed: stream_cycles.into_inner(),
+        shed: shed.into_inner(),
     }
 }
 

@@ -22,9 +22,19 @@
 //!   [`crate::coordinator::Router`], each owning a persistent
 //!   [`crate::coordinator::WorkerPool`];
 //! * [`server`] — the facade wiring the pipeline together;
+//! * [`health`] — per-shard rolling fault windows feeding the
+//!   quarantine/probation state machine (DESIGN.md §16);
 //! * [`metrics`] — p50/p95/p99 latency + throughput recording;
 //! * [`loadgen`] — the closed-loop load generator behind
 //!   `skewsa serve` and `bench_serve`.
+//!
+//! Fault tolerance (DESIGN.md §16) threads through the same path: the
+//! [`crate::coordinator::FaultModel`] configured on
+//! [`crate::config::ServeConfig`] injects SDCs inside each shard's
+//! worker pool, ABFT checksums detect and recover them there, shard
+//! health feeds quarantine-aware dispatch, and batch-class requests
+//! over the queue's shed watermark are answered immediately with
+//! [`ResponseStatus::Shed`] instead of deepening the overload.
 //!
 //! Mixed-precision plans (DESIGN.md §12) deploy through this stack
 //! unchanged: [`crate::workloads::serving::WeightStore::from_plan`]
@@ -54,6 +64,7 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod health;
 pub mod loadgen;
 pub mod metrics;
 pub mod request;
@@ -62,8 +73,12 @@ pub mod shard;
 
 pub use batcher::{Batch, BatchKey, BatchLimits, Batcher};
 pub use cache::{CacheStats, CachedPlan, PlanCache, PlanKey};
+pub use health::{HealthBoard, HealthPolicy, ShardState};
 pub use loadgen::{gen_request, run_closed_loop, LoadReport, LoadSpec};
 pub use metrics::{percentile_ns, LatencyRecorder, LatencySummary};
-pub use request::{DeadlineClass, Pending, Request, RequestQueue, Response};
+pub use request::{
+    recv_response, DeadlineClass, Pending, PushError, Request, RequestQueue, Response,
+    ResponseStatus,
+};
 pub use server::{Server, ServerStats};
 pub use shard::{BatchJob, ReplyPart, ShardPool, ShardSnapshot};

@@ -9,9 +9,9 @@
 
 use crate::pe::PipelineKind;
 use std::collections::VecDeque;
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Latency class a client attaches to a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,10 +45,26 @@ impl Request {
     }
 }
 
+/// How a request left the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseStatus {
+    /// Served normally; `y` holds the result.
+    Ok,
+    /// Shed at the overload watermark before entering the queue
+    /// (graceful degradation: `Batch`-class only, `y` is empty).
+    Shed,
+    /// The queue was already closed when the request arrived (server
+    /// shutting down; `y` is empty).
+    Closed,
+}
+
 /// The served result for one request.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// How the request left the server; every field below is only
+    /// meaningful for [`ResponseStatus::Ok`].
+    pub status: ResponseStatus,
     /// Row-major `m × n`, f32 semantics of the output format — bit-exact
     /// with a solo `Coordinator::run_gemm` of the same request.
     pub y: Vec<f32>,
@@ -67,6 +83,35 @@ pub struct Response {
     pub batch_stream_cycles: u64,
 }
 
+impl Response {
+    /// A rejection (shed or shutdown): no payload, no producing shard.
+    pub fn rejected(id: u64, status: ResponseStatus) -> Response {
+        Response {
+            id,
+            status,
+            y: Vec::new(),
+            shard: usize::MAX,
+            batch_size: 0,
+            cache_hit: false,
+            retries: 0,
+            batch_stream_cycles: 0,
+        }
+    }
+}
+
+/// Receive a response with a 60-second watchdog: a wedged shard or
+/// batcher thread fails the caller with a message naming the wait
+/// instead of hanging a test run forever.
+///
+/// # Panics
+/// On timeout or a dropped reply channel.
+pub fn recv_response(rx: &Receiver<Response>, what: &str) -> Response {
+    match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(r) => r,
+        Err(e) => panic!("serve: no response for {what}: {e}"),
+    }
+}
+
 /// A queued request: payload + reply channel.
 pub struct Pending {
     pub req: Request,
@@ -83,9 +128,38 @@ struct QueueInner {
     closed: bool,
 }
 
+/// Why a submission did not enter the queue.
+pub enum PushError {
+    /// The queue is closed (server shutting down).
+    Closed(Pending),
+    /// Shed at the overload watermark (graceful degradation).
+    Shed(Pending),
+}
+
+impl PushError {
+    /// The request that was turned away.
+    pub fn into_pending(self) -> Pending {
+        match self {
+            PushError::Closed(p) | PushError::Shed(p) => p,
+        }
+    }
+}
+
+impl std::fmt::Debug for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Closed(p) => write!(f, "Closed(request {})", p.req.id),
+            PushError::Shed(p) => write!(f, "Shed(request {})", p.req.id),
+        }
+    }
+}
+
 /// Bounded MPMC request queue (mutex + condvars; std-only).
 pub struct RequestQueue {
     cap: usize,
+    /// Queue depth at which `Batch`-class pushes are shed instead of
+    /// blocking (0 disables shedding).
+    shed_watermark: usize,
     inner: Mutex<QueueInner>,
     not_empty: Condvar,
     not_full: Condvar,
@@ -99,8 +173,18 @@ impl RequestQueue {
     pub const MAX_FRONT_BYPASS: usize = 64;
 
     pub fn new(cap: usize) -> RequestQueue {
+        Self::with_watermark(cap, 0)
+    }
+
+    /// As [`RequestQueue::new`] with overload shedding armed: once the
+    /// queue holds `shed_watermark` requests, a `Batch`-class push is
+    /// rejected with [`PushError::Shed`] instead of blocking, keeping
+    /// the deadline-sensitive interactive path responsive under
+    /// overload.  `Interactive` pushes always block on the full `cap`.
+    pub fn with_watermark(cap: usize, shed_watermark: usize) -> RequestQueue {
         RequestQueue {
             cap: cap.max(1),
+            shed_watermark,
             inner: Mutex::new(QueueInner {
                 items: VecDeque::new(),
                 seq: 0,
@@ -126,12 +210,22 @@ impl RequestQueue {
     }
 
     /// Enqueue, blocking while the queue is full.  Returns the pending
-    /// back if the queue has been closed.
-    pub fn push(&self, p: Pending) -> Result<(), Pending> {
+    /// back inside the error if the queue has been closed, or — with a
+    /// shed watermark armed — if a `Batch`-class push arrives while the
+    /// queue is at or past the watermark (deadline-aware load
+    /// shedding: throughput traffic is turned away first, interactive
+    /// traffic keeps its blocking backpressure).
+    pub fn push(&self, p: Pending) -> Result<(), PushError> {
         let mut q = self.inner.lock().unwrap();
         loop {
             if q.closed {
-                return Err(p);
+                return Err(PushError::Closed(p));
+            }
+            if self.shed_watermark > 0
+                && p.req.class == DeadlineClass::Batch
+                && q.items.len() >= self.shed_watermark
+            {
+                return Err(PushError::Shed(p));
             }
             if q.items.len() < self.cap {
                 q.items.push_back(p);
@@ -370,6 +464,42 @@ mod tests {
         assert!(q.push(pending(1, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).is_err());
         assert_eq!(q.pop_anchor().unwrap().req.id, 0);
         assert!(q.pop_anchor().is_none());
+    }
+
+    #[test]
+    fn shed_watermark_sheds_batch_but_not_interactive() {
+        let q = RequestQueue::with_watermark(8, 2);
+        q.push(pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).unwrap();
+        q.push(pending(1, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).unwrap();
+        // At the watermark: throughput traffic is shed …
+        let turned_away = pending(2, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1);
+        let err = q.push(turned_away).unwrap_err();
+        assert!(matches!(err, PushError::Shed(_)), "{err:?}");
+        assert_eq!(err.into_pending().req.id, 2);
+        // … interactive traffic is not (the cap still has room).
+        q.push(pending(3, 0, PipelineKind::Skewed, DeadlineClass::Interactive, 1)).unwrap();
+        assert_eq!(q.len(), 3);
+        // Draining back below the watermark re-admits batch pushes.
+        q.pop_anchor().unwrap();
+        q.pop_anchor().unwrap();
+        q.push(pending(4, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).unwrap();
+    }
+
+    #[test]
+    fn closed_queue_reports_closed_not_shed() {
+        let q = RequestQueue::with_watermark(4, 1);
+        q.close();
+        let err = q.push(pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).unwrap_err();
+        assert!(matches!(err, PushError::Closed(_)), "{err:?}");
+    }
+
+    #[test]
+    fn rejected_response_is_empty_and_tagged() {
+        let r = Response::rejected(7, ResponseStatus::Shed);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.status, ResponseStatus::Shed);
+        assert!(r.y.is_empty());
+        assert_eq!(r.batch_size, 0);
     }
 
     #[test]

@@ -13,12 +13,14 @@
 
 use super::batcher::{Batch, Batcher, BatchLimits};
 use super::cache::{CacheStats, PlanCache, PlanKey};
-use super::request::{DeadlineClass, Pending, Request, RequestQueue, Response};
+use super::request::{
+    DeadlineClass, Pending, PushError, Request, RequestQueue, Response, ResponseStatus,
+};
 use super::shard::{BatchJob, ReplyPart, ShardPool, ShardSnapshot};
 use crate::arith::fma::ChainCfg;
 use crate::arith::format::FpFormat;
 use crate::config::{NumericMode, RunConfig, ServeConfig};
-use crate::coordinator::FaultPlan;
+use crate::coordinator::{FaultModel, FaultPlan};
 use crate::pe::PipelineKind;
 use crate::sa::tile::GemmShape;
 use crate::workloads::gemm::GemmData;
@@ -33,6 +35,8 @@ use std::time::Duration;
 pub struct ServerStats {
     /// Requests accepted so far.
     pub submitted: u64,
+    /// Requests turned away at the shed watermark (overload).
+    pub shed: u64,
     pub cache: CacheStats,
     pub shards: Vec<ShardSnapshot>,
 }
@@ -102,23 +106,14 @@ pub struct Server {
     shards: Arc<ShardPool>,
     batcher: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
+    shed: AtomicU64,
 }
 
 impl Server {
     /// Start the serving pipeline: array geometry / formats / numeric
-    /// mode from `run`, serving knobs from `serve`.
+    /// mode from `run`, serving knobs (including the fault model and
+    /// health policy, DESIGN.md §16) from `serve`.
     pub fn start(run: &RunConfig, serve: &ServeConfig, store: Arc<WeightStore>) -> Server {
-        Self::start_with_fault(run, serve, store, FaultPlan::default())
-    }
-
-    /// As [`Server::start`], injecting a [`FaultPlan`] into every
-    /// shard's worker pool (resilience tests).
-    pub fn start_with_fault(
-        run: &RunConfig,
-        serve: &ServeConfig,
-        store: Arc<WeightStore>,
-        fault: FaultPlan,
-    ) -> Server {
         assert!(!store.is_empty(), "serving needs at least one model");
         // Serving accumulates every batch into `run.out_fmt`, while a
         // plan-deployed store (`WeightStore::from_plan`) certified its
@@ -145,14 +140,15 @@ impl Server {
                 );
             }
         }
-        let queue = Arc::new(RequestQueue::new(serve.queue_cap));
+        let queue = Arc::new(RequestQueue::with_watermark(serve.queue_cap, serve.shed_watermark));
         let cache = Arc::new(PlanCache::new(serve.plan_cache_cap));
-        let shards = Arc::new(ShardPool::with_fault(
+        let shards = Arc::new(ShardPool::with_fault_model(
             serve.shards,
             serve.workers_per_shard,
             run.queue_depth,
             serve.shard_policy,
-            fault,
+            serve.fault.clone(),
+            serve.health_policy(),
         ));
         let limits = BatchLimits {
             max_requests: serve.max_batch_requests,
@@ -176,11 +172,36 @@ impl Server {
                 dispatcher.dispatch(batch);
             }
         });
-        Server { queue, cache, store, shards, batcher: Some(handle), next_id: AtomicU64::new(0) }
+        Server {
+            queue,
+            cache,
+            store,
+            shards,
+            batcher: Some(handle),
+            next_id: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// As [`Server::start`], injecting a clean-failure [`FaultPlan`]
+    /// into every shard's worker pool (resilience tests; the richer
+    /// SDC surface lives on [`ServeConfig::fault`]).
+    pub fn start_with_fault(
+        run: &RunConfig,
+        serve: &ServeConfig,
+        store: Arc<WeightStore>,
+        fault: FaultPlan,
+    ) -> Server {
+        let mut serve = serve.clone();
+        serve.fault = FaultModel::from_plan(fault);
+        Self::start(run, &serve, store)
     }
 
     /// Submit one request; returns the reply receiver.  Blocks while
-    /// the request queue is full (closed-loop backpressure).
+    /// the request queue is full (closed-loop backpressure) — except
+    /// that batch-class requests arriving over the shed watermark, and
+    /// any request arriving after shutdown, are answered immediately
+    /// with a rejected [`Response`] instead of hanging or panicking.
     pub fn submit(
         &self,
         model: usize,
@@ -200,8 +221,15 @@ impl Server {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request { id, model, kind, class, a };
         let pending = Pending { req, reply: tx };
-        if self.queue.push(pending).is_err() {
-            panic!("serve queue closed");
+        match self.queue.push(pending) {
+            Ok(()) => {}
+            Err(PushError::Shed(p)) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                let _ = p.reply.send(Response::rejected(p.req.id, ResponseStatus::Shed));
+            }
+            Err(PushError::Closed(p)) => {
+                let _ = p.reply.send(Response::rejected(p.req.id, ResponseStatus::Closed));
+            }
         }
         rx
     }
@@ -214,6 +242,7 @@ impl Server {
     pub fn stats(&self) -> ServerStats {
         ServerStats {
             submitted: self.next_id.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             cache: self.cache.stats(),
             shards: self.shards.snapshots(),
         }
@@ -334,6 +363,35 @@ mod tests {
         // And a planned store under a wide-enough accumulator starts.
         let planned = Arc::new(planned_store(FpFormat::BF16));
         let _ = Server::start(&run, &ServeConfig::small(), planned);
+    }
+
+    #[test]
+    fn overload_sheds_batch_requests_with_a_tagged_response() {
+        // A huge batch window parks the anchor request inside the
+        // batcher, so follow-ups pile up in the queue deterministically.
+        let mut serve = ServeConfig::small();
+        serve.batch_window_us = 2_000_000;
+        serve.shed_watermark = 1;
+        let server = tiny_server(serve);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let a = server.store().gen_activations(0, 2, &mut rng);
+        let anchor = server.submit(0, PipelineKind::Skewed, DeadlineClass::Batch, a);
+        // Wait for the batcher to take the anchor out of the queue.
+        while server.queue.len() > 0 {
+            std::thread::yield_now();
+        }
+        let a = server.store().gen_activations(1, 2, &mut rng);
+        let queued = server.submit(1, PipelineKind::Skewed, DeadlineClass::Batch, a);
+        let a = server.store().gen_activations(1, 2, &mut rng);
+        let shed = server.submit(1, PipelineKind::Skewed, DeadlineClass::Batch, a);
+        let resp = shed.recv().expect("shed reply arrives immediately");
+        assert_eq!(resp.status, ResponseStatus::Shed);
+        assert!(resp.y.is_empty());
+        assert_eq!(server.stats().shed, 1);
+        // Shutdown drains the accepted requests as real responses.
+        drop(server);
+        assert_eq!(anchor.recv().unwrap().status, ResponseStatus::Ok);
+        assert_eq!(queued.recv().unwrap().status, ResponseStatus::Ok);
     }
 
     #[test]

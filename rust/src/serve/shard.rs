@@ -14,11 +14,12 @@
 //! channel, so responses leave as soon as *their* batch retires.
 
 use super::cache::CachedPlan;
-use super::request::Response;
+use super::health::{HealthBoard, HealthPolicy, ShardState};
+use super::request::{Response, ResponseStatus};
 use crate::arith::fma::ChainCfg;
 use crate::config::NumericMode;
 use crate::coordinator::router::{Policy, Router};
-use crate::coordinator::{FaultPlan, WorkerPool};
+use crate::coordinator::{FaultModel, FaultPlan, WorkerPool};
 use crate::pe::PipelineKind;
 use crate::workloads::gemm::GemmData;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -57,6 +58,20 @@ pub struct ShardSnapshot {
     pub requests: u64,
     pub rows: u64,
     pub retries: u64,
+    /// Silent corruptions injected into this shard's tile evaluations.
+    pub sdc_injected: u64,
+    /// Suspect blocks the ABFT checksums flagged.
+    pub sdc_detected: u64,
+    /// Flagged blocks cleared by recomputation.
+    pub sdc_recovered: u64,
+    /// Blocks still failing the checksums when recovery gave up.
+    pub sdc_unresolved: u64,
+    /// Batches dropped wholesale (retry exhaustion / timing mismatch).
+    pub failed_batches: u64,
+    /// Times this shard entered quarantine.
+    pub quarantines: u64,
+    /// Where the shard stands in the quarantine state machine.
+    pub health: ShardState,
 }
 
 #[derive(Default)]
@@ -65,6 +80,11 @@ struct ShardCounters {
     requests: AtomicU64,
     rows: AtomicU64,
     retries: AtomicU64,
+    sdc_injected: AtomicU64,
+    sdc_detected: AtomicU64,
+    sdc_recovered: AtomicU64,
+    sdc_unresolved: AtomicU64,
+    failed_batches: AtomicU64,
 }
 
 struct Shard {
@@ -72,11 +92,12 @@ struct Shard {
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
-/// The pool of shards plus the shard-level router.
+/// The pool of shards plus the shard-level router and health board.
 pub struct ShardPool {
     shards: Vec<Shard>,
     router: Arc<Router>,
     counters: Arc<Vec<ShardCounters>>,
+    health: Arc<HealthBoard>,
 }
 
 impl ShardPool {
@@ -101,8 +122,33 @@ impl ShardPool {
         policy: Policy,
         fault: FaultPlan,
     ) -> ShardPool {
+        Self::with_fault_model(
+            shards,
+            workers_per_shard,
+            queue_depth,
+            policy,
+            FaultModel::from_plan(fault),
+            HealthPolicy::default(),
+        )
+    }
+
+    /// As [`ShardPool::new`] under a full [`FaultModel`]: each shard's
+    /// worker pool gets a decorrelated copy
+    /// ([`FaultModel::for_shard`]), and every batch outcome feeds the
+    /// shard's rolling health window — a shard whose window crosses
+    /// `health.fault_threshold` is quarantined out of dispatch, then
+    /// re-admitted through probation.
+    pub fn with_fault_model(
+        shards: usize,
+        workers_per_shard: usize,
+        queue_depth: usize,
+        policy: Policy,
+        fault: FaultModel,
+        health: HealthPolicy,
+    ) -> ShardPool {
         let shards = shards.max(1);
         let router = Arc::new(Router::new(policy, shards));
+        let health = Arc::new(HealthBoard::new(health, shards));
         let counters: Arc<Vec<ShardCounters>> =
             Arc::new((0..shards).map(|_| ShardCounters::default()).collect());
         let built = (0..shards)
@@ -112,8 +158,10 @@ impl ShardPool {
                 let (tx, rx) = sync_channel::<BatchJob>(2);
                 let router = Arc::clone(&router);
                 let counters = Arc::clone(&counters);
+                let health = Arc::clone(&health);
+                let fault = fault.for_shard(idx);
                 let handle = std::thread::spawn(move || {
-                    let mut pool = WorkerPool::with_fault(
+                    let mut pool = WorkerPool::with_fault_model(
                         workers_per_shard,
                         queue_depth,
                         Policy::LeastLoaded,
@@ -135,6 +183,8 @@ impl ShardPool {
                                 // reply sender: clients see a recv
                                 // error instead of a hung server.
                                 eprintln!("serve: shard {idx} dropped a batch: {e}");
+                                counters[idx].failed_batches.fetch_add(1, Ordering::Relaxed);
+                                health.record(idx, 1);
                                 router.complete(idx);
                                 continue;
                             }
@@ -155,6 +205,8 @@ impl ShardPool {
                                     "serve: shard {idx} dropped a batch: simulated service \
                                      time {simulated} != plan-cache {batch_stream_cycles}"
                                 );
+                                counters[idx].failed_batches.fetch_add(1, Ordering::Relaxed);
+                                health.record(idx, 1);
                                 router.complete(idx);
                                 continue;
                             }
@@ -171,6 +223,15 @@ impl ShardPool {
                         c.requests.fetch_add(batch_size as u64, Ordering::Relaxed);
                         c.rows.fetch_add(total_rows as u64, Ordering::Relaxed);
                         c.retries.fetch_add(out.retries as u64, Ordering::Relaxed);
+                        c.sdc_injected.fetch_add(out.sdc.injected as u64, Ordering::Relaxed);
+                        c.sdc_detected.fetch_add(out.sdc.detected as u64, Ordering::Relaxed);
+                        c.sdc_recovered.fetch_add(out.sdc.recovered as u64, Ordering::Relaxed);
+                        c.sdc_unresolved.fetch_add(out.sdc.unresolved as u64, Ordering::Relaxed);
+                        // A batch with detected-but-recovered SDCs still
+                        // counts against the shard's health window: the
+                        // hardware is flipping bits even if ABFT caught
+                        // them this time.
+                        health.record(idx, (out.sdc.detected + out.sdc.unresolved) as u64);
                         router.complete(idx);
                         let mut row0 = 0usize;
                         for part in &job.parts {
@@ -178,6 +239,7 @@ impl ShardPool {
                             row0 += part.rows;
                             let _ = part.reply.send(Response {
                                 id: part.id,
+                                status: ResponseStatus::Ok,
                                 y,
                                 shard: idx,
                                 batch_size,
@@ -191,29 +253,48 @@ impl ShardPool {
                 Shard { tx: Some(tx), handle: Some(handle) }
             })
             .collect();
-        ShardPool { shards: built, router, counters }
+        ShardPool { shards: built, router, counters, health }
     }
 
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
 
-    /// Route a batch to a shard (policy decides which) and enqueue it;
-    /// blocks when the chosen shard's mailbox is full.
+    /// The shared health board (quarantine state, for reports/tests).
+    pub fn health(&self) -> &HealthBoard {
+        &self.health
+    }
+
+    /// Route a batch to a healthy shard (policy decides which) and
+    /// enqueue it; blocks when the chosen shard's mailbox is full.
+    /// Quarantined shards are excluded — unless *every* shard is
+    /// quarantined, in which case the exclusion is void and a degraded
+    /// pool keeps serving.
     pub fn dispatch(&self, job: BatchJob) {
-        let s = self.router.dispatch();
+        self.health.tick();
+        let excluded = self.health.excluded();
+        let s = self.router.dispatch_excluding(&excluded);
         self.shards[s].tx.as_ref().expect("pool alive").send(job).expect("shard alive");
     }
 
-    /// Snapshot per-shard counters.
+    /// Snapshot per-shard counters, merged with the health board.
     pub fn snapshots(&self) -> Vec<ShardSnapshot> {
+        let quarantines = self.health.quarantine_counts();
         self.counters
             .iter()
-            .map(|c| ShardSnapshot {
+            .enumerate()
+            .map(|(i, c)| ShardSnapshot {
                 batches: c.batches.load(Ordering::Relaxed),
                 requests: c.requests.load(Ordering::Relaxed),
                 rows: c.rows.load(Ordering::Relaxed),
                 retries: c.retries.load(Ordering::Relaxed),
+                sdc_injected: c.sdc_injected.load(Ordering::Relaxed),
+                sdc_detected: c.sdc_detected.load(Ordering::Relaxed),
+                sdc_recovered: c.sdc_recovered.load(Ordering::Relaxed),
+                sdc_unresolved: c.sdc_unresolved.load(Ordering::Relaxed),
+                failed_batches: c.failed_batches.load(Ordering::Relaxed),
+                quarantines: quarantines[i],
+                health: self.health.state(i),
             })
             .collect()
     }
@@ -308,6 +389,42 @@ mod tests {
         for s in &snaps {
             assert_eq!(s.batches, 2, "round-robin splits 6 batches 2/2/2: {snaps:?}");
         }
+    }
+
+    #[test]
+    fn failing_shard_is_quarantined_and_pool_keeps_serving() {
+        // One shard, one worker that always dies: every batch fails.
+        let policy = HealthPolicy {
+            window: 4,
+            fault_threshold: 3,
+            quarantine_batches: 4,
+            probation_batches: 2,
+        };
+        let pool = ShardPool::with_fault_model(
+            1,
+            1,
+            4,
+            Policy::RoundRobin,
+            FaultModel::from_plan(FaultPlan::always(0)),
+            policy,
+        );
+        let cache = PlanCache::new(4);
+        for _ in 0..3 {
+            let (tx, rx) = channel();
+            let (job, _) = one_request_job(2, tx, &cache);
+            pool.dispatch(job);
+            assert!(rx.recv().is_err(), "dropped batch closes the reply channel");
+        }
+        let snap = pool.snapshots()[0];
+        assert_eq!(snap.failed_batches, 3);
+        assert_eq!(snap.quarantines, 1);
+        assert!(matches!(snap.health, ShardState::Quarantined { .. }), "health: {}", snap.health);
+        // The sole shard is quarantined, but exclusion of every shard is
+        // void: dispatch still routes (and the batch still fails).
+        let (tx, rx) = channel();
+        let (job, _) = one_request_job(2, tx, &cache);
+        pool.dispatch(job);
+        assert!(rx.recv().is_err());
     }
 
     #[test]

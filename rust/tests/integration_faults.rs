@@ -1,0 +1,132 @@
+//! Fault-tolerant serving end-to-end (ISSUE 6 acceptance): under
+//! saturating seeded SDC injection the served outputs must stay
+//! bit-exact with the clean solo oracle — every corruption detected by
+//! the ABFT checksums and recovered by trusted recomputation, zero left
+//! unresolved — while sustained faults drive the shard health state
+//! machine through quarantine without the pool ever refusing to serve.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::config::{NumericMode, RunConfig, ServeConfig};
+use skewsa::coordinator::{FaultModel, SdcTarget};
+use skewsa::pe::PipelineKind;
+use skewsa::serve::{recv_response, DeadlineClass, ResponseStatus, Server, ShardSnapshot};
+use skewsa::util::rng::Rng;
+use skewsa::workloads::mobilenet;
+use skewsa::workloads::serving::WeightStore;
+use std::sync::Arc;
+
+fn run_cfg() -> RunConfig {
+    let mut cfg = RunConfig::small();
+    cfg.rows = 16;
+    cfg.cols = 16;
+    cfg.in_fmt = FpFormat::BF16;
+    cfg.out_fmt = FpFormat::FP32;
+    cfg.verify_fraction = 0.0;
+    cfg
+}
+
+fn sum(shards: &[ShardSnapshot], f: fn(&ShardSnapshot) -> u64) -> u64 {
+    shards.iter().map(f).sum()
+}
+
+#[test]
+fn chaos_serving_stays_bit_exact_under_saturating_sdc_injection() {
+    // Every tile evaluation draws a flip (rate 1.0) across all three
+    // injection sites.  Recovery recomputations are trusted (no
+    // injection), so the outcome is deterministic: everything the
+    // checksums flag is recovered and the served bits match the clean
+    // solo reference exactly.
+    let cfg = run_cfg();
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..2],
+        FpFormat::BF16,
+        24, // 2 K-passes on the 16×16 array
+        16,
+    ));
+    let mut scfg = ServeConfig::small();
+    scfg.fault = FaultModel {
+        sdc_rate: 1.0,
+        targets: SdcTarget::ALL.to_vec(),
+        seed: 0xc4a05,
+        abft: true,
+        ..FaultModel::none()
+    };
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let mut rng = Rng::new(0x5dc);
+    let kinds = [PipelineKind::Skewed, PipelineKind::Baseline3b];
+    for i in 0..8 {
+        let model = i % 2;
+        let kind = kinds[i % 2];
+        let a = store.gen_activations(model, 3, &mut rng);
+        let rx = server.submit(model, kind, DeadlineClass::Interactive, a.clone());
+        let resp = recv_response(&rx, "chaos bit-exactness");
+        assert_eq!(resp.status, ResponseStatus::Ok, "request {i}");
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let want = store.solo_reference_bits(&cfg, model, kind, &a);
+        assert_eq!(got, want, "request {i}: SDC recovery changed served bits");
+    }
+    let stats = server.stats();
+    assert!(sum(&stats.shards, |s| s.sdc_injected) >= 8, "{stats:?}");
+    assert!(sum(&stats.shards, |s| s.sdc_detected) >= 1, "{stats:?}");
+    assert_eq!(
+        sum(&stats.shards, |s| s.sdc_detected),
+        sum(&stats.shards, |s| s.sdc_recovered),
+        "100% recall: every flagged block recomputed clean: {stats:?}"
+    );
+    assert_eq!(sum(&stats.shards, |s| s.sdc_unresolved), 0, "{stats:?}");
+    assert_eq!(sum(&stats.shards, |s| s.failed_batches), 0, "{stats:?}");
+}
+
+#[test]
+fn sustained_chaos_quarantines_shards_while_the_pool_keeps_serving() {
+    // An aggressive health policy under saturating output corruption:
+    // every batch records detected SDCs against its shard, so shards
+    // cross the fault threshold and are quarantined — but exclusion is
+    // void once every shard is out, and each response is still
+    // bit-exact.  Runs the *cycle-accurate* streaming path so the
+    // in-thread ABFT recovery is the one on trial.
+    let mut cfg = run_cfg();
+    cfg.rows = 8;
+    cfg.cols = 8;
+    cfg.mode = NumericMode::CycleAccurate;
+    let store = Arc::new(WeightStore::from_layers(
+        &mobilenet::layers()[..2],
+        FpFormat::BF16,
+        12,
+        8,
+    ));
+    let mut scfg = ServeConfig::small();
+    scfg.health_window = 4;
+    scfg.health_fault_threshold = 2;
+    scfg.quarantine_batches = 4;
+    scfg.probation_batches = 2;
+    scfg.fault = FaultModel {
+        sdc_rate: 1.0,
+        targets: vec![SdcTarget::Output],
+        seed: 0x9a7,
+        abft: true,
+        ..FaultModel::none()
+    };
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let mut rng = Rng::new(0xdead);
+    for i in 0..12 {
+        let model = i % 2;
+        let a = store.gen_activations(model, 2, &mut rng);
+        let rx = server.submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a.clone());
+        let resp = recv_response(&rx, "degraded-pool serving");
+        assert_eq!(resp.status, ResponseStatus::Ok, "request {i}");
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let want = store.solo_reference_bits(&cfg, model, PipelineKind::Skewed, &a);
+        assert_eq!(got, want, "request {i}: degraded pool changed served bits");
+    }
+    let stats = server.stats();
+    // 12 sequential batches over 2 shards: at least one shard saw >= 2
+    // faulty batches inside its 4-batch window and was quarantined.
+    assert!(
+        sum(&stats.shards, |s| s.quarantines) >= 1,
+        "sustained faults never tripped the health board: {stats:?}"
+    );
+    assert_eq!(sum(&stats.shards, |s| s.sdc_unresolved), 0, "{stats:?}");
+    assert_eq!(stats.submitted, 12);
+    assert_eq!(sum(&stats.shards, |s| s.requests), 12, "no request was dropped: {stats:?}");
+}

@@ -8,7 +8,7 @@ use skewsa::arith::format::FpFormat;
 use skewsa::config::{NumericMode, RunConfig, ServeConfig};
 use skewsa::coordinator::{FaultPlan, Policy};
 use skewsa::pe::PipelineKind;
-use skewsa::serve::{DeadlineClass, Server};
+use skewsa::serve::{recv_response, DeadlineClass, Server};
 use skewsa::util::rng::Rng;
 use skewsa::workloads::mobilenet;
 use skewsa::workloads::serving::WeightStore;
@@ -52,7 +52,7 @@ fn served_bit_exact_vs_coordinator_all_formats_and_kinds() {
             for model in 0..store.len() {
                 let a = store.gen_activations(model, 3, &mut rng);
                 let rx = server.submit(model, kind, DeadlineClass::Interactive, a.clone());
-                let resp = rx.recv().expect("served");
+                let resp = recv_response(&rx, "format/kind sweep");
                 let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
                 let want = solo_bits(&cfg, &store, model, kind, &a);
                 assert_eq!(got, want, "{} {kind} model {model}", fmt.name);
@@ -85,7 +85,7 @@ fn batched_requests_stay_bit_exact_per_member() {
     }
     let mut max_batch = 0usize;
     for (a, rx) in submitted {
-        let resp = rx.recv().expect("served");
+        let resp = recv_response(&rx, "batched member");
         max_batch = max_batch.max(resp.batch_size);
         let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
         let want = solo_bits(&cfg, &store, 0, PipelineKind::Skewed, &a);
@@ -116,7 +116,8 @@ fn cycle_accurate_serving_matches_oracle_serving() {
         for model in 0..store.len() {
             let a = store.gen_activations(model, 2, &mut rng);
             let rx = server.submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a);
-            out.push(rx.recv().unwrap().y.iter().map(|v| v.to_bits()).collect());
+            let resp = recv_response(&rx, "mode cross-check");
+            out.push(resp.y.iter().map(|v| v.to_bits()).collect());
         }
         out
     };
@@ -153,7 +154,7 @@ fn batched_cycle_accurate_serving_stays_bit_exact_per_member() {
     }
     let mut max_batch = 0usize;
     for (a, rx) in submitted {
-        let resp = rx.recv().expect("served");
+        let resp = recv_response(&rx, "cycle-accurate batched member");
         max_batch = max_batch.max(resp.batch_size);
         let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
         let want = solo_bits(&cfg, &store, 0, PipelineKind::Skewed, &a);
@@ -187,10 +188,8 @@ fn reported_service_time_pins_the_overlapped_timing_model() {
             for model in 0..store.len() {
                 let m = 3 + model;
                 let a = store.gen_activations(model, m, &mut rng);
-                let resp = server
-                    .submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a)
-                    .recv()
-                    .expect("served");
+                let rx = server.submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+                let resp = recv_response(&rx, "timing pin");
                 assert_eq!(resp.batch_size, 1, "quiet server: request runs alone");
                 let entry = store.get(model);
                 let shape = GemmShape::new(m, entry.k, entry.n);
@@ -238,7 +237,7 @@ fn round_robin_shards_split_sequential_batches_evenly() {
             if i % 3 == 0 { PipelineKind::Baseline3b } else { PipelineKind::Skewed };
         let a = store.gen_activations(i % 3, 2, &mut rng);
         // Sequential closed loop: every request runs as its own batch.
-        let resp = server.submit(i % 3, kind, class, a).recv().expect("served");
+        let resp = recv_response(&server.submit(i % 3, kind, class, a), "round-robin");
         assert_eq!(resp.batch_size, 1);
         assert!(resp.shard < 3);
     }
@@ -263,10 +262,8 @@ fn hot_shapes_hit_the_plan_cache() {
     for i in 0..5 {
         // Same model, same row count, sequential: one hot shape.
         let a = store.gen_activations(0, 4, &mut rng);
-        let resp = server
-            .submit(0, PipelineKind::Skewed, DeadlineClass::Interactive, a)
-            .recv()
-            .expect("served");
+        let rx = server.submit(0, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+        let resp = recv_response(&rx, "plan-cache hit");
         assert_eq!(resp.cache_hit, i > 0, "request {i}");
     }
     let stats = server.stats();
@@ -294,7 +291,7 @@ fn serving_survives_an_always_failing_worker_in_every_shard() {
     for i in 0..6 {
         let a = store.gen_activations(i % 2, 3, &mut rng);
         let rx = server.submit(i % 2, PipelineKind::Skewed, DeadlineClass::Interactive, a.clone());
-        let resp = rx.recv().expect("served despite faults");
+        let resp = recv_response(&rx, "served despite faults");
         assert!(resp.retries >= 1, "worker 0 always fails first: request {i}");
         let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
         let want = solo_bits(&cfg, &store, i % 2, PipelineKind::Skewed, &a);

@@ -1,0 +1,112 @@
+//! ABFT property suite: across every supported format × every
+//! registered pipeline organisation, a clean executor run must produce
+//! zero ABFT false positives (the tolerance covers legitimate
+//! reduced-precision deviation — including `deep3`, which shares the
+//! oracle semantics), while corrupting any N-block of the assembled
+//! result far above the tolerance must be detected and localized to
+//! exactly that block.
+
+use skewsa::arith::fma::ChainCfg;
+use skewsa::config::{NumericMode, RunConfig};
+use skewsa::coordinator::{abft_check, Executor};
+use skewsa::precision::chain_for;
+use skewsa::precision::error::max_finite_f64;
+use skewsa::sa::tile::{GemmShape, TilePlan};
+use skewsa::workloads::gemm::GemmData;
+use skewsa::{FpFormat, PipelineKind};
+use std::sync::Arc;
+
+/// Run one clean GEMM through the real executor (no fault injection)
+/// under the format's canonical accumulation chain.
+fn clean_run(
+    fmt: FpFormat,
+    kind: PipelineKind,
+    shape: GemmShape,
+    seed: u64,
+) -> (ChainCfg, TilePlan, GemmData, Vec<f32>) {
+    let mut cfg = RunConfig::small();
+    cfg.in_fmt = fmt;
+    cfg.out_fmt = chain_for(fmt).out_fmt;
+    cfg.verify_fraction = 0.0;
+    cfg.mode = NumericMode::Oracle;
+    // Integer-valued operands are exact in every format down to
+    // FP8-E5M2, so the sweep exercises the checker's tolerance rather
+    // than quantization noise.
+    let data = GemmData::integer_valued(shape, fmt, seed);
+    let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+    let chain = cfg.chain();
+    let ex = Executor::new(cfg, kind);
+    let out = ex.run(&Arc::new(data.clone()), &plan);
+    (chain, plan, data, out.y)
+}
+
+/// A corruption far above any clean tolerance, encoded the way the
+/// executor stores output words (an `out_fmt` bit pattern in the f32
+/// container; a genuine f32 when the accumulator is FP32).
+fn loud_word(chain: &ChainCfg) -> f32 {
+    f32::from_bits(chain.out_fmt.from_f64(0.5 * max_finite_f64(chain.out_fmt)) as u32)
+}
+
+#[test]
+fn clean_runs_never_false_positive_across_formats_and_kinds() {
+    // Shape 1: single K-pass — the checker never declines, so every
+    // format (FP16/FP8 accumulators included) gets a real verdict.
+    // Shape 2: 3 K-passes × 2 N-blocks — the multi-pass merge path.
+    for shape in [GemmShape::new(6, 8, 12), GemmShape::new(6, 20, 12)] {
+        for fmt in FpFormat::ALL {
+            for kind in PipelineKind::ALL {
+                let seed = 0xab ^ ((fmt.width() as u64) << 8) ^ shape.k as u64;
+                let (chain, plan, data, y) = clean_run(fmt, kind, shape, seed);
+                let rep = abft_check(&chain, &plan, &data, &y);
+                assert!(
+                    rep.clean(),
+                    "{} {kind} K={}: clean run raised a false positive {rep:?}",
+                    fmt.name,
+                    shape.k
+                );
+                if rep.skipped {
+                    // Only the non-FP32-accumulator multi-pass combos
+                    // may decline — never the single-pass shape.
+                    assert!(plan.k_tiles() > 1, "{} {kind} declined a single pass", fmt.name);
+                } else if rep.cols_checked > 0 {
+                    assert!(
+                        rep.max_ratio < 1.0,
+                        "{} {kind}: clean margin ratio {}",
+                        fmt.name,
+                        rep.max_ratio
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn above_tolerance_corruption_is_detected_and_localized() {
+    let shape = GemmShape::new(6, 8, 12); // single pass: no format declines
+    for fmt in FpFormat::ALL {
+        for kind in PipelineKind::ALL {
+            let (chain, plan, data, mut y) = clean_run(fmt, kind, shape, 0x77);
+            let n_blocks = shape.n.div_ceil(plan.cols);
+            assert!(n_blocks >= 2, "sweep must cover multi-block localization");
+            for blk in 0..n_blocks {
+                // Corrupt one word of this block (row 0, first column of
+                // the block) far above the clean band, check, restore.
+                let g = blk * plan.cols;
+                let old = y[g];
+                y[g] = loud_word(&chain);
+                let rep = abft_check(&chain, &plan, &data, &y);
+                assert_eq!(
+                    rep.suspect_blocks,
+                    vec![blk],
+                    "{} {kind}: corruption in block {blk} mislocalized: {rep:?}",
+                    fmt.name
+                );
+                y[g] = old;
+            }
+            // And the restored result is clean again (the harness did
+            // not perturb neighbouring words).
+            assert!(abft_check(&chain, &plan, &data, &y).clean());
+        }
+    }
+}
