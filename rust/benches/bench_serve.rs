@@ -98,7 +98,7 @@ fn main() {
     let load = run_closed_loop(&server, &spec);
     let stats = server.stats();
     assert_eq!(load.completed, total_requests, "every request must be served");
-    let rep = report::serve_summary(&load, &stats);
+    let rep = report::serve_summary(&load, &server.metrics());
     print!("{}", rep.render());
 
     // --- sequential per-request Coordinator baseline ---------------------
@@ -237,5 +237,47 @@ fn main() {
     match append_json_run(&path, &fault_entry) {
         Ok(()) => println!("bench: chaos trajectory appended to {}", path.display()),
         Err(e) => eprintln!("bench: could not append chaos trajectory: {e}"),
+    }
+
+    // --- observability-overhead tier --------------------------------------
+    // The same fleet with request tracing fully on (live spans + sink)
+    // vs off (inert spans; metrics registry always on).  Tracing is a
+    // few atomic stores per phase and one mutex push per finished span,
+    // so it must stay effectively free: the smoke gate fails the build
+    // when the measured throughput tax exceeds 3%.  Best-of-N per mode
+    // to keep scheduler noise out of the comparison.
+    let reps = if smoke { 3 } else { 2 };
+    let best_rps = |mk_obs: fn() -> skewsa::obs::Obs| -> f64 {
+        let mut best = 0.0f64;
+        for _ in 0..reps {
+            let server = Server::start_obs(&cfg, &scfg, Arc::clone(&store), mk_obs());
+            let load = run_closed_loop(&server, &spec);
+            assert_eq!(load.completed, total_requests, "obs tier must serve everything");
+            if let Some(sink) = &server.obs().sink {
+                assert_eq!(sink.spans().len(), total_requests, "one closed span per request");
+            }
+            best = best.max(load.latency.throughput_rps);
+        }
+        best
+    };
+    let rps_plain = best_rps(skewsa::obs::Obs::new);
+    let rps_traced = best_rps(skewsa::obs::Obs::with_tracing);
+    let obs_overhead_pct = (1.0 - rps_traced / rps_plain.max(1e-9)) * 100.0;
+    println!(
+        "bench: obs overhead        {obs_overhead_pct:>9.2}% \
+         (traced {rps_traced:.1} vs plain {rps_plain:.1} req/s, best of {reps})"
+    );
+    let obs_entry = format!(
+        "  {{\"bench\": \"serve_obs\", \"unix_time\": {ts}, \"smoke\": {smoke}, \
+         \"requests\": {total_requests}, \"rps_traced\": {rps_traced:.2}, \
+         \"rps_plain\": {rps_plain:.2}, \"obs_overhead_pct\": {obs_overhead_pct:.2}}}"
+    );
+    match append_json_run(&path, &obs_entry) {
+        Ok(()) => println!("bench: obs trajectory appended to {}", path.display()),
+        Err(e) => eprintln!("bench: could not append obs trajectory: {e}"),
+    }
+    if smoke && obs_overhead_pct > 3.0 {
+        eprintln!("OBS OVERHEAD GATE FAILED: {obs_overhead_pct:.2}% > 3% throughput tax");
+        std::process::exit(1);
     }
 }

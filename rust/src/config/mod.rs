@@ -230,6 +230,13 @@ pub struct ServeConfig {
     /// Fault model injected into every shard's worker pool
     /// (decorrelated per shard via [`FaultModel::for_shard`]).
     pub fault: FaultModel,
+    /// Write per-request trace spans + events as JSON lines here after
+    /// the run (DESIGN.md §17); also enables span collection.  `None`
+    /// keeps tracing off (spans are no-ops).
+    pub trace_out: Option<String>,
+    /// Write the unified metrics-registry snapshot as JSON here after
+    /// the run.
+    pub metrics_out: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -250,6 +257,8 @@ impl Default for ServeConfig {
             quarantine_batches: 16,
             probation_batches: 8,
             fault: FaultModel::none(),
+            trace_out: None,
+            metrics_out: None,
         }
     }
 }
@@ -328,6 +337,12 @@ impl ServeConfig {
         if let Some(v) = j.get("fault").and_then(Json::as_str) {
             self.fault = FaultModel::parse(v)?;
         }
+        if let Some(v) = j.get("trace_out").and_then(Json::as_str) {
+            self.trace_out = Some(v.to_string());
+        }
+        if let Some(v) = j.get("metrics_out").and_then(Json::as_str) {
+            self.metrics_out = Some(v.to_string());
+        }
         Ok(())
     }
 
@@ -355,6 +370,12 @@ impl ServeConfig {
         }
         if let Some(v) = a.get("fault") {
             self.fault = FaultModel::parse(v)?;
+        }
+        if let Some(v) = a.get("trace-out") {
+            self.trace_out = Some(v.to_string());
+        }
+        if let Some(v) = a.get("metrics-out") {
+            self.metrics_out = Some(v.to_string());
         }
         Ok(())
     }
@@ -435,6 +456,16 @@ mod tests {
         s.apply_args(&a).unwrap();
         assert_eq!(s.shards, 1);
         assert_eq!(s.shard_policy, Policy::LeastLoaded);
+        // Observability sinks: off by default, settable via JSON and CLI.
+        assert_eq!(s.trace_out, None);
+        let obs = Json::parse(r#"{"trace_out": "t.jsonl", "metrics_out": "m.json"}"#).unwrap();
+        s.apply_json(&obs).unwrap();
+        assert_eq!(s.trace_out.as_deref(), Some("t.jsonl"));
+        assert_eq!(s.metrics_out.as_deref(), Some("m.json"));
+        let cli2 = Cli::new("t", "t").opt("trace-out", "", None).opt("metrics-out", "", None);
+        let a = cli2.parse(&["--trace-out=t2.jsonl".into()]).unwrap();
+        s.apply_args(&a).unwrap();
+        assert_eq!(s.trace_out.as_deref(), Some("t2.jsonl"));
         // A typo'd policy is a hard error, not a silent default.
         let bad = cli.parse(&["--shard-policy=least".into()]).unwrap();
         assert!(s.apply_args(&bad).is_err());

@@ -304,37 +304,42 @@ impl WorkerPool {
         self.runs += 1;
         let per_worker = state.per_worker.iter().map(|(&w, &n)| (w, n)).collect();
         let mut y = state.into_result();
+        let mut recovery_cycles = 0;
         if self.fault.abft {
             let ctx = RunCtx { chain, mode, kind, data, plan };
-            self.abft_recover(&ctx, &mut y, &mut worker_of, &mut sdc)?;
+            recovery_cycles = self.abft_recover(&ctx, &mut y, &mut worker_of, &mut sdc)?;
         }
-        Ok(ExecOutcome { y, per_worker, retries, stream_cycles: None, sdc })
+        Ok(ExecOutcome { y, per_worker, retries, stream_cycles: None, sdc, recovery_cycles })
     }
 
     /// Post-assembly ABFT: verify the checksums, recompute suspect
     /// N-blocks on different workers, re-verify.  Recomputations skip
     /// the fault draw (a trusted recovery path — anything they produce
     /// is still re-checked by the next round), so the loop converges at
-    /// any injection rate.
+    /// any injection rate.  Returns the array cycles the recomputations
+    /// cost (each re-run tile pays its full serialized preload + stream
+    /// — recovery has no next tile to hide a fill under), the span
+    /// tracer's `recovery` attribution bucket.
     fn abft_recover(
         &mut self,
         ctx: &RunCtx<'_>,
         y: &mut [f32],
         worker_of: &mut [usize],
         sdc: &mut SdcStats,
-    ) -> Result<(), String> {
+    ) -> Result<u64, String> {
         let mut report = abft_check(&ctx.chain, ctx.plan, ctx.data, y);
         let mut rounds = 0;
+        let mut recovery_cycles = 0u64;
         loop {
             let suspects = suspect_set(&report, ctx.plan);
             if suspects.is_empty() || rounds >= MAX_ABFT_ROUNDS {
                 sdc.unresolved = suspects.len();
-                return Ok(());
+                return Ok(recovery_cycles);
             }
             rounds += 1;
             sdc.detected += suspects.len();
             for &blk in &suspects {
-                self.recompute_block(ctx, blk, y, worker_of)?;
+                recovery_cycles += self.recompute_block(ctx, blk, y, worker_of)?;
             }
             report = abft_check(&ctx.chain, ctx.plan, ctx.data, y);
             let after = suspect_set(&report, ctx.plan);
@@ -346,18 +351,26 @@ impl WorkerPool {
     /// through the pool, excluding the worker whose result the block's
     /// corruption was assembled from, then re-fold in pass order — the
     /// same f32 addition sequence as a clean assembly, so the recovered
-    /// block is bit-identical to a fault-free run.
+    /// block is bit-identical to a fault-free run.  Returns the
+    /// recomputed tiles' serialized array-cycle cost.
     fn recompute_block(
         &mut self,
         ctx: &RunCtx<'_>,
         blk: usize,
         y: &mut [f32],
         worker_of: &mut [usize],
-    ) -> Result<(), String> {
+    ) -> Result<u64, String> {
         let sched = Scheduler::new(ctx.plan);
         let jobs: Vec<TileJob> =
             sched.jobs().iter().copied().filter(|j| j.n_block == blk).collect();
         assert!(!jobs.is_empty(), "suspect block {blk} has no jobs");
+        let cycles: u64 = jobs
+            .iter()
+            .map(|j| {
+                let s = ctx.plan.tile_schedule(ctx.kind, &j.tile);
+                s.preload_cycles() + s.total_cycles()
+            })
+            .sum();
         zero_block(y, ctx.data, &jobs[0].tile);
         let mut results: Vec<Option<Vec<f32>>> = vec![None; jobs.len()];
         let mut attempts_left = vec![Executor::MAX_RETRIES + 1; jobs.len()];
@@ -408,7 +421,7 @@ impl WorkerPool {
         for (i, job) in jobs.iter().enumerate() {
             fold_part(y, ctx.data, &job.tile, results[i].as_ref().expect("collected"));
         }
-        Ok(())
+        Ok(cycles)
     }
 
     /// The cycle-accurate path: stream the whole plan through the
@@ -450,12 +463,13 @@ impl WorkerPool {
         }
         self.runs += 1;
         let mut y = sim.result_f32().to_vec();
+        let mut recovery_cycles = 0;
         if self.fault.abft {
             // No worker pool involved: recompute suspect blocks
             // in-thread via the oracle tile path, which is bit-identical
             // to the streaming lanes by the pinned cycle≡oracle
             // equivalence.
-            abft_recover_local(&chain, kind, data, plan, &mut y, &mut sdc);
+            recovery_cycles = abft_recover_local(&chain, kind, data, plan, &mut y, &mut sdc);
         }
         Ok(ExecOutcome {
             y,
@@ -463,6 +477,7 @@ impl WorkerPool {
             retries: 0,
             stream_cycles: Some(report.cycles),
             sdc,
+            recovery_cycles,
         })
     }
 
@@ -514,7 +529,10 @@ fn fold_part(y: &mut [f32], data: &GemmData, tile: &Tile, part: &[f32]) {
 
 /// In-thread ABFT recovery for the streaming path: recompute suspect
 /// blocks through the oracle tile evaluator (injection-free) and
-/// re-verify, up to [`MAX_ABFT_ROUNDS`].
+/// re-verify, up to [`MAX_ABFT_ROUNDS`].  Returns the serialized
+/// array-cycle cost of the recomputed tiles (what the recompute would
+/// cost the array that produced the corrupt block — the oracle
+/// evaluator is bit-identical but cycle-free).
 fn abft_recover_local(
     chain: &ChainCfg,
     kind: PipelineKind,
@@ -522,15 +540,16 @@ fn abft_recover_local(
     plan: &TilePlan,
     y: &mut [f32],
     sdc: &mut SdcStats,
-) {
+) -> u64 {
     let sched = Scheduler::new(plan);
     let mut report = abft_check(chain, plan, data, y);
     let mut rounds = 0;
+    let mut recovery_cycles = 0u64;
     loop {
         let suspects = suspect_set(&report, plan);
         if suspects.is_empty() || rounds >= MAX_ABFT_ROUNDS {
             sdc.unresolved = suspects.len();
-            return;
+            return recovery_cycles;
         }
         rounds += 1;
         sdc.detected += suspects.len();
@@ -540,6 +559,8 @@ fn abft_recover_local(
             for job in jobs {
                 let part = eval_tile(chain, NumericMode::Oracle, kind, data, job);
                 fold_part(y, data, &job.tile, &part);
+                let s = plan.tile_schedule(kind, &job.tile);
+                recovery_cycles += s.preload_cycles() + s.total_cycles();
             }
         }
         report = abft_check(chain, plan, data, y);
@@ -588,6 +609,11 @@ pub struct ExecOutcome {
     /// Silent-corruption lifecycle counters for this run (all zero on a
     /// healthy pool).
     pub sdc: SdcStats,
+    /// Array cycles spent recomputing ABFT-suspect blocks (serialized
+    /// per-tile preload + stream per recomputed tile; zero when ABFT is
+    /// off or nothing fired) — the `recovery` bucket of the trace
+    /// spans' [`crate::obs::CycleAttribution`].
+    pub recovery_cycles: u64,
 }
 
 /// Evaluate one tile job's numerics (pure function — runs on workers).
@@ -897,6 +923,8 @@ mod tests {
             assert!(out.sdc.detected >= 1, "{target:?}: {:?}", out.sdc);
             assert_eq!(out.sdc.recovered, out.sdc.detected, "{target:?}: {:?}", out.sdc);
             assert_eq!(out.sdc.unresolved, 0, "{target:?}: {:?}", out.sdc);
+            assert!(out.recovery_cycles > 0, "{target:?}: recompute must cost cycles");
+            assert_eq!(clean.recovery_cycles, 0, "clean run recomputes nothing");
             check_against_f64(&out, &data);
         }
     }
@@ -940,6 +968,7 @@ mod tests {
             assert_eq!(cb, ob, "{target:?}: recovered bits differ from clean");
             assert_eq!(out.sdc.injected, 6, "{target:?}: every tile draws a flip");
             assert!(out.sdc.detected >= 1 && out.sdc.unresolved == 0, "{target:?}: {:?}", out.sdc);
+            assert!(out.recovery_cycles > 0, "{target:?}: recompute must cost cycles");
             check_against_f64(&out, &data);
         }
     }

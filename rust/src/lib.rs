@@ -41,6 +41,10 @@
 //! * [`runtime`] — PJRT wrapper that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them on the CPU
 //!   client; the golden reference for end-to-end numerics.
+//! * [`obs`] — observability: the unified metrics registry (counters,
+//!   gauges, bounded log2 histograms) and per-request trace spans that
+//!   attribute every wall-clock microsecond and every array cycle of a
+//!   served request.
 //! * [`report`] — emitters that regenerate every table and figure of the
 //!   paper's evaluation section.
 //! * [`util`] — std-only substrates (deterministic RNG, mini-JSON, CLI
@@ -50,6 +54,7 @@ pub mod arith;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod obs;
 pub mod pe;
 pub mod precision;
 pub mod report;

@@ -17,6 +17,7 @@
 //! skewsa precision   # mixed-precision planner: budget -> per-layer plan
 //! skewsa stream      # multi-tile layer latency: serialized vs overlapped
 //! skewsa viz         # pipeline interleaving trace (Figs. 4/6)
+//! skewsa trace FILE  # summarize a --trace-out span file (p50/p99 path)
 //! ```
 //!
 //! `--pipeline` selects any registered organisation everywhere it
@@ -73,6 +74,8 @@ fn cli() -> Cli {
     .opt("n-cap", "precision: sampled columns per layer", Some("16"))
     .opt("fault", "serve/faults: fault model, e.g. sdc_rate=1e-3,seed=7", None)
     .opt("shed-watermark", "serve/faults: queue depth that sheds batch requests", None)
+    .opt("trace-out", "serve/faults: write request trace spans as JSON lines", None)
+    .opt("metrics-out", "serve/faults: write the metrics snapshot as JSON", None)
     .flag("smoke", "faults: small deterministic chaos run (CI)")
     .flag("quiet", "suppress per-layer rows")
 }
@@ -142,6 +145,10 @@ fn main() {
         }
         "viz" => {
             viz(&cfg);
+            return;
+        }
+        "trace" => {
+            trace_cmd(&args);
             return;
         }
         other => {
@@ -301,14 +308,79 @@ fn serve(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         scfg.shard_policy,
         scfg.batch_window_us,
     );
-    let server = Server::start(cfg, &scfg, store);
+    let server = Server::start_obs(cfg, &scfg, store, obs_for(&scfg));
     let load = run_closed_loop(&server, &spec);
-    let stats = server.stats();
-    let rep = report::serve_summary(&load, &stats);
+    let snap = server.metrics();
+    let rep = report::serve_summary(&load, &snap);
     print!("{}", rep.render());
     if let Some(path) = args.get("csv") {
         std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
         eprintln!("wrote {path}");
+    }
+    write_obs_outputs(&server, &scfg, &snap);
+}
+
+/// The observability handle a serve/faults run starts under: tracing on
+/// exactly when `--trace-out` asks for the spans.
+fn obs_for(scfg: &skewsa::config::ServeConfig) -> skewsa::obs::Obs {
+    if scfg.trace_out.is_some() {
+        skewsa::obs::Obs::with_tracing()
+    } else {
+        skewsa::obs::Obs::new()
+    }
+}
+
+/// Write the `--trace-out` / `--metrics-out` artifacts after a
+/// serve/faults run: closed spans + health events as JSON lines, and
+/// the unified metrics snapshot as JSON.
+fn write_obs_outputs(
+    server: &skewsa::serve::Server,
+    scfg: &skewsa::config::ServeConfig,
+    snap: &skewsa::obs::MetricsSnapshot,
+) {
+    if let Some(path) = &scfg.trace_out {
+        let sink = server.obs().sink.as_ref().expect("tracing is on when trace_out is set");
+        std::fs::write(path, sink.to_jsonl()).expect("writing trace");
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = &scfg.metrics_out {
+        std::fs::write(path, snap.to_json().to_string_pretty()).expect("writing metrics");
+        eprintln!("wrote {path}");
+    }
+}
+
+/// Summarize a `--trace-out` JSON-lines file: the p50/p99 critical-path
+/// breakdown across wall-clock phases and array-cycle buckets, plus any
+/// health-transition events the run recorded.
+fn trace_cmd(args: &skewsa::util::cli::Args) {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: skewsa trace <spans.jsonl>   (written by serve/faults --trace-out)");
+        std::process::exit(2);
+    };
+    let parsed = std::fs::read_to_string(path)
+        .map_err(|e| format!("{path}: {e}"))
+        .and_then(|text| skewsa::obs::parse_jsonl(&text).map_err(|e| format!("{path}: {e}")));
+    let (spans, events) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let rep = report::trace_summary(&spans);
+    print!("{}", rep.render());
+    if !events.is_empty() {
+        println!("events:");
+        for e in &events {
+            println!(
+                "  t+{:>12}ns  shard {}  {}:{}  (tick {})",
+                e.t_ns, e.shard, e.kind, e.label, e.clock
+            );
+        }
+    }
+    if let Some(csv) = args.get("csv") {
+        std::fs::write(csv, rep.table.to_csv()).expect("writing CSV");
+        eprintln!("wrote {csv}");
     }
 }
 
@@ -371,16 +443,19 @@ fn faults(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         scfg.workers_per_shard,
         scfg.fault,
     );
-    let server = Server::start(cfg, &scfg, store);
+    let server = Server::start_obs(cfg, &scfg, store, obs_for(&scfg));
     let load = run_closed_loop(&server, &spec);
-    let stats = server.stats();
-    let rep = report::faults_summary(&load, &stats);
+    let snap = server.metrics();
+    let rep = report::faults_summary(&load, &snap);
     print!("{}", rep.render());
     if let Some(path) = args.get("csv") {
         std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
         eprintln!("wrote {path}");
     }
-    let unresolved: u64 = stats.shards.iter().map(|s| s.sdc_unresolved).sum();
+    write_obs_outputs(&server, &scfg, &snap);
+    let shards = snap.gauge("serve.shards") as usize;
+    let unresolved: u64 =
+        (0..shards).map(|i| snap.counter(&format!("shard.{i}.sdc_unresolved"))).sum();
     if unresolved > 0 {
         eprintln!("CHAOS RUN FAILED: {unresolved} corrupted block(s) left unresolved");
         std::process::exit(1);

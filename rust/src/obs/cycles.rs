@@ -1,0 +1,110 @@
+//! Cycle-domain attribution: where a batch's array cycles went.
+//!
+//! The serve layer quotes one service-time number per batch
+//! ([`crate::serve::CachedPlan::stream_cycles`]); this struct carries
+//! its decomposition — the same taxonomy [`crate::timing::LayerTiming`]
+//! computes — through a trace span, plus the ABFT recovery recompute
+//! cycles the clean model does not know about:
+//!
+//! ```text
+//! stream_total = exposed_preload + compute + drain      (clean service)
+//! total        = stream_total + recovery                (with re-runs)
+//! ```
+//!
+//! `compute` here is the *drain-free* streaming span
+//! (`LayerTiming::compute_cycles − drain_cycles`), so the three clean
+//! legs are disjoint and sum exactly to the layer total — the equality
+//! the acceptance tests pin against `layer_timing` and the streaming
+//! cycle simulator for every batch.
+
+use crate::timing::LayerTiming;
+use crate::util::mini_json::Json;
+
+/// Disjoint cycle legs of one executed batch (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CycleAttribution {
+    /// Non-overlapped weight-preload stall cycles.
+    pub exposed_preload: u64,
+    /// Streaming cycles with live West-edge injections (drain excluded).
+    pub compute: u64,
+    /// Pipeline drain cycles (wavefront past the last injection).
+    pub drain: u64,
+    /// ABFT recovery recompute cycles (suspect-block re-runs).
+    pub recovery: u64,
+}
+
+impl CycleAttribution {
+    /// The clean service-time identity: equals
+    /// [`LayerTiming::cycles`] / the streaming simulator's total.
+    pub fn stream_total(&self) -> u64 {
+        self.exposed_preload + self.compute + self.drain
+    }
+
+    /// All cycles attributed to the batch, recovery included.
+    pub fn total(&self) -> u64 {
+        self.stream_total() + self.recovery
+    }
+
+    /// Decompose a clean layer timing (recovery starts at zero).
+    pub fn from_layer_timing(lt: &LayerTiming) -> CycleAttribution {
+        CycleAttribution {
+            exposed_preload: lt.exposed_preload,
+            compute: lt.compute_cycles - lt.drain_cycles,
+            drain: lt.drain_cycles,
+            recovery: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("exposed_preload", Json::Num(self.exposed_preload as f64))
+            .set("compute", Json::Num(self.compute as f64))
+            .set("drain", Json::Num(self.drain as f64))
+            .set("recovery", Json::Num(self.recovery as f64))
+    }
+
+    pub fn from_json(j: &Json) -> Result<CycleAttribution, String> {
+        let num = |key: &str| -> Result<u64, String> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .map(|v| v as u64)
+                .ok_or_else(|| format!("cycles: bad `{key}`"))
+        };
+        Ok(CycleAttribution {
+            exposed_preload: num("exposed_preload")?,
+            compute: num("compute")?,
+            drain: num("drain")?,
+            recovery: num("recovery")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::PipelineKind;
+    use crate::sa::tile::{GemmShape, TilePlan};
+    use crate::timing::{layer_timing, TimingConfig};
+
+    #[test]
+    fn decomposition_matches_layer_timing_identity() {
+        let cfg = TimingConfig { rows: 8, cols: 8, clock_ghz: 1.0, double_buffer: true };
+        let plan = TilePlan::new(GemmShape::new(32, 16, 16), 8, 8);
+        for kind in PipelineKind::ALL {
+            let lt = layer_timing(&cfg, kind, &plan);
+            let attr = CycleAttribution::from_layer_timing(&lt);
+            assert_eq!(attr.stream_total(), lt.cycles, "{kind}");
+            assert_eq!(attr.exposed_preload, lt.exposed_preload, "{kind}");
+            assert_eq!(attr.compute + attr.drain, lt.compute_cycles, "{kind}");
+            assert_eq!(attr.total(), lt.cycles, "{kind}: clean run has no recovery");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let a = CycleAttribution { exposed_preload: 8, compute: 90, drain: 30, recovery: 44 };
+        let j = Json::parse(&a.to_json().to_string_compact()).unwrap();
+        assert_eq!(CycleAttribution::from_json(&j).unwrap(), a);
+        assert_eq!(a.total(), 8 + 90 + 30 + 44);
+    }
+}

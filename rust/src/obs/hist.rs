@@ -1,0 +1,262 @@
+//! Bounded log2-bucket histogram: the registry's latency store.
+//!
+//! A [`Log2Histogram`] holds `u64` samples (nanoseconds, cycles, bytes —
+//! any non-negative magnitude) in a **fixed** array of buckets, so memory
+//! is bounded no matter how many samples a closed-loop run records — the
+//! fix for `LatencyRecorder`'s old unbounded `Mutex<Vec<u64>>`.
+//!
+//! Bucket layout (HDR-style): values below `2^SUB_BITS` get one bucket
+//! each (exact); larger values are split per power of two into
+//! `2^SUB_BITS` linear sub-buckets.  A bucket holding value `v ≥ 32`
+//! spans `2^(e-SUB_BITS)` values where `e = ⌊log2 v⌋`, so any quantile
+//! read from the histogram is off by **less than one bucket width**:
+//! a relative error below [`REL_QUANTILE_ERROR`] `= 2^-SUB_BITS =
+//! 3.125%` (and *zero* for values `< 32`).  `min`, `max`, `count` and
+//! `sum` (hence the mean) are tracked exactly.
+//!
+//! Recording is a handful of relaxed atomic adds — no lock, safe from
+//! any thread — which is what keeps the serve-path instrumentation
+//! overhead inside the bench gate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linear sub-buckets per power of two (as a bit count).
+pub const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave (`2^SUB_BITS`).
+pub const SUBS: usize = 1 << SUB_BITS;
+/// Total bucket count: `SUBS` exact buckets for `v < SUBS`, then
+/// `SUBS` per octave for exponents `SUB_BITS..=63`.
+pub const BUCKETS: usize = SUBS + (64 - SUB_BITS as usize) * SUBS;
+
+/// Documented worst-case relative quantile error (one bucket width).
+pub const REL_QUANTILE_ERROR: f64 = 1.0 / SUBS as f64;
+
+/// Bucket index for a value (total order preserving).
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS as u64 {
+        v as usize
+    } else {
+        let e = 63 - v.leading_zeros(); // e ≥ SUB_BITS
+        let sub = ((v >> (e - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        (e - SUB_BITS + 1) as usize * SUBS + sub
+    }
+}
+
+/// Inclusive lower bound of a bucket (its reported representative).
+pub fn bucket_lower_bound(i: usize) -> u64 {
+    if i < SUBS {
+        i as u64
+    } else {
+        let e = (i / SUBS) as u32 + SUB_BITS - 1;
+        let sub = (i % SUBS) as u64;
+        (SUBS as u64 + sub) << (e - SUB_BITS)
+    }
+}
+
+/// Fixed-size, lock-free histogram of `u64` samples.
+pub struct Log2Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Log2Histogram {
+    pub fn new() -> Log2Histogram {
+        Log2Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (relaxed atomics; callable from any thread).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the bucket counts and exact aggregates.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Immutable view of a [`Log2Histogram`] at snapshot time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    /// Exact sum of all recorded samples.
+    pub sum: u64,
+    /// Exact minimum recorded sample (`u64::MAX` when empty).
+    pub min: u64,
+    /// Exact maximum recorded sample.
+    pub max: u64,
+    /// Per-bucket counts (see [`bucket_lower_bound`] for edges).
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// Exact mean of the recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile, `0 < p ≤ 100`.  Returns the lower bound
+    /// of the bucket holding the rank-selected sample, clamped into
+    /// `[min, max]` — within [`REL_QUANTILE_ERROR`] of the true sample
+    /// (exact for samples `< 32`, and `p = 100` returns `max` exactly).
+    ///
+    /// # Panics
+    /// On an out-of-domain `p` (matches
+    /// [`crate::serve::percentile_ns`]'s contract).
+    pub fn quantile(&self, p: f64) -> u64 {
+        assert!(p.is_finite() && p > 0.0 && p <= 100.0, "quantile {p} outside (0, 100]");
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        if rank == self.count {
+            // The rank-selected sample is the maximum, which is tracked
+            // exactly — don't round it down to its bucket edge.
+            return self.max;
+        }
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_lower_bound(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..SUBS as u64 {
+            assert_eq!(bucket_lower_bound(bucket_index(v)), v);
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounded() {
+        let mut prev = 0usize;
+        let mut v = 1u64;
+        while v < u64::MAX / 2 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index not monotone at {v}");
+            assert!(i < BUCKETS, "index {i} out of range at {v}");
+            assert!(bucket_lower_bound(i) <= v, "lower bound above value at {v}");
+            prev = i;
+            v = v.wrapping_mul(3).wrapping_add(7);
+        }
+        assert!(bucket_index(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn lower_bound_inverts_index_on_bucket_edges() {
+        for i in 0..BUCKETS {
+            let lo = bucket_lower_bound(i);
+            assert_eq!(bucket_index(lo), i, "bucket {i} lower bound {lo}");
+        }
+    }
+
+    #[test]
+    fn quantile_error_bound_at_1m_samples() {
+        // The satellite regression: 1M synthetic latency samples, every
+        // standard quantile within the documented relative error of the
+        // exact nearest-rank percentile.
+        let h = Log2Histogram::new();
+        let mut rng = Rng::new(0x0b5_1234);
+        let mut exact: Vec<u64> = Vec::with_capacity(1_000_000);
+        for _ in 0..1_000_000 {
+            // Log-uniform-ish latencies from ~1us to ~16ms in ns.
+            let e = 10 + (rng.next_u64() % 14);
+            let v = (1u64 << e) + rng.next_u64() % (1u64 << e);
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_unstable();
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 1_000_000);
+        for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let truth = crate::serve::percentile_ns(&exact, p);
+            let got = snap.quantile(p);
+            let err = (truth as f64 - got as f64).abs() / truth as f64;
+            assert!(
+                err <= REL_QUANTILE_ERROR,
+                "p{p}: got {got}, exact {truth}, err {err:.5}"
+            );
+        }
+        assert_eq!(snap.max, *exact.last().unwrap());
+        assert_eq!(snap.min, exact[0]);
+        assert_eq!(snap.quantile(100.0), snap.max);
+        let exact_mean = exact.iter().sum::<u64>() as f64 / exact.len() as f64;
+        assert!((snap.mean() - exact_mean).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let snap = Log2Histogram::new().snapshot();
+        assert_eq!(snap.quantile(50.0), 0);
+        assert_eq!(snap.mean(), 0.0);
+        assert_eq!(snap.count, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside (0, 100]")]
+    fn quantile_domain_is_enforced() {
+        Log2Histogram::new().snapshot().quantile(0.0);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        let h = std::sync::Arc::new(Log2Histogram::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = std::sync::Arc::clone(&h);
+                s.spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 40_000);
+        assert_eq!(h.snapshot().buckets.iter().sum::<u64>(), 40_000);
+    }
+}

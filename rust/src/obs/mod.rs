@@ -1,0 +1,72 @@
+//! Observability: unified metrics registry + per-request trace spans.
+//!
+//! Two halves (DESIGN.md §17):
+//!
+//! * **Metrics** — a lock-light [`MetricsRegistry`] of named counters,
+//!   gauges and bounded log2-bucket histograms ([`Log2Histogram`]).
+//!   The serve stack publishes its formerly scattered tallies (submit /
+//!   shed counts, shard fault counters, plan-cache hit/miss, ABFT
+//!   detected/recovered/unresolved, shard-health transitions) into one
+//!   registry whose [`MetricsRegistry::snapshot`] feeds the report
+//!   layer and the `--metrics-out` JSON dump.
+//!
+//! * **Tracing** — a [`TraceSpan`] opened per submitted request travels
+//!   with it through queue → batcher → plan cache → shard dispatch →
+//!   execution (+ ABFT recovery) → reply, recording wall-clock phase
+//!   durations that sum exactly to the request latency *and* the
+//!   cycle-domain attribution ([`CycleAttribution`]) of the producing
+//!   batch.  Closed spans land in a [`SpanSink`], are written as
+//!   JSON-lines via `--trace-out`, and `skewsa trace` renders the
+//!   p50/p99 critical-path breakdown.
+//!
+//! The [`Obs`] handle bundles both halves and is what `Server::start`
+//! variants thread through the stack; tracing is off (zero-cost spans)
+//! unless explicitly enabled.
+
+pub mod cycles;
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use cycles::CycleAttribution;
+pub use hist::{HistSnapshot, Log2Histogram, REL_QUANTILE_ERROR};
+pub use registry::{Counter, Gauge, Hist, MetricsRegistry, MetricsSnapshot};
+pub use span::{parse_jsonl, Phase, SpanRecord, SpanSink, SpanStatus, TraceEvent, TraceSpan};
+
+use std::sync::Arc;
+
+/// The observability handle a server threads through its stack: always
+/// a registry, optionally a span sink (tracing enabled).
+#[derive(Clone, Default)]
+pub struct Obs {
+    pub registry: Arc<MetricsRegistry>,
+    pub sink: Option<Arc<SpanSink>>,
+}
+
+impl Obs {
+    /// Metrics only; spans are inert (the default for `Server::start`).
+    pub fn new() -> Obs {
+        Obs::default()
+    }
+
+    /// Metrics + live request tracing.
+    pub fn with_tracing() -> Obs {
+        Obs { registry: Arc::new(MetricsRegistry::new()), sink: Some(Arc::new(SpanSink::new())) }
+    }
+
+    /// Open a span for a submitted request: live when tracing is on,
+    /// inert otherwise.
+    pub fn open_span(
+        &self,
+        id: u64,
+        model: usize,
+        kind: &str,
+        class: &str,
+        rows: usize,
+    ) -> TraceSpan {
+        match &self.sink {
+            Some(sink) => TraceSpan::open(sink, id, model, kind, class, rows),
+            None => TraceSpan::disabled(),
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Lock-light named-metric registry: counters, gauges, histograms.
+//!
+//! One [`MetricsRegistry`] per server absorbs the counters that used to
+//! live scattered across the serve stack (`ServerStats` submit/shed
+//! tallies, `ShardSnapshot` fault counts, plan-cache hit/miss, ABFT
+//! detected/recovered/unresolved) behind a single [`snapshot`] that the
+//! report layer renders and `skewsa serve --metrics-out` dumps as JSON.
+//!
+//! The locking discipline is the point: the registry's mutex is taken
+//! only to *register* a name (cold, once per metric) and to snapshot;
+//! the returned [`Counter`]/[`Gauge`]/[`Hist`] handles are `Arc`s over
+//! atomics, so the hot path — a shard thread bumping a counter per
+//! batch — is a relaxed atomic add with no shared lock.
+//!
+//! [`snapshot`]: MetricsRegistry::snapshot
+
+use super::hist::{HistSnapshot, Log2Histogram};
+use crate::util::mini_json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotone counter handle (cheap to clone; lock-free to bump).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Absorb an externally maintained monotone tally: raises the
+    /// counter to `v` if below (never lowers it), so mirroring a source
+    /// counter at snapshot time keeps registry snapshots monotone even
+    /// if the mirror races a concurrent reader.
+    pub fn absorb(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle (current size, state code, …).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram handle backed by a bounded [`Log2Histogram`].
+#[derive(Clone)]
+pub struct Hist(Arc<Log2Histogram>);
+
+impl Hist {
+    pub fn record(&self, v: u64) {
+        self.0.record(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count()
+    }
+}
+
+#[derive(Default)]
+struct Registered {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicU64>>,
+    hists: BTreeMap<String, Arc<Log2Histogram>>,
+}
+
+/// Named-metric registry; see the module docs for the locking story.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Registered>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Get-or-register the counter named `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut g = self.inner.lock().unwrap();
+        Counter(Arc::clone(g.counters.entry(name.to_string()).or_default()))
+    }
+
+    /// Get-or-register the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut g = self.inner.lock().unwrap();
+        Gauge(Arc::clone(g.gauges.entry(name.to_string()).or_default()))
+    }
+
+    /// Get-or-register the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Hist {
+        let mut g = self.inner.lock().unwrap();
+        Hist(Arc::clone(g.hists.entry(name.to_string()).or_default()))
+    }
+
+    /// Point-in-time copy of every registered metric.  Counter values
+    /// are monotone across successive snapshots (pinned by
+    /// `tests/prop_obs.rs`).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: g
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect(),
+            gauges: g
+                .gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect(),
+            hists: g.hists.iter().map(|(k, v)| (k.clone(), v.snapshot())).collect(),
+        }
+    }
+}
+
+/// Immutable view of a [`MetricsRegistry`] (name-sorted maps).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value, 0 when never registered.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value, 0 when never registered.
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    /// Sum of every counter whose name starts with `prefix`.
+    pub fn counter_sum(&self, prefix: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// The metrics dump `--metrics-out` writes: counters and gauges
+    /// verbatim, histograms as their exact aggregates plus standard
+    /// quantiles (bucket arrays stay internal).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters = counters.set(k, Json::Num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges = gauges.set(k, Json::Num(*v as f64));
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.hists {
+            let mut o = Json::obj()
+                .set("count", Json::Num(h.count as f64))
+                .set("mean", Json::Num(h.mean()));
+            if h.count > 0 {
+                o = o
+                    .set("min", Json::Num(h.min as f64))
+                    .set("max", Json::Num(h.max as f64))
+                    .set("p50", Json::Num(h.quantile(50.0) as f64))
+                    .set("p95", Json::Num(h.quantile(95.0) as f64))
+                    .set("p99", Json::Num(h.quantile(99.0) as f64));
+            }
+            hists = hists.set(k, o);
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_state_by_name() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("serve.submitted");
+        let b = r.counter("serve.submitted");
+        a.add(3);
+        b.inc();
+        assert_eq!(r.counter("serve.submitted").get(), 4);
+        assert_eq!(r.snapshot().counter("serve.submitted"), 4);
+    }
+
+    #[test]
+    fn absorb_never_lowers() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("x");
+        c.absorb(10);
+        c.absorb(7);
+        assert_eq!(c.get(), 10);
+        c.absorb(12);
+        assert_eq!(c.get(), 12);
+    }
+
+    #[test]
+    fn gauge_is_last_write_wins() {
+        let r = MetricsRegistry::new();
+        let g = r.gauge("cache.entries");
+        g.set(5);
+        g.set(2);
+        assert_eq!(r.snapshot().gauge("cache.entries"), 2);
+    }
+
+    #[test]
+    fn counter_sum_over_prefix() {
+        let r = MetricsRegistry::new();
+        r.counter("shard.0.rows").add(4);
+        r.counter("shard.1.rows").add(6);
+        r.counter("shard.1.retries").add(1);
+        let s = r.snapshot();
+        assert_eq!(s.counter_sum("shard.0.rows") + s.counter_sum("shard.1.rows"), 10);
+        assert_eq!(s.counter_sum("shard."), 11);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        let r = MetricsRegistry::new();
+        r.counter("a.b").add(2);
+        r.gauge("g").set(9);
+        r.histogram("h").record(100);
+        let j = r.snapshot().to_json();
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("counters").and_then(|c| c.get("a.b")).and_then(Json::as_usize), Some(2));
+        assert_eq!(parsed.get("gauges").and_then(|c| c.get("g")).and_then(Json::as_usize), Some(9));
+        let h = parsed.get("histograms").and_then(|c| c.get("h")).unwrap();
+        assert_eq!(h.get("count").and_then(Json::as_usize), Some(1));
+        assert_eq!(h.get("max").and_then(Json::as_usize), Some(100));
+    }
+
+    #[test]
+    fn histogram_handle_records() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram("lat");
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        let snap = r.snapshot();
+        assert_eq!(snap.hists["lat"].quantile(100.0), 30);
+    }
+}

@@ -536,7 +536,17 @@ pub fn multi_tile_latency(
     Report { title: title.to_string(), table, totals: None }
 }
 
-pub fn serve_summary(load: &crate::serve::LoadReport, stats: &crate::serve::ServerStats) -> Report {
+/// The health-state label a `shard.N.health` gauge code renders as
+/// (the codes [`crate::serve::Server::metrics`] publishes).
+fn health_label(code: u64) -> &'static str {
+    match code {
+        0 => "healthy",
+        1 => "probation",
+        _ => "quarantined",
+    }
+}
+
+pub fn serve_summary(load: &crate::serve::LoadReport, snap: &crate::obs::MetricsSnapshot) -> Report {
     // Absolute fractions, not deltas: plain percent, no forced sign.
     let frac = |x: f64| format!("{:.1}%", x * 100.0);
     let mut table = Table::new(&["metric", "value"]).numeric();
@@ -549,39 +559,42 @@ pub fn serve_summary(load: &crate::serve::LoadReport, stats: &crate::serve::Serv
     table.row(&["latency mean (us)".into(), fnum(l.mean_us, 1)]);
     table.row(&["batched responses".into(), frac(load.batched_fraction())]);
     table.row(&["max batch size".into(), load.max_batch.to_string()]);
-    table.row(&["plan-cache hit rate".into(), frac(stats.cache.hit_rate())]);
-    table.row(&["plan-cache entries".into(), stats.cache.entries.to_string()]);
+    let hits = snap.counter("cache.hits");
+    let lookups = hits + snap.counter("cache.misses");
+    let hit_rate = if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 };
+    table.row(&["plan-cache hit rate".into(), frac(hit_rate)]);
+    table.row(&["plan-cache entries".into(), snap.gauge("cache.entries").to_string()]);
     // Simulated array-time under the configured preload discipline —
     // the overlapped-timing number the streaming cycle simulator pins.
     table.row(&[
         "sim service cycles (resp-weighted)".into(),
         load.stream_cycles_observed.to_string(),
     ]);
+    let shards = snap.gauge("serve.shards") as usize;
+    let shard_sum =
+        |name: &str| -> u64 { (0..shards).map(|i| snap.counter(&format!("shard.{i}.{name}"))).sum() };
     // Exact tile-retry count from the shard counters (the per-response
     // sum in LoadReport counts a batch's retries once per member).
-    let tile_retries: u64 = stats.shards.iter().map(|s| s.retries).sum();
-    table.row(&["tile retries".into(), tile_retries.to_string()]);
+    table.row(&["tile retries".into(), shard_sum("retries").to_string()]);
     // Fault-tolerance lifecycle (DESIGN.md §16), aggregated over shards.
-    let sum = |f: fn(&crate::serve::ShardSnapshot) -> u64| -> u64 {
-        stats.shards.iter().map(f).sum()
-    };
-    table.row(&["requests shed".into(), stats.shed.to_string()]);
+    table.row(&["requests shed".into(), snap.counter("serve.shed").to_string()]);
     table.row(&[
         "sdc injected/detected/recovered/unresolved".into(),
         format!(
             "{}/{}/{}/{}",
-            sum(|s| s.sdc_injected),
-            sum(|s| s.sdc_detected),
-            sum(|s| s.sdc_recovered),
-            sum(|s| s.sdc_unresolved)
+            shard_sum("sdc_injected"),
+            shard_sum("sdc_detected"),
+            shard_sum("sdc_recovered"),
+            shard_sum("sdc_unresolved")
         ),
     ]);
-    table.row(&["failed batches".into(), sum(|s| s.failed_batches).to_string()]);
-    table.row(&["shard quarantines".into(), sum(|s| s.quarantines).to_string()]);
-    for (i, s) in stats.shards.iter().enumerate() {
+    table.row(&["failed batches".into(), shard_sum("failed_batches").to_string()]);
+    table.row(&["shard quarantines".into(), shard_sum("quarantines").to_string()]);
+    for i in 0..shards {
+        let c = |name: &str| snap.counter(&format!("shard.{i}.{name}"));
         table.row(&[
             format!("shard {i} batches/requests/rows"),
-            format!("{}/{}/{}", s.batches, s.requests, s.rows),
+            format!("{}/{}/{}", c("batches"), c("requests"), c("rows")),
         ]);
     }
     Report { title: "Serve: multi-tenant GEMM serving summary".into(), table, totals: None }
@@ -591,29 +604,124 @@ pub fn serve_summary(load: &crate::serve::LoadReport, stats: &crate::serve::Serv
 /// rows, expanded per shard with the health board's state.
 pub fn faults_summary(
     load: &crate::serve::LoadReport,
-    stats: &crate::serve::ServerStats,
+    snap: &crate::obs::MetricsSnapshot,
 ) -> Report {
     let mut table = Table::new(&["metric", "value"]).numeric();
     table.row(&["requests completed".into(), load.completed.to_string()]);
     // The server-side counter is authoritative; the client-observed
     // count (load.shed) also includes post-shutdown rejections.
-    table.row(&["requests shed".into(), stats.shed.to_string()]);
+    table.row(&["requests shed".into(), snap.counter("serve.shed").to_string()]);
     table.row(&["latency p99 (us)".into(), fnum(load.latency.p99_us, 1)]);
-    for (i, s) in stats.shards.iter().enumerate() {
+    table.row(&[
+        "health transitions q/p/h".into(),
+        format!(
+            "{}/{}/{}",
+            snap.counter("health_transitions.quarantined"),
+            snap.counter("health_transitions.probation"),
+            snap.counter("health_transitions.healthy")
+        ),
+    ]);
+    let shards = snap.gauge("serve.shards") as usize;
+    for i in 0..shards {
+        let c = |name: &str| snap.counter(&format!("shard.{i}.{name}"));
         table.row(&[
             format!("shard {i} sdc inj/det/rec/unres"),
             format!(
                 "{}/{}/{}/{}",
-                s.sdc_injected, s.sdc_detected, s.sdc_recovered, s.sdc_unresolved
+                c("sdc_injected"),
+                c("sdc_detected"),
+                c("sdc_recovered"),
+                c("sdc_unresolved")
             ),
         ]);
         table.row(&[
             format!("shard {i} failed batches / quarantines"),
-            format!("{}/{}", s.failed_batches, s.quarantines),
+            format!("{}/{}", c("failed_batches"), c("quarantines")),
         ]);
-        table.row(&[format!("shard {i} health"), s.health.to_string()]);
+        table.row(&[
+            format!("shard {i} health"),
+            health_label(snap.gauge(&format!("shard.{i}.health"))).into(),
+        ]);
     }
     Report { title: "Faults: chaos run summary".into(), table, totals: None }
+}
+
+/// The `skewsa trace` critical-path breakdown: per-phase wall-time
+/// percentiles over the Ok spans of one trace file, plus the
+/// cycle-domain attribution (exposed preload / compute / drain / ABFT
+/// recovery) — "where did my p99 go?", answered from data (the README
+/// walkthrough).
+///
+/// Phase percentiles are exact nearest-rank over the span set (a trace
+/// file is bounded; no histogram approximation needed here).  The
+/// `share` column is each phase's fraction of summed end-to-end time —
+/// phases partition a span's lifetime exactly, so the column sums to
+/// 100%.
+pub fn trace_summary(spans: &[crate::obs::SpanRecord]) -> Report {
+    use crate::obs::{Phase, SpanStatus};
+    // One distribution row: p50/p99/mean of `vals` (divided by `unit`
+    // for display) and `sum(vals)` as a share of `denom`.
+    fn dist_row(table: &mut Table, label: String, mut vals: Vec<u64>, denom: u64, unit: f64) {
+        use crate::serve::percentile_ns;
+        vals.sort_unstable();
+        let sum: u64 = vals.iter().sum();
+        let mean = if vals.is_empty() { 0.0 } else { sum as f64 / vals.len() as f64 };
+        let share = if denom == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}%", sum as f64 / denom as f64 * 100.0)
+        };
+        table.row(&[
+            label,
+            fnum(percentile_ns(&vals, 50.0) as f64 / unit, 1),
+            fnum(percentile_ns(&vals, 99.0) as f64 / unit, 1),
+            fnum(mean / unit, 1),
+            share,
+        ]);
+    }
+    let ok: Vec<&crate::obs::SpanRecord> =
+        spans.iter().filter(|s| s.status == SpanStatus::Ok).collect();
+    let count_of = |st: SpanStatus| spans.iter().filter(|s| s.status == st).count();
+    let mut table = Table::new(&["component", "p50", "p99", "mean", "share"]).numeric();
+    let total_ns: u64 = ok.iter().map(|s| s.total_ns()).sum();
+    for ph in Phase::ALL {
+        let ns: Vec<u64> = ok.iter().map(|s| s.phases_ns[ph as usize]).collect();
+        dist_row(&mut table, format!("{}(us)", ph.name()), ns, total_ns, 1_000.0);
+    }
+    dist_row(
+        &mut table,
+        "total(us)".into(),
+        ok.iter().map(|s| s.total_ns()).collect(),
+        total_ns,
+        1_000.0,
+    );
+    // Cycle-domain attribution: the same percentile/share treatment in
+    // the array's clock domain.  Shares are of total attributed cycles
+    // (stream total + recovery), so these rows answer "which cycles"
+    // the way the phase rows answer "which microseconds".
+    let cycles_total: u64 = ok.iter().map(|s| s.cycles.total()).sum();
+    let buckets: [(&str, fn(&crate::obs::CycleAttribution) -> u64); 4] = [
+        ("cycles:exposed_preload", |c| c.exposed_preload),
+        ("cycles:compute", |c| c.compute),
+        ("cycles:drain", |c| c.drain),
+        ("cycles:recovery", |c| c.recovery),
+    ];
+    for (label, get) in buckets {
+        let cy: Vec<u64> = ok.iter().map(|s| get(&s.cycles)).collect();
+        dist_row(&mut table, label.to_string(), cy, cycles_total, 1.0);
+    }
+    Report {
+        title: format!(
+            "Trace: {} spans ({} ok, {} shed, {} closed, {} failed)",
+            spans.len(),
+            ok.len(),
+            count_of(SpanStatus::Shed),
+            count_of(SpanStatus::Closed),
+            count_of(SpanStatus::Failed)
+        ),
+        table,
+        totals: None,
+    }
 }
 
 #[cfg(test)]
@@ -770,7 +878,8 @@ mod tests {
 
     #[test]
     fn serve_summary_renders_metrics_and_shards() {
-        use crate::serve::{LatencySummary, LoadReport, ServerStats, ShardSnapshot};
+        use crate::obs::MetricsRegistry;
+        use crate::serve::{LatencySummary, LoadReport};
         let load = LoadReport {
             latency: LatencySummary {
                 count: 10,
@@ -789,26 +898,75 @@ mod tests {
             retries_observed: 0,
             stream_cycles_observed: 12_345,
             shed: 0,
+            failed: 0,
         };
-        let stats = ServerStats {
-            submitted: 10,
-            shed: 2,
-            cache: crate::serve::CacheStats { hits: 4, misses: 1, evictions: 0, entries: 1 },
-            shards: vec![ShardSnapshot::default(), ShardSnapshot::default()],
-        };
-        let text = serve_summary(&load, &stats).render();
+        // The registry shape Server::metrics() publishes.
+        let r = MetricsRegistry::new();
+        r.counter("serve.submitted").add(10);
+        r.counter("serve.shed").add(2);
+        r.counter("cache.hits").add(4);
+        r.counter("cache.misses").add(1);
+        r.gauge("cache.entries").set(1);
+        r.gauge("serve.shards").set(2);
+        r.counter("shard.0.batches").add(3);
+        r.gauge("shard.1.health").set(1);
+        let snap = r.snapshot();
+        let text = serve_summary(&load, &snap).render();
         assert!(text.contains("latency p99"));
         assert!(text.contains("shard 1"));
         assert!(text.contains("requests shed"));
         assert!(text.contains("sdc injected/detected/recovered/unresolved"));
-        let faults = faults_summary(&load, &stats).render();
+        let faults = faults_summary(&load, &snap).render();
         assert!(faults.contains("shard 0 health"));
-        assert!(faults.contains("healthy"), "default snapshot renders healthy: {faults}");
+        assert!(faults.contains("healthy"), "code 0 renders healthy: {faults}");
+        assert!(faults.contains("probation"), "code 1 renders probation: {faults}");
+        assert!(faults.contains("health transitions"), "{faults}");
         assert!(text.contains("plan-cache hit rate"));
         assert!(text.contains("sim service cycles"));
         assert!(text.contains("12345"), "stream cycles render: {text}");
         assert!(text.contains("80.0%"), "hit rate 4/5 renders: {text}");
         assert!(!text.contains("+80.0%"), "absolute rate must not carry a delta sign: {text}");
+    }
+
+    #[test]
+    fn trace_summary_breaks_down_phases_and_cycles() {
+        use crate::obs::{CycleAttribution, SpanRecord, SpanStatus};
+        let span = |id: u64, status: SpanStatus, queue_ns: u64| SpanRecord {
+            id,
+            model: 0,
+            kind: "skewed".into(),
+            class: "batch".into(),
+            rows: 2,
+            status,
+            shard: Some(0),
+            batch_size: 1,
+            cache_hit: false,
+            retries: 0,
+            phases_ns: [queue_ns, 10_000, 5_000, 2_000, 40_000, 3_000],
+            cycles: CycleAttribution {
+                exposed_preload: 8,
+                compute: 100,
+                drain: 6,
+                recovery: 114,
+            },
+            sdc_detected: 1,
+            sdc_recovered: 1,
+            sdc_unresolved: 0,
+        };
+        let spans =
+            vec![span(0, SpanStatus::Ok, 20_000), span(1, SpanStatus::Ok, 60_000), span(2, SpanStatus::Shed, 500)];
+        let r = trace_summary(&spans);
+        assert!(r.title.contains("3 spans"), "{}", r.title);
+        assert!(r.title.contains("2 ok") && r.title.contains("1 shed"), "{}", r.title);
+        let text = r.render();
+        // 6 phases + total + 4 cycle buckets.
+        assert_eq!(r.table.n_rows(), 11);
+        assert!(text.contains("queue(us)") && text.contains("execute(us)"), "{text}");
+        assert!(text.contains("cycles:recovery"), "{text}");
+        // Recovery is half of each span's attributed cycles (114 of 228).
+        assert!(text.contains("50.0%"), "recovery share: {text}");
+        // The total row's share is 100% (phases partition the lifetime).
+        assert!(text.contains("100.0%"), "{text}");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! already queued.
 
 use super::request::{DeadlineClass, Pending, RequestQueue};
+use crate::obs::Phase;
 use crate::pe::PipelineKind;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -95,6 +96,11 @@ impl Batcher {
                 break;
             }
         }
+        // The window is closed: every member's batch-formation wait
+        // (admission → dispatch) ends together, here.
+        for p in &mut parts {
+            p.span.mark(Phase::Batch);
+        }
         Some(Batch { key, parts, rows })
     }
 }
@@ -116,6 +122,7 @@ mod tests {
         let p = Pending {
             req: Request { id, model, kind, class, a: vec![vec![0u64; 4]; m] },
             reply: tx,
+            span: crate::obs::TraceSpan::disabled(),
         };
         (p, rx)
     }

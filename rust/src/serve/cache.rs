@@ -18,9 +18,11 @@
 //! chosen format memoises its own tile plans alongside the others.
 
 use crate::arith::format::FpFormat;
+use crate::obs::CycleAttribution;
 use crate::pe::PipelineKind;
 use crate::sa::dataflow::WsSchedule;
 use crate::sa::tile::{GemmShape, TilePlan};
+use crate::timing::{layer_timing, TimingConfig};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -61,6 +63,13 @@ pub struct CachedPlan {
     /// Closed-form service time with every reload serialized after the
     /// previous drain (the single-bank ablation).
     pub stream_cycles_serialized: u64,
+    /// Cycle-domain decomposition of the overlapped service time
+    /// (exposed preload / compute / drain — [`crate::timing::layer_timing`]'s
+    /// taxonomy), memoised here so trace spans attribute cycles without
+    /// re-deriving schedules per batch.
+    pub breakdown_overlapped: CycleAttribution,
+    /// As [`CachedPlan::breakdown_overlapped`], serialized reloads.
+    pub breakdown_serialized: CycleAttribution,
 }
 
 impl CachedPlan {
@@ -77,7 +86,26 @@ impl CachedPlan {
             schedules.iter().map(|s| s.preload_cycles() + s.total_cycles()).sum();
         let stream_cycles_overlapped = plan.stream_cycles(key.kind, true);
         debug_assert_eq!(stream_cycles_serialized, plan.stream_cycles(key.kind, false));
-        CachedPlan { plan, schedules, stream_cycles_overlapped, stream_cycles_serialized }
+        let tcfg = |db| TimingConfig {
+            rows: key.rows,
+            cols: key.cols,
+            clock_ghz: 1.0,
+            double_buffer: db,
+        };
+        let breakdown_overlapped =
+            CycleAttribution::from_layer_timing(&layer_timing(&tcfg(true), key.kind, &plan));
+        let breakdown_serialized =
+            CycleAttribution::from_layer_timing(&layer_timing(&tcfg(false), key.kind, &plan));
+        debug_assert_eq!(breakdown_overlapped.stream_total(), stream_cycles_overlapped);
+        debug_assert_eq!(breakdown_serialized.stream_total(), stream_cycles_serialized);
+        CachedPlan {
+            plan,
+            schedules,
+            stream_cycles_overlapped,
+            stream_cycles_serialized,
+            breakdown_overlapped,
+            breakdown_serialized,
+        }
     }
 
     /// The service-time denominator for the configured preload
@@ -88,6 +116,17 @@ impl CachedPlan {
             self.stream_cycles_overlapped
         } else {
             self.stream_cycles_serialized
+        }
+    }
+
+    /// Cycle attribution for the configured preload discipline; its
+    /// [`CycleAttribution::stream_total`] equals
+    /// [`CachedPlan::stream_cycles`] for the same `double_buffer`.
+    pub fn breakdown(&self, double_buffer: bool) -> CycleAttribution {
+        if double_buffer {
+            self.breakdown_overlapped
+        } else {
+            self.breakdown_serialized
         }
     }
 }
@@ -247,5 +286,24 @@ mod tests {
         }
         assert!(p.stream_cycles_overlapped < p.stream_cycles_serialized);
         assert_eq!(p.schedules, p.plan.schedules(k.kind));
+    }
+
+    #[test]
+    fn breakdown_matches_layer_timing() {
+        use crate::timing::{layer_timing, TimingConfig};
+        let c = PlanCache::new(4);
+        let k = key(6, 20, 10);
+        let (p, _) = c.get(k);
+        for db in [true, false] {
+            let bd = p.breakdown(db);
+            assert_eq!(bd.stream_total(), p.stream_cycles(db), "db={db}");
+            assert_eq!(bd.recovery, 0, "clean plan carries no recovery cycles");
+            let cfg =
+                TimingConfig { rows: k.rows, cols: k.cols, clock_ghz: 1.0, double_buffer: db };
+            let lt = layer_timing(&cfg, k.kind, &p.plan);
+            assert_eq!(bd.exposed_preload, lt.exposed_preload, "db={db}");
+            assert_eq!(bd.drain, lt.drain_cycles, "db={db}");
+            assert_eq!(bd.compute, lt.compute_cycles - lt.drain_cycles, "db={db}");
+        }
     }
 }

@@ -15,8 +15,9 @@
 //! [`crate::coordinator::Router`] contract) — a degraded server keeps
 //! serving rather than deadlocking.
 
+use crate::obs::{Counter, Obs, SpanSink};
 use std::collections::{BTreeSet, VecDeque};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Knobs of the quarantine state machine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -76,16 +77,65 @@ struct Inner {
     shards: Vec<ShardHealth>,
 }
 
+/// Observability hooks of the board: the `health_transitions.*`
+/// counter family plus (when tracing) timestamped trace events, so a
+/// chaos run shows *when* each shard was benched and re-admitted —
+/// not just the final tally.
+struct BoardObs {
+    sink: Option<Arc<SpanSink>>,
+    quarantined: Counter,
+    probation: Counter,
+    healthy: Counter,
+}
+
+impl BoardObs {
+    /// Emit one transition: bump its counter, and trace it (timestamped
+    /// wall clock + board clock) when a sink is attached.
+    fn transition(&self, label: &str, shard: usize, clock: u64) {
+        match label {
+            "quarantined" => self.quarantined.inc(),
+            "probation" => self.probation.inc(),
+            _ => self.healthy.inc(),
+        }
+        if let Some(sink) = &self.sink {
+            sink.event("health", label, shard, clock);
+        }
+    }
+}
+
 /// Shared health state: one entry per shard, ticked by the dispatcher.
 pub struct HealthBoard {
     policy: HealthPolicy,
     inner: Mutex<Inner>,
+    obs: Option<BoardObs>,
 }
 
 impl HealthBoard {
     pub fn new(policy: HealthPolicy, shards: usize) -> HealthBoard {
         let shards = (0..shards.max(1)).map(|_| ShardHealth::default()).collect();
-        HealthBoard { policy, inner: Mutex::new(Inner { clock: 0, shards }) }
+        HealthBoard { policy, inner: Mutex::new(Inner { clock: 0, shards }), obs: None }
+    }
+
+    /// As [`HealthBoard::new`], publishing every state-machine
+    /// transition to `obs`: the `health_transitions.{quarantined,
+    /// probation,healthy}` counters (pre-registered so they appear in
+    /// snapshots even at zero) and, when tracing is on, a timestamped
+    /// trace event per transition.
+    pub fn with_obs(policy: HealthPolicy, shards: usize, obs: &Obs) -> HealthBoard {
+        let mut b = Self::new(policy, shards);
+        b.obs = Some(BoardObs {
+            sink: obs.sink.clone(),
+            quarantined: obs.registry.counter("health_transitions.quarantined"),
+            probation: obs.registry.counter("health_transitions.probation"),
+            healthy: obs.registry.counter("health_transitions.healthy"),
+        });
+        b
+    }
+
+    fn emit(&self, label: &str, shard: usize, clock: u64) {
+        if let Some(o) = &self.obs {
+            o.transition(label, shard, clock);
+        }
     }
 
     pub fn policy(&self) -> HealthPolicy {
@@ -99,10 +149,11 @@ impl HealthBoard {
         g.clock += 1;
         let clock = g.clock;
         let probation = self.policy.probation_batches.max(1);
-        for s in &mut g.shards {
+        for (i, s) in g.shards.iter_mut().enumerate() {
             if let ShardState::Quarantined { until } = s.state {
                 if clock >= until {
                     s.state = ShardState::Probation { remaining: probation };
+                    self.emit("probation", i, clock);
                 }
             }
         }
@@ -143,8 +194,10 @@ impl HealthBoard {
                     s.quarantines += 1;
                     s.window.clear();
                     s.state = quarantine;
+                    self.emit("quarantined", shard, clock);
                 } else if remaining <= 1 {
                     s.state = ShardState::Healthy;
+                    self.emit("healthy", shard, clock);
                 } else {
                     s.state = ShardState::Probation { remaining: remaining - 1 };
                 }
@@ -158,6 +211,7 @@ impl HealthBoard {
                     s.quarantines += 1;
                     s.window.clear();
                     s.state = quarantine;
+                    self.emit("quarantined", shard, clock);
                 }
             }
         }
@@ -271,5 +325,42 @@ mod tests {
         };
         b.record(0, 5); // in-flight batch retiring late
         assert_eq!(b.state(0), ShardState::Quarantined { until });
+    }
+
+    #[test]
+    fn transitions_emit_counters_and_timestamped_events() {
+        let obs = crate::obs::Obs::with_tracing();
+        let b = HealthBoard::with_obs(policy(), 1, &obs);
+        for _ in 0..3 {
+            b.tick();
+            b.record(0, 1); // third record quarantines
+        }
+        for _ in 0..5 {
+            b.tick(); // sentence expires into probation
+        }
+        b.tick();
+        b.record(0, 0);
+        b.tick();
+        b.record(0, 0); // second clean batch re-admits
+        let snap = obs.registry.snapshot();
+        assert_eq!(snap.counter("health_transitions.quarantined"), 1);
+        assert_eq!(snap.counter("health_transitions.probation"), 1);
+        assert_eq!(snap.counter("health_transitions.healthy"), 1);
+        let events = obs.sink.as_ref().unwrap().events();
+        let labels: Vec<&str> = events.iter().map(|e| e.label.as_str()).collect();
+        assert_eq!(labels, ["quarantined", "probation", "healthy"]);
+        assert!(events.iter().all(|e| e.kind == "health" && e.shard == 0));
+        // Timestamps are monotone and the board clock advances.
+        assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        assert!(events.windows(2).all(|w| w[0].clock < w[1].clock));
+    }
+
+    #[test]
+    fn counters_exist_at_zero_before_any_transition() {
+        let obs = crate::obs::Obs::new();
+        let _b = HealthBoard::with_obs(policy(), 2, &obs);
+        let snap = obs.registry.snapshot();
+        assert!(snap.counters.contains_key("health_transitions.quarantined"));
+        assert_eq!(snap.counter_sum("health_transitions."), 0);
     }
 }

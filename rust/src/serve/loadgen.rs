@@ -10,7 +10,7 @@
 //! checks.
 
 use super::metrics::{LatencyRecorder, LatencySummary};
-use super::request::{recv_response, DeadlineClass, ResponseStatus};
+use super::request::{try_recv_response, DeadlineClass, ResponseStatus};
 use super::server::Server;
 use crate::pe::PipelineKind;
 use crate::util::rng::Rng;
@@ -72,6 +72,11 @@ pub struct LoadReport {
     /// watermark, or arriving after shutdown) — not counted in
     /// `completed` and not latency-recorded.
     pub shed: usize,
+    /// Requests whose reply channel was dropped (the shard dropped
+    /// their whole batch after retry exhaustion or a timing-model
+    /// mismatch).  The pre-fix generator panicked here, killing the
+    /// load run a fault-injection bench was specifically watching.
+    pub failed: usize,
 }
 
 impl LoadReport {
@@ -136,6 +141,7 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
     let retries = AtomicUsize::new(0);
     let stream_cycles = std::sync::atomic::AtomicU64::new(0);
     let shed = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for client in 0..spec.clients {
             let recorder = &recorder;
@@ -146,12 +152,16 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
             let retries = &retries;
             let stream_cycles = &stream_cycles;
             let shed = &shed;
+            let failed = &failed;
             s.spawn(move || {
                 for i in 0..spec.requests_per_client {
                     let (model, kind, class, a) = gen_request(server.store(), spec, client, i);
                     let t0 = Instant::now();
                     let rx = server.submit(model, kind, class, a);
-                    let resp = recv_response(&rx, "closed-loop client");
+                    let Some(resp) = try_recv_response(&rx, "closed-loop client") else {
+                        failed.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    };
                     if resp.status != ResponseStatus::Ok {
                         shed.fetch_add(1, Ordering::Relaxed);
                         continue;
@@ -180,6 +190,7 @@ pub fn run_closed_loop(server: &Server, spec: &LoadSpec) -> LoadReport {
         retries_observed: retries.into_inner(),
         stream_cycles_observed: stream_cycles.into_inner(),
         shed: shed.into_inner(),
+        failed: failed.into_inner(),
     }
 }
 

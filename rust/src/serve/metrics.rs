@@ -1,11 +1,22 @@
 //! Latency recording: percentile summaries and throughput.
 //!
 //! Closed-loop load-generator clients record one submit→response
-//! duration per request; the summary reports nearest-rank percentiles
-//! (p50/p95/p99), which is what serving dashboards quote and what the
-//! `BENCH_serve.json` trajectory tracks across PRs.
+//! duration per request; the summary reports p50/p95/p99, which is what
+//! serving dashboards quote and what the `BENCH_serve.json` trajectory
+//! tracks across PRs.
+//!
+//! The recorder is backed by the bounded log2 histogram
+//! ([`crate::obs::Log2Histogram`]): the pre-fix `Mutex<Vec<u64>>` kept
+//! every sample forever — a day-long soak leaked gigabytes and every
+//! summary paid an O(n log n) sort under the lock.  Memory is now a
+//! fixed ~15 KiB whatever the sample count, recording is a handful of
+//! atomic adds (no lock), and the quoted percentiles are within the
+//! documented [`crate::obs::REL_QUANTILE_ERROR`] (1/32 ≈ 3.1%) of the
+//! exact nearest-rank values — pinned against [`percentile_ns`] by a
+//! 1M-sample regression test in `obs::hist`.  `count`/`mean`/`max`
+//! remain exact (the histogram tracks sum, min and max as scalars).
 
-use std::sync::Mutex;
+use crate::obs::Log2Histogram;
 use std::time::{Duration, Instant};
 
 /// Snapshot of recorded latencies.
@@ -50,9 +61,10 @@ pub fn percentile_ns(sorted: &[u64], p: f64) -> u64 {
 }
 
 /// Thread-safe latency recorder shared by the load-generator clients.
+/// Bounded memory (one log2 histogram), lock-free recording.
 pub struct LatencyRecorder {
     start: Instant,
-    samples_ns: Mutex<Vec<u64>>,
+    hist: Log2Histogram,
 }
 
 impl Default for LatencyRecorder {
@@ -63,35 +75,33 @@ impl Default for LatencyRecorder {
 
 impl LatencyRecorder {
     pub fn new() -> LatencyRecorder {
-        LatencyRecorder { start: Instant::now(), samples_ns: Mutex::new(Vec::new()) }
+        LatencyRecorder { start: Instant::now(), hist: Log2Histogram::new() }
     }
 
     pub fn record(&self, d: Duration) {
-        self.samples_ns.lock().unwrap().push(d.as_nanos() as u64);
+        self.hist.record(d.as_nanos() as u64);
     }
 
     pub fn count(&self) -> usize {
-        self.samples_ns.lock().unwrap().len()
+        self.hist.count() as usize
     }
 
     pub fn summary(&self) -> LatencySummary {
-        let mut s = self.samples_ns.lock().unwrap().clone();
-        s.sort_unstable();
+        let snap = self.hist.snapshot();
         let wall_s = self.start.elapsed().as_secs_f64();
-        if s.is_empty() {
+        if snap.count == 0 {
             return LatencySummary { wall_s, ..LatencySummary::default() };
         }
         let to_us = |ns: u64| ns as f64 / 1_000.0;
-        let sum_ns: u64 = s.iter().sum();
         LatencySummary {
-            count: s.len(),
-            mean_us: to_us(sum_ns) / s.len() as f64,
-            p50_us: to_us(percentile_ns(&s, 50.0)),
-            p95_us: to_us(percentile_ns(&s, 95.0)),
-            p99_us: to_us(percentile_ns(&s, 99.0)),
-            max_us: to_us(*s.last().unwrap()),
+            count: snap.count as usize,
+            mean_us: snap.mean() / 1_000.0,
+            p50_us: to_us(snap.quantile(50.0)),
+            p95_us: to_us(snap.quantile(95.0)),
+            p99_us: to_us(snap.quantile(99.0)),
+            max_us: to_us(snap.max),
             wall_s,
-            throughput_rps: if wall_s > 0.0 { s.len() as f64 / wall_s } else { 0.0 },
+            throughput_rps: if wall_s > 0.0 { snap.count as f64 / wall_s } else { 0.0 },
         }
     }
 }
@@ -168,10 +178,14 @@ mod tests {
         }
         let s = r.summary();
         assert_eq!(s.count, 3);
-        assert_eq!(s.p50_us, 200.0);
+        // count/mean/max are exact; quantiles carry the histogram's
+        // documented relative error (one sub-bucket width, rounded down).
         assert_eq!(s.max_us, 300.0);
         assert_eq!(s.mean_us, 200.0);
-        assert!(s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
+        let err = crate::obs::REL_QUANTILE_ERROR;
+        assert!((s.p50_us - 200.0).abs() <= 200.0 * err, "p50 {}", s.p50_us);
+        assert!((s.p99_us - 300.0).abs() <= 300.0 * err, "p99 {}", s.p99_us);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us && s.p99_us <= s.max_us);
         assert!(s.throughput_rps > 0.0);
     }
 
@@ -181,5 +195,36 @@ mod tests {
         let s = r.summary();
         assert_eq!(s.count, 0);
         assert_eq!(s.p99_us, 0.0);
+    }
+
+    /// The soak-leak regression: a million samples through the recorder
+    /// cost fixed memory, and the quoted percentiles stay within the
+    /// histogram's documented error of the exact nearest-rank values
+    /// computed from the same sample set.
+    #[test]
+    fn million_samples_bounded_and_within_documented_error() {
+        let r = LatencyRecorder::new();
+        let mut rng = crate::util::rng::Rng::new(0x1a7);
+        let mut exact: Vec<u64> = Vec::with_capacity(1_000_000);
+        for _ in 0..1_000_000 {
+            // Log-uniform over ~1µs..16ms: a realistic latency spread
+            // crossing many octaves.
+            let ns = 1_000u64 << rng.below(15);
+            let ns = ns + rng.below(ns);
+            r.record(Duration::from_nanos(ns));
+            exact.push(ns);
+        }
+        exact.sort_unstable();
+        let s = r.summary();
+        assert_eq!(s.count, 1_000_000);
+        let err = crate::obs::REL_QUANTILE_ERROR;
+        for (got_us, p) in [(s.p50_us, 50.0), (s.p95_us, 95.0), (s.p99_us, 99.0)] {
+            let want_us = percentile_ns(&exact, p) as f64 / 1_000.0;
+            assert!(
+                (got_us - want_us).abs() <= want_us * err,
+                "p{p}: got {got_us}µs want {want_us}µs"
+            );
+        }
+        assert_eq!(s.max_us, *exact.last().unwrap() as f64 / 1_000.0);
     }
 }

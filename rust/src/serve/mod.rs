@@ -28,6 +28,12 @@
 //! * [`loadgen`] — the closed-loop load generator behind
 //!   `skewsa serve` and `bench_serve`.
 //!
+//! Observability (DESIGN.md §17) threads a [`crate::obs::TraceSpan`]
+//! through every request (queue → batch → plan → dispatch → execute →
+//! reply, plus per-batch array-cycle attribution) and mirrors every
+//! counter scattered across this subsystem into the unified
+//! [`crate::obs::MetricsRegistry`] via [`Server::metrics`].
+//!
 //! Fault tolerance (DESIGN.md §16) threads through the same path: the
 //! [`crate::coordinator::FaultModel`] configured on
 //! [`crate::config::ServeConfig`] injects SDCs inside each shard's
@@ -77,8 +83,8 @@ pub use health::{HealthBoard, HealthPolicy, ShardState};
 pub use loadgen::{gen_request, run_closed_loop, LoadReport, LoadSpec};
 pub use metrics::{percentile_ns, LatencyRecorder, LatencySummary};
 pub use request::{
-    recv_response, DeadlineClass, Pending, PushError, Request, RequestQueue, Response,
-    ResponseStatus,
+    recv_response, try_recv_response, DeadlineClass, Pending, PushError, Request, RequestQueue,
+    Response, ResponseStatus,
 };
 pub use server::{Server, ServerStats};
 pub use shard::{BatchJob, ReplyPart, ShardPool, ShardSnapshot};

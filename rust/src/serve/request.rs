@@ -7,6 +7,7 @@
 //! compatible requests into the same batch.  A monotone push sequence
 //! number lets the batcher sleep between arrivals instead of spinning.
 
+use crate::obs::{Phase, TraceSpan};
 use crate::pe::PipelineKind;
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender};
@@ -112,9 +113,30 @@ pub fn recv_response(rx: &Receiver<Response>, what: &str) -> Response {
     }
 }
 
-/// A queued request: payload + reply channel.
+/// As [`recv_response`], but a *dropped* reply channel returns `None`
+/// instead of panicking: a shard that exhausts its retry budget (or
+/// fails the stream-cycle cross-check) drops the whole batch, and
+/// callers like the load generator count those as failed requests
+/// rather than dying mid-run.  A timeout still panics — a wedged
+/// pipeline is a bug, not load.
+pub fn try_recv_response(rx: &Receiver<Response>, what: &str) -> Option<Response> {
+    use std::sync::mpsc::RecvTimeoutError;
+    match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(r) => Some(r),
+        Err(RecvTimeoutError::Disconnected) => None,
+        Err(RecvTimeoutError::Timeout) => panic!("serve: no response for {what}: timed out"),
+    }
+}
+
+/// A queued request: payload + reply channel + its trace span.
 pub struct Pending {
     pub req: Request,
+    /// The request's live trace span ([`TraceSpan::disabled`] when
+    /// tracing is off).  Travels with the request through every stage;
+    /// whichever stage consumes the request closes it.  Declared before
+    /// `reply` so dropping a `Pending` closes the span before the
+    /// client's receiver can observe the hangup.
+    pub span: TraceSpan,
     pub reply: Sender<Response>,
 }
 
@@ -259,8 +281,13 @@ impl RequestQueue {
                 } else {
                     q.front_bypassed += 1;
                 }
-                let p = q.items.remove(i);
+                let mut p = q.items.remove(i);
                 self.not_full.notify_all();
+                if let Some(p) = p.as_mut() {
+                    // The request leaves the queue: its queue-wait
+                    // phase ends here, whoever anchored it owns it now.
+                    p.span.mark(Phase::Queue);
+                }
                 return p;
             }
             if q.closed {
@@ -300,7 +327,8 @@ impl RequestQueue {
                     && *rows + p.req.rows() <= max_rows
             };
             if fits {
-                let p = q.items.remove(i).expect("scanned index");
+                let mut p = q.items.remove(i).expect("scanned index");
+                p.span.mark(Phase::Queue);
                 *rows += p.req.rows();
                 parts.push(p);
                 took = true;
@@ -372,6 +400,7 @@ mod tests {
         Pending {
             req: Request { id, model, kind, class, a: vec![vec![0u64; 4]; m] },
             reply: tx,
+            span: TraceSpan::disabled(),
         }
     }
 

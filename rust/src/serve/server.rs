@@ -13,6 +13,7 @@
 
 use super::batcher::{Batch, Batcher, BatchLimits};
 use super::cache::{CacheStats, PlanCache, PlanKey};
+use super::health::ShardState;
 use super::request::{
     DeadlineClass, Pending, PushError, Request, RequestQueue, Response, ResponseStatus,
 };
@@ -21,6 +22,7 @@ use crate::arith::fma::ChainCfg;
 use crate::arith::format::FpFormat;
 use crate::config::{NumericMode, RunConfig, ServeConfig};
 use crate::coordinator::{FaultModel, FaultPlan};
+use crate::obs::{MetricsSnapshot, Obs, Phase, SpanStatus};
 use crate::pe::PipelineKind;
 use crate::sa::tile::GemmShape;
 use crate::workloads::gemm::GemmData;
@@ -78,10 +80,13 @@ impl Dispatcher {
         // amortised cost batching already pays for.
         let mut a = Vec::with_capacity(batch.rows);
         let mut parts = Vec::with_capacity(batch.parts.len());
-        for p in batch.parts {
+        for mut p in batch.parts {
+            // Planning is done: each member's plan phase closes here
+            // and its span rides on into the shard via the reply part.
+            p.span.mark(Phase::Plan);
             let rows = p.req.rows();
             a.extend(p.req.a);
-            parts.push(ReplyPart { id: p.req.id, rows, reply: p.reply });
+            parts.push(ReplyPart { id: p.req.id, rows, reply: p.reply, span: p.span });
         }
         let data = Arc::new(GemmData { shape, fmt: model.fmt, a, w: model.w.clone() });
         let chain = ChainCfg::new(model.fmt, self.out_fmt);
@@ -107,13 +112,27 @@ pub struct Server {
     batcher: Option<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     shed: AtomicU64,
+    obs: Obs,
 }
 
 impl Server {
     /// Start the serving pipeline: array geometry / formats / numeric
     /// mode from `run`, serving knobs (including the fault model and
-    /// health policy, DESIGN.md §16) from `serve`.
+    /// health policy, DESIGN.md §16) from `serve`.  Metrics are always
+    /// on (they are a handful of atomics); request tracing is not —
+    /// use [`Server::start_obs`] with [`Obs::with_tracing`] for spans.
     pub fn start(run: &RunConfig, serve: &ServeConfig, store: Arc<WeightStore>) -> Server {
+        Self::start_obs(run, serve, store, Obs::new())
+    }
+
+    /// As [`Server::start`] under an explicit observability handle
+    /// (`skewsa serve --trace-out`, the obs bench tier, span tests).
+    pub fn start_obs(
+        run: &RunConfig,
+        serve: &ServeConfig,
+        store: Arc<WeightStore>,
+        obs: Obs,
+    ) -> Server {
         assert!(!store.is_empty(), "serving needs at least one model");
         // Serving accumulates every batch into `run.out_fmt`, while a
         // plan-deployed store (`WeightStore::from_plan`) certified its
@@ -142,13 +161,14 @@ impl Server {
         }
         let queue = Arc::new(RequestQueue::with_watermark(serve.queue_cap, serve.shed_watermark));
         let cache = Arc::new(PlanCache::new(serve.plan_cache_cap));
-        let shards = Arc::new(ShardPool::with_fault_model(
+        let shards = Arc::new(ShardPool::with_obs(
             serve.shards,
             serve.workers_per_shard,
             run.queue_depth,
             serve.shard_policy,
             serve.fault.clone(),
             serve.health_policy(),
+            &obs,
         ));
         let limits = BatchLimits {
             max_requests: serve.max_batch_requests,
@@ -180,6 +200,7 @@ impl Server {
             batcher: Some(handle),
             next_id: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            obs,
         }
     }
 
@@ -219,15 +240,22 @@ impl Server {
         );
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let class_name = match class {
+            DeadlineClass::Interactive => "interactive",
+            DeadlineClass::Batch => "batch",
+        };
+        let span = self.obs.open_span(id, model, &kind.to_string(), class_name, a.len());
         let req = Request { id, model, kind, class, a };
-        let pending = Pending { req, reply: tx };
+        let pending = Pending { req, reply: tx, span };
         match self.queue.push(pending) {
             Ok(()) => {}
-            Err(PushError::Shed(p)) => {
+            Err(PushError::Shed(mut p)) => {
                 self.shed.fetch_add(1, Ordering::Relaxed);
+                p.span.finish(SpanStatus::Shed);
                 let _ = p.reply.send(Response::rejected(p.req.id, ResponseStatus::Shed));
             }
-            Err(PushError::Closed(p)) => {
+            Err(PushError::Closed(mut p)) => {
+                p.span.finish(SpanStatus::Closed);
                 let _ = p.reply.send(Response::rejected(p.req.id, ResponseStatus::Closed));
             }
         }
@@ -246,6 +274,47 @@ impl Server {
             cache: self.cache.stats(),
             shards: self.shards.snapshots(),
         }
+    }
+
+    /// The server's observability handle (span sink, registry).
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    /// Publish every serve-layer tally into the metrics registry and
+    /// snapshot it — the one number source behind
+    /// [`crate::report::serve_summary`] / `faults_summary` and the
+    /// `--metrics-out` JSON dump.  Counters are absorbed monotonically
+    /// (`fetch_max`), so successive snapshots never regress.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let r = &self.obs.registry;
+        let stats = self.stats();
+        r.counter("serve.submitted").absorb(stats.submitted);
+        r.counter("serve.shed").absorb(stats.shed);
+        r.counter("cache.hits").absorb(stats.cache.hits);
+        r.counter("cache.misses").absorb(stats.cache.misses);
+        r.counter("cache.evictions").absorb(stats.cache.evictions);
+        r.gauge("cache.entries").set(stats.cache.entries as u64);
+        r.gauge("serve.shards").set(stats.shards.len() as u64);
+        for (i, s) in stats.shards.iter().enumerate() {
+            let c = |name: &str, v: u64| r.counter(&format!("shard.{i}.{name}")).absorb(v);
+            c("batches", s.batches);
+            c("requests", s.requests);
+            c("rows", s.rows);
+            c("retries", s.retries);
+            c("sdc_injected", s.sdc_injected);
+            c("sdc_detected", s.sdc_detected);
+            c("sdc_recovered", s.sdc_recovered);
+            c("sdc_unresolved", s.sdc_unresolved);
+            c("failed_batches", s.failed_batches);
+            c("quarantines", s.quarantines);
+            r.gauge(&format!("shard.{i}.health")).set(match s.health {
+                ShardState::Healthy => 0,
+                ShardState::Probation { .. } => 1,
+                ShardState::Quarantined { .. } => 2,
+            });
+        }
+        r.snapshot()
     }
 }
 

@@ -20,6 +20,7 @@ use crate::arith::fma::ChainCfg;
 use crate::config::NumericMode;
 use crate::coordinator::router::{Policy, Router};
 use crate::coordinator::{FaultModel, FaultPlan, WorkerPool};
+use crate::obs::{Obs, Phase, SpanStatus, TraceSpan};
 use crate::pe::PipelineKind;
 use crate::workloads::gemm::GemmData;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,6 +31,14 @@ use std::sync::Arc;
 pub struct ReplyPart {
     pub id: u64,
     pub rows: usize,
+    /// The member request's trace span.  The shard closes it right
+    /// before the reply send; if the batch is dropped on a failed run,
+    /// the span's `Drop` closes it as failed — either way, exactly
+    /// once.  Declared before `reply` so the drop path also closes the
+    /// span before the client's receiver can observe the disconnect: a
+    /// client holding a response (or a hangup) is guaranteed the span
+    /// is already in the sink.
+    pub span: TraceSpan,
     pub reply: Sender<Response>,
 }
 
@@ -146,9 +155,26 @@ impl ShardPool {
         fault: FaultModel,
         health: HealthPolicy,
     ) -> ShardPool {
+        Self::with_obs(shards, workers_per_shard, queue_depth, policy, fault, health, &Obs::new())
+    }
+
+    /// As [`ShardPool::with_fault_model`] under an observability handle:
+    /// the health board publishes its transitions to `obs`
+    /// (counters + trace events), and each member request's trace span
+    /// — travelling inside its [`ReplyPart`] — has its dispatch/execute/
+    /// reply phases and cycle attribution recorded by the shard loop.
+    pub fn with_obs(
+        shards: usize,
+        workers_per_shard: usize,
+        queue_depth: usize,
+        policy: Policy,
+        fault: FaultModel,
+        health: HealthPolicy,
+        obs: &Obs,
+    ) -> ShardPool {
         let shards = shards.max(1);
         let router = Arc::new(Router::new(policy, shards));
-        let health = Arc::new(HealthBoard::new(health, shards));
+        let health = Arc::new(HealthBoard::with_obs(health, shards, obs));
         let counters: Arc<Vec<ShardCounters>> =
             Arc::new((0..shards).map(|_| ShardCounters::default()).collect());
         let built = (0..shards)
@@ -167,7 +193,14 @@ impl ShardPool {
                         Policy::LeastLoaded,
                         fault,
                     );
-                    while let Ok(job) = rx.recv() {
+                    while let Ok(mut job) = rx.recv() {
+                        // The batch left the dispatcher's mailbox: every
+                        // member's dispatch-wait phase ends here.
+                        let batch_size = job.parts.len();
+                        for part in &mut job.parts {
+                            part.span.mark(Phase::Dispatch);
+                            part.span.set_batch(idx, batch_size, job.cache_hit);
+                        }
                         let run = pool.run_gemm(
                             job.chain,
                             job.mode,
@@ -211,8 +244,20 @@ impl ShardPool {
                                 continue;
                             }
                         }
+                        // Execution is over: close every member's
+                        // execute phase and attach the batch's cycle
+                        // attribution — the clean plan decomposition
+                        // (whose stream total is exactly the reported
+                        // service time) plus the ABFT recovery
+                        // recompute cycles the executor tallied.
+                        let mut attribution = job.plan.breakdown(job.double_buffer);
+                        attribution.recovery = out.recovery_cycles;
+                        let sdc = (out.sdc.detected, out.sdc.recovered, out.sdc.unresolved);
+                        for part in &mut job.parts {
+                            part.span.set_exec(attribution, out.retries, sdc);
+                            part.span.mark(Phase::Execute);
+                        }
                         let n = job.data.shape.n;
-                        let batch_size = job.parts.len();
                         let total_rows: usize = job.parts.iter().map(|p| p.rows).sum();
                         // Account *before* fanning replies out: a client
                         // unblocked by its reply must already see this
@@ -234,9 +279,13 @@ impl ShardPool {
                         health.record(idx, (out.sdc.detected + out.sdc.unresolved) as u64);
                         router.complete(idx);
                         let mut row0 = 0usize;
-                        for part in &job.parts {
+                        for part in &mut job.parts {
                             let y = out.y[row0 * n..(row0 + part.rows) * n].to_vec();
                             row0 += part.rows;
+                            // Close the span first: once the client
+                            // holds the response, its span is in the
+                            // sink (the tests lean on this ordering).
+                            part.span.finish(SpanStatus::Ok);
                             let _ = part.reply.send(Response {
                                 id: part.id,
                                 status: ResponseStatus::Ok,
@@ -343,7 +392,7 @@ mod tests {
             double_buffer: true,
             data: Arc::new(data.clone()),
             plan,
-            parts: vec![ReplyPart { id: 0, rows: m, reply }],
+            parts: vec![ReplyPart { id: 0, rows: m, reply, span: TraceSpan::disabled() }],
             cache_hit: hit,
         };
         (job, data)

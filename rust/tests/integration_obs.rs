@@ -1,0 +1,351 @@
+//! Observability end-to-end (ISSUE 7 acceptance): every submitted
+//! request yields exactly one closed trace span whose wall-clock phase
+//! durations partition the submit→response lifetime — on the served,
+//! shed and failed paths alike — and whose cycle-domain attribution
+//! (exposed preload + compute + drain + recovery) exactly matches the
+//! closed-form timing model / streaming simulator for every batch.
+//! The JSON-lines trace written by `--trace-out` round-trips through
+//! the `skewsa trace` parser, and the unified metrics snapshot agrees
+//! with the legacy per-subsystem counters it absorbed.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::config::{NumericMode, RunConfig, ServeConfig};
+use skewsa::coordinator::{FaultModel, FaultPlan, SdcTarget};
+use skewsa::obs::{parse_jsonl, Obs, Phase, SpanStatus};
+use skewsa::pe::PipelineKind;
+use skewsa::serve::{recv_response, DeadlineClass, ResponseStatus, Server};
+use skewsa::util::rng::Rng;
+use skewsa::workloads::mobilenet;
+use skewsa::workloads::serving::WeightStore;
+use std::sync::Arc;
+
+fn run_cfg() -> RunConfig {
+    let mut cfg = RunConfig::small();
+    cfg.rows = 16;
+    cfg.cols = 16;
+    cfg.in_fmt = FpFormat::BF16;
+    cfg.out_fmt = FpFormat::FP32;
+    cfg.verify_fraction = 0.0;
+    cfg
+}
+
+fn store() -> Arc<WeightStore> {
+    // K=24 → 2 K-passes on the 16×16 array, N=16 → 1 N-block:
+    // multi-tile plans on the traced path.
+    Arc::new(WeightStore::from_layers(&mobilenet::layers()[..2], FpFormat::BF16, 24, 16))
+}
+
+#[test]
+fn every_served_request_yields_exactly_one_closed_span() {
+    let cfg = run_cfg();
+    let store = store();
+    let server = Server::start_obs(&cfg, &ServeConfig::small(), Arc::clone(&store), Obs::with_tracing());
+    let mut rng = Rng::new(0x0b5);
+    let mut elapsed_ns = Vec::new();
+    for i in 0..6 {
+        let model = i % 2;
+        let a = store.gen_activations(model, 2 + i % 3, &mut rng);
+        let t0 = std::time::Instant::now();
+        let rx = server.submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+        let resp = recv_response(&rx, "span lifecycle");
+        elapsed_ns.push(t0.elapsed().as_nanos() as u64);
+        assert_eq!(resp.status, ResponseStatus::Ok);
+    }
+    let sink = server.obs().sink.as_ref().expect("tracing on");
+    let spans = sink.spans();
+    assert_eq!(spans.len(), 6, "exactly one closed span per submitted request");
+    let mut ids: Vec<u64> = spans.iter().map(|s| s.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 6, "span ids are unique");
+    for s in &spans {
+        assert_eq!(s.status, SpanStatus::Ok);
+        assert_eq!(s.kind, "skewed");
+        assert_eq!(s.class, "interactive");
+        assert!(s.shard.is_some(), "served span knows its shard");
+        assert!(s.batch_size >= 1);
+        // The partition invariant: phases sum exactly to the lifetime.
+        assert_eq!(s.total_ns(), s.phases_ns.iter().sum::<u64>());
+        assert!(s.total_ns() > 0);
+        assert!(s.phases_ns[Phase::Execute as usize] > 0, "execution took time");
+        // The span closes after the reply send, inside the client's
+        // submit→recv bracket.
+        let client_ns = elapsed_ns[s.id as usize];
+        assert!(
+            s.total_ns() <= client_ns,
+            "span {} lifetime {}ns exceeds the client's observed {}ns",
+            s.id,
+            s.total_ns(),
+            client_ns
+        );
+    }
+}
+
+#[test]
+fn span_cycle_attribution_matches_timing_model_and_streaming_sim() {
+    // The acceptance equality: for every batch, in both numeric modes
+    // and both preload disciplines, the span's clean cycle legs sum to
+    // the reported service time — which the timing-pin test already
+    // ties to `layer_timing` and the streaming simulator.
+    use skewsa::sa::tile::{GemmShape, TilePlan};
+    use skewsa::timing::model::{layer_timing, TimingConfig};
+    let store = store();
+    for mode in [NumericMode::Oracle, NumericMode::CycleAccurate] {
+        for db in [true, false] {
+            let mut cfg = run_cfg();
+            cfg.mode = mode;
+            cfg.double_buffer = db;
+            let server =
+                Server::start_obs(&cfg, &ServeConfig::small(), Arc::clone(&store), Obs::with_tracing());
+            let mut rng = Rng::new(0xa77 ^ db as u64);
+            for model in 0..store.len() {
+                let m = 3 + model;
+                let a = store.gen_activations(model, m, &mut rng);
+                let rx = server.submit(model, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+                let resp = recv_response(&rx, "cycle attribution");
+                let span = server
+                    .obs()
+                    .sink
+                    .as_ref()
+                    .unwrap()
+                    .spans()
+                    .into_iter()
+                    .find(|s| s.id == resp.id)
+                    .expect("span closed with the response");
+                assert_eq!(
+                    span.cycles.stream_total(),
+                    resp.batch_stream_cycles,
+                    "mode={mode:?} db={db} model={model}: span legs != reported service time"
+                );
+                assert_eq!(span.cycles.recovery, 0, "clean run attributes no recovery");
+                assert_eq!(span.cycles.total(), span.cycles.stream_total());
+                let entry = store.get(model);
+                let plan = TilePlan::new(GemmShape::new(m, entry.k, entry.n), cfg.rows, cfg.cols);
+                let tcfg = TimingConfig {
+                    rows: cfg.rows,
+                    cols: cfg.cols,
+                    clock_ghz: cfg.clock_ghz,
+                    double_buffer: db,
+                };
+                let lt = layer_timing(&tcfg, PipelineKind::Skewed, &plan);
+                assert_eq!(span.cycles.exposed_preload, lt.exposed_preload);
+                assert_eq!(span.cycles.compute + span.cycles.drain, lt.compute_cycles);
+                assert_eq!(span.cycles.stream_total(), lt.cycles);
+            }
+        }
+    }
+}
+
+#[test]
+fn failed_batches_close_their_spans_as_failed() {
+    // One shard with a single always-failing worker: retry budgets
+    // exhaust, the shard drops every batch, reply channels die — and
+    // each span still closes, exactly once, as Failed via Drop.
+    let cfg = run_cfg();
+    let store = store();
+    let mut scfg = ServeConfig::small();
+    scfg.shards = 1;
+    scfg.workers_per_shard = 1;
+    scfg.fault = FaultModel::from_plan(FaultPlan::always(0));
+    let server = Server::start_obs(&cfg, &scfg, Arc::clone(&store), Obs::with_tracing());
+    let mut rng = Rng::new(0xdead);
+    for i in 0..3 {
+        let a = store.gen_activations(i % 2, 2, &mut rng);
+        let rx = server.submit(i % 2, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+        assert!(rx.recv().is_err(), "request {i}: dropped batch closes the reply channel");
+    }
+    // The shard closes spans (via Drop) before dropping the reply
+    // senders, so a client-side recv error implies the span is in.
+    let spans = server.obs().sink.as_ref().unwrap().spans();
+    assert_eq!(spans.len(), 3, "one span per failed request");
+    for s in &spans {
+        assert_eq!(s.status, SpanStatus::Failed);
+        assert_eq!(s.shard, Some(0), "the batch reached its shard before dying");
+        assert_eq!(s.total_ns(), s.phases_ns.iter().sum::<u64>());
+    }
+}
+
+#[test]
+fn shed_requests_close_their_spans_as_shed() {
+    // A huge batch window parks the anchor request inside the batcher
+    // while incompatible batch-class requests pile into the queue; with
+    // the shed watermark at 1, everything past the first queued request
+    // bounces immediately — each with a Shed span closed at submit.
+    // Dropping the server flushes the accepted requests without waiting
+    // out the window.
+    let cfg = run_cfg();
+    let store = store();
+    let mut scfg = ServeConfig::small();
+    scfg.batch_window_us = 2_000_000;
+    scfg.shed_watermark = 1;
+    let server = Server::start_obs(&cfg, &scfg, Arc::clone(&store), Obs::with_tracing());
+    let mut rng = Rng::new(0x51ed);
+    // Anchor: the batcher pops it and waits out the window.
+    let a = store.gen_activations(0, 2, &mut rng);
+    let rx_anchor = server.submit(0, PipelineKind::Skewed, DeadlineClass::Batch, a);
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    // Incompatible (different model): queues behind the window.
+    let a = store.gen_activations(1, 2, &mut rng);
+    let rx_queued = server.submit(1, PipelineKind::Skewed, DeadlineClass::Batch, a);
+    // Over the watermark: shed at submit.
+    let mut shed_rxs = Vec::new();
+    for _ in 0..3 {
+        let a = store.gen_activations(1, 2, &mut rng);
+        shed_rxs.push(server.submit(1, PipelineKind::Skewed, DeadlineClass::Batch, a));
+    }
+    for rx in shed_rxs {
+        let resp = recv_response(&rx, "shed reply");
+        assert_eq!(resp.status, ResponseStatus::Shed);
+    }
+    let snap = server.metrics();
+    let obs = server.obs().clone();
+    // Shutdown drains the two accepted requests as real responses.
+    drop(server);
+    assert_eq!(recv_response(&rx_anchor, "anchor").status, ResponseStatus::Ok);
+    assert_eq!(recv_response(&rx_queued, "queued").status, ResponseStatus::Ok);
+    let spans = obs.sink.as_ref().unwrap().spans();
+    assert_eq!(spans.len(), 5, "every submit produced a span: 2 served + 3 shed");
+    let shed: Vec<_> = spans.iter().filter(|s| s.status == SpanStatus::Shed).collect();
+    assert_eq!(shed.len(), 3);
+    for s in &shed {
+        // Shed at submit: the whole (tiny) lifetime is queue time.
+        assert_eq!(s.total_ns(), s.phases_ns[Phase::Queue as usize]);
+        assert_eq!(s.shard, None, "a shed request never reached a shard");
+    }
+    assert_eq!(spans.iter().filter(|s| s.status == SpanStatus::Ok).count(), 2);
+    assert_eq!(snap.counter("serve.shed"), 3);
+}
+
+#[test]
+fn abft_recovery_cycles_are_attributed_and_bits_stay_exact() {
+    // Saturating SDC injection with ABFT on: responses stay bit-exact,
+    // and the spans now carry a non-zero recovery leg on top of the
+    // unchanged clean stream total.
+    let cfg = run_cfg();
+    let store = store();
+    let mut scfg = ServeConfig::small();
+    scfg.fault = FaultModel {
+        sdc_rate: 1.0,
+        targets: SdcTarget::ALL.to_vec(),
+        seed: 0xc4a05,
+        abft: true,
+        ..FaultModel::none()
+    };
+    let server = Server::start_obs(&cfg, &scfg, Arc::clone(&store), Obs::with_tracing());
+    let mut rng = Rng::new(0x5dc);
+    let kinds = [PipelineKind::Skewed, PipelineKind::Baseline3b];
+    for i in 0..8 {
+        let model = i % 2;
+        let kind = kinds[i % 2];
+        let a = store.gen_activations(model, 3, &mut rng);
+        let rx = server.submit(model, kind, DeadlineClass::Interactive, a.clone());
+        let resp = recv_response(&rx, "chaos attribution");
+        assert_eq!(resp.status, ResponseStatus::Ok);
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let want = store.solo_reference_bits(&cfg, model, kind, &a);
+        assert_eq!(got, want, "request {i}: recovery changed served bits");
+        let span = server
+            .obs()
+            .sink
+            .as_ref()
+            .unwrap()
+            .spans()
+            .into_iter()
+            .find(|s| s.id == resp.id)
+            .unwrap();
+        // The clean legs still equal the reported service time; the
+        // recovery leg rides on top.
+        assert_eq!(span.cycles.stream_total(), resp.batch_stream_cycles);
+        assert_eq!(span.cycles.total(), span.cycles.stream_total() + span.cycles.recovery);
+        if span.sdc_detected > 0 {
+            assert!(span.cycles.recovery > 0, "request {i}: detected SDCs but free recovery");
+            assert_eq!(span.sdc_detected, span.sdc_recovered, "100% recall under trusted rerun");
+        }
+    }
+    let spans = server.obs().sink.as_ref().unwrap().spans();
+    assert_eq!(spans.len(), 8);
+    assert!(
+        spans.iter().any(|s| s.cycles.recovery > 0),
+        "saturating injection never priced a recovery"
+    );
+    // The unified snapshot mirrors the legacy shard counters exactly.
+    let snap = server.metrics();
+    let stats = server.stats();
+    let sum = |name: &str| -> u64 {
+        (0..stats.shards.len()).map(|i| snap.counter(&format!("shard.{i}.{name}"))).sum()
+    };
+    assert_eq!(sum("sdc_detected"), stats.shards.iter().map(|s| s.sdc_detected).sum::<u64>());
+    assert_eq!(sum("sdc_recovered"), stats.shards.iter().map(|s| s.sdc_recovered).sum::<u64>());
+    assert_eq!(sum("sdc_unresolved"), 0);
+    assert_eq!(snap.counter("serve.submitted"), 8);
+}
+
+#[test]
+fn trace_jsonl_roundtrips_and_health_events_are_recorded() {
+    // Sustained chaos with an aggressive health policy, tracing on:
+    // quarantine transitions land as timestamped events, the
+    // `health_transitions.*` counters agree, and the whole trace
+    // survives the JSON-lines round trip the `skewsa trace` subcommand
+    // depends on.
+    let mut cfg = run_cfg();
+    cfg.rows = 8;
+    cfg.cols = 8;
+    cfg.mode = NumericMode::CycleAccurate;
+    let store =
+        Arc::new(WeightStore::from_layers(&mobilenet::layers()[..2], FpFormat::BF16, 12, 8));
+    let mut scfg = ServeConfig::small();
+    scfg.health_window = 4;
+    scfg.health_fault_threshold = 2;
+    scfg.quarantine_batches = 4;
+    scfg.probation_batches = 2;
+    scfg.fault = FaultModel {
+        sdc_rate: 1.0,
+        targets: vec![SdcTarget::Output],
+        seed: 0x9a7,
+        abft: true,
+        ..FaultModel::none()
+    };
+    let server = Server::start_obs(&cfg, &scfg, Arc::clone(&store), Obs::with_tracing());
+    let mut rng = Rng::new(0xdead);
+    for i in 0..12 {
+        let a = store.gen_activations(i % 2, 2, &mut rng);
+        let rx = server.submit(i % 2, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+        assert_eq!(recv_response(&rx, "health trace").status, ResponseStatus::Ok);
+    }
+    let sink = server.obs().sink.as_ref().unwrap();
+    let events = sink.events();
+    assert!(
+        events.iter().any(|e| e.kind == "health" && e.label == "quarantined"),
+        "sustained faults recorded no quarantine event: {events:?}"
+    );
+    assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns), "event timestamps are monotone");
+    let snap = server.metrics();
+    assert_eq!(
+        snap.counter("health_transitions.quarantined"),
+        events.iter().filter(|e| e.label == "quarantined").count() as u64,
+        "counter and event stream disagree"
+    );
+    // Full trace round trip: spans + events survive JSON lines.
+    let text = sink.to_jsonl();
+    let (spans, parsed_events) = parse_jsonl(&text).expect("trace parses back");
+    assert_eq!(spans.len(), 12);
+    assert_eq!(parsed_events.len(), events.len());
+    for (orig, back) in sink.spans().iter().zip(&spans) {
+        assert_eq!(orig, back, "span changed across the JSON-lines round trip");
+    }
+}
+
+#[test]
+fn tracing_off_records_nothing_but_metrics_still_flow() {
+    let cfg = run_cfg();
+    let store = store();
+    let server = Server::start(&cfg, &ServeConfig::small(), Arc::clone(&store));
+    let mut rng = Rng::new(1);
+    let a = store.gen_activations(0, 2, &mut rng);
+    let rx = server.submit(0, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+    assert_eq!(recv_response(&rx, "untraced").status, ResponseStatus::Ok);
+    assert!(server.obs().sink.is_none(), "default server has no span sink");
+    let snap = server.metrics();
+    assert_eq!(snap.counter("serve.submitted"), 1);
+    assert_eq!(snap.gauge("serve.shards") as usize, server.stats().shards.len());
+}

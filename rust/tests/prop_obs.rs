@@ -1,0 +1,121 @@
+//! Property tests for the metrics registry (DESIGN.md §17):
+//! counter snapshots are monotone — both across successive snapshots
+//! under concurrent writers (the invariant `MetricsRegistry::snapshot`
+//! documents) and under out-of-order `absorb` publishing — and the
+//! log2 histogram's quantiles stay inside the documented one-sub-bucket
+//! relative error across seeds.
+
+use skewsa::obs::{Log2Histogram, MetricsRegistry, REL_QUANTILE_ERROR};
+use skewsa::serve::percentile_ns;
+use skewsa::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn counter_snapshots_are_monotone_under_concurrent_writers() {
+    const WRITERS: usize = 4;
+    const OPS: u64 = 20_000;
+    let reg = Arc::new(MetricsRegistry::new());
+    let done = Arc::new(AtomicBool::new(false));
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|t| {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                let own = reg.counter(&format!("w{t}.ops"));
+                let shared = reg.counter("shared.total");
+                let hwm = reg.counter("shared.hwm");
+                let mut rng = Rng::new(0x0b5 + t as u64);
+                for _ in 0..OPS {
+                    own.add(1 + rng.below(3));
+                    shared.inc();
+                    // Out-of-order publishing of a monotone source: the
+                    // running max must still never regress.
+                    hwm.absorb(rng.below(1_000_000));
+                }
+            })
+        })
+        .collect();
+    // Reader: successive snapshots never show any counter going down.
+    let reader = {
+        let reg = Arc::clone(&reg);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let mut prev = reg.snapshot();
+            let mut rounds = 0u64;
+            while !done.load(Ordering::Relaxed) {
+                let next = reg.snapshot();
+                for (name, &v) in &next.counters {
+                    let was = prev.counter(name);
+                    assert!(
+                        v >= was,
+                        "counter `{name}` regressed across snapshots: {was} -> {v}"
+                    );
+                }
+                prev = next;
+                rounds += 1;
+            }
+            rounds
+        })
+    };
+    for w in writers {
+        w.join().unwrap();
+    }
+    done.store(true, Ordering::Relaxed);
+    let rounds = reader.join().unwrap();
+    assert!(rounds > 0, "the reader never got to observe a snapshot");
+    // The final snapshot is exact where the arithmetic is knowable.
+    let snap = reg.snapshot();
+    assert_eq!(snap.counter("shared.total"), WRITERS as u64 * OPS);
+    assert_eq!(snap.counter_sum("shared."), snap.counter("shared.total") + snap.counter("shared.hwm"));
+    for t in 0..WRITERS {
+        let v = snap.counter(&format!("w{t}.ops"));
+        assert!((OPS..=3 * OPS).contains(&v), "w{t}.ops = {v} outside its add range");
+    }
+}
+
+#[test]
+fn absorb_tracks_the_running_max_under_any_order() {
+    for seed in 0..20u64 {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("hwm");
+        let mut rng = Rng::new(0xab5 ^ seed);
+        let mut max = 0u64;
+        for _ in 0..500 {
+            let v = rng.below(1 << 40);
+            c.absorb(v);
+            max = max.max(v);
+            assert_eq!(c.get(), max, "seed {seed}: absorb is not a running max");
+        }
+        assert_eq!(reg.snapshot().counter("hwm"), max);
+    }
+}
+
+#[test]
+fn histogram_quantiles_stay_within_documented_error_across_seeds() {
+    for seed in 0..8u64 {
+        let h = Log2Histogram::new();
+        let mut rng = Rng::new(0x4157 ^ seed.wrapping_mul(0x9e37_79b9));
+        let mut exact: Vec<u64> = Vec::with_capacity(50_000);
+        for _ in 0..50_000 {
+            // Log-uniform across ~18 octaves, exercising both the exact
+            // low buckets and the sub-bucketed octaves.
+            let v = 1u64 << rng.below(18);
+            let v = v + rng.below(v.max(1));
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_unstable();
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 50_000);
+        assert_eq!(snap.sum, exact.iter().sum::<u64>(), "the sum is tracked exactly");
+        for p in [10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let got = snap.quantile(p) as f64;
+            let want = percentile_ns(&exact, p) as f64;
+            assert!(
+                (got - want).abs() <= want * REL_QUANTILE_ERROR,
+                "seed {seed} p{p}: got {got} want {want} (±{:.1}%)",
+                REL_QUANTILE_ERROR * 100.0
+            );
+        }
+    }
+}
