@@ -1,0 +1,758 @@
+#!/usr/bin/env python3
+"""Independent Python port of the fleet discrete-event simulator.
+
+Re-implements rust/src/fleet (event queue, arrival processes, token
+buckets, batching policy, dispatch, mailbox backpressure) from the
+written spec, shares nothing with the Rust code, and must land on the
+*bit-identical* per-request history: `--emit-golden` writes
+golden_fleet_des.json (headline counters + the FNV-1a fingerprint over
+every request record), and `cargo test golden_python_port` replays the
+same scenario in Rust against that file.  Run without arguments to
+check the committed golden against this port (plus a same-seed
+determinism replay).
+
+Port boundary: fault injection, autoscaling and the health board are
+asserted *off* in the scenario (fault_rate = fault_drop_rate = 0,
+autoscale_interval = 0), so this port skips the health/energy surface
+entirely — with zero faults those subsystems cannot affect any
+fingerprinted field.  Everything else (Poisson/MMPP/trace/closed-loop
+arrivals, bucket/watermark/capacity admission, anchor selection,
+windowed coalescing, rr/ll routing, depth-2 mailboxes, blocked-batcher
+backpressure) is ported exactly.
+
+Service times come from layer_timing in test_streaming_timing.py — the
+same independent timing port the streaming cycle simulator is pinned
+against — so the cross-language agreement covers the full path from
+arrival draws down to per-batch service cycles.
+"""
+
+import json
+import os
+import struct
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from test_streaming_timing import layer_timing, tile_plan  # noqa: E402
+
+MASK = (1 << 64) - 1
+
+# Salt constants, mirrored from rust/src/fleet/sim.rs.
+CONTENT_MIX = 0x9E3779B97F4A7C15
+ARRIVAL_MIX = 0xCBF29CE484222325
+TENANT_MIX = 0xA0761D6478BD642F
+
+# Structural constants (rust/src/fleet/sim.rs, rust/src/serve/request.rs).
+MAILBOX_DEPTH = 2
+MAX_FRONT_BYPASS = 64
+
+# (S, D, tail) stage parameters per pipeline kind — the same table
+# test_streaming_timing.py validates against the Rust machine.
+KIND_SPECS = {
+    "regular-3a": (2, 2, 0),
+    "baseline-3b": (2, 2, 0),
+    "skewed": (1, 2, 1),
+    "transparent": (1, 2, 0),
+    "deep3": (2, 3, 0),
+}
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden_fleet_des.json")
+
+
+# ---------------------------------------------------------------------------
+# RNG: xoshiro256** seeded via SplitMix64 (rust/src/util/rng.rs).
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed):
+        self.s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            self.s.append(z ^ (z >> 31))
+
+    def next_u64(self):
+        s = self.s
+        r = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return r
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+    def unit_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def chance(self, p):
+        return self.unit_f64() < p
+
+
+# ---------------------------------------------------------------------------
+# Portable exponential sampling (rust/src/fleet/arrival.rs): -ln(u) from
+# exactly-rounded IEEE-754 ops only, so Python and Rust draw identical
+# integer gaps.
+
+LN2 = 0.6931471805599453
+
+
+def neg_ln(u):
+    bits = struct.unpack("<Q", struct.pack("<d", u))[0]
+    e = ((bits >> 52) & 0x7FF) - 1023
+    m = struct.unpack("<d", struct.pack("<Q", (bits & 0x000FFFFFFFFFFFFF) | (1023 << 52)))[0]
+    t = (m - 1.0) / (m + 1.0)
+    t2 = t * t
+    s = 0.0
+    k = 27
+    while k >= 1:
+        s = s * t2 + 1.0 / k
+        k -= 2
+    ln_m = 2.0 * t * s
+    return -(e * LN2 + ln_m)
+
+
+def unit_open(rng):
+    return ((rng.next_u64() >> 11) + 1) * (1.0 / (1 << 53))
+
+
+def exp_gap(rng, mean_cycles):
+    return max(1, int(mean_cycles * neg_ln(unit_open(rng))))
+
+
+# ---------------------------------------------------------------------------
+# Serving policy (rust/src/serve/policy.rs) — pure functions.
+
+
+def should_shed(watermark, cls, queue_len):
+    return watermark > 0 and cls == "batch" and queue_len >= watermark
+
+
+def anchor_index(classes, front_bypassed, max_front_bypass):
+    first_interactive = None
+    n = 0
+    for i, c in enumerate(classes):
+        n += 1
+        if first_interactive is None and c == "interactive":
+            first_interactive = i
+    if first_interactive is not None:
+        if first_interactive > 0 and front_bypassed >= max_front_bypass:
+            return 0
+        return first_interactive
+    return None if n == 0 else 0
+
+
+def batch_caps_reached(parts, rows, max_requests, max_rows):
+    return parts >= max_requests or rows >= max_rows
+
+
+def member_fits(model, kind, rows, max_rows, c_model, c_kind, c_rows):
+    return c_model == model and c_kind == kind and rows + c_rows <= max_rows
+
+
+# ---------------------------------------------------------------------------
+# Simulator state containers.
+
+
+class TokenBucket:
+    def __init__(self, capacity, refill_cycles):
+        self.capacity = capacity
+        self.refill = refill_cycles
+        self.tokens = capacity
+        self.last = 0
+
+    def admit(self, now):
+        if self.capacity == 0:
+            return True
+        periods = (now - self.last) // self.refill
+        if periods > 0:
+            self.tokens = min(self.tokens + periods, self.capacity)
+            self.last += periods * self.refill
+        if self.tokens > 0:
+            self.tokens -= 1
+            return True
+        return False
+
+
+class Tenant:
+    def __init__(self, ti, spec, fleet_seed):
+        self.spec = spec
+        self.arrival = spec["arrival"]
+        self.kinds = spec.get("kinds", "skewed").split(",")
+        self.frac = min(1.0, max(0.0, spec.get("interactive_fraction", 0.2)))
+        self.min_rows = max(1, spec.get("min_rows", 2))
+        self.max_rows = max(self.min_rows, spec.get("max_rows", 8))
+        self.bucket = TokenBucket(
+            spec.get("bucket_capacity", 0), max(1, spec.get("bucket_refill", 0))
+        )
+        self.content = Rng(fleet_seed ^ ((ti + 1) * CONTENT_MIX & MASK))
+        self.gaps = Rng(fleet_seed ^ ((ti + 1) * ARRIVAL_MIX & MASK))
+        # MMPP dwell state: first calm dwell drawn at construction.
+        self.burst = False
+        self.dwell_end = 0
+        if self.arrival["kind"] == "mmpp":
+            self.dwell_end = exp_gap(self.gaps, self.arrival["mean_dwell_calm"])
+
+
+class Record:
+    __slots__ = ("id", "tenant", "status", "shard", "submit", "done", "batch_size", "service")
+
+    def __init__(self, rid, tenant, status, submit):
+        self.id = rid
+        self.tenant = tenant
+        self.status = status
+        self.shard = None
+        self.submit = submit
+        self.done = submit if status == "shed" else 0
+        self.batch_size = 0
+        self.service = 0
+
+
+class SimReq:
+    __slots__ = ("id", "tenant", "client", "index", "submit", "model", "rows", "kind", "cls")
+
+    def __init__(self, rid, tenant, client, index, submit, model, rows, kind, cls):
+        self.id = rid
+        self.tenant = tenant
+        self.client = client
+        self.index = index
+        self.submit = submit
+        self.model = model
+        self.rows = rows
+        self.kind = kind
+        self.cls = cls
+
+
+class Batch:
+    __slots__ = ("parts", "service", "drop")
+
+    def __init__(self, parts, service, drop):
+        self.parts = parts
+        self.service = service
+        self.drop = drop
+
+
+class Shard:
+    __slots__ = ("running", "mailbox", "inflight")
+
+    def __init__(self):
+        self.running = None
+        self.mailbox = []
+        self.inflight = 0
+
+
+STATUS_CODE = {"pending": 0, "served": 1, "shed": 2, "failed": 3}
+
+
+def fingerprint(records):
+    h = FNV_OFFSET
+    for r in records:
+        shard = r.shard if r.shard is not None else MASK
+        for v in (r.id, STATUS_CODE[r.status], shard, r.submit, r.done, r.batch_size, r.service):
+            for b in struct.pack("<Q", v & MASK):
+                h = ((h ^ b) * FNV_PRIME) & MASK
+    return h
+
+
+# ---------------------------------------------------------------------------
+# The simulator (rust/src/fleet/sim.rs, handler for handler).
+
+
+class FleetSim:
+    def __init__(self, run, fleet):
+        assert fleet.get("fault_rate", 0.0) == 0.0, "port boundary: faults off"
+        assert fleet.get("fault_drop_rate", 0.0) == 0.0, "port boundary: drops off"
+        assert fleet.get("autoscale_interval", 0) == 0, "port boundary: autoscaler off"
+        self.run_rows = run["rows"]
+        self.run_cols = run["cols"]
+        self.double_buffer = run.get("double_buffer", True)
+        self.cfg = fleet
+        self.seed = fleet["seed"]
+        self.horizon = fleet["horizon"]
+        self.models = [(m["k"], m["n"]) for m in fleet["models"]]
+        self.policy = fleet.get("shard_policy", "rr")
+        self.tenants = [Tenant(ti, s, self.seed) for ti, s in enumerate(fleet["tenants"])]
+        self.active = max(fleet["min_shards"], min(fleet["shards"], fleet["max_shards"]))
+        self.shards = [Shard() for _ in range(fleet["max_shards"])]
+        self.rr_next = 0
+        self.fifo = []
+        self.front_bypassed = 0
+        self.batcher = ("idle",)
+        self.next_batch_seq = 0
+        self.batch_ids = 0
+        self.outcomes = []
+        self.svc_memo = {}
+        self.heap = []
+        self.pushed = 0
+        self.now = 0
+        self.submitted = 0
+        self.served = 0
+        self.failed = 0
+        self.shed = {"bucket": 0, "watermark": 0, "capacity": 0}
+        self.batches = 0
+        self.batched_rows = 0
+        self.max_batch = 0
+
+    # -- event queue: (time, push-seq) ordering, exactly like event.rs --
+
+    def push(self, time, event):
+        assert time >= self.now, "event scheduled in the past"
+        self.heap.append((time, self.pushed, event))
+        self.pushed += 1
+
+    def run(self):
+        self.seed_initial_events()
+        import heapq
+
+        heapq.heapify(self.heap)
+        heap = self.heap
+        while heap:
+            time, _, ev = heapq.heappop(heap)
+            self.now = time
+            kind = ev[0]
+            if kind == "arr":
+                self.on_arrival(time, ev[1], ev[2], ev[3])
+            elif kind == "win":
+                self.on_window_close(time, ev[1])
+            else:
+                self.on_shard_done(time, ev[1])
+        assert all(r.status != "pending" for r in self.outcomes), "pending after drain"
+        return self.result()
+
+    # NOTE: run() heapifies whatever seed_initial_events pushed, then
+    # every later push must keep the heap invariant:
+
+    def push_live(self, time, event):
+        import heapq
+
+        assert time >= self.now, "event scheduled in the past"
+        heapq.heappush(self.heap, (time, self.pushed, event))
+        self.pushed += 1
+
+    def seed_initial_events(self):
+        for ti, tr in enumerate(self.tenants):
+            a = tr.arrival
+            if a["kind"] == "closed":
+                if a["requests_per_client"] == 0:
+                    continue
+                for c in range(a["clients"]):
+                    self.push(0, ("arr", ti, c, 0))
+            elif a["kind"] == "trace":
+                reqs = a["requests"]
+                if reqs and reqs[0]["at"] <= self.horizon:
+                    self.push(reqs[0]["at"], ("arr", ti, 0, 0))
+            else:
+                t0 = self.next_open_arrival(ti, 0, 0)
+                if t0 is not None and t0 <= self.horizon:
+                    self.push(t0, ("arr", ti, 0, 0))
+
+    def next_open_arrival(self, ti, now, index):
+        tr = self.tenants[ti]
+        a = tr.arrival
+        k = a["kind"]
+        if k == "trace":
+            reqs = a["requests"]
+            return reqs[index + 1]["at"] if index + 1 < len(reqs) else None
+        if k == "closed":
+            return None
+        if k == "poisson":
+            return now + exp_gap(tr.gaps, a["mean_gap"])
+        while now >= tr.dwell_end:
+            tr.burst = not tr.burst
+            mean = a["mean_dwell_burst"] if tr.burst else a["mean_dwell_calm"]
+            tr.dwell_end += exp_gap(tr.gaps, mean)
+        mean = a["mean_gap_burst"] if tr.burst else a["mean_gap_calm"]
+        return now + exp_gap(tr.gaps, mean)
+
+    # -- arrival: content, next arrival, admission, poke (sim.rs order) --
+
+    def on_arrival(self, t, tenant, client, index):
+        model, rows, kind, cls = self.request_content(tenant, client, index)
+        nxt = self.next_open_arrival(tenant, t, index)
+        if nxt is not None and nxt <= self.horizon:
+            self.push_live(nxt, ("arr", tenant, 0, index + 1))
+        rid = len(self.outcomes)
+        self.submitted += 1
+        tr = self.tenants[tenant]
+        if not tr.bucket.admit(t):
+            reason = "bucket"
+        elif should_shed(self.cfg["shed_watermark"], cls, len(self.fifo)):
+            reason = "watermark"
+        elif len(self.fifo) >= self.cfg["queue_cap"]:
+            reason = "capacity"
+        else:
+            reason = None
+        if reason is not None:
+            self.shed[reason] += 1
+            self.outcomes.append(Record(rid, tenant, "shed", t))
+            self.push_closed_next(t, tenant, client, index)
+        else:
+            self.outcomes.append(Record(rid, tenant, "pending", t))
+            self.fifo.append(SimReq(rid, tenant, client, index, t, model, rows, kind, cls))
+        self.poke(t)
+
+    def request_content(self, tenant, client, index):
+        tr = self.tenants[tenant]
+        a = tr.arrival
+        if a["kind"] == "closed":
+            return self.closed_draw(tr, tenant, client, index)
+        if a["kind"] == "trace":
+            r = a["requests"][index]
+            return (
+                r["model"],
+                max(1, r["rows"]),
+                r.get("pipeline", "skewed"),
+                r.get("class", "batch"),
+            )
+        model = tr.content.below(len(self.models))
+        rows = tr.min_rows + tr.content.below(tr.max_rows - tr.min_rows + 1)
+        kind = tr.kinds[tr.content.below(len(tr.kinds))]
+        cls = "interactive" if tr.content.chance(tr.frac) else "batch"
+        return model, rows, kind, cls
+
+    def closed_draw(self, tr, tenant, client, index):
+        base = self.seed ^ (tenant * TENANT_MIX & MASK)
+        rng = Rng(base ^ ((client + 1) * CONTENT_MIX & MASK) ^ ((index + 1) * ARRIVAL_MIX & MASK))
+        model = rng.below(len(self.models))
+        rows = tr.min_rows + rng.below(tr.max_rows - tr.min_rows + 1)
+        kind = tr.kinds[rng.below(len(tr.kinds))]
+        cls = "interactive" if rng.chance(tr.frac) else "batch"
+        return model, rows, kind, cls
+
+    def push_closed_next(self, t, tenant, client, index):
+        a = self.tenants[tenant].arrival
+        if a["kind"] == "closed" and index + 1 < a["requests_per_client"]:
+            self.push_live(t, ("arr", tenant, client, index + 1))
+
+    # -- batcher (poke loop mirrors sim.rs poke_batcher) --
+
+    def on_window_close(self, t, batch_seq):
+        if self.batcher[0] == "col" and self.batcher[1] == batch_seq:
+            self.poke(t)
+
+    def poke(self, t):
+        cfg = self.cfg
+        while True:
+            st = self.batcher
+            if st[0] == "blocked":
+                return
+            if st[0] == "idle":
+                i = anchor_index(
+                    (r.cls for r in self.fifo), self.front_bypassed, MAX_FRONT_BYPASS
+                )
+                if i is None:
+                    return
+                if i == 0:
+                    self.front_bypassed = 0
+                else:
+                    self.front_bypassed += 1
+                anchor = self.fifo.pop(i)
+                window = (
+                    cfg["interactive_window"]
+                    if anchor.cls == "interactive"
+                    else cfg["batch_window"]
+                )
+                seq = self.next_batch_seq
+                self.next_batch_seq += 1
+                self.batcher = (
+                    "col",
+                    seq,
+                    anchor.model,
+                    anchor.kind,
+                    anchor.rows,
+                    [anchor],
+                    t + window,
+                    False,
+                )
+                continue
+            _, seq, model, kind, rows, parts, deadline, scheduled = st
+            i = 0
+            while i < len(self.fifo):
+                if batch_caps_reached(
+                    len(parts), rows, cfg["max_batch_requests"], cfg["max_batch_rows"]
+                ):
+                    break
+                c = self.fifo[i]
+                if member_fits(model, kind, rows, cfg["max_batch_rows"], c.model, c.kind, c.rows):
+                    self.fifo.pop(i)
+                    rows += c.rows
+                    parts.append(c)
+                else:
+                    i += 1
+            caps = batch_caps_reached(
+                len(parts), rows, cfg["max_batch_requests"], cfg["max_batch_rows"]
+            )
+            waiting = any(r.cls == "interactive" for r in self.fifo)
+            early = waiting or any(p.cls == "interactive" for p in parts[1:])
+            if caps or early or t >= deadline:
+                self.batcher = ("idle",)
+                if not self.dispatch(t, model, kind, rows, parts):
+                    return
+            else:
+                if not scheduled:
+                    self.push_live(deadline, ("win", seq))
+                self.batcher = ("col", seq, model, kind, rows, parts, deadline, True)
+                return
+
+    # -- dispatch + shard mailboxes (sim.rs dispatch/deliver) --
+
+    def service_cycles(self, model, kind, m_rows):
+        key = (model, kind, m_rows)
+        got = self.svc_memo.get(key)
+        if got is None:
+            k, n = self.models[model]
+            s, d, tail = KIND_SPECS[kind]
+            tiles = tile_plan(m_rows, k, n, self.run_rows, self.run_cols)
+            got = layer_timing(s, d, tail, m_rows, self.run_rows, tiles, self.double_buffer)[0]
+            self.svc_memo[key] = got
+        return got
+
+    def dispatch(self, t, model, kind, rows, parts):
+        service = self.service_cycles(model, kind, rows)
+        self.batch_ids += 1
+        # Faults and drops are hash-draws against fault_rate == 0 here
+        # (asserted in __init__), so every batch is clean by contract.
+        self.batches += 1
+        self.batched_rows += rows
+        self.max_batch = max(self.max_batch, len(parts))
+        batch = Batch(parts, service, False)
+        eligible = range(self.active)
+        if self.policy in ("rr", "round_robin"):
+            shard = self.rr_next % self.active
+            self.rr_next += 1
+        else:
+            shard = min(eligible, key=lambda s: (self.shards[s].inflight, s))
+        self.shards[shard].inflight += 1
+        return self.deliver(t, shard, batch)
+
+    def deliver(self, t, shard, batch):
+        sh = self.shards[shard]
+        if sh.running is None and not sh.mailbox:
+            self.push_live(t + batch.service, ("done", shard))
+            sh.running = batch
+            return True
+        if len(sh.mailbox) < MAILBOX_DEPTH:
+            sh.mailbox.append(batch)
+            return True
+        self.batcher = ("blocked", batch, shard)
+        return False
+
+    def on_shard_done(self, t, shard):
+        sh = self.shards[shard]
+        batch = sh.running
+        sh.running = None
+        size = len(batch.parts)
+        for p in batch.parts:
+            rec = self.outcomes[p.id]
+            rec.shard = shard
+            rec.done = t
+            rec.batch_size = size
+            rec.service = batch.service
+            if batch.drop:
+                rec.status = "failed"
+                self.failed += 1
+            else:
+                rec.status = "served"
+                self.served += 1
+        sh.inflight -= 1
+        if sh.mailbox:
+            nxt = sh.mailbox.pop(0)
+            self.push_live(t + nxt.service, ("done", shard))
+            sh.running = nxt
+        for p in batch.parts:
+            self.push_closed_next(t, p.tenant, p.client, p.index)
+        if self.batcher[0] == "blocked" and self.batcher[2] == shard:
+            blocked = self.batcher[1]
+            self.batcher = ("idle",)
+            assert self.deliver(t, shard, blocked), "mailbox must have room after a completion"
+        self.poke(t)
+
+    def result(self):
+        total_shed = sum(self.shed.values())
+        assert self.submitted == self.served + total_shed + self.failed, "accounting"
+        return {
+            "submitted": self.submitted,
+            "served": self.served,
+            "shed": total_shed,
+            "shed_bucket": self.shed["bucket"],
+            "shed_watermark": self.shed["watermark"],
+            "shed_capacity": self.shed["capacity"],
+            "failed": self.failed,
+            "batches": self.batches,
+            "batched_rows": self.batched_rows,
+            "max_batch": self.max_batch,
+            "wall_cycles": self.now,
+            "fingerprint": "%016x" % fingerprint(self.outcomes),
+        }
+
+
+# ---------------------------------------------------------------------------
+# The golden scenario.  Every knob explicit; decimal literals restricted
+# to values any digit-accumulation float parser lands on exactly.
+
+
+SCENARIO = {
+    "run": {"rows": 8, "cols": 8, "in_fmt": "bf16", "double_buffer": True},
+    "fleet": {
+        "shards": 2,
+        "min_shards": 2,
+        "max_shards": 2,
+        "queue_cap": 12,
+        "shed_watermark": 6,
+        "batch_window": 400,
+        "interactive_window": 40,
+        "max_batch_requests": 4,
+        "max_batch_rows": 16,
+        "plan_cache_cap": 32,
+        "shard_policy": "rr",
+        "fault_rate": 0.0,
+        "fault_drop_rate": 0.0,
+        "horizon": 120000,
+        "autoscale_interval": 0,
+        "seed": 423009317,
+        "record_limit": 4096,
+        "models": [{"k": 24, "n": 16}, {"k": 40, "n": 8}],
+        "tenants": [
+            {
+                "name": "steady",
+                "arrival": {"kind": "poisson", "mean_gap": 700.0},
+                "kinds": "skewed",
+                "interactive_fraction": 0.25,
+                "min_rows": 2,
+                "max_rows": 6,
+                "bucket_capacity": 0,
+                "bucket_refill": 1,
+            },
+            {
+                "name": "bursty",
+                "arrival": {
+                    "kind": "mmpp",
+                    "mean_gap_calm": 3000.0,
+                    "mean_gap_burst": 80.0,
+                    "mean_dwell_calm": 20000.0,
+                    "mean_dwell_burst": 8000.0,
+                },
+                "kinds": "baseline-3b,skewed",
+                "interactive_fraction": 0.1,
+                "min_rows": 1,
+                "max_rows": 4,
+                "bucket_capacity": 0,
+                "bucket_refill": 1,
+            },
+            {
+                "name": "capped",
+                "arrival": {"kind": "poisson", "mean_gap": 300.0},
+                "kinds": "skewed",
+                "interactive_fraction": 0.2,
+                "min_rows": 2,
+                "max_rows": 5,
+                "bucket_capacity": 3,
+                "bucket_refill": 1500,
+            },
+            {
+                "name": "replay",
+                "arrival": {
+                    "kind": "trace",
+                    "requests": [
+                        {"at": 0, "model": 0, "rows": 3, "pipeline": "skewed",
+                         "class": "interactive"},
+                        {"at": 50, "model": 0, "rows": 2, "pipeline": "skewed", "class": "batch"},
+                        {"at": 60, "model": 1, "rows": 2, "pipeline": "skewed", "class": "batch"},
+                        {"at": 70, "model": 1, "rows": 2, "pipeline": "skewed", "class": "batch"},
+                        {"at": 90, "model": 1, "rows": 1, "pipeline": "baseline-3b",
+                         "class": "interactive"},
+                        {"at": 20000, "model": 0, "rows": 4, "pipeline": "skewed",
+                         "class": "batch"},
+                        {"at": 20010, "model": 0, "rows": 4, "pipeline": "skewed",
+                         "class": "batch"},
+                        {"at": 20020, "model": 0, "rows": 4, "pipeline": "skewed",
+                         "class": "batch"},
+                        {"at": 20030, "model": 0, "rows": 4, "pipeline": "skewed",
+                         "class": "batch"},
+                        {"at": 20040, "model": 0, "rows": 4, "pipeline": "skewed",
+                         "class": "batch"},
+                    ],
+                },
+                "kinds": "skewed",
+                "interactive_fraction": 0.0,
+                "min_rows": 1,
+                "max_rows": 8,
+                "bucket_capacity": 0,
+                "bucket_refill": 1,
+            },
+            {
+                "name": "loop",
+                "arrival": {"kind": "closed", "clients": 2, "requests_per_client": 30},
+                "kinds": "skewed",
+                "interactive_fraction": 0.2,
+                "min_rows": 2,
+                "max_rows": 5,
+                "bucket_capacity": 0,
+                "bucket_refill": 1,
+            },
+        ],
+    },
+}
+
+
+def simulate(scenario):
+    return FleetSim(scenario["run"], scenario["fleet"]).run()
+
+
+def emit_golden():
+    expect = simulate(SCENARIO)
+    doc = {"run": SCENARIO["run"], "fleet": SCENARIO["fleet"], "expect": expect}
+    with open(GOLDEN, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {GOLDEN}")
+    for k, v in expect.items():
+        print(f"  {k}: {v}")
+
+
+def check_golden():
+    with open(GOLDEN) as f:
+        doc = json.load(f)
+    assert doc["run"] == SCENARIO["run"], "golden 'run' drifted from SCENARIO — re-emit"
+    assert doc["fleet"] == SCENARIO["fleet"], "golden 'fleet' drifted from SCENARIO — re-emit"
+    got = simulate({"run": doc["run"], "fleet": doc["fleet"]})
+    again = simulate({"run": doc["run"], "fleet": doc["fleet"]})
+    assert got == again, f"nondeterministic replay:\n{got}\nvs\n{again}"
+    want = doc["expect"]
+    assert got == want, "golden mismatch:\n" + "\n".join(
+        f"  {k}: got {got.get(k)} want {want.get(k)}" for k in sorted(set(got) | set(want))
+    )
+    # Sanity: the scenario must actually exercise the admission paths.
+    assert got["shed_bucket"] > 0, "scenario should bucket-shed"
+    assert got["shed_watermark"] > 0, "scenario should watermark-shed"
+    assert got["served"] > 100, "scenario should serve a real load"
+    assert got["max_batch"] > 1, "scenario should coalesce batches"
+    print(
+        "OK: fleet DES port matches golden "
+        f"({got['submitted']} requests, {got['batches']} batches, "
+        f"fingerprint {got['fingerprint']})"
+    )
+
+
+def main():
+    if "--emit-golden" in sys.argv[1:]:
+        emit_golden()
+    else:
+        check_golden()
+
+
+if __name__ == "__main__":
+    main()

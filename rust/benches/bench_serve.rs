@@ -13,16 +13,20 @@
 //! the `BENCH_hotpath.json` perf trajectory.  A second *chaos* tier
 //! re-runs the fleet under seeded SDC injection + stragglers (ABFT on)
 //! and appends a `serve_faults` entry: the detection/recovery ledger
-//! and the throughput overhead against the clean run.  Pass `--smoke`
-//! (or set `SKEWSA_BENCH_SMOKE=1`) for the CI-grade quick run.
+//! and the throughput overhead against the clean run.  A final *fleet*
+//! tier runs the discrete-event simulator at 100 and 1000 shards,
+//! asserting bit-identical same-seed fingerprints and recording p99 /
+//! goodput per scale.  Pass `--smoke` (or set `SKEWSA_BENCH_SMOKE=1`)
+//! for the CI-grade quick run.
 //!
 //! ```text
 //! cargo bench --bench bench_serve
 //! cargo bench --bench bench_serve -- --smoke
 //! ```
 
-use skewsa::config::{RunConfig, ServeConfig};
+use skewsa::config::{FleetConfig, RunConfig, ServeConfig};
 use skewsa::coordinator::FaultModel;
+use skewsa::fleet::{FleetSim, TenantSpec};
 use skewsa::report;
 use skewsa::serve::{
     gen_request, recv_response, run_closed_loop, DeadlineClass, LoadSpec, Server, ShardSnapshot,
@@ -279,5 +283,52 @@ fn main() {
     if smoke && obs_overhead_pct > 3.0 {
         eprintln!("OBS OVERHEAD GATE FAILED: {obs_overhead_pct:.2}% > 3% throughput tax");
         std::process::exit(1);
+    }
+
+    // --- fleet tier --------------------------------------------------------
+    // The discrete-event simulator at scales the threaded stack cannot
+    // reach: the same admission/batching/routing policies over a
+    // virtual clock, at 100 and 1000 Poisson-driven shards.  Each scale
+    // runs twice with the same seed and must produce an identical
+    // fingerprint — the bit-reproducibility the differential tests pin,
+    // measured here at fleet size.
+    for &shards in &[100usize, 1000] {
+        let horizon: u64 = if smoke { 400_000 } else { 2_000_000 };
+        let fcfg = FleetConfig {
+            shards,
+            min_shards: shards,
+            max_shards: shards,
+            horizon,
+            tenants: vec![TenantSpec::poisson("bench", 20.0)],
+            ..FleetConfig::default()
+        };
+        let t0 = Instant::now();
+        let r1 = FleetSim::simulate(&cfg, &fcfg);
+        let fleet_wall = t0.elapsed().as_secs_f64();
+        let r2 = FleetSim::simulate(&cfg, &fcfg);
+        assert_eq!(
+            r1.fingerprint, r2.fingerprint,
+            "fleet DES diverged across same-seed runs ({shards} shards)"
+        );
+        assert!(r1.accounting_balanced(), "fleet accounting imbalance at {shards} shards");
+        let p99 = r1.latency.quantile(99.0);
+        let goodput = r1.goodput_rps(cfg.clock_ghz);
+        println!(
+            "bench: fleet {shards:>4} shards  {} submitted, {} served, p99 {p99} cyc, \
+             {goodput:.0} req/s goodput, {fleet_wall:.2}s wall",
+            r1.submitted, r1.served,
+        );
+        let fleet_entry = format!(
+            "  {{\"bench\": \"fleet\", \"unix_time\": {ts}, \"smoke\": {smoke}, \
+             \"shards\": {shards}, \"horizon\": {horizon}, \"submitted\": {}, \
+             \"served\": {}, \"shed\": {}, \"failed\": {}, \"p99_cycles\": {p99}, \
+             \"goodput_rps\": {goodput:.2}, \"wall_s\": {fleet_wall:.3}, \
+             \"fingerprint\": \"{:016x}\"}}",
+            r1.submitted, r1.served, r1.shed, r1.failed, r1.fingerprint,
+        );
+        match append_json_run(&path, &fleet_entry) {
+            Ok(()) => println!("bench: fleet trajectory appended to {}", path.display()),
+            Err(e) => eprintln!("bench: could not append fleet trajectory: {e}"),
+        }
     }
 }

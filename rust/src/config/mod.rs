@@ -9,6 +9,7 @@ use crate::arith::fma::ChainCfg;
 use crate::arith::format::FpFormat;
 use crate::coordinator::router::Policy;
 use crate::coordinator::FaultModel;
+use crate::fleet::arrival::{ArrivalSpec, ModelShape, TenantSpec};
 use crate::pe::PipelineKind;
 use crate::serve::health::HealthPolicy;
 use crate::timing::model::TimingConfig;
@@ -381,6 +382,270 @@ impl ServeConfig {
     }
 }
 
+/// Fleet discrete-event simulator configuration (DESIGN.md §18): the
+/// virtual-clock analogue of [`ServeConfig`] plus arrival processes,
+/// per-tenant admission budgets and autoscaling bounds for
+/// `skewsa fleet`.  All windows and intervals are in array cycles.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Initial active shard count (clamped into `[min, max]`).
+    pub shards: usize,
+    /// Autoscaler floor.
+    pub min_shards: usize,
+    /// Provisioned shard slots — the autoscaler ceiling; the health
+    /// board is sized to this.
+    pub max_shards: usize,
+    /// Admitted-request queue capacity (arrivals beyond it are shed).
+    pub queue_cap: usize,
+    /// Queue depth at which batch-class requests are shed (0 disables;
+    /// same semantics as [`ServeConfig::shed_watermark`]).
+    pub shed_watermark: usize,
+    /// Coalescing window for batch-class anchors, cycles.
+    pub batch_window: u64,
+    /// Coalescing window for interactive anchors, cycles.
+    pub interactive_window: u64,
+    /// Most requests coalesced into one batch.
+    pub max_batch_requests: usize,
+    /// Most stacked activation rows in one batch.
+    pub max_batch_rows: usize,
+    /// Plan-cache capacity in entries.
+    pub plan_cache_cap: usize,
+    /// Shard routing policy.
+    pub shard_policy: Policy,
+    /// Quarantine state-machine knobs (shared with the threaded board).
+    pub health: HealthPolicy,
+    /// Per-batch probability of a detected (ABFT-recovered) fault —
+    /// feeds the health board only.
+    pub fault_rate: f64,
+    /// Per-batch probability the batch is dropped wholesale (all its
+    /// requests fail).
+    pub fault_drop_rate: f64,
+    /// Stop scheduling new open-loop arrivals after this cycle.
+    pub horizon: u64,
+    /// Cycles between autoscaler evaluations (0 disables autoscaling).
+    pub autoscale_interval: u64,
+    /// Max shards added per autoscale tick.
+    pub autoscale_step: usize,
+    /// p99 latency SLO for the autoscaler, cycles.
+    pub slo_p99: u64,
+    /// Seed of every stream in the simulation.
+    pub seed: u64,
+    /// Most per-request records kept in the result (the fingerprint
+    /// always covers every request).
+    pub record_limit: usize,
+    /// Served model GEMM shapes, indexed by request `model`.
+    pub models: Vec<ModelShape>,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            shards: 100,
+            min_shards: 4,
+            max_shards: 256,
+            queue_cap: 512,
+            shed_watermark: 256,
+            batch_window: 2_000,
+            interactive_window: 200,
+            max_batch_requests: 8,
+            max_batch_rows: 64,
+            plan_cache_cap: 128,
+            shard_policy: Policy::RoundRobin,
+            health: HealthPolicy::default(),
+            fault_rate: 0.0,
+            fault_drop_rate: 0.0,
+            horizon: 5_000_000,
+            autoscale_interval: 0,
+            autoscale_step: 4,
+            slo_p99: 100_000,
+            seed: 0xf1ee_7001,
+            record_limit: 4096,
+            models: vec![ModelShape { k: 256, n: 128 }, ModelShape { k: 512, n: 256 }],
+            tenants: vec![TenantSpec::poisson("default", 1_000.0)],
+        }
+    }
+}
+
+impl FleetConfig {
+    /// A small deterministic config for tests and the CI smoke gate:
+    /// paired with [`RunConfig::small`], a run finishes in well under a
+    /// second yet exercises batching, shedding and multi-shard routing.
+    pub fn smoke() -> FleetConfig {
+        FleetConfig {
+            shards: 4,
+            min_shards: 1,
+            max_shards: 8,
+            queue_cap: 64,
+            shed_watermark: 32,
+            max_batch_requests: 4,
+            max_batch_rows: 16,
+            plan_cache_cap: 64,
+            horizon: 200_000,
+            autoscale_step: 1,
+            slo_p99: 50_000,
+            models: vec![ModelShape { k: 24, n: 16 }, ModelShape { k: 32, n: 8 }],
+            tenants: vec![TenantSpec::poisson("smoke", 400.0)],
+            ..FleetConfig::default()
+        }
+    }
+
+    /// Apply a parsed JSON config object over this one.
+    pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
+        let get_usize = |key: &str| j.get(key).and_then(Json::as_usize);
+        let get_u64 = |key: &str| j.get(key).and_then(Json::as_f64).map(|v| v as u64);
+        if let Some(v) = get_usize("shards") {
+            self.shards = v.max(1);
+        }
+        if let Some(v) = get_usize("min_shards") {
+            self.min_shards = v.max(1);
+        }
+        if let Some(v) = get_usize("max_shards") {
+            self.max_shards = v.max(1);
+        }
+        if let Some(v) = get_usize("queue_cap") {
+            self.queue_cap = v.max(1);
+        }
+        if let Some(v) = get_usize("shed_watermark") {
+            self.shed_watermark = v;
+        }
+        if let Some(v) = get_u64("batch_window") {
+            self.batch_window = v;
+        }
+        if let Some(v) = get_u64("interactive_window") {
+            self.interactive_window = v;
+        }
+        if let Some(v) = get_usize("max_batch_requests") {
+            self.max_batch_requests = v.max(1);
+        }
+        if let Some(v) = get_usize("max_batch_rows") {
+            self.max_batch_rows = v.max(1);
+        }
+        if let Some(v) = get_usize("plan_cache_cap") {
+            self.plan_cache_cap = v.max(1);
+        }
+        if let Some(v) = j.get("shard_policy").and_then(Json::as_str) {
+            self.shard_policy = v.parse()?;
+        }
+        if let Some(v) = get_usize("health_window") {
+            self.health.window = v.max(1);
+        }
+        if let Some(v) = get_u64("health_fault_threshold") {
+            self.health.fault_threshold = v.max(1);
+        }
+        if let Some(v) = get_u64("quarantine_batches") {
+            self.health.quarantine_batches = v.max(1);
+        }
+        if let Some(v) = get_u64("probation_batches") {
+            self.health.probation_batches = v.max(1);
+        }
+        if let Some(v) = j.get("fault_rate").and_then(Json::as_f64) {
+            self.fault_rate = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = j.get("fault_drop_rate").and_then(Json::as_f64) {
+            self.fault_drop_rate = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = get_u64("horizon") {
+            self.horizon = v;
+        }
+        if let Some(v) = get_u64("autoscale_interval") {
+            self.autoscale_interval = v;
+        }
+        if let Some(v) = get_usize("autoscale_step") {
+            self.autoscale_step = v.max(1);
+        }
+        if let Some(v) = get_u64("slo_p99") {
+            self.slo_p99 = v.max(1);
+        }
+        if let Some(v) = get_u64("seed") {
+            self.seed = v;
+        }
+        if let Some(v) = get_usize("record_limit") {
+            self.record_limit = v;
+        }
+        if let Some(Json::Arr(items)) = j.get("models") {
+            let models: Result<Vec<_>, _> = items.iter().map(ModelShape::from_json).collect();
+            self.models = models?;
+        }
+        if let Some(Json::Arr(items)) = j.get("tenants") {
+            let tenants: Result<Vec<_>, _> = items.iter().map(TenantSpec::from_json).collect();
+            self.tenants = tenants?;
+        }
+        Ok(())
+    }
+
+    /// Load a JSON config file over this config.  Fleet keys live under
+    /// a `"fleet"` object when present (so one file can configure
+    /// [`RunConfig`] and the fleet together), else at the top level.
+    pub fn apply_file(&mut self, path: &str) -> Result<(), String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        self.apply_json(j.get("fleet").unwrap_or(&j))
+    }
+
+    /// Apply CLI overrides.  `--arrival=poisson|mmpp|closed` (with
+    /// `--mean-gap`, `--clients`, `--requests`) replaces the tenant set
+    /// with a single CLI-shaped tenant; a bare `--mean-gap` retunes the
+    /// configured Poisson tenants in place.
+    pub fn apply_args(&mut self, a: &Args) -> Result<(), String> {
+        if let Some(v) = a.get_usize("shards") {
+            self.shards = v.max(1);
+        }
+        if let Some(v) = a.get_usize("min-shards") {
+            self.min_shards = v.max(1);
+        }
+        if let Some(v) = a.get_usize("max-shards") {
+            self.max_shards = v.max(1);
+        }
+        if let Some(v) = a.get_usize("shed-watermark") {
+            self.shed_watermark = v;
+        }
+        if let Some(v) = a.get("shard-policy") {
+            self.shard_policy = v.parse()?;
+        }
+        if let Some(v) = a.get_u64("horizon") {
+            self.horizon = v;
+        }
+        if let Some(v) = a.get_u64("autoscale-interval") {
+            self.autoscale_interval = v;
+        }
+        if let Some(v) = a.get_u64("slo-p99") {
+            self.slo_p99 = v.max(1);
+        }
+        if let Some(v) = a.get_u64("seed") {
+            self.seed = v;
+        }
+        let mean_gap = a.get_f64("mean-gap");
+        if let Some(kind) = a.get("arrival") {
+            let gap = mean_gap.unwrap_or(1_000.0).max(1.0);
+            let arrival = match kind {
+                "poisson" => ArrivalSpec::Poisson { mean_gap: gap },
+                "mmpp" => ArrivalSpec::Mmpp {
+                    mean_gap_calm: gap,
+                    mean_gap_burst: gap / 10.0,
+                    mean_dwell_calm: gap * 50.0,
+                    mean_dwell_burst: gap * 10.0,
+                },
+                "closed" => ArrivalSpec::ClosedLoop {
+                    clients: a.get_usize("clients").unwrap_or(4).max(1),
+                    requests_per_client: a.get_usize("requests").unwrap_or(64).max(1),
+                },
+                other => {
+                    return Err(format!("unknown arrival '{other}' (poisson|mmpp|closed)"));
+                }
+            };
+            self.tenants = vec![TenantSpec { arrival, ..TenantSpec::poisson("cli", gap) }];
+        } else if let Some(gap) = mean_gap {
+            for t in &mut self.tenants {
+                if let ArrivalSpec::Poisson { mean_gap } = &mut t.arrival {
+                    *mean_gap = gap.max(1.0);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -529,5 +794,53 @@ mod tests {
         assert_eq!(c.rows, 4);
         assert_eq!(c.seed, 9);
         assert_eq!(c.mode, NumericMode::CycleAccurate);
+    }
+
+    #[test]
+    fn fleet_config_json_args_and_smoke() {
+        let mut f = FleetConfig::smoke();
+        assert!(f.min_shards <= f.shards && f.shards <= f.max_shards);
+        let j = Json::parse(
+            r#"{"fleet": {"shards": 16, "min_shards": 2, "max_shards": 32,
+                "horizon": 1000000, "slo_p99": 20000, "fault_drop_rate": 0.25,
+                "models": [{"k": 64, "n": 32}],
+                "tenants": [{"name": "web",
+                             "arrival": {"kind": "poisson", "mean_gap": 300}}]}}"#,
+        )
+        .unwrap();
+        f.apply_json(j.get("fleet").unwrap()).unwrap();
+        assert_eq!((f.shards, f.min_shards, f.max_shards), (16, 2, 32));
+        assert_eq!(f.horizon, 1_000_000);
+        assert_eq!(f.slo_p99, 20_000);
+        assert_eq!(f.fault_drop_rate, 0.25);
+        assert_eq!(f.models, vec![ModelShape { k: 64, n: 32 }]);
+        assert_eq!(f.tenants.len(), 1);
+        assert_eq!(f.tenants[0].name, "web");
+        let bad = Json::parse(r#"{"tenants": [{"name": "x"}]}"#).unwrap();
+        assert!(f.apply_json(&bad).is_err(), "tenant without arrival is an error");
+
+        use crate::util::cli::Cli;
+        let cli = Cli::new("t", "t")
+            .opt("shards", "", None)
+            .opt("arrival", "", None)
+            .opt("mean-gap", "", None)
+            .opt("clients", "", None)
+            .opt("requests", "", None);
+        let a = cli
+            .parse(&[
+                "--shards=8".into(),
+                "--arrival=closed".into(),
+                "--clients=3".into(),
+                "--requests=20".into(),
+            ])
+            .unwrap();
+        f.apply_args(&a).unwrap();
+        assert_eq!(f.shards, 8);
+        assert!(matches!(
+            f.tenants[0].arrival,
+            ArrivalSpec::ClosedLoop { clients: 3, requests_per_client: 20 }
+        ));
+        let bad = cli.parse(&["--arrival=warp".into()]).unwrap();
+        assert!(f.apply_args(&bad).is_err());
     }
 }

@@ -1,0 +1,474 @@
+//! Open-loop arrival processes, portable exponential sampling, and
+//! per-tenant token-bucket admission.
+//!
+//! Every draw here must be reproducible bit-for-bit by the Python port
+//! (`python/tests/test_fleet_des.py`), so the exponential sampler does
+//! **not** call libm's `ln` — whose last-bit behaviour is
+//! platform-dependent — but a short series built only from exactly-
+//! rounded IEEE-754 operations ([`neg_ln`]).  All simulator state
+//! derived from the draws is integer (cycle counts), so one ULP of
+//! headroom in the float path can never split two platforms onto
+//! different event orders.
+
+use crate::pe::PipelineKind;
+use crate::serve::request::DeadlineClass;
+use crate::util::mini_json::Json;
+use crate::util::rng::Rng;
+
+/// `-ln(u)` for `u ∈ (0, 1]`, from exactly-rounded IEEE-754 ops only.
+///
+/// Splits `u = m·2^e` with `m ∈ [1, 2)` at the bit level, evaluates
+/// `ln m = 2·atanh t` with `t = (m−1)/(m+1)` (|t| < 1/3, so the
+/// 14-term odd series converges past double precision) by Horner, and
+/// recombines with an explicit `LN2` constant.  Every step is `+ − × ÷`
+/// on binary64 — identical on any IEEE-754 platform, including the
+/// Python port.
+pub fn neg_ln(u: f64) -> f64 {
+    debug_assert!(u > 0.0 && u <= 1.0, "neg_ln domain: {u}");
+    let bits = u.to_bits();
+    let e = ((bits >> 52) & 0x7ff) as i64 - 1023;
+    let m = f64::from_bits((bits & 0x000f_ffff_ffff_ffff) | (1023u64 << 52));
+    let t = (m - 1.0) / (m + 1.0);
+    let t2 = t * t;
+    let mut s = 0.0;
+    let mut k = 27i64;
+    while k >= 1 {
+        s = s * t2 + 1.0 / k as f64;
+        k -= 2;
+    }
+    let ln_m = 2.0 * t * s;
+    // Nearest binary64 to ln 2.
+    const LN2: f64 = 0.693_147_180_559_945_3;
+    -(e as f64 * LN2 + ln_m)
+}
+
+/// Uniform in the *open-low* interval `(0, 1]` — keeps [`neg_ln`]'s
+/// argument normal and finite (the `[0,1)` form can draw exactly 0).
+pub fn unit_open(rng: &mut Rng) -> f64 {
+    ((rng.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// One exponential inter-arrival gap with the given mean, in whole
+/// cycles (floor, clamped to ≥ 1 so arrivals always advance time).
+pub fn exp_gap(rng: &mut Rng, mean_cycles: f64) -> u64 {
+    ((mean_cycles * neg_ln(unit_open(rng))) as u64).max(1)
+}
+
+/// One request of a replayed trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceReq {
+    /// Absolute arrival cycle (the trace must be sorted by `at`).
+    pub at: u64,
+    pub model: usize,
+    pub rows: usize,
+    pub kind: PipelineKind,
+    pub class: DeadlineClass,
+}
+
+/// How a tenant generates load.
+#[derive(Clone, Debug)]
+pub enum ArrivalSpec {
+    /// Open-loop Poisson: exponential gaps with the given mean.
+    Poisson { mean_gap: f64 },
+    /// Open-loop 2-state Markov-modulated Poisson (bursty): exponential
+    /// gaps at the calm or burst rate, with exponential dwell times in
+    /// each state.  Starts calm.
+    Mmpp {
+        mean_gap_calm: f64,
+        mean_gap_burst: f64,
+        mean_dwell_calm: f64,
+        mean_dwell_burst: f64,
+    },
+    /// Replay explicit timestamped requests (diurnal traces, and the
+    /// scripted scenarios of the differential tests).
+    Trace { requests: Vec<TraceReq> },
+    /// The threaded load generator's closed loop re-expressed as an
+    /// arrival process: `clients` virtual clients each submit
+    /// `requests_per_client` requests back-to-back, the next on the
+    /// completion (or rejection) of the previous.  Content draws match
+    /// [`crate::serve::loadgen::gen_request`] exactly, which is what
+    /// lets `tests/integration_fleet.rs` pin the simulator against the
+    /// real threaded server.
+    ClosedLoop { clients: usize, requests_per_client: usize },
+}
+
+impl ArrivalSpec {
+    /// Parse the arrival-process JSON schema (see README / DESIGN §18):
+    ///
+    /// ```json
+    /// {"kind": "poisson", "mean_gap": 400.0}
+    /// {"kind": "mmpp", "mean_gap_calm": 2000, "mean_gap_burst": 200,
+    ///  "mean_dwell_calm": 50000, "mean_dwell_burst": 10000}
+    /// {"kind": "trace", "requests": [
+    ///     {"at": 0, "model": 0, "rows": 4, "pipeline": "skewed",
+    ///      "class": "batch"}, ...]}
+    /// {"kind": "closed", "clients": 4, "requests_per_client": 64}
+    /// ```
+    pub fn from_json(j: &Json) -> Result<ArrivalSpec, String> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "arrival: missing 'kind'".to_string())?;
+        let f = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("arrival '{kind}': missing '{key}'"))
+        };
+        match kind {
+            "poisson" => Ok(ArrivalSpec::Poisson { mean_gap: f("mean_gap")? }),
+            "mmpp" => Ok(ArrivalSpec::Mmpp {
+                mean_gap_calm: f("mean_gap_calm")?,
+                mean_gap_burst: f("mean_gap_burst")?,
+                mean_dwell_calm: f("mean_dwell_calm")?,
+                mean_dwell_burst: f("mean_dwell_burst")?,
+            }),
+            "closed" => Ok(ArrivalSpec::ClosedLoop {
+                clients: f("clients")? as usize,
+                requests_per_client: f("requests_per_client")? as usize,
+            }),
+            "trace" => {
+                let Some(Json::Arr(items)) = j.get("requests") else {
+                    return Err("arrival 'trace': missing 'requests' array".to_string());
+                };
+                let mut requests = Vec::with_capacity(items.len());
+                for item in items {
+                    let g = |key: &str| {
+                        item.get(key)
+                            .and_then(Json::as_f64)
+                            .ok_or_else(|| format!("trace request: missing '{key}'"))
+                    };
+                    let kind: PipelineKind = item
+                        .get("pipeline")
+                        .and_then(Json::as_str)
+                        .unwrap_or("skewed")
+                        .parse()?;
+                    let class = match item.get("class").and_then(Json::as_str).unwrap_or("batch") {
+                        "interactive" => DeadlineClass::Interactive,
+                        "batch" => DeadlineClass::Batch,
+                        other => return Err(format!("trace request: unknown class '{other}'")),
+                    };
+                    requests.push(TraceReq {
+                        at: g("at")? as u64,
+                        model: g("model")? as usize,
+                        rows: (g("rows")? as usize).max(1),
+                        kind,
+                        class,
+                    });
+                }
+                if requests.windows(2).any(|w| w[0].at > w[1].at) {
+                    return Err("arrival 'trace': requests must be sorted by 'at'".to_string());
+                }
+                Ok(ArrivalSpec::Trace { requests })
+            }
+            other => Err(format!(
+                "arrival: unknown kind '{other}' (expected poisson|mmpp|trace|closed)"
+            )),
+        }
+    }
+}
+
+/// One tenant: an arrival process plus its workload shape and
+/// admission-control budget.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    pub arrival: ArrivalSpec,
+    /// Token-bucket burst capacity (0 disables the bucket).
+    pub bucket_capacity: u64,
+    /// Cycles per token refill (must be ≥ 1 when the bucket is armed).
+    pub bucket_refill_cycles: u64,
+    /// Pipeline kinds drawn uniformly per request (open-loop and
+    /// closed-loop draws alike).
+    pub kinds: Vec<PipelineKind>,
+    /// Probability a request is interactive.
+    pub interactive_fraction: f64,
+    /// Activation rows drawn uniformly in `[min_rows, max_rows]`.
+    pub min_rows: usize,
+    pub max_rows: usize,
+}
+
+impl TenantSpec {
+    /// A plain Poisson tenant with no bucket — the building block of
+    /// default fleet configs and tests.
+    pub fn poisson(name: &str, mean_gap: f64) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            arrival: ArrivalSpec::Poisson { mean_gap },
+            bucket_capacity: 0,
+            bucket_refill_cycles: 0,
+            kinds: vec![PipelineKind::Skewed],
+            interactive_fraction: 0.2,
+            min_rows: 2,
+            max_rows: 8,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<TenantSpec, String> {
+        let arrival = ArrivalSpec::from_json(
+            j.get("arrival").ok_or_else(|| "tenant: missing 'arrival'".to_string())?,
+        )?;
+        let name = j.get("name").and_then(Json::as_str).unwrap_or("tenant").to_string();
+        let kinds = match j.get("kinds").and_then(Json::as_str) {
+            Some(s) => PipelineKind::parse_list(s)?,
+            None => vec![PipelineKind::Skewed],
+        };
+        let get = |key: &str| j.get(key).and_then(Json::as_f64);
+        let min_rows = get("min_rows").map_or(2, |v| v as usize).max(1);
+        let max_rows = get("max_rows").map_or(8, |v| v as usize).max(min_rows);
+        Ok(TenantSpec {
+            name,
+            arrival,
+            bucket_capacity: get("bucket_capacity").map_or(0, |v| v as u64),
+            bucket_refill_cycles: get("bucket_refill").map_or(0, |v| v as u64).max(1),
+            kinds,
+            interactive_fraction: get("interactive_fraction").unwrap_or(0.2).clamp(0.0, 1.0),
+            min_rows,
+            max_rows,
+        })
+    }
+}
+
+/// A served model's GEMM shape: the simulator needs only `(K, N)` (and
+/// the run's element format) to quote service times — no weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelShape {
+    pub k: usize,
+    pub n: usize,
+}
+
+impl ModelShape {
+    pub fn from_json(j: &Json) -> Result<ModelShape, String> {
+        let g = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("model: missing '{key}'"))
+        };
+        Ok(ModelShape { k: g("k")?.max(1), n: g("n")?.max(1) })
+    }
+}
+
+/// Integer-exact token bucket: `capacity` tokens, one back per
+/// `refill_cycles`, lazily settled against the virtual clock.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    capacity: u64,
+    refill_cycles: u64,
+    tokens: u64,
+    last_refill: u64,
+}
+
+impl TokenBucket {
+    /// A full bucket; `capacity == 0` disables admission control.
+    pub fn new(capacity: u64, refill_cycles: u64) -> TokenBucket {
+        assert!(capacity == 0 || refill_cycles >= 1, "armed bucket needs a refill period");
+        TokenBucket { capacity, refill_cycles, tokens: capacity, last_refill: 0 }
+    }
+
+    /// Admit one request at virtual time `now` (consumes a token), or
+    /// refuse it (no token left; the request is shed).
+    pub fn admit(&mut self, now: u64) -> bool {
+        if self.capacity == 0 {
+            return true;
+        }
+        let periods = (now - self.last_refill) / self.refill_cycles;
+        if periods > 0 {
+            self.tokens = (self.tokens + periods).min(self.capacity);
+            self.last_refill += periods * self.refill_cycles;
+        }
+        if self.tokens > 0 {
+            self.tokens -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (after settling at `now`).
+    pub fn available(&mut self, now: u64) -> u64 {
+        if self.capacity == 0 {
+            return u64::MAX;
+        }
+        let periods = (now - self.last_refill) / self.refill_cycles;
+        if periods > 0 {
+            self.tokens = (self.tokens + periods).min(self.capacity);
+            self.last_refill += periods * self.refill_cycles;
+        }
+        self.tokens
+    }
+}
+
+/// Live gap-drawing state of one open-loop tenant.
+pub struct ArrivalState {
+    rng: Rng,
+    /// MMPP state: currently in the burst phase?
+    burst: bool,
+    /// MMPP: virtual time at which the current dwell ends.
+    dwell_end: u64,
+    /// Trace: next request index.
+    pub trace_idx: usize,
+}
+
+impl ArrivalState {
+    /// Gap RNG + MMPP dwell initialisation.  The first dwell draw (MMPP
+    /// only) happens here so `next_arrival` is a pure stream of
+    /// gap draws afterwards.
+    pub fn new(spec: &ArrivalSpec, rng: Rng) -> ArrivalState {
+        let mut s = ArrivalState { rng, burst: false, dwell_end: 0, trace_idx: 0 };
+        if let ArrivalSpec::Mmpp { mean_dwell_calm, .. } = spec {
+            s.dwell_end = exp_gap(&mut s.rng, *mean_dwell_calm);
+        }
+        s
+    }
+
+    /// The absolute time of the next arrival after one at `now`
+    /// (`None` when a trace is exhausted; closed-loop tenants never
+    /// call this — their arrivals are completion-driven).
+    pub fn next_arrival(&mut self, spec: &ArrivalSpec, now: u64) -> Option<u64> {
+        match spec {
+            ArrivalSpec::Poisson { mean_gap } => Some(now + exp_gap(&mut self.rng, *mean_gap)),
+            ArrivalSpec::Mmpp {
+                mean_gap_calm,
+                mean_gap_burst,
+                mean_dwell_calm,
+                mean_dwell_burst,
+            } => {
+                // Settle dwell transitions that elapsed up to `now`,
+                // then draw a gap at the current state's rate.
+                while now >= self.dwell_end {
+                    self.burst = !self.burst;
+                    let mean = if self.burst { *mean_dwell_burst } else { *mean_dwell_calm };
+                    self.dwell_end += exp_gap(&mut self.rng, mean);
+                }
+                let mean = if self.burst { *mean_gap_burst } else { *mean_gap_calm };
+                Some(now + exp_gap(&mut self.rng, mean))
+            }
+            ArrivalSpec::Trace { requests } => {
+                // `trace_idx` advances in the sim's arrival handler;
+                // here we only report the next timestamp.
+                requests.get(self.trace_idx).map(|r| r.at)
+            }
+            ArrivalSpec::ClosedLoop { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neg_ln_matches_libm_to_float_tolerance() {
+        // The series is not required to be bit-equal to libm — only to
+        // itself across platforms — but it must be *accurate*.
+        let mut rng = Rng::new(0xf1ee7);
+        for _ in 0..10_000 {
+            let u = unit_open(&mut rng);
+            let got = neg_ln(u);
+            let want = -u.ln();
+            assert!(
+                (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                "u={u}: got {got}, libm {want}"
+            );
+        }
+        assert_eq!(neg_ln(1.0), 0.0);
+    }
+
+    #[test]
+    fn exp_gap_mean_is_close_across_seeds() {
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(0x9a9 + seed);
+            let mean = 500.0;
+            let n = 40_000;
+            let total: u64 = (0..n).map(|_| exp_gap(&mut rng, mean)).sum();
+            let got = total as f64 / n as f64;
+            assert!((got - mean).abs() < mean * 0.03, "seed {seed}: mean {got}");
+        }
+    }
+
+    #[test]
+    fn token_bucket_caps_bursts_and_refills() {
+        let mut b = TokenBucket::new(3, 100);
+        assert!(b.admit(0));
+        assert!(b.admit(0));
+        assert!(b.admit(0));
+        assert!(!b.admit(0), "burst capacity exhausted");
+        assert!(!b.admit(99), "no refill before the period");
+        assert!(b.admit(100), "one token back after one period");
+        assert!(!b.admit(100));
+        // Long idle refills to capacity, not beyond.
+        assert_eq!(b.available(10_000), 3);
+        let mut open = TokenBucket::new(0, 0);
+        assert!(open.admit(123), "capacity 0 disables the bucket");
+    }
+
+    #[test]
+    fn mmpp_alternates_rates() {
+        let spec = ArrivalSpec::Mmpp {
+            mean_gap_calm: 1000.0,
+            mean_gap_burst: 10.0,
+            mean_dwell_calm: 5000.0,
+            mean_dwell_burst: 5000.0,
+        };
+        let mut st = ArrivalState::new(&spec, Rng::new(7));
+        let mut t = 0u64;
+        let mut arrivals = 0u64;
+        while let Some(next) = st.next_arrival(&spec, t) {
+            t = next;
+            arrivals += 1;
+            if t > 200_000 {
+                break;
+            }
+        }
+        // Blended rate sits strictly between the two pure rates.
+        let pure_calm = 200_000 / 1000;
+        let pure_burst = 200_000 / 10;
+        assert!(arrivals > pure_calm * 2, "{arrivals}");
+        assert!(arrivals < pure_burst, "{arrivals}");
+    }
+
+    #[test]
+    fn arrival_spec_json_round_trip_errors() {
+        let j = Json::parse(r#"{"kind": "poisson", "mean_gap": 250.5}"#).unwrap();
+        let ArrivalSpec::Poisson { mean_gap } = ArrivalSpec::from_json(&j).unwrap() else {
+            panic!("wrong variant");
+        };
+        assert_eq!(mean_gap, 250.5);
+        let j = Json::parse(
+            r#"{"kind": "trace", "requests": [
+                {"at": 5, "model": 1, "rows": 4, "pipeline": "skewed", "class": "interactive"},
+                {"at": 9, "model": 0, "rows": 2}]}"#,
+        )
+        .unwrap();
+        let ArrivalSpec::Trace { requests } = ArrivalSpec::from_json(&j).unwrap() else {
+            panic!("wrong variant");
+        };
+        assert_eq!(requests.len(), 2);
+        assert_eq!(requests[0].class, DeadlineClass::Interactive);
+        assert_eq!(requests[1].kind, PipelineKind::Skewed, "pipeline defaults to skewed");
+        assert_eq!(requests[1].class, DeadlineClass::Batch, "class defaults to batch");
+        let bad = Json::parse(r#"{"kind": "pois"}"#).unwrap();
+        assert!(ArrivalSpec::from_json(&bad).is_err());
+        let unsorted = Json::parse(
+            r#"{"kind": "trace", "requests": [{"at": 9, "model": 0, "rows": 1},
+                                             {"at": 5, "model": 0, "rows": 1}]}"#,
+        )
+        .unwrap();
+        assert!(ArrivalSpec::from_json(&unsorted).is_err());
+    }
+
+    #[test]
+    fn tenant_spec_json() {
+        let j = Json::parse(
+            r#"{"name": "web", "arrival": {"kind": "poisson", "mean_gap": 400},
+                "kinds": "baseline-3b,skewed", "interactive_fraction": 0.5,
+                "min_rows": 1, "max_rows": 4, "bucket_capacity": 8,
+                "bucket_refill": 1000}"#,
+        )
+        .unwrap();
+        let t = TenantSpec::from_json(&j).unwrap();
+        assert_eq!(t.name, "web");
+        assert_eq!(t.kinds, vec![PipelineKind::Baseline3b, PipelineKind::Skewed]);
+        assert_eq!((t.min_rows, t.max_rows), (1, 4));
+        assert_eq!((t.bucket_capacity, t.bucket_refill_cycles), (8, 1000));
+    }
+}

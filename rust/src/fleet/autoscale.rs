@@ -1,0 +1,140 @@
+//! Reactive autoscaler: grow the active shard count when observed p99
+//! latency breaches the SLO, shrink when it sits far below.
+//!
+//! Evaluation is windowed — each `AutoscaleTick` looks only at the
+//! request latencies completed since the previous tick, computes an
+//! exact nearest-rank p99 over them (the window is small enough that
+//! sorting a `Vec` beats a histogram's quantised answer), and nudges
+//! the active count by at most `step` per tick.  Growth is immediate;
+//! shrink is a *target* — the simulator only retires a shard once it is
+//! fully idle (nothing running, empty mailbox), so in-flight batches
+//! are never abandoned.
+
+/// One autoscaler evaluation, recorded for the fleet report's trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AutoscalePoint {
+    /// Virtual time of the evaluation.
+    pub t: u64,
+    /// Windowed p99 latency in cycles (0 when the window was empty).
+    pub p99: u64,
+    /// Active shard count *after* this evaluation.
+    pub active: usize,
+}
+
+/// The decision core, pure over its inputs so both the simulator and
+/// the unit tests drive it the same way.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    pub min_shards: usize,
+    pub max_shards: usize,
+    /// Max shards added per tick on an SLO breach.
+    pub step: usize,
+    /// p99 latency SLO in cycles.
+    pub slo_p99: u64,
+    window: Vec<u64>,
+}
+
+impl Autoscaler {
+    pub fn new(min_shards: usize, max_shards: usize, step: usize, slo_p99: u64) -> Autoscaler {
+        assert!(min_shards >= 1 && min_shards <= max_shards, "bad autoscale bounds");
+        Autoscaler { min_shards, max_shards, step: step.max(1), slo_p99, window: Vec::new() }
+    }
+
+    /// Record one completed request's latency into the current window.
+    pub fn observe(&mut self, latency_cycles: u64) {
+        self.window.push(latency_cycles);
+    }
+
+    /// Exact nearest-rank p99 of the current window (0 when empty).
+    pub fn window_p99(&self) -> u64 {
+        if self.window.is_empty() {
+            return 0;
+        }
+        let mut v = self.window.clone();
+        v.sort_unstable();
+        // Nearest-rank: ceil(0.99 * n), 1-based.
+        let rank = (v.len() * 99).div_ceil(100).max(1);
+        v[rank - 1]
+    }
+
+    /// Evaluate the window against the SLO and return the new active
+    /// count.  Clears the window for the next interval.
+    ///
+    /// * breach (`p99 > slo`): grow by `step`, capped at `max_shards`;
+    /// * comfortable (`p99 * 2 < slo`): shrink by 1, floored at
+    ///   `min_shards`;
+    /// * empty window: hold (no evidence either way).
+    pub fn evaluate(&mut self, active: usize) -> (u64, usize) {
+        let p99 = self.window_p99();
+        self.window.clear();
+        let next = if p99 == 0 {
+            active
+        } else if p99 > self.slo_p99 {
+            (active + self.step).min(self.max_shards)
+        } else if p99.saturating_mul(2) < self.slo_p99 {
+            active.saturating_sub(1).max(self.min_shards)
+        } else {
+            active
+        };
+        (p99, next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_on_breach_and_respects_max() {
+        let mut a = Autoscaler::new(1, 4, 2, 1000);
+        for _ in 0..10 {
+            a.observe(5000);
+        }
+        let (p99, next) = a.evaluate(1);
+        assert_eq!(p99, 5000);
+        assert_eq!(next, 3, "grew by step");
+        for _ in 0..10 {
+            a.observe(5000);
+        }
+        assert_eq!(a.evaluate(3).1, 4, "capped at max");
+        for _ in 0..10 {
+            a.observe(5000);
+        }
+        assert_eq!(a.evaluate(4).1, 4);
+    }
+
+    #[test]
+    fn shrinks_when_comfortable_and_holds_in_between() {
+        let mut a = Autoscaler::new(2, 8, 1, 1000);
+        for _ in 0..10 {
+            a.observe(100); // p99 * 2 < slo
+        }
+        assert_eq!(a.evaluate(4).1, 3);
+        for _ in 0..10 {
+            a.observe(100);
+        }
+        assert_eq!(a.evaluate(2).1, 2, "floored at min");
+        for _ in 0..10 {
+            a.observe(700); // 700*2 >= 1000 and 700 <= 1000: hold
+        }
+        assert_eq!(a.evaluate(3).1, 3);
+    }
+
+    #[test]
+    fn empty_window_holds() {
+        let mut a = Autoscaler::new(1, 8, 1, 1000);
+        assert_eq!(a.evaluate(5), (0, 5));
+    }
+
+    #[test]
+    fn p99_is_exact_nearest_rank() {
+        let mut a = Autoscaler::new(1, 8, 1, 1000);
+        for v in 1..=100u64 {
+            a.observe(v);
+        }
+        assert_eq!(a.window_p99(), 99, "rank ceil(0.99*100)=99");
+        a.window.clear();
+        a.observe(42);
+        assert_eq!(a.window_p99(), 42, "single sample is its own p99");
+    }
+}

@@ -1,0 +1,167 @@
+//! The discrete-event core: a binary-heap event queue over virtual
+//! cycle time.
+//!
+//! Events are ordered by `(time, seq)` where `seq` is a global push
+//! counter: two events scheduled for the same cycle pop in the order
+//! they were pushed.  That tie-break is what makes the simulator a
+//! *deterministic* function of its inputs — there is no hash-map
+//! iteration, no thread interleaving and no wall clock anywhere in the
+//! fleet subsystem, so the same config and seed replay the same fleet
+//! history bit for bit (pinned by `tests/prop_fleet.rs`, and by the
+//! Python port's golden file).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What can happen in the simulated fleet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A request arrives from `tenant`.  Open-loop processes leave
+    /// `client`/`index` at 0; a closed-loop tenant's arrival is
+    /// submission `index` of virtual client `client` (the pair seeds
+    /// the content draw exactly like the threaded load generator).
+    Arrival { tenant: usize, client: usize, index: usize },
+    /// The open coalescing window of batch `batch_seq` expires.  Stale
+    /// deadlines (the batch already closed for another reason) are
+    /// ignored by the handler via the sequence check.
+    WindowClose { batch_seq: u64 },
+    /// `shard` finishes its running batch.
+    ShardDone { shard: usize },
+    /// Periodic autoscaler evaluation.
+    AutoscaleTick,
+}
+
+/// One scheduled event.  Ordering is `(time, seq)` only — the payload
+/// never participates, so determinism does not depend on `Event`'s
+/// structural order.
+#[derive(Clone, Debug)]
+struct Entry {
+    time: u64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        (self.time, self.seq) == (other.time, other.seq)
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest
+        // (time, seq) first.
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Deterministic future-event list.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    pushed: u64,
+    /// Time of the most recent pop (0 before any) — popping must never
+    /// go backwards; `pop` panics if it would, which turns a scheduling
+    /// bug into a loud test failure instead of silently warped time.
+    now: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at absolute cycle `time`.
+    ///
+    /// # Panics
+    /// If `time` is in the simulator's past — events may only be
+    /// scheduled at or after the current virtual time.
+    pub fn push(&mut self, time: u64, event: Event) {
+        assert!(time >= self.now, "event scheduled in the past: {time} < {}", self.now);
+        let seq = self.pushed;
+        self.pushed += 1;
+        self.heap.push(Entry { time, seq, event });
+    }
+
+    /// Pop the earliest event and advance virtual time to it.
+    pub fn pop(&mut self) -> Option<(u64, Event)> {
+        let e = self.heap.pop()?;
+        assert!(e.time >= self.now, "event queue popped out of time order");
+        self.now = e.time;
+        Some((e.time, e.event))
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events ever pushed (the deterministic tie-break counter).
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.push(5, Event::AutoscaleTick);
+        q.push(3, Event::ShardDone { shard: 1 });
+        q.push(5, Event::WindowClose { batch_seq: 0 });
+        q.push(3, Event::ShardDone { shard: 2 });
+        let order: Vec<(u64, Event)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(
+            order,
+            vec![
+                (3, Event::ShardDone { shard: 1 }),
+                (3, Event::ShardDone { shard: 2 }),
+                (5, Event::AutoscaleTick),
+                (5, Event::WindowClose { batch_seq: 0 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn now_tracks_the_popped_front() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.now(), 0);
+        q.push(7, Event::AutoscaleTick);
+        q.push(9, Event::AutoscaleTick);
+        q.pop();
+        assert_eq!(q.now(), 7);
+        // Scheduling at the current time is allowed (same-cycle
+        // follow-ups), in the past is not.
+        q.push(7, Event::AutoscaleTick);
+        assert_eq!(q.pop(), Some((7, Event::AutoscaleTick)));
+        assert_eq!(q.pop(), Some((9, Event::AutoscaleTick)));
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+        assert_eq!(q.pushed(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn scheduling_in_the_past_panics() {
+        let mut q = EventQueue::new();
+        q.push(10, Event::AutoscaleTick);
+        q.pop();
+        q.push(9, Event::AutoscaleTick);
+    }
+}

@@ -1,0 +1,39 @@
+//! Fleet-scale discrete-event simulation of the serving layer
+//! (DESIGN.md §18).
+//!
+//! The threaded [`crate::serve`] stack tops out at a handful of shards
+//! per process — real threads, real channels, real wall-clock.  This
+//! module replays the *same request path* (admission → shed watermark →
+//! deadline-windowed batching → plan cache → health-gated routing →
+//! bounded shard mailboxes) over a virtual cycle clock, which scales it
+//! to thousands of shards and hundreds of thousands of requests in
+//! seconds, bit-reproducibly:
+//!
+//! * [`event`] — the deterministic binary-heap event queue (virtual
+//!   time, FIFO tie-break on push order);
+//! * [`arrival`] — open-loop arrival processes (Poisson, MMPP bursts,
+//!   trace replay), closed-loop client populations, and per-tenant
+//!   token-bucket admission;
+//! * [`autoscale`] — the reactive p99-SLO autoscaler;
+//! * [`sim`] — the simulator itself, differentially pinned to the
+//!   threaded server by `tests/integration_fleet.rs` and to an
+//!   independent Python port by `python/tests/golden_fleet_des.json`.
+//!
+//! Load-management *decisions* are not reimplemented here: the
+//! simulator calls the same [`crate::serve::policy`] functions, the
+//! same [`crate::serve::PlanCache`] and the same
+//! [`crate::serve::HealthBoard`] as the threaded stack, so a policy
+//! change propagates to both worlds by construction.
+
+pub mod arrival;
+pub mod autoscale;
+pub mod event;
+pub mod sim;
+
+pub use arrival::{
+    exp_gap, neg_ln, unit_open, ArrivalSpec, ArrivalState, ModelShape, TenantSpec, TokenBucket,
+    TraceReq,
+};
+pub use autoscale::{AutoscalePoint, Autoscaler};
+pub use event::{Event, EventQueue};
+pub use sim::{fingerprint, FleetResult, FleetSim, ReqStatus, RequestRecord, MAILBOX_DEPTH};

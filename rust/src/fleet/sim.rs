@@ -1,0 +1,1129 @@
+//! The fleet simulator: the serve-layer request path replayed over a
+//! virtual cycle clock and thousands of simulated shards.
+//!
+//! One [`FleetSim`] is a deterministic function `(RunConfig,
+//! FleetConfig) → FleetResult`.  Every load-management decision calls
+//! the same [`crate::serve::policy`] functions as the threaded stack,
+//! per-batch service times come from the same [`PlanCache`] /
+//! `stream_cycles` path, shard health runs the real
+//! [`HealthBoard`] — only the clock and the transport are simulated.
+//! The event-loop contract (handler step order, event push order) is
+//! documented per handler below because the Python port
+//! (`python/tests/test_fleet_des.py`) must reproduce it exactly: event
+//! push order feeds the queue's FIFO tie-break, so it is part of the
+//! observable behaviour, not an implementation detail.
+//!
+//! Per-shard execution mirrors the threaded [`crate::serve::ShardPool`]
+//! transport: one running batch plus a bounded mailbox of
+//! [`MAILBOX_DEPTH`] buffered batches (the threaded `sync_channel(2)`),
+//! and a dispatcher that *blocks* — stops draining the queue — when its
+//! chosen shard's mailbox is full.
+
+use crate::config::{FleetConfig, RunConfig};
+use crate::coordinator::Policy;
+use crate::energy::{layer_energy, AreaModel, PowerModel};
+use crate::fleet::arrival::{ArrivalSpec, ArrivalState, TenantSpec, TokenBucket};
+use crate::fleet::autoscale::{AutoscalePoint, Autoscaler};
+use crate::fleet::event::{Event, EventQueue};
+use crate::obs::{
+    Counter, Gauge, Hist, HistSnapshot, Log2Histogram, MetricsRegistry, MetricsSnapshot,
+};
+use crate::pe::PipelineKind;
+use crate::sa::GemmShape;
+use crate::serve::cache::{CacheStats, PlanCache, PlanKey};
+use crate::serve::health::HealthBoard;
+use crate::serve::policy;
+use crate::serve::request::{DeadlineClass, RequestQueue};
+use crate::util::mini_json::Json;
+use crate::util::rng::Rng;
+use std::collections::{HashMap, VecDeque};
+
+/// Buffered batches per shard beyond the running one (the threaded
+/// shard mailbox is a `sync_channel(2)`).
+pub const MAILBOX_DEPTH: usize = 2;
+
+/// Tenant-stream mix-in for the per-tenant content RNG (open loop).
+const CONTENT_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+/// Tenant-stream mix-in for the per-tenant arrival RNG.
+const ARRIVAL_MIX: u64 = 0xcbf2_9ce4_8422_2325;
+/// Tenant mix-in for closed-loop seeds.  Multiplied by the *unshifted*
+/// tenant index so tenant 0's closed-loop draws match the threaded
+/// [`crate::serve::loadgen::gen_request`] stream for the same seed —
+/// the hinge of the differential tests.
+const TENANT_MIX: u64 = 0xa076_1d64_78bd_642f;
+/// Salts for the per-batch fault/drop draws (order-independent hashes,
+/// so autoscaling or routing changes don't reshuffle fault outcomes).
+const FAULT_SALT: u64 = 0x8d29_5fb5_a2c1_6e01;
+const DROP_SALT: u64 = 0x3c79_ac49_2c1d_4c5d;
+
+/// SplitMix64 finalizer: one well-mixed u64 from one u64.
+fn mix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Uniform in `[0, 1)` from a hash (same `>> 11` ladder as the RNG).
+fn hash_unit(seed: u64) -> f64 {
+    (mix64(seed) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Terminal (or pending) state of one simulated request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqStatus {
+    /// Still queued or in flight (only observable mid-run).
+    Pending,
+    Served,
+    /// Rejected at admission (bucket, watermark or capacity).
+    Shed,
+    /// Its batch was dropped wholesale by the fault model.
+    Failed,
+}
+
+impl ReqStatus {
+    /// Stable numeric code (fingerprint + JSON + Python port).
+    pub fn code(self) -> u64 {
+        match self {
+            ReqStatus::Pending => 0,
+            ReqStatus::Served => 1,
+            ReqStatus::Shed => 2,
+            ReqStatus::Failed => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReqStatus::Pending => "pending",
+            ReqStatus::Served => "served",
+            ReqStatus::Shed => "shed",
+            ReqStatus::Failed => "failed",
+        }
+    }
+}
+
+/// One request's full observable outcome.  The differential and golden
+/// tests compare these records; [`fingerprint`] folds them (in id
+/// order) into the run's identity.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub tenant: usize,
+    pub status: ReqStatus,
+    /// Shard that served (or dropped) the request's batch.
+    pub shard: Option<usize>,
+    /// Arrival cycle.
+    pub submit: u64,
+    /// Completion (or shed) cycle.
+    pub done: u64,
+    /// Members of the batch the request was served in.
+    pub batch_size: usize,
+    /// The batch's quoted service time in cycles.
+    pub service: u64,
+}
+
+/// FNV-1a over the records' observable fields in id order — the
+/// bit-identity of a run.  Excludes cache hit/miss (LRU internals) and
+/// energy (floats): those are *reported*, not part of the identity the
+/// cross-language golden pins.
+pub fn fingerprint(records: &[RequestRecord]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for r in records {
+        eat(r.id);
+        eat(r.status.code());
+        eat(r.shard.map_or(u64::MAX, |s| s as u64));
+        eat(r.submit);
+        eat(r.done);
+        eat(r.batch_size as u64);
+        eat(r.service);
+    }
+    h
+}
+
+/// A queued (admitted, not yet batched) request.
+#[derive(Clone, Debug)]
+struct SimReq {
+    id: u64,
+    tenant: usize,
+    /// Closed-loop provenance (0 for open-loop arrivals).
+    client: usize,
+    index: usize,
+    submit: u64,
+    model: usize,
+    rows: usize,
+    kind: PipelineKind,
+    class: DeadlineClass,
+}
+
+/// A closed batch en route to (or running on) a shard.
+#[derive(Clone, Debug)]
+struct ReadyBatch {
+    parts: Vec<SimReq>,
+    service: u64,
+    faults: u64,
+    drop: bool,
+}
+
+#[derive(Default)]
+struct ShardSim {
+    running: Option<ReadyBatch>,
+    mailbox: VecDeque<ReadyBatch>,
+    /// Batches routed here and not yet completed (the least-loaded
+    /// router's live signal, incremented at pick time like the
+    /// threaded router's acquire).
+    inflight: u64,
+}
+
+/// The batcher's state machine (the threaded `Batcher::next_batch`
+/// loop, unrolled into event-driven form).
+#[derive(Default)]
+enum BatcherState {
+    #[default]
+    Idle,
+    Collecting {
+        seq: u64,
+        model: usize,
+        kind: PipelineKind,
+        rows: usize,
+        parts: Vec<SimReq>,
+        deadline: u64,
+        scheduled: bool,
+    },
+    /// The dispatcher's chosen shard had a full mailbox: the batch
+    /// waits, and the batcher stops draining (threaded backpressure).
+    Blocked { batch: ReadyBatch, shard: usize },
+}
+
+struct TenantRuntime {
+    spec: TenantSpec,
+    /// Open-loop content draws (model/rows/kind/class, in that order).
+    content: Rng,
+    state: ArrivalState,
+    bucket: TokenBucket,
+}
+
+impl TenantRuntime {
+    /// Absolute time of this tenant's next arrival after one at `now`
+    /// with arrival index `index` (`None`: exhausted or closed-loop).
+    fn next_open_arrival(&mut self, now: u64, index: usize) -> Option<u64> {
+        match &self.spec.arrival {
+            ArrivalSpec::Trace { requests } => requests.get(index + 1).map(|r| r.at),
+            ArrivalSpec::ClosedLoop { .. } => None,
+            spec => self.state.next_arrival(spec, now),
+        }
+    }
+}
+
+/// Everything a fleet run reports.
+#[derive(Clone, Debug)]
+pub struct FleetResult {
+    pub submitted: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub failed: u64,
+    pub shed_bucket: u64,
+    pub shed_watermark: u64,
+    pub shed_capacity: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub max_batch: usize,
+    /// Virtual time of the last event.
+    pub wall_cycles: u64,
+    /// Served-request latency (cycles, arrival → completion).
+    pub latency: HistSnapshot,
+    /// Per-batch quoted service times (cycles).
+    pub service: HistSnapshot,
+    pub cache: CacheStats,
+    pub autoscale: Vec<AutoscalePoint>,
+    pub final_active: usize,
+    pub quarantines: u64,
+    /// Array energy of every dispatched batch (µJ, from the power
+    /// model — reported, not part of the fingerprint).
+    pub energy_uj: f64,
+    pub fingerprint: u64,
+    /// Per-request outcomes, capped at `FleetConfig::record_limit`.
+    pub records: Vec<RequestRecord>,
+    /// The run's metrics registry snapshot (`fleet_*` families).
+    pub metrics: MetricsSnapshot,
+}
+
+impl FleetResult {
+    /// The conservation law the `--smoke` CI gate enforces: every
+    /// submitted request is served, shed or failed.
+    pub fn accounting_balanced(&self) -> bool {
+        self.submitted == self.served + self.shed + self.failed
+            && self.shed_bucket + self.shed_watermark + self.shed_capacity == self.shed
+    }
+
+    /// Served requests per wall-clock second at the given array clock.
+    pub fn goodput_rps(&self, clock_ghz: f64) -> f64 {
+        if self.wall_cycles == 0 {
+            return 0.0;
+        }
+        self.served as f64 / (self.wall_cycles as f64 / (clock_ghz * 1e9))
+    }
+
+    /// Served requests per joule of simulated array energy.
+    pub fn goodput_per_joule(&self) -> f64 {
+        if self.energy_uj <= 0.0 {
+            return 0.0;
+        }
+        self.served as f64 / (self.energy_uj * 1e-6)
+    }
+
+    pub fn to_json(&self, clock_ghz: f64) -> Json {
+        let counts = Json::obj()
+            .set("submitted", Json::Num(self.submitted as f64))
+            .set("served", Json::Num(self.served as f64))
+            .set("shed", Json::Num(self.shed as f64))
+            .set("failed", Json::Num(self.failed as f64))
+            .set("shed_bucket", Json::Num(self.shed_bucket as f64))
+            .set("shed_watermark", Json::Num(self.shed_watermark as f64))
+            .set("shed_capacity", Json::Num(self.shed_capacity as f64));
+        let latency = Json::obj()
+            .set("p50_cycles", Json::Num(self.latency.quantile(50.0) as f64))
+            .set("p99_cycles", Json::Num(self.latency.quantile(99.0) as f64))
+            .set("mean_cycles", Json::Num(self.latency.mean()));
+        let autoscale = Json::Arr(
+            self.autoscale
+                .iter()
+                .map(|p| {
+                    Json::obj()
+                        .set("t", Json::Num(p.t as f64))
+                        .set("p99", Json::Num(p.p99 as f64))
+                        .set("active", Json::Num(p.active as f64))
+                })
+                .collect(),
+        );
+        let records = Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("id", Json::Num(r.id as f64))
+                        .set("tenant", Json::Num(r.tenant as f64))
+                        .set("status", Json::Str(r.status.name().into()))
+                        .set("shard", r.shard.map_or(Json::Null, |s| Json::Num(s as f64)))
+                        .set("submit", Json::Num(r.submit as f64))
+                        .set("done", Json::Num(r.done as f64))
+                        .set("batch_size", Json::Num(r.batch_size as f64))
+                        .set("service", Json::Num(r.service as f64))
+                })
+                .collect(),
+        );
+        Json::obj()
+            .set("counts", counts)
+            .set("batches", Json::Num(self.batches as f64))
+            .set("batched_rows", Json::Num(self.batched_rows as f64))
+            .set("max_batch", Json::Num(self.max_batch as f64))
+            .set("wall_cycles", Json::Num(self.wall_cycles as f64))
+            .set("latency", latency)
+            .set("goodput_rps", Json::Num(self.goodput_rps(clock_ghz)))
+            .set("energy_uj", Json::Num(self.energy_uj))
+            .set("goodput_per_joule", Json::Num(self.goodput_per_joule()))
+            .set("final_active", Json::Num(self.final_active as f64))
+            .set("quarantines", Json::Num(self.quarantines as f64))
+            .set("cache_hit_rate", Json::Num(self.cache.hit_rate()))
+            .set("fingerprint", Json::Str(format!("{:016x}", self.fingerprint)))
+            .set("autoscale", autoscale)
+            .set("records", records)
+    }
+}
+
+/// The simulator.  Build with [`FleetSim::new`], consume with
+/// [`FleetSim::run`].
+pub struct FleetSim {
+    run: RunConfig,
+    cfg: FleetConfig,
+    queue: EventQueue,
+    fifo: VecDeque<SimReq>,
+    front_bypassed: usize,
+    batcher: BatcherState,
+    next_batch_seq: u64,
+    batch_ids: u64,
+    cache: PlanCache,
+    health: HealthBoard,
+    shards: Vec<ShardSim>,
+    active: usize,
+    rr_next: u64,
+    scaler: Autoscaler,
+    tenants: Vec<TenantRuntime>,
+    pmodel: PowerModel,
+    energy_memo: HashMap<PlanKey, f64>,
+    energy_uj: f64,
+    outcomes: Vec<RequestRecord>,
+    autoscale: Vec<AutoscalePoint>,
+    batched_rows: u64,
+    max_batch: usize,
+    registry: MetricsRegistry,
+    c_submitted: Counter,
+    c_served: Counter,
+    c_failed: Counter,
+    c_shed_bucket: Counter,
+    c_shed_watermark: Counter,
+    c_shed_capacity: Counter,
+    c_batches: Counter,
+    c_dropped: Counter,
+    g_active: Gauge,
+    h_latency: Hist,
+    h_service: Hist,
+}
+
+impl FleetSim {
+    pub fn new(run: &RunConfig, cfg: &FleetConfig) -> FleetSim {
+        assert!(!cfg.models.is_empty(), "fleet config needs at least one model");
+        assert!(!cfg.tenants.is_empty(), "fleet config needs at least one tenant");
+        assert!(cfg.min_shards >= 1 && cfg.min_shards <= cfg.max_shards, "bad shard bounds");
+        assert!(cfg.queue_cap >= 1 && cfg.max_batch_requests >= 1 && cfg.max_batch_rows >= 1);
+        for t in &cfg.tenants {
+            assert!(!t.kinds.is_empty(), "tenant {} has no pipeline kinds", t.name);
+            assert!(t.min_rows >= 1 && t.min_rows <= t.max_rows, "tenant {} rows", t.name);
+            if let ArrivalSpec::Trace { requests } = &t.arrival {
+                assert!(
+                    requests.iter().all(|r| r.model < cfg.models.len()),
+                    "tenant {} trace names an unknown model",
+                    t.name
+                );
+            }
+        }
+        let tenants = cfg
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(ti, spec)| {
+                let ti = ti as u64;
+                let content = Rng::new(cfg.seed ^ (ti + 1).wrapping_mul(CONTENT_MIX));
+                let arrival = Rng::new(cfg.seed ^ (ti + 1).wrapping_mul(ARRIVAL_MIX));
+                TenantRuntime {
+                    spec: spec.clone(),
+                    content,
+                    state: ArrivalState::new(&spec.arrival, arrival),
+                    bucket: TokenBucket::new(spec.bucket_capacity, spec.bucket_refill_cycles),
+                }
+            })
+            .collect();
+        let registry = MetricsRegistry::default();
+        let c_submitted = registry.counter("fleet_requests.submitted");
+        let c_served = registry.counter("fleet_requests.served");
+        let c_failed = registry.counter("fleet_requests.failed");
+        let c_shed_bucket = registry.counter("fleet_shed.bucket");
+        let c_shed_watermark = registry.counter("fleet_shed.watermark");
+        let c_shed_capacity = registry.counter("fleet_shed.capacity");
+        let c_batches = registry.counter("fleet_batches.dispatched");
+        let c_dropped = registry.counter("fleet_batches.dropped");
+        let g_active = registry.gauge("fleet_active_shards");
+        let h_latency = registry.histogram("fleet_latency_cycles");
+        let h_service = registry.histogram("fleet_service_cycles");
+        let active = cfg.shards.clamp(cfg.min_shards, cfg.max_shards);
+        g_active.set(active as u64);
+        FleetSim {
+            run: run.clone(),
+            cfg: cfg.clone(),
+            queue: EventQueue::new(),
+            fifo: VecDeque::new(),
+            front_bypassed: 0,
+            batcher: BatcherState::Idle,
+            next_batch_seq: 0,
+            batch_ids: 0,
+            cache: PlanCache::new(cfg.plan_cache_cap),
+            health: HealthBoard::new(cfg.health, cfg.max_shards),
+            shards: (0..cfg.max_shards).map(|_| ShardSim::default()).collect(),
+            active,
+            rr_next: 0,
+            scaler: Autoscaler::new(
+                cfg.min_shards,
+                cfg.max_shards,
+                cfg.autoscale_step,
+                cfg.slo_p99,
+            ),
+            tenants,
+            pmodel: PowerModel::new(AreaModel::new(run.chain())),
+            energy_memo: HashMap::new(),
+            energy_uj: 0.0,
+            outcomes: Vec::new(),
+            autoscale: Vec::new(),
+            batched_rows: 0,
+            max_batch: 0,
+            registry,
+            c_submitted,
+            c_served,
+            c_failed,
+            c_shed_bucket,
+            c_shed_watermark,
+            c_shed_capacity,
+            c_batches,
+            c_dropped,
+            g_active,
+            h_latency,
+            h_service,
+        }
+    }
+
+    /// Convenience: build and run in one call.
+    pub fn simulate(run: &RunConfig, cfg: &FleetConfig) -> FleetResult {
+        FleetSim::new(run, cfg).run()
+    }
+
+    /// Drain the event queue to completion and report.
+    pub fn run(mut self) -> FleetResult {
+        self.seed_initial_events();
+        while let Some((t, ev)) = self.queue.pop() {
+            match ev {
+                Event::Arrival { tenant, client, index } => {
+                    self.on_arrival(t, tenant, client, index)
+                }
+                Event::WindowClose { batch_seq } => self.on_window_close(t, batch_seq),
+                Event::ShardDone { shard } => self.on_shard_done(t, shard),
+                Event::AutoscaleTick => self.on_autoscale(t),
+            }
+        }
+        self.finish()
+    }
+
+    /// Initial schedule, in tenant order: open-loop tenants get their
+    /// first arrival (Poisson/MMPP: one gap after cycle 0; trace: its
+    /// first timestamp), closed-loop tenants submit for every client at
+    /// cycle 0 in client order.  One `AutoscaleTick` closes the seed
+    /// schedule when autoscaling is armed.
+    fn seed_initial_events(&mut self) {
+        let horizon = self.cfg.horizon;
+        for ti in 0..self.tenants.len() {
+            match &self.tenants[ti].spec.arrival {
+                ArrivalSpec::ClosedLoop { clients, requests_per_client } => {
+                    if *requests_per_client == 0 {
+                        continue;
+                    }
+                    for c in 0..*clients {
+                        self.queue.push(0, Event::Arrival { tenant: ti, client: c, index: 0 });
+                    }
+                }
+                ArrivalSpec::Trace { requests } => {
+                    let first = requests.first().map(|r| r.at);
+                    if let Some(at) = first.filter(|&v| v <= horizon) {
+                        self.queue.push(at, Event::Arrival { tenant: ti, client: 0, index: 0 });
+                    }
+                }
+                _ => {
+                    let first = self.tenants[ti].next_open_arrival(0, 0);
+                    if let Some(t0) = first.filter(|&v| v <= horizon) {
+                        self.queue.push(t0, Event::Arrival { tenant: ti, client: 0, index: 0 });
+                    }
+                }
+            }
+        }
+        if self.cfg.autoscale_interval > 0 {
+            self.queue.push(self.cfg.autoscale_interval, Event::AutoscaleTick);
+        }
+    }
+
+    /// Arrival handler.  Step order (load-bearing for the Python port):
+    /// 1. draw/read the request content;
+    /// 2. schedule the tenant's next open-loop arrival (if ≤ horizon);
+    /// 3. admission: token bucket, then shed watermark, then queue
+    ///    capacity — a rejected closed-loop client submits its next
+    ///    request immediately (the threaded client's shed reply is
+    ///    instant);
+    /// 4. poke the batcher.
+    fn on_arrival(&mut self, t: u64, tenant: usize, client: usize, index: usize) {
+        let (model, rows, kind, class) = self.request_content(tenant, client, index);
+        let horizon = self.cfg.horizon;
+        let next = self.tenants[tenant].next_open_arrival(t, index).filter(|&v| v <= horizon);
+        if let Some(next) = next {
+            self.queue.push(next, Event::Arrival { tenant, client: 0, index: index + 1 });
+        }
+        let id = self.outcomes.len() as u64;
+        self.c_submitted.inc();
+        let reason = if !self.tenants[tenant].bucket.admit(t) {
+            Some(self.c_shed_bucket.clone())
+        } else if policy::should_shed(self.cfg.shed_watermark, class, self.fifo.len()) {
+            Some(self.c_shed_watermark.clone())
+        } else if self.fifo.len() >= self.cfg.queue_cap {
+            Some(self.c_shed_capacity.clone())
+        } else {
+            None
+        };
+        match reason {
+            Some(counter) => {
+                counter.inc();
+                self.outcomes.push(RequestRecord {
+                    id,
+                    tenant,
+                    status: ReqStatus::Shed,
+                    shard: None,
+                    submit: t,
+                    done: t,
+                    batch_size: 0,
+                    service: 0,
+                });
+                self.push_closed_loop_next(t, tenant, client, index);
+            }
+            None => {
+                self.outcomes.push(RequestRecord {
+                    id,
+                    tenant,
+                    status: ReqStatus::Pending,
+                    shard: None,
+                    submit: t,
+                    done: 0,
+                    batch_size: 0,
+                    service: 0,
+                });
+                self.fifo.push_back(SimReq {
+                    id,
+                    tenant,
+                    client,
+                    index,
+                    submit: t,
+                    model,
+                    rows,
+                    kind,
+                    class,
+                });
+            }
+        }
+        self.poke_batcher(t);
+    }
+
+    /// What arrives: a trace row is read back verbatim, an open-loop
+    /// tenant draws from its content stream (model, rows, kind, class —
+    /// in that order), a closed-loop tenant defers to [`Self::closed_draw`].
+    fn request_content(
+        &mut self,
+        tenant: usize,
+        client: usize,
+        index: usize,
+    ) -> (usize, usize, PipelineKind, DeadlineClass) {
+        if matches!(self.tenants[tenant].spec.arrival, ArrivalSpec::ClosedLoop { .. }) {
+            return self.closed_draw(tenant, client, index);
+        }
+        let models = self.cfg.models.len() as u64;
+        let tr = &mut self.tenants[tenant];
+        match &tr.spec.arrival {
+            ArrivalSpec::Trace { requests } => {
+                let r = &requests[index];
+                (r.model, r.rows, r.kind, r.class)
+            }
+            _ => {
+                let model = tr.content.below(models) as usize;
+                let span = (tr.spec.max_rows - tr.spec.min_rows + 1) as u64;
+                let rows = tr.spec.min_rows + tr.content.below(span) as usize;
+                let kind = tr.spec.kinds[tr.content.below(tr.spec.kinds.len() as u64) as usize];
+                let class = if tr.content.chance(tr.spec.interactive_fraction) {
+                    DeadlineClass::Interactive
+                } else {
+                    DeadlineClass::Batch
+                };
+                (model, rows, kind, class)
+            }
+        }
+    }
+
+    /// Closed-loop content draw: a fresh RNG per `(client, index)` with
+    /// the threaded load generator's exact seed mix and draw order
+    /// (model, rows, kind, class — the activation draws that follow in
+    /// the threaded path touch a then-dead RNG, so skipping them is
+    /// stream-safe).
+    fn closed_draw(
+        &mut self,
+        tenant: usize,
+        client: usize,
+        index: usize,
+    ) -> (usize, usize, PipelineKind, DeadlineClass) {
+        let spec = &self.tenants[tenant].spec;
+        let base = self.cfg.seed ^ (tenant as u64).wrapping_mul(TENANT_MIX);
+        let mut rng = Rng::new(
+            base ^ (client as u64 + 1).wrapping_mul(CONTENT_MIX)
+                ^ (index as u64 + 1).wrapping_mul(ARRIVAL_MIX),
+        );
+        let model = rng.below(self.cfg.models.len() as u64) as usize;
+        let rows = spec.min_rows + rng.below((spec.max_rows - spec.min_rows + 1) as u64) as usize;
+        let kind = spec.kinds[rng.below(spec.kinds.len() as u64) as usize];
+        let class = if rng.chance(spec.interactive_fraction) {
+            DeadlineClass::Interactive
+        } else {
+            DeadlineClass::Batch
+        };
+        (model, rows, kind, class)
+    }
+
+    /// Schedule a closed-loop client's next submission at `t` (after a
+    /// completion or an instant shed reply).  No-op for open loops and
+    /// exhausted clients.
+    fn push_closed_loop_next(&mut self, t: u64, tenant: usize, client: usize, index: usize) {
+        if let ArrivalSpec::ClosedLoop { requests_per_client, .. } =
+            self.tenants[tenant].spec.arrival
+        {
+            if index + 1 < requests_per_client {
+                self.queue.push(t, Event::Arrival { tenant, client, index: index + 1 });
+            }
+        }
+    }
+
+    /// A coalescing window expired.  Only acts when the batcher is
+    /// still collecting the *same* batch sequence — a deadline for a
+    /// batch that already closed (caps / early close) is stale.
+    fn on_window_close(&mut self, t: u64, batch_seq: u64) {
+        let live =
+            matches!(&self.batcher, BatcherState::Collecting { seq, .. } if *seq == batch_seq);
+        if live {
+            self.poke_batcher(t);
+        }
+    }
+
+    /// Run the batcher until it parks: blocked on a full shard, waiting
+    /// out an open window, or out of queued requests.  Mirrors the
+    /// threaded `Batcher::next_batch` decisions via the shared policy
+    /// functions.
+    fn poke_batcher(&mut self, t: u64) {
+        loop {
+            match std::mem::take(&mut self.batcher) {
+                BatcherState::Blocked { batch, shard } => {
+                    self.batcher = BatcherState::Blocked { batch, shard };
+                    return;
+                }
+                BatcherState::Idle => {
+                    let anchor_idx = policy::anchor_index(
+                        self.fifo.iter().map(|r| r.class),
+                        self.front_bypassed,
+                        RequestQueue::MAX_FRONT_BYPASS,
+                    );
+                    let Some(i) = anchor_idx else { return };
+                    if i == 0 {
+                        self.front_bypassed = 0;
+                    } else {
+                        self.front_bypassed += 1;
+                    }
+                    let anchor = self.fifo.remove(i).expect("anchor index in range");
+                    let window = policy::window_for_anchor(
+                        anchor.class,
+                        self.cfg.interactive_window,
+                        self.cfg.batch_window,
+                    );
+                    let seq = self.next_batch_seq;
+                    self.next_batch_seq += 1;
+                    self.batcher = BatcherState::Collecting {
+                        seq,
+                        model: anchor.model,
+                        kind: anchor.kind,
+                        rows: anchor.rows,
+                        parts: vec![anchor],
+                        deadline: t.saturating_add(window),
+                        scheduled: false,
+                    };
+                }
+                BatcherState::Collecting {
+                    seq,
+                    model,
+                    kind,
+                    mut rows,
+                    mut parts,
+                    deadline,
+                    scheduled,
+                } => {
+                    let mut i = 0;
+                    while i < self.fifo.len() {
+                        let caps = policy::batch_caps_reached(
+                            parts.len(),
+                            rows,
+                            self.cfg.max_batch_requests,
+                            self.cfg.max_batch_rows,
+                        );
+                        if caps {
+                            break;
+                        }
+                        let c = &self.fifo[i];
+                        let fits = policy::member_fits(
+                            model,
+                            kind,
+                            rows,
+                            self.cfg.max_batch_rows,
+                            c.model,
+                            c.kind,
+                            c.rows,
+                        );
+                        if fits {
+                            let c = self.fifo.remove(i).expect("member index in range");
+                            rows += c.rows;
+                            parts.push(c);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    let caps = policy::batch_caps_reached(
+                        parts.len(),
+                        rows,
+                        self.cfg.max_batch_requests,
+                        self.cfg.max_batch_rows,
+                    );
+                    let waiting = self.fifo.iter().any(|r| r.class == DeadlineClass::Interactive);
+                    let non_anchor = parts.iter().skip(1).map(|p| p.class);
+                    let early = policy::window_closes_early(waiting, non_anchor);
+                    if caps || early || t >= deadline {
+                        if !self.dispatch(t, model, kind, rows, parts) {
+                            return;
+                        }
+                        // Dispatched; the batcher is Idle again —
+                        // continue anchoring.
+                    } else {
+                        if !scheduled {
+                            self.queue.push(deadline, Event::WindowClose { batch_seq: seq });
+                        }
+                        self.batcher = BatcherState::Collecting {
+                            seq,
+                            model,
+                            kind,
+                            rows,
+                            parts,
+                            deadline,
+                            scheduled: true,
+                        };
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Close a batch: quote its service time off the plan cache, draw
+    /// its fault/drop outcome, route it (health-tick first, exactly
+    /// like the threaded dispatcher), and deliver.  Returns `false`
+    /// when the chosen shard is saturated and the batcher blocked.
+    fn dispatch(
+        &mut self,
+        t: u64,
+        model: usize,
+        kind: PipelineKind,
+        rows: usize,
+        parts: Vec<SimReq>,
+    ) -> bool {
+        let shape = GemmShape::new(rows, self.cfg.models[model].k, self.cfg.models[model].n);
+        let key =
+            PlanKey { shape, fmt: self.run.in_fmt, kind, rows: self.run.rows, cols: self.run.cols };
+        let (plan, _hit) = self.cache.get(key);
+        let service = plan.stream_cycles(self.run.double_buffer);
+        let energy = match self.energy_memo.get(&key) {
+            Some(e) => *e,
+            None => {
+                let e = layer_energy(&self.run.timing(), &self.pmodel, kind, &plan.plan).energy_uj;
+                self.energy_memo.insert(key, e);
+                e
+            }
+        };
+        self.energy_uj += energy;
+        let id = self.batch_ids;
+        self.batch_ids += 1;
+        let faults = u64::from(hash_unit(self.cfg.seed ^ FAULT_SALT ^ id) < self.cfg.fault_rate);
+        let drop = hash_unit(self.cfg.seed ^ DROP_SALT ^ id) < self.cfg.fault_drop_rate;
+        if drop {
+            self.c_dropped.inc();
+        }
+        self.c_batches.inc();
+        self.batched_rows += rows as u64;
+        self.max_batch = self.max_batch.max(parts.len());
+        self.h_service.record(service);
+        let batch = ReadyBatch { parts, service, faults, drop };
+        self.health.tick();
+        let excluded = self.health.excluded();
+        let mut eligible: Vec<usize> = (0..self.active).filter(|s| !excluded.contains(s)).collect();
+        if eligible.is_empty() {
+            // Every *active* shard is quarantined (the board's global
+            // void rule may not fire when inactive shards are healthy):
+            // keep serving, like the router's degraded-pool contract.
+            eligible = (0..self.active).collect();
+        }
+        let shard = match self.cfg.shard_policy {
+            Policy::RoundRobin => loop {
+                let s = (self.rr_next % self.active as u64) as usize;
+                self.rr_next += 1;
+                if eligible.contains(&s) {
+                    break s;
+                }
+            },
+            Policy::LeastLoaded => *eligible
+                .iter()
+                .min_by_key(|&&s| (self.shards[s].inflight, s))
+                .expect("eligible is non-empty"),
+        };
+        self.shards[shard].inflight += 1;
+        self.deliver(t, shard, batch)
+    }
+
+    /// Hand a routed batch to its shard: start it if the shard is
+    /// fully idle, buffer it if the mailbox has room, else block the
+    /// batcher on this shard.
+    fn deliver(&mut self, t: u64, shard: usize, batch: ReadyBatch) -> bool {
+        let free = self.shards[shard].running.is_none() && self.shards[shard].mailbox.is_empty();
+        if free {
+            self.queue.push(t + batch.service, Event::ShardDone { shard });
+            self.shards[shard].running = Some(batch);
+            true
+        } else if self.shards[shard].mailbox.len() < MAILBOX_DEPTH {
+            self.shards[shard].mailbox.push_back(batch);
+            true
+        } else {
+            self.batcher = BatcherState::Blocked { batch, shard };
+            false
+        }
+    }
+
+    /// Completion handler.  Step order (load-bearing for the Python
+    /// port): settle the batch's requests, record health, promote the
+    /// mailbox, wake closed-loop clients (in part order), unblock the
+    /// batcher if it was waiting on this shard, then poke.
+    fn on_shard_done(&mut self, t: u64, shard: usize) {
+        let batch = self.shards[shard].running.take().expect("completion on an idle shard");
+        let size = batch.parts.len();
+        for p in &batch.parts {
+            let rec = &mut self.outcomes[p.id as usize];
+            rec.shard = Some(shard);
+            rec.done = t;
+            rec.batch_size = size;
+            rec.service = batch.service;
+            if batch.drop {
+                rec.status = ReqStatus::Failed;
+                self.c_failed.inc();
+            } else {
+                rec.status = ReqStatus::Served;
+                self.c_served.inc();
+                let latency = t - p.submit;
+                self.h_latency.record(latency);
+                self.scaler.observe(latency);
+            }
+        }
+        self.health.record(shard, batch.faults + u64::from(batch.drop));
+        self.shards[shard].inflight -= 1;
+        if let Some(next) = self.shards[shard].mailbox.pop_front() {
+            self.queue.push(t + next.service, Event::ShardDone { shard });
+            self.shards[shard].running = Some(next);
+        }
+        for p in &batch.parts {
+            self.push_closed_loop_next(t, p.tenant, p.client, p.index);
+        }
+        match std::mem::take(&mut self.batcher) {
+            BatcherState::Blocked { batch, shard: s } if s == shard => {
+                let delivered = self.deliver(t, s, batch);
+                debug_assert!(delivered, "mailbox must have room after a completion");
+            }
+            other => self.batcher = other,
+        }
+        self.poke_batcher(t);
+    }
+
+    /// Autoscaler tick: evaluate the window, grow immediately, shrink
+    /// only through idle tail shards (a draining shard is never
+    /// abandoned), and re-arm the tick while inside the horizon.
+    fn on_autoscale(&mut self, t: u64) {
+        let (p99, target) = self.scaler.evaluate(self.active);
+        if target > self.active {
+            self.active = target;
+        } else {
+            while self.active > target {
+                let last = self.active - 1;
+                let idle =
+                    self.shards[last].running.is_none() && self.shards[last].mailbox.is_empty();
+                if !idle {
+                    break;
+                }
+                self.active -= 1;
+            }
+        }
+        self.g_active.set(self.active as u64);
+        self.autoscale.push(AutoscalePoint { t, p99, active: self.active });
+        if t < self.cfg.horizon {
+            self.queue.push(t + self.cfg.autoscale_interval, Event::AutoscaleTick);
+        }
+    }
+
+    fn finish(self) -> FleetResult {
+        debug_assert!(
+            self.outcomes.iter().all(|r| r.status != ReqStatus::Pending),
+            "drained event queue left pending requests"
+        );
+        let snap = self.registry.snapshot();
+        let empty = || Log2Histogram::new().snapshot();
+        let latency = snap.hists.get("fleet_latency_cycles").cloned().unwrap_or_else(empty);
+        let service = snap.hists.get("fleet_service_cycles").cloned().unwrap_or_else(empty);
+        let shed_bucket = snap.counter("fleet_shed.bucket");
+        let shed_watermark = snap.counter("fleet_shed.watermark");
+        let shed_capacity = snap.counter("fleet_shed.capacity");
+        FleetResult {
+            submitted: snap.counter("fleet_requests.submitted"),
+            served: snap.counter("fleet_requests.served"),
+            shed: shed_bucket + shed_watermark + shed_capacity,
+            failed: snap.counter("fleet_requests.failed"),
+            shed_bucket,
+            shed_watermark,
+            shed_capacity,
+            batches: snap.counter("fleet_batches.dispatched"),
+            batched_rows: self.batched_rows,
+            max_batch: self.max_batch,
+            wall_cycles: self.queue.now(),
+            latency,
+            service,
+            cache: self.cache.stats(),
+            autoscale: self.autoscale,
+            final_active: self.active,
+            quarantines: self.health.quarantine_counts().iter().sum(),
+            energy_uj: self.energy_uj,
+            fingerprint: fingerprint(&self.outcomes),
+            records: self.outcomes.into_iter().take(self.cfg.record_limit).collect(),
+            metrics: snap,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::arrival::{TenantSpec, TraceReq};
+
+    fn base_cfg() -> FleetConfig {
+        let mut cfg = FleetConfig::smoke();
+        cfg.tenants = vec![TenantSpec::poisson("t0", 400.0)];
+        cfg
+    }
+
+    #[test]
+    fn poisson_run_balances_and_is_deterministic() {
+        let run = RunConfig::small();
+        let cfg = base_cfg();
+        let a = FleetSim::simulate(&run, &cfg);
+        let b = FleetSim::simulate(&run, &cfg);
+        assert!(a.submitted > 50, "horizon should admit a real request count: {}", a.submitted);
+        assert!(a.served > 0);
+        assert!(a.accounting_balanced(), "accounting imbalance");
+        assert_eq!(a.fingerprint, b.fingerprint, "same seed must replay bit-identically");
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.wall_cycles, b.wall_cycles);
+        assert!(a.goodput_rps(1.0) > 0.0);
+        assert!(a.energy_uj > 0.0);
+        assert_eq!(a.metrics.counter("fleet_requests.submitted"), a.submitted);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let run = RunConfig::small();
+        let cfg = base_cfg();
+        let mut cfg2 = cfg.clone();
+        cfg2.seed ^= 0xdead_beef;
+        let a = FleetSim::simulate(&run, &cfg);
+        let b = FleetSim::simulate(&run, &cfg2);
+        assert_ne!(a.fingerprint, b.fingerprint);
+    }
+
+    #[test]
+    fn trace_replay_submits_at_exact_timestamps() {
+        let run = RunConfig::small();
+        let mut cfg = base_cfg();
+        let times = [0u64, 7, 7, 120, 4000];
+        let requests = times
+            .iter()
+            .map(|&at| TraceReq {
+                at,
+                model: 0,
+                rows: 2,
+                kind: PipelineKind::Skewed,
+                class: DeadlineClass::Batch,
+            })
+            .collect();
+        cfg.tenants = vec![TenantSpec {
+            arrival: ArrivalSpec::Trace { requests },
+            ..TenantSpec::poisson("trace", 1.0)
+        }];
+        let r = FleetSim::simulate(&run, &cfg);
+        assert_eq!(r.submitted, times.len() as u64);
+        let submits: Vec<u64> = r.records.iter().map(|x| x.submit).collect();
+        assert_eq!(submits, times);
+        assert!(r.accounting_balanced());
+    }
+
+    #[test]
+    fn closed_loop_submits_every_request_sequentially() {
+        let run = RunConfig::small();
+        let mut cfg = base_cfg();
+        cfg.tenants = vec![TenantSpec {
+            arrival: ArrivalSpec::ClosedLoop { clients: 2, requests_per_client: 5 },
+            ..TenantSpec::poisson("closed", 1.0)
+        }];
+        let r = FleetSim::simulate(&run, &cfg);
+        assert_eq!(r.submitted, 10);
+        assert!(r.accounting_balanced());
+        assert_eq!(r.served + r.failed + r.shed, 10);
+    }
+
+    #[test]
+    fn token_bucket_sheds_a_burst() {
+        let run = RunConfig::small();
+        let mut cfg = base_cfg();
+        let requests = (0..10)
+            .map(|i| TraceReq {
+                at: i, // 10 arrivals in 10 cycles against a 2-token bucket
+                model: 0,
+                rows: 2,
+                kind: PipelineKind::Skewed,
+                class: DeadlineClass::Batch,
+            })
+            .collect();
+        cfg.tenants = vec![TenantSpec {
+            arrival: ArrivalSpec::Trace { requests },
+            bucket_capacity: 2,
+            bucket_refill_cycles: 1_000_000,
+            ..TenantSpec::poisson("burst", 1.0)
+        }];
+        let r = FleetSim::simulate(&run, &cfg);
+        assert_eq!(r.shed_bucket, 8, "2 tokens admit 2 of 10");
+        assert_eq!(r.served + r.failed, 2);
+        assert!(r.accounting_balanced());
+    }
+
+    #[test]
+    fn autoscaler_stays_in_bounds_and_reacts() {
+        let run = RunConfig::small();
+        let mut cfg = base_cfg();
+        cfg.shards = 1;
+        cfg.min_shards = 1;
+        cfg.max_shards = 6;
+        cfg.autoscale_interval = 20_000;
+        cfg.autoscale_step = 2;
+        cfg.slo_p99 = 1; // unmeetable: every window breaches
+        cfg.tenants = vec![TenantSpec::poisson("hot", 300.0)];
+        let r = FleetSim::simulate(&run, &cfg);
+        assert!(!r.autoscale.is_empty());
+        assert!(r.autoscale.iter().all(|p| p.active >= 1 && p.active <= 6));
+        assert_eq!(r.autoscale.last().unwrap().active, 6, "unmeetable SLO pins max shards");
+        assert!(r.accounting_balanced());
+    }
+
+    #[test]
+    fn fault_drop_fails_requests_and_quarantines() {
+        let run = RunConfig::small();
+        let mut cfg = base_cfg();
+        cfg.fault_rate = 1.0;
+        cfg.fault_drop_rate = 1.0;
+        cfg.tenants = vec![TenantSpec::poisson("doomed", 500.0)];
+        let r = FleetSim::simulate(&run, &cfg);
+        assert_eq!(r.served, 0, "every batch drops");
+        assert!(r.failed > 0);
+        assert!(r.quarantines > 0, "all-faulty shards must hit quarantine");
+        assert!(r.accounting_balanced());
+    }
+
+    #[test]
+    fn result_json_has_headline_fields() {
+        let run = RunConfig::small();
+        let r = FleetSim::simulate(&run, &base_cfg());
+        let j = r.to_json(run.clock_ghz);
+        assert!(j.get("counts").and_then(|c| c.get("submitted")).is_some());
+        assert_eq!(j.get("fingerprint").and_then(Json::as_str).unwrap().len(), 16);
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(
+            parsed.get("wall_cycles").and_then(Json::as_f64).unwrap(),
+            r.wall_cycles as f64
+        );
+    }
+}

@@ -38,6 +38,11 @@
 //!   and multi-array sharding over persistent worker pools — the
 //!   production-shaped path that turns the paper's per-tile latency win
 //!   into end-to-end throughput.
+//! * [`fleet`] — the fleet-scale discrete-event simulator: the serve
+//!   request path replayed over a virtual clock and thousands of
+//!   simulated shards, with pluggable arrival processes, token-bucket
+//!   admission and a reactive p99 autoscaler — differentially pinned
+//!   to the threaded serving layer.
 //! * [`runtime`] — PJRT wrapper that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them on the CPU
 //!   client; the golden reference for end-to-end numerics.
@@ -54,6 +59,7 @@ pub mod arith;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod fleet;
 pub mod obs;
 pub mod pe;
 pub mod precision;

@@ -13,6 +13,7 @@
 //! skewsa sweep       # design-space sweep: array size x format
 //! skewsa run         # coordinate a GEMM end-to-end (verify + report)
 //! skewsa serve       # multi-tenant serving: batching + cache + shards
+//! skewsa fleet       # fleet-scale DES: virtual-clock serving, autoscale
 //! skewsa faults      # chaos run: SDC injection + ABFT + quarantine
 //! skewsa precision   # mixed-precision planner: budget -> per-layer plan
 //! skewsa stream      # multi-tile layer latency: serialized vs overlapped
@@ -73,10 +74,18 @@ fn cli() -> Cli {
     .opt("m-cap", "precision: sampled rows per layer (full K always)", Some("8"))
     .opt("n-cap", "precision: sampled columns per layer", Some("16"))
     .opt("fault", "serve/faults: fault model, e.g. sdc_rate=1e-3,seed=7", None)
-    .opt("shed-watermark", "serve/faults: queue depth that sheds batch requests", None)
+    .opt("shed-watermark", "serve/faults/fleet: queue depth that sheds batch requests", None)
     .opt("trace-out", "serve/faults: write request trace spans as JSON lines", None)
     .opt("metrics-out", "serve/faults: write the metrics snapshot as JSON", None)
-    .flag("smoke", "faults: small deterministic chaos run (CI)")
+    .opt("min-shards", "fleet: autoscaler floor", None)
+    .opt("max-shards", "fleet: provisioned shard slots (autoscaler ceiling)", None)
+    .opt("horizon", "fleet: open-loop arrival horizon, cycles", None)
+    .opt("arrival", "fleet: arrival process poisson|mmpp|closed", None)
+    .opt("mean-gap", "fleet: mean inter-arrival gap, cycles", None)
+    .opt("slo-p99", "fleet: autoscaler p99 latency SLO, cycles", None)
+    .opt("autoscale-interval", "fleet: cycles between autoscaler ticks (0 = off)", None)
+    .opt("fleet-out", "fleet: write the full result JSON here", None)
+    .flag("smoke", "faults/fleet: small deterministic CI run with a hard gate")
     .flag("quiet", "suppress per-layer rows")
 }
 
@@ -133,6 +142,10 @@ fn main() {
         }
         "serve" => {
             serve(&cfg, &args);
+            return;
+        }
+        "fleet" => {
+            fleet(&cfg, &args);
             return;
         }
         "faults" => {
@@ -318,6 +331,65 @@ fn serve(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         eprintln!("wrote {path}");
     }
     write_obs_outputs(&server, &scfg, &snap);
+}
+
+/// Fleet-scale discrete-event simulation: the serve request path over
+/// a virtual clock and thousands of simulated shards (DESIGN.md §18).
+/// `--smoke` runs the small deterministic config and the exit code
+/// turns into a CI gate: non-zero when the accounting conservation law
+/// (submitted = served + shed + failed) breaks.
+fn fleet(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
+    use skewsa::config::FleetConfig;
+    use skewsa::fleet::FleetSim;
+
+    let smoke = args.has("smoke");
+    let mut fcfg = if smoke { FleetConfig::smoke() } else { FleetConfig::default() };
+    if let Some(path) = args.get("config") {
+        if let Err(e) = fcfg.apply_file(path) {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }
+    }
+    if let Err(e) = fcfg.apply_args(args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+    println!(
+        "fleet: {} tenant(s), {} model shape(s), shards {} in [{}, {}], policy {}, \
+         horizon {} cycles",
+        fcfg.tenants.len(),
+        fcfg.models.len(),
+        fcfg.shards.clamp(fcfg.min_shards, fcfg.max_shards),
+        fcfg.min_shards,
+        fcfg.max_shards,
+        fcfg.shard_policy,
+        fcfg.horizon,
+    );
+    let t0 = std::time::Instant::now();
+    let result = FleetSim::simulate(cfg, &fcfg);
+    let wall = t0.elapsed();
+    println!(
+        "simulated {} virtual cycles ({} requests) in {wall:?}",
+        result.wall_cycles, result.submitted
+    );
+    let rep = report::fleet_summary(&result, cfg.clock_ghz);
+    print!("{}", rep.render());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.get("fleet-out") {
+        let text = result.to_json(cfg.clock_ghz).to_string_pretty();
+        std::fs::write(path, text).expect("writing fleet result");
+        eprintln!("wrote {path}");
+    }
+    if !result.accounting_balanced() {
+        eprintln!(
+            "FLEET ACCOUNTING IMBALANCE: submitted {} != served {} + shed {} + failed {}",
+            result.submitted, result.served, result.shed, result.failed
+        );
+        std::process::exit(1);
+    }
 }
 
 /// The observability handle a serve/faults run starts under: tracing on

@@ -646,6 +646,52 @@ pub fn faults_summary(
     Report { title: "Faults: chaos run summary".into(), table, totals: None }
 }
 
+/// The `skewsa fleet` report: the discrete-event simulator's headline
+/// accounting, the latency/service distributions in both the cycle
+/// domain and wall microseconds (via `clock_ghz`), and the autoscaler's
+/// trajectory.
+pub fn fleet_summary(r: &crate::fleet::FleetResult, clock_ghz: f64) -> Report {
+    let frac = |x: f64| format!("{:.1}%", x * 100.0);
+    let us = |cycles: u64| cycles as f64 / (clock_ghz * 1e3);
+    let cyc_us = |cycles: u64| format!("{} / {}", cycles, fnum(us(cycles), 1));
+    let mut table = Table::new(&["metric", "value"]).numeric();
+    table.row(&["requests submitted".into(), r.submitted.to_string()]);
+    table.row(&["requests served".into(), r.served.to_string()]);
+    table.row(&[
+        "requests shed (bucket/watermark/capacity)".into(),
+        format!("{} ({}/{}/{})", r.shed, r.shed_bucket, r.shed_watermark, r.shed_capacity),
+    ]);
+    table.row(&["requests failed".into(), r.failed.to_string()]);
+    let shed_rate = if r.submitted == 0 { 0.0 } else { r.shed as f64 / r.submitted as f64 };
+    table.row(&["shed rate".into(), frac(shed_rate)]);
+    table.row(&["batches dispatched".into(), r.batches.to_string()]);
+    let done = r.served + r.failed;
+    let mean_batch = if r.batches == 0 { 0.0 } else { done as f64 / r.batches as f64 };
+    table.row(&["mean/max batch size".into(), format!("{}/{}", fnum(mean_batch, 2), r.max_batch)]);
+    table.row(&["batched rows".into(), r.batched_rows.to_string()]);
+    table.row(&["wall (virtual cycles)".into(), r.wall_cycles.to_string()]);
+    table.row(&["latency p50 (cyc / us)".into(), cyc_us(r.latency.quantile(50.0))]);
+    table.row(&["latency p99 (cyc / us)".into(), cyc_us(r.latency.quantile(99.0))]);
+    table.row(&["latency mean (cycles)".into(), fnum(r.latency.mean(), 1)]);
+    table.row(&["service p50 (cyc / us)".into(), cyc_us(r.service.quantile(50.0))]);
+    table.row(&["service p99 (cyc / us)".into(), cyc_us(r.service.quantile(99.0))]);
+    table.row(&["goodput (req/s)".into(), fnum(r.goodput_rps(clock_ghz), 1)]);
+    table.row(&["array energy (uJ)".into(), fnum(r.energy_uj, 1)]);
+    table.row(&["goodput per joule".into(), fnum(r.goodput_per_joule(), 1)]);
+    table.row(&["plan-cache hit rate".into(), frac(r.cache.hit_rate())]);
+    table.row(&["shard quarantines".into(), r.quarantines.to_string()]);
+    table.row(&["final active shards".into(), r.final_active.to_string()]);
+    if !r.autoscale.is_empty() {
+        let lo = r.autoscale.iter().map(|p| p.active).min().unwrap_or(0);
+        let hi = r.autoscale.iter().map(|p| p.active).max().unwrap_or(0);
+        table.row(&[
+            "autoscale evals (active lo..hi)".into(),
+            format!("{} ({}..{})", r.autoscale.len(), lo, hi),
+        ]);
+    }
+    Report { title: "Fleet: discrete-event serving simulation".into(), table, totals: None }
+}
+
 /// The `skewsa trace` critical-path breakdown: per-phase wall-time
 /// percentiles over the Ok spans of one trace file, plus the
 /// cycle-domain attribution (exposed preload / compute / drain / ABFT

@@ -13,7 +13,8 @@
 //! anchors default to a zero window — they leave with whatever is
 //! already queued.
 
-use super::request::{DeadlineClass, Pending, RequestQueue};
+use super::policy;
+use super::request::{Pending, RequestQueue};
 use crate::obs::Phase;
 use crate::pe::PipelineKind;
 use std::sync::Arc;
@@ -62,10 +63,11 @@ impl Batcher {
         let anchor = self.queue.pop_anchor()?;
         let key = BatchKey { model: anchor.req.model, kind: anchor.req.kind };
         // The anchor's deadline class decides the coalescing window.
-        let window = match anchor.req.class {
-            DeadlineClass::Interactive => self.limits.interactive_window,
-            DeadlineClass::Batch => self.limits.batch_window,
-        };
+        let window = policy::window_for_anchor(
+            anchor.req.class,
+            self.limits.interactive_window,
+            self.limits.batch_window,
+        );
         let mut rows = anchor.req.rows();
         let mut parts = vec![anchor];
         let deadline = Instant::now() + window;
@@ -78,7 +80,12 @@ impl Batcher {
                 &mut parts,
                 &mut rows,
             );
-            if parts.len() >= self.limits.max_requests || rows >= self.limits.max_rows {
+            if policy::batch_caps_reached(
+                parts.len(),
+                rows,
+                self.limits.max_requests,
+                self.limits.max_rows,
+            ) {
                 break;
             }
             // An interactive request — absorbed into this batch or
@@ -87,9 +94,10 @@ impl Batcher {
             // anchor's window.  The anchor itself is exempt (`skip(1)`):
             // an interactive *anchor* already chose the interactive
             // window above, which would otherwise be dead config.
-            if interactive_waiting
-                || parts.iter().skip(1).any(|p| p.req.class == DeadlineClass::Interactive)
-            {
+            if policy::window_closes_early(
+                interactive_waiting,
+                parts.iter().skip(1).map(|p| p.req.class),
+            ) {
                 break;
             }
             if self.queue.wait_new_push(seen, deadline).is_none() {
@@ -108,7 +116,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::request::{Request, Response};
+    use crate::serve::request::{DeadlineClass, Request, Response};
     use std::sync::mpsc::{channel, Receiver};
 
     fn pending(

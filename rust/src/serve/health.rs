@@ -328,6 +328,42 @@ mod tests {
     }
 
     #[test]
+    fn quarantine_expiry_and_fault_on_the_same_dispatch_tick() {
+        // The dispatch order is tick-then-record: the tick that ends a
+        // shard's quarantine promotes it to probation *before* any
+        // batch completing on that same tick reports its faults.  A
+        // fault landing on the expiry tick therefore hits a probationary
+        // shard and re-quarantines it immediately — the sentence is not
+        // silently extended, and the fault is not absorbed by the stale
+        // quarantined state (where `record` is a no-op).
+        let b = HealthBoard::new(policy(), 1);
+        for _ in 0..3 {
+            b.tick();
+            b.record(0, 1);
+        }
+        let ShardState::Quarantined { until } = b.state(0) else {
+            panic!("not quarantined");
+        };
+        // Advance to one tick before expiry: still quarantined.
+        for _ in 0..policy().quarantine_batches - 1 {
+            b.tick();
+            assert!(matches!(b.state(0), ShardState::Quarantined { .. }));
+        }
+        // The expiry tick itself promotes to probation …
+        b.tick();
+        assert_eq!(b.state(0), ShardState::Probation { remaining: 2 });
+        // … and a fault recorded on this same dispatch tick (a batch
+        // completing as the sentence ends) re-quarantines immediately.
+        b.record(0, 1);
+        let ShardState::Quarantined { until: until2 } = b.state(0) else {
+            panic!("fault on the expiry tick must re-quarantine");
+        };
+        assert_eq!(until2, until + 5, "new sentence starts at the expiry tick");
+        assert_eq!(b.quarantine_counts(), vec![2]);
+        assert_eq!(b.excluded(), BTreeSet::new(), "single-shard exclusion stays void");
+    }
+
+    #[test]
     fn transitions_emit_counters_and_timestamped_events() {
         let obs = crate::obs::Obs::with_tracing();
         let b = HealthBoard::with_obs(policy(), 1, &obs);

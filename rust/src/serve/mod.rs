@@ -26,7 +26,11 @@
 //!   quarantine/probation state machine (DESIGN.md §16);
 //! * [`metrics`] — p50/p95/p99 latency + throughput recording;
 //! * [`loadgen`] — the closed-loop load generator behind
-//!   `skewsa serve` and `bench_serve`.
+//!   `skewsa serve` and `bench_serve`;
+//! * [`policy`] — the clock-agnostic policy core (shed watermark,
+//!   anchor selection, batch admission, early window close) shared
+//!   verbatim with the fleet discrete-event simulator
+//!   ([`crate::fleet`], DESIGN.md §18).
 //!
 //! Observability (DESIGN.md §17) threads a [`crate::obs::TraceSpan`]
 //! through every request (queue → batch → plan → dispatch → execute →
@@ -73,6 +77,7 @@ pub mod cache;
 pub mod health;
 pub mod loadgen;
 pub mod metrics;
+pub mod policy;
 pub mod request;
 pub mod server;
 pub mod shard;

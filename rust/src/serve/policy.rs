@@ -1,0 +1,161 @@
+//! Clock-agnostic serving policy.
+//!
+//! The serve stack makes four load-management decisions — shed at the
+//! overload watermark, pick the batch anchor, admit a member into an
+//! open batch, and close the coalescing window early for interactive
+//! traffic.  The threaded stack ([`super::request::RequestQueue`],
+//! [`super::batcher::Batcher`]) makes them under mutexes against the
+//! wall clock; the fleet simulator ([`crate::fleet`]) makes the *same*
+//! decisions against a virtual cycle clock over thousands of simulated
+//! shards.  Both call the pure functions here, so fleet-level results
+//! are produced by the policy being simulated, not by a reimplementation
+//! that can drift (DESIGN.md §18).
+//!
+//! Every function is a total function of its arguments: no clocks, no
+//! locks, no I/O.  Time-typed knobs (the batch window) are generic so
+//! the threaded caller passes `Duration` and the simulator passes
+//! cycle counts.
+
+use super::request::DeadlineClass;
+use crate::pe::PipelineKind;
+
+/// Deadline-aware load shedding: with a watermark armed (`> 0`), a
+/// `Batch`-class submission is turned away once the queue already holds
+/// `queue_len ≥ shed_watermark` requests.  Interactive submissions are
+/// never shed here — they keep the queue-full behaviour of the caller
+/// (blocking backpressure in the threaded stack, capacity shedding in
+/// the open-loop simulator).
+pub fn should_shed(shed_watermark: usize, class: DeadlineClass, queue_len: usize) -> bool {
+    shed_watermark > 0 && class == DeadlineClass::Batch && queue_len >= shed_watermark
+}
+
+/// Anchor selection over the queued deadline classes in queue order:
+/// the first interactive request if any, else the front — except that
+/// after `max_front_bypass` consecutive bypasses the front request is
+/// anchored regardless of class (sustained interactive traffic cannot
+/// starve a queued batch request).  Returns `None` on an empty queue.
+pub fn anchor_index<I>(classes: I, front_bypassed: usize, max_front_bypass: usize) -> Option<usize>
+where
+    I: IntoIterator<Item = DeadlineClass>,
+{
+    let mut len = 0usize;
+    let mut first_interactive = None;
+    for (i, class) in classes.into_iter().enumerate() {
+        len += 1;
+        if first_interactive.is_none() && class == DeadlineClass::Interactive {
+            first_interactive = Some(i);
+        }
+    }
+    match first_interactive {
+        Some(i) if i > 0 && front_bypassed >= max_front_bypass => Some(0),
+        Some(i) => Some(i),
+        None if len == 0 => None,
+        None => Some(0),
+    }
+}
+
+/// The coalescing window is the *anchor's* deadline-class window.
+/// Generic over the time representation: `Duration` in the threaded
+/// batcher, cycles in the fleet simulator.
+pub fn window_for_anchor<T>(class: DeadlineClass, interactive_window: T, batch_window: T) -> T {
+    match class {
+        DeadlineClass::Interactive => interactive_window,
+        DeadlineClass::Batch => batch_window,
+    }
+}
+
+/// Size-cap check at the top of every drain step: a batch closes once
+/// it holds `max_requests` members or `max_rows` stacked rows.
+pub fn batch_caps_reached(parts: usize, rows: usize, max_requests: usize, max_rows: usize) -> bool {
+    parts >= max_requests || rows >= max_rows
+}
+
+/// Member admission: a queued request joins an open batch iff it shares
+/// the batch key (same model, same pipeline organisation — stacking
+/// rows across either would run work under the wrong weights or
+/// pipeline) and its rows still fit under the row cap.
+pub fn member_fits(
+    batch_model: usize,
+    batch_kind: PipelineKind,
+    batch_rows: usize,
+    max_rows: usize,
+    cand_model: usize,
+    cand_kind: PipelineKind,
+    cand_rows: usize,
+) -> bool {
+    cand_model == batch_model && cand_kind == batch_kind && batch_rows + cand_rows <= max_rows
+}
+
+/// Early window close: an interactive request — still queued
+/// (incompatibly) or absorbed as a *non-anchor* member — flushes an
+/// open batch window immediately.  Its flush-now contract must not
+/// wait out a batch anchor's window; the anchor itself is exempt
+/// (callers pass non-anchor member classes only), since an interactive
+/// anchor already chose the interactive window.
+pub fn window_closes_early<I>(interactive_waiting: bool, non_anchor_members: I) -> bool
+where
+    I: IntoIterator<Item = DeadlineClass>,
+{
+    interactive_waiting
+        || non_anchor_members.into_iter().any(|c| c == DeadlineClass::Interactive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const I: DeadlineClass = DeadlineClass::Interactive;
+    const B: DeadlineClass = DeadlineClass::Batch;
+
+    #[test]
+    fn shed_is_batch_class_only_and_armed_only() {
+        assert!(should_shed(2, B, 2));
+        assert!(should_shed(2, B, 5));
+        assert!(!should_shed(2, B, 1));
+        assert!(!should_shed(2, I, 5), "interactive is never watermark-shed");
+        assert!(!should_shed(0, B, 100), "watermark 0 disarms shedding");
+    }
+
+    #[test]
+    fn anchor_prefers_first_interactive_then_fifo() {
+        assert_eq!(anchor_index([B, B, I, I], 0, 64), Some(2));
+        assert_eq!(anchor_index([B, B], 0, 64), Some(0));
+        assert_eq!(anchor_index([I, B], 0, 64), Some(0));
+        assert_eq!(anchor_index(std::iter::empty(), 0, 64), None);
+    }
+
+    #[test]
+    fn anchor_starvation_guard_falls_back_to_front() {
+        // At the bypass bound, a non-front interactive no longer wins.
+        assert_eq!(anchor_index([B, I], 64, 64), Some(0));
+        assert_eq!(anchor_index([B, I], 63, 64), Some(1));
+        // A front interactive is position 0 either way.
+        assert_eq!(anchor_index([I, B], 64, 64), Some(0));
+    }
+
+    #[test]
+    fn window_follows_anchor_class() {
+        assert_eq!(window_for_anchor(I, 1u64, 500u64), 1);
+        assert_eq!(window_for_anchor(B, 1u64, 500u64), 500);
+    }
+
+    #[test]
+    fn caps_and_fit() {
+        assert!(batch_caps_reached(4, 0, 4, 64));
+        assert!(batch_caps_reached(0, 64, 4, 64));
+        assert!(!batch_caps_reached(3, 63, 4, 64));
+        use crate::pe::PipelineKind::{Deep3, Skewed};
+        assert!(member_fits(0, Skewed, 4, 8, 0, Skewed, 4));
+        assert!(!member_fits(0, Skewed, 4, 8, 0, Skewed, 5), "row cap");
+        assert!(!member_fits(0, Skewed, 4, 8, 1, Skewed, 1), "model key");
+        assert!(!member_fits(0, Skewed, 4, 8, 0, Deep3, 1), "kind key");
+    }
+
+    #[test]
+    fn early_close_on_waiting_or_absorbed_interactive() {
+        assert!(window_closes_early(true, std::iter::empty()));
+        assert!(window_closes_early(false, [B, I]));
+        assert!(!window_closes_early(false, [B, B]));
+        assert!(!window_closes_early(false, std::iter::empty()));
+    }
+}

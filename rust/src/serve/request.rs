@@ -7,6 +7,7 @@
 //! compatible requests into the same batch.  A monotone push sequence
 //! number lets the batcher sleep between arrivals instead of spinning.
 
+use super::policy;
 use crate::obs::{Phase, TraceSpan};
 use crate::pe::PipelineKind;
 use std::collections::VecDeque;
@@ -243,10 +244,7 @@ impl RequestQueue {
             if q.closed {
                 return Err(PushError::Closed(p));
             }
-            if self.shed_watermark > 0
-                && p.req.class == DeadlineClass::Batch
-                && q.items.len() >= self.shed_watermark
-            {
+            if policy::should_shed(self.shed_watermark, p.req.class, q.items.len()) {
                 return Err(PushError::Shed(p));
             }
             if q.items.len() < self.cap {
@@ -267,14 +265,11 @@ impl RequestQueue {
     pub fn pop_anchor(&self) -> Option<Pending> {
         let mut q = self.inner.lock().unwrap();
         loop {
-            let interactive =
-                q.items.iter().position(|p| p.req.class == DeadlineClass::Interactive);
-            let idx = match interactive {
-                Some(i) if i > 0 && q.front_bypassed >= Self::MAX_FRONT_BYPASS => Some(0),
-                Some(i) => Some(i),
-                None if q.items.is_empty() => None,
-                None => Some(0),
-            };
+            let idx = policy::anchor_index(
+                q.items.iter().map(|p| p.req.class),
+                q.front_bypassed,
+                Self::MAX_FRONT_BYPASS,
+            );
             if let Some(i) = idx {
                 if i == 0 {
                     q.front_bypassed = 0;
@@ -317,14 +312,20 @@ impl RequestQueue {
         let mut i = 0;
         let mut took = false;
         while i < q.items.len() {
-            if parts.len() >= max_requests || *rows >= max_rows {
+            if policy::batch_caps_reached(parts.len(), *rows, max_requests, max_rows) {
                 break;
             }
             let fits = {
                 let p = &q.items[i];
-                p.req.model == model
-                    && p.req.kind == kind
-                    && *rows + p.req.rows() <= max_rows
+                policy::member_fits(
+                    model,
+                    kind,
+                    *rows,
+                    max_rows,
+                    p.req.model,
+                    p.req.kind,
+                    p.req.rows(),
+                )
             };
             if fits {
                 let mut p = q.items.remove(i).expect("scanned index");
@@ -540,5 +541,67 @@ mod tests {
         q.push(pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).unwrap();
         let deadline = Instant::now() + std::time::Duration::from_millis(100);
         assert_eq!(q.wait_new_push(seen, deadline), Some(seen + 1));
+    }
+
+    #[test]
+    fn window_deadline_at_the_boundary_beats_a_pending_arrival() {
+        // The batch window is a hard bound: `wait_new_push` checks the
+        // deadline *before* the sequence number, so a window that has
+        // expired at exactly the boundary instant reports closure even
+        // though a new push is already visible.  This is what makes a
+        // zero window never admit a re-scan — the edge case the fleet
+        // simulator's virtual-clock batcher mirrors tick-for-tick.
+        let q = RequestQueue::new(4);
+        let seen = q.seq();
+        q.push(pending(0, 0, PipelineKind::Skewed, DeadlineClass::Batch, 1)).unwrap();
+        assert!(q.seq() > seen, "an arrival is pending");
+        let boundary = Instant::now();
+        assert_eq!(q.wait_new_push(seen, boundary), None, "expired window wins the race");
+        // An open window still observes the same arrival.
+        let open = Instant::now() + std::time::Duration::from_millis(100);
+        assert_eq!(q.wait_new_push(seen, open), Some(seen + 1));
+    }
+
+    #[test]
+    fn shed_watermark_hysteresis_under_oscillating_depth() {
+        // Drive the queue depth across the watermark repeatedly: at or
+        // above the mark every Batch push sheds; dropping one below the
+        // mark re-admits exactly until the mark is reached again.  The
+        // policy is memoryless in depth (no sticky overload state), and
+        // interactive pushes are admitted at any depth below `cap`.
+        let q = RequestQueue::with_watermark(8, 3);
+        let mut next_id = 0u64;
+        let mut push = |q: &RequestQueue, class| {
+            let id = next_id;
+            next_id += 1;
+            q.push(pending(id, 0, PipelineKind::Skewed, class, 1))
+        };
+        for cycle in 0..4 {
+            // Fill to the watermark from the current depth of 0.
+            for _ in 0..3 {
+                push(&q, DeadlineClass::Batch).unwrap();
+            }
+            // At the mark: batch sheds, and keeps shedding while there.
+            for _ in 0..2 {
+                let err = push(&q, DeadlineClass::Batch).unwrap_err();
+                assert!(matches!(err, PushError::Shed(_)), "cycle {cycle}: {err:?}");
+            }
+            // Interactive is admitted above the mark (depth 3 → 4).
+            push(&q, DeadlineClass::Interactive).unwrap();
+            assert_eq!(q.len(), 4, "cycle {cycle}");
+            // Still ≥ watermark: batch continues to shed.
+            assert!(push(&q, DeadlineClass::Batch).is_err(), "cycle {cycle}");
+            // Drain to one *below* the mark: one batch push fits again …
+            q.pop_anchor().unwrap();
+            q.pop_anchor().unwrap();
+            assert_eq!(q.len(), 2, "cycle {cycle}");
+            push(&q, DeadlineClass::Batch).unwrap();
+            // … and the queue is right back at the mark.
+            assert!(push(&q, DeadlineClass::Batch).is_err(), "cycle {cycle}");
+            // Reset for the next oscillation.
+            while !q.is_empty() {
+                q.pop_anchor().unwrap();
+            }
+        }
     }
 }

@@ -24,9 +24,11 @@ impl Json {
         Json::Obj(BTreeMap::new())
     }
 
-    /// Insert into an object; panics if `self` is not an object.
-    pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
-        match self {
+    /// Insert into an object, builder-style (consumes and returns the
+    /// value so `Json::obj().set(..).set(..)` chains); panics if `self`
+    /// is not an object.
+    pub fn set(mut self, key: &str, val: Json) -> Json {
+        match &mut self {
             Json::Obj(m) => {
                 m.insert(key.to_string(), val);
             }
@@ -418,8 +420,7 @@ mod tests {
 
     #[test]
     fn builder_api() {
-        let mut o = Json::obj();
-        o.set("x", Json::Num(1.0)).set("y", Json::Str("z".into()));
+        let o = Json::obj().set("x", Json::Num(1.0)).set("y", Json::Str("z".into()));
         assert_eq!(o.to_string_compact(), r#"{"x":1,"y":"z"}"#);
     }
 }

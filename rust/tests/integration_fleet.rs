@@ -1,0 +1,334 @@
+//! Fleet-DES differential pins (DESIGN.md §18): the discrete-event
+//! simulator must agree with the *real threaded server* wherever their
+//! observable surfaces overlap — shard routing order, batch
+//! composition, quoted service cycles — and with the committed
+//! cross-language golden produced by the independent Python port
+//! (`python/tests/test_fleet_des.py`).  Plus a fully hand-traced
+//! structural pin of the watermark-shed + mailbox-backpressure path.
+
+use skewsa::arith::format::FpFormat;
+use skewsa::config::{FleetConfig, RunConfig, ServeConfig};
+use skewsa::coordinator::Policy;
+use skewsa::fleet::{
+    ArrivalSpec, FleetSim, ModelShape, ReqStatus, TenantSpec, TraceReq, MAILBOX_DEPTH,
+};
+use skewsa::pe::PipelineKind;
+use skewsa::serve::{gen_request, recv_response, DeadlineClass, LoadSpec, Server};
+use skewsa::util::mini_json::Json;
+use skewsa::workloads::mobilenet;
+use skewsa::workloads::serving::WeightStore;
+use std::sync::Arc;
+
+fn run_cfg(fmt: FpFormat) -> RunConfig {
+    let mut cfg = RunConfig::small();
+    cfg.rows = 16;
+    cfg.cols = 16;
+    cfg.in_fmt = fmt;
+    cfg.out_fmt = FpFormat::FP32;
+    cfg.verify_fraction = 0.0;
+    cfg
+}
+
+/// Mirror a [`WeightStore`]'s model shapes into the DES config so both
+/// worlds quote service times for the exact same GEMMs.
+fn models_of(store: &WeightStore) -> Vec<ModelShape> {
+    (0..store.len())
+        .map(|m| {
+            let e = store.get(m);
+            ModelShape { k: e.k, n: e.n }
+        })
+        .collect()
+}
+
+/// One virtual client replaying the threaded load generator's closed
+/// loop must reproduce the threaded server request-for-request: same
+/// content draws (shared `gen_request` derivation), same round-robin
+/// shard sequence (the router starts at shard 0 and advances once per
+/// batch on both sides), same quoted service cycles (shared plan cache
+/// and streaming-cycle model).
+#[test]
+fn sequential_closed_loop_matches_threaded_rr_server() {
+    let cfg = run_cfg(FpFormat::BF16);
+    let store =
+        Arc::new(WeightStore::from_layers(&mobilenet::layers()[..3], FpFormat::BF16, 24, 16));
+    let spec = LoadSpec {
+        clients: 1,
+        requests_per_client: 12,
+        kinds: vec![PipelineKind::Baseline3b, PipelineKind::Skewed],
+        interactive_fraction: 0.3,
+        min_rows: 2,
+        max_rows: 6,
+        seed: 0xd1ff_5eed,
+    };
+
+    // Threaded side: zero windows + sequential submits means every
+    // request dispatches alone, in order, round-robin from shard 0.
+    let mut scfg = ServeConfig::small();
+    scfg.shards = 3;
+    scfg.shard_policy = Policy::RoundRobin;
+    scfg.batch_window_us = 0;
+    scfg.interactive_window_us = 0;
+    scfg.shed_watermark = 0;
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let mut threaded = Vec::new();
+    for i in 0..spec.requests_per_client {
+        let (model, kind, class, a) = gen_request(&store, &spec, 0, i);
+        let rx = server.submit(model, kind, class, a);
+        threaded.push(recv_response(&rx, "sequential closed loop"));
+    }
+    drop(server);
+
+    // DES side: the same closed loop as tenant 0 (whose content-draw
+    // base is exactly `seed`, matching `gen_request`).
+    let fcfg = FleetConfig {
+        shards: 3,
+        min_shards: 3,
+        max_shards: 3,
+        queue_cap: 64,
+        shed_watermark: 0,
+        batch_window: 0,
+        interactive_window: 0,
+        max_batch_requests: 8,
+        max_batch_rows: 64,
+        shard_policy: Policy::RoundRobin,
+        horizon: 1_000_000,
+        autoscale_interval: 0,
+        seed: spec.seed,
+        models: models_of(&store),
+        tenants: vec![TenantSpec {
+            name: "closed".into(),
+            arrival: ArrivalSpec::ClosedLoop { clients: 1, requests_per_client: 12 },
+            bucket_capacity: 0,
+            bucket_refill_cycles: 0,
+            kinds: spec.kinds.clone(),
+            interactive_fraction: spec.interactive_fraction,
+            min_rows: spec.min_rows,
+            max_rows: spec.max_rows,
+        }],
+        ..FleetConfig::default()
+    };
+    let r = FleetSim::simulate(&cfg, &fcfg);
+
+    assert_eq!(r.submitted, 12);
+    assert_eq!(r.served, 12);
+    assert_eq!(r.records.len(), threaded.len());
+    for (i, (rec, resp)) in r.records.iter().zip(&threaded).enumerate() {
+        assert_eq!(rec.status, ReqStatus::Served, "request {i} status");
+        assert_eq!(rec.batch_size, 1, "request {i}: sequential loop never batches");
+        assert_eq!(resp.batch_size, 1, "request {i}: threaded side never batches");
+        assert_eq!(rec.shard, Some(i % 3), "request {i}: DES round-robin from shard 0");
+        assert_eq!(resp.shard, i % 3, "request {i}: threaded round-robin from shard 0");
+        assert_eq!(
+            rec.service, resp.batch_stream_cycles,
+            "request {i}: quoted service cycles must match the threaded shard"
+        );
+    }
+    assert!(r.accounting_balanced());
+}
+
+/// Deadline-windowed batching composes the same batch in both worlds:
+/// four compatible batch-class requests coalesce into one 4-member
+/// batch (the request cap closes the window early), and the DES quotes
+/// exactly the service time the threaded shard measures for it.
+#[test]
+fn windowed_batch_composition_matches_threaded() {
+    let cfg = run_cfg(FpFormat::BF16);
+    let store =
+        Arc::new(WeightStore::from_layers(&mobilenet::layers()[..1], FpFormat::BF16, 27, 16));
+
+    let mut scfg = ServeConfig::small();
+    scfg.batch_window_us = 2_000_000;
+    scfg.max_batch_requests = 4;
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let mut rng = skewsa::util::rng::Rng::new(7);
+    let rxs: Vec<_> = (0..4)
+        .map(|_| {
+            let a = store.gen_activations(0, 2, &mut rng);
+            server.submit(0, PipelineKind::Skewed, DeadlineClass::Batch, a)
+        })
+        .collect();
+    let resps: Vec<_> = rxs.iter().map(|rx| recv_response(rx, "windowed batch")).collect();
+    drop(server);
+    let service = resps[0].batch_stream_cycles;
+    for resp in &resps {
+        assert_eq!(resp.batch_size, 4, "threaded cap closes the window at 4 members");
+        assert_eq!(resp.batch_stream_cycles, service);
+    }
+
+    // DES side: the same four requests as a trace, arriving inside one
+    // long window; the 4-request cap dispatches at the last arrival.
+    let requests: Vec<TraceReq> = (0..4)
+        .map(|i| TraceReq {
+            at: i,
+            model: 0,
+            rows: 2,
+            kind: PipelineKind::Skewed,
+            class: DeadlineClass::Batch,
+        })
+        .collect();
+    let fcfg = FleetConfig {
+        shards: 1,
+        min_shards: 1,
+        max_shards: 1,
+        queue_cap: 64,
+        shed_watermark: 0,
+        batch_window: 1_000,
+        interactive_window: 0,
+        max_batch_requests: 4,
+        max_batch_rows: 64,
+        shard_policy: Policy::RoundRobin,
+        horizon: 100_000,
+        autoscale_interval: 0,
+        seed: 1,
+        models: models_of(&store),
+        tenants: vec![TenantSpec {
+            name: "trace".into(),
+            arrival: ArrivalSpec::Trace { requests },
+            bucket_capacity: 0,
+            bucket_refill_cycles: 0,
+            kinds: vec![PipelineKind::Skewed],
+            interactive_fraction: 0.0,
+            min_rows: 1,
+            max_rows: 8,
+        }],
+        ..FleetConfig::default()
+    };
+    let r = FleetSim::simulate(&cfg, &fcfg);
+
+    assert_eq!(r.batches, 1, "one composed batch");
+    assert_eq!(r.max_batch, 4);
+    assert_eq!(r.batched_rows, 8);
+    for rec in &r.records {
+        assert_eq!(rec.status, ReqStatus::Served);
+        assert_eq!(rec.shard, Some(0));
+        assert_eq!(rec.batch_size, 4);
+        assert_eq!(
+            rec.service, service,
+            "DES quotes the threaded shard's cycles for the composed batch"
+        );
+        assert_eq!(rec.done, 3 + service, "cap closes at the last arrival (t = 3)");
+    }
+    assert!(r.accounting_balanced());
+}
+
+/// Hand-traced watermark pin on one shard: 8 simultaneous batch-class
+/// arrivals against a depth-2 mailbox and watermark 2.  Batches 0-2
+/// occupy the shard + mailbox, batch 3 blocks the batcher, requests
+/// 4-5 queue (depth 1, 2), and requests 6-7 hit the watermark and are
+/// shed with `done == submit` and no shard.  The survivors then drain
+/// strictly serially: request `i` completes at `(i + 1) * service`.
+#[test]
+fn watermark_shed_and_mailbox_backpressure_pin() {
+    assert_eq!(MAILBOX_DEPTH, 2, "the hand trace below assumes a depth-2 mailbox");
+    let cfg = run_cfg(FpFormat::BF16);
+    let store =
+        Arc::new(WeightStore::from_layers(&mobilenet::layers()[..1], FpFormat::BF16, 24, 16));
+    let requests: Vec<TraceReq> = (0..8)
+        .map(|_| TraceReq {
+            at: 0,
+            model: 0,
+            rows: 2,
+            kind: PipelineKind::Skewed,
+            class: DeadlineClass::Batch,
+        })
+        .collect();
+    let fcfg = FleetConfig {
+        shards: 1,
+        min_shards: 1,
+        max_shards: 1,
+        queue_cap: 64,
+        shed_watermark: 2,
+        batch_window: 0,
+        interactive_window: 0,
+        max_batch_requests: 8,
+        max_batch_rows: 64,
+        shard_policy: Policy::RoundRobin,
+        horizon: 100_000,
+        autoscale_interval: 0,
+        seed: 9,
+        models: models_of(&store),
+        tenants: vec![TenantSpec {
+            name: "burst".into(),
+            arrival: ArrivalSpec::Trace { requests },
+            bucket_capacity: 0,
+            bucket_refill_cycles: 0,
+            kinds: vec![PipelineKind::Skewed],
+            interactive_fraction: 0.0,
+            min_rows: 1,
+            max_rows: 8,
+        }],
+        ..FleetConfig::default()
+    };
+    let r = FleetSim::simulate(&cfg, &fcfg);
+
+    assert_eq!(r.submitted, 8);
+    assert_eq!(r.served, 6);
+    assert_eq!(r.shed, 2);
+    assert_eq!(r.shed_watermark, 2);
+    assert_eq!(r.shed_bucket, 0);
+    assert_eq!(r.shed_capacity, 0);
+    assert_eq!(r.batches, 6, "zero-window anchors dispatch alone");
+    assert_eq!(r.max_batch, 1);
+    assert_eq!(r.batched_rows, 12);
+    let service = r.records[0].service;
+    assert!(service > 0);
+    for (i, rec) in r.records.iter().take(6).enumerate() {
+        assert_eq!(rec.status, ReqStatus::Served, "request {i}");
+        assert_eq!(rec.shard, Some(0), "request {i}");
+        assert_eq!(rec.batch_size, 1, "request {i}");
+        assert_eq!(rec.service, service, "request {i}: identical shape, identical quote");
+        assert_eq!(rec.done, (i as u64 + 1) * service, "request {i}: strictly serial drain");
+    }
+    for (i, rec) in r.records.iter().enumerate().skip(6) {
+        assert_eq!(rec.status, ReqStatus::Shed, "request {i}");
+        assert_eq!(rec.shard, None, "request {i}: shed requests never touch a shard");
+        assert_eq!(rec.done, rec.submit, "request {i}: rejection is immediate");
+        assert_eq!(rec.batch_size, 0, "request {i}");
+    }
+    assert_eq!(r.wall_cycles, 6 * service);
+    assert!(r.accounting_balanced());
+}
+
+/// Cross-language golden: rebuild the exact scenario committed by the
+/// independent Python port (`python/tests/test_fleet_des.py
+/// --emit-golden`) and require every headline counter — and the
+/// full per-record FNV fingerprint — to match bit-for-bit.
+#[test]
+fn golden_python_port_scenario_reproduces() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../python/tests/golden_fleet_des.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let j = Json::parse(&text).expect("golden_fleet_des.json parses");
+
+    let mut run = RunConfig::small();
+    run.apply_json(j.get("run").expect("golden 'run' section")).expect("run section applies");
+    let mut fcfg = FleetConfig::default();
+    fcfg.apply_json(j.get("fleet").expect("golden 'fleet' section"))
+        .expect("fleet section applies");
+    let r = FleetSim::simulate(&run, &fcfg);
+
+    let exp = j.get("expect").expect("golden 'expect' section");
+    let want = |key: &str| -> u64 {
+        exp.get(key)
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("golden expect.{key} missing")) as u64
+    };
+    assert_eq!(r.submitted, want("submitted"), "submitted");
+    assert_eq!(r.served, want("served"), "served");
+    assert_eq!(r.shed_bucket, want("shed_bucket"), "shed_bucket");
+    assert_eq!(r.shed_watermark, want("shed_watermark"), "shed_watermark");
+    assert_eq!(r.shed_capacity, want("shed_capacity"), "shed_capacity");
+    assert_eq!(r.failed, want("failed"), "failed");
+    assert_eq!(r.batches, want("batches"), "batches");
+    assert_eq!(r.batched_rows, want("batched_rows"), "batched_rows");
+    assert_eq!(r.max_batch as u64, want("max_batch"), "max_batch");
+    assert_eq!(r.wall_cycles, want("wall_cycles"), "wall_cycles");
+    let fp = exp.get("fingerprint").and_then(Json::as_str).expect("expect.fingerprint");
+    assert_eq!(
+        format!("{:016x}", r.fingerprint),
+        fp,
+        "cross-language per-record fingerprint"
+    );
+    assert!(r.accounting_balanced());
+}

@@ -1,0 +1,173 @@
+//! Fleet-DES property pins: bit-identical replay at the 1000-shard /
+//! 100k-request scale the threaded stack cannot reach, event-queue
+//! ordering under adversarial push patterns, sampler statistics, exact
+//! trace replay, and autoscaler bounds (DESIGN.md §18).
+
+use skewsa::config::{FleetConfig, RunConfig};
+use skewsa::fleet::{
+    exp_gap, ArrivalSpec, Event, EventQueue, FleetSim, ModelShape, ReqStatus, TenantSpec, TraceReq,
+};
+use skewsa::pe::PipelineKind;
+use skewsa::serve::DeadlineClass;
+use skewsa::util::rng::Rng;
+
+/// The ISSUE 8 acceptance run: 1000 shards, >100k Poisson requests,
+/// finishing in seconds and replaying bit-for-bit.  The fingerprint
+/// folds every request's id/status/shard/submit/done/batch/service, so
+/// equality here is equality of the entire fleet history.
+#[test]
+fn thousand_shard_hundred_k_request_run_is_bit_identical() {
+    let run = RunConfig::small();
+    let fcfg = FleetConfig {
+        shards: 1000,
+        min_shards: 1000,
+        max_shards: 1000,
+        horizon: 2_400_000,
+        autoscale_interval: 0,
+        models: vec![ModelShape { k: 24, n: 16 }, ModelShape { k: 32, n: 8 }],
+        tenants: vec![TenantSpec::poisson("load", 20.0)],
+        ..FleetConfig::default()
+    };
+    let r1 = FleetSim::simulate(&run, &fcfg);
+    let r2 = FleetSim::simulate(&run, &fcfg);
+    assert!(r1.submitted >= 100_000, "want >=100k requests, got {}", r1.submitted);
+    assert_eq!(r1.fingerprint, r2.fingerprint, "same seed, same history");
+    assert_eq!(r1.submitted, r2.submitted);
+    assert_eq!(r1.served, r2.served);
+    assert_eq!(r1.wall_cycles, r2.wall_cycles);
+    assert!(r1.accounting_balanced(), "served + shed + failed == submitted");
+    assert!(r1.served > 0);
+    // A 1000-shard round-robin fleet under an open Poisson load uses
+    // far more than one shard.
+    let shards: std::collections::BTreeSet<usize> =
+        r1.records.iter().filter_map(|rec| rec.shard).collect();
+    assert!(shards.len() > 100, "expected wide shard spread, got {}", shards.len());
+}
+
+/// The event queue pops strictly by `(time, push order)` no matter how
+/// adversarially times are pushed — the root of the whole simulator's
+/// determinism.
+#[test]
+fn event_queue_orders_by_time_then_push_order() {
+    let mut q = EventQueue::new();
+    let mut rng = Rng::new(0xE4E7);
+    let n = 500u64;
+    for i in 0..n {
+        // batch_seq doubles as the push index so ties are checkable.
+        q.push(rng.below(64), Event::WindowClose { batch_seq: i });
+    }
+    assert_eq!(q.pushed(), n);
+    assert_eq!(q.len(), n as usize);
+    let mut last = (0u64, 0u64);
+    let mut popped = 0u64;
+    while let Some((t, ev)) = q.pop() {
+        let Event::WindowClose { batch_seq } = ev else { panic!("unexpected event") };
+        assert!(t >= last.0, "time went backwards: {t} after {}", last.0);
+        if popped > 0 && t == last.0 {
+            assert!(batch_seq > last.1, "FIFO tie-break violated at t = {t}");
+        }
+        assert_eq!(q.now(), t);
+        last = (t, batch_seq);
+        popped += 1;
+    }
+    assert_eq!(popped, n);
+    assert!(q.is_empty());
+}
+
+/// The integer exponential sampler's empirical mean converges on the
+/// configured mean gap (law of large numbers over a fixed seed).
+#[test]
+fn exp_gap_empirical_mean_matches_configured_mean() {
+    let mut rng = Rng::new(42);
+    let n = 20_000u64;
+    let mean_gap = 400.0;
+    let sum: u64 = (0..n).map(|_| exp_gap(&mut rng, mean_gap)).sum();
+    let mean = sum as f64 / n as f64;
+    let err = (mean - mean_gap).abs() / mean_gap;
+    // The Python port of the same sampler measures 401.20 for this
+    // seed (0.3% off) — 1% headroom keeps the pin tight but stable.
+    assert!(err < 0.01, "empirical mean {mean:.2} strays {:.1}% from {mean_gap}", err * 100.0);
+    // And the sampler never returns a zero-cycle gap (time must move).
+    let mut r2 = Rng::new(7);
+    assert!((0..10_000).all(|_| exp_gap(&mut r2, 0.001) >= 1));
+}
+
+/// Trace replay is exact: every request's submit cycle equals its
+/// scripted `at`, in trace order.
+#[test]
+fn trace_replay_preserves_exact_timestamps() {
+    let ats = [0u64, 17, 17, 404, 90_000];
+    let requests: Vec<TraceReq> = ats
+        .iter()
+        .map(|&at| TraceReq {
+            at,
+            model: 0,
+            rows: 2,
+            kind: PipelineKind::Skewed,
+            class: DeadlineClass::Batch,
+        })
+        .collect();
+    let fcfg = FleetConfig {
+        shards: 2,
+        min_shards: 2,
+        max_shards: 2,
+        horizon: 100_000,
+        autoscale_interval: 0,
+        models: vec![ModelShape { k: 24, n: 16 }],
+        tenants: vec![TenantSpec {
+            name: "replay".into(),
+            arrival: ArrivalSpec::Trace { requests },
+            bucket_capacity: 0,
+            bucket_refill_cycles: 0,
+            kinds: vec![PipelineKind::Skewed],
+            interactive_fraction: 0.0,
+            min_rows: 1,
+            max_rows: 8,
+        }],
+        ..FleetConfig::default()
+    };
+    let r = FleetSim::simulate(&RunConfig::small(), &fcfg);
+    assert_eq!(r.submitted, ats.len() as u64);
+    assert_eq!(r.records.len(), ats.len());
+    for (rec, &at) in r.records.iter().zip(&ats) {
+        assert_eq!(rec.submit, at, "request {} submit cycle", rec.id);
+        assert_eq!(rec.status, ReqStatus::Served);
+        assert!(rec.done > rec.submit);
+    }
+    assert!(r.accounting_balanced());
+}
+
+/// The autoscaler never leaves `[min_shards, max_shards]`, never grows
+/// by more than `autoscale_step` per tick, never shrinks by more than
+/// one, and the run's final active count is the last decision's.
+#[test]
+fn autoscaler_stays_within_bounds_and_step_limits() {
+    let fcfg = FleetConfig {
+        shards: 2,
+        min_shards: 1,
+        max_shards: 6,
+        queue_cap: 256,
+        shed_watermark: 0,
+        horizon: 600_000,
+        autoscale_interval: 10_000,
+        autoscale_step: 2,
+        slo_p99: 2_000,
+        models: vec![ModelShape { k: 64, n: 32 }],
+        tenants: vec![TenantSpec::poisson("pressure", 120.0)],
+        ..FleetConfig::default()
+    };
+    let r = FleetSim::simulate(&RunConfig::small(), &fcfg);
+    assert!(!r.autoscale.is_empty(), "interval > 0 must produce evaluations");
+    let mut active = fcfg.shards;
+    for p in &r.autoscale {
+        assert!(p.active >= fcfg.min_shards && p.active <= fcfg.max_shards, "t={}", p.t);
+        if p.active > active {
+            assert!(p.active - active <= fcfg.autoscale_step, "grow step at t={}", p.t);
+        } else {
+            assert!(active - p.active <= 1, "shrink step at t={}", p.t);
+        }
+        active = p.active;
+    }
+    assert_eq!(r.final_active, active, "final active mirrors the last decision");
+    assert!(r.accounting_balanced());
+}
