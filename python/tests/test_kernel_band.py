@@ -1,0 +1,404 @@
+"""Independent port of the batched-lane band classification (PR 9).
+
+No Rust toolchain ships in the build container, so the semantics that
+gate the vectorized softfloat lane (`arith::kernel`) are re-implemented
+here from the spec -- the RNE codec (`format::from_f64`/`encode_rne`),
+the fast-path predicate (`format::is_fast_normal`) and the any-special
+band mask of `mac_block` -- and validated over randomized boundary
+cases:
+
+  * codec round-trip: every storable pattern survives
+    from_f64(to_f64(bits)) bit-exactly (canonical NaN aside),
+  * nearest-representable: the ported encoder agrees with an
+    enumerate-all-values + bisect + ties-to-even oracle for the 8- and
+    16-bit formats, and with the C-cast RNE for FP32,
+  * classification: is_fast_normal(bits) is exactly "decoded class is
+    a *normal* finite away from the top exponent field" -- zeros,
+    subnormals, Inf/NaN and the E4M3 top-exponent finites (256..448)
+    all route to the slow path,
+  * fast-product exactness: for fast-normal operands the const-generic
+    product (sign xor, exponent add, integer significand multiply)
+    equals the exact Fraction product -- the invariant that lets the
+    monomorphized kernels skip re-classification,
+  * band-mask semantics: a band is fast iff every element is; salting
+    one special anywhere flips the whole band, and the chunked
+    (lockstep, groups of 8) accumulation order is value-identical to
+    per-column folds under exact arithmetic,
+  * E4M3 saturation boundaries: 448 stays finite (0x7e), ties at 464
+    round back to even (448), anything past saturates to NaN, and
+    overflow never produces an Inf encoding.
+
+Run:  python3 python/tests/test_kernel_band.py
+"""
+
+import random
+import struct
+from bisect import bisect_left
+from fractions import Fraction
+
+# --------------------------------------------------------------------------
+# Ported format descriptors (arith/format.rs)
+# --------------------------------------------------------------------------
+
+
+class Fmt:
+    def __init__(self, name, exp_bits, man_bits, ieee_specials):
+        self.name = name
+        self.exp_bits = exp_bits
+        self.man_bits = man_bits
+        self.ieee_specials = ieee_specials
+
+    @property
+    def width(self):
+        return 1 + self.exp_bits + self.man_bits
+
+    @property
+    def bias(self):
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def exp_field_max(self):
+        return (1 << self.exp_bits) - 1
+
+    @property
+    def emin(self):
+        return 1 - self.bias
+
+    @property
+    def emax(self):
+        if self.ieee_specials:
+            return self.exp_field_max - 1 - self.bias
+        return self.exp_field_max - self.bias  # E4M3: top field is finite
+
+    def nan_bits(self):
+        if self.ieee_specials:
+            return (self.exp_field_max << self.man_bits) | (1 << (self.man_bits - 1))
+        return (self.exp_field_max << self.man_bits) | ((1 << self.man_bits) - 1)
+
+    def inf_bits(self):
+        if self.ieee_specials:
+            return self.exp_field_max << self.man_bits
+        return self.nan_bits()
+
+    def max_finite_sig(self):
+        full = (1 << (self.man_bits + 1)) - 1
+        return full if self.ieee_specials else full - 1
+
+    # class is one of "zero", "inf", "nan", "finite"
+    def decode(self, bits):
+        sign = (bits >> (self.width - 1)) & 1 == 1
+        ef = (bits >> self.man_bits) & self.exp_field_max
+        frac = bits & ((1 << self.man_bits) - 1)
+        if self.ieee_specials and ef == self.exp_field_max:
+            return ("inf" if frac == 0 else "nan", sign, 0, 0)
+        if not self.ieee_specials and ef == self.exp_field_max and frac == (1 << self.man_bits) - 1:
+            return ("nan", sign, 0, 0)
+        if ef == 0:
+            if frac == 0:
+                return ("zero", sign, 0, 0)
+            shift = self.man_bits + 1 - frac.bit_length()
+            return ("finite", sign, self.emin - shift, frac << shift)
+        return ("finite", sign, ef - self.bias, (1 << self.man_bits) | frac)
+
+    def value(self, bits):
+        """Exact Fraction value of a finite/zero pattern."""
+        cls, sign, exp, sig = self.decode(bits)
+        assert cls in ("finite", "zero"), cls
+        v = Fraction(sig) * Fraction(2) ** (exp - self.man_bits)
+        return -v if sign else v
+
+    def is_fast_normal(self, bits):
+        ef = (bits >> self.man_bits) & self.exp_field_max
+        return ef != 0 and ef != self.exp_field_max
+
+    def encode_rne(self, sign, exp, sig):
+        """Port of format.rs encode_rne: sig = 1.xxx with man_bits+1+3 bits."""
+        extra = 3
+        sign_bit = int(sign) << (self.width - 1)
+        if sig == 0:
+            return sign_bit
+        subnormal = False
+        if exp < self.emin:
+            sig = shift_right_sticky(sig, self.emin - exp)
+            exp = self.emin
+            subnormal = True
+        lsb = 1 << extra
+        halfway = lsb >> 1
+        low = sig & (lsb - 1)
+        q = sig >> extra
+        if low > halfway or (low == halfway and q & 1 == 1):
+            q += 1
+        if q >> (self.man_bits + 1) != 0:
+            q >>= 1
+            exp += 1
+        if subnormal and q >> self.man_bits == 0:
+            return sign_bit | q
+        overflow = exp > self.emax or (
+            not self.ieee_specials and exp == self.emax and q > self.max_finite_sig()
+        )
+        if overflow:
+            return sign_bit | (self.inf_bits() if self.ieee_specials else self.nan_bits())
+        return sign_bit | ((exp + self.bias) << self.man_bits) | (q & ((1 << self.man_bits) - 1))
+
+    def from_f64(self, x):
+        bits = struct.unpack("<Q", struct.pack("<d", x))[0]
+        sign = bits >> 63 == 1
+        ef = (bits >> 52) & 0x7FF
+        frac = bits & ((1 << 52) - 1)
+        if ef == 0x7FF:
+            special = self.inf_bits() if frac == 0 else self.nan_bits()
+            return (int(sign) << (self.width - 1)) | special
+        if ef == 0 and frac == 0:
+            return int(sign) << (self.width - 1)
+        if ef == 0:
+            shift = 53 - frac.bit_length()
+            exp, sig = -1022 - shift, frac << shift
+        else:
+            exp, sig = ef - 1023, (1 << 52) | frac
+        target = self.man_bits + 1 + 3
+        if 53 > target:
+            sig = shift_right_sticky(sig, 53 - target)
+        else:
+            sig <<= target - 53
+        return self.encode_rne(sign, exp, sig)
+
+    def to_f64(self, bits):
+        cls, sign, _exp, _sig = self.decode(bits)
+        if cls == "zero":
+            return -0.0 if sign else 0.0
+        if cls == "inf":
+            return float("-inf") if sign else float("inf")
+        if cls == "nan":
+            return float("nan")
+        return float(self.value(bits))  # exact: every format embeds in f64
+
+
+def shift_right_sticky(sig, shift):
+    if shift >= 64:
+        return 1 if sig != 0 else 0
+    sticky = 1 if sig & ((1 << shift) - 1) != 0 else 0
+    return (sig >> shift) | sticky
+
+
+BF16 = Fmt("bf16", 8, 7, True)
+FP16 = Fmt("fp16", 5, 10, True)
+E4M3 = Fmt("fp8-e4m3", 4, 3, False)
+E5M2 = Fmt("fp8-e5m2", 5, 2, True)
+FP32 = Fmt("fp32", 8, 23, True)
+ALL = [BF16, FP16, E4M3, E5M2, FP32]
+SMALL = [BF16, FP16, E4M3, E5M2]  # exhaustively enumerable
+
+
+# --------------------------------------------------------------------------
+# Oracles
+# --------------------------------------------------------------------------
+
+
+def finite_table(fmt):
+    """All finite (value, bits) pairs, sorted by exact value."""
+    table = []
+    for bits in range(1 << fmt.width):
+        if fmt.decode(bits)[0] in ("finite", "zero"):
+            table.append((fmt.value(bits), bits))
+    table.sort(key=lambda t: t[0])
+    return table
+
+
+def nearest_rne(table, x):
+    """Bisect oracle: nearest finite value, ties to even significand."""
+    xs = [v for v, _ in table]
+    i = bisect_left(xs, x)
+    cands = [table[j] for j in (i - 1, i) if 0 <= j < len(table)]
+    best = min(abs(v - x) for v, _ in cands)
+    tied = [b for v, b in cands if abs(v - x) == best]
+    if len(tied) == 1:
+        return tied[0]
+    even = [b for b in tied if b & 1 == 0]
+    return even[0] if even else tied[0]
+
+
+def check(cond, msg):
+    if not cond:
+        raise AssertionError(msg)
+
+
+# --------------------------------------------------------------------------
+# Tests
+# --------------------------------------------------------------------------
+
+
+def test_round_trip_all_patterns():
+    for fmt in SMALL:
+        for bits in range(1 << fmt.width):
+            cls = fmt.decode(bits)[0]
+            back = fmt.from_f64(fmt.to_f64(bits))
+            if cls == "nan":
+                sign_bit = bits & (1 << (fmt.width - 1))
+                # f64 NaN loses the sign; canonical NaN comes back.
+                check(back & ~(1 << (fmt.width - 1)) == fmt.nan_bits(),
+                      f"{fmt.name} {bits:#x} nan round-trip -> {back:#x}")
+                _ = sign_bit  # sign of NaN is unobservable through f64
+            else:
+                check(back == bits, f"{fmt.name} {bits:#x} -> {back:#x}")
+
+
+def test_encoder_matches_bisect_oracle(rng):
+    for fmt in SMALL:
+        table = finite_table(fmt)
+        vmax = float(table[-1][0])
+        for _ in range(4000):
+            kind = rng.randrange(4)
+            if kind == 0:
+                x = rng.gauss(0.0, 1.0)
+            elif kind == 1:
+                x = rng.gauss(0.0, 1e-3) * vmax
+            elif kind == 2:
+                # A representable value nudged by a fraction of its gap.
+                v, _b = table[rng.randrange(1, len(table) - 1)]
+                x = float(v) * (1.0 + rng.uniform(-1, 1) * 2.0 ** -(fmt.man_bits + 1))
+            else:
+                x = rng.uniform(-vmax, vmax)
+            if abs(x) > vmax * 0.999:  # overflow handled separately
+                continue
+            got = fmt.from_f64(x)
+            want = nearest_rne(table, Fraction(x))
+            check(got == want,
+                  f"{fmt.name} from_f64({x!r}) = {got:#x}, oracle {want:#x}")
+
+
+def test_fp32_port_matches_c_cast(rng):
+    for _ in range(4000):
+        x = rng.gauss(0.0, 1.0) * 10.0 ** rng.randrange(-30, 30)
+        got = FP32.from_f64(x)
+        want = struct.unpack("<I", struct.pack("<f", x))[0]
+        check(got == want, f"fp32 from_f64({x!r}) = {got:#x}, C cast {want:#x}")
+
+
+def test_classification_matches_decode(rng):
+    for fmt in SMALL:
+        for bits in range(1 << fmt.width):
+            cls, _s, exp, _sig = fmt.decode(bits)
+            ef = (bits >> fmt.man_bits) & fmt.exp_field_max
+            slow_value = (
+                cls != "finite"
+                or exp < fmt.emin  # subnormal (decode normalizes the sig)
+                or ef == fmt.exp_field_max  # E4M3 top-exponent finites
+            )
+            check(fmt.is_fast_normal(bits) == (not slow_value),
+                  f"{fmt.name} {bits:#x}: fast={fmt.is_fast_normal(bits)} cls={cls}")
+    # FP32: sampled, same predicate.
+    for _ in range(2000):
+        bits = rng.getrandbits(FP32.width)
+        cls, _s, exp, _sig = FP32.decode(bits)
+        ef = (bits >> FP32.man_bits) & FP32.exp_field_max
+        slow_value = cls != "finite" or exp < FP32.emin or ef == FP32.exp_field_max
+        check(FP32.is_fast_normal(bits) == (not slow_value), f"fp32 {bits:#x}")
+
+
+def fast_product(fmt, a, b):
+    """Port of kernel::normal_product -- only valid on fast normals."""
+    _, sa, ea, siga = fmt.decode(a)
+    _, sb, eb, sigb = fmt.decode(b)
+    sign = sa != sb
+    exp = ea + eb
+    sig = siga * sigb  # 2*man_bits fraction bits
+    v = Fraction(sig) * Fraction(2) ** (exp - 2 * fmt.man_bits)
+    return -v if sign else v
+
+
+def random_fast(fmt, rng):
+    while True:
+        bits = rng.getrandbits(fmt.width)
+        if fmt.is_fast_normal(bits):
+            return bits
+
+
+def test_fast_product_is_exact(rng):
+    for fmt in ALL:
+        for _ in range(1500):
+            a, b = random_fast(fmt, rng), random_fast(fmt, rng)
+            got = fast_product(fmt, a, b)
+            want = fmt.value(a) * fmt.value(b)
+            check(got == want, f"{fmt.name} product {a:#x}*{b:#x}: {got} != {want}")
+
+
+def special_bits(fmt, rng):
+    """One slow-path pattern: zero, subnormal, Inf/NaN or top-exponent."""
+    choice = rng.randrange(4)
+    if choice == 0:
+        return rng.randrange(2) << (fmt.width - 1)  # +/- 0
+    if choice == 1:
+        return rng.getrandbits(fmt.man_bits)  # subnormal (or +0)
+    if choice == 2:
+        return fmt.nan_bits() if rng.randrange(2) else fmt.inf_bits()
+    return (fmt.exp_field_max << fmt.man_bits) | rng.getrandbits(fmt.man_bits)
+
+
+def test_band_mask_semantics(rng):
+    block = 8  # kernel::BLOCK_LANES
+    for fmt in ALL:
+        for _ in range(300):
+            k = rng.randrange(1, 33)
+            cols = rng.randrange(1, 20)
+            a = [random_fast(fmt, rng) for _ in range(k)]
+            w = [[random_fast(fmt, rng) for _ in range(k)] for _ in range(cols)]
+            band = a + [x for col in w for x in col]
+            check(all(fmt.is_fast_normal(x) for x in band), "fast band must be all-normal")
+            # Chunked lockstep (k-outer, lane-inner, groups of `block`)
+            # vs dependent per-column folds: exact accumulation makes the
+            # orders value-identical -- the indexing must agree.
+            serial = [
+                sum(fast_product(fmt, a[i], col[i]) for i in range(k)) for col in w
+            ]
+            lockstep = [Fraction(0)] * cols
+            for j0 in range(0, cols, block):
+                for i in range(k):
+                    for j in range(j0, min(j0 + block, cols)):
+                        lockstep[j] += fast_product(fmt, a[i], w[j][i])
+            check(lockstep == serial, f"{fmt.name} lockstep != serial ({k}x{cols})")
+            # Salting any single element makes the band slow.
+            flat = list(band)
+            flat[rng.randrange(len(flat))] = special_bits(fmt, rng)
+            check(not all(fmt.is_fast_normal(x) for x in flat),
+                  f"{fmt.name}: salted band still classified fast")
+
+
+def test_e4m3_saturation_boundaries():
+    check(E4M3.from_f64(448.0) == 0x7E, "448 must encode as the max finite")
+    check(E4M3.from_f64(-448.0) == 0xFE, "-448 must encode as the max finite")
+    check(E4M3.to_f64(0x7E) == 448.0, "0x7e must decode to 448")
+    # 449..464 round back down to 448 (464 is the tie; 448 has the even
+    # significand), strictly past 464 saturates to NaN -- never Inf.
+    for x in (449.0, 456.0, 463.999, 464.0):
+        check(E4M3.from_f64(x) == 0x7E, f"{x} must round to 448")
+    for x in (464.001, 465.0, 480.0, 1e9, float("inf")):
+        bits = E4M3.from_f64(x)
+        check(E4M3.decode(bits)[0] == "nan", f"{x} must saturate to NaN, got {bits:#x}")
+        check(bits == E4M3.nan_bits(), f"{x}: saturation must be canonical NaN")
+    # The top-exponent finites exist (256..448) but are slow-path.
+    for x in (256.0, 288.0, 448.0):
+        bits = E4M3.from_f64(x)
+        check(E4M3.decode(bits)[0] == "finite", f"{x} must stay finite")
+        check(not E4M3.is_fast_normal(bits), f"{x} must be slow-path")
+    check(E4M3.is_fast_normal(E4M3.from_f64(240.0)), "240 is a fast normal")
+    # IEEE-like formats overflow to a true Inf instead (E5M2: ties at
+    # 61440 round *up* -- the 57344 significand is odd).
+    check(E5M2.from_f64(57344.0) == 0x7B, "E5M2 max finite")
+    check(E5M2.from_f64(61440.0) == E5M2.inf_bits(), "E5M2 tie rounds up to Inf")
+    check(E5M2.from_f64(61439.9) == 0x7B, "below the E5M2 tie stays finite")
+
+
+def main():
+    rng = random.Random(0x6B616E64)
+    test_round_trip_all_patterns()
+    test_encoder_matches_bisect_oracle(rng)
+    test_fp32_port_matches_c_cast(rng)
+    test_classification_matches_decode(rng)
+    test_fast_product_is_exact(rng)
+    test_band_mask_semantics(rng)
+    test_e4m3_saturation_boundaries()
+    print("test_kernel_band: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

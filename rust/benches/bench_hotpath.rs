@@ -14,11 +14,20 @@
 //!    (both pinned to the closed-form layer model);
 //! 5. `executor` — coordinated GEMM throughput across the worker pool.
 //!
+//! plus the vectorized-kernel tiers of the monomorphized lane rewrite:
+//! the 128×128 tile through the scalar per-lane reference driver vs the
+//! batched banded kernels (`speedup_vectorized_vs_scalar_128`), and the
+//! precision-oracle layer analysis, vectorized vs element-at-a-time.
+//! A fixed integer spin tier (`hot:host-calib-spin`) calibrates the
+//! host: dividing any PE-cycles/s tier by `host_spin_ops_per_sec`
+//! host-normalizes it, so trajectories line up across machines.
+//!
 //! Every run appends its PE-cycles/sec numbers and the fast-vs-dense
 //! speedups to `BENCH_hotpath.json` at the repo root, so the perf
-//! trajectory is tracked across PRs.  Pass `--smoke` (or set
+//! trajectory is tracked across PRs (`skewsa bench-check` validates the
+//! schema and flags >20% regressions).  Pass `--smoke` (or set
 //! `SKEWSA_BENCH_SMOKE=1`) for a fast CI-grade run with reduced
-//! iteration counts.
+//! iteration counts; the appended record is schema-complete either way.
 //!
 //! ```text
 //! cargo bench --bench bench_hotpath
@@ -31,6 +40,7 @@ use skewsa::arith::format::FpFormat;
 use skewsa::config::RunConfig;
 use skewsa::coordinator::Coordinator;
 use skewsa::pe::PipelineKind;
+use skewsa::precision::{analyze_layer, analyze_layer_reference, AnalysisConfig};
 use skewsa::sa::array::ArraySim;
 use skewsa::sa::column::ColumnSim;
 use skewsa::sa::fast::FastArraySim;
@@ -39,6 +49,7 @@ use skewsa::sa::tile::{GemmShape, TilePlan};
 use skewsa::util::bench::{append_json_run, measure, with_units, Measurement};
 use skewsa::util::rng::Rng;
 use skewsa::workloads::gemm::GemmData;
+use skewsa::workloads::resnet50;
 use std::sync::Arc;
 
 const CFG: ChainCfg = ChainCfg::BF16_FP32;
@@ -53,6 +64,21 @@ fn main() {
         println!("{}", m.report());
         tiers.push((m.name.clone(), m.throughput()));
     }
+
+    // --- 0. host calibration ---------------------------------------------
+    // A fixed integer LCG spin: pure single-core ALU throughput, no
+    // memory traffic.  PE-cycles/s tiers divided by this rate give the
+    // host-normalized figures the trajectory comparisons should use.
+    let spin = measure("hot:host-calib-spin", 1, it(200), 7, || {
+        let mut x = 0x9e37_79b9_7f4a_7c15u64;
+        for _ in 0..4096 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        }
+        std::hint::black_box(x);
+    });
+    let spin = with_units(spin, 4096.0, "ops");
+    record(&spin, &mut tiers);
+    let host_spin = spin.throughput().max(1e-9);
 
     let mut rng = Rng::new(0x407);
     let vals: Vec<(u64, u64)> = (0..1024)
@@ -172,6 +198,18 @@ fn main() {
     let fast128 = with_units(m, ppes, "PE-cycles");
     record(&fast128, &mut tiers);
 
+    // Scalar variant of the same tile: the per-lane generic-datapath
+    // reference driver ([`FastArraySim::run_reference`]) instead of the
+    // monomorphized banded kernels — the speedup the vectorized lane
+    // rewrite buys, on identical bits (pinned by the parity suite).
+    let m = measure("hot:fast-sim-128x128xM32-scalar", 1, it(20), 5, || {
+        let mut sim = FastArraySim::new(CFG, PipelineKind::Skewed, &pdata.w, &pdata.a);
+        sim.run_reference(1_000_000).unwrap();
+        std::hint::black_box(sim.cycles());
+    });
+    let scalar128 = with_units(m, ppes, "PE-cycles");
+    record(&scalar128, &mut tiers);
+
     // Fixed tier key (the worker count is machine-dependent and goes
     // into its own JSON field so trajectories line up across hosts).
     let workers = std::thread::available_parallelism().map_or(4, |n| n.get().min(8));
@@ -222,12 +260,47 @@ fn main() {
         stream_tiers[1].2
     );
 
+    // Tile-level parallelism: the same 4-tile plan with independent
+    // K-pass/output tiles fanned across threads (the executor's default
+    // cycle-accurate route), identical bits and report to the serial
+    // stream by construction.
+    let stream_db_cycles = stream_tiers[1].2;
+    let m = measure("hot:stream-4x128x128-tile-par", 1, it(10), 3, || {
+        let mut sim =
+            StreamingSim::new(CFG, PipelineKind::Skewed, &splan, &sdata.w, &sdata.a, true);
+        sim.run_tile_parallel(10_000_000, stream_workers).unwrap();
+        std::hint::black_box(sim.report().unwrap().cycles);
+    });
+    record(&with_units(m, stream_db_cycles * (128.0 * 128.0), "PE-cycles"), &mut tiers);
+
+    // --- precision-oracle layer analysis (vectorized vs reference) -------
+    // One mid-network ResNet50 layer at the `skewsa precision` sampling
+    // defaults: the wall time the planner pays per (layer, format) probe.
+    let rlayers = resnet50::layers();
+    let rlayer = &rlayers[rlayers.len() / 2];
+    let acfg = AnalysisConfig { m_cap: 8, n_cap: 16, seed: 0 };
+    let outputs = (acfg.m_cap * acfg.n_cap) as f64;
+    let m = measure("hot:precision-resnet50-mid-vectorized", 1, it(10), 3, || {
+        std::hint::black_box(analyze_layer(rlayer, FpFormat::BF16, &acfg).stats.samples);
+    });
+    let prec_vec = with_units(m, outputs, "outputs");
+    record(&prec_vec, &mut tiers);
+    let m = measure("hot:precision-resnet50-mid-scalar", 1, it(10), 3, || {
+        std::hint::black_box(analyze_layer_reference(rlayer, FpFormat::BF16, &acfg).stats.samples);
+    });
+    let prec_ref = with_units(m, outputs, "outputs");
+    record(&prec_ref, &mut tiers);
+
     let speedup32 = fast32.throughput() / dense32.throughput().max(1e-9);
     let speedup128 = fast128.throughput() / dense128.throughput().max(1e-9);
     let speedup128p = fast128p.throughput() / dense128.throughput().max(1e-9);
+    let speedup_vec128 = fast128.throughput() / scalar128.throughput().max(1e-9);
+    let speedup_prec = prec_vec.throughput() / prec_ref.throughput().max(1e-9);
     println!("bench: fast-vs-dense speedup   32x32xM16 {speedup32:>8.1}x");
     println!("bench: fast-vs-dense speedup 128x128xM32 {speedup128:>8.1}x (serial)");
     println!("bench: fast-vs-dense speedup 128x128xM32 {speedup128p:>8.1}x (par{workers})");
+    println!("bench: vectorized-vs-scalar  128x128xM32 {speedup_vec128:>8.2}x (banded kernels)");
+    println!("bench: precision analysis vectorized     {speedup_prec:>8.2}x (resnet50 mid)");
 
     // --- 4. coordinated GEMM throughput ----------------------------------
     for workers in [1usize, 4, 8] {
@@ -253,7 +326,9 @@ fn main() {
         .unwrap_or(0);
     let mut entry = format!(
         "  {{\"bench\": \"hotpath\", \"unix_time\": {ts}, \"smoke\": {smoke}, \
-         \"par_workers\": {workers}"
+         \"par_workers\": {workers}, \"host_spin_ops_per_sec\": {host_spin:.4e}, \
+         \"kernel_vectorized_variant\": \"mono-banded\", \
+         \"kernel_scalar_variant\": \"generic-serial\""
     );
     for (name, thru) in &tiers {
         entry.push_str(&format!(", \"{name}\": {thru:.4e}"));
@@ -262,6 +337,8 @@ fn main() {
         ", \"speedup_fast_vs_dense_32\": {speedup32:.2}, \
          \"speedup_fast_vs_dense_128\": {speedup128:.2}, \
          \"speedup_fast_par_vs_dense_128\": {speedup128p:.2}, \
+         \"speedup_vectorized_vs_scalar_128\": {speedup_vec128:.3}, \
+         \"speedup_precision_vectorized\": {speedup_prec:.3}, \
          \"stream_serial_cycles\": {}, \"stream_overlapped_cycles\": {}, \
          \"stream_overlap_saving\": {overlap_saving:.4}}}",
         stream_tiers[0].2, stream_tiers[1].2

@@ -93,6 +93,14 @@ impl ColumnOracle {
         self.steps += 1;
     }
 
+    /// Feed a whole slice of `a × w` terms through the monomorphized
+    /// per-format kernel — bit-identical to calling [`ColumnOracle::mac`]
+    /// element-wise, with the format dispatch hoisted out of the loop.
+    pub fn mac_slice(&mut self, a_bits: &[u64], w_bits: &[u64]) {
+        self.state = super::kernel::mac_slice(&self.cfg, &self.state, a_bits, w_bits);
+        self.steps += a_bits.len();
+    }
+
     /// Number of terms accumulated so far.
     pub fn len(&self) -> usize {
         self.steps
@@ -287,6 +295,28 @@ mod tests {
             // sum must round identically to the unsplit chain.
             assert_eq!(p1.result(), whole.result());
             assert_eq!(p1.len(), whole.len());
+        }
+    }
+
+    #[test]
+    fn mac_slice_equals_elementwise_mac() {
+        let mut rng = Rng::new(0x5103);
+        for _ in 0..50 {
+            let n = rng.below(64) as usize;
+            let terms: Vec<(u64, u64)> = (0..n)
+                .map(|_| (bf(rng.range_i64(-16, 16) as f64), bf(rng.range_i64(-8, 8) as f64)))
+                .collect();
+            let mut by_elem = ColumnOracle::new(CFG);
+            for &(a, w) in &terms {
+                by_elem.mac(a, w);
+            }
+            let a: Vec<u64> = terms.iter().map(|t| t.0).collect();
+            let w: Vec<u64> = terms.iter().map(|t| t.1).collect();
+            let mut by_slice = ColumnOracle::new(CFG);
+            by_slice.mac_slice(&a, &w);
+            assert_eq!(by_slice.signal(), by_elem.signal());
+            assert_eq!(by_slice.result(), by_elem.result());
+            assert_eq!(by_slice.len(), by_elem.len());
         }
     }
 

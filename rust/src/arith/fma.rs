@@ -291,7 +291,7 @@ fn merge_step_special(
 /// decode path.  §Perf iteration 3: the full decode pair was ~25% of
 /// the coordinator's numeric hot loop.
 #[inline]
-fn fast_normal_product(fmt: FpFormat, a: u64, b: u64) -> Option<ExactProduct> {
+pub(crate) fn fast_normal_product(fmt: FpFormat, a: u64, b: u64) -> Option<ExactProduct> {
     let em = fmt.exp_field_max() as u64;
     let mb = fmt.man_bits;
     let ea = (a >> mb) & em;
@@ -314,7 +314,7 @@ fn fast_normal_product(fmt: FpFormat, a: u64, b: u64) -> Option<ExactProduct> {
 /// Shared operand stage: produce the (special-state, product-window)
 /// pair, or the early-out passthrough signal for non-finite operands.
 #[inline]
-fn step_operands(
+pub(crate) fn step_operands(
     cfg: &ChainCfg,
     psum: &PsumSignal,
     a_bits: u64,
@@ -371,28 +371,43 @@ impl ChainDatapath for BaselineFmaPath {
             Ok(v) => v,
             Err(passthrough) => return passthrough,
         };
-        // ê_i = max(e_Mi, e_{i−1}); d_i = |e_Mi − e_{i−1}| (§III-B, the
-        // non-speculative originals).
-        let e_hat = match (pwin.sig != 0, psum.val.sig != 0) {
-            (false, false) => 0,
-            (true, false) => pwin.exp_top,
-            (false, true) => psum.val.exp_top,
-            (true, true) => pwin.exp_top.max(psum.val.exp_top),
-        };
-
-        // ---- stage 2: align + add + LZA + normalize --------------------
-        let xa = pwin.reexpress(cfg.window, e_hat);
-        let ya = psum.val.reexpress(cfg.window, e_hat);
-        let (sum, l) = add_same_top(cfg, xa, ya);
-        // Normalize: shift left by L, correct the exponent e_i = ê_i − L_i.
-        let out = if sum.sig == 0 {
-            WindowVal { sign: sum.sign, exp_top: sum.exp_top, sig: 0, sticky: sum.sticky }
-        } else {
-            let norm_top = sum.exp_top - l as i32;
-            sum.reexpress(cfg.window, norm_top)
-        };
-        PsumSignal { val: out, lza: if out.sig == 0 { cfg.window } else { 0 }, special }
+        baseline_combine(cfg, psum, special, pwin)
     }
+}
+
+/// Baseline stage 1 (exponent compare) + stage 2 (align/add/LZA/
+/// normalize) after the operand stage resolved the product window:
+/// the shared tail of [`BaselineFmaPath::step`], factored out so the
+/// monomorphized kernels in [`crate::arith::kernel`] can reuse it
+/// verbatim (bit-identity by construction, not by re-derivation).
+#[inline]
+pub(crate) fn baseline_combine(
+    cfg: &ChainCfg,
+    psum: &PsumSignal,
+    special: Special,
+    pwin: WindowVal,
+) -> PsumSignal {
+    // ê_i = max(e_Mi, e_{i−1}); d_i = |e_Mi − e_{i−1}| (§III-B, the
+    // non-speculative originals).
+    let e_hat = match (pwin.sig != 0, psum.val.sig != 0) {
+        (false, false) => 0,
+        (true, false) => pwin.exp_top,
+        (false, true) => psum.val.exp_top,
+        (true, true) => pwin.exp_top.max(psum.val.exp_top),
+    };
+
+    // ---- stage 2: align + add + LZA + normalize --------------------
+    let xa = pwin.reexpress(cfg.window, e_hat);
+    let ya = psum.val.reexpress(cfg.window, e_hat);
+    let (sum, l) = add_same_top(cfg, xa, ya);
+    // Normalize: shift left by L, correct the exponent e_i = ê_i − L_i.
+    let out = if sum.sig == 0 {
+        WindowVal { sign: sum.sign, exp_top: sum.exp_top, sig: 0, sticky: sum.sticky }
+    } else {
+        let norm_top = sum.exp_top - l as i32;
+        sum.reexpress(cfg.window, norm_top)
+    };
+    PsumSignal { val: out, lza: if out.sig == 0 { cfg.window } else { 0 }, special }
 }
 
 // ---------------------------------------------------------------------------
@@ -426,61 +441,75 @@ impl ChainDatapath for SkewedFmaPath {
             Ok(v) => v,
             Err(passthrough) => return passthrough,
         };
-        // e′_i = max(e_Mi, ê_{i−1}), d′_i = e_Mi − ê_{i−1}: computed from
-        // the UNnormalized incoming exponent — these are speculative.
-        let in_zero = psum.val.sig == 0;
-        let d_spec: i32 = if in_zero || pwin.sig == 0 {
-            0
-        } else {
-            pwin.exp_top - psum.val.exp_top
-        };
-
-        // ---- stage 2: Fix Sign & Exponent + merged align/normalize -----
-        // L_{i−1} arrives from the previous PE; the fix recovers the true
-        // alignment:  d_i = d′_i + L_{i−1}  (signed form of the paper's
-        // two-case |·| split), i.e. the corrected incoming exponent is
-        // ê_{i−1} − L_{i−1}.
-        let l_in = psum.lza as i32;
-        let (sum, l) = if pwin.sig == 0 && in_zero {
-            // Both magnitudes empty: only sticky residue (if any) flows on.
-            (
-                WindowVal { sign: false, exp_top: 0, sig: 0, sticky: psum.val.sticky },
-                cfg.window,
-            )
-        } else {
-            // Common alignment target from the fix equations.  For live
-            // operands: max of product top and the *corrected* incoming
-            // top (d_i = d′_i + L_{i−1}); the retimed shifter moves the
-            // incoming sum LEFT by up to L_{i−1} (normalization) or RIGHT
-            // (alignment); only one direction fires (Fig. 6).  When one
-            // magnitude is zero the other's reference wins — but the add
-            // still runs, so a zero-with-sticky operand borrows exactly
-            // as in the baseline adder (bit-identity demands it).
-            let t = match (pwin.sig != 0, !in_zero) {
-                (true, true) => {
-                    let d_fixed = d_spec + l_in; // e_M_top − corrected_in_top
-                    let in_corr_top = psum.val.exp_top - l_in;
-                    if d_fixed >= 0 {
-                        pwin.exp_top
-                    } else {
-                        in_corr_top
-                    }
-                }
-                (true, false) => pwin.exp_top,
-                // Zero product: keep the incoming raw reference (no shift
-                // of the unnormalized sum — a pure adder passthrough).
-                (false, true) => psum.val.exp_top,
-                (false, false) => unreachable!(),
-            };
-            let xa = pwin.reexpress(cfg.window, t);
-            let ya = psum.val.reexpress(cfg.window, t);
-            add_same_top(cfg, xa, ya)
-        };
-        // Forward the raw adder output; ê_i = sum.exp_top, plus L_i for
-        // the next PE's fix logic.  No normalization happens here — that
-        // is the whole point.
-        PsumSignal { val: sum, lza: l, special }
+        skewed_combine(cfg, psum, special, pwin)
     }
+}
+
+/// Skewed stage 1 (speculative compare) + stage 2 (fix + merged
+/// align/normalize + add) after the operand stage resolved the product
+/// window: the shared tail of [`SkewedFmaPath::step`], factored out for
+/// the monomorphized kernels in [`crate::arith::kernel`].
+#[inline]
+pub(crate) fn skewed_combine(
+    cfg: &ChainCfg,
+    psum: &PsumSignal,
+    special: Special,
+    pwin: WindowVal,
+) -> PsumSignal {
+    // e′_i = max(e_Mi, ê_{i−1}), d′_i = e_Mi − ê_{i−1}: computed from
+    // the UNnormalized incoming exponent — these are speculative.
+    let in_zero = psum.val.sig == 0;
+    let d_spec: i32 = if in_zero || pwin.sig == 0 {
+        0
+    } else {
+        pwin.exp_top - psum.val.exp_top
+    };
+
+    // ---- stage 2: Fix Sign & Exponent + merged align/normalize -----
+    // L_{i−1} arrives from the previous PE; the fix recovers the true
+    // alignment:  d_i = d′_i + L_{i−1}  (signed form of the paper's
+    // two-case |·| split), i.e. the corrected incoming exponent is
+    // ê_{i−1} − L_{i−1}.
+    let l_in = psum.lza as i32;
+    let (sum, l) = if pwin.sig == 0 && in_zero {
+        // Both magnitudes empty: only sticky residue (if any) flows on.
+        (
+            WindowVal { sign: false, exp_top: 0, sig: 0, sticky: psum.val.sticky },
+            cfg.window,
+        )
+    } else {
+        // Common alignment target from the fix equations.  For live
+        // operands: max of product top and the *corrected* incoming
+        // top (d_i = d′_i + L_{i−1}); the retimed shifter moves the
+        // incoming sum LEFT by up to L_{i−1} (normalization) or RIGHT
+        // (alignment); only one direction fires (Fig. 6).  When one
+        // magnitude is zero the other's reference wins — but the add
+        // still runs, so a zero-with-sticky operand borrows exactly
+        // as in the baseline adder (bit-identity demands it).
+        let t = match (pwin.sig != 0, !in_zero) {
+            (true, true) => {
+                let d_fixed = d_spec + l_in; // e_M_top − corrected_in_top
+                let in_corr_top = psum.val.exp_top - l_in;
+                if d_fixed >= 0 {
+                    pwin.exp_top
+                } else {
+                    in_corr_top
+                }
+            }
+            (true, false) => pwin.exp_top,
+            // Zero product: keep the incoming raw reference (no shift
+            // of the unnormalized sum — a pure adder passthrough).
+            (false, true) => psum.val.exp_top,
+            (false, false) => unreachable!(),
+        };
+        let xa = pwin.reexpress(cfg.window, t);
+        let ya = psum.val.reexpress(cfg.window, t);
+        add_same_top(cfg, xa, ya)
+    };
+    // Forward the raw adder output; ê_i = sum.exp_top, plus L_i for
+    // the next PE's fix logic.  No normalization happens here — that
+    // is the whole point.
+    PsumSignal { val: sum, lza: l, special }
 }
 
 #[cfg(test)]

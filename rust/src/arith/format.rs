@@ -166,6 +166,26 @@ impl FpFormat {
         }
     }
 
+    /// Raw biased exponent field of a stored bit pattern.
+    #[inline]
+    pub const fn exp_field_of(&self, bits: u64) -> u32 {
+        ((bits >> self.man_bits) & (self.exp_field_max() as u64)) as u32
+    }
+
+    /// `true` iff `bits` encodes a *normal* finite number away from both
+    /// exponent-field extremes — exactly the operand class eligible for
+    /// the branch-free product fast path (`arith::kernel`).  Zeros,
+    /// subnormals (field 0), and the top exponent field (IEEE specials;
+    /// E4M3 top-exponent finites are conservatively excluded too, so one
+    /// predicate serves every format) all return `false` and take the
+    /// exact slow path.  The per-band "any-special" masks of the batched
+    /// simulators are folds of this predicate.
+    #[inline]
+    pub const fn is_fast_normal(&self, bits: u64) -> bool {
+        let ef = self.exp_field_of(bits);
+        ef != 0 && ef != self.exp_field_max()
+    }
+
     /// Decode a raw bit pattern into an [`Unpacked`] value.
     #[inline]
     pub fn decode(&self, bits: u64) -> Unpacked {
@@ -586,6 +606,36 @@ mod tests {
         assert_eq!(over & 0x7f, e4.nan_bits() & 0x7f);
         // Max finite (448) must survive.
         assert_eq!(e4.from_f64(448.0), 0x7e);
+    }
+
+    #[test]
+    fn fast_normal_predicate_matches_decode_class() {
+        // The fast-path eligibility predicate must be a *subset* of
+        // Finite, must exclude every zero/subnormal/special, and must
+        // exclude the top exponent field even where E4M3 keeps it finite.
+        for f in FpFormat::ALL {
+            let probe = |bits: u64| {
+                let u = f.decode(bits);
+                let fast = f.is_fast_normal(bits);
+                if fast {
+                    assert_eq!(u.class, FpClass::Finite, "{} {bits:#x}", f.name);
+                    assert!(u.exp >= f.emin(), "{} {bits:#x} subnormal", f.name);
+                }
+                let ef = f.exp_field_of(bits);
+                assert_eq!(fast, ef != 0 && ef != f.exp_field_max());
+            };
+            if f.width() <= 16 {
+                for bits in 0..=f.mask() {
+                    probe(bits);
+                }
+            } else {
+                let mut bits: u64 = 1;
+                for _ in 0..50_000 {
+                    probe(bits & f.mask());
+                    bits = bits.wrapping_mul(6364136223846793005).wrapping_add(1);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,405 @@
+//! Monomorphized per-format hot-path kernels.
+//!
+//! Every cycle-accurate result in the repo funnels through one chained
+//! multiply-add step (`arith::fma`).  The generic step reads the
+//! [`FpFormat`] descriptor *per element* — exponent width, mantissa width,
+//! bias, total width are all runtime loads feeding variable shifts.  This
+//! module monomorphizes that inner loop over the five concrete formats the
+//! paper considers, turning every field access into a compile-time
+//! constant, while keeping the generic datapaths as the bit-exact
+//! reference:
+//!
+//! * [`MonoKernel`]`<E, M, SKEWED>` — a zero-sized step kernel whose
+//!   fast-product path is specialized by const exponent/mantissa widths
+//!   and whose combine is the *extracted tail* of the corresponding
+//!   generic datapath ([`baseline_combine`] / [`skewed_combine`]), so
+//!   bit-identity holds by construction.  Zeros, subnormals, specials and
+//!   E4M3 top-exponent finites fall through to the shared generic slow
+//!   path ([`step_operands`]).
+//! * [`mac_slice`] — one dependent chain over operand slices with the
+//!   format dispatch hoisted out of the loop (the [`super::accum::ColumnOracle`]
+//!   and executor-oracle hot path).
+//! * [`mac_block`] — many *independent* chains advanced in lockstep over
+//!   SoA operand columns, chunked so several partial sums are live at once
+//!   (instruction-level parallelism the dependent chain cannot expose).
+//!   An "any-special" prescan (a fold of [`FpFormat::is_fast_normal`])
+//!   routes bands containing zeros/subnormals/specials to the scalar slow
+//!   path per column.
+//! * [`quantize_matrix`] / [`decode_matrix`] — whole-matrix codec
+//!   round-trips for the precision oracle, replacing per-(i,j,kk)
+//!   re-quantization inside triple loops.
+//!
+//! The parity suite (`tests/prop_kernels.rs`) pins every kernel against
+//! the generic path across all `FpFormat` × datapath combinations,
+//! including subnormals, NaN/Inf and E4M3 saturation-boundary nudges.
+
+use super::fma::{
+    baseline_combine, product_to_window, skewed_combine, step_operands, ChainCfg, ChainDatapath,
+    PsumSignal,
+};
+use super::format::FpFormat;
+use super::softfloat::ExactProduct;
+
+/// Lockstep chunk width for [`mac_block`]: enough independent chains in
+/// flight to hide the add/normalize latency, small enough that the live
+/// state stays in registers.
+pub const BLOCK_LANES: usize = 8;
+
+/// Const-generic twin of `fma::fast_normal_product`: both operands must be
+/// *normal* finite numbers (biased exponent field strictly between 0 and
+/// the all-ones field).  `E`/`M` are the exponent/mantissa widths, so the
+/// masks and shifts below are compile-time constants.
+///
+/// Returns `None` for zeros, subnormals, Inf/NaN encodings and (because
+/// E4M3 spends its top exponent field on finites) E4M3 values ≥ 256 —
+/// exactly the conservative predicate of [`FpFormat::is_fast_normal`].
+#[inline(always)]
+pub fn normal_product<const E: u32, const M: u32>(a: u64, b: u64) -> Option<ExactProduct> {
+    let em = (1u64 << E) - 1;
+    let bias = (1i32 << (E - 1)) - 1;
+    let width = 1 + E + M;
+    let ea = (a >> M) & em;
+    let eb = (b >> M) & em;
+    if ea == 0 || eb == 0 || ea == em || eb == em {
+        return None;
+    }
+    let frac_mask = (1u64 << M) - 1;
+    let fa = (1u64 << M) | (a & frac_mask);
+    let fb = (1u64 << M) | (b & frac_mask);
+    Some(ExactProduct {
+        sign: ((a ^ b) >> (width - 1)) & 1 == 1,
+        exp: ea as i32 + eb as i32 - 2 * bias,
+        sig: fa * fb,
+        frac_bits: 2 * M,
+        zero: false,
+    })
+}
+
+/// One chained multiply-add step, bit-identical to the generic datapath's
+/// `step` for the matching format — the common interface the simulators
+/// monomorphize over.
+pub trait MacKernel {
+    /// Kernel variant tag for benches/reports (`"mono"` vs `"generic"`).
+    const VARIANT: &'static str;
+
+    /// Execute one step: `psum + a×w` at the value level.
+    fn step(cfg: &ChainCfg, psum: &PsumSignal, a_bits: u64, w_bits: u64) -> PsumSignal;
+}
+
+/// Per-format monomorphized step kernel.  `E`/`M` must match
+/// `cfg.in_fmt`; `SKEWED` selects which datapath tail the product feeds
+/// ([`skewed_combine`] vs [`baseline_combine`]).
+pub struct MonoKernel<const E: u32, const M: u32, const SKEWED: bool>;
+
+impl<const E: u32, const M: u32, const SKEWED: bool> MacKernel for MonoKernel<E, M, SKEWED> {
+    const VARIANT: &'static str = "mono";
+
+    #[inline(always)]
+    fn step(cfg: &ChainCfg, psum: &PsumSignal, a_bits: u64, w_bits: u64) -> PsumSignal {
+        debug_assert_eq!((cfg.in_fmt.exp_bits, cfg.in_fmt.man_bits), (E, M));
+        let (special, pwin) = match normal_product::<E, M>(a_bits, w_bits) {
+            Some(p) => (psum.special, product_to_window(cfg, &p)),
+            // Slow path: the generic operand stage re-derives the same
+            // classification (its own fast check fails identically) and
+            // handles zeros/subnormals/specials.
+            None => match step_operands(cfg, psum, a_bits, w_bits) {
+                Ok(pair) => pair,
+                Err(out) => return out,
+            },
+        };
+        if SKEWED {
+            skewed_combine(cfg, psum, special, pwin)
+        } else {
+            baseline_combine(cfg, psum, special, pwin)
+        }
+    }
+}
+
+/// Generic fallback kernel: defers to the dynamic datapath `step`.  Used
+/// for formats outside the monomorphized set and as the scalar reference
+/// variant in benches and parity tests.
+pub struct GenericKernel<D>(core::marker::PhantomData<D>);
+
+impl<D: ChainDatapath + Default> MacKernel for GenericKernel<D> {
+    const VARIANT: &'static str = "generic";
+
+    #[inline(always)]
+    fn step(cfg: &ChainCfg, psum: &PsumSignal, a_bits: u64, w_bits: u64) -> PsumSignal {
+        D::default().step(cfg, psum, a_bits, w_bits)
+    }
+}
+
+/// Dispatch a monomorphized invocation on a format's `(exp_bits,
+/// man_bits)` pair — the single runtime `match` that replaces the
+/// per-element one.  `$go` is instantiated once per concrete format; the
+/// `_` arm is the generic fallback expression.
+macro_rules! dispatch_format {
+    ($fmt:expr, $go:ident ( $($arg:expr),* ), $generic:expr) => {
+        match ($fmt.exp_bits, $fmt.man_bits) {
+            (8, 7) => $go::<8, 7>($($arg),*),
+            (5, 10) => $go::<5, 10>($($arg),*),
+            (4, 3) => $go::<4, 3>($($arg),*),
+            (5, 2) => $go::<5, 2>($($arg),*),
+            (8, 23) => $go::<8, 23>($($arg),*),
+            _ => $generic,
+        }
+    };
+}
+
+/// Fold a whole operand slice through one dependent baseline chain with
+/// the format dispatch hoisted: `init + Σ a[k]×w[k]`, bit-identical to
+/// repeated `BaselineFmaPath::step`.
+pub fn mac_slice(cfg: &ChainCfg, init: &PsumSignal, a: &[u64], w: &[u64]) -> PsumSignal {
+    assert_eq!(a.len(), w.len(), "mac_slice operand length mismatch");
+    #[inline(never)]
+    fn go<const E: u32, const M: u32>(
+        cfg: &ChainCfg,
+        init: &PsumSignal,
+        a: &[u64],
+        w: &[u64],
+    ) -> PsumSignal {
+        let mut s = *init;
+        for (&av, &wv) in a.iter().zip(w.iter()) {
+            s = MonoKernel::<E, M, false>::step(cfg, &s, av, wv);
+        }
+        s
+    }
+    dispatch_format!(cfg.in_fmt, go(cfg, init, a, w), {
+        let mut s = *init;
+        for (&av, &wv) in a.iter().zip(w.iter()) {
+            s = GenericKernel::<super::fma::BaselineFmaPath>::step(cfg, &s, av, wv);
+        }
+        s
+    })
+}
+
+/// True iff every operand bit pattern is on the fast-product path — the
+/// per-band "any-special" mask is the negation of this fold.
+#[inline]
+pub fn all_fast_normal(fmt: FpFormat, bits: &[u64]) -> bool {
+    bits.iter().all(|&x| fmt.is_fast_normal(x))
+}
+
+/// Advance many independent baseline chains in lockstep over SoA operand
+/// columns: `out[j] += Σ_k a[k] × wcols[j][k]`.
+///
+/// All-normal bands run a chunked (groups of [`BLOCK_LANES`]) k-outer /
+/// lane-inner loop so several independent partial sums are in flight per
+/// iteration; any band containing a zero/subnormal/special/E4M3-top
+/// operand takes the scalar per-column slow path.  Chains are independent,
+/// so both orders produce identical bits.
+pub fn mac_block(cfg: &ChainCfg, a: &[u64], wcols: &[&[u64]], out: &mut [PsumSignal]) {
+    assert_eq!(wcols.len(), out.len(), "mac_block column count mismatch");
+    for w in wcols {
+        assert_eq!(w.len(), a.len(), "mac_block operand length mismatch");
+    }
+    let fmt = cfg.in_fmt;
+    let fast_band = all_fast_normal(fmt, a) && wcols.iter().all(|w| all_fast_normal(fmt, w));
+    if !fast_band {
+        // Scalar slow path: dependent chain per column (still
+        // format-hoisted; the specials thread through `step_operands`).
+        for (s, w) in out.iter_mut().zip(wcols.iter()) {
+            *s = mac_slice(cfg, s, a, w);
+        }
+        return;
+    }
+    #[inline(never)]
+    fn go<const E: u32, const M: u32>(
+        cfg: &ChainCfg,
+        a: &[u64],
+        wcols: &[&[u64]],
+        out: &mut [PsumSignal],
+    ) {
+        let mut j0 = 0;
+        for chunk in out.chunks_mut(BLOCK_LANES) {
+            let wchunk = &wcols[j0..j0 + chunk.len()];
+            for (k, &av) in a.iter().enumerate() {
+                for (s, w) in chunk.iter_mut().zip(wchunk.iter()) {
+                    *s = MonoKernel::<E, M, false>::step(cfg, s, av, w[k]);
+                }
+            }
+            j0 += chunk.len();
+        }
+    }
+    dispatch_format!(fmt, go(cfg, a, wcols, out), {
+        for (s, w) in out.iter_mut().zip(wcols.iter()) {
+            *s = mac_slice(cfg, s, a, w);
+        }
+    })
+}
+
+/// Quantize a whole matrix (flat slice) of f64 samples into `fmt` bit
+/// patterns via the codec's exact round-to-nearest-even.  Pinned
+/// bit-for-bit to `precision::error::quantize_oracle` by the parity suite
+/// — `from_f64` *is* the codec the oracle checks.
+pub fn quantize_matrix(fmt: FpFormat, xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|&x| fmt.from_f64(x)).collect()
+}
+
+/// Decode a whole matrix of `fmt` bit patterns to exact f64 values (every
+/// supported format embeds exactly in f64).
+pub fn decode_matrix(fmt: FpFormat, bits: &[u64]) -> Vec<f64> {
+    bits.iter().map(|&b| fmt.to_f64(b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::fma::{fast_normal_product, BaselineFmaPath, SkewedFmaPath};
+    use crate::arith::RoundingUnit;
+    use crate::util::rng::Rng;
+
+    fn chain_for(fmt: FpFormat) -> ChainCfg {
+        if fmt.width() == 8 {
+            ChainCfg::new(fmt, FpFormat::FP16)
+        } else {
+            ChainCfg::new(fmt, FpFormat::FP32)
+        }
+    }
+
+    fn interesting_bits(fmt: FpFormat, rng: &mut Rng) -> u64 {
+        match rng.below(8) {
+            0 => 0,                         // +0
+            1 => 1u64 << (fmt.width() - 1), // -0
+            2 => rng.bits(fmt.man_bits),    // subnormal
+            3 => fmt.inf_bits(),            // Inf (E4M3: NaN)
+            4 => fmt.nan_bits(),
+            5 => fmt.inf_bits() - 1, // largest finite (saturation boundary)
+            _ => rng.bits(fmt.width()),
+        }
+    }
+
+    #[test]
+    fn normal_product_matches_dynamic_fast_path() {
+        fn probe<const E: u32, const M: u32>(fmt: FpFormat, rng: &mut Rng) {
+            for _ in 0..4000 {
+                let a = rng.bits(fmt.width());
+                let b = rng.bits(fmt.width());
+                assert_eq!(
+                    normal_product::<E, M>(a, b),
+                    fast_normal_product(fmt, a, b),
+                    "{} a={a:#x} b={b:#x}",
+                    fmt.name
+                );
+            }
+        }
+        let mut rng = Rng::new(0x6b65726e);
+        probe::<8, 7>(FpFormat::BF16, &mut rng);
+        probe::<5, 10>(FpFormat::FP16, &mut rng);
+        probe::<4, 3>(FpFormat::FP8E4M3, &mut rng);
+        probe::<5, 2>(FpFormat::FP8E5M2, &mut rng);
+        probe::<8, 23>(FpFormat::FP32, &mut rng);
+    }
+
+    #[test]
+    fn mono_step_is_bit_identical_to_generic_both_datapaths() {
+        fn probe<const E: u32, const M: u32>(fmt: FpFormat, rng: &mut Rng) {
+            let cfg = chain_for(fmt);
+            let mut base = PsumSignal::zero(&cfg);
+            let mut mono_b = base;
+            let mut skew = PsumSignal::zero(&cfg);
+            let mut mono_s = skew;
+            for step in 0..600 {
+                let a = interesting_bits(fmt, rng);
+                let w = interesting_bits(fmt, rng);
+                base = BaselineFmaPath.step(&cfg, &base, a, w);
+                mono_b = MonoKernel::<E, M, false>::step(&cfg, &mono_b, a, w);
+                assert_eq!(mono_b, base, "{} baseline step {step}", fmt.name);
+                skew = SkewedFmaPath.step(&cfg, &skew, a, w);
+                mono_s = MonoKernel::<E, M, true>::step(&cfg, &mono_s, a, w);
+                assert_eq!(mono_s, skew, "{} skewed step {step}", fmt.name);
+            }
+            let ru = RoundingUnit::new(cfg);
+            assert_eq!(ru.round(&mono_b), ru.round(&base));
+            assert_eq!(ru.round(&mono_s), ru.round(&skew));
+        }
+        let mut rng = Rng::new(0x706172);
+        probe::<8, 7>(FpFormat::BF16, &mut rng);
+        probe::<5, 10>(FpFormat::FP16, &mut rng);
+        probe::<4, 3>(FpFormat::FP8E4M3, &mut rng);
+        probe::<5, 2>(FpFormat::FP8E5M2, &mut rng);
+        probe::<8, 23>(FpFormat::FP32, &mut rng);
+    }
+
+    #[test]
+    fn mac_slice_equals_stepwise_fold() {
+        let mut rng = Rng::new(0x51);
+        for fmt in FpFormat::ALL {
+            let cfg = chain_for(fmt);
+            for _ in 0..50 {
+                let n = rng.below(40) as usize;
+                let a: Vec<u64> = (0..n).map(|_| interesting_bits(fmt, &mut rng)).collect();
+                let w: Vec<u64> = (0..n).map(|_| interesting_bits(fmt, &mut rng)).collect();
+                let mut want = PsumSignal::zero(&cfg);
+                for (&av, &wv) in a.iter().zip(w.iter()) {
+                    want = BaselineFmaPath.step(&cfg, &want, av, wv);
+                }
+                let got = mac_slice(&cfg, &PsumSignal::zero(&cfg), &a, &w);
+                assert_eq!(got, want, "{} n={n}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mac_block_equals_per_column_chains() {
+        let mut rng = Rng::new(0x7733);
+        for fmt in FpFormat::ALL {
+            let cfg = chain_for(fmt);
+            for case in 0..30 {
+                let k = 1 + rng.below(24) as usize;
+                let cols = 1 + rng.below(19) as usize; // crosses BLOCK_LANES
+                // Half the cases all-normal (fast band), half salted with
+                // specials (slow band).
+                let salted = case % 2 == 1;
+                let sample = |rng: &mut Rng| {
+                    if salted {
+                        interesting_bits(fmt, rng)
+                    } else {
+                        let mut b = rng.bits(fmt.width());
+                        while !fmt.is_fast_normal(b) {
+                            b = rng.bits(fmt.width());
+                        }
+                        b
+                    }
+                };
+                let a: Vec<u64> = (0..k).map(|_| sample(&mut rng)).collect();
+                let wdata: Vec<Vec<u64>> =
+                    (0..cols).map(|_| (0..k).map(|_| sample(&mut rng)).collect()).collect();
+                let wcols: Vec<&[u64]> = wdata.iter().map(|w| w.as_slice()).collect();
+                let mut got = vec![PsumSignal::zero(&cfg); cols];
+                mac_block(&cfg, &a, &wcols, &mut got);
+                for (j, w) in wdata.iter().enumerate() {
+                    let mut want = PsumSignal::zero(&cfg);
+                    for (&av, &wv) in a.iter().zip(w.iter()) {
+                        want = BaselineFmaPath.step(&cfg, &want, av, wv);
+                    }
+                    assert_eq!(got[j], want, "{} col {j} salted={salted}", fmt.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_decode_round_trip_is_the_codec() {
+        let mut rng = Rng::new(0xdead);
+        for fmt in FpFormat::ALL {
+            let xs: Vec<f64> = (0..500)
+                .map(|i| match i % 5 {
+                    0 => rng.normal_scaled(0.0, 1.0),
+                    1 => rng.normal_scaled(0.0, 1e-6),
+                    2 => rng.normal_scaled(0.0, 1e6),
+                    3 => 0.0,
+                    _ => rng.normal_scaled(0.0, 448.0),
+                })
+                .collect();
+            let q = quantize_matrix(fmt, &xs);
+            for (x, &b) in xs.iter().zip(q.iter()) {
+                assert_eq!(b, fmt.from_f64(*x));
+            }
+            let d = decode_matrix(fmt, &q);
+            for (&b, &v) in q.iter().zip(d.iter()) {
+                assert_eq!(v, fmt.to_f64(b));
+            }
+        }
+    }
+}

@@ -19,10 +19,15 @@
 //! * [`accum`] — the double-width column accumulator semantics (one
 //!   rounding per column, at the South edge) and the wide functional
 //!   reference accumulator.
+//! * [`kernel`] — monomorphized per-format hot-path kernels (const-generic
+//!   over exponent/mantissa widths) plus batched slice/block MAC entry
+//!   points; bit-identical to the generic datapaths by construction and
+//!   pinned so by the parity suite.
 
 pub mod accum;
 pub mod fma;
 pub mod format;
+pub mod kernel;
 pub mod lza;
 pub mod softfloat;
 

@@ -45,6 +45,12 @@ pub struct RunConfig {
     pub double_buffer: bool,
     /// Worker threads in the coordinator pool.
     pub workers: usize,
+    /// Simulation threads for the cycle-accurate streaming path:
+    /// independent K-pass/output tiles fan out across this many OS
+    /// threads (`StreamingSim::run_tile_parallel`), falling back to
+    /// column-strip parallelism inside single-tile plans.  Defaults to
+    /// the host's available parallelism, capped at 16.
+    pub threads: usize,
     /// Numeric evaluation mode.
     pub mode: NumericMode,
     /// Default pipeline organisation (subcommands without an explicit
@@ -70,6 +76,7 @@ impl RunConfig {
             out_fmt: FpFormat::FP32,
             double_buffer: true,
             workers: std::thread::available_parallelism().map_or(4, |n| n.get().min(16)),
+            threads: std::thread::available_parallelism().map_or(4, |n| n.get().min(16)),
             mode: NumericMode::Oracle,
             pipeline: PipelineKind::Skewed,
             queue_depth: 64,
@@ -133,6 +140,9 @@ impl RunConfig {
         if let Some(v) = get_usize("workers") {
             self.workers = v.max(1);
         }
+        if let Some(v) = get_usize("threads") {
+            self.threads = v.max(1);
+        }
         if let Some(v) = get_usize("queue_depth") {
             self.queue_depth = v.max(1);
         }
@@ -177,6 +187,9 @@ impl RunConfig {
         }
         if let Some(v) = a.get_usize("workers") {
             self.workers = v.max(1);
+        }
+        if let Some(v) = a.get_usize("threads") {
+            self.threads = v.max(1);
         }
         if let Some(v) = a.get_f64("verify") {
             self.verify_fraction = v.clamp(0.0, 1.0);
@@ -664,7 +677,7 @@ mod tests {
         let mut c = RunConfig::paper();
         let j = Json::parse(
             r#"{"rows": 16, "cols": 8, "in_fmt": "fp8e4m3", "out_fmt": "fp16",
-                "mode": "cycle", "workers": 3, "verify_fraction": 0.5,
+                "mode": "cycle", "workers": 3, "threads": 5, "verify_fraction": 0.5,
                 "pipeline": "deep3"}"#,
         )
         .unwrap();
@@ -673,6 +686,7 @@ mod tests {
         assert_eq!(c.in_fmt, FpFormat::FP8E4M3);
         assert_eq!(c.mode, NumericMode::CycleAccurate);
         assert_eq!(c.workers, 3);
+        assert_eq!(c.threads, 5);
         assert_eq!(c.verify_fraction, 0.5);
         assert_eq!(c.pipeline, PipelineKind::Deep3);
     }
@@ -784,15 +798,22 @@ mod tests {
             .opt("cols", "", None)
             .opt("seed", "", None)
             .opt("workers", "", None)
+            .opt("threads", "", None)
             .opt("verify", "", None)
             .opt("mode", "", None);
         let a = cli
-            .parse(&["--rows=4".into(), "--seed=9".into(), "--mode=cycle".into()])
+            .parse(&[
+                "--rows=4".into(),
+                "--seed=9".into(),
+                "--threads=3".into(),
+                "--mode=cycle".into(),
+            ])
             .unwrap();
         let mut c = RunConfig::paper();
         c.apply_args(&a);
         assert_eq!(c.rows, 4);
         assert_eq!(c.seed, 9);
+        assert_eq!(c.threads, 3);
         assert_eq!(c.mode, NumericMode::CycleAccurate);
     }
 

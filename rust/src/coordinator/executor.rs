@@ -96,6 +96,9 @@ enum ResultMsg {
 /// number of GEMMs via [`WorkerPool::run_gemm`]; workers join on drop.
 pub struct WorkerPool {
     workers: usize,
+    /// Simulation threads for the cycle-accurate streaming path
+    /// (tile-level parallelism); defaults to the worker count.
+    sim_threads: usize,
     queue_depth: usize,
     job_txs: Vec<SyncSender<WorkMsg>>,
     res_rx: Receiver<ResultMsg>,
@@ -196,11 +199,27 @@ impl WorkerPool {
             }));
         }
         let router = Router::new(policy, workers);
-        WorkerPool { workers, queue_depth, job_txs, res_rx, handles, router, fault, runs: 0 }
+        WorkerPool {
+            workers,
+            sim_threads: workers,
+            queue_depth,
+            job_txs,
+            res_rx,
+            handles,
+            router,
+            fault,
+            runs: 0,
+        }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Override the thread count the cycle-accurate streaming path fans
+    /// tile jobs across (`--threads`); independent of the worker queues.
+    pub fn set_sim_threads(&mut self, threads: usize) {
+        self.sim_threads = threads.max(1);
     }
 
     /// GEMMs run through this pool so far.
@@ -425,11 +444,13 @@ impl WorkerPool {
     }
 
     /// The cycle-accurate path: stream the whole plan through the
-    /// multi-tile simulator (column lanes fanned across this pool's
-    /// worker *count* as scoped threads — tile jobs cannot be split
-    /// across workers when the array is one physically continuous
-    /// machine), then cross-check the composition against the
-    /// closed-form layer timing before trusting either number.
+    /// multi-tile simulator — independent K-pass/output tiles fanned
+    /// across `sim_threads` scoped threads, each tile's lanes ticked by
+    /// the banded kernel driver ([`StreamingSim::run_tile_parallel`];
+    /// tile jobs cannot be split across the pool's worker queues when
+    /// the array is one physically continuous machine) — then
+    /// cross-check the composition against the closed-form layer
+    /// timing before trusting either number.
     fn run_gemm_streaming(
         &mut self,
         chain: ChainCfg,
@@ -452,7 +473,7 @@ impl WorkerPool {
         sim.set_faults(faults);
         let budget = plan.stream_cycles(kind, double_buffer) + 64;
         let report = sim
-            .run_parallel(budget, self.workers)
+            .run_tile_parallel(budget, self.sim_threads)
             .map_err(|e| format!("streaming cycle sim: {e}"))?;
         // An `Err`, not a panic: this runs on detached shard threads in
         // the serving path (see the run_gemm contract above).
@@ -648,7 +669,8 @@ fn eval_tile_with_fault(
     match mode {
         NumericMode::Oracle => {
             use crate::arith::accum::RoundingUnit;
-            use crate::arith::fma::{BaselineFmaPath, ChainDatapath, PsumSignal};
+            use crate::arith::fma::PsumSignal;
+            use crate::arith::kernel;
             let ru = RoundingUnit::new(*chain);
             // Transpose the weight slab once: the inner reduction then
             // walks two contiguous slices instead of chasing one Vec per
@@ -661,16 +683,18 @@ fn eval_tile_with_fault(
                 let w = &mut wcols[idx / t.k_len][idx % t.k_len];
                 *w = flip_exp_msb(*w, chain.in_fmt);
             }
+            // Monomorphized batched kernel: all n_len independent column
+            // chains advance in lockstep per A-row (§Perf iteration 3,
+            // bit-identical to the per-column `BaselineFmaPath` fold —
+            // pinned by `tests/prop_kernels.rs`).
+            let wrefs: Vec<&[u64]> = wcols.iter().map(|w| w.as_slice()).collect();
             let mut out = Vec::with_capacity(m_total * t.n_len);
+            let mut sums = vec![PsumSignal::zero(chain); t.n_len];
             for m in 0..m_total {
                 let arow = &data.a[m][t.k0..t.k0 + t.k_len];
-                for wcol in &wcols {
-                    let mut s = PsumSignal::zero(chain);
-                    for (&a, &w) in arow.iter().zip(wcol.iter()) {
-                        s = BaselineFmaPath.step(chain, &s, a, w);
-                    }
-                    out.push(f32::from_bits(ru.round(&s) as u32));
-                }
+                sums.fill(PsumSignal::zero(chain));
+                kernel::mac_block(chain, arow, &wrefs, &mut sums);
+                out.extend(sums.iter().map(|s| f32::from_bits(ru.round(s) as u32)));
             }
             // In the value-level path the psum drain and the assembled
             // output word are one storage site, so both targets land on
@@ -739,6 +763,7 @@ impl Executor {
             self.policy,
             self.fault.clone(),
         );
+        pool.set_sim_threads(self.cfg.threads);
         pool.run_gemm(
             self.cfg.chain(),
             self.cfg.mode,

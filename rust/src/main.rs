@@ -19,6 +19,7 @@
 //! skewsa stream      # multi-tile layer latency: serialized vs overlapped
 //! skewsa viz         # pipeline interleaving trace (Figs. 4/6)
 //! skewsa trace FILE  # summarize a --trace-out span file (p50/p99 path)
+//! skewsa bench-check # validate BENCH_*.json schema, flag perf drops
 //! ```
 //!
 //! `--pipeline` selects any registered organisation everywhere it
@@ -47,6 +48,7 @@ fn cli() -> Cli {
     .opt("cols", "array columns (default: config / 128)", None)
     .opt("seed", "workload RNG seed", None)
     .opt("workers", "coordinator worker threads", None)
+    .opt("threads", "tile-parallel simulation threads (default: host parallelism)", None)
     .opt("verify", "oracle verification fraction (0..1)", None)
     .opt("mode", "numeric mode: oracle|cycle", None)
     .opt("config", "JSON config file", None)
@@ -164,6 +166,10 @@ fn main() {
             trace_cmd(&args);
             return;
         }
+        "bench-check" => {
+            bench_check(&args);
+            return;
+        }
         other => {
             eprintln!("unknown subcommand '{other}'\n\n{}", cli().usage());
             std::process::exit(2);
@@ -227,8 +233,8 @@ fn run_gemm(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     );
     let kind = single_kind(cfg, args, "run");
     println!(
-        "coordinating GEMM {}x{}x{} on {}x{} ({}), workers={} mode={:?}",
-        shape.m, shape.k, shape.n, cfg.rows, cfg.cols, kind, cfg.workers, cfg.mode
+        "coordinating GEMM {}x{}x{} on {}x{} ({}), workers={} threads={} mode={:?}",
+        shape.m, shape.k, shape.n, cfg.rows, cfg.cols, kind, cfg.workers, cfg.threads, cfg.mode
     );
     let data = Arc::new(GemmData::cnn_like(shape, cfg.in_fmt, cfg.seed));
     let coord = Coordinator::new(cfg.clone());
@@ -530,6 +536,46 @@ fn faults(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         (0..shards).map(|i| snap.counter(&format!("shard.{i}.sdc_unresolved"))).sum();
     if unresolved > 0 {
         eprintln!("CHAOS RUN FAILED: {unresolved} corrupted block(s) left unresolved");
+        std::process::exit(1);
+    }
+}
+
+/// Validate the `BENCH_*.json` perf-trajectory files: the schema (a
+/// JSON array of flat records with finite numbers) is a hard gate
+/// (exit 1), while a >20% drop in any `hot:` tier between the two most
+/// recent comparable records prints a non-fatal `::warning::` line —
+/// the GitHub Actions annotation format, so CI surfaces the regression
+/// without going red on host noise.
+fn bench_check(args: &skewsa::util::cli::Args) {
+    use skewsa::util::bench::check_trajectory;
+    let defaults = ["BENCH_hotpath.json", "BENCH_serve.json", "BENCH_precision.json"];
+    let explicit = args.positional.len() > 1;
+    let files: Vec<String> = if explicit {
+        args.positional[1..].to_vec()
+    } else {
+        defaults.iter().map(|s| s.to_string()).collect()
+    };
+    let mut failed = false;
+    for f in &files {
+        let path = std::path::Path::new(f);
+        if !explicit && !path.exists() {
+            println!("bench-check: {f}: absent, skipped (run the bench to seed it)");
+            continue;
+        }
+        let c = check_trajectory(path);
+        for w in &c.warnings {
+            println!("::warning::{w}");
+        }
+        if c.errors.is_empty() {
+            println!("bench-check: {f}: {} record(s), schema ok", c.entries);
+        } else {
+            failed = true;
+            for e in &c.errors {
+                eprintln!("bench-check: {f}: {e}");
+            }
+        }
+    }
+    if failed {
         std::process::exit(1);
     }
 }

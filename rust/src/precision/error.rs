@@ -34,10 +34,22 @@
 //! the full reduction depth `K` — depth is what drives accumulation
 //! error, so `K` is never capped; the spatial dimensions are, because
 //! error statistics converge after a few dozen sampled outputs.
+//!
+//! The default [`analyze_layer`] runs that sweep through the vectorized
+//! hot path: whole-matrix quantization, a one-time transpose of the
+//! weights into column slabs (hoisting the strided `qw[kk][j]` gather
+//! the element-wise form recomputes for every sampled row), and the
+//! batched monomorphized MAC kernel ([`crate::arith::kernel::mac_block`])
+//! driving all sampled columns in lockstep.  [`analyze_layer_reference`]
+//! keeps the original element-at-a-time [`ColumnOracle`] form; the two
+//! are pinned bit-identical — same [`ErrorStats`], field for field — by
+//! the unit and property suites, so the speedup cannot silently
+//! re-calibrate the planner.
 
-use crate::arith::accum::ColumnOracle;
-use crate::arith::fma::ChainCfg;
+use crate::arith::accum::{ColumnOracle, RoundingUnit};
+use crate::arith::fma::{ChainCfg, PsumSignal};
 use crate::arith::format::{FpClass, FpFormat};
+use crate::arith::kernel;
 use crate::arith::softfloat::BigFixed;
 use crate::util::rng::Rng;
 use crate::workloads::layer::LayerDef;
@@ -130,7 +142,7 @@ pub fn max_finite_f64(fmt: FpFormat) -> f64 {
 }
 
 /// Per-layer, per-format error statistics against the f64 oracle.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ErrorStats {
     /// Outputs sampled (finite-reference outputs enter the error means).
     pub samples: usize,
@@ -218,28 +230,9 @@ fn master_data(layer: &LayerDef, cfg: &AnalysisConfig) -> MasterData {
     MasterData { a, w }
 }
 
-/// Analyze one layer under one candidate input format: quantize the
-/// master data, run the bit-exact datapath semantics, compare to the
-/// f64 oracle.  Deterministic in `(layer.name, cfg.seed)`.
-pub fn analyze_layer(layer: &LayerDef, fmt: FpFormat, cfg: &AnalysisConfig) -> FormatAnalysis {
-    let chain = chain_for(fmt);
-    let master = master_data(layer, cfg);
-    let (m, k, n) = (master.a.len(), master.w.len(), master.w[0].len());
-
-    let mut sat_events = 0usize;
-    let mut quantize = |x: f64| {
-        let q = quantize_oracle(fmt, x);
-        if x.is_finite() && fmt.decode(q).class == FpClass::Nan {
-            sat_events += 1;
-        }
-        q
-    };
-    let qa: Vec<Vec<u64>> =
-        master.a.iter().map(|row| row.iter().map(|&x| quantize(x)).collect()).collect();
-    let qw: Vec<Vec<u64>> =
-        master.w.iter().map(|row| row.iter().map(|&x| quantize(x)).collect()).collect();
-
-    // f64 oracle outputs + the peak magnitude (the error denominator).
+/// f64 oracle outputs + the peak magnitude (the error denominator).
+fn reference_outputs(master: &MasterData) -> (Vec<Vec<f64>>, f64) {
+    let (m, n) = (master.a.len(), master.w[0].len());
     let mut reference = vec![vec![0.0f64; n]; m];
     for (i, a_row) in master.a.iter().enumerate() {
         for (kk, w_row) in master.w.iter().enumerate() {
@@ -257,7 +250,127 @@ pub fn analyze_layer(layer: &LayerDef, fmt: FpFormat, cfg: &AnalysisConfig) -> F
         .flat_map(|row| row.iter())
         .fold(0.0f64, |acc, &v| acc.max(v.abs()))
         .max(f64::MIN_POSITIVE);
+    (reference, ref_scale)
+}
 
+/// Fold one sampled datapath output into the running statistics.  One
+/// body shared by the vectorized and reference analyses so the two
+/// cannot drift in which branch a sample takes.
+fn fold_sample(
+    stats: &mut ErrorStats,
+    err_sum: &mut f64,
+    chain: &ChainCfg,
+    out_bits: u64,
+    want: f64,
+) {
+    let got = chain.out_fmt.to_f64(out_bits);
+    stats.samples += 1;
+    if got.is_nan() {
+        stats.nan += 1;
+        return;
+    }
+    if got.is_infinite() && want.is_finite() {
+        stats.overflow += 1;
+        return;
+    }
+    let rel = (got - want).abs() / stats.ref_scale;
+    stats.max_rel = stats.max_rel.max(rel);
+    *err_sum += rel;
+    let want_bits = chain.out_fmt.from_f64(want);
+    stats.max_ulp = stats.max_ulp.max(ulp_distance(chain.out_fmt, out_bits, want_bits));
+}
+
+fn finish_stats(mut stats: ErrorStats, err_sum: f64, sat_events: usize) -> ErrorStats {
+    let measured = stats.samples - stats.nan - stats.overflow;
+    if measured > 0 {
+        stats.mean_rel = err_sum / measured as f64;
+    }
+    stats.sat_events = sat_events;
+    stats
+}
+
+/// Analyze one layer under one candidate input format: quantize the
+/// master data, run the bit-exact datapath semantics, compare to the
+/// f64 oracle.  Deterministic in `(layer.name, cfg.seed)`.
+///
+/// This is the vectorized hot path (see the module docs); it is pinned
+/// bit-identical to [`analyze_layer_reference`].
+pub fn analyze_layer(layer: &LayerDef, fmt: FpFormat, cfg: &AnalysisConfig) -> FormatAnalysis {
+    let chain = chain_for(fmt);
+    let master = master_data(layer, cfg);
+    let (m, k, n) = (master.a.len(), master.w.len(), master.w[0].len());
+
+    // Whole-matrix quantization through the oracle codec path, flat and
+    // row-major.  The saturation tally is a count, so the pass order
+    // cannot change it relative to the reference's per-element closure.
+    let mut sat_events = 0usize;
+    let mut quantize_rows = |rows: &[Vec<f64>]| -> Vec<u64> {
+        rows.iter()
+            .flat_map(|row| row.iter())
+            .map(|&x| {
+                let q = quantize_oracle(fmt, x);
+                if x.is_finite() && fmt.decode(q).class == FpClass::Nan {
+                    sat_events += 1;
+                }
+                q
+            })
+            .collect()
+    };
+    let qa = quantize_rows(&master.a);
+    let qw = quantize_rows(&master.w);
+
+    // Hoist the strided `qw[kk][j]` gather: one transpose into column
+    // slabs, reused by every sampled output row.
+    let mut wcols = vec![vec![0u64; k]; n];
+    for (j, col) in wcols.iter_mut().enumerate() {
+        for (kk, slot) in col.iter_mut().enumerate() {
+            *slot = qw[kk * n + j];
+        }
+    }
+    let wrefs: Vec<&[u64]> = wcols.iter().map(Vec::as_slice).collect();
+
+    let (reference, ref_scale) = reference_outputs(&master);
+    let mut stats = ErrorStats { ref_scale, ..ErrorStats::default() };
+    let mut err_sum = 0.0f64;
+    let ru = RoundingUnit::new(chain);
+    let mut sums = vec![PsumSignal::zero(&chain); n];
+    for (i, row) in reference.iter().enumerate() {
+        sums.fill(PsumSignal::zero(&chain));
+        kernel::mac_block(&chain, &qa[i * k..(i + 1) * k], &wrefs, &mut sums);
+        for (sum, &want) in sums.iter().zip(row.iter()) {
+            fold_sample(&mut stats, &mut err_sum, &chain, ru.round(sum), want);
+        }
+    }
+    FormatAnalysis { fmt, chain, stats: finish_stats(stats, err_sum, sat_events) }
+}
+
+/// The element-at-a-time reference analysis: per-element quantization
+/// closure, per-output [`ColumnOracle`] MAC loop with the strided
+/// weight gather in the inner loop.  Kept verbatim as the semantic
+/// anchor the vectorized [`analyze_layer`] is pinned against.
+pub fn analyze_layer_reference(
+    layer: &LayerDef,
+    fmt: FpFormat,
+    cfg: &AnalysisConfig,
+) -> FormatAnalysis {
+    let chain = chain_for(fmt);
+    let master = master_data(layer, cfg);
+    let (m, k, n) = (master.a.len(), master.w.len(), master.w[0].len());
+
+    let mut sat_events = 0usize;
+    let mut quantize = |x: f64| {
+        let q = quantize_oracle(fmt, x);
+        if x.is_finite() && fmt.decode(q).class == FpClass::Nan {
+            sat_events += 1;
+        }
+        q
+    };
+    let qa: Vec<Vec<u64>> =
+        master.a.iter().map(|row| row.iter().map(|&x| quantize(x)).collect()).collect();
+    let qw: Vec<Vec<u64>> =
+        master.w.iter().map(|row| row.iter().map(|&x| quantize(x)).collect()).collect();
+
+    let (reference, ref_scale) = reference_outputs(&master);
     let mut stats = ErrorStats { ref_scale, ..ErrorStats::default() };
     let mut err_sum = 0.0f64;
     let mut oracle = ColumnOracle::new(chain);
@@ -267,31 +380,10 @@ pub fn analyze_layer(layer: &LayerDef, fmt: FpFormat, cfg: &AnalysisConfig) -> F
             for kk in 0..k {
                 oracle.mac(qa[i][kk], qw[kk][j]);
             }
-            let out_bits = oracle.result();
-            let got = chain.out_fmt.to_f64(out_bits);
-            let want = reference[i][j];
-            stats.samples += 1;
-            if got.is_nan() {
-                stats.nan += 1;
-                continue;
-            }
-            if got.is_infinite() && want.is_finite() {
-                stats.overflow += 1;
-                continue;
-            }
-            let rel = (got - want).abs() / ref_scale;
-            stats.max_rel = stats.max_rel.max(rel);
-            err_sum += rel;
-            let want_bits = chain.out_fmt.from_f64(want);
-            stats.max_ulp = stats.max_ulp.max(ulp_distance(chain.out_fmt, out_bits, want_bits));
+            fold_sample(&mut stats, &mut err_sum, &chain, oracle.result(), reference[i][j]);
         }
     }
-    let measured = stats.samples - stats.nan - stats.overflow;
-    if measured > 0 {
-        stats.mean_rel = err_sum / measured as f64;
-    }
-    stats.sat_events = sat_events;
-    FormatAnalysis { fmt, chain, stats }
+    FormatAnalysis { fmt, chain, stats: finish_stats(stats, err_sum, sat_events) }
 }
 
 #[cfg(test)]
@@ -364,6 +456,22 @@ mod tests {
         assert!(a1.stats.max_rel < fp8.stats.worst());
         assert!(fp32.stats.max_rel > 0.0, "fp32 still quantizes inputs");
         assert_eq!(a1.stats.samples, 16);
+    }
+
+    #[test]
+    fn vectorized_analysis_matches_reference() {
+        // The batched kernel path and the element-at-a-time oracle path
+        // must agree on every statistic, field for field — this is the
+        // pin that lets the planner trust the fast form.
+        let layers = [LayerDef::conv("v", 8, 3, 1, 16, 8), LayerDef::fc("f", 40, 12)];
+        let cfg = AnalysisConfig { m_cap: 5, n_cap: 7, seed: 3 };
+        for layer in &layers {
+            for f in FpFormat::ALL {
+                let v = analyze_layer(layer, f, &cfg);
+                let r = analyze_layer_reference(layer, f, &cfg);
+                assert_eq!(v.stats, r.stats, "{} {}", layer.name, f.name);
+            }
+        }
     }
 
     #[test]

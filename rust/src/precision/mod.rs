@@ -29,8 +29,8 @@ pub mod error;
 pub mod plan;
 
 pub use error::{
-    analyze_layer, chain_for, quantize_oracle, ulp_distance, AnalysisConfig, ErrorStats,
-    FormatAnalysis,
+    analyze_layer, analyze_layer_reference, chain_for, quantize_oracle, ulp_distance,
+    AnalysisConfig, ErrorStats, FormatAnalysis,
 };
 pub use plan::{
     layer_format_energy, plan_layers, uniform_plan, LayerPlan, PlannerConfig, PrecisionPlan,

@@ -39,6 +39,17 @@
 //!   any depth), and [`FastArraySim::run_parallel`] fans independent
 //!   column strips out across scoped threads.
 //!
+//! * **Monomorphized, batched lane ticks.**  The datapath step is
+//!   instantiated per input format via [`crate::arith::kernel`] (const
+//!   exponent/mantissa widths — no per-element format reads or variable
+//!   shifts), and lanes advance in lockstep bands of
+//!   [`BLOCK_LANES`] sharing one cycle counter, which keeps several
+//!   independent psum chains in flight per tick.  Zeros, subnormals and
+//!   specials fall off the fast product check into the shared out-of-line
+//!   cold path, so special-laden streams stay bit-exact; the scalar
+//!   generic path survives as [`FastArraySim::run_reference`], the
+//!   parity/bench baseline.
+//!
 //! The per-column rounding queue is a fixed four-slot ring (the South
 //! edge holds at most `column_tail + 1 ≤ 3` in-flight entries), and
 //! the [`RoundingUnit`] is constructed once per simulator rather than
@@ -70,7 +81,8 @@
 //! ```
 
 use crate::arith::accum::{ColumnOracle, RoundingUnit};
-use crate::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
+use crate::arith::fma::{BaselineFmaPath, ChainCfg, PsumSignal, SkewedFmaPath};
+use crate::arith::kernel::{GenericKernel, MacKernel, MonoKernel, BLOCK_LANES};
 use crate::coordinator::fault::{flip_exp_msb, SdcTarget, TileFault};
 use crate::pe::cycle::PeActivity;
 use crate::pe::spec::DatapathId;
@@ -288,7 +300,9 @@ impl FastArraySim {
         &self.sched
     }
 
-    /// Run every column lane to completion on the calling thread.
+    /// Run every column lane to completion on the calling thread: lanes
+    /// advance in lockstep bands of [`BLOCK_LANES`] through the
+    /// monomorphized per-format kernels (see [`run_band_dispatch`]).
     pub fn run(&mut self, max_cycles: u64) -> Result<(), SimError> {
         let spec = self.spec;
         let ctx = LaneCtx {
@@ -298,8 +312,33 @@ impl FastArraySim {
             a: &self.a,
             max_cycles,
         };
+        run_band_dispatch(&spec, ctx, &mut self.lanes)
+    }
+
+    /// Scalar reference run: each lane serially, through the generic
+    /// dynamic-dispatch datapath with its per-element format reads.  Kept
+    /// as the parity baseline for [`FastArraySim::run`] and as the
+    /// "scalar" variant in `bench_hotpath` so the monomorphized band
+    /// driver's speedup stays auditable.
+    pub fn run_reference(&mut self, max_cycles: u64) -> Result<(), SimError> {
+        let spec = self.spec;
+        let ctx = LaneCtx {
+            cfg: self.cfg,
+            ru: self.ru,
+            sched: self.sched,
+            a: &self.a,
+            max_cycles,
+        };
         for lane in &mut self.lanes {
-            run_lane_dispatch(&spec, ctx, lane)?;
+            let strip = std::slice::from_mut(lane);
+            match spec.datapath {
+                DatapathId::Skewed => {
+                    run_band::<GenericKernel<SkewedFmaPath>>(&spec, ctx, strip)?
+                }
+                DatapathId::Baseline => {
+                    run_band::<GenericKernel<BaselineFmaPath>>(&spec, ctx, strip)?
+                }
+            }
         }
         Ok(())
     }
@@ -326,12 +365,7 @@ impl FastArraySim {
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(threads);
             for strip in self.lanes.chunks_mut(chunk) {
-                handles.push(scope.spawn(move || {
-                    for lane in strip.iter_mut() {
-                        run_lane_dispatch(&spec, ctx, lane)?;
-                    }
-                    Ok(())
-                }));
+                handles.push(scope.spawn(move || run_band_dispatch(&spec, ctx, strip)));
             }
             for h in handles {
                 results.push(h.join().expect("column-lane thread panicked"));
@@ -461,218 +495,309 @@ impl FastArraySim {
     }
 }
 
-/// Monomorphize the lane run over the registered datapaths
-/// (devirtualizes the per-step dispatch out of the hot loop).
-pub(crate) fn run_lane_dispatch(
+/// Monomorphize a band run over datapath × input format: the per-step
+/// datapath dispatch *and* the per-element format `match` both leave the
+/// hot loop.  The five concrete formats get const-generic kernels
+/// ([`MonoKernel`]); anything else falls back to the dynamic datapath
+/// ([`GenericKernel`]), which is also the scalar reference path
+/// ([`FastArraySim::run_reference`]) — the two are bit-identical by
+/// construction and pinned so by `tests/prop_kernels.rs`.
+pub(crate) fn run_band_dispatch(
     spec: &PipelineSpec,
     ctx: LaneCtx<'_>,
-    lane: &mut ColLane,
+    lanes: &mut [ColLane],
 ) -> Result<(), SimError> {
+    fn mono<const SKEWED: bool>(
+        spec: &PipelineSpec,
+        ctx: LaneCtx<'_>,
+        lanes: &mut [ColLane],
+    ) -> Result<(), SimError> {
+        match (ctx.cfg.in_fmt.exp_bits, ctx.cfg.in_fmt.man_bits) {
+            (8, 7) => run_band::<MonoKernel<8, 7, SKEWED>>(spec, ctx, lanes),
+            (5, 10) => run_band::<MonoKernel<5, 10, SKEWED>>(spec, ctx, lanes),
+            (4, 3) => run_band::<MonoKernel<4, 3, SKEWED>>(spec, ctx, lanes),
+            (5, 2) => run_band::<MonoKernel<5, 2, SKEWED>>(spec, ctx, lanes),
+            (8, 23) => run_band::<MonoKernel<8, 23, SKEWED>>(spec, ctx, lanes),
+            _ if SKEWED => run_band::<GenericKernel<SkewedFmaPath>>(spec, ctx, lanes),
+            _ => run_band::<GenericKernel<BaselineFmaPath>>(spec, ctx, lanes),
+        }
+    }
     match spec.datapath {
-        DatapathId::Skewed => run_lane(&SkewedFmaPath, spec, ctx, lane),
-        DatapathId::Baseline => run_lane(&BaselineFmaPath, spec, ctx, lane),
+        DatapathId::Skewed => mono::<true>(spec, ctx, lanes),
+        DatapathId::Baseline => mono::<false>(spec, ctx, lanes),
     }
 }
 
-/// Simulate one column lane start-to-finish.
-///
-/// Per tick: South-edge rounding first (it reads the pre-tick last-row
-/// output register), then the active row band in **descending** row
-/// order — so every cross-row read (upstream pipe/out registers) sees
-/// pre-tick state and every commit happens after all downstream
-/// consumers marked the register taken, reproducing the dense loop's
-/// evaluate-then-commit discipline without scratch buffers.  Within a
-/// row the order is: psum acquisition at the spec's psum stage →
-/// exit-stage commit → pipe shift → stage-1 acceptance.
-fn run_lane<D: ChainDatapath>(
-    d: &D,
+/// Spec-derived per-tick constants, hoisted out of the tick loop.
+#[derive(Clone, Copy)]
+struct LaneParams {
+    spacing: u64,
+    depth: usize,
+    stride: usize,
+    psum_stage: usize,
+    capture: bool,
+    tail: u64,
+    cols: usize,
+    /// Band slack beyond the last stage-1 accept: the element's last
+    /// register touch is its out-commit at accept + depth − 1, plus one
+    /// cycle of downstream-take margin.
+    reach: u64,
+    zero: PsumSignal,
+}
+
+impl LaneParams {
+    fn new(spec: &PipelineSpec, ctx: &LaneCtx<'_>, m_total: usize) -> LaneParams {
+        let depth = spec.depth as usize;
+        LaneParams {
+            spacing: spec.spacing,
+            depth,
+            stride: depth - 1,
+            psum_stage: spec.psum_stage() as usize,
+            capture: spec.captures_at_accept(),
+            tail: spec.column_tail,
+            cols: ctx.sched.cols,
+            reach: (m_total as u64).saturating_sub(1) + depth as u64,
+            zero: PsumSignal::zero(&ctx.cfg),
+        }
+    }
+}
+
+/// Per-lane driver state that persists across ticks when lanes advance in
+/// lockstep: the South-edge rounding ring (`(ready_cycle, m, signal)`
+/// entries) plus the completion flag.
+struct LaneRun {
+    ring: [(u64, u32, PsumSignal); RING],
+    head: usize,
+    len: usize,
+    done: bool,
+}
+
+impl LaneRun {
+    fn new(zero: PsumSignal, done: bool) -> LaneRun {
+        LaneRun { ring: [(0, 0, zero); RING], head: 0, len: 0, done }
+    }
+}
+
+/// Batched band driver: advance a chunk of up to [`BLOCK_LANES`] column
+/// lanes in lockstep, one shared cycle counter per chunk.  Lanes are
+/// fully independent (inter-column coupling is only the closed-form
+/// arrival schedule), so the lockstep interleave is bit-identical to
+/// running each lane to completion serially — it exists to keep several
+/// independent datapath chains in flight per tick (the dependent
+/// psum chain inside one lane serializes on itself).
+fn run_band<K: MacKernel>(
     spec: &PipelineSpec,
     ctx: LaneCtx<'_>,
+    lanes: &mut [ColLane],
+) -> Result<(), SimError> {
+    for chunk in lanes.chunks_mut(BLOCK_LANES) {
+        let m_total = chunk[0].y_bits.len();
+        let p = LaneParams::new(spec, &ctx, m_total);
+        let mut runs: Vec<LaneRun> =
+            chunk.iter().map(|l| LaneRun::new(p.zero, l.y_bits.is_empty())).collect();
+        let mut remaining = runs.iter().filter(|r| !r.done).count();
+        let mut t = chunk[0].col as u64;
+        while remaining > 0 {
+            if t >= ctx.max_cycles {
+                let lane = chunk
+                    .iter()
+                    .zip(runs.iter())
+                    .find(|(_, r)| !r.done)
+                    .map(|(l, _)| l)
+                    .expect("remaining > 0 implies an unfinished lane");
+                return Err(SimError::Timeout {
+                    cycle: t,
+                    produced: lane.produced as usize,
+                    expected: lane.y_bits.len(),
+                });
+            }
+            for (lane, run) in chunk.iter_mut().zip(runs.iter_mut()) {
+                if run.done || (lane.col as u64) > t {
+                    continue;
+                }
+                lane_tick::<K>(&p, &ctx, lane, run, t)?;
+                if run.done {
+                    remaining -= 1;
+                }
+            }
+            t += 1;
+        }
+    }
+    Ok(())
+}
+
+/// One lane-cycle of the column simulation.
+///
+/// South-edge rounding first (it reads the pre-tick last-row output
+/// register), then the active row band in **descending** row order — so
+/// every cross-row read (upstream pipe/out registers) sees pre-tick state
+/// and every commit happens after all downstream consumers marked the
+/// register taken, reproducing the dense loop's evaluate-then-commit
+/// discipline without scratch buffers.  Within a row the order is: psum
+/// acquisition at the spec's psum stage → exit-stage commit → pipe shift
+/// → stage-1 acceptance.
+fn lane_tick<K: MacKernel>(
+    p: &LaneParams,
+    ctx: &LaneCtx<'_>,
     lane: &mut ColLane,
+    run: &mut LaneRun,
+    t: u64,
 ) -> Result<(), SimError> {
     let rows = lane.w.len();
     let m_total = lane.y_bits.len();
-    if m_total == 0 {
-        return Ok(());
-    }
-    let c = lane.col;
-    let cols = ctx.sched.cols;
-    let spacing = spec.spacing;
-    let depth = spec.depth as usize;
-    let stride = depth - 1;
-    let psum_stage = spec.psum_stage() as usize;
-    let capture = spec.captures_at_accept();
-    let tail = spec.column_tail;
     let last = rows - 1;
-    let zero = PsumSignal::zero(&ctx.cfg);
-    // Band slack beyond the last stage-1 accept: the element's last
-    // register touch is its out-commit at accept + depth − 1, plus one
-    // cycle of downstream-take margin.
-    let reach = (m_total as u64 - 1) + depth as u64;
+    let c = lane.col;
+    debug_assert!(t >= c as u64, "lane ticked before its first schedule slot");
 
-    // South-edge rounding ring: (ready_cycle, m, signal).
-    let mut ring = [(0u64, 0u32, zero); RING];
-    let (mut head, mut len) = (0usize, 0usize);
+    // ---- South edge: consume the last PE's pre-tick register -------
+    if lane.out_m[last] != EMPTY && !lane.out_taken[last] {
+        debug_assert!(run.len < RING, "rounding ring overflow");
+        run.ring[(run.head + run.len) % RING] = (t + p.tail, lane.out_m[last], lane.out_sig[last]);
+        run.len += 1;
+        lane.out_taken[last] = true;
+    }
+    while run.len > 0 && run.ring[run.head].0 <= t {
+        let (ready, m, sig) = run.ring[run.head];
+        run.head = (run.head + 1) % RING;
+        run.len -= 1;
+        lane.y_bits[m as usize] = ctx.ru.round(&sig);
+        lane.y_cycle[m as usize] = ready;
+        lane.produced += 1;
+    }
 
-    let mut t = c as u64;
-    while (lane.produced as usize) < m_total {
-        if t >= ctx.max_cycles {
-            return Err(SimError::Timeout {
-                cycle: t,
-                produced: lane.produced as usize,
-                expected: m_total,
-            });
-        }
+    // ---- Active band: S·r + c ∈ [t − (M−1) − D, t] -----------------
+    let off = t - c as u64;
+    let r_hi = ((off / p.spacing) as usize).min(last);
+    let r_lo = if off > p.reach {
+        (off - p.reach).div_ceil(p.spacing) as usize
+    } else {
+        0
+    };
+    if r_lo <= r_hi {
+        for r in (r_lo..=r_hi).rev() {
+            let base = r * p.stride;
 
-        // ---- South edge: consume the last PE's pre-tick register -------
-        if lane.out_m[last] != EMPTY && !lane.out_taken[last] {
-            debug_assert!(len < RING, "rounding ring overflow");
-            ring[(head + len) % RING] = (t + tail, lane.out_m[last], lane.out_sig[last]);
-            len += 1;
-            lane.out_taken[last] = true;
-        }
-        while len > 0 && ring[head].0 <= t {
-            let (ready, m, sig) = ring[head];
-            head = (head + 1) % RING;
-            len -= 1;
-            lane.y_bits[m as usize] = ctx.ru.round(&sig);
-            lane.y_cycle[m as usize] = ready;
-            lane.produced += 1;
-        }
-
-        // ---- Active band: S·r + c ∈ [t − (M−1) − D, t] -----------------
-        let off = t - c as u64;
-        let r_hi = ((off / spacing) as usize).min(last);
-        let r_lo = if off > reach {
-            (off - reach).div_ceil(spacing) as usize
-        } else {
-            0
-        };
-        if r_lo <= r_hi {
-            for r in (r_lo..=r_hi).rev() {
-                let base = r * stride;
-
-                // ---- psum acquisition at the spec's psum stage ---------
-                // (late-read disciplines only; reads the upstream
-                // pre-tick output register, written last cycle.)
-                if !capture {
-                    let idx = base + (psum_stage - 2);
-                    let mslot = lane.pipe_m[idx];
-                    if mslot != EMPTY {
-                        let psum = if r > 0 {
-                            let upm = lane.out_m[r - 1];
-                            if upm == EMPTY {
-                                unreachable!("late psum read with no upstream psum");
-                            }
-                            if upm != mslot {
-                                return Err(SimError::OutOfOrder {
-                                    pe: r * cols + c,
-                                    got: upm as usize,
-                                    want: mslot as usize,
-                                });
-                            }
-                            lane.out_taken[r - 1] = true;
-                            lane.out_sig[r - 1]
-                        } else {
-                            zero
-                        };
-                        lane.pipe_val[idx] = d.step(&ctx.cfg, &psum, lane.pipe_a[idx], lane.w[r]);
-                    }
-                }
-
-                // ---- exit-stage commit on the pre-tick pipe ------------
-                // Every downstream consumer of this PE's old output
-                // register already ran (descending order / South edge
-                // above), so an untaken value here is a genuine schedule
-                // violation.
-                let exit = base + (depth - 2);
-                if lane.pipe_m[exit] != EMPTY {
-                    if lane.out_m[r] != EMPTY && !lane.out_taken[r] {
-                        return Err(SimError::PsumOverrun {
-                            pe: r * cols + c,
-                            cycle: t,
-                            lost_m: lane.out_m[r] as usize,
-                        });
-                    }
-                    lane.out_m[r] = lane.pipe_m[exit];
-                    lane.out_sig[r] = lane.pipe_val[exit];
-                    lane.out_taken[r] = false;
-                }
-
-                // ---- pipe shift (within-PE, pre-tick values) -----------
-                for k in (1..stride).rev() {
-                    lane.pipe_m[base + k] = lane.pipe_m[base + k - 1];
-                    lane.pipe_a[base + k] = lane.pipe_a[base + k - 1];
-                    lane.pipe_val[base + k] = lane.pipe_val[base + k - 1];
-                }
-                lane.pipe_m[base] = EMPTY;
-
-                // ---- stage-1 acceptance (pre-tick upstream registers) --
-                let want = lane.next_feed[r];
-                if (want as usize) >= m_total {
-                    continue;
-                }
-                let (ready, captured) = if r == 0 {
-                    (true, zero)
-                } else if capture {
-                    // Predecessor's output register holds `want`,
-                    // written at the end of the previous cycle.
-                    let upm = lane.out_m[r - 1];
-                    if upm == want && !lane.out_taken[r - 1] {
-                        (true, lane.out_sig[r - 1])
-                    } else if upm != EMPTY && upm > want {
-                        return Err(SimError::OutOfOrder {
-                            pe: r * cols + c,
-                            got: upm as usize,
-                            want: want as usize,
-                        });
+            // ---- psum acquisition at the spec's psum stage ---------
+            // (late-read disciplines only; reads the upstream
+            // pre-tick output register, written last cycle.)
+            if !p.capture {
+                let idx = base + (p.psum_stage - 2);
+                let mslot = lane.pipe_m[idx];
+                if mslot != EMPTY {
+                    let psum = if r > 0 {
+                        let upm = lane.out_m[r - 1];
+                        if upm == EMPTY {
+                            unreachable!("late psum read with no upstream psum");
+                        }
+                        if upm != mslot {
+                            return Err(SimError::OutOfOrder {
+                                pe: r * p.cols + c,
+                                got: upm as usize,
+                                want: mslot as usize,
+                            });
+                        }
+                        lane.out_taken[r - 1] = true;
+                        lane.out_sig[r - 1]
                     } else {
-                        (false, zero)
-                    }
-                } else {
-                    // Predecessor completed stage S on `want` last cycle
-                    // (for the skewed organisation: speculative ê
-                    // forwarding).
-                    let upm = lane.pipe_m[(r - 1) * stride + (spacing as usize - 1)];
-                    if upm == want {
-                        (true, zero)
-                    } else if upm != EMPTY && upm > want {
-                        return Err(SimError::OutOfOrder {
-                            pe: r * cols + c,
-                            got: upm as usize,
-                            want: want as usize,
-                        });
-                    } else {
-                        (false, zero)
-                    }
-                };
-                if !ready {
-                    continue;
+                        p.zero
+                    };
+                    lane.pipe_val[idx] = K::step(&ctx.cfg, &psum, lane.pipe_a[idx], lane.w[r]);
                 }
-                // Activation wavefront arrival at column c: row 0 waiting
-                // is normal fill; a chain-ready PE deeper down waiting on
-                // its activation is a schedule skew (psum at risk).
-                if ctx.sched.arrive_cycle(r, c, want as usize) > t {
-                    if r > 0 {
-                        lane.stalls += 1;
-                    }
-                    continue;
-                }
-                if r > 0 && capture {
-                    lane.out_taken[r - 1] = true;
-                }
-                lane.pipe_m[base] = want;
-                lane.pipe_a[base] = ctx.a[want as usize * rows + r];
-                if capture {
-                    // Psum in hand: run the datapath now, let the value
-                    // ride the pipe to the exit stage.
-                    lane.pipe_val[base] =
-                        d.step(&ctx.cfg, &captured, lane.pipe_a[base], lane.w[r]);
-                }
-                lane.next_feed[r] = want + 1;
             }
+
+            // ---- exit-stage commit on the pre-tick pipe ------------
+            // Every downstream consumer of this PE's old output
+            // register already ran (descending order / South edge
+            // above), so an untaken value here is a genuine schedule
+            // violation.
+            let exit = base + (p.depth - 2);
+            if lane.pipe_m[exit] != EMPTY {
+                if lane.out_m[r] != EMPTY && !lane.out_taken[r] {
+                    return Err(SimError::PsumOverrun {
+                        pe: r * p.cols + c,
+                        cycle: t,
+                        lost_m: lane.out_m[r] as usize,
+                    });
+                }
+                lane.out_m[r] = lane.pipe_m[exit];
+                lane.out_sig[r] = lane.pipe_val[exit];
+                lane.out_taken[r] = false;
+            }
+
+            // ---- pipe shift (within-PE, pre-tick values) -----------
+            for k in (1..p.stride).rev() {
+                lane.pipe_m[base + k] = lane.pipe_m[base + k - 1];
+                lane.pipe_a[base + k] = lane.pipe_a[base + k - 1];
+                lane.pipe_val[base + k] = lane.pipe_val[base + k - 1];
+            }
+            lane.pipe_m[base] = EMPTY;
+
+            // ---- stage-1 acceptance (pre-tick upstream registers) --
+            let want = lane.next_feed[r];
+            if (want as usize) >= m_total {
+                continue;
+            }
+            let (ready, captured) = if r == 0 {
+                (true, p.zero)
+            } else if p.capture {
+                // Predecessor's output register holds `want`,
+                // written at the end of the previous cycle.
+                let upm = lane.out_m[r - 1];
+                if upm == want && !lane.out_taken[r - 1] {
+                    (true, lane.out_sig[r - 1])
+                } else if upm != EMPTY && upm > want {
+                    return Err(SimError::OutOfOrder {
+                        pe: r * p.cols + c,
+                        got: upm as usize,
+                        want: want as usize,
+                    });
+                } else {
+                    (false, p.zero)
+                }
+            } else {
+                // Predecessor completed stage S on `want` last cycle
+                // (for the skewed organisation: speculative ê
+                // forwarding).
+                let upm = lane.pipe_m[(r - 1) * p.stride + (p.spacing as usize - 1)];
+                if upm == want {
+                    (true, p.zero)
+                } else if upm != EMPTY && upm > want {
+                    return Err(SimError::OutOfOrder {
+                        pe: r * p.cols + c,
+                        got: upm as usize,
+                        want: want as usize,
+                    });
+                } else {
+                    (false, p.zero)
+                }
+            };
+            if !ready {
+                continue;
+            }
+            // Activation wavefront arrival at column c: row 0 waiting
+            // is normal fill; a chain-ready PE deeper down waiting on
+            // its activation is a schedule skew (psum at risk).
+            if ctx.sched.arrive_cycle(r, c, want as usize) > t {
+                if r > 0 {
+                    lane.stalls += 1;
+                }
+                continue;
+            }
+            if r > 0 && p.capture {
+                lane.out_taken[r - 1] = true;
+            }
+            lane.pipe_m[base] = want;
+            lane.pipe_a[base] = ctx.a[want as usize * rows + r];
+            if p.capture {
+                // Psum in hand: run the datapath now, let the value
+                // ride the pipe to the exit stage.
+                lane.pipe_val[base] = K::step(&ctx.cfg, &captured, lane.pipe_a[base], lane.w[r]);
+            }
+            lane.next_feed[r] = want + 1;
         }
-        t += 1;
+    }
+    if (lane.produced as usize) >= m_total {
+        run.done = true;
     }
     Ok(())
 }
@@ -757,6 +882,43 @@ mod tests {
                 par.run_parallel(100_000, threads).unwrap();
                 assert_eq!(par.result_bits(), serial.result_bits(), "{kind} threads={threads}");
                 assert_eq!(par.cycles(), serial.cycles(), "{kind} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn banded_kernel_run_equals_scalar_reference() {
+        // The monomorphized lockstep band driver against the serial
+        // generic-datapath path, on operand streams salted with zeros,
+        // subnormals, NaN/Inf and saturation-boundary values — every
+        // registered organisation, reduced formats included.
+        let mut rng = Rng::new(0x3e4d);
+        for fmt in [FpFormat::BF16, FpFormat::FP16, FpFormat::FP8E4M3, FpFormat::FP8E5M2] {
+            let cfg = if fmt.width() == 8 {
+                ChainCfg::new(fmt, FpFormat::FP16)
+            } else {
+                ChainCfg::new(fmt, FpFormat::FP32)
+            };
+            let salt = |rng: &mut Rng| match rng.below(6) {
+                0 => 0u64,
+                1 => fmt.nan_bits(),
+                2 => fmt.inf_bits(),
+                3 => rng.bits(fmt.man_bits),
+                _ => rng.bits(fmt.width()),
+            };
+            let (m, r, c) = (7usize, 9usize, 11usize);
+            let w: Vec<Vec<u64>> =
+                (0..r).map(|_| (0..c).map(|_| salt(&mut rng)).collect()).collect();
+            let a: Vec<Vec<u64>> =
+                (0..m).map(|_| (0..r).map(|_| salt(&mut rng)).collect()).collect();
+            for kind in PipelineKind::ALL {
+                let mut reference = FastArraySim::new(cfg, kind, &w, &a);
+                reference.run_reference(100_000).unwrap();
+                let mut banded = FastArraySim::new(cfg, kind, &w, &a);
+                banded.run(100_000).unwrap();
+                assert_eq!(banded.result_bits(), reference.result_bits(), "{kind} {}", fmt.name);
+                assert_eq!(banded.cycles(), reference.cycles(), "{kind} {}", fmt.name);
+                assert_eq!(banded.stalls(), reference.stalls(), "{kind} {}", fmt.name);
             }
         }
     }

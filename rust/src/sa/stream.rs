@@ -34,7 +34,7 @@ use crate::pe::cycle::PeActivity;
 use crate::pe::{PipelineKind, PipelineSpec};
 use crate::sa::column::SimError;
 use crate::sa::dataflow::WsSchedule;
-use crate::sa::fast::{run_lane_dispatch, ColLane, LaneCtx};
+use crate::sa::fast::{run_band_dispatch, ColLane, LaneCtx};
 use crate::sa::tile::{Tile, TilePlan};
 use crate::timing::model::{layer_timing_spec, TileSpanTiming, TimingConfig};
 
@@ -295,7 +295,7 @@ impl StreamingSim {
             };
             let lanes = &mut self.lanes[..tile.n_len];
             let run: Result<(), SimError> = if threads <= 1 || lanes.len() <= 1 {
-                lanes.iter_mut().try_for_each(|lane| run_lane_dispatch(&spec, ctx, lane))
+                run_band_dispatch(&spec, ctx, lanes)
             } else {
                 let threads = threads.min(lanes.len());
                 let chunk = lanes.len().div_ceil(threads);
@@ -303,11 +303,7 @@ impl StreamingSim {
                 std::thread::scope(|scope| {
                     let mut handles = Vec::with_capacity(threads);
                     for strip in lanes.chunks_mut(chunk) {
-                        handles.push(scope.spawn(move || {
-                            strip
-                                .iter_mut()
-                                .try_for_each(|lane| run_lane_dispatch(&spec, ctx, lane))
-                        }));
+                        handles.push(scope.spawn(move || run_band_dispatch(&spec, ctx, strip)));
                     }
                     for h in handles {
                         results.push(h.join().expect("column-lane thread panicked"));
@@ -356,6 +352,221 @@ impl StreamingSim {
             // Measured drain: deliberately derived from the *simulated*
             // duration, not [`WsSchedule::drain_cycles`] — the equality
             // of the two is exactly what `matches_layer_timing` checks.
+            drain += dur - dur.min(m_total as u64);
+            bank_free_at[bank] = stream_done;
+            spans.push(TileSpanTiming { preload_start, preload_done, stream_start, stream_done });
+            drained = stream_done;
+        }
+
+        let report = StreamReport {
+            cycles: drained,
+            compute_cycles: compute,
+            exposed_preload: exposed,
+            drain_cycles: drain,
+            tiles: tiles.len(),
+            spans,
+        };
+        self.report = Some(report.clone());
+        Ok(report)
+    }
+
+    /// Plan-level parallel run: independent K-pass/output tiles are
+    /// simulated **concurrently across cores**, then folded serially in
+    /// K-pass order — bit- and report-identical to [`StreamingSim::run`]
+    /// (pinned by `tests/prop_kernels.rs` and the streaming suite).
+    ///
+    /// Legal because tile numerics depend only on that tile's weight slab
+    /// and K-slice of the activations: the inter-tile coupling is purely
+    /// the fill/drain *timing* chain, which phase 3 replays serially from
+    /// the **measured** per-tile durations with the same event audits
+    /// (fill-path busy, bank liveness) as the serial path.  Each tile job
+    /// gets fresh drained lanes — exactly the state
+    /// [`ColLane::begin_tile`] guarantees at a serial hand-off.
+    ///
+    /// Falls back to [`StreamingSim::run_parallel`] (column-strip
+    /// parallelism inside each tile) for single-tile plans or one thread.
+    pub fn run_tile_parallel(
+        &mut self,
+        max_cycles: u64,
+        threads: usize,
+    ) -> Result<StreamReport, SimError> {
+        let tiles: Vec<Tile> = self.plan.tiles.clone();
+        let threads = threads.max(1).min(tiles.len().max(1));
+        if threads <= 1 || tiles.len() <= 1 {
+            return self.run_parallel(max_cycles, threads);
+        }
+        let (rows, m_total) = (self.rows, self.m_total);
+        let spec = self.spec;
+        let zero = PsumSignal::zero(&self.cfg);
+        let stride = spec.depth as usize - 1;
+
+        // ---- phase 1: predicted stream windows (budget sizing only) ----
+        // The closed-form per-tile duration sizes each job's cycle
+        // budget; the *reported* chain in phase 3 comes from measured
+        // durations, so a sim/model disagreement still surfaces through
+        // `matches_layer_timing` exactly as on the serial path.
+        let mut pred_start = Vec::with_capacity(tiles.len());
+        {
+            let mut drained = 0u64;
+            let mut prev: Option<(u64, u64)> = None; // (stream_start, stream_done)
+            for tile in &tiles {
+                let preload_start = match prev {
+                    None => 0,
+                    Some((ps, _)) if self.double_buffer => ps,
+                    Some((_, pd)) => pd,
+                };
+                let preload_done = preload_start + rows as u64;
+                let stream_start = drained.max(preload_done);
+                let dur = WsSchedule::with_spec(spec, rows, tile.n_len, m_total).total_cycles();
+                pred_start.push(stream_start);
+                prev = Some((stream_start, stream_start + dur));
+                drained = stream_start + dur;
+            }
+        }
+
+        // ---- phase 2: independent tile simulations across workers ------
+        struct TileRun {
+            lanes: Vec<ColLane>,
+            dur: u64,
+        }
+        let faults = &self.faults;
+        let w = &self.w;
+        let a = &self.a;
+        let cfg = self.cfg;
+        let ru = self.ru;
+        let pred = &pred_start;
+        let run_tile = |i: usize, tile: &Tile| -> Result<TileRun, SimError> {
+            let fault = faults.iter().find(|&&(t, _)| t == i).map(|&(_, f)| f);
+            // Fresh drained lanes with the tile's (zero-padded, possibly
+            // fault-flipped) weight column as the live bank — the state a
+            // serial hand-off leaves behind.
+            let mut lanes: Vec<ColLane> = (0..tile.n_len)
+                .map(|c| {
+                    let mut wcol: Vec<u64> = (0..rows)
+                        .map(|r| if r < tile.k_len { w[tile.k0 + r][tile.n0 + c] } else { 0 })
+                        .collect();
+                    if let Some(f) = fault.filter(|f| f.target == SdcTarget::Weight) {
+                        let idx = (f.word % (tile.n_len * tile.k_len) as u64) as usize;
+                        if idx / tile.k_len == c {
+                            wcol[idx % tile.k_len] =
+                                flip_exp_msb(wcol[idx % tile.k_len], cfg.in_fmt);
+                        }
+                    }
+                    ColLane::new(c, wcol, m_total, stride, zero)
+                })
+                .collect();
+            let mut a_flat = vec![0u64; m_total * rows];
+            for (m, arow) in a.iter().enumerate() {
+                for r in 0..tile.k_len {
+                    a_flat[m * rows + r] = arow[tile.k0 + r];
+                }
+            }
+            let sched = WsSchedule::with_spec(spec, rows, tile.n_len, m_total);
+            let ctx = LaneCtx {
+                cfg,
+                ru,
+                sched,
+                a: &a_flat,
+                max_cycles: max_cycles.saturating_sub(pred[i]),
+            };
+            run_band_dispatch(&spec, ctx, &mut lanes)?;
+            if let Some(f) = fault.filter(|f| f.target == SdcTarget::Psum) {
+                let idx = (f.word % (tile.n_len * m_total) as u64) as usize;
+                let (c, m) = (idx / m_total, idx % m_total);
+                lanes[c].y_bits[m] = flip_exp_msb(lanes[c].y_bits[m], cfg.out_fmt);
+            }
+            let dur = lanes
+                .iter()
+                .flat_map(|l| l.y_cycle.iter().map(|&yc| yc + 1))
+                .max()
+                .unwrap_or(0);
+            Ok(TileRun { lanes, dur })
+        };
+        let mut results: Vec<Option<Result<TileRun, SimError>>> = Vec::new();
+        results.resize_with(tiles.len(), || None);
+        let chunk = tiles.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            let run_tile = &run_tile;
+            let mut handles = Vec::with_capacity(threads);
+            for (ci, (tchunk, rchunk)) in
+                tiles.chunks(chunk).zip(results.chunks_mut(chunk)).enumerate()
+            {
+                handles.push(scope.spawn(move || {
+                    for (j, (tile, slot)) in tchunk.iter().zip(rchunk.iter_mut()).enumerate() {
+                        *slot = Some(run_tile(ci * chunk + j, tile));
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("tile worker thread panicked");
+            }
+        });
+
+        // ---- phase 3: serial K-pass-order fold + audited event chain ---
+        let expected: usize = tiles.iter().map(|t| m_total * t.n_len).sum();
+        let mut produced_total = 0usize;
+        let mut spans: Vec<TileSpanTiming> = Vec::with_capacity(tiles.len());
+        let mut fill_free_at: u64 = 0;
+        let mut bank_free_at = [0u64; 2];
+        let mut drained: u64 = 0;
+        let (mut exposed, mut compute, mut drain) = (0u64, 0u64, 0u64);
+        for (i, tile) in tiles.iter().enumerate() {
+            let preload_start = match spans.last() {
+                None => 0,
+                Some(prev) if self.double_buffer => prev.stream_start,
+                Some(prev) => prev.stream_done,
+            };
+            let bank = if self.double_buffer { i % 2 } else { 0 };
+            assert!(
+                preload_start >= fill_free_at,
+                "tile {i}: preload at {preload_start} but fill path busy until {fill_free_at}"
+            );
+            assert!(
+                preload_start >= bank_free_at[bank],
+                "tile {i}: preload into bank {bank} while it feeds live PEs (free at {})",
+                bank_free_at[bank]
+            );
+            let preload_done = preload_start + rows as u64;
+            fill_free_at = preload_done;
+            let stream_start = drained.max(preload_done);
+            if stream_start >= max_cycles {
+                return Err(SimError::Timeout {
+                    cycle: stream_start,
+                    produced: produced_total,
+                    expected,
+                });
+            }
+            exposed += stream_start - drained;
+            let outcome = results[i].take().expect("every tile job ran");
+            let TileRun { lanes, dur } = outcome.map_err(|e| match e {
+                SimError::Timeout { cycle, produced, expected: exp } => SimError::Timeout {
+                    cycle: stream_start + cycle,
+                    produced: produced_total + produced,
+                    expected: exp,
+                },
+                other => other,
+            })?;
+            for lane in &lanes {
+                for m in 0..m_total {
+                    let idx = m * self.n_total + tile.n0 + lane.col;
+                    self.y[idx] += f32::from_bits(lane.y_bits[m] as u32);
+                    self.out_cycle[idx] = stream_start + lane.y_cycle[m];
+                }
+                // Persist per-tile stall counts so `stalls()` (and the
+                // model cross-check) see the same totals as a serial run.
+                self.lanes[lane.col].stalls += lane.stalls;
+            }
+            let fault = self.faults.iter().find(|&&(t, _)| t == i).map(|&(_, f)| f);
+            if let Some(f) = fault.filter(|f| f.target == SdcTarget::Output) {
+                let idx = (f.word % (tile.n_len * m_total) as u64) as usize;
+                let (c, m) = (idx / m_total, idx % m_total);
+                let g = m * self.n_total + tile.n0 + c;
+                let bits = self.y[g].to_bits() as u64;
+                self.y[g] = f32::from_bits(flip_exp_msb(bits, self.cfg.out_fmt) as u32);
+            }
+            produced_total += m_total * tile.n_len;
+            let stream_done = stream_start + dur;
+            compute += dur;
             drain += dur - dur.min(m_total as u64);
             bank_free_at[bank] = stream_done;
             spans.push(TileSpanTiming { preload_start, preload_done, stream_start, stream_done });
@@ -532,6 +743,60 @@ mod tests {
             let rep_p = par.run_parallel(1_000_000, threads).unwrap();
             assert_eq!(rep_p, rep_s, "threads={threads}");
             assert_eq!(par.result_f32(), serial.result_f32(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tile_parallel_equals_serial_streaming() {
+        // Plan-level parallelism: identical bits, identical report (spans
+        // included), identical output cycles — every organisation, both
+        // double-buffer modes, edge tiles in K and N.
+        let mut rng = Rng::new(0x71e5);
+        let (w, a) = random_gemm(&mut rng, 5, 20, 10);
+        let plan = TilePlan::new(GemmShape::new(5, 20, 10), 8, 8);
+        assert!(plan.tile_count() > 1);
+        for kind in PipelineKind::ALL {
+            for db in [true, false] {
+                let mut serial = StreamingSim::new(CFG, kind, &plan, &w, &a, db);
+                let rep_s = serial.run(1_000_000).unwrap();
+                for threads in [2usize, 3, 16] {
+                    let mut par = StreamingSim::new(CFG, kind, &plan, &w, &a, db);
+                    let rep_p = par.run_tile_parallel(1_000_000, threads).unwrap();
+                    assert_eq!(rep_p, rep_s, "{kind} db={db} threads={threads}");
+                    assert_eq!(par.result_f32(), serial.result_f32(), "{kind} db={db}");
+                    assert_eq!(par.stalls(), 0, "{kind} db={db}");
+                    assert!(par.matches_layer_timing(), "{kind} db={db}");
+                    for m in 0..5 {
+                        for n in 0..10 {
+                            assert_eq!(
+                                par.output_cycle(m, n),
+                                serial.output_cycle(m, n),
+                                "{kind} db={db} ({m},{n})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_parallel_reproduces_injected_faults() {
+        // The fault model must land on the same sites in both execution
+        // shapes — corruption is part of the pinned semantics.
+        let mut rng = Rng::new(0x5dd);
+        let (w, a) = random_gemm(&mut rng, 5, 20, 10);
+        let plan = TilePlan::new(GemmShape::new(5, 20, 10), 8, 8);
+        for target in SdcTarget::ALL {
+            let faults = vec![(1usize, TileFault { target, word: 4321 })];
+            let mut serial = StreamingSim::new(CFG, PipelineKind::Skewed, &plan, &w, &a, true);
+            serial.set_faults(faults.clone());
+            serial.run(1_000_000).unwrap();
+            let mut par = StreamingSim::new(CFG, PipelineKind::Skewed, &plan, &w, &a, true);
+            par.set_faults(faults);
+            par.run_tile_parallel(1_000_000, 3).unwrap();
+            assert_eq!(par.result_f32(), serial.result_f32(), "{target:?}");
+            assert!(par.matches_layer_timing(), "{target:?}");
         }
     }
 

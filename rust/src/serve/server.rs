@@ -164,6 +164,7 @@ impl Server {
         let shards = Arc::new(ShardPool::with_obs(
             serve.shards,
             serve.workers_per_shard,
+            run.threads,
             run.queue_depth,
             serve.shard_policy,
             serve.fault.clone(),

@@ -155,7 +155,16 @@ impl ShardPool {
         fault: FaultModel,
         health: HealthPolicy,
     ) -> ShardPool {
-        Self::with_obs(shards, workers_per_shard, queue_depth, policy, fault, health, &Obs::new())
+        Self::with_obs(
+            shards,
+            workers_per_shard,
+            workers_per_shard,
+            queue_depth,
+            policy,
+            fault,
+            health,
+            &Obs::new(),
+        )
     }
 
     /// As [`ShardPool::with_fault_model`] under an observability handle:
@@ -163,9 +172,15 @@ impl ShardPool {
     /// (counters + trace events), and each member request's trace span
     /// — travelling inside its [`ReplyPart`] — has its dispatch/execute/
     /// reply phases and cycle attribution recorded by the shard loop.
+    ///
+    /// `sim_threads` is the tile-parallelism of each shard's
+    /// cycle-accurate streaming path (`--threads`); the non-obs
+    /// constructors default it to `workers_per_shard`.
+    #[allow(clippy::too_many_arguments)]
     pub fn with_obs(
         shards: usize,
         workers_per_shard: usize,
+        sim_threads: usize,
         queue_depth: usize,
         policy: Policy,
         fault: FaultModel,
@@ -193,6 +208,7 @@ impl ShardPool {
                         Policy::LeastLoaded,
                         fault,
                     );
+                    pool.set_sim_threads(sim_threads);
                     while let Ok(mut job) = rx.recv() {
                         // The batch left the dispatcher's mailbox: every
                         // member's dispatch-wait phase ends here.

@@ -108,6 +108,103 @@ pub fn append_json_run(path: &std::path::Path, entry: &str) -> std::io::Result<(
     std::fs::write(path, body)
 }
 
+/// Result of validating one `BENCH_*.json` trajectory file
+/// (the `skewsa bench-check` subcommand).
+#[derive(Debug, Default)]
+pub struct TrajectoryCheck {
+    /// Records in the file (across all bench groups).
+    pub entries: usize,
+    /// Schema violations — the hard CI gate.
+    pub errors: Vec<String>,
+    /// Perf-regression notes (>20% tier drop) — advisory only.
+    pub warnings: Vec<String>,
+}
+
+/// Validate one trajectory file written by [`append_json_run`]: the root
+/// must be a JSON array of flat records — every record an object whose
+/// `bench` is a string, whose `unix_time` is a number, and whose values
+/// are finite numbers, strings, or booleans (nested containers and
+/// nulls are schema errors; a NaN throughput would already fail the
+/// parse).  Then, per `(bench, smoke)` group, the two most recent
+/// records are compared tier by tier: a `hot:`-prefixed rate that
+/// dropped more than 20% becomes an advisory warning — host noise makes
+/// small swings routine, so the drop is flagged, never fatal.
+pub fn check_trajectory(path: &std::path::Path) -> TrajectoryCheck {
+    use crate::util::mini_json::Json;
+    let mut c = TrajectoryCheck::default();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            c.errors.push(format!("unreadable: {e}"));
+            return c;
+        }
+    };
+    let root = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            c.errors.push(format!("invalid JSON: {e}"));
+            return c;
+        }
+    };
+    let Some(records) = root.as_arr() else {
+        c.errors.push("root is not a JSON array".into());
+        return c;
+    };
+    c.entries = records.len();
+    let mut groups: std::collections::BTreeMap<(String, bool), Vec<usize>> = Default::default();
+    for (i, rec) in records.iter().enumerate() {
+        let Json::Obj(map) = rec else {
+            c.errors.push(format!("record {i}: not an object"));
+            continue;
+        };
+        let Some(bench) = rec.get("bench").and_then(Json::as_str) else {
+            c.errors.push(format!("record {i}: missing string field 'bench'"));
+            continue;
+        };
+        if rec.get("unix_time").and_then(Json::as_f64).is_none() {
+            c.errors.push(format!("record {i} ({bench}): missing numeric field 'unix_time'"));
+        }
+        for (k, v) in map {
+            let flat = matches!(v, Json::Num(x) if x.is_finite())
+                || matches!(v, Json::Str(_) | Json::Bool(_));
+            if !flat {
+                c.errors.push(format!(
+                    "record {i} ({bench}): field '{k}' must be a finite number, string, or bool"
+                ));
+            }
+        }
+        let smoke = rec.get("smoke").and_then(Json::as_bool).unwrap_or(false);
+        groups.entry((bench.to_string(), smoke)).or_default().push(i);
+    }
+    for ((bench, smoke), idxs) in &groups {
+        if idxs.len() < 2 {
+            continue;
+        }
+        let (Json::Obj(prev), Json::Obj(last)) =
+            (&records[idxs[idxs.len() - 2]], &records[idxs[idxs.len() - 1]])
+        else {
+            continue;
+        };
+        for (k, v) in last {
+            if !k.starts_with("hot:") {
+                continue;
+            }
+            let (Some(new), Some(old)) = (v.as_f64(), prev.get(k).and_then(Json::as_f64)) else {
+                continue;
+            };
+            if old > 0.0 && new < 0.8 * old {
+                c.warnings.push(format!(
+                    "{}: {bench}{}: '{k}' dropped {:.0}% ({old:.3e} -> {new:.3e})",
+                    path.display(),
+                    if *smoke { " (smoke)" } else { "" },
+                    (1.0 - new / old) * 100.0,
+                ));
+            }
+        }
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +234,60 @@ mod tests {
         assert_eq!(arr[0].get("a").and_then(Json::as_f64), Some(1.0));
         assert_eq!(arr[1].get("a").and_then(Json::as_f64), Some(2.5e9));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_check_validates_and_flags_regressions() {
+        let path =
+            std::env::temp_dir().join(format!("skewsa_benchcheck_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        append_json_run(
+            &path,
+            "  {\"bench\": \"hotpath\", \"unix_time\": 1, \"smoke\": true, \"hot:tier\": 100.0}",
+        )
+        .unwrap();
+        append_json_run(
+            &path,
+            "  {\"bench\": \"hotpath\", \"unix_time\": 2, \"smoke\": true, \"hot:tier\": 50.0}",
+        )
+        .unwrap();
+        let c = check_trajectory(&path);
+        assert!(c.errors.is_empty(), "{:?}", c.errors);
+        assert_eq!(c.entries, 2);
+        assert_eq!(c.warnings.len(), 1, "{:?}", c.warnings);
+        assert!(c.warnings[0].contains("hot:tier"), "{}", c.warnings[0]);
+        // A drop inside the 20% tolerance stays quiet (only the two most
+        // recent records of the group are compared).
+        append_json_run(
+            &path,
+            "  {\"bench\": \"hotpath\", \"unix_time\": 3, \"smoke\": true, \"hot:tier\": 45.0}",
+        )
+        .unwrap();
+        let c = check_trajectory(&path);
+        assert!(c.errors.is_empty(), "{:?}", c.errors);
+        assert!(c.warnings.is_empty(), "{:?}", c.warnings);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_check_rejects_bad_schema() {
+        let path = std::env::temp_dir()
+            .join(format!("skewsa_benchcheck_bad_{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            "[{\"unix_time\": 1}, {\"bench\": \"x\", \"unix_time\": 2, \"nested\": []}]",
+        )
+        .unwrap();
+        let c = check_trajectory(&path);
+        assert_eq!(c.errors.len(), 2, "{:?}", c.errors);
+        // An empty array (a fresh trajectory seed) is schema-clean.
+        std::fs::write(&path, "[]\n").unwrap();
+        let c = check_trajectory(&path);
+        assert!(c.errors.is_empty(), "{:?}", c.errors);
+        assert_eq!(c.entries, 0);
+        // A missing file is a schema error, not a panic.
+        std::fs::remove_file(&path).ok();
+        assert!(!check_trajectory(&path).errors.is_empty());
     }
 
     #[test]

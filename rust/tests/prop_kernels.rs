@@ -1,0 +1,218 @@
+//! Parity suite for the monomorphized hot-path kernels (`arith::kernel`,
+//! DESIGN.md §19).  The vectorized lane is a *performance* change with a
+//! zero-bit-drift contract, so every kernel is pinned against the generic
+//! datapath it replaces:
+//!
+//! 1. [`MonoKernel`]`<E, M, SKEWED>` step-for-step against the dynamic
+//!    `BaselineFmaPath` / `SkewedFmaPath` for every [`FpFormat`],
+//!    including zeros, subnormals, NaN/Inf and E4M3 top-exponent finites;
+//! 2. the E4M3 saturation boundary (448 / 449⁺ saturates-to-NaN) nudged
+//!    from both sides, where the fast-product predicate must bail;
+//! 3. [`mac_slice`] / [`mac_block`] (the banded lockstep driver) against
+//!    dependent per-column chains — fast all-normal bands and salted
+//!    slow bands alike;
+//! 4. [`quantize_matrix`] element-for-element against the precision
+//!    oracle's `quantize_oracle` (the codec-independence pin);
+//! 5. `StreamingSim::run_tile_parallel` against the serial streamer for
+//!    every registered [`PipelineKind`] in both preload disciplines —
+//!    identical reports, output bits, and timing-model agreement.
+
+use skewsa::arith::fma::{BaselineFmaPath, ChainCfg, ChainDatapath, PsumSignal, SkewedFmaPath};
+use skewsa::arith::format::FpFormat;
+use skewsa::arith::kernel::{
+    decode_matrix, mac_block, mac_slice, quantize_matrix, MacKernel, MonoKernel,
+};
+use skewsa::pe::PipelineKind;
+use skewsa::precision::quantize_oracle;
+use skewsa::sa::stream::StreamingSim;
+use skewsa::sa::tile::{GemmShape, TilePlan};
+use skewsa::util::prop::{Gen, Prop};
+
+const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+/// The accumulator pairing the rest of the repo uses: 8-bit inputs
+/// accumulate in FP16 windows, wider inputs in FP32.
+fn chain_for(fmt: FpFormat) -> ChainCfg {
+    if fmt.width() == 8 {
+        ChainCfg::new(fmt, FpFormat::FP16)
+    } else {
+        ChainCfg::new(fmt, FpFormat::FP32)
+    }
+}
+
+/// Adversarial operand mix: every class the any-special prescan must
+/// route off the fast path, plus uniform bit noise.
+fn operand(g: &mut Gen, fmt: FpFormat) -> u64 {
+    match g.usize_in(0, 7) {
+        0 => 0,                             // +0
+        1 => 1u64 << (fmt.width() - 1),     // -0
+        2 => g.bits(fmt.man_bits),          // subnormal
+        3 => fmt.inf_bits(),                // Inf (E4M3: NaN)
+        4 => fmt.nan_bits(),                // NaN
+        5 => fmt.inf_bits() - 1,            // largest finite
+        6 => fmt.from_f64(g.normal(0.0, 400.0)), // near E4M3 saturation
+        _ => g.bits(fmt.width()),
+    }
+}
+
+fn probe_steps<const E: u32, const M: u32>(g: &mut Gen, fmt: FpFormat) {
+    let cfg = chain_for(fmt);
+    let mut base = PsumSignal::zero(&cfg);
+    let mut mono_b = base;
+    let mut skew = PsumSignal::zero(&cfg);
+    let mut mono_s = skew;
+    for _ in 0..64 {
+        let a = operand(g, fmt);
+        let w = operand(g, fmt);
+        base = BaselineFmaPath.step(&cfg, &base, a, w);
+        mono_b = MonoKernel::<E, M, false>::step(&cfg, &mono_b, a, w);
+        g.assert_eq(fmt.display_name(), mono_b, base);
+        skew = SkewedFmaPath.step(&cfg, &skew, a, w);
+        mono_s = MonoKernel::<E, M, true>::step(&cfg, &mono_s, a, w);
+        g.assert_eq(fmt.display_name(), mono_s, skew);
+    }
+}
+
+/// Pin 1: monomorphized step kernels are bit-identical to the generic
+/// datapaths across all formats × both pipeline datapaths, under the
+/// adversarial operand mix.
+#[test]
+fn prop_mono_kernel_bit_identical_to_generic() {
+    Prop::new("mono-kernel-eq-generic", 250).run(|g| {
+        probe_steps::<8, 7>(g, FpFormat::BF16);
+        probe_steps::<5, 10>(g, FpFormat::FP16);
+        probe_steps::<4, 3>(g, FpFormat::FP8E4M3);
+        probe_steps::<5, 2>(g, FpFormat::FP8E5M2);
+        probe_steps::<8, 23>(g, FpFormat::FP32);
+    });
+}
+
+/// Pin 2: E4M3 saturation-boundary nudges.  448 is the largest finite;
+/// anything that rounds past it saturates to NaN, and the top-exponent
+/// finites (256..448) must be excluded from the const-generic fast
+/// product exactly as the dynamic predicate excludes them.
+#[test]
+fn prop_e4m3_saturation_boundary_nudges() {
+    Prop::new("e4m3-saturation-boundary", 600).run(|g| {
+        let fmt = FpFormat::FP8E4M3;
+        let cfg = chain_for(fmt);
+        let sign = if g.chance(0.5) { -1.0 } else { 1.0 };
+        let mag = if g.chance(0.5) {
+            448.0 * g.f64_in(0.9, 1.15) // straddles 448 / saturate-to-NaN
+        } else {
+            256.0 * g.f64_in(0.9, 1.1) // straddles the top-exponent field
+        };
+        let x = sign * mag;
+        let a = fmt.from_f64(x);
+        g.assert_eq("e4m3 quantize", quantize_oracle(fmt, x), a);
+        let w = fmt.from_f64(g.normal(0.0, 2.0));
+        let zero = PsumSignal::zero(&cfg);
+        let want_b = BaselineFmaPath.step(&cfg, &zero, a, w);
+        g.assert_eq("e4m3 baseline", MonoKernel::<4, 3, false>::step(&cfg, &zero, a, w), want_b);
+        let want_s = SkewedFmaPath.step(&cfg, &zero, a, w);
+        g.assert_eq("e4m3 skewed", MonoKernel::<4, 3, true>::step(&cfg, &zero, a, w), want_s);
+    });
+}
+
+/// Pin 3: the batched entry points equal dependent per-column chains —
+/// including bands salted with specials (scalar fallback) and all-normal
+/// bands (lockstep fast path), with column counts crossing the chunk
+/// width.
+#[test]
+fn prop_batched_block_equals_dependent_chains() {
+    Prop::new("mac-block-eq-chains", 60).run(|g| {
+        for fmt in FpFormat::ALL {
+            let cfg = chain_for(fmt);
+            let k = g.usize_in(1, 24);
+            let cols = g.usize_in(1, 19); // crosses BLOCK_LANES = 8
+            let all_normal = g.chance(0.5);
+            let draw = |g: &mut Gen| {
+                if all_normal {
+                    loop {
+                        let b = g.bits(fmt.width());
+                        if fmt.is_fast_normal(b) {
+                            break b;
+                        }
+                    }
+                } else {
+                    operand(g, fmt)
+                }
+            };
+            let a: Vec<u64> = (0..k).map(|_| draw(g)).collect();
+            let wdata: Vec<Vec<u64>> =
+                (0..cols).map(|_| (0..k).map(|_| draw(g)).collect()).collect();
+            let wcols: Vec<&[u64]> = wdata.iter().map(|w| w.as_slice()).collect();
+            let mut got = vec![PsumSignal::zero(&cfg); cols];
+            mac_block(&cfg, &a, &wcols, &mut got);
+            for (j, w) in wdata.iter().enumerate() {
+                let mut want = PsumSignal::zero(&cfg);
+                for (&av, &wv) in a.iter().zip(w.iter()) {
+                    want = BaselineFmaPath.step(&cfg, &want, av, wv);
+                }
+                g.assert_eq("mac_block column", got[j], want);
+                let folded = mac_slice(&cfg, &PsumSignal::zero(&cfg), &a, w);
+                g.assert_eq("mac_slice fold", folded, want);
+            }
+        }
+    });
+}
+
+/// Pin 4: whole-matrix quantization is the codec the precision oracle
+/// checks, element for element, and decode inverts it exactly.
+#[test]
+fn prop_quantize_matrix_matches_oracle() {
+    Prop::new("quantize-matrix-eq-oracle", 150).run(|g| {
+        for fmt in FpFormat::ALL {
+            let xs: Vec<f64> = (0..32)
+                .map(|_| match g.usize_in(0, 4) {
+                    0 => g.normal(0.0, 1.0),
+                    1 => g.normal(0.0, 1e-6),
+                    2 => 448.0 * g.f64_in(0.9, 1.15),
+                    3 => 0.0,
+                    _ => g.normal(0.0, 1e6),
+                })
+                .collect();
+            let q = quantize_matrix(fmt, &xs);
+            for (x, &b) in xs.iter().zip(q.iter()) {
+                g.assert_eq(fmt.display_name(), b, quantize_oracle(fmt, *x));
+            }
+            let d = decode_matrix(fmt, &q);
+            for (&b, &v) in q.iter().zip(d.iter()) {
+                g.assert_eq("decode", v.to_bits(), fmt.to_f64(b).to_bits());
+            }
+        }
+    });
+}
+
+fn bf(g: &mut Gen) -> u64 {
+    FpFormat::BF16.from_f64(g.normal(0.0, 1.5))
+}
+
+/// Pin 5: tile-level parallelism is invisible — the parallel streamer
+/// produces the identical report, output bits, and timing-model match as
+/// the serial one, for every organisation, both preload disciplines, and
+/// thread counts above and below the tile count.
+#[test]
+fn prop_tile_parallel_streaming_equals_serial() {
+    Prop::new("tile-parallel-eq-serial", 10).run(|g| {
+        let shape = GemmShape::new(g.usize_in(2, 5), g.usize_in(9, 24), g.usize_in(9, 18));
+        let plan = TilePlan::new(shape, 8, 8); // multi-tile in K and N
+        let w: Vec<Vec<u64>> =
+            (0..shape.k).map(|_| (0..shape.n).map(|_| bf(g)).collect()).collect();
+        let a: Vec<Vec<u64>> =
+            (0..shape.m).map(|_| (0..shape.k).map(|_| bf(g)).collect()).collect();
+        let threads = g.usize_in(2, 16);
+        for kind in PipelineKind::ALL {
+            for db in [false, true] {
+                let mut serial = StreamingSim::new(CFG, kind, &plan, &w, &a, db);
+                let rep_s = serial.run(10_000_000).unwrap();
+                let mut par = StreamingSim::new(CFG, kind, &plan, &w, &a, db);
+                let rep_p = par.run_tile_parallel(10_000_000, threads).unwrap();
+                g.assert_eq("stream report", &rep_p, &rep_s);
+                g.assert("output bits", par.result_f32() == serial.result_f32());
+                g.assert("stall-free", par.stalls() == 0);
+                g.assert("timing model", par.matches_layer_timing());
+            }
+        }
+    });
+}
