@@ -17,8 +17,16 @@ autoscale_interval = 0), so this port skips the health/energy surface
 entirely — with zero faults those subsystems cannot affect any
 fingerprinted field.  Everything else (Poisson/MMPP/trace/closed-loop
 arrivals, bucket/watermark/capacity admission, anchor selection,
-windowed coalescing, rr/ll routing, depth-2 mailboxes, blocked-batcher
-backpressure) is ported exactly.
+windowed coalescing, rr/ll/shape-aware routing, per-shard array
+geometries, depth-2 mailboxes, blocked-batcher backpressure) is ported
+exactly.
+
+A second scenario (SCENARIO_HETERO → golden_fleet_hetero.json) runs a
+heterogeneous pool: per-shard geometries and the shape-aware policy,
+which quotes every batch's GEMM against each shard's geometry through
+the rectangular timing model and routes to the minimum-cycle shard
+(ties toward the lower index).  Its golden additionally pins the total
+stream-cycle count.
 
 Service times come from layer_timing in test_streaming_timing.py — the
 same independent timing port the streaming cycle simulator is pinned
@@ -59,6 +67,9 @@ FNV_OFFSET = 0xCBF29CE484222325
 FNV_PRIME = 0x100000001B3
 
 GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden_fleet_des.json")
+GOLDEN_HETERO = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "golden_fleet_hetero.json"
+)
 
 
 # ---------------------------------------------------------------------------
@@ -278,6 +289,13 @@ class FleetSim:
         assert fleet.get("autoscale_interval", 0) == 0, "port boundary: autoscaler off"
         self.run_rows = run["rows"]
         self.run_cols = run["cols"]
+        # Per-shard array geometry: "ROWSxCOLS" strings, repeating when
+        # shorter than the pool; empty = every shard runs the run
+        # geometry (rust/src/config FleetConfig::shard_geometry).
+        self.shard_geoms = [
+            tuple(int(x) for x in g.split("x"))
+            for g in fleet.get("shard_geometries", [])
+        ]
         self.double_buffer = run.get("double_buffer", True)
         self.cfg = fleet
         self.seed = fleet["seed"]
@@ -305,6 +323,7 @@ class FleetSim:
         self.batches = 0
         self.batched_rows = 0
         self.max_batch = 0
+        self.stream_cycles = 0
 
     # -- event queue: (time, push-seq) ordering, exactly like event.rs --
 
@@ -509,32 +528,51 @@ class FleetSim:
 
     # -- dispatch + shard mailboxes (sim.rs dispatch/deliver) --
 
-    def service_cycles(self, model, kind, m_rows):
-        key = (model, kind, m_rows)
+    def shard_geometry(self, s):
+        if not self.shard_geoms:
+            return (self.run_rows, self.run_cols)
+        return self.shard_geoms[s % len(self.shard_geoms)]
+
+    def service_cycles(self, model, kind, m_rows, geom):
+        key = (model, kind, m_rows, geom)
         got = self.svc_memo.get(key)
         if got is None:
             k, n = self.models[model]
             s, d, tail = KIND_SPECS[kind]
-            tiles = tile_plan(m_rows, k, n, self.run_rows, self.run_cols)
-            got = layer_timing(s, d, tail, m_rows, self.run_rows, tiles, self.double_buffer)[0]
+            rows, cols = geom
+            tiles = tile_plan(m_rows, k, n, rows, cols)
+            got = layer_timing(s, d, tail, m_rows, rows, tiles, self.double_buffer)[0]
             self.svc_memo[key] = got
         return got
 
     def dispatch(self, t, model, kind, rows, parts):
-        service = self.service_cycles(model, kind, rows)
+        # Routing mirrors sim.rs dispatch: health ticks first on the
+        # Rust side, but with faults asserted off (port boundary) the
+        # board never excludes anyone, so eligible == the active pool.
+        eligible = range(self.active)
+        if self.policy in ("rr", "round_robin"):
+            shard = self.rr_next % self.active
+            self.rr_next += 1
+        elif self.policy in ("shape", "shape_aware", "shape-aware"):
+            # Best fit: min predicted stream cycles under each shard's
+            # geometry, ties toward the lower index (serve/policy.rs
+            # best_fit_shard) — deterministic, no load term.
+            shard = min(
+                eligible,
+                key=lambda s: (self.service_cycles(model, kind, rows, self.shard_geometry(s)), s),
+            )
+        else:
+            shard = min(eligible, key=lambda s: (self.shards[s].inflight, s))
+        # The quote is always under the *chosen* shard's geometry.
+        service = self.service_cycles(model, kind, rows, self.shard_geometry(shard))
         self.batch_ids += 1
         # Faults and drops are hash-draws against fault_rate == 0 here
         # (asserted in __init__), so every batch is clean by contract.
         self.batches += 1
         self.batched_rows += rows
         self.max_batch = max(self.max_batch, len(parts))
+        self.stream_cycles += service
         batch = Batch(parts, service, False)
-        eligible = range(self.active)
-        if self.policy in ("rr", "round_robin"):
-            shard = self.rr_next % self.active
-            self.rr_next += 1
-        else:
-            shard = min(eligible, key=lambda s: (self.shards[s].inflight, s))
         self.shards[shard].inflight += 1
         return self.deliver(t, shard, batch)
 
@@ -708,8 +746,76 @@ SCENARIO = {
 }
 
 
-def simulate(scenario):
-    return FleetSim(scenario["run"], scenario["fleet"]).run()
+# The heterogeneous scenario: three shard geometries at one pool, the
+# shape-aware policy, and three model shapes built so each geometry is
+# the best fit for one of them (reduction-deep → tall 16x4, output-wide
+# → wide 4x16, balanced → square 8x8).  Open-loop tenants draw models
+# uniformly, so every shard earns real traffic and the fingerprint pins
+# the full routing history.
+SCENARIO_HETERO = {
+    "run": {"rows": 8, "cols": 8, "in_fmt": "bf16", "double_buffer": True},
+    "fleet": {
+        "shards": 3,
+        "min_shards": 3,
+        "max_shards": 3,
+        "queue_cap": 12,
+        "shed_watermark": 6,
+        "batch_window": 400,
+        "interactive_window": 40,
+        "max_batch_requests": 4,
+        "max_batch_rows": 16,
+        "plan_cache_cap": 32,
+        "shard_policy": "shape",
+        "shard_geometries": ["16x4", "4x16", "8x8"],
+        "fault_rate": 0.0,
+        "fault_drop_rate": 0.0,
+        "horizon": 120000,
+        "autoscale_interval": 0,
+        "seed": 771002963,
+        "record_limit": 4096,
+        "models": [{"k": 64, "n": 4}, {"k": 4, "n": 64}, {"k": 24, "n": 16}],
+        "tenants": [
+            {
+                "name": "decode",
+                "arrival": {"kind": "poisson", "mean_gap": 600.0},
+                "kinds": "skewed",
+                "interactive_fraction": 0.5,
+                "min_rows": 1,
+                "max_rows": 4,
+                "bucket_capacity": 0,
+                "bucket_refill": 1,
+            },
+            {
+                "name": "mixed",
+                "arrival": {"kind": "poisson", "mean_gap": 900.0},
+                "kinds": "baseline-3b,skewed",
+                "interactive_fraction": 0.2,
+                "min_rows": 2,
+                "max_rows": 6,
+                "bucket_capacity": 0,
+                "bucket_refill": 1,
+            },
+            {
+                "name": "loop",
+                "arrival": {"kind": "closed", "clients": 2, "requests_per_client": 25},
+                "kinds": "skewed",
+                "interactive_fraction": 0.3,
+                "min_rows": 2,
+                "max_rows": 5,
+                "bucket_capacity": 0,
+                "bucket_refill": 1,
+            },
+        ],
+    },
+}
+
+
+def simulate(scenario, with_stream=False):
+    sim = FleetSim(scenario["run"], scenario["fleet"])
+    res = sim.run()
+    if with_stream:
+        res = dict(res, stream_cycles=sim.stream_cycles)
+    return res
 
 
 def emit_golden():
@@ -719,6 +825,21 @@ def emit_golden():
         json.dump(doc, f, indent=2)
         f.write("\n")
     print(f"wrote {GOLDEN}")
+    for k, v in expect.items():
+        print(f"  {k}: {v}")
+
+
+def emit_golden_hetero():
+    expect = simulate(SCENARIO_HETERO, with_stream=True)
+    doc = {
+        "run": SCENARIO_HETERO["run"],
+        "fleet": SCENARIO_HETERO["fleet"],
+        "expect": expect,
+    }
+    with open(GOLDEN_HETERO, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {GOLDEN_HETERO}")
     for k, v in expect.items():
         print(f"  {k}: {v}")
 
@@ -747,11 +868,39 @@ def check_golden():
     )
 
 
+def check_golden_hetero():
+    with open(GOLDEN_HETERO) as f:
+        doc = json.load(f)
+    assert doc["run"] == SCENARIO_HETERO["run"], "hetero golden 'run' drifted — re-emit"
+    assert doc["fleet"] == SCENARIO_HETERO["fleet"], "hetero golden 'fleet' drifted — re-emit"
+    sim = FleetSim(doc["run"], doc["fleet"])
+    got = dict(sim.run(), stream_cycles=sim.stream_cycles)
+    again = simulate({"run": doc["run"], "fleet": doc["fleet"]}, with_stream=True)
+    assert got == again, f"nondeterministic hetero replay:\n{got}\nvs\n{again}"
+    want = doc["expect"]
+    assert got == want, "hetero golden mismatch:\n" + "\n".join(
+        f"  {k}: got {got.get(k)} want {want.get(k)}" for k in sorted(set(got) | set(want))
+    )
+    # Sanity: heterogeneity must actually show in the routing history.
+    shards_used = {r.shard for r in sim.outcomes if r.shard is not None}
+    assert shards_used == {0, 1, 2}, f"every geometry should win traffic, got {shards_used}"
+    assert got["served"] > 50, "hetero scenario should serve a real load"
+    assert got["max_batch"] > 1, "hetero scenario should coalesce batches"
+    assert got["stream_cycles"] > 0
+    print(
+        "OK: heterogeneous shape-aware port matches golden "
+        f"({got['submitted']} requests, {got['stream_cycles']} stream cycles, "
+        f"fingerprint {got['fingerprint']})"
+    )
+
+
 def main():
     if "--emit-golden" in sys.argv[1:]:
         emit_golden()
+        emit_golden_hetero()
     else:
         check_golden()
+        check_golden_hetero()
 
 
 if __name__ == "__main__":

@@ -358,6 +358,27 @@ def one_case(rng, name, S, D, tail, db):
     assert t_serial - t_db == (len(tiles) - 1) * rows
 
 
+def rect_case(rng, name, S, D, tail, db, rows, cols):
+    """Directed rectangular/degenerate geometry: same checks as
+    one_case but at a pinned R x C (tall, wide, 1xN, Rx1) — the shapes
+    ISSUE 10's ArrayGeometry refactor makes first-class."""
+    m = rng.randint(1, 4)
+    k = rng.randint(1, 2 * rows + 1)
+    n = rng.randint(1, cols + 2)
+    A = [[rng.randint(-4, 4) for _ in range(k)] for _ in range(m)]
+    W = [[rng.randint(-3, 3) for _ in range(n)] for _ in range(k)]
+    tiles = tile_plan(m, k, n, rows, cols)
+    mc = Machine(S, D, tail, rows, cols, A, W, tiles, db)
+    mc.run()
+    for mi in range(m):
+        for ni in range(n):
+            want = sum(A[mi][ki] * W[ki][ni] for ki in range(k))
+            assert mc.y[mi][ni] == want, f"{name} {rows}x{cols}: y[{mi}][{ni}]"
+    t_total, _, _, _, spans_model = layer_timing(S, D, tail, m, rows, tiles, db)
+    assert mc.spans == spans_model, f"{name} {rows}x{cols} db={db}: spans diverge"
+    assert mc.spans[-1][3] == t_total, f"{name} {rows}x{cols} db={db}: total"
+
+
 def main():
     rng = random.Random(0x5EED_1559)
     cases = 0
@@ -366,8 +387,20 @@ def main():
             for _ in range(40):
                 one_case(rng, name, S, D, tail, db)
                 cases += 1
+    # Directed rectangular + degenerate geometries: tall, wide, single
+    # row, single column.  The machine ticks every PE of the pinned
+    # R x C plane, so agreement here validates the rectangular closed
+    # form the geometry sweep and the heterogeneous fleet quote from.
+    rect = 0
+    for rows, cols in [(24, 3), (3, 24), (1, 6), (6, 1)]:
+        for name, S, D, tail in SPECS:
+            for db in (True, False):
+                for _ in range(3):
+                    rect_case(rng, name, S, D, tail, db, rows, cols)
+                    rect += 1
     print(f"OK: {cases} randomized multi-tile streaming cases "
           f"({len(SPECS)} organisations x both double-buffer modes) "
+          f"+ {rect} directed rectangular/degenerate-geometry cases "
           f"agree with the ported layer_timing composition")
 
 

@@ -44,6 +44,7 @@ use skewsa::precision::{analyze_layer, analyze_layer_reference, AnalysisConfig};
 use skewsa::sa::array::ArraySim;
 use skewsa::sa::column::ColumnSim;
 use skewsa::sa::fast::FastArraySim;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::sa::stream::StreamingSim;
 use skewsa::sa::tile::{GemmShape, TilePlan};
 use skewsa::util::bench::{append_json_run, measure, with_units, Measurement};
@@ -305,8 +306,7 @@ fn main() {
     // --- 4. coordinated GEMM throughput ----------------------------------
     for workers in [1usize, 4, 8] {
         let mut cfg = RunConfig::small();
-        cfg.rows = 32;
-        cfg.cols = 32;
+        cfg.geometry = ArrayGeometry::new(32, 32);
         cfg.workers = workers;
         cfg.verify_fraction = 0.0;
         let shape = GemmShape::new(64, 128, 64);

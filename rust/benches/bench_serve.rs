@@ -28,6 +28,7 @@ use skewsa::config::{FleetConfig, RunConfig, ServeConfig};
 use skewsa::coordinator::FaultModel;
 use skewsa::fleet::{FleetSim, TenantSpec};
 use skewsa::report;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::serve::{
     gen_request, recv_response, run_closed_loop, DeadlineClass, LoadSpec, Server, ShardSnapshot,
 };
@@ -42,8 +43,7 @@ const CAP: usize = 64;
 
 fn run_cfg() -> RunConfig {
     let mut cfg = RunConfig::small();
-    cfg.rows = 32;
-    cfg.cols = 32;
+    cfg.geometry = ArrayGeometry::new(32, 32);
     cfg.verify_fraction = 0.0;
     cfg
 }
@@ -329,6 +329,118 @@ fn main() {
         match append_json_run(&path, &fleet_entry) {
             Ok(()) => println!("bench: fleet trajectory appended to {}", path.display()),
             Err(e) => eprintln!("bench: could not append fleet trajectory: {e}"),
+        }
+    }
+
+    // --- heterogeneous-fleet tier ------------------------------------------
+    // Equal PE budget, different shapes: a mixed decode+CNN trace over a
+    // uniform 4×128x128 round-robin fleet vs a [256x64, 64x256,
+    // 128x128, 128x128] fleet under shape-aware routing.  The routing
+    // policy scores each request's GEMM against every shard's geometry
+    // through the plan cache, so the tall array absorbs the
+    // reduction-deep decode projections and the squares keep the CNN
+    // layers — the win must show on BOTH p99 latency and total stream
+    // cycles, and it is asserted (the trace is deterministic).
+    {
+        use skewsa::coordinator::Policy;
+        use skewsa::fleet::{ArrivalSpec, TraceReq};
+        use skewsa::serve::DeadlineClass;
+        let mut hrun = RunConfig::small();
+        hrun.geometry = ArrayGeometry::new(128, 128);
+        hrun.verify_fraction = 0.0;
+        let n_req = if smoke { 60 } else { 200 };
+        let requests: Vec<TraceReq> = (0..n_req)
+            .map(|i| TraceReq {
+                at: i as u64 * 4_000,
+                model: i % 2,
+                rows: 2,
+                kind: PipelineKind::Skewed,
+                class: DeadlineClass::Interactive,
+            })
+            .collect();
+        let base = FleetConfig {
+            shards: 4,
+            min_shards: 4,
+            max_shards: 4,
+            horizon: n_req as u64 * 4_000 + 100_000,
+            autoscale_interval: 0,
+            models: vec![
+                skewsa::fleet::ModelShape { k: 4096, n: 64 }, // decode projection
+                skewsa::fleet::ModelShape { k: 512, n: 512 }, // CNN mid-layer
+            ],
+            tenants: vec![TenantSpec {
+                arrival: ArrivalSpec::Trace { requests },
+                ..TenantSpec::poisson("mixed", 1.0)
+            }],
+            ..FleetConfig::default()
+        };
+        let uniform = FleetConfig { shard_policy: Policy::RoundRobin, ..base.clone() };
+        let hetero = FleetConfig {
+            shard_policy: Policy::ShapeAware,
+            shard_geometries: vec![
+                ArrayGeometry::new(256, 64),
+                ArrayGeometry::new(64, 256),
+                ArrayGeometry::new(128, 128),
+                ArrayGeometry::new(128, 128),
+            ],
+            ..base
+        };
+        let pe_budget = |f: &FleetConfig| -> usize {
+            (0..4).map(|s| f.shard_geometry(s, hrun.geometry).pe_count()).sum()
+        };
+        assert_eq!(pe_budget(&uniform), pe_budget(&hetero), "the comparison is at equal silicon");
+        let ru = FleetSim::simulate(&hrun, &uniform);
+        let rh = FleetSim::simulate(&hrun, &hetero);
+        assert!(ru.accounting_balanced() && rh.accounting_balanced());
+        assert_eq!(ru.served, n_req as u64, "uniform fleet must serve the whole trace");
+        assert_eq!(rh.served, n_req as u64, "hetero fleet must serve the whole trace");
+        let (p99_u, p99_h) = (ru.latency.quantile(99.0), rh.latency.quantile(99.0));
+        let hetero_speedup = ru.stream_cycles as f64 / rh.stream_cycles.max(1) as f64;
+        println!(
+            "bench: hetero fleet        p99 {p99_h} vs uniform {p99_u} cyc, \
+             stream {} vs {} cyc ({hetero_speedup:.3}x)",
+            rh.stream_cycles, ru.stream_cycles,
+        );
+        assert!(
+            p99_h < p99_u && rh.stream_cycles < ru.stream_cycles,
+            "shape-aware hetero fleet must beat the uniform square fleet on p99 \
+             ({p99_h} vs {p99_u}) and stream cycles ({} vs {})",
+            rh.stream_cycles,
+            ru.stream_cycles,
+        );
+        // Per-geometry utilization of the hetero fleet (busy/wall per shape).
+        let util_for = |r: &skewsa::fleet::FleetResult, g: ArrayGeometry| -> f64 {
+            let (n, busy) = r
+                .shard_geoms
+                .iter()
+                .zip(&r.shard_busy)
+                .filter(|(&sg, _)| sg == g)
+                .fold((0u64, 0u64), |(n, b), (_, &sb)| (n + 1, b + sb));
+            if r.wall_cycles == 0 || n == 0 {
+                0.0
+            } else {
+                busy as f64 / (r.wall_cycles * n) as f64
+            }
+        };
+        let hetero_entry = format!(
+            "  {{\"bench\": \"serve_hetero\", \"unix_time\": {ts}, \"smoke\": {smoke}, \
+             \"requests\": {n_req}, \"pe_budget\": {}, \
+             \"p99_uniform_cycles\": {p99_u}, \"p99_hetero_cycles\": {p99_h}, \
+             \"stream_cycles_uniform\": {}, \"stream_cycles_hetero\": {}, \
+             \"hetero_speedup\": {hetero_speedup:.4}, \
+             \"util_tall\": {:.4}, \"util_wide\": {:.4}, \"util_square\": {:.4}, \
+             \"util_uniform\": {:.4}}}",
+            pe_budget(&hetero),
+            ru.stream_cycles,
+            rh.stream_cycles,
+            util_for(&rh, ArrayGeometry::new(256, 64)),
+            util_for(&rh, ArrayGeometry::new(64, 256)),
+            util_for(&rh, ArrayGeometry::new(128, 128)),
+            util_for(&ru, ArrayGeometry::new(128, 128)),
+        );
+        match append_json_run(&path, &hetero_entry) {
+            Ok(()) => println!("bench: hetero trajectory appended to {}", path.display()),
+            Err(e) => eprintln!("bench: could not append hetero trajectory: {e}"),
         }
     }
 }

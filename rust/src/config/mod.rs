@@ -11,6 +11,7 @@ use crate::coordinator::router::Policy;
 use crate::coordinator::FaultModel;
 use crate::fleet::arrival::{ArrivalSpec, ModelShape, TenantSpec};
 use crate::pe::PipelineKind;
+use crate::sa::geometry::ArrayGeometry;
 use crate::serve::health::HealthPolicy;
 use crate::timing::model::TimingConfig;
 use crate::util::cli::Args;
@@ -31,10 +32,9 @@ pub enum NumericMode {
 /// Complete run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
-    /// Array rows.
-    pub rows: usize,
-    /// Array columns.
-    pub cols: usize,
+    /// Array shape (validated at parse time — a degenerate geometry
+    /// never reaches `TilePlan::new`).
+    pub geometry: ArrayGeometry,
     /// Clock in GHz.
     pub clock_ghz: f64,
     /// Input element format.
@@ -69,8 +69,7 @@ impl RunConfig {
     /// The paper's evaluation point: 128×128 bf16→fp32 @ 1 GHz.
     pub fn paper() -> RunConfig {
         RunConfig {
-            rows: 128,
-            cols: 128,
+            geometry: ArrayGeometry::PAPER,
             clock_ghz: 1.0,
             in_fmt: FpFormat::BF16,
             out_fmt: FpFormat::FP32,
@@ -87,7 +86,12 @@ impl RunConfig {
 
     /// A small config for tests and quick examples.
     pub fn small() -> RunConfig {
-        RunConfig { rows: 8, cols: 8, workers: 2, queue_depth: 8, ..RunConfig::paper() }
+        RunConfig {
+            geometry: ArrayGeometry { rows: 8, cols: 8 },
+            workers: 2,
+            queue_depth: 8,
+            ..RunConfig::paper()
+        }
     }
 
     /// The chain configuration implied by the formats.
@@ -97,12 +101,7 @@ impl RunConfig {
 
     /// The timing configuration implied by geometry + clock.
     pub fn timing(&self) -> TimingConfig {
-        TimingConfig {
-            rows: self.rows,
-            cols: self.cols,
-            clock_ghz: self.clock_ghz,
-            double_buffer: self.double_buffer,
-        }
+        TimingConfig::for_geometry(self.geometry, self.clock_ghz, self.double_buffer)
     }
 
     fn fmt_by_name(name: &str) -> Result<FpFormat, String> {
@@ -116,15 +115,25 @@ impl RunConfig {
         }
     }
 
-    /// Apply a parsed JSON config object over this one.
+    /// Apply a parsed JSON config object over this one.  Geometry comes
+    /// either as one `"geometry": "ROWSxCOLS"` string (which wins) or as
+    /// separate `"rows"`/`"cols"` keys; both routes are validated
+    /// through [`ArrayGeometry::checked`], so a zero or absurd dimension
+    /// is a parse error here, not a panic mid-run.
     pub fn apply_json(&mut self, j: &Json) -> Result<(), String> {
         let get_usize = |key: &str| j.get(key).and_then(Json::as_usize);
+        let mut rows = self.geometry.rows;
+        let mut cols = self.geometry.cols;
         if let Some(v) = get_usize("rows") {
-            self.rows = v;
+            rows = v;
         }
         if let Some(v) = get_usize("cols") {
-            self.cols = v;
+            cols = v;
         }
+        self.geometry = match j.get("geometry").and_then(Json::as_str) {
+            Some(v) => v.parse()?,
+            None => ArrayGeometry::checked(rows, cols)?,
+        };
         if let Some(v) = j.get("clock_ghz").and_then(Json::as_f64) {
             self.clock_ghz = v;
         }
@@ -174,14 +183,23 @@ impl RunConfig {
         self.apply_json(&j)
     }
 
-    /// Apply CLI overrides (`--rows`, `--cols`, `--seed`, …).
-    pub fn apply_args(&mut self, a: &Args) {
+    /// Apply CLI overrides (`--rows`, `--cols`, `--geometry`, `--seed`,
+    /// …).  A `--geometry=ROWSxCOLS` wins over `--rows`/`--cols`; every
+    /// route is validated so a degenerate shape fails here with a
+    /// did-you-mean-grade message instead of panicking mid-run.
+    pub fn apply_args(&mut self, a: &Args) -> Result<(), String> {
+        let mut rows = self.geometry.rows;
+        let mut cols = self.geometry.cols;
         if let Some(v) = a.get_usize("rows") {
-            self.rows = v;
+            rows = v;
         }
         if let Some(v) = a.get_usize("cols") {
-            self.cols = v;
+            cols = v;
         }
+        self.geometry = match a.get("geometry") {
+            Some(v) => v.parse()?,
+            None => ArrayGeometry::checked(rows, cols)?,
+        };
         if let Some(v) = a.get_u64("seed") {
             self.seed = v;
         }
@@ -201,6 +219,7 @@ impl RunConfig {
                 self.mode = NumericMode::Oracle;
             }
         }
+        Ok(())
     }
 }
 
@@ -229,6 +248,13 @@ pub struct ServeConfig {
     pub plan_cache_cap: usize,
     /// Routing policy lifted to the shard level.
     pub shard_policy: Policy,
+    /// Per-shard array geometry for a heterogeneous pool.  Empty means
+    /// every shard runs the [`RunConfig`] geometry; a shorter list
+    /// repeats (shard `s` gets entry `s % len`), so
+    /// `["256x64", "64x256", "128x128"]` tiles any shard count with a
+    /// tall/wide/square mix.  Pair with `shard_policy` `shape` to route
+    /// each request to its best-fitting shape (DESIGN.md §20).
+    pub shard_geometries: Vec<ArrayGeometry>,
     /// Queue depth at which batch-class requests are shed with an
     /// immediate rejection instead of queueing (0 disables shedding;
     /// interactive requests always queue up to `queue_cap`).
@@ -265,6 +291,7 @@ impl Default for ServeConfig {
             max_batch_rows: 512,
             plan_cache_cap: 64,
             shard_policy: Policy::LeastLoaded,
+            shard_geometries: Vec::new(),
             shed_watermark: 0,
             health_window: 8,
             health_fault_threshold: 3,
@@ -289,6 +316,16 @@ impl ServeConfig {
             max_batch_rows: 64,
             plan_cache_cap: 16,
             ..ServeConfig::default()
+        }
+    }
+
+    /// The geometry shard `shard` runs: its `shard_geometries` entry
+    /// (repeating), or the uniform `run_geom` when none are configured.
+    pub fn shard_geometry(&self, shard: usize, run_geom: ArrayGeometry) -> ArrayGeometry {
+        if self.shard_geometries.is_empty() {
+            run_geom
+        } else {
+            self.shard_geometries[shard % self.shard_geometries.len()]
         }
     }
 
@@ -332,6 +369,16 @@ impl ServeConfig {
         }
         if let Some(v) = j.get("shard_policy").and_then(Json::as_str) {
             self.shard_policy = v.parse()?;
+        }
+        if let Some(Json::Arr(items)) = j.get("shard_geometries") {
+            let mut gs = Vec::with_capacity(items.len());
+            for it in items {
+                let s = it.as_str().ok_or_else(|| {
+                    "shard_geometries entries must be 'ROWSxCOLS' strings".to_string()
+                })?;
+                gs.push(s.parse()?);
+            }
+            self.shard_geometries = gs;
         }
         if let Some(v) = get_usize("shed_watermark") {
             self.shed_watermark = v;
@@ -379,6 +426,9 @@ impl ServeConfig {
         if let Some(v) = a.get("shard-policy") {
             self.shard_policy = v.parse()?;
         }
+        if let Some(v) = a.get("shard-geometries") {
+            self.shard_geometries = crate::sa::geometry::parse_geometry_list(v)?;
+        }
         if let Some(v) = a.get_usize("shed-watermark") {
             self.shed_watermark = v;
         }
@@ -425,6 +475,11 @@ pub struct FleetConfig {
     pub plan_cache_cap: usize,
     /// Shard routing policy.
     pub shard_policy: Policy,
+    /// Per-shard array geometry, same semantics as
+    /// [`ServeConfig::shard_geometries`] (empty = uniform run geometry;
+    /// shorter lists repeat).  The DES mirrors the threaded pool's
+    /// shape-aware routing bit-for-bit when these match.
+    pub shard_geometries: Vec<ArrayGeometry>,
     /// Quarantine state-machine knobs (shared with the threaded board).
     pub health: HealthPolicy,
     /// Per-batch probability of a detected (ABFT-recovered) fault —
@@ -465,6 +520,7 @@ impl Default for FleetConfig {
             max_batch_rows: 64,
             plan_cache_cap: 128,
             shard_policy: Policy::RoundRobin,
+            shard_geometries: Vec::new(),
             health: HealthPolicy::default(),
             fault_rate: 0.0,
             fault_drop_rate: 0.0,
@@ -500,6 +556,17 @@ impl FleetConfig {
             models: vec![ModelShape { k: 24, n: 16 }, ModelShape { k: 32, n: 8 }],
             tenants: vec![TenantSpec::poisson("smoke", 400.0)],
             ..FleetConfig::default()
+        }
+    }
+
+    /// The geometry shard `shard` runs (see
+    /// [`ServeConfig::shard_geometry`] — identical semantics, which is
+    /// what keeps the DES differentially pinned to the threaded pool).
+    pub fn shard_geometry(&self, shard: usize, run_geom: ArrayGeometry) -> ArrayGeometry {
+        if self.shard_geometries.is_empty() {
+            run_geom
+        } else {
+            self.shard_geometries[shard % self.shard_geometries.len()]
         }
     }
 
@@ -539,6 +606,16 @@ impl FleetConfig {
         }
         if let Some(v) = j.get("shard_policy").and_then(Json::as_str) {
             self.shard_policy = v.parse()?;
+        }
+        if let Some(Json::Arr(items)) = j.get("shard_geometries") {
+            let mut gs = Vec::with_capacity(items.len());
+            for it in items {
+                let s = it.as_str().ok_or_else(|| {
+                    "shard_geometries entries must be 'ROWSxCOLS' strings".to_string()
+                })?;
+                gs.push(s.parse()?);
+            }
+            self.shard_geometries = gs;
         }
         if let Some(v) = get_usize("health_window") {
             self.health.window = v.max(1);
@@ -616,6 +693,9 @@ impl FleetConfig {
         if let Some(v) = a.get("shard-policy") {
             self.shard_policy = v.parse()?;
         }
+        if let Some(v) = a.get("shard-geometries") {
+            self.shard_geometries = crate::sa::geometry::parse_geometry_list(v)?;
+        }
         if let Some(v) = a.get_u64("horizon") {
             self.horizon = v;
         }
@@ -666,7 +746,7 @@ mod tests {
     #[test]
     fn paper_defaults() {
         let c = RunConfig::paper();
-        assert_eq!((c.rows, c.cols), (128, 128));
+        assert_eq!(c.geometry, ArrayGeometry::PAPER);
         assert_eq!(c.in_fmt, FpFormat::BF16);
         assert_eq!(c.out_fmt, FpFormat::FP32);
         assert_eq!(c.chain(), ChainCfg::new(FpFormat::BF16, FpFormat::FP32));
@@ -682,7 +762,7 @@ mod tests {
         )
         .unwrap();
         c.apply_json(&j).unwrap();
-        assert_eq!((c.rows, c.cols), (16, 8));
+        assert_eq!(c.geometry, ArrayGeometry::new(16, 8));
         assert_eq!(c.in_fmt, FpFormat::FP8E4M3);
         assert_eq!(c.mode, NumericMode::CycleAccurate);
         assert_eq!(c.workers, 3);
@@ -796,6 +876,7 @@ mod tests {
         let cli = Cli::new("t", "t")
             .opt("rows", "", None)
             .opt("cols", "", None)
+            .opt("geometry", "", None)
             .opt("seed", "", None)
             .opt("workers", "", None)
             .opt("threads", "", None)
@@ -810,11 +891,72 @@ mod tests {
             ])
             .unwrap();
         let mut c = RunConfig::paper();
-        c.apply_args(&a);
-        assert_eq!(c.rows, 4);
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.geometry, ArrayGeometry::new(4, 128));
         assert_eq!(c.seed, 9);
         assert_eq!(c.threads, 3);
         assert_eq!(c.mode, NumericMode::CycleAccurate);
+        // --geometry wins over --rows/--cols and parses the RxC form.
+        let a = cli.parse(&["--rows=4".into(), "--geometry=256x64".into()]).unwrap();
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.geometry, ArrayGeometry::new(256, 64));
+    }
+
+    #[test]
+    fn degenerate_geometry_is_a_parse_error_not_a_panic() {
+        use crate::util::cli::Cli;
+        let cli = Cli::new("t", "t")
+            .opt("rows", "", None)
+            .opt("cols", "", None)
+            .opt("geometry", "", None);
+        let mut c = RunConfig::paper();
+        // CLI --rows=0: rejected with the geometry diagnostic.
+        let a = cli.parse(&["--rows=0".into()]).unwrap();
+        let err = c.apply_args(&a).unwrap_err();
+        assert!(err.contains("rows must be at least 1"), "{err}");
+        assert_eq!(c.geometry, ArrayGeometry::PAPER, "unchanged on error");
+        // CLI --geometry with a typo'd separator: did-you-mean.
+        let a = cli.parse(&["--geometry=64X256".into()]).unwrap();
+        let err = c.apply_args(&a).unwrap_err();
+        assert!(err.contains("did you mean '64x256'?"), "{err}");
+        // JSON cols: 0 and absurd rows are parse errors too.
+        let j = Json::parse(r#"{"cols": 0}"#).unwrap();
+        assert!(c.apply_json(&j).unwrap_err().contains("cols must be at least 1"));
+        let j = Json::parse(r#"{"rows": 1000000}"#).unwrap();
+        assert!(c.apply_json(&j).unwrap_err().contains("exceeds"));
+        let j = Json::parse(r#"{"geometry": "32x16"}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.geometry, ArrayGeometry::new(32, 16));
+    }
+
+    #[test]
+    fn shard_geometries_parse_and_repeat() {
+        let mut s = ServeConfig::default();
+        let j = Json::parse(r#"{"shard_geometries": ["256x64", "64x256", "128x128"]}"#).unwrap();
+        s.apply_json(&j).unwrap();
+        assert_eq!(s.shard_geometries.len(), 3);
+        let run = ArrayGeometry::new(8, 8);
+        assert_eq!(s.shard_geometry(0, run), ArrayGeometry::new(256, 64));
+        assert_eq!(s.shard_geometry(4, run), ArrayGeometry::new(64, 256), "list repeats");
+        let bad = Json::parse(r#"{"shard_geometries": ["256x64", "0x8"]}"#).unwrap();
+        assert!(s.apply_json(&bad).is_err());
+
+        let mut f = FleetConfig::smoke();
+        assert_eq!(f.shard_geometry(3, run), run, "empty list = uniform run geometry");
+        let j = Json::parse(r#"{"shard_geometries": ["16x4", "4x16"]}"#).unwrap();
+        f.apply_json(&j).unwrap();
+        assert_eq!(f.shard_geometry(2, run), ArrayGeometry::new(16, 4));
+
+        use crate::util::cli::Cli;
+        let cli = Cli::new("t", "t").opt("shard-geometries", "", None);
+        let a = cli.parse(&["--shard-geometries=32x8,8x32".into()]).unwrap();
+        f.apply_args(&a).unwrap();
+        assert_eq!(
+            f.shard_geometries,
+            vec![ArrayGeometry::new(32, 8), ArrayGeometry::new(8, 32)]
+        );
+        let bad = cli.parse(&["--shard-geometries=32x8,8".into()]).unwrap();
+        assert!(f.apply_args(&bad).is_err());
     }
 
     #[test]

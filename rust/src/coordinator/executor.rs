@@ -791,7 +791,7 @@ mod tests {
         cfg.mode = mode;
         let shape = GemmShape::new(6, 20, 10);
         let data = GemmData::integer_valued(shape, FpFormat::BF16, 42);
-        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
         let mut ex = Executor::new(cfg, PipelineKind::Skewed);
         ex.fault = fault;
         let arc = Arc::new(data.clone());
@@ -860,7 +860,7 @@ mod tests {
         let chain = cfg.chain();
         let shape = GemmShape::new(2, 8, 8); // single tile on the 8×8 array
         let data = Arc::new(GemmData::integer_valued(shape, FpFormat::BF16, 5));
-        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
         assert_eq!(plan.tile_count(), 1);
         let mut pool = WorkerPool::with_fault(
             1,
@@ -889,7 +889,7 @@ mod tests {
         for seed in [1u64, 2, 3] {
             let shape = GemmShape::new(5, 20, 9);
             let data = Arc::new(GemmData::cnn_like(shape, FpFormat::BF16, seed));
-            let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+            let plan = TilePlan::for_geometry(shape, cfg.geometry);
             let pooled = pool
                 .run_gemm(chain, NumericMode::Oracle, PipelineKind::Skewed, &data, &plan, true)
                 .expect("pooled run");
@@ -907,13 +907,12 @@ mod tests {
         // cycle-accurate mode — the configuration that used to fall back
         // to the closed-form model (ISSUE 1 headline case).
         let mut cfg = RunConfig::small();
-        cfg.rows = 128;
-        cfg.cols = 128;
+        cfg.geometry = crate::sa::geometry::ArrayGeometry::new(128, 128);
         cfg.mode = NumericMode::CycleAccurate;
         let chain = cfg.chain();
         let shape = GemmShape::new(5, 128, 128);
         let data = GemmData::cnn_like(shape, FpFormat::BF16, 0x128);
-        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
         assert_eq!(plan.tile_count(), 1);
         let ex = Executor::new(cfg, PipelineKind::Skewed);
         let out = ex.run(&Arc::new(data.clone()), &plan);

@@ -72,7 +72,7 @@ impl Coordinator {
     /// against the Fig. 3(b) reference (the numerics are bit-identical
     /// between all registered kinds by construction).
     pub fn run_gemm(&self, kind: PipelineKind, data: &Arc<GemmData>) -> GemmRunResult {
-        let plan = TilePlan::new(data.shape, self.cfg.rows, self.cfg.cols);
+        let plan = TilePlan::for_geometry(data.shape, self.cfg.geometry);
         let outcome = Executor::new(self.cfg.clone(), kind).run(data, &plan);
         let comparison = LayerComparison::evaluate_pair(
             &self.cfg.timing(),

@@ -6,7 +6,14 @@
 //! * [`Policy::RoundRobin`] — static rotation;
 //! * [`Policy::LeastLoaded`] — live in-flight counts (work released on
 //!   completion), which keeps slow tiles (edge tiles, big M) from
-//!   starving a queue.
+//!   starving a queue;
+//! * [`Policy::ShapeAware`] — at the *shard* level, score each batch's
+//!   GemmShape against every shard's [`ArrayGeometry`] and route to the
+//!   predicted-fastest fit (`serve::policy::best_fit_shard`).  Inside a
+//!   shard's uniform worker pool there is no shape to exploit, so this
+//!   router treats it as least-loaded.
+//!
+//! [`ArrayGeometry`]: crate::sa::geometry::ArrayGeometry
 
 use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -17,6 +24,11 @@ use std::sync::Arc;
 pub enum Policy {
     RoundRobin,
     LeastLoaded,
+    /// Route each batch to the shard whose geometry streams it in the
+    /// fewest predicted cycles (deterministic: no load term, ties break
+    /// toward the lower shard index), so the fleet DES replays the
+    /// threaded server's picks request-for-request.
+    ShapeAware,
 }
 
 impl std::str::FromStr for Policy {
@@ -26,7 +38,8 @@ impl std::str::FromStr for Policy {
         match s {
             "rr" | "round_robin" | "round-robin" => Ok(Policy::RoundRobin),
             "ll" | "least_loaded" | "least-loaded" => Ok(Policy::LeastLoaded),
-            other => Err(format!("unknown policy '{other}' (rr|ll)")),
+            "shape" | "shape_aware" | "shape-aware" => Ok(Policy::ShapeAware),
+            other => Err(format!("unknown policy '{other}' (rr|ll|shape)")),
         }
     }
 }
@@ -36,6 +49,7 @@ impl std::fmt::Display for Policy {
         match self {
             Policy::RoundRobin => write!(f, "round_robin"),
             Policy::LeastLoaded => write!(f, "least_loaded"),
+            Policy::ShapeAware => write!(f, "shape_aware"),
         }
     }
 }
@@ -83,7 +97,10 @@ impl Router {
                 }
                 w
             }
-            Policy::LeastLoaded => {
+            // Shape-awareness lives at the shard level (the pool calls
+            // `dispatch_to` with the scored pick); over uniform workers
+            // it degenerates to least-loaded.
+            Policy::LeastLoaded | Policy::ShapeAware => {
                 let mut best = None;
                 let mut best_load = usize::MAX;
                 for (i, c) in self.inflight.iter().enumerate() {
@@ -99,6 +116,14 @@ impl Router {
                 best.expect("at least one dispatch candidate")
             }
         };
+        self.inflight[w].fetch_add(1, Ordering::Relaxed);
+        w
+    }
+
+    /// Account a dispatch to an externally chosen worker (the
+    /// shape-aware shard pick, scored outside the router) so in-flight
+    /// bookkeeping and `complete` stay symmetric with `dispatch`.
+    pub fn dispatch_to(&self, w: usize) -> usize {
         self.inflight[w].fetch_add(1, Ordering::Relaxed);
         w
     }
@@ -185,8 +210,24 @@ mod tests {
     fn policy_parses_from_str() {
         assert_eq!("rr".parse::<Policy>().unwrap(), Policy::RoundRobin);
         assert_eq!("least_loaded".parse::<Policy>().unwrap(), Policy::LeastLoaded);
+        assert_eq!("shape".parse::<Policy>().unwrap(), Policy::ShapeAware);
+        assert_eq!("shape-aware".parse::<Policy>().unwrap(), Policy::ShapeAware);
         assert!("nope".parse::<Policy>().is_err());
         assert_eq!(Policy::LeastLoaded.to_string(), "least_loaded");
+        assert_eq!(Policy::ShapeAware.to_string(), "shape_aware");
+    }
+
+    #[test]
+    fn external_pick_keeps_inflight_accounting_symmetric() {
+        let r = Router::new(Policy::ShapeAware, 3);
+        assert_eq!(r.dispatch_to(2), 2);
+        assert_eq!(r.dispatch_to(2), 2);
+        assert_eq!(r.load(2), 2);
+        r.complete(2);
+        assert_eq!(r.load(2), 1);
+        // Worker-level dispatch under ShapeAware is least-loaded.
+        assert_eq!(r.dispatch(), 0);
+        assert_eq!(r.dispatch(), 1);
     }
 
     #[test]

@@ -247,7 +247,7 @@ mod tests {
         cfg.mode = NumericMode::Oracle;
         let shape = GemmShape::new(5, 20, 7);
         let data = GemmData::cnn_like(shape, FpFormat::BF16, 11);
-        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
         let ex = Executor::new(cfg.clone(), PipelineKind::Baseline3b);
         let out = ex.run(&Arc::new(data.clone()), &plan);
         (cfg, data, plan, out.y)
@@ -289,7 +289,7 @@ mod tests {
         let cfg = RunConfig::small();
         let shape = GemmShape::new(5, 20, 12); // 3 K-tiles × 2 N-tiles on 8×8
         let data = GemmData::cnn_like(shape, FpFormat::BF16, 21);
-        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
         for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
             // Whole-plan coverage routes through the streaming simulator
             // and checks the assembled M×N output + layer composition.
@@ -315,7 +315,7 @@ mod tests {
         let cfg = RunConfig::small();
         let shape = GemmShape::new(4, 16, 6);
         let data = GemmData::integer_valued(shape, FpFormat::BF16, 31);
-        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
         let mut bad = data.clone();
         bad.w[3][2] = FpFormat::BF16.from_f64(99.0);
         let y_good =
@@ -352,7 +352,7 @@ mod tests {
         cfg.workers = 4;
         let shape = GemmShape::new(3, 128, 128);
         let data = GemmData::cnn_like(shape, FpFormat::BF16, 0x2023);
-        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
         assert_eq!(plan.tile_count(), 1);
         for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
             let rep = verify_tiles_cycle_sim(&cfg.chain(), kind, &plan, &data, 1, cfg.workers);

@@ -29,6 +29,7 @@
 use crate::arith::fma::ChainCfg;
 use crate::pe::spec::{clog2, Block, PipelineSpec};
 use crate::pe::PipelineKind;
+use crate::sa::geometry::ArrayGeometry;
 
 /// Gate-count coefficients (NAND2-equivalents).  See module docs.
 #[derive(Clone, Copy, Debug)]
@@ -132,12 +133,44 @@ impl AreaModel {
         }
     }
 
-    /// Whole-array area: R×C PEs plus one rounding unit per column.
+    /// One South-edge rounding unit (per column): the wide adder tail
+    /// plus the final normalizing shifter at the column output rate.
+    pub fn round_unit_ge(&self) -> f64 {
+        self.coeffs.ka * self.cfg.window as f64
+            + self.coeffs.ksh * self.cfg.window as f64 * clog2(self.cfg.window)
+    }
+
+    /// One West-edge injection unit (per row): the activation staging
+    /// register feeding the row plus the skew-alignment mux/control.
+    /// Kind-independent — skew is realized inside the PE pipeline, the
+    /// edge only stages one input word per row per cycle.
+    pub fn inject_unit_ge(&self) -> f64 {
+        let in_bits = 1 + self.cfg.in_fmt.exp_bits + self.cfg.in_fmt.man_bits;
+        self.coeffs.kreg * in_bits as f64 + 0.25 * self.coeffs.misc
+    }
+
+    /// The PE plane alone: scales with `rows * cols`.
+    pub fn pe_plane_area(&self, kind: PipelineKind, geom: ArrayGeometry) -> f64 {
+        self.pe_area(kind).total() * geom.pe_count() as f64
+    }
+
+    /// Edge logic alone: West-edge injection units scale with `rows`,
+    /// South-edge rounding units with `cols` — the `R + C` perimeter
+    /// term that separates a tall array's cost from a wide one's at
+    /// equal PE budget.  Kind-independent.
+    pub fn edge_area(&self, geom: ArrayGeometry) -> f64 {
+        self.inject_unit_ge() * geom.rows as f64 + self.round_unit_ge() * geom.cols as f64
+    }
+
+    /// Whole-array area for a geometry: the R×C PE plane plus the R+C
+    /// edge logic.
+    pub fn array_area_geom(&self, kind: PipelineKind, geom: ArrayGeometry) -> f64 {
+        self.pe_plane_area(kind, geom) + self.edge_area(geom)
+    }
+
+    /// Whole-array area (loose-dimension convenience wrapper).
     pub fn array_area(&self, kind: PipelineKind, rows: usize, cols: usize) -> f64 {
-        let pe = self.pe_area(kind).total();
-        let round_unit = self.coeffs.ka * self.cfg.window as f64
-            + self.coeffs.ksh * self.cfg.window as f64 * clog2(self.cfg.window);
-        pe * (rows * cols) as f64 + round_unit * cols as f64
+        self.array_area_geom(kind, ArrayGeometry::new(rows, cols))
     }
 
     /// Area overhead ratio of the skewed over the baseline design.
@@ -191,6 +224,37 @@ mod tests {
         let a128 = m.array_area(PipelineKind::Baseline3b, 128, 128);
         let ratio = a128 / a64;
         assert!((ratio - 4.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn edge_logic_scales_with_perimeter_not_pe_count() {
+        // Equal PE budget, different aspect: the PE plane is identical,
+        // only the R+C edge term moves — and it moves exactly by the
+        // unit costs times the dimension swap.
+        let m = AreaModel::new(CFG);
+        let tall = ArrayGeometry::new(256, 64);
+        let wide = ArrayGeometry::new(64, 256);
+        assert_eq!(
+            m.pe_plane_area(PipelineKind::Skewed, tall),
+            m.pe_plane_area(PipelineKind::Skewed, wide)
+        );
+        let d_edge = m.edge_area(tall) - m.edge_area(wide);
+        let expected = (m.inject_unit_ge() - m.round_unit_ge()) * (256 - 64) as f64;
+        assert!((d_edge - expected).abs() < 1e-9, "{d_edge} vs {expected}");
+        // Edge logic stays a small correction on any sane aspect.
+        let total = m.array_area_geom(PipelineKind::Skewed, tall);
+        assert!(m.edge_area(tall) / total < 0.01, "edge fraction too large");
+    }
+
+    #[test]
+    fn rectangular_overhead_stays_in_the_paper_band() {
+        // The §IV band is a per-PE property; perimeter logic must not
+        // drag a tall or wide array out of it.
+        let m = AreaModel::new(CFG);
+        for (r, c) in [(256, 64), (64, 256), (512, 32), (1024, 16)] {
+            let oh = m.overhead(r, c);
+            assert!((0.08..=0.10).contains(&oh), "{r}x{c}: overhead {oh:.4}");
+        }
     }
 
     #[test]

@@ -121,20 +121,31 @@ impl PowerModel {
         }
     }
 
-    /// Whole-array power (µW) at activity `alpha`; includes the per-
-    /// column rounding units at the South edge (counted as adder+shifter
-    /// at the column output rate).
-    pub fn array_power(&self, kind: PipelineKind, rows: usize, cols: usize, alpha: f64) -> f64 {
+    /// Whole-array power (µW) at activity `alpha` for a geometry;
+    /// includes the edge logic (West-edge injection units scaling with
+    /// R, South-edge rounding units with C) as the residual of the area
+    /// model over the PE plane, weighted at the adder toggle rate.
+    pub fn array_power_geom(
+        &self,
+        kind: PipelineKind,
+        geom: crate::sa::geometry::ArrayGeometry,
+        alpha: f64,
+    ) -> f64 {
         let pe = self.pe_power(kind);
-        let round_ge = self.area.array_area(kind, rows, cols)
-            - self.area.pe_area(kind).total() * (rows * cols) as f64;
+        let edge_ge =
+            self.area.array_area_geom(kind, geom) - self.area.pe_plane_area(kind, geom);
         let a = alpha.clamp(0.0, 1.0);
-        let round = round_ge
+        let edge = edge_ge
             * self.coeffs.uw_per_ge
             * (self.coeffs.leak
                 + self.coeffs.sw_add
                     * (self.coeffs.fixed_dyn + (1.0 - self.coeffs.fixed_dyn) * a));
-        pe.at(alpha) * (rows * cols) as f64 + round
+        pe.at(alpha) * geom.pe_count() as f64 + edge
+    }
+
+    /// Whole-array power (loose-dimension convenience wrapper).
+    pub fn array_power(&self, kind: PipelineKind, rows: usize, cols: usize, alpha: f64) -> f64 {
+        self.array_power_geom(kind, crate::sa::geometry::ArrayGeometry::new(rows, cols), alpha)
     }
 
     /// Average-power overhead of skewed over baseline at activity `alpha`

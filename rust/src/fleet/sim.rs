@@ -29,11 +29,13 @@ use crate::obs::{
     Counter, Gauge, Hist, HistSnapshot, Log2Histogram, MetricsRegistry, MetricsSnapshot,
 };
 use crate::pe::PipelineKind;
+use crate::sa::geometry::ArrayGeometry;
 use crate::sa::GemmShape;
 use crate::serve::cache::{CacheStats, PlanCache, PlanKey};
 use crate::serve::health::HealthBoard;
 use crate::serve::policy;
 use crate::serve::request::{DeadlineClass, RequestQueue};
+use crate::timing::model::TimingConfig;
 use crate::util::mini_json::Json;
 use crate::util::rng::Rng;
 use std::collections::{HashMap, VecDeque};
@@ -177,6 +179,9 @@ struct ShardSim {
     /// router's live signal, incremented at pick time like the
     /// threaded router's acquire).
     inflight: u64,
+    /// Executed service cycles, summed at completion (per-geometry
+    /// utilization reporting; not part of the fingerprint).
+    busy: u64,
 }
 
 /// The batcher's state machine (the threaded `Batcher::next_batch`
@@ -245,6 +250,15 @@ pub struct FleetResult {
     /// Array energy of every dispatched batch (µJ, from the power
     /// model — reported, not part of the fingerprint).
     pub energy_uj: f64,
+    /// Total quoted stream cycles across every dispatched batch — the
+    /// fleet's aggregate array-busy demand (the hetero-vs-uniform
+    /// bench's second axis, alongside p99 latency).
+    pub stream_cycles: u64,
+    /// Executed service cycles per shard, index-aligned with
+    /// `shard_geoms` (utilization = busy / wall_cycles).
+    pub shard_busy: Vec<u64>,
+    /// The per-shard array geometry the run was configured with.
+    pub shard_geoms: Vec<ArrayGeometry>,
     pub fingerprint: u64,
     /// Per-request outcomes, capped at `FleetConfig::record_limit`.
     pub records: Vec<RequestRecord>,
@@ -316,12 +330,33 @@ impl FleetResult {
                 })
                 .collect(),
         );
+        let shards = Json::Arr(
+            self.shard_geoms
+                .iter()
+                .zip(&self.shard_busy)
+                .map(|(g, &b)| {
+                    Json::obj()
+                        .set("geometry", Json::Str(g.to_string()))
+                        .set("busy_cycles", Json::Num(b as f64))
+                        .set(
+                            "utilization",
+                            Json::Num(if self.wall_cycles == 0 {
+                                0.0
+                            } else {
+                                b as f64 / self.wall_cycles as f64
+                            }),
+                        )
+                })
+                .collect(),
+        );
         Json::obj()
             .set("counts", counts)
             .set("batches", Json::Num(self.batches as f64))
             .set("batched_rows", Json::Num(self.batched_rows as f64))
             .set("max_batch", Json::Num(self.max_batch as f64))
             .set("wall_cycles", Json::Num(self.wall_cycles as f64))
+            .set("stream_cycles", Json::Num(self.stream_cycles as f64))
+            .set("shards", shards)
             .set("latency", latency)
             .set("goodput_rps", Json::Num(self.goodput_rps(clock_ghz)))
             .set("energy_uj", Json::Num(self.energy_uj))
@@ -340,6 +375,11 @@ impl FleetResult {
 pub struct FleetSim {
     run: RunConfig,
     cfg: FleetConfig,
+    /// Per-shard array geometry ([`FleetConfig::shard_geometry`]);
+    /// uniform fleets repeat the run geometry.  Every batch is planned
+    /// — and its service time quoted — under the geometry of the shard
+    /// that executes it.
+    geoms: Vec<ArrayGeometry>,
     queue: EventQueue,
     fifo: VecDeque<SimReq>,
     front_bypassed: usize,
@@ -356,6 +396,7 @@ pub struct FleetSim {
     pmodel: PowerModel,
     energy_memo: HashMap<PlanKey, f64>,
     energy_uj: f64,
+    stream_cycles: u64,
     outcomes: Vec<RequestRecord>,
     autoscale: Vec<AutoscalePoint>,
     batched_rows: u64,
@@ -421,9 +462,12 @@ impl FleetSim {
         let h_service = registry.histogram("fleet_service_cycles");
         let active = cfg.shards.clamp(cfg.min_shards, cfg.max_shards);
         g_active.set(active as u64);
+        let geoms: Vec<ArrayGeometry> =
+            (0..cfg.max_shards).map(|s| cfg.shard_geometry(s, run.geometry)).collect();
         FleetSim {
             run: run.clone(),
             cfg: cfg.clone(),
+            geoms,
             queue: EventQueue::new(),
             fifo: VecDeque::new(),
             front_bypassed: 0,
@@ -445,6 +489,7 @@ impl FleetSim {
             pmodel: PowerModel::new(AreaModel::new(run.chain())),
             energy_memo: HashMap::new(),
             energy_uj: 0.0,
+            stream_cycles: 0,
             outcomes: Vec::new(),
             autoscale: Vec::new(),
             batched_rows: 0,
@@ -789,10 +834,12 @@ impl FleetSim {
         }
     }
 
-    /// Close a batch: quote its service time off the plan cache, draw
-    /// its fault/drop outcome, route it (health-tick first, exactly
-    /// like the threaded dispatcher), and deliver.  Returns `false`
-    /// when the chosen shard is saturated and the batcher blocked.
+    /// Close a batch: route it (health-tick first, exactly like the
+    /// threaded dispatcher — shape-aware routing scores each eligible
+    /// shard's geometry off the shared plan cache), quote its service
+    /// time under the *chosen* shard's geometry, draw its fault/drop
+    /// outcome, and deliver.  Returns `false` when the chosen shard is
+    /// saturated and the batcher blocked.
     fn dispatch(
         &mut self,
         t: u64,
@@ -802,14 +849,65 @@ impl FleetSim {
         parts: Vec<SimReq>,
     ) -> bool {
         let shape = GemmShape::new(rows, self.cfg.models[model].k, self.cfg.models[model].n);
-        let key =
-            PlanKey { shape, fmt: self.run.in_fmt, kind, rows: self.run.rows, cols: self.run.cols };
-        let (plan, _hit) = self.cache.get(key);
+        self.health.tick();
+        let excluded = self.health.excluded();
+        let mut eligible: Vec<usize> = (0..self.active).filter(|s| !excluded.contains(s)).collect();
+        if eligible.is_empty() {
+            // Every *active* shard is quarantined (the board's global
+            // void rule may not fire when inactive shards are healthy):
+            // keep serving, like the router's degraded-pool contract.
+            eligible = (0..self.active).collect();
+        }
+        let in_fmt = self.run.in_fmt;
+        let key_for = |geom: ArrayGeometry| PlanKey { shape, fmt: in_fmt, kind, geom };
+        let (shard, plan) = match self.cfg.shard_policy {
+            Policy::RoundRobin => {
+                let s = loop {
+                    let s = (self.rr_next % self.active as u64) as usize;
+                    self.rr_next += 1;
+                    if eligible.contains(&s) {
+                        break s;
+                    }
+                };
+                (s, self.cache.get(key_for(self.geoms[s])).0)
+            }
+            Policy::LeastLoaded => {
+                let s = *eligible
+                    .iter()
+                    .min_by_key(|&&s| (self.shards[s].inflight, s))
+                    .expect("eligible is non-empty");
+                (s, self.cache.get(key_for(self.geoms[s])).0)
+            }
+            Policy::ShapeAware => {
+                // Probe the geometry-keyed plan cache once per eligible
+                // shard, in index order (the threaded dispatcher's exact
+                // probe sequence, so cache stats agree too); the pick is
+                // the deterministic best fit — min predicted cycles,
+                // ties toward the lower index.
+                let probes: Vec<_> = eligible
+                    .iter()
+                    .map(|&s| (s, self.cache.get(key_for(self.geoms[s])).0))
+                    .collect();
+                let best = policy::best_fit_shard(
+                    probes
+                        .iter()
+                        .map(|&(s, ref p)| (s, p.stream_cycles(self.run.double_buffer))),
+                )
+                .expect("eligible is non-empty");
+                probes.into_iter().find(|&(s, _)| s == best).expect("best came from the probes")
+            }
+        };
         let service = plan.stream_cycles(self.run.double_buffer);
+        let key = key_for(self.geoms[shard]);
         let energy = match self.energy_memo.get(&key) {
             Some(e) => *e,
             None => {
-                let e = layer_energy(&self.run.timing(), &self.pmodel, kind, &plan.plan).energy_uj;
+                let timing = TimingConfig::for_geometry(
+                    self.geoms[shard],
+                    self.run.clock_ghz,
+                    self.run.double_buffer,
+                );
+                let e = layer_energy(&timing, &self.pmodel, kind, &plan.plan).energy_uj;
                 self.energy_memo.insert(key, e);
                 e
             }
@@ -826,29 +924,8 @@ impl FleetSim {
         self.batched_rows += rows as u64;
         self.max_batch = self.max_batch.max(parts.len());
         self.h_service.record(service);
+        self.stream_cycles += service;
         let batch = ReadyBatch { parts, service, faults, drop };
-        self.health.tick();
-        let excluded = self.health.excluded();
-        let mut eligible: Vec<usize> = (0..self.active).filter(|s| !excluded.contains(s)).collect();
-        if eligible.is_empty() {
-            // Every *active* shard is quarantined (the board's global
-            // void rule may not fire when inactive shards are healthy):
-            // keep serving, like the router's degraded-pool contract.
-            eligible = (0..self.active).collect();
-        }
-        let shard = match self.cfg.shard_policy {
-            Policy::RoundRobin => loop {
-                let s = (self.rr_next % self.active as u64) as usize;
-                self.rr_next += 1;
-                if eligible.contains(&s) {
-                    break s;
-                }
-            },
-            Policy::LeastLoaded => *eligible
-                .iter()
-                .min_by_key(|&&s| (self.shards[s].inflight, s))
-                .expect("eligible is non-empty"),
-        };
         self.shards[shard].inflight += 1;
         self.deliver(t, shard, batch)
     }
@@ -897,6 +974,7 @@ impl FleetSim {
         }
         self.health.record(shard, batch.faults + u64::from(batch.drop));
         self.shards[shard].inflight -= 1;
+        self.shards[shard].busy += batch.service;
         if let Some(next) = self.shards[shard].mailbox.pop_front() {
             self.queue.push(t + next.service, Event::ShardDone { shard });
             self.shards[shard].running = Some(next);
@@ -970,6 +1048,9 @@ impl FleetSim {
             final_active: self.active,
             quarantines: self.health.quarantine_counts().iter().sum(),
             energy_uj: self.energy_uj,
+            stream_cycles: self.stream_cycles,
+            shard_busy: self.shards.iter().map(|s| s.busy).collect(),
+            shard_geoms: self.geoms.clone(),
             fingerprint: fingerprint(&self.outcomes),
             records: self.outcomes.into_iter().take(self.cfg.record_limit).collect(),
             metrics: snap,
@@ -1111,6 +1192,59 @@ mod tests {
         assert!(r.failed > 0);
         assert!(r.quarantines > 0, "all-faulty shards must hit quarantine");
         assert!(r.accounting_balanced());
+    }
+
+    #[test]
+    fn shape_aware_hetero_routes_each_model_to_its_best_geometry() {
+        use crate::fleet::arrival::ModelShape;
+        let run = RunConfig::small();
+        let mut cfg = base_cfg();
+        cfg.shards = 2;
+        cfg.min_shards = 2;
+        cfg.max_shards = 2;
+        cfg.shard_policy = Policy::ShapeAware;
+        cfg.shard_geometries = vec![ArrayGeometry::new(16, 4), ArrayGeometry::new(4, 16)];
+        cfg.models = vec![ModelShape { k: 64, n: 4 }, ModelShape { k: 4, n: 64 }];
+        // Alternate a reduction-deep model (K≫N: wants the tall array)
+        // and an output-wide one (N≫K: wants the wide array), spaced so
+        // nothing queues — routing, not congestion, decides the shard.
+        let requests: Vec<TraceReq> = (0..8)
+            .map(|i| TraceReq {
+                at: i as u64 * 2_000,
+                model: i % 2,
+                rows: 2,
+                kind: PipelineKind::Skewed,
+                class: DeadlineClass::Interactive,
+            })
+            .collect();
+        cfg.tenants = vec![TenantSpec {
+            arrival: ArrivalSpec::Trace { requests },
+            ..TenantSpec::poisson("mixed", 1.0)
+        }];
+        let r = FleetSim::simulate(&run, &cfg);
+        assert_eq!(r.served, 8);
+        let mut services = [0u64; 2];
+        for (i, rec) in r.records.iter().enumerate() {
+            let want = i % 2; // tall shard 0 for model 0, wide shard 1 for model 1
+            assert_eq!(rec.shard, Some(want), "request {i} routed by shape");
+            services[want] = rec.service;
+        }
+        assert!(services[0] > 0 && services[1] > 0);
+        assert_eq!(r.shard_geoms[..2], [ArrayGeometry::new(16, 4), ArrayGeometry::new(4, 16)]);
+        assert_eq!(r.stream_cycles, 4 * services[0] + 4 * services[1]);
+        assert_eq!(r.shard_busy[0], 4 * services[0], "busy cycles follow the routed batches");
+        assert_eq!(r.shard_busy[1], 4 * services[1]);
+        assert!(r.accounting_balanced());
+    }
+
+    #[test]
+    fn uniform_fleet_reports_run_geometry_per_shard() {
+        let run = RunConfig::small();
+        let r = FleetSim::simulate(&run, &base_cfg());
+        assert!(r.shard_geoms.iter().all(|g| *g == run.geometry));
+        // A drained run executes every dispatched batch, so per-shard
+        // busy cycles sum to the total quoted stream cycles.
+        assert_eq!(r.shard_busy.iter().sum::<u64>(), r.stream_cycles);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! skewsa ablation    # per-organisation stage delays + latency
 //! skewsa formats     # Fig. 1 formats + delay inversion
 //! skewsa sweep       # design-space sweep: array size x format
+//! skewsa geometry    # aspect-ratio sweep at a fixed PE budget
 //! skewsa run         # coordinate a GEMM end-to-end (verify + report)
 //! skewsa serve       # multi-tenant serving: batching + cache + shards
 //! skewsa fleet       # fleet-scale DES: virtual-clock serving, autoscale
@@ -46,6 +47,14 @@ fn cli() -> Cli {
     )
     .opt("rows", "array rows (default: config / 128)", None)
     .opt("cols", "array columns (default: config / 128)", None)
+    .opt("geometry", "array geometry ROWSxCOLS, e.g. 256x64 (wins over --rows/--cols)", None)
+    .opt(
+        "shard-geometries",
+        "serve/fleet: per-shard geometry list, e.g. 256x64,64x256,128x128 (repeats)",
+        None,
+    )
+    .opt("pe-budget", "geometry: PE budget for the aspect sweep (default: rows*cols)", None)
+    .opt("max-aspect", "geometry: max rows/cols aspect ratio in the sweep", Some("4"))
     .opt("seed", "workload RNG seed", None)
     .opt("workers", "coordinator worker threads", None)
     .opt("threads", "tile-parallel simulation threads (default: host parallelism)", None)
@@ -69,9 +78,9 @@ fn cli() -> Cli {
     .opt("clients", "serve: closed-loop client threads", Some("4"))
     .opt("requests", "serve: requests per client", Some("32"))
     .opt("interactive", "serve: interactive request fraction", Some("0.25"))
-    .opt("net", "serve: model set mobilenet|resnet50|mix", Some("mix"))
+    .opt("net", "serve: model set mobilenet|resnet50|decode|mix", Some("mix"))
     .opt("cap", "serve: K/N clamp for served layers", Some("128"))
-    .opt("workload", "precision/stream: mobilenet|resnet50", Some("mobilenet"))
+    .opt("workload", "precision/stream/geometry: mobilenet|resnet50|decode", Some("mobilenet"))
     .opt("budget", "precision: per-layer error budget (peak-normalized)", Some("1e-2"))
     .opt("m-cap", "precision: sampled rows per layer (full K always)", Some("8"))
     .opt("n-cap", "precision: sampled columns per layer", Some("16"))
@@ -100,7 +109,10 @@ fn main() {
             std::process::exit(2);
         }
     }
-    cfg.apply_args(&args);
+    if let Err(e) = cfg.apply_args(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     let cmd = args.positional.first().map(String::as_str).unwrap_or("headline");
 
     let tcfg = cfg.timing();
@@ -109,34 +121,29 @@ fn main() {
     let rep = match cmd {
         "fig7" => report::fig7_mobilenet(&tcfg, &pmodel),
         "fig8" => report::fig8_resnet50(&tcfg, &pmodel),
-        "table1" => report::table1_area_power(cfg.chain(), cfg.rows, cfg.cols),
+        "table1" => report::table1_area_power(cfg.chain(), cfg.geometry),
         "headline" => report::headline(&tcfg, &pmodel),
         "pipelines" => report::pipelines_registry(cfg.chain()),
         "ablation" => report::ablation_pipelines(cfg.chain(), &tcfg),
         "formats" => report::format_sweep(),
         "sweep" => report::design_sweep(cfg.clock_ghz, single_kind(&cfg, &args, "sweep")),
         "stream" => {
-            use skewsa::workloads::{mobilenet, resnet50};
-            let net = args.get("workload").unwrap_or("mobilenet");
-            let layers = match net {
-                "mobilenet" => mobilenet::layers(),
-                "resnet50" => resnet50::layers(),
-                other => {
-                    eprintln!("error: unknown workload '{other}' (mobilenet|resnet50)");
-                    std::process::exit(2);
-                }
-            };
+            let (net, layers) = workload_layers(&args, "mobilenet");
             let kind = single_kind(&cfg, &args, "stream");
             report::multi_tile_latency(
                 &format!(
-                    "Stream: {net} multi-tile latency, {kind} on {}x{} \
+                    "Stream: {net} multi-tile latency, {kind} on {} \
                      (double-buffered vs serialized preload)",
-                    cfg.rows, cfg.cols
+                    cfg.geometry
                 ),
                 &layers,
                 &tcfg,
                 kind,
             )
+        }
+        "geometry" => {
+            geometry_cmd(&cfg, &args);
+            return;
         }
         "run" => {
             run_gemm(&cfg, &args);
@@ -225,6 +232,76 @@ fn kind_list(cfg: &RunConfig, args: &skewsa::util::cli::Args, cmd: &str) -> Vec<
     }
 }
 
+/// Resolve `--workload` into a layer list (the subcommands sharing this
+/// knob take exactly one network; `serve --net` has its own mix rules).
+fn workload_layers(
+    args: &skewsa::util::cli::Args,
+    default: &str,
+) -> (String, Vec<skewsa::workloads::layer::LayerDef>) {
+    use skewsa::workloads::{decode, mobilenet, resnet50};
+    let net = args.get("workload").unwrap_or(default);
+    let layers = match net {
+        "mobilenet" => mobilenet::layers(),
+        "resnet50" => resnet50::layers(),
+        "decode" => decode::layers(),
+        other => {
+            eprintln!("error: unknown workload '{other}' (mobilenet|resnet50|decode)");
+            std::process::exit(2);
+        }
+    };
+    (net.to_string(), layers)
+}
+
+/// Aspect-ratio sweep at a fixed PE budget (DESIGN.md §20): every
+/// power-of-two ROWSxCOLS shape within `--max-aspect` of square gets the
+/// full per-layer streaming-latency + energy evaluation, and the report
+/// marks the Pareto-optimal shapes.  `--smoke` turns the sweep into the
+/// CI gate: on the decode workload a tall array (rows > cols) must win
+/// total latency, or the edge-effect model has regressed.
+fn geometry_cmd(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
+    use skewsa::sa::geometry::sweep_geometries;
+
+    let (net, layers) = workload_layers(args, if args.has("smoke") { "decode" } else { "mobilenet" });
+    let kind = single_kind(cfg, args, "geometry");
+    let pe_budget = args.get_usize("pe-budget").unwrap_or_else(|| cfg.geometry.pe_count());
+    let max_aspect = args.get_f64("max-aspect").unwrap_or(4.0);
+    if pe_budget < 4 || !(1.0..=1024.0).contains(&max_aspect) {
+        eprintln!(
+            "error: need --pe-budget >= 4 and --max-aspect in [1, 1024] \
+             (got {pe_budget}, {max_aspect})"
+        );
+        std::process::exit(2);
+    }
+    let geoms = sweep_geometries(pe_budget, max_aspect);
+    println!(
+        "geometry sweep: {net}, {} shape(s) at {pe_budget} PEs (aspect <= {max_aspect}), {kind}",
+        geoms.len(),
+    );
+    let (rep, choice) = report::geometry_sweep(&net, &layers, &geoms, cfg, kind);
+    if args.has("quiet") {
+        println!("== {} ==", rep.title);
+    } else {
+        print!("{}", rep.render());
+    }
+    println!(
+        "latency-optimal {}  energy-optimal {}",
+        choice.latency_best, choice.energy_best
+    );
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, rep.table.to_csv()).expect("writing CSV");
+        eprintln!("wrote {path}");
+    }
+    if args.has("smoke") && net == "decode" && choice.latency_best.rows <= choice.latency_best.cols
+    {
+        eprintln!(
+            "GEOMETRY SMOKE FAILED: decode's latency-optimal shape is {}, expected tall \
+             (rows > cols)",
+            choice.latency_best
+        );
+        std::process::exit(1);
+    }
+}
+
 fn run_gemm(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     let shape = GemmShape::new(
         args.req_usize("m"),
@@ -233,8 +310,8 @@ fn run_gemm(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     );
     let kind = single_kind(cfg, args, "run");
     println!(
-        "coordinating GEMM {}x{}x{} on {}x{} ({}), workers={} threads={} mode={:?}",
-        shape.m, shape.k, shape.n, cfg.rows, cfg.cols, kind, cfg.workers, cfg.threads, cfg.mode
+        "coordinating GEMM {}x{}x{} on {} ({}), workers={} threads={} mode={:?}",
+        shape.m, shape.k, shape.n, cfg.geometry, kind, cfg.workers, cfg.threads, cfg.mode
     );
     let data = Arc::new(GemmData::cnn_like(shape, cfg.in_fmt, cfg.seed));
     let coord = Coordinator::new(cfg.clone());
@@ -295,13 +372,14 @@ fn serve(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     let layers = match net {
         "mobilenet" => mobilenet::layers(),
         "resnet50" => resnet50::layers(),
+        "decode" => skewsa::workloads::decode::layers(),
         "mix" => {
             let mut l = mobilenet::layers();
             l.extend(resnet50::layers());
             l
         }
         other => {
-            eprintln!("error: unknown net '{other}' (mobilenet|resnet50|mix)");
+            eprintln!("error: unknown net '{other}' (mobilenet|resnet50|decode|mix)");
             std::process::exit(2);
         }
     };
@@ -316,14 +394,19 @@ fn serve(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         max_rows: 8,
         seed: cfg.seed,
     };
+    let geom_label = if scfg.shard_geometries.is_empty() {
+        format!("{} array", cfg.geometry)
+    } else {
+        let shapes: Vec<String> =
+            (0..scfg.shards).map(|s| scfg.shard_geometry(s, cfg.geometry).to_string()).collect();
+        format!("arrays [{}]", shapes.join(", "))
+    };
     println!(
         "serving {} models ({net}, K/N<={cap}) on {} shard(s) x {} worker(s), \
-         {}x{} array, policy {}, window {}us",
+         {geom_label}, policy {}, window {}us",
         store.len(),
         scfg.shards,
         scfg.workers_per_shard,
-        cfg.rows,
-        cfg.cols,
         scfg.shard_policy,
         scfg.batch_window_us,
     );
@@ -582,18 +665,9 @@ fn bench_check(args: &skewsa::util::cli::Args) {
 
 fn precision(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
     use skewsa::precision::{AnalysisConfig, PlannerConfig, PrecisionStudy};
-    use skewsa::workloads::{mobilenet, resnet50};
     use skewsa::FpFormat;
 
-    let net = args.get("workload").unwrap_or("mobilenet");
-    let layers = match net {
-        "mobilenet" => mobilenet::layers(),
-        "resnet50" => resnet50::layers(),
-        other => {
-            eprintln!("error: unknown workload '{other}' (mobilenet|resnet50)");
-            std::process::exit(2);
-        }
-    };
+    let (net, layers) = workload_layers(args, "mobilenet");
     let kinds = kind_list(cfg, args, "precision");
     // The budget is the subcommand's central knob: a typo must not
     // silently plan at the default (same hard-error contract as
@@ -626,12 +700,11 @@ fn precision(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
         tcfg: cfg.timing(),
     };
     println!(
-        "planning {net}: budget {:.1e}, kinds {}, {}x{} array, error sweep {}x{} \
+        "planning {net}: budget {:.1e}, kinds {}, {} array, error sweep {}x{} \
          sampled outputs/layer at full reduction depth",
         pcfg.budget,
         pcfg.kinds_label(),
-        cfg.rows,
-        cfg.cols,
+        cfg.geometry,
         pcfg.analysis.m_cap,
         pcfg.analysis.n_cap,
     );
@@ -654,7 +727,7 @@ fn precision(cfg: &RunConfig, args: &skewsa::util::cli::Args) {
 
 fn viz(cfg: &RunConfig) {
     let chain = ChainCfg::new(cfg.in_fmt, cfg.out_fmt);
-    let rows = cfg.rows.clamp(2, 4);
+    let rows = cfg.geometry.rows.clamp(2, 4);
     println!("pipeline interleaving, {rows}-PE column, 3 elements (paper Figs. 4 & 6):\n");
     for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
         let weights: Vec<u64> = (0..rows).map(|i| cfg.in_fmt.from_f64(1.0 + i as f64)).collect();

@@ -93,18 +93,27 @@ pub fn fig8_resnet50(tcfg: &TimingConfig, pmodel: &PowerModel) -> Report {
     per_layer_energy("Fig. 8: ResNet50 per-layer energy", &resnet50::layers(), tcfg, pmodel)
 }
 
-/// §IV area/power overheads (the "+9% area, +7% power" paragraph).
-pub fn table1_area_power(chain: ChainCfg, rows: usize, cols: usize) -> Report {
+/// §IV area/power overheads (the "+9% area, +7% power" paragraph),
+/// with the PE plane (∝ R·C) and the edge logic (∝ R+C) split out.
+pub fn table1_area_power(chain: ChainCfg, geom: crate::sa::geometry::ArrayGeometry) -> Report {
+    let (rows, cols) = (geom.rows, geom.cols);
     let area = AreaModel::new(chain);
     let power = PowerModel::new(area);
-    let mut table = Table::new(&["design", "PE-area(GE)", "array-area(MGE)", "power@0.7(mW)"])
-        .numeric();
+    let mut table = Table::new(&[
+        "design",
+        "PE-area(GE)",
+        "array-area(MGE)",
+        "edge-area(kGE)",
+        "power@0.7(mW)",
+    ])
+    .numeric();
     for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
         table.row(&[
             kind.name().to_string(),
             fnum(area.pe_area(kind).total(), 0),
-            fnum(area.array_area(kind, rows, cols) / 1e6, 3),
-            fnum(power.array_power(kind, rows, cols, 0.7) / 1e3, 1),
+            fnum(area.array_area_geom(kind, geom) / 1e6, 3),
+            fnum(area.edge_area(geom) / 1e3, 1),
+            fnum(power.array_power_geom(kind, geom, 0.7) / 1e3, 1),
         ]);
     }
     table.row(&[
@@ -113,13 +122,121 @@ pub fn table1_area_power(chain: ChainCfg, rows: usize, cols: usize) -> Report {
             / area.pe_area(PipelineKind::Baseline3b).total()
             - 1.0),
         pct(area.overhead(rows, cols)),
+        "0%".into(), // edge logic is kind-independent
         pct(power.overhead(rows, cols, 0.7)),
     ]);
     Report {
-        title: "Table: area & power (paper §IV: +9% area, +7% power)".into(),
+        title: format!("Table: area & power on {geom} (paper §IV: +9% area, +7% power)"),
         table,
         totals: None,
     }
+}
+
+/// The shapes the `skewsa geometry` sweep picked (per criterion).
+#[derive(Clone, Copy, Debug)]
+pub struct GeometryChoice {
+    /// Lowest whole-workload latency (total stream cycles).
+    pub latency_best: crate::sa::geometry::ArrayGeometry,
+    /// Lowest whole-workload energy.
+    pub energy_best: crate::sa::geometry::ArrayGeometry,
+}
+
+/// Aspect-ratio sweep at a fixed PE budget (DESIGN.md §20): evaluate
+/// every candidate geometry on every layer of a workload, mark the
+/// per-layer winners, and report per-geometry totals with Pareto
+/// markers over the (latency, energy) plane.
+pub fn geometry_sweep(
+    net: &str,
+    layers: &[LayerDef],
+    geoms: &[crate::sa::geometry::ArrayGeometry],
+    run: &crate::config::RunConfig,
+    kind: PipelineKind,
+) -> (Report, GeometryChoice) {
+    use crate::energy::layer_energy;
+    assert!(!geoms.is_empty(), "sweep_geometries returns at least the square shape");
+    let pmodel = PowerModel::new(AreaModel::new(run.chain()));
+    let tcfgs: Vec<TimingConfig> = geoms
+        .iter()
+        .map(|&g| TimingConfig::for_geometry(g, run.clock_ghz, run.double_buffer))
+        .collect();
+    let mut table =
+        Table::new(&["layer", "M", "K", "N", "geometry", "cycles", "E(uJ)", "opt"]).numeric();
+    // totals[g] = (cycles, energy) of the whole workload on geometry g.
+    let mut totals = vec![(0u64, 0.0f64); geoms.len()];
+    for l in layers {
+        let shape = l.gemm();
+        let evals: Vec<_> = geoms
+            .iter()
+            .zip(&tcfgs)
+            .map(|(&g, tcfg)| {
+                let plan = TilePlan::for_geometry(shape, g);
+                layer_energy(tcfg, &pmodel, kind, &plan)
+            })
+            .collect();
+        let lat_best =
+            evals.iter().enumerate().min_by_key(|(_, e)| e.timing.cycles).map(|(i, _)| i);
+        let en_best = evals
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.energy_uj.total_cmp(&b.1.energy_uj))
+            .map(|(i, _)| i);
+        for (i, e) in evals.iter().enumerate() {
+            totals[i].0 += e.timing.cycles;
+            totals[i].1 += e.energy_uj;
+            let opt = match (Some(i) == lat_best, Some(i) == en_best) {
+                (true, true) => "lat+en",
+                (true, false) => "lat",
+                (false, true) => "en",
+                (false, false) => "",
+            };
+            table.row(&[
+                l.name.clone(),
+                shape.m.to_string(),
+                shape.k.to_string(),
+                shape.n.to_string(),
+                geoms[i].to_string(),
+                e.timing.cycles.to_string(),
+                fnum(e.energy_uj, 3),
+                opt.to_string(),
+            ]);
+        }
+    }
+    // Pareto over the totals: a geometry survives when no other one is
+    // at least as good on both axes and strictly better on one.
+    let pareto = |i: usize| {
+        !totals.iter().enumerate().any(|(j, &(c, e))| {
+            j != i
+                && c <= totals[i].0
+                && e <= totals[i].1
+                && (c < totals[i].0 || e < totals[i].1)
+        })
+    };
+    for (i, &(cycles, energy)) in totals.iter().enumerate() {
+        table.row(&[
+            "TOTAL".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            geoms[i].to_string(),
+            cycles.to_string(),
+            fnum(energy, 3),
+            if pareto(i) { "pareto".into() } else { String::new() },
+        ]);
+    }
+    let lat_i = (0..geoms.len()).min_by_key(|&i| totals[i].0).unwrap();
+    let en_i = (0..geoms.len()).min_by(|&a, &b| totals[a].1.total_cmp(&totals[b].1)).unwrap();
+    let choice = GeometryChoice { latency_best: geoms[lat_i], energy_best: geoms[en_i] };
+    let rep = Report {
+        title: format!(
+            "Geometry sweep: {net} on {} shapes at {} PEs ({})",
+            geoms.len(),
+            geoms[0].pe_count(),
+            kind.name()
+        ),
+        table,
+        totals: None,
+    };
+    (rep, choice)
 }
 
 /// §I/§IV headline: whole-network latency/energy deltas.
@@ -681,6 +798,29 @@ pub fn fleet_summary(r: &crate::fleet::FleetResult, clock_ghz: f64) -> Report {
     table.row(&["plan-cache hit rate".into(), frac(r.cache.hit_rate())]);
     table.row(&["shard quarantines".into(), r.quarantines.to_string()]);
     table.row(&["final active shards".into(), r.final_active.to_string()]);
+    table.row(&["total stream cycles (array busy)".into(), r.stream_cycles.to_string()]);
+    // Utilization grouped by array geometry: the heterogeneous-fleet
+    // view (one line per distinct shape, square fleets collapse to one).
+    let mut seen: Vec<crate::sa::geometry::ArrayGeometry> = Vec::new();
+    for &g in &r.shard_geoms {
+        if !seen.contains(&g) {
+            seen.push(g);
+        }
+    }
+    for g in seen {
+        let (count, busy) = r
+            .shard_geoms
+            .iter()
+            .zip(&r.shard_busy)
+            .filter(|(&sg, _)| sg == g)
+            .fold((0u64, 0u64), |(n, b), (_, &sb)| (n + 1, b + sb));
+        let util = if r.wall_cycles == 0 {
+            0.0
+        } else {
+            busy as f64 / (r.wall_cycles.saturating_mul(count)) as f64
+        };
+        table.row(&[format!("utilization {g} ({count} shard(s))"), frac(util)]);
+    }
     if !r.autoscale.is_empty() {
         let lo = r.autoscale.iter().map(|p| p.active).min().unwrap_or(0);
         let hi = r.autoscale.iter().map(|p| p.active).max().unwrap_or(0);

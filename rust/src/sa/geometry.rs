@@ -1,0 +1,272 @@
+//! First-class array geometry: the `R×C` shape of a weight-stationary
+//! systolic array (DESIGN.md §20).
+//!
+//! The paper's latency win `T = (M−1)+(C−1)+S·(R−1)+D+1+tail` depends
+//! directly on the aspect ratio, so the shape is a modelling input in
+//! its own right, not two loose integers: rows set the reduction-chain
+//! depth (and the preload cost `R` per tile), columns set the output
+//! bandwidth per pass, and the *edge* hardware — the South-edge
+//! rounding units (one per column) and the West-edge injection drivers
+//! (one per row) — scales with `R + C` while the PE grid scales with
+//! `R · C`.  Everything that used to carry `(rows, cols)` pairs
+//! (configs, plan-cache keys, shard descriptors) carries one of these
+//! instead, and validation happens once, at parse time
+//! ([`ArrayGeometry::checked`]), not as a bare assert in the middle of
+//! a run.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// One array's shape: `rows` reduction-chain PEs deep (the K axis),
+/// `cols` output lanes wide (the N axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ArrayGeometry {
+    /// Chain depth: PEs per column, K-elements reduced per pass.
+    pub rows: usize,
+    /// Array width: columns, N-outputs produced per pass.
+    pub cols: usize,
+}
+
+impl ArrayGeometry {
+    /// The paper's evaluation point (§IV): a square 128×128 array.
+    pub const PAPER: ArrayGeometry = ArrayGeometry { rows: 128, cols: 128 };
+
+    /// Largest accepted value for either dimension.  A 65536-deep
+    /// reduction chain is already far beyond any plausible floorplan;
+    /// a larger number in a config is a typo, not a design point.
+    pub const MAX_DIM: usize = 1 << 16;
+
+    /// Construct a validated geometry.
+    ///
+    /// # Panics
+    /// If either dimension is zero or absurd — construct through
+    /// [`ArrayGeometry::checked`] on config paths so the user gets an
+    /// error instead.
+    pub fn new(rows: usize, cols: usize) -> ArrayGeometry {
+        match Self::checked(rows, cols) {
+            Ok(g) => g,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Construct a geometry, rejecting zero and absurd dimensions with
+    /// a config-grade message (the parse-time validation every config
+    /// path routes through; `TilePlan::new` then never sees a
+    /// degenerate shape).
+    pub fn checked(rows: usize, cols: usize) -> Result<ArrayGeometry, String> {
+        for (name, v) in [("rows", rows), ("cols", cols)] {
+            if v == 0 {
+                return Err(format!(
+                    "bad array geometry {rows}x{cols}: {name} must be at least 1 \
+                     (a zero-{name} array computes nothing)"
+                ));
+            }
+            if v > Self::MAX_DIM {
+                return Err(format!(
+                    "bad array geometry {rows}x{cols}: {name} {v} exceeds the {} maximum \
+                     (did you mean {}?)",
+                    Self::MAX_DIM,
+                    Self::MAX_DIM,
+                ));
+            }
+        }
+        Ok(ArrayGeometry { rows, cols })
+    }
+
+    /// Parse a `ROWSxCOLS` geometry string with did-you-mean-style
+    /// diagnostics consistent with [`crate::util::cli`]: common
+    /// separator typos (`X`, `*`, `,`, `×`) are corrected in the
+    /// suggestion rather than silently accepted.
+    pub fn parse(s: &str) -> Result<ArrayGeometry, String> {
+        let raw = s.trim();
+        if let Some((r, c)) = raw.split_once('x') {
+            let parse_dim = |name: &str, t: &str| -> Result<usize, String> {
+                t.trim().parse::<usize>().map_err(|_| {
+                    format!("bad array geometry '{raw}': {name} '{}' is not a number", t.trim())
+                })
+            };
+            let rows = parse_dim("rows", r)?;
+            let cols = parse_dim("cols", c)?;
+            return Self::checked(rows, cols);
+        }
+        // Separator typos: suggest the canonical spelling.
+        for sep in ['X', '*', ',', '×'] {
+            if let Some((r, c)) = raw.split_once(sep) {
+                return Err(format!(
+                    "bad array geometry '{raw}': expected ROWSxCOLS \
+                     (did you mean '{}x{}'?)",
+                    r.trim(),
+                    c.trim()
+                ));
+            }
+        }
+        Err(format!(
+            "bad array geometry '{raw}': expected ROWSxCOLS, e.g. '128x128' or '256x64'"
+        ))
+    }
+
+    /// PE count — the silicon that scales with `R · C`.
+    pub fn pe_count(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Edge-unit count — the silicon that scales with `R + C`: one
+    /// South-edge rounding unit per column plus one West-edge
+    /// injection driver per row.
+    pub fn edge_units(&self) -> usize {
+        self.rows + self.cols
+    }
+
+    /// The transposed shape (a tall array's wide sibling at the same
+    /// PE budget) — the sweep's reflection axis.
+    pub fn transposed(&self) -> ArrayGeometry {
+        ArrayGeometry { rows: self.cols, cols: self.rows }
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Aspect ratio ≥ 1 regardless of orientation (tall 256×64 and
+    /// wide 64×256 both report 4).
+    pub fn aspect(&self) -> f64 {
+        let (r, c) = (self.rows as f64, self.cols as f64);
+        if r >= c {
+            r / c
+        } else {
+            c / r
+        }
+    }
+}
+
+impl fmt::Display for ArrayGeometry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.rows, self.cols)
+    }
+}
+
+impl FromStr for ArrayGeometry {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ArrayGeometry, String> {
+        Self::parse(s)
+    }
+}
+
+/// Parse a comma-separated geometry list (`"256x64,64x256,128x128"` —
+/// the `--shard-geometries` CLI shape).  An empty string yields an
+/// empty list, i.e. "uniform run geometry".
+pub fn parse_geometry_list(s: &str) -> Result<Vec<ArrayGeometry>, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Ok(Vec::new());
+    }
+    t.split(',').map(ArrayGeometry::parse).collect()
+}
+
+/// Every power-of-two geometry at a fixed PE budget with aspect ratio
+/// at most `max_aspect`, tall-to-wide (the `skewsa geometry` sweep
+/// axis: 16K PEs → 256x64 … 64x256 at 4:1).  `budget` is rounded down
+/// to a power of two; returns an empty vec only for `budget` < 1.
+pub fn sweep_geometries(pe_budget: usize, max_aspect: f64) -> Vec<ArrayGeometry> {
+    if pe_budget == 0 {
+        return Vec::new();
+    }
+    let log2 = usize::BITS - 1 - pe_budget.leading_zeros();
+    let budget = 1usize << log2;
+    let mut out = Vec::new();
+    // Tall to wide: rows descending.
+    for rshift in (0..=log2).rev() {
+        let rows = 1usize << rshift;
+        let cols = budget / rows;
+        let g = ArrayGeometry { rows, cols };
+        if g.aspect() <= max_aspect && g.rows <= ArrayGeometry::MAX_DIM && g.cols <= ArrayGeometry::MAX_DIM {
+            out.push(g);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_display() {
+        for s in ["128x128", "256x64", "1x4096", "64x1"] {
+            let g: ArrayGeometry = s.parse().unwrap();
+            assert_eq!(g.to_string(), s);
+        }
+        assert_eq!(" 32 x 8 ".parse::<ArrayGeometry>().unwrap(), ArrayGeometry::new(32, 8));
+    }
+
+    #[test]
+    fn rejects_zero_and_absurd_dimensions() {
+        let e = ArrayGeometry::checked(0, 128).unwrap_err();
+        assert!(e.contains("rows must be at least 1"), "{e}");
+        let e = ArrayGeometry::checked(128, 0).unwrap_err();
+        assert!(e.contains("cols must be at least 1"), "{e}");
+        let e = ArrayGeometry::checked(1 << 20, 8).unwrap_err();
+        assert!(e.contains("exceeds"), "{e}");
+        assert!(ArrayGeometry::checked(ArrayGeometry::MAX_DIM, 1).is_ok());
+    }
+
+    #[test]
+    fn parse_suggests_canonical_separator() {
+        for bad in ["128X128", "128*128", "128,128"] {
+            let e = bad.parse::<ArrayGeometry>().unwrap_err();
+            assert!(e.contains("did you mean '128x128'?"), "{bad}: {e}");
+        }
+        let e = "fast".parse::<ArrayGeometry>().unwrap_err();
+        assert!(e.contains("ROWSxCOLS"), "{e}");
+        let e = "axb".parse::<ArrayGeometry>().unwrap_err();
+        assert!(e.contains("not a number"), "{e}");
+    }
+
+    #[test]
+    fn counts_and_shape_predicates() {
+        let g = ArrayGeometry::new(256, 64);
+        assert_eq!(g.pe_count(), 16384);
+        assert_eq!(g.edge_units(), 320);
+        assert!(!g.is_square());
+        assert_eq!(g.aspect(), 4.0);
+        assert_eq!(g.transposed(), ArrayGeometry::new(64, 256));
+        assert_eq!(g.transposed().aspect(), 4.0);
+        assert!(ArrayGeometry::PAPER.is_square());
+        assert_eq!(ArrayGeometry::PAPER.pe_count(), 16384);
+    }
+
+    #[test]
+    fn geometry_lists_parse() {
+        let gs = parse_geometry_list("256x64, 64x256,128x128").unwrap();
+        assert_eq!(
+            gs,
+            vec![ArrayGeometry::new(256, 64), ArrayGeometry::new(64, 256), ArrayGeometry::PAPER]
+        );
+        assert!(parse_geometry_list("").unwrap().is_empty());
+        assert!(parse_geometry_list("256x64,8y8").is_err());
+    }
+
+    #[test]
+    fn sweep_covers_the_budget_tall_to_wide() {
+        let gs = sweep_geometries(16384, 4.0);
+        assert_eq!(
+            gs,
+            vec![
+                ArrayGeometry::new(256, 64),
+                ArrayGeometry::new(128, 128),
+                ArrayGeometry::new(64, 256),
+            ]
+        );
+        for g in &gs {
+            assert_eq!(g.pe_count(), 16384);
+        }
+        let wide = sweep_geometries(16384, 16.0);
+        assert_eq!(wide.len(), 5, "{wide:?}");
+        assert_eq!(wide[0], ArrayGeometry::new(512, 32));
+        // Non-power-of-two budgets round down; square always included.
+        let gs = sweep_geometries(100, 1.0);
+        assert_eq!(gs, vec![ArrayGeometry::new(8, 8)]);
+        assert!(sweep_geometries(0, 4.0).is_empty());
+    }
+}

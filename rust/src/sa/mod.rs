@@ -11,12 +11,15 @@
 //!   validating the layer-level timing composition (DESIGN.md §15).
 //! * [`tile`] — GEMM → weight-tile decomposition (K/N tiling, K-pass
 //!   accumulation).
+//! * [`geometry`] — first-class `R×C` array shape: validated parsing,
+//!   PE-vs-edge silicon split, aspect-ratio sweeps (DESIGN.md §20).
 //! * [`trace`] — per-cycle stage-occupancy traces (viz + activity).
 
 pub mod array;
 pub mod column;
 pub mod dataflow;
 pub mod fast;
+pub mod geometry;
 pub mod stream;
 pub mod tile;
 pub mod trace;
@@ -25,6 +28,7 @@ pub use array::ArraySim;
 pub use column::{ColOutput, ColumnSim, SimError};
 pub use dataflow::WsSchedule;
 pub use fast::FastArraySim;
+pub use geometry::{sweep_geometries, ArrayGeometry};
 pub use stream::{StreamReport, StreamingSim};
 pub use tile::{GemmShape, Tile, TilePlan};
 pub use trace::Trace;

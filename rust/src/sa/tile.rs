@@ -11,6 +11,7 @@
 //! the ordering invariant the coordinator's scheduler preserves.
 
 use crate::sa::dataflow::WsSchedule;
+use crate::sa::geometry::ArrayGeometry;
 
 /// A GEMM problem shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -73,10 +74,24 @@ pub struct TilePlan {
 }
 
 impl TilePlan {
+    /// Decompose `shape` for a validated [`ArrayGeometry`].
+    pub fn for_geometry(shape: GemmShape, geom: ArrayGeometry) -> Self {
+        Self::new(shape, geom.rows, geom.cols)
+    }
+
     /// Decompose `shape` for an `rows × cols` array.  Tiles are ordered
     /// N-block-major, K-pass-minor (the accumulation-friendly order).
+    ///
+    /// Config paths validate geometry at parse time through
+    /// [`ArrayGeometry::checked`], so the assert below is a programming
+    /// error, not a user-input error — and it says so instead of
+    /// tripping a bare boolean mid-run.
     pub fn new(shape: GemmShape, rows: usize, cols: usize) -> Self {
-        assert!(rows >= 1 && cols >= 1);
+        assert!(
+            rows >= 1 && cols >= 1,
+            "degenerate array geometry {rows}x{cols} reached TilePlan::new; \
+             geometry must be validated at config parse time (ArrayGeometry::checked)"
+        );
         let k_tiles = shape.k.div_ceil(rows);
         let n_tiles = shape.n.div_ceil(cols);
         let mut tiles = Vec::with_capacity(k_tiles * n_tiles);
@@ -90,6 +105,11 @@ impl TilePlan {
             }
         }
         TilePlan { shape, rows, cols, tiles }
+    }
+
+    /// The array shape this plan was decomposed for.
+    pub fn geometry(&self) -> ArrayGeometry {
+        ArrayGeometry { rows: self.rows, cols: self.cols }
     }
 
     pub fn k_tiles(&self) -> usize {
@@ -280,5 +300,19 @@ mod tests {
     #[should_panic]
     fn degenerate_shape_panics() {
         GemmShape::new(0, 1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "validated at config parse time")]
+    fn degenerate_geometry_names_the_fix() {
+        TilePlan::new(GemmShape::new(1, 1, 1), 0, 4);
+    }
+
+    #[test]
+    fn geometry_roundtrip() {
+        let g = ArrayGeometry::new(8, 4);
+        let p = TilePlan::for_geometry(GemmShape::new(4, 20, 10), g);
+        assert_eq!(p.geometry(), g);
+        assert_eq!(p, TilePlan::new(GemmShape::new(4, 20, 10), 8, 4));
     }
 }

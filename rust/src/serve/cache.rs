@@ -3,7 +3,7 @@
 //! Serving traffic is shape-repetitive — every MobileNet/ResNet50 layer
 //! is a fixed `(K, N)` and the batcher quantises `M` through its size
 //! caps — so hot shapes re-plan constantly without a cache.  Entries are
-//! keyed by `(GemmShape, FpFormat, PipelineKind, rows, cols)` and hold
+//! keyed by `(GemmShape, FpFormat, PipelineKind, ArrayGeometry)` and hold
 //! the tile decomposition, the per-tile weight-stationary schedules and
 //! the closed-form stream-cycle total.  Eviction is LRU beyond a fixed
 //! capacity.
@@ -21,6 +21,7 @@ use crate::arith::format::FpFormat;
 use crate::obs::CycleAttribution;
 use crate::pe::PipelineKind;
 use crate::sa::dataflow::WsSchedule;
+use crate::sa::geometry::ArrayGeometry;
 use crate::sa::tile::{GemmShape, TilePlan};
 use crate::timing::{layer_timing, TimingConfig};
 use std::collections::HashMap;
@@ -41,10 +42,18 @@ pub struct PlanKey {
     pub shape: GemmShape,
     pub fmt: FpFormat,
     pub kind: PipelineKind,
-    /// Array rows.
-    pub rows: usize,
-    /// Array columns.
-    pub cols: usize,
+    /// The array shape the plan targets.  Heterogeneous pools score one
+    /// batch against several geometries, so each shard's shape memoises
+    /// its own plans side by side in one cache.
+    pub geom: ArrayGeometry,
+}
+
+impl PlanKey {
+    /// The same batch re-keyed for a different shard geometry (the
+    /// shape-aware router's scoring probe).
+    pub fn with_geometry(self, geom: ArrayGeometry) -> PlanKey {
+        PlanKey { geom, ..self }
+    }
 }
 
 /// A memoised planning result.
@@ -80,18 +89,13 @@ impl CachedPlan {
     /// but the first (`T > R` for every tile; see the layer model's
     /// two-buffer audit).
     pub fn build(key: &PlanKey) -> CachedPlan {
-        let plan = TilePlan::new(key.shape, key.rows, key.cols);
+        let plan = TilePlan::for_geometry(key.shape, key.geom);
         let schedules = plan.schedules(key.kind);
         let stream_cycles_serialized =
             schedules.iter().map(|s| s.preload_cycles() + s.total_cycles()).sum();
         let stream_cycles_overlapped = plan.stream_cycles(key.kind, true);
         debug_assert_eq!(stream_cycles_serialized, plan.stream_cycles(key.kind, false));
-        let tcfg = |db| TimingConfig {
-            rows: key.rows,
-            cols: key.cols,
-            clock_ghz: 1.0,
-            double_buffer: db,
-        };
+        let tcfg = |db| TimingConfig::for_geometry(key.geom, 1.0, db);
         let breakdown_overlapped =
             CycleAttribution::from_layer_timing(&layer_timing(&tcfg(true), key.kind, &plan));
         let breakdown_serialized =
@@ -226,8 +230,7 @@ mod tests {
             shape: GemmShape::new(m, k, n),
             fmt: FpFormat::BF16,
             kind: PipelineKind::Skewed,
-            rows: 8,
-            cols: 8,
+            geom: ArrayGeometry { rows: 8, cols: 8 },
         }
     }
 
@@ -259,6 +262,11 @@ mod tests {
         let mut k3 = key(4, 20, 12);
         k3.fmt = FpFormat::FP8E4M3;
         assert!(!c.get(k3).1, "format is part of the key");
+        let k4 = key(4, 20, 12).with_geometry(ArrayGeometry { rows: 16, cols: 4 });
+        let (d, hit) = c.get(k4);
+        assert!(!hit, "geometry is part of the key");
+        assert_eq!(d.plan.geometry(), ArrayGeometry { rows: 16, cols: 4 });
+        assert_ne!(a.plan, d.plan, "different geometry, different tiles");
     }
 
     #[test]
@@ -298,8 +306,7 @@ mod tests {
             let bd = p.breakdown(db);
             assert_eq!(bd.stream_total(), p.stream_cycles(db), "db={db}");
             assert_eq!(bd.recovery, 0, "clean plan carries no recovery cycles");
-            let cfg =
-                TimingConfig { rows: k.rows, cols: k.cols, clock_ghz: 1.0, double_buffer: db };
+            let cfg = TimingConfig::for_geometry(k.geom, 1.0, db);
             let lt = layer_timing(&cfg, k.kind, &p.plan);
             assert_eq!(bd.exposed_preload, lt.exposed_preload, "db={db}");
             assert_eq!(bd.drain, lt.drain_cycles, "db={db}");

@@ -100,6 +100,28 @@ where
         || non_anchor_members.into_iter().any(|c| c == DeadlineClass::Interactive)
 }
 
+/// Shape-aware shard selection ([`Policy::ShapeAware`]): given each
+/// candidate shard's *predicted stream cycles* for the batch under that
+/// shard's geometry (from the geometry-keyed plan cache), pick the
+/// fewest-cycles shard, ties toward the lower index.  Deliberately
+/// *deterministic* — no in-flight or queue-depth term — so the fleet
+/// DES replays the threaded server's routing decisions
+/// request-for-request (the §18 differential pin, extended to geometry
+/// scoring).  Skipping unhealthy shards is the caller's job: pass only
+/// eligible `(shard, cycles)` pairs.  Returns `None` only for an empty
+/// candidate set.
+///
+/// [`Policy::ShapeAware`]: crate::coordinator::router::Policy::ShapeAware
+pub fn best_fit_shard<I>(scored: I) -> Option<usize>
+where
+    I: IntoIterator<Item = (usize, u64)>,
+{
+    scored
+        .into_iter()
+        .min_by_key(|&(shard, cycles)| (cycles, shard))
+        .map(|(shard, _)| shard)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +171,17 @@ mod tests {
         assert!(!member_fits(0, Skewed, 4, 8, 0, Skewed, 5), "row cap");
         assert!(!member_fits(0, Skewed, 4, 8, 1, Skewed, 1), "model key");
         assert!(!member_fits(0, Skewed, 4, 8, 0, Deep3, 1), "kind key");
+    }
+
+    #[test]
+    fn best_fit_is_min_cycles_low_index_ties() {
+        assert_eq!(best_fit_shard([(0, 6560), (1, 5520), (2, 8832)]), Some(1));
+        // Ties break toward the lower shard index, whatever the order
+        // the candidates arrive in.
+        assert_eq!(best_fit_shard([(2, 100), (0, 100), (1, 100)]), Some(0));
+        // Exclusions are the caller's: a filtered set still resolves.
+        assert_eq!(best_fit_shard([(2, 9), (3, 9)]), Some(2));
+        assert_eq!(best_fit_shard(std::iter::empty::<(usize, u64)>()), None);
     }
 
     #[test]

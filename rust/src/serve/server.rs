@@ -21,9 +21,11 @@ use super::shard::{BatchJob, ReplyPart, ShardPool, ShardSnapshot};
 use crate::arith::fma::ChainCfg;
 use crate::arith::format::FpFormat;
 use crate::config::{NumericMode, RunConfig, ServeConfig};
+use crate::coordinator::router::Policy;
 use crate::coordinator::{FaultModel, FaultPlan};
 use crate::obs::{MetricsSnapshot, Obs, Phase, SpanStatus};
 use crate::pe::PipelineKind;
+use crate::sa::geometry::ArrayGeometry;
 use crate::sa::tile::GemmShape;
 use crate::workloads::gemm::GemmData;
 use crate::workloads::serving::WeightStore;
@@ -48,8 +50,14 @@ struct Dispatcher {
     store: Arc<WeightStore>,
     cache: Arc<PlanCache>,
     shards: Arc<ShardPool>,
-    rows: usize,
-    cols: usize,
+    /// Per-shard array geometry ([`ServeConfig::shard_geometry`]); a
+    /// uniform pool repeats the run geometry.  Every batch is planned
+    /// under the geometry of the shard that will execute it.
+    geoms: Vec<ArrayGeometry>,
+    /// The shard-level routing policy.  [`Policy::ShapeAware`] scores
+    /// this dispatcher's plan-cache predictions; rr/ll let the pool's
+    /// router pick first and plan for its choice.
+    policy: Policy,
     out_fmt: FpFormat,
     mode: NumericMode,
     /// Weight-preload discipline (from [`RunConfig::double_buffer`]):
@@ -62,14 +70,39 @@ impl Dispatcher {
     fn dispatch(&self, batch: Batch) {
         let model = self.store.get(batch.key.model);
         let shape = GemmShape::new(batch.rows, model.k, model.n);
-        let key = PlanKey {
-            shape,
-            fmt: model.fmt,
-            kind: batch.key.kind,
-            rows: self.rows,
-            cols: self.cols,
+        let base = PlanKey { shape, fmt: model.fmt, kind: batch.key.kind, geom: self.geoms[0] };
+        let scored = self.policy == Policy::ShapeAware;
+        let (target, plan, cache_hit) = if scored {
+            // Score every dispatch-eligible shard: this batch's
+            // predicted stream cycles under that shard's geometry,
+            // straight from the geometry-keyed plan cache.  The pick is
+            // deterministic (min cycles, ties toward the lower index,
+            // no load term) so the fleet DES replays these routing
+            // decisions request-for-request (DESIGN.md §18, §20).
+            let probes: Vec<_> = self
+                .shards
+                .eligible_shards()
+                .into_iter()
+                .map(|s| {
+                    let (plan, hit) = self.cache.get(base.with_geometry(self.geoms[s]));
+                    (s, plan, hit)
+                })
+                .collect();
+            let best = crate::serve::policy::best_fit_shard(
+                probes.iter().map(|&(s, ref p, _)| (s, p.stream_cycles(self.double_buffer))),
+            )
+            .expect("a shard pool always has at least one shard");
+            let (s, plan, hit) = probes.into_iter().find(|&(s, _, _)| s == best).unwrap();
+            (s, plan, hit)
+        } else {
+            // The router picks first (round-robin / least-loaded over
+            // healthy shards); the batch is then planned under the
+            // chosen shard's geometry — in a uniform pool this is the
+            // same key every time, exactly the pre-geometry behaviour.
+            let s = self.shards.choose();
+            let (plan, hit) = self.cache.get(base.with_geometry(self.geoms[s]));
+            (s, plan, hit)
         };
-        let (plan, cache_hit) = self.cache.get(key);
         // One pass over the owned members: *move* each request's
         // activation rows into the stacked matrix (no clone on the hot
         // path) while building the reply routing in the same order.
@@ -90,7 +123,7 @@ impl Dispatcher {
         }
         let data = Arc::new(GemmData { shape, fmt: model.fmt, a, w: model.w.clone() });
         let chain = ChainCfg::new(model.fmt, self.out_fmt);
-        self.shards.dispatch(BatchJob {
+        let job = BatchJob {
             chain,
             mode: self.mode,
             kind: batch.key.kind,
@@ -99,7 +132,13 @@ impl Dispatcher {
             plan,
             parts,
             cache_hit,
-        });
+        };
+        if scored {
+            // The scored pick bypassed the router: account for it.
+            self.shards.dispatch_to(target, job);
+        } else {
+            self.shards.enqueue_on(target, job);
+        }
     }
 }
 
@@ -178,12 +217,14 @@ impl Server {
             interactive_window: Duration::from_micros(serve.interactive_window_us),
         };
         let batcher = Batcher::new(Arc::clone(&queue), limits);
+        let geoms: Vec<ArrayGeometry> =
+            (0..serve.shards.max(1)).map(|s| serve.shard_geometry(s, run.geometry)).collect();
         let dispatcher = Dispatcher {
             store: Arc::clone(&store),
             cache: Arc::clone(&cache),
             shards: Arc::clone(&shards),
-            rows: run.rows,
-            cols: run.cols,
+            geoms,
+            policy: serve.shard_policy,
             out_fmt: run.out_fmt,
             mode: run.mode,
             double_buffer: run.double_buffer,
@@ -361,6 +402,38 @@ mod tests {
         let stats = server.stats();
         assert_eq!(stats.submitted, 1);
         assert_eq!(stats.cache.misses, 1);
+    }
+
+    #[test]
+    fn shape_aware_routing_picks_the_predicted_fastest_shard() {
+        let geoms = [ArrayGeometry::new(16, 4), ArrayGeometry::new(4, 16)];
+        let mut serve = ServeConfig::small();
+        serve.shards = 2;
+        serve.shard_policy = Policy::ShapeAware;
+        serve.shard_geometries = geoms.to_vec();
+        let server = tiny_server(serve);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let a = server.store().gen_activations(0, 4, &mut rng);
+        let rx = server.submit(0, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+        let resp = rx.recv().unwrap();
+        // Recompute the two predictions the dispatcher scored; the
+        // response must come from the best-fit shard and quote exactly
+        // that geometry's service time.
+        let run = RunConfig::small();
+        let entry = server.store().get(0);
+        let shape = GemmShape::new(4, entry.k, entry.n);
+        let oracle = PlanCache::new(4);
+        let cycles: Vec<u64> = geoms
+            .iter()
+            .map(|&g| {
+                let key = PlanKey { shape, fmt: entry.fmt, kind: PipelineKind::Skewed, geom: g };
+                oracle.get(key).0.stream_cycles(run.double_buffer)
+            })
+            .collect();
+        let want = if cycles[1] < cycles[0] { 1 } else { 0 };
+        assert_eq!(resp.shard, want, "predictions: {cycles:?}");
+        assert_eq!(resp.batch_stream_cycles, cycles[want]);
+        assert_ne!(cycles[0], cycles[1], "a 16x4 vs 4x16 split should not tie");
     }
 
     #[test]

@@ -336,10 +336,51 @@ impl ShardPool {
     /// quarantined, in which case the exclusion is void and a degraded
     /// pool keeps serving.
     pub fn dispatch(&self, job: BatchJob) {
+        let s = self.choose();
+        self.enqueue_on(s, job);
+    }
+
+    /// Pick (and account for) the next shard under the pool's policy
+    /// and health exclusions, *before* the job exists — heterogeneous
+    /// pools plan the batch under the chosen shard's geometry, then
+    /// enqueue with [`ShardPool::enqueue_on`].
+    pub fn choose(&self) -> usize {
         self.health.tick();
         let excluded = self.health.excluded();
-        let s = self.router.dispatch_excluding(&excluded);
+        self.router.dispatch_excluding(&excluded)
+    }
+
+    /// Enqueue a job on a shard that [`ShardPool::choose`] or
+    /// [`ShardPool::dispatch_to`] already accounted for; blocks when
+    /// the shard's mailbox is full.
+    pub fn enqueue_on(&self, s: usize, job: BatchJob) {
         self.shards[s].tx.as_ref().expect("pool alive").send(job).expect("shard alive");
+    }
+
+    /// Tick the health board and return the dispatch-eligible shard
+    /// indices in index order — the candidate set a shape-aware
+    /// dispatcher scores before calling [`ShardPool::dispatch_to`].
+    /// Mirrors [`ShardPool::dispatch`]'s quarantine rule: when *every*
+    /// shard is quarantined the exclusion is void and all shards are
+    /// eligible (a degraded pool keeps serving).
+    pub fn eligible_shards(&self) -> Vec<usize> {
+        self.health.tick();
+        let excluded = self.health.excluded();
+        let n = self.shards.len();
+        if excluded.len() >= n {
+            return (0..n).collect();
+        }
+        (0..n).filter(|s| !excluded.contains(s)).collect()
+    }
+
+    /// Enqueue a batch on an externally chosen shard — the shape-aware
+    /// pick, scored by the dispatcher over [`ShardPool::eligible_shards`]
+    /// via [`crate::serve::policy::best_fit_shard`] — with the same
+    /// router in-flight accounting as [`ShardPool::dispatch`] (the shard
+    /// loop's `complete` call stays symmetric either way).
+    pub fn dispatch_to(&self, s: usize, job: BatchJob) {
+        self.router.dispatch_to(s);
+        self.enqueue_on(s, job);
     }
 
     /// Snapshot per-shard counters, merged with the health board.
@@ -382,8 +423,9 @@ impl Drop for ShardPool {
 mod tests {
     use super::*;
     use crate::arith::format::FpFormat;
-    use crate::serve::cache::{PlanCache, PlanKey};
+    use crate::sa::geometry::ArrayGeometry;
     use crate::sa::tile::GemmShape;
+    use crate::serve::cache::{PlanCache, PlanKey};
     use std::sync::mpsc::channel;
 
     fn one_request_job(
@@ -397,8 +439,7 @@ mod tests {
             shape,
             fmt: FpFormat::BF16,
             kind: PipelineKind::Skewed,
-            rows: 8,
-            cols: 8,
+            geom: ArrayGeometry { rows: 8, cols: 8 },
         };
         let (plan, hit) = cache.get(key);
         let job = BatchJob {
@@ -454,6 +495,22 @@ mod tests {
         for s in &snaps {
             assert_eq!(s.batches, 2, "round-robin splits 6 batches 2/2/2: {snaps:?}");
         }
+    }
+
+    #[test]
+    fn externally_scored_dispatch_lands_on_the_chosen_shard() {
+        let pool = ShardPool::new(3, 1, 2, Policy::ShapeAware);
+        let cache = PlanCache::new(4);
+        assert_eq!(pool.eligible_shards(), vec![0, 1, 2]);
+        for _ in 0..3 {
+            let (tx, rx) = channel();
+            let (job, _) = one_request_job(2, tx, &cache);
+            pool.dispatch_to(1, job);
+            rx.recv().unwrap();
+        }
+        let snaps = pool.snapshots();
+        assert_eq!(snaps[1].batches, 3, "every scored pick landed on shard 1");
+        assert_eq!(snaps[0].batches + snaps[2].batches, 0);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 use crate::pe::{PipelineKind, PipelineSpec};
 use crate::sa::dataflow::WsSchedule;
+use crate::sa::geometry::ArrayGeometry;
 use crate::sa::tile::TilePlan;
 
 /// Array + clock configuration for timing/energy evaluation.
@@ -43,6 +44,18 @@ impl TimingConfig {
     /// The paper's evaluation setup: 128×128 PEs @ 1 GHz (§IV).
     pub const PAPER: TimingConfig =
         TimingConfig { rows: 128, cols: 128, clock_ghz: 1.0, double_buffer: true };
+
+    /// Config for a validated [`ArrayGeometry`] — the constructor every
+    /// geometry-aware caller (sweep, heterogeneous shards) routes
+    /// through.
+    pub fn for_geometry(geom: ArrayGeometry, clock_ghz: f64, double_buffer: bool) -> TimingConfig {
+        TimingConfig { rows: geom.rows, cols: geom.cols, clock_ghz, double_buffer }
+    }
+
+    /// The array shape this config evaluates.
+    pub fn geometry(&self) -> ArrayGeometry {
+        ArrayGeometry { rows: self.rows, cols: self.cols }
+    }
 
     /// Cycle count → nanoseconds at this clock.
     pub fn ns(&self, cycles: u64) -> f64 {
@@ -320,6 +333,15 @@ mod tests {
         let s = gemm_timing(&cfg, PipelineKind::Skewed, shape);
         let saving = 1.0 - s.cycles as f64 / b.cycles as f64;
         assert!(saving > 0.2, "late-layer saving {saving}");
+    }
+
+    #[test]
+    fn geometry_constructor_roundtrips() {
+        let g = ArrayGeometry::new(256, 64);
+        let cfg = TimingConfig::for_geometry(g, 1.0, true);
+        assert_eq!((cfg.rows, cfg.cols), (256, 64));
+        assert_eq!(cfg.geometry(), g);
+        assert_eq!(TimingConfig::PAPER.geometry(), ArrayGeometry::PAPER);
     }
 
     #[test]

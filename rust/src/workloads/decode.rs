@@ -1,0 +1,74 @@
+//! Transformer decode-step projections: tall-skinny GEMMs.
+//!
+//! Token-by-token decoding multiplies a handful of in-flight token
+//! vectors (`M` = 1–8) against weight matrices whose reduction depth is
+//! the full hidden dimension while the output width is a narrow slice —
+//! a per-head query projection (4096 → 64), a grouped-query KV
+//! projection (4096 → 128), or a LoRA down-projection (4096 → 16).
+//! `K ≫ N` is the defining property: on a weight-stationary array these
+//! layers reward tall geometries (more rows to hold the reduction,
+//! fewer mostly-idle columns), which is exactly what the
+//! `skewsa geometry` sweep and the heterogeneous fleet exploit
+//! (DESIGN.md §20).
+
+use super::layer::LayerDef;
+
+/// Hidden dimension of the modeled 7B-class decoder.
+pub const HIDDEN: usize = 4096;
+
+/// The (name, output width) of each modeled projection slice.
+const PROJECTIONS: [(&str, usize); 3] =
+    [("q_head", 64), ("kv_gqa", 128), ("lora_down", 16)];
+
+/// Twelve decode-step layers: each projection at 1, 2, 4 and 8
+/// in-flight tokens.
+pub fn layers() -> Vec<LayerDef> {
+    let mut l = Vec::with_capacity(12);
+    for m in [1usize, 2, 4, 8] {
+        for &(name, n) in &PROJECTIONS {
+            l.push(LayerDef::gemm_layer(&format!("m{m}/{name}"), m, HIDDEN, n));
+        }
+    }
+    l
+}
+
+/// Total multiply-accumulates of the table (for sanity checks).
+pub fn total_macs() -> u64 {
+    layers().iter().map(|l| l.macs()).sum()
+}
+
+/// Cross-check representative layers through the fast cycle simulator,
+/// same contract as the CNN tables (DESIGN.md §2).
+pub fn cross_check_paper_tiles(m_cap: usize, threads: usize) -> Vec<super::layer::TileSimCheck> {
+    super::layer::cross_check_paper_tiles(&layers(), m_cap, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_tall_skinny_layers() {
+        let ls = layers();
+        assert_eq!(ls.len(), 12);
+        for l in &ls {
+            let g = l.gemm();
+            assert_eq!(g.k, HIDDEN);
+            assert!(g.k >= 32 * g.n, "{}: K={} N={} is not tall-skinny", l.name, g.k, g.n);
+            assert!(g.m <= 8, "{}: decode M stays small", l.name);
+        }
+    }
+
+    #[test]
+    fn macs_match_the_closed_form() {
+        // (1+2+4+8) tokens × 4096 × (64+128+16) output columns.
+        assert_eq!(total_macs(), 15 * 4096 * 208);
+    }
+
+    #[test]
+    fn paper_tiles_cycle_sim_validates_model() {
+        for chk in cross_check_paper_tiles(2, 4) {
+            assert!(chk.ok(), "{chk:?}");
+        }
+    }
+}

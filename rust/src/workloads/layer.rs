@@ -31,6 +31,10 @@ pub enum LayerKind {
     DwConv { kh: usize, kw: usize, stride: usize, channels: usize },
     /// Fully-connected / linear.
     Fc { cin: usize, cout: usize },
+    /// A raw GEMM, already lowered (e.g. a transformer decode
+    /// projection with `M` in-flight tokens): no spatial structure,
+    /// the stationary weight is the `K×N` matrix itself.
+    Gemm { m: usize, k: usize, n: usize },
 }
 
 /// One compute layer of a CNN.
@@ -71,6 +75,10 @@ impl LayerDef {
         LayerDef { name: name.to_string(), kind: LayerKind::Fc { cin, cout }, in_hw: 1 }
     }
 
+    pub fn gemm_layer(name: &str, m: usize, k: usize, n: usize) -> LayerDef {
+        LayerDef { name: name.to_string(), kind: LayerKind::Gemm { m, k, n }, in_hw: 1 }
+    }
+
     /// Output spatial size ("same" padding for stride 1, halving for
     /// stride 2 — the convention of both evaluated networks).
     pub fn out_hw(&self) -> usize {
@@ -78,7 +86,7 @@ impl LayerDef {
             LayerKind::Conv { stride, .. } | LayerKind::DwConv { stride, .. } => {
                 self.in_hw.div_ceil(stride)
             }
-            LayerKind::Fc { .. } => 1,
+            LayerKind::Fc { .. } | LayerKind::Gemm { .. } => 1,
         }
     }
 
@@ -89,6 +97,7 @@ impl LayerDef {
             LayerKind::Conv { kh, kw, cin, cout, .. } => GemmShape::new(s * s, cin * kh * kw, cout),
             LayerKind::DwConv { kh, kw, channels, .. } => GemmShape::new(s * s, kh * kw, channels),
             LayerKind::Fc { cin, cout } => GemmShape::new(1, cin, cout),
+            LayerKind::Gemm { m, k, n } => GemmShape::new(m, k, n),
         }
     }
 
@@ -103,6 +112,7 @@ impl LayerDef {
             LayerKind::Conv { kh, kw, cin, cout, .. } => (kh * kw * cin * cout) as u64,
             LayerKind::DwConv { kh, kw, channels, .. } => (kh * kw * channels) as u64,
             LayerKind::Fc { cin, cout } => (cin * cout) as u64,
+            LayerKind::Gemm { k, n, .. } => (k * n) as u64,
         }
     }
 
@@ -227,6 +237,15 @@ mod tests {
         let l = LayerDef::fc("fc", 1024, 1000);
         assert_eq!(l.gemm(), GemmShape::new(1, 1024, 1000));
         assert_eq!(l.params(), 1_024_000);
+    }
+
+    #[test]
+    fn raw_gemm_lowering_is_the_identity() {
+        let l = LayerDef::gemm_layer("q_proj", 4, 4096, 64);
+        assert_eq!(l.out_hw(), 1);
+        assert_eq!(l.gemm(), GemmShape::new(4, 4096, 64));
+        assert_eq!(l.macs(), 4 * 4096 * 64);
+        assert_eq!(l.params(), 4096 * 64);
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! * [`layer`] — layer descriptors → im2col GEMM lowering.
 //! * [`mobilenet`] — MobileNetV1 224² (28 compute layers) [18].
 //! * [`resnet50`] — ResNet-50 224² (53 convs + FC) [19].
+//! * [`decode`] — transformer decode projections: tall-skinny GEMMs.
 //! * [`gemm`] — synthetic GEMM data with ImageNet-like statistics.
 //! * [`serving`] — per-layer serving models + request generation for
 //!   the `skewsa serve` stack (DESIGN.md §11).
 
+pub mod decode;
 pub mod gemm;
 pub mod layer;
 pub mod mobilenet;

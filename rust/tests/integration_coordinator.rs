@@ -5,6 +5,7 @@ use skewsa::arith::format::FpFormat;
 use skewsa::config::{NumericMode, RunConfig};
 use skewsa::coordinator::{verify_oracle_sampled, Coordinator, Executor, FaultPlan, Policy};
 use skewsa::pe::PipelineKind;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::sa::tile::{GemmShape, TilePlan};
 use skewsa::workloads::gemm::GemmData;
 use skewsa::workloads::mobilenet;
@@ -42,7 +43,7 @@ fn worker_failures_recovered_transparently() {
     cfg.workers = 3;
     let shape = GemmShape::new(6, 40, 24);
     let data = GemmData::integer_valued(shape, FpFormat::BF16, 0x77);
-    let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+    let plan = TilePlan::for_geometry(shape, cfg.geometry);
     let mut ex = Executor::new(cfg, PipelineKind::Skewed);
     ex.fault = FaultPlan { worker: 1, failures: 3 };
     let out = ex.run(&Arc::new(data.clone()), &plan);
@@ -69,7 +70,7 @@ fn paper_scale_least_loaded_backpressure_and_fault_injection() {
     let chain = cfg.chain();
     let shape = GemmShape::new(6, 300, 200); // 3 K-passes × 2 N-blocks on 128×128
     let data = GemmData::cnn_like(shape, FpFormat::BF16, 0xfa17);
-    let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+    let plan = TilePlan::for_geometry(shape, cfg.geometry);
     assert_eq!(plan.tile_count(), 6);
     let mut ex = Executor::new(cfg, PipelineKind::Skewed);
     ex.policy = Policy::LeastLoaded;
@@ -107,8 +108,7 @@ fn mobilenet_first_block_end_to_end_scaled() {
     // The first three MobileNet layers, scaled to a 16×16 array, with
     // full verification — the e2e driver in miniature.
     let mut cfg = RunConfig::small();
-    cfg.rows = 16;
-    cfg.cols = 16;
+    cfg.geometry = ArrayGeometry::new(16, 16);
     cfg.workers = 4;
     cfg.verify_fraction = 0.05;
     let coord = Coordinator::new(cfg.clone());
@@ -147,8 +147,7 @@ fn config_files_load_and_drive_runs() {
     // The fp8 config runs a verified reduced-precision GEMM end-to-end.
     let mut cfg = RunConfig::small();
     cfg.apply_file("configs/fp8.json").unwrap();
-    cfg.rows = 8;
-    cfg.cols = 8;
+    cfg.geometry = ArrayGeometry::new(8, 8);
     cfg.verify_fraction = 1.0;
     assert_eq!(cfg.in_fmt, FpFormat::FP8E4M3);
     let data = Arc::new(GemmData::cnn_like(GemmShape::new(6, 16, 6), cfg.in_fmt, 1));

@@ -9,6 +9,7 @@ use skewsa::arith::format::FpFormat;
 use skewsa::config::{NumericMode, RunConfig, ServeConfig};
 use skewsa::coordinator::{FaultModel, SdcTarget};
 use skewsa::pe::PipelineKind;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::serve::{recv_response, DeadlineClass, ResponseStatus, Server, ShardSnapshot};
 use skewsa::util::rng::Rng;
 use skewsa::workloads::mobilenet;
@@ -17,8 +18,7 @@ use std::sync::Arc;
 
 fn run_cfg() -> RunConfig {
     let mut cfg = RunConfig::small();
-    cfg.rows = 16;
-    cfg.cols = 16;
+    cfg.geometry = ArrayGeometry::new(16, 16);
     cfg.in_fmt = FpFormat::BF16;
     cfg.out_fmt = FpFormat::FP32;
     cfg.verify_fraction = 0.0;
@@ -86,8 +86,7 @@ fn sustained_chaos_quarantines_shards_while_the_pool_keeps_serving() {
     // bit-exact.  Runs the *cycle-accurate* streaming path so the
     // in-thread ABFT recovery is the one on trial.
     let mut cfg = run_cfg();
-    cfg.rows = 8;
-    cfg.cols = 8;
+    cfg.geometry = ArrayGeometry::new(8, 8);
     cfg.mode = NumericMode::CycleAccurate;
     let store = Arc::new(WeightStore::from_layers(
         &mobilenet::layers()[..2],

@@ -13,6 +13,7 @@ use skewsa::fleet::{
     ArrivalSpec, FleetSim, ModelShape, ReqStatus, TenantSpec, TraceReq, MAILBOX_DEPTH,
 };
 use skewsa::pe::PipelineKind;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::serve::{gen_request, recv_response, DeadlineClass, LoadSpec, Server};
 use skewsa::util::mini_json::Json;
 use skewsa::workloads::mobilenet;
@@ -21,8 +22,7 @@ use std::sync::Arc;
 
 fn run_cfg(fmt: FpFormat) -> RunConfig {
     let mut cfg = RunConfig::small();
-    cfg.rows = 16;
-    cfg.cols = 16;
+    cfg.geometry = ArrayGeometry::new(16, 16);
     cfg.in_fmt = fmt;
     cfg.out_fmt = FpFormat::FP32;
     cfg.verify_fraction = 0.0;
@@ -289,17 +289,18 @@ fn watermark_shed_and_mailbox_backpressure_pin() {
     assert!(r.accounting_balanced());
 }
 
-/// Cross-language golden: rebuild the exact scenario committed by the
-/// independent Python port (`python/tests/test_fleet_des.py
-/// --emit-golden`) and require every headline counter — and the
-/// full per-record FNV fingerprint — to match bit-for-bit.
-#[test]
-fn golden_python_port_scenario_reproduces() {
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("../python/tests/golden_fleet_des.json");
+/// Replay one committed cross-language golden (`python/tests/
+/// test_fleet_des.py --emit-golden`): rebuild the exact scenario the
+/// independent Python port ran and require every headline counter —
+/// and the full per-record FNV fingerprint — to match bit-for-bit.
+/// `expect.stream_cycles` is checked when present (the heterogeneous
+/// golden records it; the original golden predates the field).
+fn replay_golden(file: &str) {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../python/tests").join(file);
     let text = std::fs::read_to_string(&path)
         .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
-    let j = Json::parse(&text).expect("golden_fleet_des.json parses");
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("{file} parses: {e:?}"));
 
     let mut run = RunConfig::small();
     run.apply_json(j.get("run").expect("golden 'run' section")).expect("run section applies");
@@ -324,6 +325,9 @@ fn golden_python_port_scenario_reproduces() {
     assert_eq!(r.batched_rows, want("batched_rows"), "batched_rows");
     assert_eq!(r.max_batch as u64, want("max_batch"), "max_batch");
     assert_eq!(r.wall_cycles, want("wall_cycles"), "wall_cycles");
+    if exp.get("stream_cycles").is_some() {
+        assert_eq!(r.stream_cycles, want("stream_cycles"), "stream_cycles");
+    }
     let fp = exp.get("fingerprint").and_then(Json::as_str).expect("expect.fingerprint");
     assert_eq!(
         format!("{:016x}", r.fingerprint),
@@ -331,4 +335,173 @@ fn golden_python_port_scenario_reproduces() {
         "cross-language per-record fingerprint"
     );
     assert!(r.accounting_balanced());
+}
+
+#[test]
+fn golden_python_port_scenario_reproduces() {
+    replay_golden("golden_fleet_des.json");
+}
+
+/// The heterogeneous golden: per-shard geometries plus shape-aware
+/// routing, exercised through the Python port's independent
+/// implementation of the scoring policy and the rectangular timing
+/// model.
+#[test]
+fn golden_python_hetero_scenario_reproduces() {
+    replay_golden("golden_fleet_hetero.json");
+}
+
+/// Shape-aware routing joins the §18 differential pin: the threaded
+/// server and the DES both score each request's GEMM against every
+/// shard's geometry through the plan cache, so a sequential closed loop
+/// must land request-for-request on the same shards with the same
+/// quoted service cycles.  The two models are built to disagree — one
+/// reduction-deep (K≫N, wants the 16×4 shard), one output-wide (N≫K,
+/// wants the 4×16 shard) — so a policy divergence cannot hide.
+#[test]
+fn shape_aware_routing_matches_threaded_server() {
+    use skewsa::workloads::layer::LayerDef;
+    let cfg = run_cfg(FpFormat::BF16);
+    let geoms = vec![ArrayGeometry::new(16, 4), ArrayGeometry::new(4, 16)];
+    let layers =
+        [LayerDef::gemm_layer("tall", 1, 64, 4), LayerDef::gemm_layer("wide", 1, 4, 64)];
+    let store = Arc::new(WeightStore::from_layers(&layers, FpFormat::BF16, 64, 64));
+
+    let mut scfg = ServeConfig::small();
+    scfg.shards = 2;
+    scfg.shard_policy = Policy::ShapeAware;
+    scfg.shard_geometries = geoms.clone();
+    scfg.batch_window_us = 0;
+    scfg.interactive_window_us = 0;
+    scfg.shed_watermark = 0;
+    let server = Server::start(&cfg, &scfg, Arc::clone(&store));
+    let mut rng = skewsa::util::rng::Rng::new(3);
+    let mut threaded = Vec::new();
+    for i in 0..10usize {
+        let a = store.gen_activations(i % 2, 2, &mut rng);
+        let rx = server.submit(i % 2, PipelineKind::Skewed, DeadlineClass::Interactive, a);
+        threaded.push(recv_response(&rx, "shape-aware sequential loop"));
+    }
+    drop(server);
+
+    let requests: Vec<TraceReq> = (0..10)
+        .map(|i| TraceReq {
+            at: i as u64 * 10_000,
+            model: i % 2,
+            rows: 2,
+            kind: PipelineKind::Skewed,
+            class: DeadlineClass::Interactive,
+        })
+        .collect();
+    let fcfg = FleetConfig {
+        shards: 2,
+        min_shards: 2,
+        max_shards: 2,
+        queue_cap: 64,
+        shed_watermark: 0,
+        batch_window: 0,
+        interactive_window: 0,
+        max_batch_requests: 8,
+        max_batch_rows: 64,
+        shard_policy: Policy::ShapeAware,
+        shard_geometries: geoms,
+        horizon: 1_000_000,
+        autoscale_interval: 0,
+        seed: 3,
+        models: models_of(&store),
+        tenants: vec![TenantSpec {
+            name: "trace".into(),
+            arrival: ArrivalSpec::Trace { requests },
+            bucket_capacity: 0,
+            bucket_refill_cycles: 0,
+            kinds: vec![PipelineKind::Skewed],
+            interactive_fraction: 1.0,
+            min_rows: 1,
+            max_rows: 8,
+        }],
+        ..FleetConfig::default()
+    };
+    let r = FleetSim::simulate(&cfg, &fcfg);
+
+    assert_eq!(r.served, 10);
+    assert_eq!(r.records.len(), threaded.len());
+    for (i, (rec, resp)) in r.records.iter().zip(&threaded).enumerate() {
+        let best = i % 2; // tall model → tall shard 0, wide model → wide shard 1
+        assert_eq!(resp.shard, best, "request {i}: threaded shape-aware pick");
+        assert_eq!(rec.shard, Some(best), "request {i}: DES shape-aware pick");
+        assert_eq!(
+            rec.service, resp.batch_stream_cycles,
+            "request {i}: both worlds quote the chosen geometry's cycles"
+        );
+    }
+    assert!(r.accounting_balanced());
+}
+
+/// The ISSUE 10 acceptance pin: on a mixed decode+CNN trace at equal PE
+/// budget, a heterogeneous fleet under shape-aware routing must beat
+/// the uniform all-square round-robin fleet on BOTH p99 latency and
+/// total stream cycles.  The trace is deterministic and uncongested
+/// (arrivals spaced past every service time), so the comparison
+/// isolates shape fit from queueing luck — the same contract the
+/// `serve_hetero` bench tier asserts at scale.
+#[test]
+fn hetero_fleet_beats_uniform_square_on_the_mixed_trace() {
+    let mut run = RunConfig::small();
+    run.geometry = ArrayGeometry::new(128, 128);
+    run.verify_fraction = 0.0;
+    let requests: Vec<TraceReq> = (0..40)
+        .map(|i| TraceReq {
+            at: i as u64 * 4_000,
+            model: i % 2,
+            rows: 2,
+            kind: PipelineKind::Skewed,
+            class: DeadlineClass::Interactive,
+        })
+        .collect();
+    let base = FleetConfig {
+        shards: 4,
+        min_shards: 4,
+        max_shards: 4,
+        horizon: 400_000,
+        autoscale_interval: 0,
+        models: vec![ModelShape { k: 4096, n: 64 }, ModelShape { k: 512, n: 512 }],
+        tenants: vec![TenantSpec {
+            arrival: ArrivalSpec::Trace { requests },
+            ..TenantSpec::poisson("mixed", 1.0)
+        }],
+        ..FleetConfig::default()
+    };
+    let uniform = FleetConfig { shard_policy: Policy::RoundRobin, ..base.clone() };
+    let hetero = FleetConfig {
+        shard_policy: Policy::ShapeAware,
+        shard_geometries: vec![
+            ArrayGeometry::new(256, 64),
+            ArrayGeometry::new(64, 256),
+            ArrayGeometry::new(128, 128),
+            ArrayGeometry::new(128, 128),
+        ],
+        ..base
+    };
+    let budget = |f: &FleetConfig| -> usize {
+        (0..4).map(|s| f.shard_geometry(s, run.geometry).pe_count()).sum()
+    };
+    assert_eq!(budget(&uniform), budget(&hetero), "the comparison is at equal silicon");
+
+    let ru = FleetSim::simulate(&run, &uniform);
+    let rh = FleetSim::simulate(&run, &hetero);
+    assert_eq!(ru.served, 40);
+    assert_eq!(rh.served, 40);
+    assert!(ru.accounting_balanced() && rh.accounting_balanced());
+    let (p99_u, p99_h) = (ru.latency.quantile(99.0), rh.latency.quantile(99.0));
+    assert!(p99_h < p99_u, "hetero p99 {p99_h} must beat uniform {p99_u} on the mixed trace");
+    assert!(
+        rh.stream_cycles < ru.stream_cycles,
+        "hetero stream cycles {} must beat uniform {}",
+        rh.stream_cycles,
+        ru.stream_cycles
+    );
+    // The decode projections all land on the tall shard and the CNN
+    // layers on a square; nothing on this trace prefers the wide array.
+    assert!(rh.shard_busy[0] > 0, "tall shard absorbed the decode stream");
+    assert_eq!(rh.shard_busy[1], 0, "no request on this trace prefers the wide shard");
 }

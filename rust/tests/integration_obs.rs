@@ -13,6 +13,7 @@ use skewsa::config::{NumericMode, RunConfig, ServeConfig};
 use skewsa::coordinator::{FaultModel, FaultPlan, SdcTarget};
 use skewsa::obs::{parse_jsonl, Obs, Phase, SpanStatus};
 use skewsa::pe::PipelineKind;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::serve::{recv_response, DeadlineClass, ResponseStatus, Server};
 use skewsa::util::rng::Rng;
 use skewsa::workloads::mobilenet;
@@ -21,8 +22,7 @@ use std::sync::Arc;
 
 fn run_cfg() -> RunConfig {
     let mut cfg = RunConfig::small();
-    cfg.rows = 16;
-    cfg.cols = 16;
+    cfg.geometry = ArrayGeometry::new(16, 16);
     cfg.in_fmt = FpFormat::BF16;
     cfg.out_fmt = FpFormat::FP32;
     cfg.verify_fraction = 0.0;
@@ -120,10 +120,9 @@ fn span_cycle_attribution_matches_timing_model_and_streaming_sim() {
                 assert_eq!(span.cycles.recovery, 0, "clean run attributes no recovery");
                 assert_eq!(span.cycles.total(), span.cycles.stream_total());
                 let entry = store.get(model);
-                let plan = TilePlan::new(GemmShape::new(m, entry.k, entry.n), cfg.rows, cfg.cols);
+                let plan = TilePlan::for_geometry(GemmShape::new(m, entry.k, entry.n), cfg.geometry);
                 let tcfg = TimingConfig {
-                    rows: cfg.rows,
-                    cols: cfg.cols,
+                    geom: cfg.geometry,
                     clock_ghz: cfg.clock_ghz,
                     double_buffer: db,
                 };
@@ -288,8 +287,7 @@ fn trace_jsonl_roundtrips_and_health_events_are_recorded() {
     // survives the JSON-lines round trip the `skewsa trace` subcommand
     // depends on.
     let mut cfg = run_cfg();
-    cfg.rows = 8;
-    cfg.cols = 8;
+    cfg.geometry = ArrayGeometry::new(8, 8);
     cfg.mode = NumericMode::CycleAccurate;
     let store =
         Arc::new(WeightStore::from_layers(&mobilenet::layers()[..2], FpFormat::BF16, 12, 8));

@@ -5,6 +5,7 @@
 //! stays green on a fresh checkout.
 
 use skewsa::runtime::GoldenRuntime;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::util::rng::Rng;
 
 fn golden() -> Option<GoldenRuntime> {
@@ -123,8 +124,7 @@ fn coordinator_matches_runtime_golden() {
 
     let (m, k, n) = (64, 128, 64);
     let mut cfg = RunConfig::small();
-    cfg.rows = 32;
-    cfg.cols = 32;
+    cfg.geometry = ArrayGeometry::new(32, 32);
     let data = Arc::new(GemmData::cnn_like(GemmShape::new(m, k, n), FpFormat::BF16, 99));
     let r = Coordinator::new(cfg).run_gemm(PipelineKind::Skewed, &data);
     assert!(r.verify.ok());

@@ -8,6 +8,7 @@ use skewsa::arith::format::FpFormat;
 use skewsa::config::{NumericMode, RunConfig, ServeConfig};
 use skewsa::coordinator::{FaultPlan, Policy};
 use skewsa::pe::PipelineKind;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::serve::{recv_response, DeadlineClass, Server};
 use skewsa::util::rng::Rng;
 use skewsa::workloads::mobilenet;
@@ -16,8 +17,7 @@ use std::sync::Arc;
 
 fn run_cfg(fmt: FpFormat) -> RunConfig {
     let mut cfg = RunConfig::small();
-    cfg.rows = 16;
-    cfg.cols = 16;
+    cfg.geometry = ArrayGeometry::new(16, 16);
     cfg.in_fmt = fmt;
     cfg.out_fmt = FpFormat::FP32;
     cfg.verify_fraction = 0.0;
@@ -107,8 +107,7 @@ fn cycle_accurate_serving_matches_oracle_serving() {
     ));
     let serve_bits = |mode: NumericMode| -> Vec<Vec<u32>> {
         let mut cfg = run_cfg(FpFormat::BF16);
-        cfg.rows = 8;
-        cfg.cols = 8;
+        cfg.geometry = ArrayGeometry::new(8, 8);
         cfg.mode = mode;
         let server = Server::start(&cfg, &ServeConfig::small(), Arc::clone(&store));
         let mut out = Vec::new();
@@ -132,8 +131,7 @@ fn batched_cycle_accurate_serving_stays_bit_exact_per_member() {
     // simulator must reproduce each member's solo cycle-accurate run
     // bit-for-bit.
     let mut cfg = run_cfg(FpFormat::BF16);
-    cfg.rows = 8;
-    cfg.cols = 8;
+    cfg.geometry = ArrayGeometry::new(8, 8);
     cfg.mode = NumericMode::CycleAccurate;
     let store = Arc::new(WeightStore::from_layers(
         &mobilenet::layers()[..1],
@@ -193,11 +191,10 @@ fn reported_service_time_pins_the_overlapped_timing_model() {
                 assert_eq!(resp.batch_size, 1, "quiet server: request runs alone");
                 let entry = store.get(model);
                 let shape = GemmShape::new(m, entry.k, entry.n);
-                let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+                let plan = TilePlan::for_geometry(shape, cfg.geometry);
                 assert!(plan.tile_count() >= 2, "multi-tile on the served path");
                 let tcfg = TimingConfig {
-                    rows: cfg.rows,
-                    cols: cfg.cols,
+                    geom: cfg.geometry,
                     clock_ghz: cfg.clock_ghz,
                     double_buffer: db,
                 };

@@ -33,7 +33,7 @@ fn clean_run(
     // FP8-E5M2, so the sweep exercises the checker's tolerance rather
     // than quantization noise.
     let data = GemmData::integer_valued(shape, fmt, seed);
-    let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+    let plan = TilePlan::for_geometry(shape, cfg.geometry);
     let chain = cfg.chain();
     let ex = Executor::new(cfg, kind);
     let out = ex.run(&Arc::new(data.clone()), &plan);

@@ -142,7 +142,7 @@ fn prop_verification_catches_corruption() {
         let idx = g.usize_in(0, r.y.len() - 1);
         let flipped = f32::from_bits(r.y[idx].to_bits() ^ 1);
         r.y[idx] = flipped;
-        let plan = TilePlan::new(shape, cfg.rows, cfg.cols);
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
         let rep = verify_oracle_sampled(&cfg.chain(), &plan, &data, &r.y, 1.0, 1);
         g.assert("corruption detected", !rep.ok());
     });

@@ -1,0 +1,182 @@
+//! Rectangular-geometry property suite (ISSUE 10): everything the
+//! stack used to exercise only on square arrays must hold on tall,
+//! wide and degenerate (`1×N`, `R×1`) geometries —
+//!
+//! 1. [`TilePlan`] partitions the `K×N` weight plane exactly, with the
+//!    remainders on the edge tiles, for any geometry;
+//! 2. the streaming simulator is bit-exact against the per-tile oracle
+//!    assembly *and* lands on [`layer_timing_spec`]'s closed form for
+//!    every registered organisation, both preload disciplines;
+//! 3. at a fixed PE budget the closed form orders shapes the way the
+//!    `skewsa geometry` sweep relies on: a reduction-deep decode GEMM
+//!    runs strictly faster on the tall array than on the square, and
+//!    square beats wide;
+//! 4. ABFT detection/localization works on rectangular plans (block
+//!    indices follow the plan's `cols`, not a hardcoded square).
+
+use skewsa::arith::accum::ColumnOracle;
+use skewsa::arith::fma::ChainCfg;
+use skewsa::arith::format::FpFormat;
+use skewsa::config::{NumericMode, RunConfig};
+use skewsa::coordinator::{abft_check, Executor};
+use skewsa::pe::PipelineKind;
+use skewsa::precision::error::max_finite_f64;
+use skewsa::sa::geometry::{sweep_geometries, ArrayGeometry};
+use skewsa::sa::stream::StreamingSim;
+use skewsa::sa::tile::{GemmShape, TilePlan};
+use skewsa::timing::model::{layer_timing_spec, TimingConfig};
+use skewsa::util::prop::{Gen, Prop};
+use skewsa::workloads::gemm::GemmData;
+use std::sync::Arc;
+
+const CFG: ChainCfg = ChainCfg::BF16_FP32;
+
+fn bf(g: &mut Gen) -> u64 {
+    FpFormat::BF16.from_f64(g.normal(0.0, 1.5))
+}
+
+fn random_gemm(g: &mut Gen, shape: GemmShape) -> (Vec<Vec<u64>>, Vec<Vec<u64>>) {
+    let w = (0..shape.k).map(|_| (0..shape.n).map(|_| bf(g)).collect()).collect();
+    let a = (0..shape.m).map(|_| (0..shape.k).map(|_| bf(g)).collect()).collect();
+    (w, a)
+}
+
+/// Kind-independent reference (same semantics as `prop_streaming.rs`):
+/// each tile's columns through the value oracle, folded across K-passes
+/// in pass order with f32 adds.
+fn oracle_assembly(plan: &TilePlan, w: &[Vec<u64>], a: &[Vec<u64>]) -> Vec<u32> {
+    let shape = plan.shape;
+    let mut y = vec![0.0f32; shape.m * shape.n];
+    for t in &plan.tiles {
+        for m in 0..shape.m {
+            for j in 0..t.n_len {
+                let mut o = ColumnOracle::new(CFG);
+                for k in t.k0..t.k0 + t.k_len {
+                    o.mac(a[m][k], w[k][t.n0 + j]);
+                }
+                y[m * shape.n + t.n0 + j] += f32::from_bits(o.result() as u32);
+            }
+        }
+    }
+    y.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn tile_plan_partitions_any_geometry_exactly() {
+    let geoms = [(256, 32), (32, 256), (1, 7), (7, 1), (128, 128), (5, 3)];
+    let shapes = [GemmShape::new(4, 100, 50), GemmShape::new(1, 7, 13), GemmShape::new(9, 1, 1)];
+    for &(r, c) in &geoms {
+        let geom = ArrayGeometry::new(r, c);
+        for &shape in &shapes {
+            let plan = TilePlan::for_geometry(shape, geom);
+            assert_eq!(plan.geometry(), geom);
+            assert_eq!(plan.k_tiles(), shape.k.div_ceil(r), "{geom} {shape:?}");
+            assert_eq!(plan.n_tiles(), shape.n.div_ceil(c), "{geom} {shape:?}");
+            assert_eq!(plan.tile_count(), plan.k_tiles() * plan.n_tiles());
+            // The tiles partition the K×N weight plane exactly: full
+            // tiles carry (r, c), edge tiles the remainders, and the
+            // areas sum back to K·N.
+            let mut area = 0usize;
+            for t in &plan.tiles {
+                assert!(t.k_len >= 1 && t.k_len <= r, "{geom}: k_len {}", t.k_len);
+                assert!(t.n_len >= 1 && t.n_len <= c, "{geom}: n_len {}", t.n_len);
+                assert!(t.k0 + t.k_len <= shape.k && t.n0 + t.n_len <= shape.n);
+                area += t.k_len * t.n_len;
+            }
+            assert_eq!(area, shape.k * shape.n, "{geom} {shape:?}: not a partition");
+        }
+    }
+}
+
+#[test]
+fn streaming_matches_oracle_and_model_on_random_rectangles() {
+    Prop::new("geometry-stream-bit-exact-on-model", 10).run(|g: &mut Gen| {
+        // Bias toward asymmetric and degenerate geometries: the square
+        // path is already covered by prop_streaming.
+        let (rows, cols) = match g.usize_in(0, 3) {
+            0 => (1, g.usize_in(2, 7)),
+            1 => (g.usize_in(2, 9), 1),
+            2 => (g.usize_in(5, 9), g.usize_in(1, 3)),
+            _ => (g.usize_in(1, 3), g.usize_in(4, 7)),
+        };
+        let shape = GemmShape::new(
+            g.usize_in(1, 5),
+            g.usize_in(1, 3 * rows),
+            g.usize_in(1, 2 * cols),
+        );
+        let plan = TilePlan::for_geometry(shape, ArrayGeometry::new(rows, cols));
+        let (w, a) = random_gemm(g, shape);
+        let want = oracle_assembly(&plan, &w, &a);
+        for kind in PipelineKind::ALL {
+            for db in [true, false] {
+                let mut sim = StreamingSim::new(CFG, kind, &plan, &w, &a, db);
+                let rep = sim.run(1_000_000).expect("stream run");
+                let got: Vec<u32> = sim.result_f32().iter().map(|v| v.to_bits()).collect();
+                g.assert(&format!("{rows}x{cols} {kind} db={db}: bits"), got == want);
+                let tcfg = TimingConfig { rows, cols, clock_ghz: 1.0, double_buffer: db };
+                g.assert_eq(
+                    &format!("{rows}x{cols} {kind} db={db}: cycles"),
+                    rep.cycles,
+                    layer_timing_spec(&tcfg, *kind.spec(), &plan).cycles,
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn fixed_budget_ordering_tall_beats_square_beats_wide_on_decode() {
+    // The premise the geometry subcommand and the hetero fleet monetize:
+    // a K≫N decode projection at a fixed PE budget prefers rows.  The
+    // sweep is tall-to-wide, so the closed-form totals must be strictly
+    // increasing across it for this shape — and strictly decreasing for
+    // the transposed (output-wide) GEMM.
+    let geoms = sweep_geometries(16384, 4.0);
+    assert_eq!(
+        geoms,
+        [ArrayGeometry::new(256, 64), ArrayGeometry::new(128, 128), ArrayGeometry::new(64, 256)]
+    );
+    let decode = GemmShape::new(4, 4096, 64);
+    let wide_out = GemmShape::new(4, 64, 4096);
+    for kind in [PipelineKind::Baseline3b, PipelineKind::Skewed] {
+        for db in [true, false] {
+            let cyc = |shape: GemmShape, g: ArrayGeometry| {
+                TilePlan::for_geometry(shape, g).stream_cycles(kind, db)
+            };
+            let d: Vec<u64> = geoms.iter().map(|&g| cyc(decode, g)).collect();
+            assert!(d[0] < d[1] && d[1] < d[2], "{kind} db={db}: decode {d:?}");
+            let w: Vec<u64> = geoms.iter().map(|&g| cyc(wide_out, g)).collect();
+            assert!(w[0] > w[1] && w[1] > w[2], "{kind} db={db}: wide-out {w:?}");
+        }
+    }
+}
+
+#[test]
+fn abft_localizes_corruption_on_rectangular_plans() {
+    let shape = GemmShape::new(5, 12, 9); // single K-pass on every geometry below
+    for (r, c) in [(16, 4), (12, 3), (16, 2)] {
+        let mut cfg = RunConfig::small();
+        cfg.geometry = ArrayGeometry::new(r, c);
+        cfg.verify_fraction = 0.0;
+        cfg.mode = NumericMode::Oracle;
+        let chain = cfg.chain();
+        let plan = TilePlan::for_geometry(shape, cfg.geometry);
+        let data = GemmData::integer_valued(shape, cfg.in_fmt, 0x9e0 + r as u64);
+        let ex = Executor::new(cfg, PipelineKind::Skewed);
+        let mut y = ex.run(&Arc::new(data.clone()), &plan).y;
+        assert!(abft_check(&chain, &plan, &data, &y).clean(), "{r}x{c}: clean false positive");
+        let n_blocks = shape.n.div_ceil(c);
+        assert!(n_blocks >= 3, "sweep must cover multi-block localization");
+        let loud =
+            f32::from_bits(chain.out_fmt.from_f64(0.5 * max_finite_f64(chain.out_fmt)) as u32);
+        for blk in 0..n_blocks {
+            let i = blk * c;
+            let old = y[i];
+            y[i] = loud;
+            let rep = abft_check(&chain, &plan, &data, &y);
+            assert_eq!(rep.suspect_blocks, vec![blk], "{r}x{c}: block {blk} mislocalized");
+            y[i] = old;
+        }
+        assert!(abft_check(&chain, &plan, &data, &y).clean());
+    }
+}

@@ -5,6 +5,7 @@
 
 use skewsa::arith::format::FpFormat;
 use skewsa::pe::PipelineKind;
+use skewsa::sa::geometry::ArrayGeometry;
 use skewsa::sa::tile::{GemmShape, TilePlan};
 use skewsa::serve::{CachedPlan, PlanCache, PlanKey};
 use skewsa::util::prop::{Gen, Prop};
@@ -23,8 +24,7 @@ fn random_key(g: &mut Gen) -> PlanKey {
         shape: GemmShape::new(g.usize_in(1, 64), g.usize_in(1, 300), g.usize_in(1, 300)),
         fmt: *g.choose(&FMTS),
         kind: *g.choose(&KINDS),
-        rows: g.usize_in(1, 128),
-        cols: g.usize_in(1, 128),
+        geom: ArrayGeometry::new(g.usize_in(1, 128), g.usize_in(1, 128)),
     }
 }
 
@@ -58,7 +58,7 @@ fn cache_hit_plans_structurally_identical_across_sweep() {
         );
         g.assert(
             "fresh build is the canonical TilePlan",
-            fresh.plan == TilePlan::new(key.shape, key.rows, key.cols),
+            fresh.plan == TilePlan::for_geometry(key.shape, key.geom),
         );
         g.assert_eq("one schedule per tile", second.schedules.len(), second.plan.tile_count());
     });
